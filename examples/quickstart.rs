@@ -1,0 +1,69 @@
+//! Quickstart: the SPDF pipeline in ~60 seconds on the nano model.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Walks all three paper steps on a postage-stamp budget:
+//!   1. sparsify  — 75% uniform random static mask
+//!   2. pre-train — 60 steps on SynthPile through the PJRT artifact
+//!   3. dense fine-tune — 1 epoch on E2E-sim, then decode + score
+
+use spdf::coordinator::{self, World, WorldConfig};
+use spdf::data::Task;
+use spdf::generate::DecodeParams;
+use spdf::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // data world: synthetic corpus + tasks + tokenizer (seeded)
+    let world = World::build(&WorldConfig {
+        seed: 0,
+        corpus_words: 30_000,
+        vocab_size: 512,
+        task_scale: 0.02,
+    });
+    println!("world: {} corpus tokens, {} e2e train examples",
+             world.stream.len(), world.task(Task::E2e).train.len());
+
+    // runtime: compile the AOT artifacts once (python was only involved
+    // at `make artifacts` time; this binary never imports it)
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    let runtime = engine.load_model("gpt-nano")?;
+
+    // steps 1+2: sparsify + sparse pre-train
+    let pt = coordinator::pretrain(&runtime, &world,
+        &coordinator::PretrainConfig {
+            sparsity: 0.75,
+            steps: 60,
+            peak_lr: 2e-3,
+            seed: 0,
+            log_every: 20,
+            ..Default::default()
+        })?;
+    println!("pre-trained @75% sparsity: eval loss {:.3} (ppl {:.1}), \
+              {:.2e} train FLOPs",
+             pt.final_eval_loss,
+             spdf::train::perplexity(pt.final_eval_loss),
+             pt.train_flops);
+
+    // step 3: densify + dense fine-tune on E2E
+    let ft = coordinator::finetune(&runtime, &world, pt.state,
+        &coordinator::FinetuneConfig {
+            task: Task::E2e,
+            epochs: 1,
+            peak_lr: 4e-4,
+            ..Default::default()
+        })?;
+    println!("fine-tuned dense: best val loss {:.3}", ft.best_val_loss);
+
+    // evaluate with the official-metric suite
+    let m = coordinator::evaluate_task(
+        &runtime, &ft.state, &world, Task::E2e, 16,
+        &DecodeParams { max_new_tokens: 24, ..Default::default() })?;
+    println!("E2E-sim test (n={}): BLEU {:.2}  NIST {:.2}  \
+              METEOR {:.3}  ROUGE-L {:.2}  CIDEr {:.2}  TER {:.3}  \
+              PPL {:.2}",
+             m.n_examples, m.bleu, m.nist, m.meteor, m.rouge_l,
+             m.cider, m.ter, m.ppl);
+    println!("\n(quality is meaningless at 60 pre-train steps — run \
+              examples/spdf_pipeline.rs for a real curve)");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Appendix-C style demo: realized vs theoretical speedup of the
+//! unstructured-sparse matmul engine (no PJRT needed).
+//!
+//!   cargo run --release --example sparse_speedup -- [dim]
+//!
+//! Quick version of benches/appc_sparse_speedup.rs: one shape, four
+//! sparsity levels, plus a CSR correctness spot-check.
+
+use spdf::bench_support::{bench_for, fmt_time};
+use spdf::sparse_compute::{dense_matmul, theoretical_speedup, Csr};
+use spdf::util::rng::Rng;
+
+fn main() {
+    let dim: usize = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let n = 32;
+    let mut rng = Rng::new(0);
+    let b: Vec<f32> = (0..dim * n).map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let dense_a: Vec<f32> = (0..dim * dim)
+        .map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let sd = bench_for(0.5, 8, || dense_matmul(&dense_a, &b, dim, dim, n));
+    println!("{dim}x{dim} weight @ {n} cols — dense: {}",
+             fmt_time(sd.mean));
+    for s in [0.5, 0.75, 0.9, 0.99] {
+        let csr = Csr::random(dim, dim, s, &mut rng);
+        // spot-check numerics vs the dense kernel on this matrix
+        let want = dense_matmul(&csr.to_dense(), &b, dim, dim, n);
+        let got = csr.spmm(&b, n);
+        let max_err = want.iter().zip(&got)
+            .map(|(a, c)| (a - c).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "CSR numerics drifted: {max_err}");
+
+        let sm = bench_for(0.5, 8, || csr.spmm(&b, n));
+        println!("  S={:>5.1}%  {}  speedup {:>5.2}x  (theory {:>5.2}x)",
+                 s * 100.0, fmt_time(sm.mean), sd.mean / sm.mean,
+                 theoretical_speedup(s));
+    }
+}

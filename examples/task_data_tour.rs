@@ -1,0 +1,68 @@
+//! Tour of the data + metrics substrates (no PJRT needed):
+//! generate each synthetic task, show examples, and demonstrate the
+//! official-metric suite on perfect / perturbed hypotheses — a sanity
+//! harness for the evaluation stack.
+//!
+//!   cargo run --release --example task_data_tour
+
+use spdf::data::Task;
+use spdf::eval::{bleu, cider, meteor, nist, rouge, ter};
+use spdf::tokenizer::Tokenizer;
+use spdf::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    for task in Task::all() {
+        let d = task.generate(&mut rng, 0.01);
+        println!("== {} ==  train/valid/test = {}/{}/{}",
+                 d.name, d.train.len(), d.valid.len(), d.test.len());
+        let ex = &d.train[0];
+        println!("  IN : {}", clip(&ex.input, 100));
+        println!("  REF: {}", clip(&ex.refs[0], 100));
+    }
+
+    // tokenizer round trip over task text
+    let d = Task::E2e.generate(&mut Rng::new(0), 0.01);
+    let corpus: String = d.train.iter().take(50)
+        .map(|e| format!("{} {}", e.input, e.refs[0]))
+        .collect::<Vec<_>>().join(" ");
+    let tok = Tokenizer::train(&corpus, 512);
+    let text = &d.train[0].refs[0];
+    assert_eq!(&tok.decode(&tok.encode(text)), text);
+    println!("\ntokenizer: {} merges, round-trip exact", tok.n_merges());
+
+    // metric suite behaviour on controlled degradations
+    let refs: Vec<(String, Vec<String>)> = d.test.iter().take(32)
+        .map(|e| (e.refs[0].clone(), e.refs.clone()))
+        .collect();
+    let degraded: Vec<(String, Vec<String>)> = refs.iter()
+        .map(|(h, rs)| {
+            let mut words: Vec<&str> = h.split(' ').collect();
+            if words.len() > 4 {
+                words.truncate(words.len() - 3); // drop the tail
+            }
+            (words.join(" "), rs.clone())
+        })
+        .collect();
+    println!("\nmetric      perfect   degraded(tail cut)");
+    let rows: [(&str, fn(&[(String, Vec<String>)]) -> f64); 6] = [
+        ("BLEU", bleu::corpus_bleu),
+        ("NIST", nist::corpus_nist),
+        ("METEOR", meteor::corpus_meteor),
+        ("ROUGE-L", rouge::corpus_rouge_l),
+        ("CIDEr", cider::corpus_cider),
+        ("TER", ter::corpus_ter),
+    ];
+    for (name, f) in rows {
+        println!("{name:<10} {:>8.3}  {:>8.3}", f(&refs), f(&degraded));
+    }
+    println!("\n(perfect >= degraded on all ↑ metrics; TER ↓ inverts)");
+}
+
+fn clip(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n])
+    }
+}

@@ -1,0 +1,182 @@
+"""AOT pipeline: lower the L2/L1 graphs to XLA HLO text + manifest.
+
+For every simulation model config this emits:
+
+  artifacts/<model>.train_step.hlo.txt   sparse/dense AdamW step
+  artifacts/<model>.eval_loss.hlo.txt    summed CE + token count
+  artifacts/<model>.logits_last.hlo.txt  decode primitive
+  artifacts/manifest.json                everything rust needs to marshal
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+The manifest records, per artifact, the exact flattened input/output
+order (tree paths), shapes and dtypes, plus the parameter init spec and
+optimizer constants — the rust coordinator marshals buffers from this
+alone and never imports python.
+
+Run:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Fixed artifact shapes: one training/eval/decode geometry per model.
+TRAIN_BATCH = 16
+EVAL_BATCH = 16
+DECODE_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(prefix, path):
+    """Render a jax tree path like (DictKey('wte'),) as 'params/wte'."""
+    parts = [prefix]
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_entries(prefix, tree):
+    """Flattened (path, shape, dtype) entries in jax flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append({
+            "name": _path_str(prefix, path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+def _zeros_like_tree(specs):
+    return {n: jnp.zeros(s, jnp.float32) for n, s, _ in specs}
+
+
+def build_artifacts(cfg, out_dir, use_pallas=True):
+    """Lower all artifacts for one model config; return manifest entry."""
+    specs = M.param_specs(cfg)
+    masked = M.masked_param_names(cfg)
+
+    params = _zeros_like_tree(specs)
+    m_state = _zeros_like_tree(specs)
+    v_state = _zeros_like_tree(specs)
+    masks = {n: jnp.zeros(dict((a, b) for a, b, _ in specs)[n],
+                          jnp.float32) for n in masked}
+
+    b, t = TRAIN_BATCH, cfg.ctx_len
+    tokens = jnp.zeros((b, t), jnp.int32)
+    targets = jnp.zeros((b, t), jnp.int32)
+    loss_mask = jnp.zeros((b, t), jnp.float32)
+    step = jnp.zeros((), jnp.float32)
+    lr = jnp.zeros((), jnp.float32)
+    pos = jnp.zeros((DECODE_BATCH,), jnp.int32)
+    dec_tokens = jnp.zeros((DECODE_BATCH, t), jnp.int32)
+
+    artifacts = {}
+
+    def emit(name, fn, example_args, arg_prefixes):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        inputs = []
+        for prefix, arg in zip(arg_prefixes, example_args):
+            inputs += _spec_entries(prefix, arg)
+        out_shape = jax.eval_shape(fn, *example_args)
+        outputs = _spec_entries("out", out_shape)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  {fname}: {len(text)} chars, "
+              f"{len(inputs)} inputs, {len(outputs)} outputs")
+
+    train_step = M.make_train_step(cfg, use_pallas=use_pallas)
+    emit("train_step", train_step,
+         (params, m_state, v_state, masks, tokens, targets, loss_mask,
+          step, lr),
+         ("params", "m", "v", "masks", "tokens", "targets", "loss_mask",
+          "step", "lr"))
+
+    eval_loss = M.make_eval_loss(cfg, use_pallas=use_pallas)
+    emit("eval_loss", eval_loss, (params, tokens, targets, loss_mask),
+         ("params", "tokens", "targets", "loss_mask"))
+
+    logits_last = M.make_logits_last(cfg, use_pallas=use_pallas)
+    emit("logits_last", logits_last, (params, dec_tokens, pos),
+         ("params", "tokens", "pos"))
+
+    return {
+        "config": cfg.to_dict(),
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "decode_batch": DECODE_BATCH,
+        "params": [{"name": n, "shape": list(s), "init": k}
+                   for n, s, k in specs],
+        "masked_params": masked,
+        "decay_params": M.decay_param_names(cfg),
+        "artifacts": artifacts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(M.SIM_CONFIGS),
+                    help="comma-separated model names")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with plain-jnp linears (ablation)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "format_version": 1,
+        "optimizer": {
+            "adam_b1": M.ADAM_B1,
+            "adam_b2": M.ADAM_B2,
+            "adam_eps": M.ADAM_EPS,
+            "weight_decay": M.WEIGHT_DECAY,
+            "grad_clip_norm": M.GRAD_CLIP_NORM,
+        },
+        "models": {},
+    }
+    for name in args.models.split(","):
+        cfg = M.SIM_CONFIGS[name]
+        print(f"lowering {name} ...")
+        manifest["models"][name] = build_artifacts(
+            cfg, args.out_dir, use_pallas=not args.no_pallas)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""L1 Pallas kernels for the SPDF stack (build-time only).
+
+Exports:
+  masked_matmul    -- x @ (mask * w) as a tiled Pallas kernel w/ custom VJP
+  pallas_matmul    -- plain tiled Pallas matmul (used by the VJP)
+  causal_attention -- fused causal attention Pallas kernel (inference path)
+  kernel_stats     -- analytic VMEM / MXU-utilization estimates for a tiling
+"""
+
+from .masked_matmul import (
+    masked_matmul,
+    pallas_matmul,
+    pick_blocks,
+    kernel_stats,
+)
+from .attention import causal_attention
+
+__all__ = [
+    "masked_matmul",
+    "pallas_matmul",
+    "pick_blocks",
+    "kernel_stats",
+    "causal_attention",
+]

@@ -1,0 +1,99 @@
+"""Fused causal attention as a Pallas kernel (inference path).
+
+A flash-attention-style kernel restructured for TPU: the query block
+lives in VMEM, K/V stream in along the sequence grid axis, and the
+softmax is computed online (running max + running denominator) so the
+(T, T) score matrix is never materialized in HBM.
+
+Used by the ``logits_last`` decode artifact where no gradient flows;
+the training graph uses the jnp reference attention (attention is ~13%
+of training FLOPs and is not sparsified by the paper).  Correctness is
+pinned against ``ref.causal_attention_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, bq, bk_seq, nk):
+    """One (query-block, key-block) step of online-softmax attention.
+
+    grid = (num_q_blocks, num_k_blocks); for each q block we sweep k
+    blocks, maintaining the running max ``m``, the running normalizer
+    ``l`` and the unnormalized accumulator ``acc`` in VMEM scratch.
+    """
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]  # (bq, d)
+    k = k_ref[...]  # (bk_seq, d)
+    v = v_ref[...]  # (bk_seq, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    # causal mask: query position qi*bq + a may attend key ki*bk + b iff
+    # key_pos <= query_pos.
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk_seq), 0)
+    k_pos = ki * bk_seq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk_seq), 1)
+    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...] / l_ref[...]
+
+
+def causal_attention(q, k, v, block_q=128, block_k=128):
+    """Single-head causal attention ``softmax(qk^T / sqrt(d)) v``.
+
+    q, k, v: (T, d) f32.  Multi-head callers vmap over heads/batch.
+    """
+    t, d = q.shape
+    assert k.shape == (t, d) and v.shape == (t, d)
+    bq = min(block_q, t)
+    while t % bq != 0:
+        bq -= 1
+    bk_seq = min(block_k, t)
+    while t % bk_seq != 0:
+        bk_seq -= 1
+    grid = (t // bq, t // bk_seq)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, bq=bq, bk_seq=bk_seq,
+                          nk=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk_seq, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk_seq, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,206 @@
+"""Masked (sparse-weight) matmul as a Pallas kernel.
+
+This is the compute hot-spot of SPDF: every sparsified linear layer
+computes ``y = x @ (m * w)`` where ``m`` is a static binary mask.  On the
+Cerebras CS-2 the hardware skips the zero weights; on a TPU-shaped target
+the insight maps to a VMEM-tiled schedule where the mask is applied at
+tile granularity on the way into the MXU, and all-zero mask tiles
+contribute nothing (see DESIGN.md §Hardware-Adaptation).
+
+The kernel is written for TPU structure (BlockSpec HBM->VMEM schedule,
+MXU-friendly ``jnp.dot`` inner loop) but is always lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend,
+including the rust CPU client.  Correctness is pinned against the
+pure-jnp oracle in ``ref.py``.
+
+Autodiff: Pallas calls are not differentiable in interpret mode, so
+``masked_matmul`` carries a custom VJP whose backward pass is itself
+built from Pallas matmuls:
+
+    dx = g @ (m * w)^T        dw = m * (x^T @ g)
+
+The mask is not differentiated (it is a constant of the training phase);
+its cotangent is a symbolic zero that XLA dead-code-eliminates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Simulated TPU core limits used by the block-size heuristic and the
+# analytic performance model (v4-ish numbers).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+
+
+def pick_blocks(m, n, k, max_block=512, vmem_bytes=VMEM_BYTES, n_operands=3):
+    """Choose (bm, bn, bk) tile sizes for an (m,k) @ (k,n) matmul.
+
+    Strategy: the largest power-of-two-ish divisors of each dim capped at
+    ``max_block`` such that the working set (x-tile + w-tile + optional
+    mask-tile + out-tile, all f32) fits in VMEM.  For the tiny simulation
+    models the blocks collapse to the full dims (grid = 1), which also
+    minimizes interpret-mode overhead; at paper scale (12k x 12k) the same
+    heuristic yields a real multi-tile schedule (exercised in tests).
+    """
+
+    def divisor_cap(dim, cap):
+        b = min(dim, cap)
+        while dim % b != 0:
+            b -= 1
+        return b
+
+    bm, bn, bk = (divisor_cap(m, max_block), divisor_cap(n, max_block),
+                  divisor_cap(k, max_block))
+    # shrink until the tile working set fits in VMEM
+    while _tile_bytes(bm, bn, bk, n_operands) > vmem_bytes:
+        # shrink the largest tile dimension first
+        if bm >= bn and bm >= bk and bm > 1:
+            bm = divisor_cap(m, bm // 2)
+        elif bn >= bk and bn > 1:
+            bn = divisor_cap(n, bn // 2)
+        elif bk > 1:
+            bk = divisor_cap(k, bk // 2)
+        else:
+            break
+    return bm, bn, bk
+
+
+def _tile_bytes(bm, bn, bk, n_operands=3):
+    """f32 working-set bytes for one grid step.
+
+    x-tile (bm,bk) + w-tile (bk,bn) [+ mask-tile (bk,bn)] + out (bm,bn).
+    """
+    w_tiles = 2 if n_operands >= 3 else 1
+    return 4 * (bm * bk + w_tiles * bk * bn + bm * bn)
+
+
+def kernel_stats(m, n, k, blocks=None, masked=True):
+    """Analytic performance estimate for a tiling (DESIGN.md §Perf).
+
+    Returns a dict with the VMEM working set, grid shape, and an MXU
+    utilization estimate: the fraction of each 128x128 systolic pass that
+    carries real data (tiles smaller than the MXU waste the remainder).
+    """
+    n_operands = 3 if masked else 2
+    if blocks is None:
+        blocks = pick_blocks(m, n, k, n_operands=n_operands)
+    bm, bn, bk = blocks
+    grid = (m // bm, n // bn, k // bk)
+
+    def eff(dim):
+        pad = -dim % MXU_DIM
+        return dim / (dim + pad)
+
+    mxu_utilization = eff(bm) * eff(bn) * eff(bk)
+    return {
+        "blocks": (bm, bn, bk),
+        "grid": grid,
+        "vmem_bytes": _tile_bytes(bm, bn, bk, n_operands),
+        "vmem_fraction": _tile_bytes(bm, bn, bk, n_operands) / VMEM_BYTES,
+        "mxu_utilization": mxu_utilization,
+        "flops": 2 * m * n * k,
+        "hbm_bytes": 4 * (grid[1] * m * k + grid[0] * k * n * n_operands
+                          + m * n),
+    }
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk):
+    """Plain tiled matmul: accumulate over the k-grid into the out tile."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _masked_mm_kernel(x_ref, w_ref, m_ref, o_ref, *, nk):
+    """Masked tiled matmul: the mask is applied at tile granularity on the
+    way into the MXU — an all-zero mask tile contributes nothing."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wm = w_ref[...] * m_ref[...]
+    o_ref[...] += jnp.dot(x_ref[...], wm,
+                          preferred_element_type=jnp.float32)
+
+
+def pallas_matmul(x, w, blocks=None):
+    """``x @ w`` via the tiled Pallas kernel (interpret mode)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    if blocks is None:
+        blocks = pick_blocks(m, n, k, n_operands=2)
+    bm, bn, bk = blocks
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _masked_matmul_impl(x, w, mask, blocks=None):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert w.shape == mask.shape, f"mask shape {mask.shape} != w {w.shape}"
+    if blocks is None:
+        blocks = pick_blocks(m, n, k, n_operands=3)
+    bm, bn, bk = blocks
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_masked_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, mask)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, mask):
+    """``x @ (mask * w)`` — the SPDF sparse linear layer hot-spot.
+
+    x: (m, k) activations, w: (k, n) weights, mask: (k, n) binary f32.
+    Differentiable w.r.t. x and w; the mask cotangent is zero.
+    """
+    return _masked_matmul_impl(x, w, mask)
+
+
+def _masked_matmul_fwd(x, w, mask):
+    return _masked_matmul_impl(x, w, mask), (x, w, mask)
+
+
+def _masked_matmul_bwd(res, g):
+    x, w, mask = res
+    wm = w * mask
+    dx = pallas_matmul(g, wm.T)
+    dw = mask * pallas_matmul(x.T, g)
+    # The mask is a training-phase constant; a symbolic-zero cotangent
+    # keeps XLA from materializing anything for it.
+    dm = jnp.zeros_like(mask)
+    return dx, dw, dm
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)

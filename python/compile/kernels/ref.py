@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+to float32 tolerance across a hypothesis-driven sweep of shapes, block
+sizes and sparsity levels (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x, w, mask):
+    """``x @ (mask * w)`` — the sparse linear layer, dense math."""
+    return x @ (mask * w)
+
+
+def matmul_ref(x, w):
+    return x @ w
+
+
+def causal_attention_ref(q, k, v):
+    """Single-head causal attention, materialized-scores reference."""
+    t, d = q.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(causal, s, -1e30)
+    p = jnp.exp(s - s.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    return p @ v

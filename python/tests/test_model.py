@@ -1,0 +1,214 @@
+"""L2 model semantics: shapes, SPDF mask invariants, optimization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.GPTConfig("test", n_layers=2, d_model=32, n_heads=2,
+                  vocab_size=64, ctx_len=32)
+
+
+def _setup(sparsity=0.75, seed=0, use_pallas=False):
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(CFG, key)
+    masks = {}
+    for i, n in enumerate(M.masked_param_names(CFG)):
+        u = jax.random.uniform(jax.random.PRNGKey(100 + i),
+                               params[n].shape)
+        masks[n] = (u >= sparsity).astype(jnp.float32)
+        params[n] = params[n] * masks[n]
+    zeros = {n: jnp.zeros_like(p) for n, p in params.items()}
+    return params, dict(zeros), {n: jnp.zeros_like(p) for n, p
+                                 in params.items()}, masks
+
+
+def _batch(b=4, t=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (b, t), 0, CFG.vocab_size)
+    targets = jnp.roll(tokens, -1, axis=1)
+    loss_mask = jnp.ones((b, t), jnp.float32)
+    return tokens, targets, loss_mask
+
+
+class TestForward:
+    def test_logit_shape(self):
+        params, _, _, _ = _setup()
+        tokens, _, _ = _batch()
+        logits = M.gpt_forward(CFG, params, tokens, use_pallas=False)
+        assert logits.shape == (4, 32, CFG.vocab_size)
+
+    def test_causality(self):
+        """Future tokens must not influence earlier logits."""
+        params, _, _, _ = _setup()
+        tokens, _, _ = _batch()
+        l1 = M.gpt_forward(CFG, params, tokens, use_pallas=False)
+        tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1)
+                                       % CFG.vocab_size)
+        l2 = M.gpt_forward(CFG, params, tokens2, use_pallas=False)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1],
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_pallas_and_jnp_paths_agree(self):
+        params, _, _, masks = _setup()
+        tokens, _, _ = _batch()
+        lp = M.gpt_forward(CFG, params, tokens, masks=masks,
+                           use_pallas=True)
+        lj = M.gpt_forward(CFG, params, tokens, masks=masks,
+                           use_pallas=False)
+        np.testing.assert_allclose(lp, lj, rtol=1e-4, atol=1e-4)
+
+    def test_fused_attention_path_agrees(self):
+        params, _, _, _ = _setup()
+        tokens, _, _ = _batch()
+        lf = M.gpt_forward(CFG, params, tokens, use_pallas=False,
+                           fused_attn=True)
+        lj = M.gpt_forward(CFG, params, tokens, use_pallas=False,
+                           fused_attn=False)
+        np.testing.assert_allclose(lf, lj, rtol=2e-4, atol=2e-4)
+
+    def test_masked_forward_equals_masked_params_dense_forward(self):
+        """x @ (m*w) with raw params == dense forward with pre-masked
+        params — the invariant the eval/logits artifacts rely on."""
+        params, _, _, masks = _setup()
+        tokens, _, _ = _batch()
+        lm = M.gpt_forward(CFG, params, tokens, masks=masks,
+                           use_pallas=False)
+        ld = M.gpt_forward(CFG, params, tokens, masks=None,
+                           use_pallas=False)
+        np.testing.assert_allclose(lm, ld, rtol=1e-5, atol=1e-5)
+
+
+class TestTrainStep:
+    def test_masked_weights_stay_zero(self):
+        params, m, v, masks = _setup(sparsity=0.75)
+        step_fn = M.make_train_step(CFG, use_pallas=False)
+        tokens, targets, lmask = _batch()
+        for t in range(3):
+            params, m, v, loss = step_fn(params, m, v, masks, tokens,
+                                         targets, lmask,
+                                         jnp.float32(t + 1),
+                                         jnp.float32(1e-3))
+        for n in M.masked_param_names(CFG):
+            hole = (1 - masks[n])
+            assert float(jnp.abs(params[n] * hole).max()) == 0.0
+            assert float(jnp.abs(m[n] * hole).max()) == 0.0
+            assert float(jnp.abs(v[n] * hole).max()) == 0.0
+
+    def test_loss_decreases_overfit(self):
+        """A few steps on one batch must reduce the loss (dense)."""
+        params, m, v, masks = _setup(sparsity=0.0)
+        ones = {n: jnp.ones_like(mask) for n, mask in masks.items()}
+        step_fn = jax.jit(M.make_train_step(CFG, use_pallas=False))
+        tokens, targets, lmask = _batch()
+        losses = []
+        for t in range(30):
+            params, m, v, loss = step_fn(params, m, v, ones, tokens,
+                                         targets, lmask,
+                                         jnp.float32(t + 1),
+                                         jnp.float32(3e-3))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_sparse_loss_decreases(self):
+        params, m, v, masks = _setup(sparsity=0.75)
+        step_fn = jax.jit(M.make_train_step(CFG, use_pallas=False))
+        tokens, targets, lmask = _batch()
+        losses = []
+        for t in range(30):
+            params, m, v, loss = step_fn(params, m, v, masks, tokens,
+                                         targets, lmask,
+                                         jnp.float32(t + 1),
+                                         jnp.float32(3e-3))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_pallas_step_matches_jnp_step(self):
+        """One train step, pallas vs jnp linears: same new params."""
+        params, m, v, masks = _setup(sparsity=0.5)
+        tokens, targets, lmask = _batch()
+        a = M.make_train_step(CFG, use_pallas=True)(
+            params, m, v, masks, tokens, targets, lmask,
+            jnp.float32(1), jnp.float32(1e-3))
+        b = M.make_train_step(CFG, use_pallas=False)(
+            params, m, v, masks, tokens, targets, lmask,
+            jnp.float32(1), jnp.float32(1e-3))
+        np.testing.assert_allclose(float(a[3]), float(b[3]),
+                                   rtol=1e-4, atol=1e-5)
+        for n in params:
+            np.testing.assert_allclose(a[0][n], b[0][n],
+                                       rtol=2e-3, atol=2e-5,
+                                       err_msg=n)
+
+    def test_loss_mask_excludes_positions(self):
+        """Zeroing the loss mask on a position removes its gradient."""
+        params, m, v, masks = _setup(sparsity=0.0)
+        ones = {n: jnp.ones_like(x) for n, x in masks.items()}
+        tokens, targets, lmask = _batch()
+        lmask0 = lmask.at[:, :16].set(0.0)
+        l_full = M.lm_loss(CFG, params, tokens, targets, lmask,
+                           use_pallas=False)
+        l_half = M.lm_loss(CFG, params, tokens, targets, lmask0,
+                           use_pallas=False)
+        assert not np.isclose(float(l_full), float(l_half))
+
+
+class TestEvalAndDecode:
+    def test_eval_loss_matches_lm_loss(self):
+        params, _, _, _ = _setup()
+        tokens, targets, lmask = _batch()
+        fn = M.make_eval_loss(CFG, use_pallas=False)
+        s, c = fn(params, tokens, targets, lmask)
+        mean = float(s) / float(c)
+        ref = float(M.lm_loss(CFG, params, tokens, targets, lmask,
+                              use_pallas=False))
+        assert np.isclose(mean, ref, rtol=1e-5)
+
+    def test_logits_last_gathers_correct_position(self):
+        params, _, _, _ = _setup()
+        tokens, _, _ = _batch()
+        pos = jnp.array([3, 7, 11, 31], jnp.int32)
+        fn = M.make_logits_last(CFG, use_pallas=False, fused_attn=False)
+        out = fn(params, tokens, pos)
+        full = M.gpt_forward(CFG, params, tokens, use_pallas=False)
+        for i in range(4):
+            np.testing.assert_allclose(out[i], full[i, int(pos[i])],
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_logits_last_ignores_right_padding(self):
+        """Causality: junk tokens after pos don't change logits at pos."""
+        params, _, _, _ = _setup()
+        tokens, _, _ = _batch()
+        pos = jnp.array([5, 5, 5, 5], jnp.int32)
+        fn = M.make_logits_last(CFG, use_pallas=False, fused_attn=False)
+        a = fn(params, tokens, pos)
+        tokens2 = tokens.at[:, 6:].set(0)
+        b = fn(params, tokens2, pos)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+class TestParamSpecs:
+    def test_spec_names_unique_and_sorted_matches_dict_flatten(self):
+        specs = M.param_specs(CFG)
+        names = [n for n, _, _ in specs]
+        assert len(names) == len(set(names))
+        params = {n: jnp.zeros(s) for n, s, _ in specs}
+        leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+        flat_names = [p[0].key for p, _ in leaves]
+        assert flat_names == sorted(names)
+
+    def test_masked_names_are_2d_weights(self):
+        shapes = {n: s for n, s, _ in M.param_specs(CFG)}
+        for n in M.masked_param_names(CFG):
+            assert len(shapes[n]) == 2
+
+    def test_param_count_formula(self):
+        """non-embedding params ~= 12 * d^2 * L (+ small LN/bias terms)."""
+        total = sum(int(np.prod(s)) for n, s, _ in M.param_specs(CFG)
+                    if n not in ("wte", "wpe"))
+        d, L = CFG.d_model, CFG.n_layers
+        assert abs(total - 12 * d * d * L) / (12 * d * d * L) < 0.05

@@ -1,0 +1,138 @@
+//! Ablation bench (DESIGN.md design-choice callouts): mask scheme at
+//! fixed 75% sparsity — the paper's **uniform random** choice vs the
+//! ERK layer-wise ratios and magnitude-at-init pruning it cites and
+//! deliberately skips (§2.2: "we focus on the simplest setup").
+//!
+//! Short pre-training budget (shape comparison, not absolute quality);
+//! also runs the App. A.2-style LR grid on the fine-tune of the winner.
+//!
+//! Run: `cargo bench --bench ablation_mask_schemes`
+
+use spdf::coordinator::{self, FinetuneConfig, PretrainConfig, World,
+                        WorldConfig};
+use spdf::bench_support::Table;
+use spdf::data::Task;
+use spdf::runtime::Engine;
+use spdf::sparsity::{MaskScheme, MaskSet};
+use spdf::train::TrainState;
+use spdf::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let engine = match Engine::cpu(spdf::runtime::default_artifact_dir())
+    {
+        Ok(e) => e,
+        Err(e) => {
+            println!("artifacts unavailable ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let runtime = engine.load_model("gpt-nano")?;
+    let world = World::build(&WorldConfig {
+        seed: 3,
+        corpus_words: 120_000,
+        vocab_size: 512,
+        task_scale: 0.05,
+    });
+    let steps: u64 = std::env::var("SPDF_ABLATION_STEPS")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(150);
+
+    println!("=== mask-scheme ablation @75% sparsity, {steps} \
+              pre-train steps ===\n");
+    let mut t = Table::new(&["scheme", "realized S", "pretrain eval \
+                              loss", "e2e val loss after dense FT"]);
+    for scheme in ["uniform", "erk", "magnitude"] {
+        // magnitude masks need the init weights, so build them by hand
+        let res = if scheme == "magnitude" {
+            let mm = &runtime.manifest;
+            let mut rng = Rng::new(0);
+            let mut state = TrainState::init(mm, &mut rng);
+            let masks = MaskSet::magnitude(mm, 0.75, &state.params);
+            state.sparsify(masks);
+            // re-use pretrain()'s internals via a dense config then a
+            // manual swap is invasive; simplest faithful path: run the
+            // same loop through the coordinator with sparsity 0 but the
+            // pre-sparsified state is not injectable — so train via the
+            // Trainer directly.
+            pretrain_with_state(&runtime, &world, state, steps)?
+        } else {
+            let ms = if scheme == "erk" { MaskScheme::Erk }
+                     else { MaskScheme::Uniform };
+            let r = coordinator::pretrain(&runtime, &world,
+                &PretrainConfig {
+                    sparsity: 0.75,
+                    scheme: ms,
+                    steps,
+                    peak_lr: 1.5e-3,
+                    seed: 0,
+                    log_every: 0,
+                })?;
+            (r.state, r.final_eval_loss)
+        };
+        let (state, eval_loss) = res;
+        let realized = state.masks.realized_sparsity();
+        let ft = coordinator::finetune(&runtime, &world, state,
+            &FinetuneConfig {
+                task: Task::E2e,
+                epochs: 1,
+                peak_lr: 5e-4,
+                ..Default::default()
+            })?;
+        t.row(&[
+            scheme.to_string(),
+            format!("{:.1}%", realized * 100.0),
+            format!("{eval_loss:.4}"),
+            format!("{:.4}", ft.best_val_loss),
+        ]);
+    }
+    t.print();
+    println!("\npaper context: uniform random is the paper's choice; \
+              ERK/magnitude are the cited alternatives (§2.2, §4). \
+              Expected: all three train; differences are small at this \
+              scale.");
+
+    println!("\n=== App. A.2-style LR grid (uniform @75%, e2e) ===\n");
+    let r = coordinator::pretrain(&runtime, &world, &PretrainConfig {
+        sparsity: 0.75,
+        scheme: MaskScheme::Uniform,
+        steps,
+        peak_lr: 1.5e-3,
+        seed: 0,
+        log_every: 0,
+    })?;
+    let (lr, best) = coordinator::pipeline::lr_grid_search(
+        &runtime, &world, &r.state,
+        &FinetuneConfig {
+            task: Task::E2e,
+            epochs: 1,
+            ..Default::default()
+        },
+        &[1e-4, 3e-4, 6e-4])?;
+    println!("best lr {lr:.1e} -> val loss {:.4}", best.best_val_loss);
+    Ok(())
+}
+
+/// Pre-train from an externally prepared (already sparsified) state.
+fn pretrain_with_state(
+    runtime: &spdf::runtime::ModelRuntime,
+    world: &World,
+    state: TrainState,
+    steps: u64,
+) -> anyhow::Result<(TrainState, f64)> {
+    use spdf::data::PackedStream;
+    use spdf::train::{Schedule, Trainer};
+    let mm = &runtime.manifest;
+    let (b, t) = (mm.train_batch, mm.config.ctx_len);
+    let split = world.stream.len() - (world.stream.len() / 20)
+        .max(t * b + 1);
+    let mut ps = PackedStream::new(world.stream[..split].to_vec(), b, t);
+    let mut trainer = Trainer::new(runtime, state,
+                                   Schedule::pretrain(1.5e-3, steps));
+    for _ in 0..steps {
+        let batch = ps.next_batch();
+        trainer.step(&batch)?;
+    }
+    let mut ev = PackedStream::new(world.stream[split..].to_vec(), b, t);
+    let evb = vec![ev.next_batch()];
+    let loss = trainer.evaluate(&evb)?;
+    Ok((trainer.into_state()?, loss))
+}

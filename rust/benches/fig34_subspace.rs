@@ -1,0 +1,97 @@
+//! Bench/regenerator for **Figures 3–4**: angular (cosine) distance in
+//! parameter subspace between pre-trained and DART-fine-tuned weights,
+//! per module per layer, dense vs 75% sparse.
+//!
+//! Uses the cached pre-training checkpoints from `spdf run-matrix`
+//! (runs/pretrain-<model>-s{00,75}-seed0.ckpt) and performs the short
+//! dense fine-tune on DART in-process.
+//!
+//! Expected shape vs paper Figs. 3–4: the sparse pre-trained model
+//! moves further than the dense one (larger distances), concentrated in
+//! W_D and W_O; the larger model moves less overall (§3.4).
+
+use std::path::Path;
+
+use spdf::analysis;
+use spdf::bench_support::Table;
+use spdf::coordinator::experiments::pretrain_ckpt_path;
+use spdf::coordinator::{self, FinetuneConfig, World, WorldConfig};
+use spdf::data::Task;
+use spdf::runtime::Engine;
+use spdf::train::checkpoint;
+
+fn main() -> anyhow::Result<()> {
+    let run_dir = std::env::var("SPDF_RUN_DIR")
+        .unwrap_or_else(|_| "runs".into());
+    let run_dir = Path::new(&run_dir);
+    let models: Vec<String> = std::env::var("SPDF_SUBSPACE_MODELS")
+        .unwrap_or_else(|_| "gpt-nano".into())
+        .split(',').map(|s| s.trim().to_string()).collect();
+
+    let mut missing = Vec::new();
+    for model in &models {
+        for sp in [0.0, 0.75] {
+            let p = pretrain_ckpt_path(run_dir, model, sp, 0);
+            if !p.exists() {
+                missing.push(p);
+            }
+        }
+    }
+    if !missing.is_empty() {
+        println!("missing pre-training checkpoints: {missing:?}\n\
+                  regenerate with `spdf run-matrix` first \
+                  (see EXPERIMENTS.md).");
+        return Ok(());
+    }
+
+    let world = World::build(&WorldConfig {
+        seed: 0,
+        corpus_words: 100_000,
+        vocab_size: 512,
+        task_scale: 0.15,
+    });
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+
+    for model in &models {
+        let runtime = engine.load_model(model)?;
+        let mut means = Vec::new();
+        for sp in [0.0, 0.75] {
+            let pre = checkpoint::load(
+                &pretrain_ckpt_path(run_dir, model, sp, 0))?;
+            let pre_params = pre.params.clone();
+            let ft = coordinator::finetune(
+                &runtime, &world, pre,
+                &FinetuneConfig {
+                    task: Task::Dart,
+                    epochs: 1,
+                    peak_lr: 5e-4,
+                    dense: true,
+                    seed: 0,
+                    patience: 2,
+                    log_every: 0,
+                })?;
+            let d = analysis::subspace_distances(&pre_params,
+                                                 &ft.state.params);
+            println!("\n=== Fig 3/4 ({model}, {:.0}% sparse pre-train, \
+                      DART dense FT): cosine distances ===\n",
+                     sp * 100.0);
+            let mut t = Table::new(&["module", "per-layer distances"]);
+            for (module, dists) in &d {
+                t.row(&[module.to_string(),
+                        dists.iter().map(|x| format!("{x:.4}"))
+                            .collect::<Vec<_>>().join("  ")]);
+            }
+            t.print();
+            let mean = analysis::mean_distance(&pre_params,
+                                               &ft.state.params);
+            println!("mean distance: {mean:.4}");
+            means.push((sp, mean));
+        }
+        if means.len() == 2 {
+            println!("\nshape check ({model}): sparse(75%) mean {:.4} \
+                      vs dense {:.4} — paper expects sparse > dense.",
+                     means[1].1, means[0].1);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! Bench/regenerator for **Table 2 + App. Tables 2–3** (FLOPs accounting
+//! at the paper's true scale) and a timing of the accountant itself.
+//!
+//! Run: `cargo bench --bench table2_flops`
+//!
+//! Expected shape vs paper: these are analytic and reproduce the paper's
+//! numbers to ~1% (asserted in flops module unit tests): GPT-3 XL @75%
+//! ⇒ ≈2.5x end-to-end FLOP reduction, GPT-2 Small @75% ⇒ ≈1.65x.
+
+use spdf::bench_support::{bench, fmt_time, Table};
+use spdf::config::{gpt2_small, gpt3_xl};
+use spdf::flops;
+
+fn main() {
+    println!("=== Table 2: total pre-train + fine-tune FLOPs (x10^18) \
+              and speedup vs dense ===\n");
+    let mut t = Table::new(&["Model", "Sparsity", "E2E", "WebNLG",
+                             "DART", "Curation", "paper E2E"]);
+    let paper_e2e = [
+        ("gpt2-small", 0.00, "2.48 (1.00x)"),
+        ("gpt2-small", 0.50, "1.84 (1.34x)"),
+        ("gpt2-small", 0.75, "1.52 (1.64x)"),
+        ("gpt3-xl", 0.00, "236.62 (1.00x)"),
+        ("gpt3-xl", 0.50, "142.40 (1.66x)"),
+        ("gpt3-xl", 0.75, "95.29 (2.48x)"),
+    ];
+    for cfg in [gpt2_small(), gpt3_xl()] {
+        let tokens = flops::paper_tokens(&cfg.name);
+        for s in [0.0, 0.5, 0.75] {
+            let cell = |task: &str| {
+                let r = flops::table2_cell(&cfg, tokens, task, s);
+                format!("{:.2} ({:.2}x)", r.total_flops / 1e18,
+                        r.speedup_vs_dense)
+            };
+            let paper = paper_e2e
+                .iter()
+                .find(|(m, ps, _)| *m == cfg.name && *ps == s)
+                .map(|(_, _, v)| v.to_string())
+                .unwrap_or_default();
+            t.row(&[
+                cfg.name.clone(),
+                format!("{:.0}%", s * 100.0),
+                cell("e2e"),
+                cell("webnlg"),
+                cell("dart"),
+                cell("curation"),
+                paper,
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n=== App. Table 2: pre-training detail ===\n");
+    let mut t2 = Table::new(&["Model", "Sparsity", "Seqs", "FLOPs/Seq",
+                              "exaFLOPs", "paper exaFLOPs"]);
+    let paper_pt = [
+        ("gpt2-small", 0.00, 2.43), ("gpt2-small", 0.50, 1.79),
+        ("gpt2-small", 0.75, 1.46), ("gpt3-xl", 0.00, 236.10),
+        ("gpt3-xl", 0.50, 141.87), ("gpt3-xl", 0.75, 94.76),
+    ];
+    for cfg in [gpt2_small(), gpt3_xl()] {
+        let tokens = flops::paper_tokens(&cfg.name);
+        for s in [0.0, 0.5, 0.75] {
+            let p = flops::pretrain_flops(&cfg, tokens, s);
+            let paper = paper_pt
+                .iter()
+                .find(|(m, ps, _)| *m == cfg.name && *ps == s)
+                .map(|(_, _, v)| format!("{v:.2}"))
+                .unwrap_or_default();
+            t2.row(&[
+                cfg.name.clone(),
+                format!("{:.0}%", s * 100.0),
+                format!("{:.2e}", p.total_seqs),
+                format!("{:.2e}", p.flops_per_seq),
+                format!("{:.2}", p.total_flops / 1e18),
+                paper,
+            ]);
+        }
+    }
+    t2.print();
+
+    println!("\n=== App. Table 3: fine-tuning detail ===\n");
+    let mut t3 = Table::new(&["Task", "Model", "Seqs", "fwd FLOPs/Seq",
+                              "exaFLOPs", "paper"]);
+    let paper_ft = [
+        ("e2e", "gpt2-small", 0.052), ("e2e", "gpt3-xl", 0.524),
+        ("webnlg", "gpt2-small", 0.022), ("webnlg", "gpt3-xl", 0.226),
+        ("dart", "gpt2-small", 0.051), ("dart", "gpt3-xl", 0.524),
+        ("curation", "gpt2-small", 0.014),
+        ("curation", "gpt3-xl", 0.141),
+    ];
+    for task in ["e2e", "webnlg", "dart", "curation"] {
+        for cfg in [gpt2_small(), gpt3_xl()] {
+            let f = flops::finetune_flops(&cfg, task);
+            let paper = paper_ft
+                .iter()
+                .find(|(pt, m, _)| *pt == task && *m == cfg.name)
+                .map(|(_, _, v)| format!("{v:.3}"))
+                .unwrap_or_default();
+            t3.row(&[
+                task.into(),
+                cfg.name.clone(),
+                format!("{:.2e}", f.total_seqs),
+                format!("{:.2e}", f.flops_per_seq_fwd),
+                format!("{:.3}", f.total_flops / 1e18),
+                paper,
+            ]);
+        }
+    }
+    t3.print();
+
+    // FLOP shares narrative (§3.5)
+    println!("\n=== §3.5 FLOP shares at T=2048 ===\n");
+    for cfg in [gpt2_small(), gpt3_xl()] {
+        let (attn, vocab) = flops::flop_shares(&cfg, 2048);
+        println!("{:<12} attention {:.1}%  vocab {:.1}%",
+                 cfg.name, attn * 100.0, vocab * 100.0);
+    }
+
+    // and time the accountant (it sits on the report path)
+    let s = bench(10, 100, || {
+        flops::table2_cell(&gpt3_xl(), flops::paper_tokens("gpt3-xl"),
+                           "e2e", 0.75)
+    });
+    println!("\naccountant latency: {} / call (p95 {})",
+             fmt_time(s.mean), fmt_time(s.p95));
+}

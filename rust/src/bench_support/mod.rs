@@ -1,0 +1,150 @@
+//! Bench harness (criterion substitute for the offline environment).
+//!
+//! Benches are plain binaries under `rust/benches/` declared with
+//! `harness = false`, run by `cargo bench`. This module provides the
+//! measurement loop (warmup → timed iterations → summary stats) and
+//! aligned table printing so every paper table/figure regenerator
+//! reports in a consistent format.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Measure `f` with `warmup` untimed and `iters` timed runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T)
+                -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Adaptive variant: runs until `min_time_s` of samples or `max_iters`.
+pub fn bench_for<T>(min_time_s: f64, max_iters: usize,
+                    mut f: impl FnMut() -> T) -> Summary {
+    std::hint::black_box(f()); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters
+        && (start.elapsed().as_secs_f64() < min_time_s
+            || samples.len() < 3)
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.2} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+/// Fixed-width markdown-ish table writer for bench reports.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut calls = 0;
+        let s = bench(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_for_stops_at_max_iters() {
+        let s = bench_for(10.0, 4, || std::hint::black_box(1 + 1));
+        assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.50 s");
+        assert_eq!(fmt_time(0.0025), "2.50 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.50 µs");
+        assert_eq!(fmt_time(5e-9), "5 ns");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("| name      | value |"));
+        assert!(r.lines().count() == 4);
+    }
+}

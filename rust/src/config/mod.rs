@@ -1,0 +1,185 @@
+//! Model/config registry.
+//!
+//! Two families live here:
+//!  * the *paper* configs (GPT-2 Small 125M, GPT-3 XL 1.3B, App. Table 1)
+//!    used by the analytic FLOPs accountant to regenerate Tables 2/A.2/A.3
+//!    at the paper's true scale, and
+//!  * the *simulation* configs (gpt-nano, gpt-micro) that are actually
+//!    trained end-to-end on this testbed. Their source of truth is the
+//!    AOT manifest; `GPTConfig::from_json` loads them and the registry
+//!    entries are cross-checked against the manifest in integration tests.
+
+use crate::util::json::Json;
+
+/// GPT architecture hyperparameters (mirrors python `model.GPTConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GPTConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab_size: usize,
+    pub ctx_len: usize,
+}
+
+impl GPTConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Parameters in the six sparsifiable matrices per layer
+    /// (W_Q,W_K,W_V,W_D: d^2 each; W_I,W_O: 4d^2 each) = 12 d^2 L.
+    pub fn sparsifiable_params(&self) -> u64 {
+        12 * (self.d_model as u64).pow(2) * self.n_layers as u64
+    }
+
+    /// Embedding parameters (token + learned position).
+    pub fn embedding_params(&self) -> u64 {
+        (self.vocab_size as u64 + self.ctx_len as u64)
+            * self.d_model as u64
+    }
+
+    /// LayerNorm + bias parameters.
+    pub fn other_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let per_layer = 2 * (2 * d)            // ln1, ln2 (g+b)
+            + 4 * d                             // attn biases
+            + (4 * d + d);                      // mlp biases
+        per_layer * self.n_layers as u64 + 2 * d // final ln
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.sparsifiable_params() + self.embedding_params()
+            + self.other_params()
+    }
+
+    pub fn from_json(name: &str, j: &Json) -> anyhow::Result<GPTConfig> {
+        let g = |k: &str| -> anyhow::Result<usize> {
+            Ok(j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("config {k} not a number"))?)
+        };
+        Ok(GPTConfig {
+            name: name.to_string(),
+            n_layers: g("n_layers")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            vocab_size: g("vocab_size")?,
+            ctx_len: g("ctx_len")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("name", Json::Str(self.name.clone()))
+            .push("n_layers", Json::Num(self.n_layers as f64))
+            .push("d_model", Json::Num(self.d_model as f64))
+            .push("n_heads", Json::Num(self.n_heads as f64))
+            .push("vocab_size", Json::Num(self.vocab_size as f64))
+            .push("ctx_len", Json::Num(self.ctx_len as f64));
+        o
+    }
+}
+
+/// GPT-2 Small — the paper's 125M model (App. Table 1).
+pub fn gpt2_small() -> GPTConfig {
+    GPTConfig {
+        name: "gpt2-small".into(),
+        n_layers: 12,
+        d_model: 768,
+        n_heads: 12,
+        vocab_size: 50257,
+        ctx_len: 2048,
+    }
+}
+
+/// GPT-3 XL — the paper's 1.3B model (App. Table 1).
+pub fn gpt3_xl() -> GPTConfig {
+    GPTConfig {
+        name: "gpt3-xl".into(),
+        n_layers: 24,
+        d_model: 2048,
+        n_heads: 16,
+        vocab_size: 50257,
+        ctx_len: 2048,
+    }
+}
+
+/// The simulation stand-ins (must mirror python `model.SIM_CONFIGS`;
+/// cross-checked against the manifest in tests).
+pub fn sim_nano() -> GPTConfig {
+    GPTConfig {
+        name: "gpt-nano".into(),
+        n_layers: 2,
+        d_model: 64,
+        n_heads: 2,
+        vocab_size: 512,
+        ctx_len: 128,
+    }
+}
+
+pub fn sim_micro() -> GPTConfig {
+    GPTConfig {
+        name: "gpt-micro".into(),
+        n_layers: 4,
+        d_model: 128,
+        n_heads: 4,
+        vocab_size: 512,
+        ctx_len: 128,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<GPTConfig> {
+    match name {
+        "gpt2-small" => Some(gpt2_small()),
+        "gpt3-xl" => Some(gpt3_xl()),
+        "gpt-nano" => Some(sim_nano()),
+        "gpt-micro" => Some(sim_micro()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_param_counts() {
+        // paper: 125M and 1.3B total trainable parameters
+        let small = gpt2_small().total_params() as f64;
+        assert!((small / 1.25e8 - 1.0).abs() < 0.05, "small={small}");
+        let xl = gpt3_xl().total_params() as f64;
+        assert!((xl / 1.3e9 - 1.0).abs() < 0.05, "xl={xl}");
+    }
+
+    #[test]
+    fn heads_divide_model_dim() {
+        for c in [gpt2_small(), gpt3_xl(), sim_nano(), sim_micro()] {
+            assert_eq!(c.d_model % c.n_heads, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn paper_head_dims() {
+        assert_eq!(gpt2_small().d_head(), 64); // App. Table 1
+        assert_eq!(gpt3_xl().d_head(), 128);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = sim_micro();
+        let j = c.to_json();
+        let c2 = GPTConfig::from_json("gpt-micro", &j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(by_name("gpt3-xl").unwrap().n_layers, 24);
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! The SPDF coordinator: pipeline orchestration (pipeline.rs), the
+//! experiment matrix runner (experiments.rs) and report formatting
+//! (report.rs).
+
+pub mod experiments;
+pub mod pipeline;
+pub mod report;
+
+pub use pipeline::{
+    evaluate_task, finetune, load_runtime, pretrain, FinetuneConfig,
+    FinetuneResult, PretrainConfig, PretrainResult, TaskMetrics, World,
+    WorldConfig,
+};

@@ -1,0 +1,541 @@
+//! The SPDF pipeline: sparsify → sparse pre-train → densify → dense
+//! fine-tune → evaluate. This is the paper's §2.2 procedure as
+//! executable orchestration.
+
+use std::collections::BTreeMap;
+
+use crate::data::{self, Batch, FinetuneBatches, PackedStream, Task,
+                  TaskData};
+use crate::generate::{self, DecodeParams};
+use crate::runtime::{Engine, ModelRuntime};
+use crate::sparsity::{MaskScheme, MaskSet};
+use crate::tokenizer::{Tokenizer, BOS, SEP};
+use crate::train::{self, Schedule, StepLog, TrainState, Trainer};
+use crate::util::rng::Rng;
+use crate::{eval, flops};
+
+/// Everything data-side shared across a seed: tokenizer, pre-training
+/// stream, downstream task datasets.
+pub struct World {
+    pub tokenizer: Tokenizer,
+    pub stream: Vec<u32>,
+    pub tasks: BTreeMap<Task, TaskData>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorldConfig {
+    pub seed: u64,
+    pub corpus_words: usize,
+    pub vocab_size: usize,
+    /// dataset scale relative to paper/10 defaults
+    pub task_scale: f64,
+}
+
+impl Default for WorldConfig {
+    fn default() -> Self {
+        WorldConfig {
+            seed: 0,
+            corpus_words: 400_000,
+            vocab_size: 512,
+            task_scale: 0.25,
+        }
+    }
+}
+
+impl World {
+    pub fn build(cfg: &WorldConfig) -> World {
+        let mut rng = Rng::new(cfg.seed ^ 0x5bd1e995);
+        let corpus = data::synthpile::corpus(&mut rng, cfg.corpus_words);
+        // train the tokenizer on the corpus + downstream lexicon so
+        // fine-tuning text stays in-vocabulary
+        let mut tasks = BTreeMap::new();
+        for task in Task::all() {
+            let mut trng = rng.fork(task.name().len() as u64);
+            tasks.insert(task, task.generate(&mut trng, cfg.task_scale));
+        }
+        let mut tok_corpus = corpus.clone();
+        tok_corpus.push(' ');
+        tok_corpus.push_str(&data::synthpile::lexicon());
+        for td in tasks.values() {
+            for ex in td.train.iter().take(200) {
+                tok_corpus.push(' ');
+                tok_corpus.push_str(&ex.input);
+                tok_corpus.push(' ');
+                tok_corpus.push_str(&ex.refs[0]);
+            }
+        }
+        let tokenizer = Tokenizer::train(&tok_corpus, cfg.vocab_size);
+        let stream = tokenizer.encode(&corpus);
+        World { tokenizer, stream, tasks }
+    }
+
+    pub fn task(&self, task: Task) -> &TaskData {
+        &self.tasks[&task]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 1+2: sparsify + sparse pre-train
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub sparsity: f64,
+    pub scheme: MaskScheme,
+    pub steps: u64,
+    pub peak_lr: f32,
+    pub seed: u64,
+    pub log_every: u64,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig {
+            sparsity: 0.0,
+            scheme: MaskScheme::Uniform,
+            steps: 1200,
+            peak_lr: 1e-3,
+            seed: 0,
+            log_every: 100,
+        }
+    }
+}
+
+pub struct PretrainResult {
+    pub state: TrainState,
+    pub history: Vec<StepLog>,
+    pub final_eval_loss: f64,
+    /// analytic train FLOPs actually spent at this scale
+    pub train_flops: f64,
+}
+
+/// Steps 1+2 of SPDF: random-sparsify at init, pre-train on SynthPile.
+pub fn pretrain(
+    runtime: &ModelRuntime,
+    world: &World,
+    cfg: &PretrainConfig,
+) -> anyhow::Result<PretrainResult> {
+    let mm = &runtime.manifest;
+    let mut rng = Rng::new(cfg.seed);
+    let mut state = TrainState::init(mm, &mut rng);
+    if cfg.sparsity > 0.0 {
+        let masks = MaskSet::random(mm, cfg.sparsity, cfg.scheme,
+                                    &mut rng.fork(1));
+        state.sparsify(masks);
+    }
+
+    let (b, t) = (mm.train_batch, mm.config.ctx_len);
+    // hold out a tail of the stream for eval
+    let split = world.stream.len() - (world.stream.len() / 20)
+        .max(t * b + 1);
+    let mut train_stream =
+        PackedStream::new(world.stream[..split].to_vec(), b, t);
+    let eval_batches = eval_stream_batches(&world.stream[split..], b, t);
+
+    let schedule = Schedule::pretrain(cfg.peak_lr, cfg.steps);
+    let mut trainer = Trainer::new(runtime, state, schedule);
+    for step in 1..=cfg.steps {
+        let batch = train_stream.next_batch();
+        let loss = trainer.step(&batch)?;
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            log(&format!(
+                "pretrain[{} s={:.0}%] step {step}/{} loss {loss:.4} \
+                 lr {:.2e}",
+                mm.config.name, cfg.sparsity * 100.0, cfg.steps,
+                trainer.schedule.lr(step)));
+        }
+    }
+    let final_eval_loss = trainer.evaluate(&eval_batches)?; // syncs lits
+    log(&format!(
+        "pretrain[{} s={:.0}%] done: eval loss {final_eval_loss:.4} \
+         (ppl {:.2})",
+        mm.config.name, cfg.sparsity * 100.0,
+        train::perplexity(final_eval_loss)));
+
+    let tokens = cfg.steps as f64 * (b * t) as f64;
+    let seqs = tokens / t as f64;
+    let per_seq =
+        flops::train_flops_per_seq(&mm.config, t as u64, cfg.sparsity);
+    Ok(PretrainResult {
+        state: trainer.state,
+        history: trainer.history,
+        final_eval_loss,
+        train_flops: seqs * per_seq,
+    })
+}
+
+fn eval_stream_batches(stream: &[u32], b: usize, t: usize) -> Vec<Batch> {
+    let mut ps = PackedStream::new(stream.to_vec(), b, t);
+    let n = ((stream.len() / (b * t)).max(1)).min(4);
+    (0..n).map(|_| ps.next_batch()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Phase 3: fine-tune (dense by default; sparse for the Fig. 2 baseline)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct FinetuneConfig {
+    pub task: Task,
+    pub epochs: usize,
+    pub peak_lr: f32,
+    /// true = SPDF dense fine-tuning; false = sparse FT (Fig. 2)
+    pub dense: bool,
+    pub seed: u64,
+    /// early stopping patience in epochs (paper: stop on overfit)
+    pub patience: usize,
+    pub log_every: u64,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig {
+            task: Task::E2e,
+            epochs: 5,
+            peak_lr: 3e-4,
+            dense: true,
+            seed: 0,
+            patience: 2,
+            log_every: 0,
+        }
+    }
+}
+
+pub struct FinetuneResult {
+    pub state: TrainState,
+    pub history: Vec<StepLog>,
+    pub best_val_loss: f64,
+    pub epochs_ran: usize,
+    pub train_flops: f64,
+}
+
+/// Step 3 of SPDF: densify (mask → ones, revived weights start at 0)
+/// and fine-tune with a linear schedule + per-epoch early stopping.
+pub fn finetune(
+    runtime: &ModelRuntime,
+    world: &World,
+    mut state: TrainState,
+    cfg: &FinetuneConfig,
+) -> anyhow::Result<FinetuneResult> {
+    let mm = &runtime.manifest;
+    if cfg.dense {
+        state.densify(mm);
+    } else {
+        state.reset_optimizer();
+    }
+
+    let (b, t) = (mm.train_batch, mm.config.ctx_len);
+    let td = world.task(cfg.task);
+    let train_ex: Vec<(String, String)> = td
+        .train
+        .iter()
+        .map(|ex| (ex.input.clone(), ex.refs[0].clone()))
+        .collect();
+    let mut batches = FinetuneBatches::new(
+        &world.tokenizer, train_ex, b, t, cfg.seed ^ 0xf17e);
+    let val_batches = finetune_eval_batches(
+        &world.tokenizer, &td.valid, b, t);
+
+    let steps_per_epoch = batches.batches_per_epoch() as u64;
+    let total_steps = steps_per_epoch * cfg.epochs as u64;
+    let schedule = Schedule::finetune(cfg.peak_lr, total_steps);
+    let mut trainer = Trainer::new(runtime, state, schedule);
+
+    let mut best_val = f64::INFINITY;
+    let mut best_state: Option<TrainState> = None;
+    let mut bad_epochs = 0;
+    let mut epochs_ran = 0;
+    'outer: for epoch in 0..cfg.epochs {
+        for s in 0..steps_per_epoch {
+            let batch = batches.next_batch();
+            let loss = trainer.step(&batch)?;
+            if cfg.log_every > 0
+                && (epoch as u64 * steps_per_epoch + s + 1)
+                    % cfg.log_every == 0
+            {
+                log(&format!(
+                    "finetune[{}] epoch {epoch} step {s} loss {loss:.4}",
+                    cfg.task.name()));
+            }
+        }
+        epochs_ran = epoch + 1;
+        let val = trainer.evaluate(&val_batches)?;
+        log(&format!(
+            "finetune[{} {}] epoch {epoch}: val loss {val:.4} \
+             (ppl {:.2})",
+            mm.config.name, cfg.task.name(), train::perplexity(val)));
+        if val < best_val - 1e-4 {
+            best_val = val;
+            best_state = Some(trainer.state.clone());
+            bad_epochs = 0;
+        } else {
+            bad_epochs += 1;
+            if bad_epochs >= cfg.patience {
+                log("finetune: early stop (overfitting)");
+                break 'outer;
+            }
+        }
+    }
+    let history = trainer.history.clone();
+    let state = match best_state {
+        Some(s) => s,
+        None => trainer.into_state()?,
+    };
+
+    let tokens = history.len() as f64 * (b * t) as f64;
+    let sparsity = if cfg.dense { 0.0 } else {
+        state.masks.target_sparsity
+    };
+    let per_seq =
+        flops::train_flops_per_seq(&mm.config, t as u64, sparsity);
+    Ok(FinetuneResult {
+        state,
+        history,
+        best_val_loss: best_val,
+        epochs_ran,
+        train_flops: tokens / t as f64 * per_seq,
+    })
+}
+
+fn finetune_eval_batches(
+    tok: &Tokenizer,
+    examples: &[data::TaskExample],
+    b: usize,
+    t: usize,
+) -> Vec<Batch> {
+    assert!(!examples.is_empty());
+    let cap = examples.len().min(4 * b);
+    let mut out = Vec::new();
+    let mut cur_tokens = Vec::new();
+    let mut cur_targets = Vec::new();
+    let mut cur_mask = Vec::new();
+    let mut rows = 0;
+    // pad the tail batch by wrapping around (padded rows keep their
+    // loss mask; slight double-weighting of the first examples is an
+    // acceptable eval approximation over a fixed-geometry artifact)
+    let padded = cap.div_ceil(b) * b;
+    for i in 0..padded {
+        let ex = &examples[i % cap];
+        let (tk, tg, lm) =
+            data::format_example(tok, &ex.input, &ex.refs[0], t);
+        cur_tokens.extend(tk);
+        cur_targets.extend(tg);
+        cur_mask.extend(lm);
+        rows += 1;
+        if rows == b {
+            out.push(Batch {
+                b, t,
+                tokens: std::mem::take(&mut cur_tokens),
+                targets: std::mem::take(&mut cur_targets),
+                loss_mask: std::mem::take(&mut cur_mask),
+            });
+            rows = 0;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Phase 4: downstream evaluation
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+pub struct TaskMetrics {
+    pub bleu: f64,
+    pub nist: f64,
+    pub meteor: f64,
+    pub rouge_l: f64,
+    pub cider: f64,
+    pub ter: f64,
+    pub ppl: f64,
+    pub n_examples: usize,
+    /// WebNLG only (paper §3.1): BLEU on the seen-category and
+    /// unseen-category halves of the test set.
+    pub bleu_seen: Option<f64>,
+    pub bleu_unseen: Option<f64>,
+}
+
+/// Generate on the test split and score with the official-metric suite;
+/// PPL comes from teacher-forced eval_loss on the same split.
+pub fn evaluate_task(
+    runtime: &ModelRuntime,
+    state: &TrainState,
+    world: &World,
+    task: Task,
+    max_examples: usize,
+    dp: &DecodeParams,
+) -> anyhow::Result<TaskMetrics> {
+    let mm = &runtime.manifest;
+    let tok = &world.tokenizer;
+    let td = world.task(task);
+    let t = mm.config.ctx_len;
+    let examples: Vec<&data::TaskExample> =
+        td.test.iter().take(max_examples).collect();
+
+    // ---- perplexity (teacher forced) ----------------------------------
+    let owned: Vec<data::TaskExample> =
+        examples.iter().map(|e| (*e).clone()).collect();
+    let ppl_batches = finetune_eval_batches(
+        tok, &owned, mm.eval_batch, t);
+    let mean_loss =
+        train::evaluate_loss(runtime, state, &ppl_batches)?;
+    let ppl = train::perplexity(mean_loss);
+
+    // ---- generation ----------------------------------------------------
+    let params = state.param_tensors(mm);
+    let mut pairs: Vec<(String, Vec<String>)> = Vec::new();
+    if dp.beam_size <= 1 {
+        for chunk in examples.chunks(mm.decode_batch) {
+            let prompts: Vec<Vec<u32>> = chunk
+                .iter()
+                .map(|ex| prompt_tokens(tok, &ex.input, t))
+                .collect();
+            let outs = generate::greedy(runtime, &params, &prompts, dp)?;
+            for (ex, ids) in chunk.iter().zip(outs) {
+                pairs.push((tok.decode(&ids), ex.refs.clone()));
+            }
+        }
+    } else {
+        for ex in &examples {
+            let prompt = prompt_tokens(tok, &ex.input, t);
+            let ids = generate::beam(runtime, &params, &prompt, dp)?;
+            pairs.push((tok.decode(&ids), ex.refs.clone()));
+        }
+    }
+
+    if std::env::var("SPDF_DUMP_GEN").is_ok() {
+        for (h, rs) in pairs.iter().take(6) {
+            eprintln!("HYP: {h}\nREF: {}\n", rs[0]);
+        }
+    }
+
+    // WebNLG's test set is half seen / half unseen categories (§3.1);
+    // report BLEU per half like the official challenge script.
+    let (mut bleu_seen, mut bleu_unseen) = (None, None);
+    if task == Task::WebNlg {
+        let split = |want: bool| -> Vec<(String, Vec<String>)> {
+            pairs.iter()
+                .zip(&examples)
+                .filter(|(_, ex)| ex.seen_category == want)
+                .map(|(p, _)| p.clone())
+                .collect()
+        };
+        let seen = split(true);
+        let unseen = split(false);
+        if !seen.is_empty() {
+            bleu_seen = Some(eval::bleu::corpus_bleu(&seen));
+        }
+        if !unseen.is_empty() {
+            bleu_unseen = Some(eval::bleu::corpus_bleu(&unseen));
+        }
+    }
+
+    Ok(TaskMetrics {
+        bleu: eval::bleu::corpus_bleu(&pairs),
+        nist: eval::nist::corpus_nist(&pairs),
+        meteor: eval::meteor::corpus_meteor(&pairs),
+        rouge_l: eval::rouge::corpus_rouge_l(&pairs),
+        cider: eval::cider::corpus_cider(&pairs),
+        ter: eval::ter::corpus_ter(&pairs),
+        ppl,
+        n_examples: pairs.len(),
+        bleu_seen,
+        bleu_unseen,
+    })
+}
+
+/// Hyperparameter grid search over fine-tuning peak LRs (paper App.
+/// A.2: select the best LR on the validation set). Returns the best
+/// (lr, val_loss, result).
+pub fn lr_grid_search(
+    runtime: &ModelRuntime,
+    world: &World,
+    state: &TrainState,
+    base: &FinetuneConfig,
+    lrs: &[f32],
+) -> anyhow::Result<(f32, FinetuneResult)> {
+    anyhow::ensure!(!lrs.is_empty(), "empty lr grid");
+    let mut best: Option<(f32, FinetuneResult)> = None;
+    for &lr in lrs {
+        let mut cfg = base.clone();
+        cfg.peak_lr = lr;
+        let res = finetune(runtime, world, state.clone(), &cfg)?;
+        log(&format!("grid[{}] lr {lr:.1e}: val loss {:.4}",
+                     base.task.name(), res.best_val_loss));
+        let better = best.as_ref()
+            .map_or(true, |(_, b)| res.best_val_loss < b.best_val_loss);
+        if better {
+            best = Some((lr, res));
+        }
+    }
+    Ok(best.unwrap())
+}
+
+/// `BOS input SEP` — the decode-time prompt (matches format_example).
+fn prompt_tokens(tok: &Tokenizer, input: &str, t: usize) -> Vec<u32> {
+    let mut inp = tok.encode(input);
+    let budget = t.saturating_sub(16); // leave room to generate
+    if inp.len() + 2 > budget {
+        let start = inp.len() - (budget - 2).min(inp.len());
+        inp = inp[start..].to_vec();
+    }
+    let mut p = vec![BOS];
+    p.extend(inp);
+    p.push(SEP);
+    p
+}
+
+fn log(msg: &str) {
+    if std::env::var("SPDF_QUIET").is_err() {
+        eprintln!("[spdf] {msg}");
+    }
+}
+
+/// Convenience: compile + load a model's runtime from the default
+/// artifact dir.
+pub fn load_runtime(model: &str) -> anyhow::Result<(Engine, ModelRuntime)> {
+    let engine = Engine::cpu(crate::runtime::default_artifact_dir())?;
+    let runtime = engine.load_model(model)?;
+    Ok((engine, runtime))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_builds_and_is_deterministic() {
+        let cfg = WorldConfig {
+            seed: 7, corpus_words: 3000, vocab_size: 512,
+            task_scale: 0.01,
+        };
+        let w1 = World::build(&cfg);
+        let w2 = World::build(&cfg);
+        assert_eq!(w1.stream.len(), w2.stream.len());
+        assert_eq!(w1.stream[..50], w2.stream[..50]);
+        assert!(w1.stream.len() > 2000);
+        assert_eq!(w1.tasks.len(), 4);
+    }
+
+    #[test]
+    fn world_tokenizer_covers_task_text() {
+        let cfg = WorldConfig {
+            seed: 1, corpus_words: 3000, vocab_size: 512,
+            task_scale: 0.01,
+        };
+        let w = World::build(&cfg);
+        let ex = &w.task(Task::E2e).train[0];
+        let ids = w.tokenizer.encode(&ex.input);
+        assert_eq!(w.tokenizer.decode(&ids), ex.input);
+    }
+
+    #[test]
+    fn prompt_tokens_truncates_from_left() {
+        let tok = Tokenizer::train("a b c d e f g", 300);
+        let long = "a b c d e f g ".repeat(50);
+        let p = prompt_tokens(&tok, &long, 64);
+        assert!(p.len() <= 64 - 14);
+        assert_eq!(p[0], BOS);
+        assert_eq!(*p.last().unwrap(), SEP);
+    }
+}

@@ -1,0 +1,210 @@
+//! Report formatting: turn the results ledger into the paper's tables
+//! (Table 1, App. Tables 4–6, Figure 2 data) as aligned text tables.
+
+use std::collections::BTreeMap;
+
+use crate::bench_support::Table;
+use crate::coordinator::experiments::RunResult;
+use crate::util::stats::{pm, summarize};
+
+/// Key for grouping seeds of the same cell.
+fn cell_key(r: &RunResult) -> (String, String, String, bool) {
+    (r.spec_model.clone(), format!("{:.0}", r.sparsity * 100.0),
+     r.task.to_string(), r.dense_ft)
+}
+
+/// Aggregate seeds: metric extractor → mean ± std per cell.
+pub fn aggregate(
+    results: &[RunResult],
+    metric: impl Fn(&RunResult) -> f64,
+) -> BTreeMap<(String, String, String, bool), (f64, f64, usize)> {
+    let mut by_cell: BTreeMap<_, Vec<f64>> = BTreeMap::new();
+    for r in results {
+        by_cell.entry(cell_key(r)).or_default().push(metric(r));
+    }
+    by_cell
+        .into_iter()
+        .map(|(k, v)| {
+            let s = summarize(&v);
+            (k, (s.mean, s.std, s.n))
+        })
+        .collect()
+}
+
+/// Paper Table 1: BLEU for the NLG tasks + PPL for Curation, rows =
+/// (model, sparsity).
+pub fn table1(results: &[RunResult]) -> String {
+    let dense_ft: Vec<RunResult> = results
+        .iter()
+        .filter(|r| r.dense_ft)
+        .cloned()
+        .collect();
+    let bleu = aggregate(&dense_ft, |r| r.metrics.bleu);
+    let ppl = aggregate(&dense_ft, |r| r.metrics.ppl);
+
+    let mut t = Table::new(&["Model", "Sparsity", "E2E BLEU↑",
+                             "WebNLG BLEU↑", "DART BLEU↑",
+                             "Curation PPL↓"]);
+    let mut cells: Vec<(String, String)> = bleu
+        .keys()
+        .map(|(m, s, _, _)| (m.clone(), s.clone()))
+        .collect();
+    cells.sort();
+    cells.dedup();
+    for (model, sp) in cells {
+        let get = |map: &BTreeMap<(String, String, String, bool),
+                                  (f64, f64, usize)>,
+                   task: &str| -> String {
+            map.get(&(model.clone(), sp.clone(), task.to_string(), true))
+                .map(|(m, s, _)| pm(*m, *s, 2))
+                .unwrap_or_else(|| "—".into())
+        };
+        t.row(&[
+            model.clone(),
+            format!("{sp}%"),
+            get(&bleu, "e2e"),
+            get(&bleu, "webnlg"),
+            get(&bleu, "dart"),
+            get(&ppl, "curation"),
+        ]);
+    }
+    t.render()
+}
+
+/// App. Tables 4–6: the full metric suite for one task.
+pub fn full_metrics_table(results: &[RunResult], task: &str) -> String {
+    let rs: Vec<RunResult> = results
+        .iter()
+        .filter(|r| r.dense_ft && r.task == task)
+        .cloned()
+        .collect();
+    let mut t = Table::new(&["Model", "Sparsity", "BLEU↑", "NIST↑",
+                             "METEOR↑", "ROUGE-L↑", "CIDEr↑", "TER↓"]);
+    let agg = |f: fn(&RunResult) -> f64| aggregate(&rs, f);
+    let bleu = agg(|r| r.metrics.bleu);
+    let nist = agg(|r| r.metrics.nist);
+    let meteor = agg(|r| r.metrics.meteor);
+    let rouge = agg(|r| r.metrics.rouge_l);
+    let cider = agg(|r| r.metrics.cider);
+    let ter = agg(|r| r.metrics.ter);
+    let mut cells: Vec<_> = bleu.keys().cloned().collect();
+    cells.sort();
+    for key in cells {
+        let g = |m: &BTreeMap<_, (f64, f64, usize)>, d: usize| {
+            m.get(&key)
+                .map(|(mean, std, _): &(f64, f64, usize)|
+                     pm(*mean, *std, d))
+                .unwrap_or_else(|| "—".into())
+        };
+        t.row(&[
+            key.0.clone(),
+            format!("{}%", key.1),
+            g(&bleu, 2),
+            g(&nist, 2),
+            g(&meteor, 3),
+            g(&rouge, 2),
+            g(&cider, 2),
+            g(&ter, 3),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 2 data: dense-FT vs sparse-FT BLEU per (task, sparsity).
+pub fn fig2_table(results: &[RunResult], model: &str) -> String {
+    let rs: Vec<RunResult> = results
+        .iter()
+        .filter(|r| r.spec_model == model && r.task != "curation")
+        .cloned()
+        .collect();
+    let bleu = aggregate(&rs, |r| r.metrics.bleu);
+    let mut t = Table::new(&["Task", "Sparsity", "Dense FT BLEU",
+                             "Sparse FT BLEU", "Δ (dense - sparse)"]);
+    let mut seen: Vec<(String, String)> = bleu
+        .keys()
+        .map(|(_, s, task, _)| (task.clone(), s.clone()))
+        .collect();
+    seen.sort();
+    seen.dedup();
+    for (task, sp) in seen {
+        let d = bleu.get(&(model.to_string(), sp.clone(), task.clone(),
+                          true));
+        let s = bleu.get(&(model.to_string(), sp.clone(), task.clone(),
+                          false));
+        let delta = match (d, s) {
+            (Some((dm, _, _)), Some((sm, _, _))) => {
+                format!("{:+.2}", dm - sm)
+            }
+            _ => "—".into(),
+        };
+        t.row(&[
+            task,
+            format!("{sp}%"),
+            d.map(|(m, sd, _)| pm(*m, *sd, 2)).unwrap_or("—".into()),
+            s.map(|(m, sd, _)| pm(*m, *sd, 2)).unwrap_or("—".into()),
+            delta,
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::TaskMetrics;
+
+    fn mk(model: &str, sp: f64, task: &'static str, dense: bool,
+          bleu: f64, seed: u64) -> RunResult {
+        RunResult {
+            spec_model: model.into(),
+            sparsity: sp,
+            seed,
+            task,
+            dense_ft: dense,
+            pretrain_eval_loss: 1.0,
+            ft_val_loss: 1.0,
+            metrics: TaskMetrics {
+                bleu, ppl: 5.0, ..Default::default()
+            },
+            pretrain_flops: 0.0,
+            finetune_flops: 0.0,
+        }
+    }
+
+    #[test]
+    fn aggregate_means_seeds() {
+        let rs = vec![
+            mk("m", 0.5, "e2e", true, 40.0, 0),
+            mk("m", 0.5, "e2e", true, 44.0, 1),
+        ];
+        let agg = aggregate(&rs, |r| r.metrics.bleu);
+        let (mean, std, n) =
+            agg[&("m".into(), "50".into(), "e2e".into(), true)];
+        assert_eq!(mean, 42.0);
+        assert!(std > 2.0 && std < 3.0);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn table1_renders_rows_per_sparsity() {
+        let rs = vec![
+            mk("gpt-nano", 0.0, "e2e", true, 50.0, 0),
+            mk("gpt-nano", 0.75, "e2e", true, 47.0, 0),
+            mk("gpt-nano", 0.0, "curation", true, 0.0, 0),
+        ];
+        let t = table1(&rs);
+        assert!(t.contains("0%"));
+        assert!(t.contains("75%"));
+        assert!(t.contains("50.00"));
+    }
+
+    #[test]
+    fn fig2_delta_computed() {
+        let rs = vec![
+            mk("gpt-nano", 0.75, "webnlg", true, 62.64, 0),
+            mk("gpt-nano", 0.75, "webnlg", false, 61.94, 0),
+        ];
+        let t = fig2_table(&rs, "gpt-nano");
+        assert!(t.contains("+0.70"), "{t}");
+    }
+}

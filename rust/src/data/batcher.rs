@@ -1,0 +1,282 @@
+//! Batching: token streams → fixed-geometry (B, T) training batches.
+//!
+//! Pre-training packs the corpus stream densely (every position carries
+//! loss). Fine-tuning formats each example as
+//! `BOS input SEP target EOS [PAD…]` with the loss mask covering only
+//! the positions that *predict* target tokens (and EOS) — the standard
+//! seq2seq-as-LM recipe of Hu et al. 2022 the paper follows.
+
+use crate::runtime::HostTensor;
+use crate::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+use crate::util::rng::Rng;
+
+/// One (B, T) training batch, flat row-major.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+}
+
+impl Batch {
+    pub fn tensors(&self) -> [HostTensor; 3] {
+        [
+            HostTensor::from_i32(&[self.b, self.t], self.tokens.clone()),
+            HostTensor::from_i32(&[self.b, self.t], self.targets.clone()),
+            HostTensor::from_f32(&[self.b, self.t],
+                                 self.loss_mask.clone()),
+        ]
+    }
+
+    /// Count of loss-carrying positions.
+    pub fn loss_tokens(&self) -> usize {
+        self.loss_mask.iter().filter(|&&x| x > 0.0).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pre-training: packed stream
+// ---------------------------------------------------------------------------
+
+/// Infinite-ish iterator of packed LM batches over a token stream.
+pub struct PackedStream {
+    stream: Vec<u32>,
+    cursor: usize,
+    b: usize,
+    t: usize,
+}
+
+impl PackedStream {
+    pub fn new(stream: Vec<u32>, b: usize, t: usize) -> PackedStream {
+        assert!(stream.len() > t + 1, "corpus too small for seq len");
+        PackedStream { stream, cursor: 0, b, t }
+    }
+
+    pub fn tokens_total(&self) -> usize {
+        self.stream.len()
+    }
+
+    /// Next batch; wraps around the stream (multiple epochs).
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, t) = (self.b, self.t);
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            if self.cursor + t + 1 > self.stream.len() {
+                self.cursor = 0;
+            }
+            let window = &self.stream[self.cursor..self.cursor + t + 1];
+            tokens.extend(window[..t].iter().map(|&x| x as i32));
+            targets.extend(window[1..].iter().map(|&x| x as i32));
+            self.cursor += t;
+        }
+        Batch { b, t, tokens, targets, loss_mask: vec![1.0; b * t] }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fine-tuning: formatted examples
+// ---------------------------------------------------------------------------
+
+/// `BOS input SEP target EOS` padded/truncated to t+1, split into
+/// (tokens, targets, loss-mask-on-target).
+pub fn format_example(
+    tok: &Tokenizer,
+    input: &str,
+    target: &str,
+    t: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let mut inp = tok.encode(input);
+    let tgt = tok.encode(target);
+
+    // Budget: 1 (BOS) + |inp| + 1 (SEP) + |tgt| + 1 (EOS) <= t + 1.
+    // Truncate the *input* from the left (keep its tail, which for
+    // summarization holds the most recent context) before touching the
+    // target.
+    let budget = (t + 1).saturating_sub(3 + tgt.len());
+    if inp.len() > budget {
+        let start = inp.len() - budget.min(inp.len());
+        inp = inp[start..].to_vec();
+    }
+
+    let mut seq = Vec::with_capacity(t + 1);
+    seq.push(BOS);
+    seq.extend(&inp);
+    seq.push(SEP);
+    let target_start = seq.len(); // first position holding a target token
+    seq.extend(&tgt);
+    seq.push(EOS);
+    seq.truncate(t + 1);
+    while seq.len() < t + 1 {
+        seq.push(PAD);
+    }
+
+    let tokens: Vec<i32> = seq[..t].iter().map(|&x| x as i32).collect();
+    let targets: Vec<i32> = seq[1..].iter().map(|&x| x as i32).collect();
+    // position i predicts seq[i+1]; mask positions predicting
+    // [target_start, target_start + |tgt| + 1) i.e. target tokens + EOS
+    let tgt_end = (target_start + tgt.len() + 1).min(t + 1);
+    let mut loss_mask = vec![0.0f32; t];
+    for i in 0..t {
+        let predicted = i + 1;
+        if predicted >= target_start && predicted < tgt_end {
+            loss_mask[i] = 1.0;
+        }
+    }
+    (tokens, targets, loss_mask)
+}
+
+/// Epoch iterator over formatted fine-tuning examples, shuffled per
+/// epoch, yielding fixed-size (B, T) batches (last partial batch is
+/// padded with repeats so the artifact geometry never changes).
+pub struct FinetuneBatches<'a> {
+    tok: &'a Tokenizer,
+    examples: Vec<(String, String)>,
+    order: Vec<usize>,
+    cursor: usize,
+    pub epoch: usize,
+    b: usize,
+    t: usize,
+    rng: Rng,
+}
+
+impl<'a> FinetuneBatches<'a> {
+    pub fn new(
+        tok: &'a Tokenizer,
+        examples: Vec<(String, String)>,
+        b: usize,
+        t: usize,
+        seed: u64,
+    ) -> FinetuneBatches<'a> {
+        assert!(!examples.is_empty());
+        let order: Vec<usize> = (0..examples.len()).collect();
+        let mut s = FinetuneBatches {
+            tok, examples, order, cursor: 0, epoch: 0, b, t,
+            rng: Rng::new(seed),
+        };
+        s.rng.shuffle(&mut s.order);
+        s
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.examples.len().div_ceil(self.b)
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, t) = (self.b, self.t);
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        let mut loss_mask = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            if self.cursor >= self.order.len() {
+                // epoch boundary: reshuffle and continue filling the
+                // batch, so the artifact geometry never changes
+                self.cursor = 0;
+                self.epoch += 1;
+                self.rng.shuffle(&mut self.order);
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            let (inp, tgt) = &self.examples[idx];
+            let (tk, tg, lm) = format_example(self.tok, inp, tgt, t);
+            tokens.extend(tk);
+            targets.extend(tg);
+            loss_mask.extend(lm);
+        }
+        Batch { b, t, tokens, targets, loss_mask }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::train(
+            "name food french restaurant in the city centre with high \
+             rating it is a of near to and",
+            300)
+    }
+
+    #[test]
+    fn packed_stream_shifts_by_one() {
+        let stream: Vec<u32> = (0..100).collect();
+        let mut ps = PackedStream::new(stream, 2, 8);
+        let b = ps.next_batch();
+        assert_eq!(b.tokens[..8],
+                   (0..8).map(|x| x as i32).collect::<Vec<_>>()[..]);
+        assert_eq!(b.targets[..8],
+                   (1..9).map(|x| x as i32).collect::<Vec<_>>()[..]);
+        // second row continues the stream
+        assert_eq!(b.tokens[8], 8);
+        assert!(b.loss_mask.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn packed_stream_wraps() {
+        let stream: Vec<u32> = (0..20).collect();
+        let mut ps = PackedStream::new(stream, 1, 8);
+        for _ in 0..10 {
+            let b = ps.next_batch();
+            assert_eq!(b.tokens.len(), 8);
+        }
+    }
+
+    #[test]
+    fn format_example_masks_only_target() {
+        let tk = tok();
+        let t = 32;
+        let (tokens, targets, mask) =
+            format_example(&tk, "name french", "a restaurant", t);
+        assert_eq!(tokens.len(), t);
+        assert_eq!(targets.len(), t);
+        assert_eq!(mask.len(), t);
+        assert_eq!(tokens[0] as u32, BOS);
+        // the masked positions' targets decode to the target + EOS
+        let masked: Vec<u32> = (0..t)
+            .filter(|&i| mask[i] > 0.0)
+            .map(|i| targets[i] as u32)
+            .collect();
+        assert_eq!(*masked.last().unwrap(), EOS);
+        let text = tk.decode(&masked);
+        assert_eq!(text, "a restaurant");
+        // no loss on pad or input positions
+        let n_tgt = tk.encode("a restaurant").len() + 1;
+        assert_eq!(masked.len(), n_tgt);
+    }
+
+    #[test]
+    fn format_example_truncates_long_input_keeping_target() {
+        let tk = tok();
+        let long_input = "food french restaurant city centre high \
+            rating near ".repeat(20);
+        let (_, targets, mask) =
+            format_example(&tk, &long_input, "it is high", 32);
+        let masked: Vec<u32> = mask.iter().enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(i, _)| targets[i] as u32)
+            .collect();
+        assert_eq!(tk.decode(&masked), "it is high");
+    }
+
+    #[test]
+    fn finetune_batches_cover_all_examples() {
+        let tk = tok();
+        let examples: Vec<(String, String)> = (0..10)
+            .map(|i| (format!("in {i}"), format!("restaurant {i}")))
+            .collect();
+        let mut fb = FinetuneBatches::new(&tk, examples, 4, 32, 0);
+        assert_eq!(fb.batches_per_epoch(), 3);
+        let mut seen_epoch = fb.epoch;
+        for _ in 0..6 {
+            let b = fb.next_batch();
+            assert_eq!(b.b, 4);
+            assert!(b.loss_tokens() > 0);
+        }
+        assert!(fb.epoch > seen_epoch);
+        seen_epoch = fb.epoch;
+        let _ = seen_epoch;
+    }
+}

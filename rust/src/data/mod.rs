@@ -1,0 +1,9 @@
+//! Data substrates: the SynthPile pre-training corpus, the four
+//! synthetic downstream tasks, and batch assembly.
+
+pub mod batcher;
+pub mod synthpile;
+pub mod tasks;
+
+pub use batcher::{format_example, Batch, FinetuneBatches, PackedStream};
+pub use tasks::{Task, TaskData, TaskExample};

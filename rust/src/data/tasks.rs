@@ -1,0 +1,488 @@
+//! Synthetic downstream tasks mirroring the paper's four fine-tuning
+//! datasets (DESIGN.md §2 substitution table):
+//!
+//!  * **E2E-sim** — restaurant meaning-representation → description;
+//!    8 slot fields, multiple references per MR (like Novikova et al.).
+//!  * **WebNLG-sim** — (subject, property, object) triples → text; test
+//!    set half "seen" categories, half "unseen" (like Gardent et al.).
+//!  * **DART-sim** — open-domain triples pooled from several source
+//!    styles (e2e-ish, webnlg-ish, table-ish) — the hardest NLG task.
+//!  * **Curation-sim** — multi-sentence finance article → compressive
+//!    summary (hardest overall: selection + compression).
+//!
+//! Split sizes keep the paper's ordering (WebNLG < E2E ≈ DART) at 1/10
+//! scale by default; `scale` rescales everything together.
+
+use crate::util::rng::Rng;
+
+/// One fine-tuning example: input text (the "context" x) and one or
+/// more references (the "target" y) for metric evaluation.
+#[derive(Debug, Clone)]
+pub struct TaskExample {
+    pub input: String,
+    pub refs: Vec<String>,
+    /// WebNLG: whether the category appears in training data.
+    pub seen_category: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskData {
+    pub name: &'static str,
+    pub train: Vec<TaskExample>,
+    pub valid: Vec<TaskExample>,
+    pub test: Vec<TaskExample>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Task {
+    E2e,
+    WebNlg,
+    Dart,
+    Curation,
+}
+
+impl Task {
+    pub fn all() -> [Task; 4] {
+        [Task::E2e, Task::WebNlg, Task::Dart, Task::Curation]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::E2e => "e2e",
+            Task::WebNlg => "webnlg",
+            Task::Dart => "dart",
+            Task::Curation => "curation",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Task> {
+        match s {
+            "e2e" => Ok(Task::E2e),
+            "webnlg" => Ok(Task::WebNlg),
+            "dart" => Ok(Task::Dart),
+            "curation" => Ok(Task::Curation),
+            other => anyhow::bail!("unknown task {other}"),
+        }
+    }
+
+    /// Generate the task dataset. `scale`=1.0 gives the default sizes
+    /// (paper/10); seeds make every split reproducible.
+    pub fn generate(&self, rng: &mut Rng, scale: f64) -> TaskData {
+        match self {
+            Task::E2e => gen_e2e(rng, scale),
+            Task::WebNlg => gen_webnlg(rng, scale),
+            Task::Dart => gen_dart(rng, scale),
+            Task::Curation => gen_curation(rng, scale),
+        }
+    }
+}
+
+fn sizes(scale: f64, train: usize, valid: usize, test: usize)
+         -> (usize, usize, usize) {
+    let f = |n: usize| ((n as f64 * scale).round() as usize).max(8);
+    (f(train), f(valid), f(test))
+}
+
+// ---------------------------------------------------------------------------
+// E2E-sim
+// ---------------------------------------------------------------------------
+
+const R_NAMES: &[&str] = &[
+    "alimentum", "the vaults", "blue spice", "the punter", "zizzi",
+    "the wrestlers", "loch fyne", "the cambridge blue", "green man",
+    "cotto", "the eagle", "strada",
+];
+const EAT_TYPES: &[&str] = &["restaurant", "pub", "coffee shop"];
+const CUISINES: &[&str] = &[
+    "french", "italian", "indian", "chinese", "english", "japanese",
+];
+const PRICES: &[&str] =
+    &["cheap", "moderate", "high", "less than 20", "more than 30"];
+const AREAS: &[&str] = &["city centre", "riverside"];
+const RATINGS: &[&str] = &["low", "average", "high", "5 out of 5"];
+const NEARS: &[&str] =
+    &["the bakers", "cafe sicilia", "the sorrento", "raja cuisine"];
+
+fn gen_e2e_example(rng: &mut Rng) -> TaskExample {
+    let name = *rng.choice(R_NAMES);
+    let etype = *rng.choice(EAT_TYPES);
+    let food = *rng.choice(CUISINES);
+    let price = *rng.choice(PRICES);
+    let area = *rng.choice(AREAS);
+    let rating = *rng.choice(RATINGS);
+    let near = *rng.choice(NEARS);
+    let family = rng.bernoulli(0.5);
+
+    // randomly include 3..=6 optional slots like the real dataset
+    let use_price = rng.bernoulli(0.7);
+    let use_area = rng.bernoulli(0.7);
+    let use_rating = rng.bernoulli(0.7);
+    let use_near = rng.bernoulli(0.4);
+    let use_family = rng.bernoulli(0.5);
+
+    let mut mr = format!("name : {name} | type : {etype} | food : {food}");
+    if use_price {
+        mr += &format!(" | price : {price}");
+    }
+    if use_area {
+        mr += &format!(" | area : {area}");
+    }
+    if use_rating {
+        mr += &format!(" | rating : {rating}");
+    }
+    if use_near {
+        mr += &format!(" | near : {near}");
+    }
+    if use_family {
+        mr += &format!(" | family friendly : {}",
+                       if family { "yes" } else { "no" });
+    }
+
+    let fam_txt = if family {
+        "it is family friendly ."
+    } else {
+        "it is not family friendly ."
+    };
+    let mut refs = Vec::new();
+    // reference 1: flat recitation
+    {
+        let mut t = format!("{name} is a {food} {etype}");
+        if use_area {
+            t += &format!(" in the {area}");
+        }
+        if use_price {
+            t += &format!(" with {price} prices");
+        }
+        t += " .";
+        if use_rating {
+            t += &format!(" it has a {rating} customer rating .");
+        }
+        if use_near {
+            t += &format!(" it is near {near} .");
+        }
+        if use_family {
+            t = format!("{t} {fam_txt}");
+        }
+        refs.push(t);
+    }
+    // reference 2: reordered phrasing
+    {
+        let mut t = if use_area {
+            format!("located in the {area} , {name} is a {etype} \
+                     serving {food} food")
+        } else {
+            format!("{name} is a {etype} serving {food} food")
+        };
+        if use_rating {
+            t += &format!(" with a {rating} rating");
+        }
+        t += " .";
+        if use_price {
+            t += &format!(" prices are {price} .");
+        }
+        if use_near {
+            t += &format!(" you can find it near {near} .");
+        }
+        if use_family {
+            t = format!("{t} {fam_txt}");
+        }
+        refs.push(t);
+    }
+    TaskExample { input: mr, refs, seen_category: true }
+}
+
+fn gen_e2e(rng: &mut Rng, scale: f64) -> TaskData {
+    let (ntr, nva, nte) = sizes(scale, 4500, 460, 460);
+    TaskData {
+        name: "e2e",
+        train: (0..ntr).map(|_| gen_e2e_example(rng)).collect(),
+        valid: (0..nva).map(|_| gen_e2e_example(rng)).collect(),
+        test: (0..nte).map(|_| gen_e2e_example(rng)).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WebNLG-sim
+// ---------------------------------------------------------------------------
+
+/// (category, subjects, properties with object pools)
+struct Category {
+    name: &'static str,
+    subjects: &'static [&'static str],
+    props: &'static [(&'static str, &'static [&'static str])],
+}
+
+const SEEN_CATS: &[Category] = &[
+    Category {
+        name: "astronaut",
+        subjects: &["alan bean", "buzz aldrin", "elliot see"],
+        props: &[
+            ("occupation", &["test pilot", "fighter pilot"]),
+            ("birth place", &["wheeler texas", "glen ridge", "dallas"]),
+            ("mission", &["apollo 12", "gemini 12", "apollo 11"]),
+        ],
+    },
+    Category {
+        name: "building",
+        subjects: &["adisham hall", "asher house", "emirates tower"],
+        props: &[
+            ("location", &["sri lanka", "portland", "dubai"]),
+            ("completed in", &["1931", "1904", "2000"]),
+            ("floor count", &["3", "12", "54"]),
+        ],
+    },
+    Category {
+        name: "food",
+        subjects: &["bacon explosion", "ajoblanco", "bionico"],
+        props: &[
+            ("country", &["united states", "spain", "mexico"]),
+            ("main ingredient", &["bacon", "almonds", "fruit"]),
+            ("course", &["main course", "appetizer", "dessert"]),
+        ],
+    },
+    Category {
+        name: "city",
+        subjects: &["aarhus", "abilene", "adolfo suarez"],
+        props: &[
+            ("country", &["denmark", "texas", "spain"]),
+            ("population", &["330000", "120000", "46000"]),
+            ("leader", &["jacob madsen", "anthony diaz", "maria soler"]),
+        ],
+    },
+];
+
+const UNSEEN_CATS: &[Category] = &[
+    Category {
+        name: "athlete",
+        subjects: &["alaa abdul zahra", "aleksander barkov"],
+        props: &[
+            ("club", &["al zawraa", "florida panthers"]),
+            ("position", &["striker", "centre"]),
+        ],
+    },
+    Category {
+        name: "politician",
+        subjects: &["abner doubleday", "adam holloway"],
+        props: &[
+            ("party", &["federalist", "conservative"]),
+            ("office", &["general", "member of parliament"]),
+        ],
+    },
+];
+
+fn gen_webnlg_example(rng: &mut Rng, cats: &[Category], seen: bool)
+                      -> TaskExample {
+    let cat = &cats[rng.below(cats.len())];
+    let subj = *rng.choice(cat.subjects);
+    let n_triples = 1 + rng.below(cat.props.len().min(3));
+    let prop_idx = rng.sample_indices(cat.props.len(), n_triples);
+    let mut input = format!("category : {}", cat.name);
+    let mut facts = Vec::new();
+    for &pi in &prop_idx {
+        let (prop, objs) = cat.props[pi];
+        let obj = *rng.choice(objs);
+        input += &format!(" | {subj} : {prop} : {obj}");
+        facts.push((prop, obj));
+    }
+    let mut t = String::new();
+    for (i, (prop, obj)) in facts.iter().enumerate() {
+        if i == 0 {
+            t += &format!("the {} of {subj} is {obj} .", prop);
+        } else {
+            t += &format!(" its {} is {obj} .", prop);
+        }
+    }
+    TaskExample { input, refs: vec![t], seen_category: seen }
+}
+
+fn gen_webnlg(rng: &mut Rng, scale: f64) -> TaskData {
+    let (ntr, nva, nte) = sizes(scale, 1800, 220, 240);
+    let train: Vec<_> = (0..ntr)
+        .map(|_| gen_webnlg_example(rng, SEEN_CATS, true))
+        .collect();
+    let valid: Vec<_> = (0..nva)
+        .map(|_| gen_webnlg_example(rng, SEEN_CATS, true))
+        .collect();
+    // test: first half seen categories, second half unseen (paper §3.1)
+    let mut test: Vec<_> = (0..nte / 2)
+        .map(|_| gen_webnlg_example(rng, SEEN_CATS, true))
+        .collect();
+    test.extend((0..nte - nte / 2)
+        .map(|_| gen_webnlg_example(rng, UNSEEN_CATS, false)));
+    TaskData { name: "webnlg", train, valid, test }
+}
+
+// ---------------------------------------------------------------------------
+// DART-sim
+// ---------------------------------------------------------------------------
+
+fn gen_dart_example(rng: &mut Rng) -> TaskExample {
+    // pool of source styles: e2e-ish, webnlg-ish, table-ish
+    match rng.below(3) {
+        0 => {
+            let mut ex = gen_e2e_example(rng);
+            ex.input = format!("source : e2e | {}", ex.input);
+            ex.refs.truncate(1);
+            ex
+        }
+        1 => {
+            let mut ex = gen_webnlg_example(rng, SEEN_CATS, true);
+            ex.input = format!("source : webnlg | {}", ex.input);
+            ex
+        }
+        _ => {
+            // wikitable-ish: row of column:value pairs
+            let team = *rng.choice(&["arlen rovers", "calder united",
+                                     "dunmore fc", "kestwick city"]);
+            let year = rng.range(1990, 2022);
+            let wins = rng.range(2, 30);
+            let losses = rng.range(0, 20);
+            let input = format!(
+                "source : wikitable | team : {team} | season : {year} \
+                 | wins : {wins} | losses : {losses}");
+            let text = format!(
+                "in the {year} season {team} recorded {wins} wins and \
+                 {losses} losses .");
+            TaskExample { input, refs: vec![text], seen_category: true }
+        }
+    }
+}
+
+fn gen_dart(rng: &mut Rng, scale: f64) -> TaskData {
+    let (ntr, nva, nte) = sizes(scale, 6260, 690, 1250);
+    TaskData {
+        name: "dart",
+        train: (0..ntr).map(|_| gen_dart_example(rng)).collect(),
+        valid: (0..nva).map(|_| gen_dart_example(rng)).collect(),
+        test: (0..nte).map(|_| gen_dart_example(rng)).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Curation-sim (summarization)
+// ---------------------------------------------------------------------------
+
+fn gen_curation_example(rng: &mut Rng) -> TaskExample {
+    let co = *rng.choice(&["soltech", "merival", "bluepeak", "nordwind",
+                           "apexon", "ferrostar", "lumida", "quandry"]);
+    let product = *rng.choice(&["battery", "engine", "sensor", "vaccine",
+                                "turbine", "compiler"]);
+    let verb = *rng.choice(&["announced", "unveiled", "launched"]);
+    let pct = rng.range(2, 45);
+    let quarter = *rng.choice(&["first", "second", "third", "fourth"]);
+    let analyst = *rng.choice(&["mara", "rudd", "petra", "viktor"]);
+    let adj = *rng.choice(&["strong", "weak", "mixed", "steady"]);
+
+    // article: key facts buried among filler sentences
+    let mut sentences = vec![
+        format!("{co} {verb} a new {product} in the {quarter} quarter ."),
+        format!("shares of {co} rose {pct} percent after the news ."),
+    ];
+    let filler = [
+        format!("analyst {analyst} called the results {adj} ."),
+        "the broader market traded flat through the session .".into(),
+        format!("rivals declined to comment on the {product} launch ."),
+        "trading volume was above the monthly average .".into(),
+        format!("{co} will report full results next month ."),
+    ];
+    for f in filler.iter().take(2 + rng.below(3)) {
+        sentences.push(f.clone());
+    }
+    let mut order: Vec<usize> = (2..sentences.len()).collect();
+    let mut rng2 = rng.fork(17);
+    rng2.shuffle(&mut order);
+    let mut article = format!("{} {}", sentences[0], sentences[1]);
+    for &i in &order {
+        article += &format!(" {}", sentences[i]);
+    }
+    // summary: the two key facts, compressed
+    let summary = format!(
+        "{co} {verb} a {product} and its shares rose {pct} percent .");
+    TaskExample { input: article, refs: vec![summary],
+                  seen_category: true }
+}
+
+fn gen_curation(rng: &mut Rng, scale: f64) -> TaskData {
+    let (ntr, nva, nte) = sizes(scale, 3193, 399, 399);
+    TaskData {
+        name: "curation",
+        train: (0..ntr).map(|_| gen_curation_example(rng)).collect(),
+        valid: (0..nva).map(|_| gen_curation_example(rng)).collect(),
+        test: (0..nte).map(|_| gen_curation_example(rng)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_and_are_deterministic() {
+        for task in Task::all() {
+            let a = task.generate(&mut Rng::new(1), 0.02);
+            let b = task.generate(&mut Rng::new(1), 0.02);
+            assert_eq!(a.train.len(), b.train.len());
+            assert_eq!(a.train[0].input, b.train[0].input);
+            assert!(!a.train.is_empty() && !a.test.is_empty());
+            for ex in a.train.iter().take(20) {
+                assert!(!ex.input.is_empty());
+                assert!(!ex.refs.is_empty());
+                assert!(ex.refs.iter().all(|r| !r.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_size_ordering_matches_paper() {
+        // WebNLG smallest of the NLG tasks; DART largest (paper §3.1)
+        let e2e = Task::E2e.generate(&mut Rng::new(0), 0.1);
+        let web = Task::WebNlg.generate(&mut Rng::new(0), 0.1);
+        let dart = Task::Dart.generate(&mut Rng::new(0), 0.1);
+        assert!(web.train.len() < e2e.train.len());
+        assert!(e2e.train.len() < dart.train.len());
+    }
+
+    #[test]
+    fn e2e_has_multiple_references() {
+        let d = Task::E2e.generate(&mut Rng::new(2), 0.02);
+        assert!(d.test.iter().all(|ex| ex.refs.len() >= 2));
+    }
+
+    #[test]
+    fn webnlg_test_has_unseen_half() {
+        let d = Task::WebNlg.generate(&mut Rng::new(3), 0.2);
+        let unseen = d.test.iter().filter(|e| !e.seen_category).count();
+        assert!(unseen * 2 >= d.test.len() - 1);
+        assert!(d.train.iter().all(|e| e.seen_category));
+    }
+
+    #[test]
+    fn dart_mixes_sources() {
+        let d = Task::Dart.generate(&mut Rng::new(4), 0.2);
+        for src in ["source : e2e", "source : webnlg",
+                    "source : wikitable"] {
+            assert!(d.train.iter().any(|e| e.input.starts_with(src)),
+                    "missing {src}");
+        }
+    }
+
+    #[test]
+    fn curation_articles_longer_than_summaries() {
+        let d = Task::Curation.generate(&mut Rng::new(5), 0.02);
+        for ex in &d.train {
+            let a = ex.input.split_whitespace().count();
+            let s = ex.refs[0].split_whitespace().count();
+            assert!(a > 2 * s, "article {a} words, summary {s}");
+        }
+    }
+
+    #[test]
+    fn curation_summary_facts_in_article() {
+        let d = Task::Curation.generate(&mut Rng::new(6), 0.02);
+        for ex in d.train.iter().take(30) {
+            // the company name appears in both
+            let co = ex.refs[0].split_whitespace().next().unwrap();
+            assert!(ex.input.contains(co));
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Corpus BLEU (Papineni et al. 2002), multi-reference, with the
+//! standard smoothing-free corpus aggregation the official e2e-metrics
+//! script uses (mteval-v13a semantics on pre-tokenized input).
+
+use std::collections::HashMap;
+
+use super::tokenize::{ngram_counts, tokenize};
+
+pub const MAX_N: usize = 4;
+
+/// Corpus-level BLEU over (hypothesis, references) pairs, as a
+/// percentage (0-100), matching the paper's reporting.
+pub fn corpus_bleu(pairs: &[(String, Vec<String>)]) -> f64 {
+    let mut match_n = [0usize; MAX_N];
+    let mut total_n = [0usize; MAX_N];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+
+    for (hyp, refs) in pairs {
+        let h = tokenize(hyp);
+        let rs: Vec<Vec<String>> =
+            refs.iter().map(|r| tokenize(r)).collect();
+        hyp_len += h.len();
+        // closest reference length (mteval: shortest among ties)
+        let best_ref = rs
+            .iter()
+            .map(|r| r.len())
+            .min_by_key(|&rl| (rl.abs_diff(h.len()), rl))
+            .unwrap_or(0);
+        ref_len += best_ref;
+
+        for n in 1..=MAX_N {
+            let hc = ngram_counts(&h, n);
+            // clipped counts against the max over references
+            let mut max_ref: HashMap<String, usize> = HashMap::new();
+            for r in &rs {
+                for (g, c) in ngram_counts(r, n) {
+                    let e = max_ref.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, c) in &hc {
+                let clip = max_ref.get(g).copied().unwrap_or(0);
+                match_n[n - 1] += (*c).min(clip);
+            }
+            total_n[n - 1] += h.len().saturating_sub(n - 1);
+        }
+    }
+
+    // geometric mean of modified precisions
+    let mut log_sum = 0.0;
+    for n in 0..MAX_N {
+        if total_n[n] == 0 || match_n[n] == 0 {
+            return 0.0;
+        }
+        log_sum += (match_n[n] as f64 / total_n[n] as f64).ln();
+    }
+    let geo = (log_sum / MAX_N as f64).exp();
+    // brevity penalty
+    let bp = if hyp_len > ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * geo
+}
+
+/// Sentence BLEU with +1 smoothing on higher n-grams (for quick
+/// diagnostics; corpus_bleu is the headline metric).
+pub fn sentence_bleu(hyp: &str, refs: &[String]) -> f64 {
+    let h = tokenize(hyp);
+    let rs: Vec<Vec<String>> = refs.iter().map(|r| tokenize(r)).collect();
+    if h.is_empty() {
+        return 0.0;
+    }
+    let mut log_sum = 0.0;
+    for n in 1..=MAX_N {
+        let hc = ngram_counts(&h, n);
+        let mut matched = 0usize;
+        for (g, c) in &hc {
+            let clip = rs
+                .iter()
+                .map(|r| ngram_counts(r, n).get(g).copied().unwrap_or(0))
+                .max()
+                .unwrap_or(0);
+            matched += (*c).min(clip);
+        }
+        let total = h.len().saturating_sub(n - 1);
+        let (num, den) = if n == 1 {
+            (matched as f64, total as f64)
+        } else {
+            (matched as f64 + 1.0, total as f64 + 1.0)
+        };
+        if num == 0.0 || den == 0.0 {
+            return 0.0;
+        }
+        log_sum += (num / den).ln();
+    }
+    let geo = (log_sum / MAX_N as f64).exp();
+    let ref_len = rs.iter().map(|r| r.len()).min().unwrap_or(0);
+    let bp = if h.len() > ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / h.len() as f64).exp()
+    };
+    100.0 * bp * geo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(h: &str, rs: &[&str]) -> (String, Vec<String>) {
+        (h.to_string(), rs.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn perfect_match_is_100() {
+        let pairs = vec![pair("the cat sat on the mat tonight quietly",
+                              &["the cat sat on the mat tonight quietly"])];
+        assert!((corpus_bleu(&pairs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        let pairs = vec![pair("aa bb cc dd ee", &["vv ww xx yy zz"])];
+        assert_eq!(corpus_bleu(&pairs), 0.0);
+    }
+
+    #[test]
+    fn no_4gram_match_is_zero_unsmoothed_but_sentence_smoothed() {
+        let pairs = vec![pair("the cat the cat on the mat",
+                              &["the cat is on the mat"])];
+        assert_eq!(corpus_bleu(&pairs), 0.0); // no 4-gram match
+        let sb = sentence_bleu("the cat the cat on the mat",
+                               &["the cat is on the mat".to_string()]);
+        assert!(sb > 0.0 && sb < 100.0);
+    }
+
+    #[test]
+    fn corpus_bleu_hand_value() {
+        // hyp "a b c d", ref "a b c d e":
+        // p1=4/4 p2=3/3 p3=2/2 p4=1/1, bp=exp(1-5/4)=exp(-0.25)
+        let pairs = vec![pair("a b c d", &["a b c d e"])];
+        let want = 100.0 * (-0.25f64).exp();
+        assert!((corpus_bleu(&pairs) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_reference_clipping_uses_best_ref() {
+        let pairs = vec![pair(
+            "the green house by the lake stands tall",
+            &["the green house by the lake stands tall today",
+              "a tall green building near the lake"],
+        )];
+        let one_ref = vec![pair(
+            "the green house by the lake stands tall",
+            &["a tall green building near the lake"],
+        )];
+        assert!(corpus_bleu(&pairs) > corpus_bleu(&one_ref));
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short() {
+        let long = vec![pair("a b c d e f g h", &["a b c d e f g h"])];
+        let short = vec![pair("a b c d", &["a b c d e f g h"])];
+        assert!(corpus_bleu(&short) < corpus_bleu(&long));
+    }
+
+    #[test]
+    fn corpus_aggregation_pools_counts() {
+        // one zero-match sentence must not zero the whole corpus
+        let pairs = vec![
+            pair("a b c d e", &["a b c d e"]),
+            pair("zz yy xx", &["totally different words here"]),
+        ];
+        assert!(corpus_bleu(&pairs) > 0.0);
+    }
+
+    #[test]
+    fn empty_hypothesis_is_zero() {
+        let pairs = vec![pair("", &["a b c"])];
+        assert_eq!(corpus_bleu(&pairs), 0.0);
+        assert_eq!(sentence_bleu("", &["a b".to_string()]), 0.0);
+    }
+
+    #[test]
+    fn repeated_hyp_ngrams_are_clipped() {
+        // "the the the the" vs ref with a single "the": p1 = 1/4
+        let pairs = vec![pair("the the the the", &["the cat sat down"])];
+        assert_eq!(corpus_bleu(&pairs), 0.0); // higher n-grams zero
+        let s = sentence_bleu("the the the the",
+                              &["the cat sat down".to_string()]);
+        assert!(s < 40.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! CIDEr (Vedantam et al. 2015): TF-IDF-weighted n-gram cosine
+//! similarity, averaged over n = 1..4 and references, scaled by 10
+//! (CIDEr-D's length-gaussian omitted — the E2E script reports plain
+//! CIDEr).
+
+use std::collections::HashMap;
+
+use super::tokenize::{ngram_counts, tokenize};
+
+pub const MAX_N: usize = 4;
+const SIGMA: f64 = 6.0;
+
+/// Corpus CIDEr: the document frequency is computed over the
+/// evaluation set's references, per the official implementation.
+pub fn corpus_cider(pairs: &[(String, Vec<String>)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    // document frequency per n-gram, over reference *sets* (a gram
+    // counts once per image/instance regardless of which ref has it)
+    let mut df: Vec<HashMap<String, f64>> = vec![HashMap::new(); MAX_N + 1];
+    for (_, refs) in pairs {
+        for n in 1..=MAX_N {
+            let mut seen: HashMap<String, bool> = HashMap::new();
+            for r in refs {
+                for g in ngram_counts(&tokenize(r), n).into_keys() {
+                    seen.insert(g, true);
+                }
+            }
+            for g in seen.into_keys() {
+                *df[n].entry(g).or_insert(0.0) += 1.0;
+            }
+        }
+    }
+    let log_total = (pairs.len() as f64).ln();
+
+    let tfidf = |toks: &[String], n: usize| -> HashMap<String, f64> {
+        let counts = ngram_counts(toks, n);
+        let norm: f64 = counts.values().map(|&c| c as f64).sum();
+        counts
+            .into_iter()
+            .map(|(g, c)| {
+                let d = df[n].get(&g).copied().unwrap_or(0.0).max(1.0);
+                let idf = (log_total - d.ln()).max(0.0);
+                (g, (c as f64 / norm.max(1.0)) * idf)
+            })
+            .collect()
+    };
+
+    let mut total = 0.0;
+    for (hyp, refs) in pairs {
+        let h = tokenize(hyp);
+        let mut score_n = [0.0f64; MAX_N];
+        for n in 1..=MAX_N {
+            let hv = tfidf(&h, n);
+            let h_norm: f64 =
+                hv.values().map(|x| x * x).sum::<f64>().sqrt();
+            for r in refs {
+                let rt = tokenize(r);
+                let rv = tfidf(&rt, n);
+                let r_norm: f64 =
+                    rv.values().map(|x| x * x).sum::<f64>().sqrt();
+                if h_norm == 0.0 || r_norm == 0.0 {
+                    continue;
+                }
+                let dot: f64 = hv
+                    .iter()
+                    .map(|(g, x)| x * rv.get(g).copied().unwrap_or(0.0))
+                    .sum();
+                // CIDEr-D length penalty
+                let dl = h.len() as f64 - rt.len() as f64;
+                let len_pen = (-dl * dl / (2.0 * SIGMA * SIGMA)).exp();
+                score_n[n - 1] +=
+                    len_pen * dot / (h_norm * r_norm * refs.len() as f64);
+            }
+        }
+        total += 10.0 * score_n.iter().sum::<f64>() / MAX_N as f64;
+    }
+    total / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(h: &str, rs: &[&str]) -> (String, Vec<String>) {
+        (h.to_string(), rs.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn identical_corpus_scores_near_10() {
+        // all grams appear in every instance → idf = 0 except where
+        // instances differ; use distinct sentences so idf > 0
+        let pairs = vec![
+            pair("the red house stands alone",
+                 &["the red house stands alone"]),
+            pair("a blue boat drifts slowly",
+                 &["a blue boat drifts slowly"]),
+            pair("green hills roll beyond town",
+                 &["green hills roll beyond town"]),
+        ];
+        let s = corpus_cider(&pairs);
+        assert!(s > 7.0, "s={s}");
+    }
+
+    #[test]
+    fn disjoint_scores_zero() {
+        let pairs = vec![
+            pair("aa bb cc", &["xx yy zz"]),
+            pair("dd ee ff", &["uu vv ww"]),
+        ];
+        assert!(corpus_cider(&pairs) < 1e-9);
+    }
+
+    #[test]
+    fn partial_overlap_between_extremes() {
+        let pairs = vec![
+            pair("the red house stands alone",
+                 &["the red house sits alone"]),
+            pair("a blue boat drifts slowly",
+                 &["a blue boat moves slowly"]),
+        ];
+        let s = corpus_cider(&pairs);
+        assert!(s > 0.5 && s < 9.5, "s={s}");
+    }
+
+    #[test]
+    fn length_mismatch_penalized() {
+        let matched = vec![
+            pair("one two three four", &["one two three four"]),
+            pair("different words entirely here",
+                 &["different words entirely here"]),
+        ];
+        let padded = vec![
+            pair("one two three four plus many extra padding words \
+                  making it long",
+                 &["one two three four"]),
+            pair("different words entirely here",
+                 &["different words entirely here"]),
+        ];
+        assert!(corpus_cider(&padded) < corpus_cider(&matched));
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(corpus_cider(&[]), 0.0);
+        let pairs = vec![pair("", &["a b"])];
+        assert!(corpus_cider(&pairs) < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! NLG evaluation metrics — full rust implementations of the official
+//! scripts' formulas: BLEU, NIST, METEOR, ROUGE-L, CIDEr, TER (+ PPL via
+//! train::perplexity). Validated against hand-computed references in
+//! each module's tests.
+pub mod bleu;
+pub mod cider;
+pub mod meteor;
+pub mod nist;
+pub mod rouge;
+pub mod ter;
+pub mod tokenize;
+pub use tokenize::tokenize;

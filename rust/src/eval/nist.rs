@@ -1,0 +1,169 @@
+//! NIST (Doddington 2002 / Belz & Reiter 2006) — information-weighted
+//! n-gram co-occurrence, the second E2E metric.
+//!
+//! Each matched n-gram contributes info(w1..wn) =
+//! log2(count(w1..wn-1) / count(w1..wn)) computed over the reference
+//! corpus; scores are summed per n (1..=5), divided by hypothesis
+//! n-gram counts, and summed over n with the NIST brevity penalty.
+
+use std::collections::HashMap;
+
+use super::tokenize::{ngram_counts, tokenize};
+
+pub const MAX_N: usize = 5;
+const BETA_LN: f64 = -4.3218010520282677; // ln(0.5)/ln(1.5)^2 per mteval
+
+/// Corpus NIST over (hypothesis, references) pairs.
+pub fn corpus_nist(pairs: &[(String, Vec<String>)]) -> f64 {
+    // 1) reference-corpus n-gram statistics for information weights
+    let mut ref_counts: Vec<HashMap<String, usize>> =
+        vec![HashMap::new(); MAX_N + 1];
+    let mut total_ref_words = 0usize;
+    for (_, refs) in pairs {
+        for r in refs {
+            let toks = tokenize(r);
+            total_ref_words += toks.len();
+            for n in 1..=MAX_N {
+                for (g, c) in ngram_counts(&toks, n) {
+                    *ref_counts[n].entry(g).or_insert(0) += c;
+                }
+            }
+        }
+    }
+    let info = |gram: &str, n: usize| -> f64 {
+        let count_n =
+            ref_counts[n].get(gram).copied().unwrap_or(0) as f64;
+        if count_n == 0.0 {
+            return 0.0;
+        }
+        let parent = if n == 1 {
+            total_ref_words as f64
+        } else {
+            let prefix: String = gram
+                .rsplit_once(' ')
+                .map(|(p, _)| p.to_string())
+                .unwrap_or_default();
+            ref_counts[n - 1].get(&prefix).copied().unwrap_or(0) as f64
+        };
+        if parent <= 0.0 {
+            0.0
+        } else {
+            (parent / count_n).log2()
+        }
+    };
+
+    // 2) per-n info-weighted matches over the corpus
+    let mut info_sum = [0.0f64; MAX_N];
+    let mut hyp_ngrams = [0usize; MAX_N];
+    let mut hyp_len = 0usize;
+    let mut ref_len_acc = 0usize;
+    for (hyp, refs) in pairs {
+        let h = tokenize(hyp);
+        hyp_len += h.len();
+        let rs: Vec<Vec<String>> =
+            refs.iter().map(|r| tokenize(r)).collect();
+        let avg_ref: f64 = rs.iter().map(|r| r.len()).sum::<usize>()
+            as f64 / rs.len().max(1) as f64;
+        ref_len_acc += avg_ref.round() as usize;
+        for n in 1..=MAX_N {
+            let hc = ngram_counts(&h, n);
+            let mut max_ref: HashMap<String, usize> = HashMap::new();
+            for r in &rs {
+                for (g, c) in ngram_counts(r, n) {
+                    let e = max_ref.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, c) in &hc {
+                let clip = max_ref.get(g).copied().unwrap_or(0);
+                let matched = (*c).min(clip);
+                if matched > 0 {
+                    info_sum[n - 1] += matched as f64 * info(g, n);
+                }
+            }
+            hyp_ngrams[n - 1] += h.len().saturating_sub(n - 1);
+        }
+    }
+
+    let mut score = 0.0;
+    for n in 0..MAX_N {
+        if hyp_ngrams[n] > 0 {
+            score += info_sum[n] / hyp_ngrams[n] as f64;
+        }
+    }
+    // NIST brevity penalty: exp(beta * log^2(min(len_ratio, 1)))
+    let ratio = if ref_len_acc == 0 {
+        1.0
+    } else {
+        (hyp_len as f64 / ref_len_acc as f64).min(1.0)
+    };
+    let bp = (BETA_LN * ratio.ln().powi(2)).exp();
+    score * bp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(h: &str, rs: &[&str]) -> (String, Vec<String>) {
+        (h.to_string(), rs.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn perfect_match_scores_positive() {
+        let pairs = vec![
+            pair("the cat sat on the mat", &["the cat sat on the mat"]),
+            pair("a dog runs in the park", &["a dog runs in the park"]),
+        ];
+        let s = corpus_nist(&pairs);
+        assert!(s > 1.0, "s={s}");
+    }
+
+    #[test]
+    fn disjoint_scores_zero() {
+        let pairs = vec![pair("aa bb cc", &["xx yy zz"])];
+        assert_eq!(corpus_nist(&pairs), 0.0);
+    }
+
+    #[test]
+    fn rare_ngrams_weigh_more_than_common() {
+        // corpus where "zq" is rare and "the" is common; matching the
+        // rare word should add more information
+        let base = vec![
+            pair("the the the the", &["the the the the"]),
+            pair("the a of in", &["the a of in"]),
+        ];
+        let with_rare = {
+            let mut p = base.clone();
+            p.push(pair("zq binds unique tokens",
+                        &["zq binds unique tokens"]));
+            p
+        };
+        let with_common = {
+            let mut p = base.clone();
+            p.push(pair("the the the the", &["the the the the"]));
+            p
+        };
+        assert!(corpus_nist(&with_rare) > corpus_nist(&with_common));
+    }
+
+    #[test]
+    fn brevity_penalty_hits_short_output() {
+        let full = vec![pair("one two three four five six",
+                             &["one two three four five six"])];
+        let short = vec![pair("one two three",
+                              &["one two three four five six"])];
+        assert!(corpus_nist(&short) < corpus_nist(&full));
+    }
+
+    #[test]
+    fn hand_check_unigram_info() {
+        // single pair, ref = "a b"; total ref words 2; each unigram
+        // count 1 -> info = log2(2/1) = 1 per match; hyp "a b" matches
+        // both unigrams: unigram term = 2*1/2 = 1; bigram "a b"
+        // info = log2(count(a)/count(a b)) = log2(1/1)=0 -> score 1.0
+        let pairs = vec![pair("a b", &["a b"])];
+        let s = corpus_nist(&pairs);
+        assert!((s - 1.0).abs() < 1e-9, "s={s}");
+    }
+}

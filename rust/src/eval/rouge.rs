@@ -1,0 +1,125 @@
+//! ROUGE-L (Lin 2004): longest-common-subsequence F-measure, the E2E
+//! script's fourth metric (beta = 1.2, its default).
+
+use super::tokenize::tokenize;
+
+const BETA: f64 = 1.2;
+
+/// LCS length between two token sequences (O(nm) DP, rolling rows).
+pub fn lcs_len(a: &[String], b: &[String]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for ai in a {
+        for (j, bj) in b.iter().enumerate() {
+            cur[j + 1] = if ai == bj {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Sentence ROUGE-L against multiple references (max over refs, the
+/// e2e-metrics convention), on a 0-100 scale.
+pub fn sentence_rouge_l(hyp: &str, refs: &[String]) -> f64 {
+    let h = tokenize(hyp);
+    if h.is_empty() {
+        return 0.0;
+    }
+    let mut best: f64 = 0.0;
+    for r in refs {
+        let rt = tokenize(r);
+        if rt.is_empty() {
+            continue;
+        }
+        let lcs = lcs_len(&h, &rt) as f64;
+        let prec = lcs / h.len() as f64;
+        let rec = lcs / rt.len() as f64;
+        if prec == 0.0 || rec == 0.0 {
+            continue;
+        }
+        let f = (1.0 + BETA * BETA) * prec * rec
+            / (rec + BETA * BETA * prec);
+        best = best.max(f);
+    }
+    100.0 * best
+}
+
+/// Corpus ROUGE-L: mean of sentence scores (e2e-metrics reports the
+/// average of per-segment ROUGE-L).
+pub fn corpus_rouge_l(pairs: &[(String, Vec<String>)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs
+        .iter()
+        .map(|(h, rs)| sentence_rouge_l(h, rs))
+        .sum::<f64>()
+        / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn lcs_hand_cases() {
+        let a = tokenize("a b c d e");
+        let b = tokenize("a x c y e");
+        assert_eq!(lcs_len(&a, &b), 3); // a c e
+        assert_eq!(lcs_len(&a, &a), 5);
+        assert_eq!(lcs_len(&a, &[]), 0);
+    }
+
+    #[test]
+    fn lcs_respects_order() {
+        let a = tokenize("a b");
+        let b = tokenize("b a");
+        assert_eq!(lcs_len(&a, &b), 1);
+    }
+
+    #[test]
+    fn perfect_match_is_100() {
+        assert!((sentence_rouge_l("the cat sat",
+                                  &rs(&["the cat sat"])) - 100.0)
+                .abs() < 1e-9);
+    }
+
+    #[test]
+    fn hand_computed_f_beta() {
+        // hyp "a b c" vs ref "a c": lcs=2, P=2/3, R=1
+        // F = (1+b^2) P R / (R + b^2 P), b=1.2
+        let p: f64 = 2.0 / 3.0;
+        let r: f64 = 1.0;
+        let b2 = 1.2f64 * 1.2;
+        let want = 100.0 * (1.0 + b2) * p * r / (r + b2 * p);
+        let got = sentence_rouge_l("a b c", &rs(&["a c"]));
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn multi_ref_takes_max() {
+        let both = sentence_rouge_l("x y z",
+                                    &rs(&["totally different", "x y z"]));
+        assert!((both - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corpus_is_mean() {
+        let pairs = vec![
+            ("a b".to_string(), rs(&["a b"])),
+            ("zz".to_string(), rs(&["qq"])),
+        ];
+        assert!((corpus_rouge_l(&pairs) - 50.0).abs() < 1e-9);
+    }
+}

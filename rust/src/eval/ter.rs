@@ -1,0 +1,210 @@
+//! TER — Translation Edit Rate (Snover et al. 2006): word-level edits
+//! (insert/delete/substitute + phrase shifts) / reference length.
+//! Lower is better. We implement the standard dynamic-programming edit
+//! distance plus the greedy shift search of the reference
+//! implementation (capped shift distance, best-improvement-first).
+
+use super::tokenize::tokenize;
+
+const MAX_SHIFT_SIZE: usize = 10;
+const MAX_SHIFT_DIST: usize = 50;
+
+/// Word-level Levenshtein distance.
+pub fn edit_distance(a: &[String], b: &[String]) -> usize {
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, aw) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, bw) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(aw != bw);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Number of TER edits from hyp to ref: greedy shifts, each costing 1,
+/// as long as they reduce edit distance by more than the shift cost.
+fn ter_edits(hyp: &[String], r: &[String]) -> usize {
+    let mut h: Vec<String> = hyp.to_vec();
+    let mut shifts = 0usize;
+    let mut best = edit_distance(&h, r);
+    loop {
+        let mut improved: Option<(usize, Vec<String>)> = None;
+        // try shifting every sub-span of h to every other position
+        for start in 0..h.len() {
+            for len in 1..=MAX_SHIFT_SIZE.min(h.len() - start) {
+                // only consider spans that appear somewhere in ref
+                // (reference implementation's pruning)
+                let span = &h[start..start + len];
+                if !contains_subslice(r, span) {
+                    continue;
+                }
+                for dst in 0..=(h.len() - len) {
+                    if dst == start
+                        || dst.abs_diff(start) > MAX_SHIFT_DIST
+                    {
+                        continue;
+                    }
+                    let mut cand: Vec<String> = Vec::with_capacity(h.len());
+                    let mut rest: Vec<String> = h.clone();
+                    let moved: Vec<String> =
+                        rest.drain(start..start + len).collect();
+                    cand.extend_from_slice(&rest[..dst.min(rest.len())]);
+                    cand.extend(moved);
+                    cand.extend_from_slice(&rest[dst.min(rest.len())..]);
+                    let d = edit_distance(&cand, r);
+                    if d + 1 < best
+                        && improved
+                            .as_ref()
+                            .map_or(true, |(bd, _)| d < *bd)
+                    {
+                        improved = Some((d, cand));
+                    }
+                }
+            }
+        }
+        match improved {
+            Some((d, cand)) => {
+                shifts += 1;
+                best = d + 0; // distance after the shift
+                h = cand;
+                // loop again; total edits accounts shifts separately
+            }
+            None => break,
+        }
+    }
+    best + shifts
+}
+
+fn contains_subslice(hay: &[String], needle: &[String]) -> bool {
+    if needle.len() > hay.len() {
+        return false;
+    }
+    hay.windows(needle.len()).any(|w| w == needle)
+}
+
+/// Sentence TER against multiple references: min edits / ref length of
+/// the best (lowest-TER) reference.
+pub fn sentence_ter(hyp: &str, refs: &[String]) -> f64 {
+    let h = tokenize(hyp);
+    let mut best = f64::INFINITY;
+    for r in refs {
+        let rt = tokenize(r);
+        if rt.is_empty() {
+            continue;
+        }
+        let e = ter_edits(&h, &rt) as f64;
+        best = best.min(e / rt.len() as f64);
+    }
+    if best.is_infinite() {
+        0.0
+    } else {
+        best
+    }
+}
+
+/// Corpus TER: total edits / total reference words (standard corpus
+/// aggregation over the best reference per segment).
+pub fn corpus_ter(pairs: &[(String, Vec<String>)]) -> f64 {
+    let mut edits = 0.0;
+    let mut words = 0.0;
+    for (hyp, refs) in pairs {
+        let h = tokenize(hyp);
+        let mut best: Option<(usize, usize)> = None; // (edits, ref_len)
+        for r in refs {
+            let rt = tokenize(r);
+            if rt.is_empty() {
+                continue;
+            }
+            let e = ter_edits(&h, &rt);
+            let better = match best {
+                None => true,
+                Some((be, bl)) => {
+                    (e as f64 / rt.len() as f64)
+                        < (be as f64 / bl as f64)
+                }
+            };
+            if better {
+                best = Some((e, rt.len()));
+            }
+        }
+        if let Some((e, l)) = best {
+            edits += e as f64;
+            words += l as f64;
+        }
+    }
+    if words == 0.0 {
+        0.0
+    } else {
+        edits / words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn edit_distance_hand_cases() {
+        let a = tokenize("a b c");
+        let b = tokenize("a x c");
+        assert_eq!(edit_distance(&a, &b), 1);
+        assert_eq!(edit_distance(&a, &a), 0);
+        assert_eq!(edit_distance(&a, &[]), 3);
+        assert_eq!(edit_distance(&[], &b), 3);
+    }
+
+    #[test]
+    fn perfect_match_is_zero() {
+        assert_eq!(sentence_ter("the cat sat", &rs(&["the cat sat"])),
+                   0.0);
+    }
+
+    #[test]
+    fn one_substitution_over_4_words() {
+        let t = sentence_ter("the cat sat down",
+                             &rs(&["the dog sat down"]));
+        assert!((t - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shift_costs_one_edit_not_two() {
+        // "b a c d e" -> shift "b" after "a" fixes everything: 1 edit.
+        // pure edit distance would be 2 (sub+sub or ins+del).
+        let hyp = "b a c d e";
+        let r = rs(&["a b c d e"]);
+        let h = tokenize(hyp);
+        let rt = tokenize(&r[0]);
+        assert_eq!(edit_distance(&h, &rt), 2);
+        let t = sentence_ter(hyp, &r);
+        assert!((t - 0.2).abs() < 1e-9, "t={t}"); // 1 shift / 5 words
+    }
+
+    #[test]
+    fn multi_reference_takes_best() {
+        let t = sentence_ter("x y z", &rs(&["completely different",
+                                            "x y z"]));
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn corpus_pools_edits() {
+        let pairs = vec![
+            ("a b".to_string(), rs(&["a b"])),       // 0 edits / 2
+            ("a x".to_string(), rs(&["a b"])),       // 1 edit / 2
+        ];
+        assert!((corpus_ter(&pairs) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ter_can_exceed_one() {
+        let t = sentence_ter("q w e r t y u", &rs(&["a b"]));
+        assert!(t > 1.0);
+    }
+}

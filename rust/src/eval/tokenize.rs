@@ -1,0 +1,86 @@
+//! Metric-side tokenization: lowercase, punctuation-splitting word
+//! tokenizer shared by all NLG metrics (mirrors the mteval/e2e-metrics
+//! convention of evaluating on lowercased, punctuation-separated
+//! tokens).
+
+/// Tokenize a sentence for metric computation.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        let cl = c.to_ascii_lowercase();
+        if cl.is_alphanumeric() {
+            cur.push(cl);
+        } else {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+            if !c.is_whitespace() {
+                out.push(c.to_string());
+            }
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// n-grams of a token slice as joined strings.
+pub fn ngrams(tokens: &[String], n: usize) -> Vec<String> {
+    if tokens.len() < n || n == 0 {
+        return Vec::new();
+    }
+    tokens.windows(n).map(|w| w.join(" ")).collect()
+}
+
+/// Count map of n-grams.
+pub fn ngram_counts(tokens: &[String], n: usize)
+                    -> std::collections::HashMap<String, usize> {
+    let mut map = std::collections::HashMap::new();
+    for g in ngrams(tokens, n) {
+        *map.entry(g).or_insert(0) += 1;
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        tokenize(s)
+    }
+
+    #[test]
+    fn lowercases_and_splits_punct() {
+        assert_eq!(toks("The Cat, sat."),
+                   vec!["the", "cat", ",", "sat", "."]);
+    }
+
+    #[test]
+    fn numbers_kept_whole() {
+        assert_eq!(toks("rose 25 percent"), vec!["rose", "25", "percent"]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(toks("").is_empty());
+        assert!(toks("   ").is_empty());
+    }
+
+    #[test]
+    fn ngrams_basic() {
+        let t = toks("a b c d");
+        assert_eq!(ngrams(&t, 2), vec!["a b", "b c", "c d"]);
+        assert!(ngrams(&t, 5).is_empty());
+    }
+
+    #[test]
+    fn ngram_counts_aggregate() {
+        let t = toks("the cat the cat");
+        let c = ngram_counts(&t, 2);
+        assert_eq!(c["the cat"], 2);
+        assert_eq!(c["cat the"], 1);
+    }
+}

@@ -1,0 +1,298 @@
+//! Analytic FLOPs accountant (paper Appendix A.4).
+//!
+//! Reproduces the paper's FLOP tables *at the paper's true scale* from
+//! the architecture formulas alone:
+//!
+//!  * forward FLOPs per sequence of length T:
+//!      matmul   2·T·(12·L·d²)·(1 − S)     (the sparsifiable 98%-ish)
+//!      attention 4·T²·d·L                  (QKᵀ and PV, never sparsified)
+//!      logits    2·T·V·d                   (tied vocab projection)
+//!  * training FLOPs = 3 × forward (backward ≈ 2× forward).
+//!
+//! Conventions inferred from the paper's own numbers (verified to
+//! reproduce App. Tables 2–3 and Table 2 to 3 significant figures):
+//! pre-training counts fwd+bwd per sequence at T=2048; the fine-tuning
+//! "FLOPs/seq" column is *forward-only at T=512* and its total applies
+//! the 3× there; fine-tuning sequence counts correspond to the dataset
+//! sizes × effective epochs {E2E: 3, WebNLG: 3, DART: 2, Curation: 1}.
+
+use crate::config::GPTConfig;
+
+/// Forward FLOPs for one sequence of length `t` at weight sparsity `s`
+/// (only the 12·L·d² matmul weights are sparsified, per the paper).
+pub fn forward_flops(cfg: &GPTConfig, t: u64, sparsity: f64) -> f64 {
+    let (l, d, v) = (cfg.n_layers as f64, cfg.d_model as f64,
+                     cfg.vocab_size as f64);
+    let t = t as f64;
+    let matmul = 2.0 * t * 12.0 * l * d * d * (1.0 - sparsity);
+    let attention = 4.0 * t * t * d * l;
+    let logits = 2.0 * t * v * d;
+    matmul + attention + logits
+}
+
+/// Training (fwd+bwd) FLOPs for one sequence.
+pub fn train_flops_per_seq(cfg: &GPTConfig, t: u64, sparsity: f64) -> f64 {
+    3.0 * forward_flops(cfg, t, sparsity)
+}
+
+/// Share of forward FLOPs in attention / vocab-logits (the paper §3.5
+/// quotes these to explain why bigger models benefit more).
+pub fn flop_shares(cfg: &GPTConfig, t: u64) -> (f64, f64) {
+    let total = forward_flops(cfg, t, 0.0);
+    let (l, d, v) = (cfg.n_layers as f64, cfg.d_model as f64,
+                     cfg.vocab_size as f64);
+    let t = t as f64;
+    (4.0 * t * t * d * l / total, 2.0 * t * v * d / total)
+}
+
+// ---------------------------------------------------------------------------
+// Pre-training budgets (App. Table 2)
+// ---------------------------------------------------------------------------
+
+pub const PRETRAIN_SEQ_LEN: u64 = 2048;
+
+/// Chinchilla-optimal token budget: ≈ 20 tokens per parameter.
+pub fn chinchilla_tokens(total_params: u64) -> u64 {
+    20 * total_params
+}
+
+#[derive(Debug, Clone)]
+pub struct PretrainFlops {
+    pub total_seqs: f64,
+    pub flops_per_seq: f64,
+    pub total_flops: f64,
+    pub reduction_over_dense: f64,
+}
+
+/// App. Table 2 row: pre-training at `sparsity` on `tokens` tokens.
+pub fn pretrain_flops(cfg: &GPTConfig, tokens: u64, sparsity: f64)
+                      -> PretrainFlops {
+    let total_seqs = tokens as f64 / PRETRAIN_SEQ_LEN as f64;
+    let per_seq = train_flops_per_seq(cfg, PRETRAIN_SEQ_LEN, sparsity);
+    let dense = train_flops_per_seq(cfg, PRETRAIN_SEQ_LEN, 0.0);
+    PretrainFlops {
+        total_seqs,
+        flops_per_seq: per_seq,
+        total_flops: total_seqs * per_seq,
+        reduction_over_dense: per_seq / dense,
+    }
+}
+
+/// The paper's pre-training token budgets (App. Table 1): 2.5B / 26B.
+pub fn paper_tokens(model: &str) -> u64 {
+    match model {
+        "gpt2-small" => 2_500_000_000,
+        "gpt3-xl" => 26_000_000_000,
+        other => panic!("no paper token budget for {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fine-tuning budgets (App. Table 3)
+// ---------------------------------------------------------------------------
+
+pub const FINETUNE_SEQ_LEN: u64 = 512;
+
+/// Fine-tuning sequence counts (dataset size × effective epochs), from
+/// App. Table 3: E2E 1.26e5, WebNLG 0.54e5, DART 1.25e5, Curation 0.34e5.
+pub fn paper_finetune_seqs(task: &str) -> f64 {
+    match task {
+        "e2e" => 1.26e5,
+        "webnlg" => 0.54e5,
+        "dart" => 1.25e5,
+        "curation" => 0.34e5,
+        other => panic!("no paper seq count for task {other}"),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FinetuneFlops {
+    pub total_seqs: f64,
+    /// forward-only per-seq (the unit App. Table 3 reports)
+    pub flops_per_seq_fwd: f64,
+    pub total_flops: f64,
+}
+
+/// App. Table 3 row: dense fine-tuning (SPDF always fine-tunes dense).
+pub fn finetune_flops(cfg: &GPTConfig, task: &str) -> FinetuneFlops {
+    let seqs = paper_finetune_seqs(task);
+    let fwd = forward_flops(cfg, FINETUNE_SEQ_LEN, 0.0);
+    FinetuneFlops {
+        total_seqs: seqs,
+        flops_per_seq_fwd: fwd,
+        total_flops: 3.0 * seqs * fwd,
+    }
+}
+
+/// Sparse fine-tuning variant (Figure 2 baseline cost model).
+pub fn finetune_flops_sparse(cfg: &GPTConfig, task: &str, sparsity: f64)
+                             -> FinetuneFlops {
+    let seqs = paper_finetune_seqs(task);
+    let fwd = forward_flops(cfg, FINETUNE_SEQ_LEN, sparsity);
+    FinetuneFlops {
+        total_seqs: seqs,
+        flops_per_seq_fwd: fwd,
+        total_flops: 3.0 * seqs * fwd,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: end-to-end totals + speedup
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct TotalRow {
+    pub model: String,
+    pub task: String,
+    pub sparsity: f64,
+    pub total_flops: f64,
+    pub speedup_vs_dense: f64,
+}
+
+/// One Table 2 cell: pre-train at `sparsity` + dense fine-tune on task.
+pub fn table2_cell(cfg: &GPTConfig, tokens: u64, task: &str,
+                   sparsity: f64) -> TotalRow {
+    let pt = pretrain_flops(cfg, tokens, sparsity);
+    let ft = finetune_flops(cfg, task);
+    let total = pt.total_flops + ft.total_flops;
+    let dense = pretrain_flops(cfg, tokens, 0.0).total_flops
+        + ft.total_flops;
+    TotalRow {
+        model: cfg.name.clone(),
+        task: task.to_string(),
+        sparsity,
+        total_flops: total,
+        speedup_vs_dense: dense / total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt2_small, gpt3_xl};
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a / b - 1.0).abs() < tol
+    }
+
+    // ---- App. Table 2 (pre-training) ----------------------------------
+
+    #[test]
+    fn app_table2_gpt2_small_dense() {
+        let p = pretrain_flops(&gpt2_small(), paper_tokens("gpt2-small"),
+                               0.0);
+        assert!(close(p.total_seqs, 1.22e6, 0.01), "{}", p.total_seqs);
+        assert!(close(p.flops_per_seq, 1.99e12, 0.01),
+                "{}", p.flops_per_seq);
+        assert!(close(p.total_flops, 2.43e18, 0.01),
+                "{}", p.total_flops);
+    }
+
+    #[test]
+    fn app_table2_gpt2_small_sparse() {
+        let cfg = gpt2_small();
+        let t = paper_tokens("gpt2-small");
+        let s50 = pretrain_flops(&cfg, t, 0.5);
+        assert!(close(s50.flops_per_seq, 1.47e12, 0.01));
+        assert!(close(s50.total_flops, 1.79e18, 0.01));
+        let s75 = pretrain_flops(&cfg, t, 0.75);
+        assert!(close(s75.flops_per_seq, 1.20e12, 0.01));
+        assert!(close(s75.total_flops, 1.46e18, 0.015));
+        assert!(close(s75.reduction_over_dense, 0.601, 0.01));
+    }
+
+    #[test]
+    fn app_table2_gpt3_xl() {
+        let cfg = gpt3_xl();
+        let t = paper_tokens("gpt3-xl");
+        let d = pretrain_flops(&cfg, t, 0.0);
+        assert!(close(d.total_seqs, 1.27e7, 0.01));
+        assert!(close(d.flops_per_seq, 1.86e13, 0.01));
+        assert!(close(d.total_flops, 2.36e20, 0.01));
+        let s50 = pretrain_flops(&cfg, t, 0.5);
+        assert!(close(s50.total_flops, 1.42e20, 0.01));
+        let s75 = pretrain_flops(&cfg, t, 0.75);
+        assert!(close(s75.total_flops, 9.48e19, 0.01));
+        assert!(close(s75.reduction_over_dense, 0.401, 0.01));
+    }
+
+    // ---- App. Table 3 (fine-tuning) ------------------------------------
+
+    #[test]
+    fn app_table3_flops_per_seq() {
+        let ft2 = finetune_flops(&gpt2_small(), "e2e");
+        assert!(close(ft2.flops_per_seq_fwd, 1.36e11, 0.01),
+                "{}", ft2.flops_per_seq_fwd);
+        let ft3 = finetune_flops(&gpt3_xl(), "e2e");
+        assert!(close(ft3.flops_per_seq_fwd, 1.39e12, 0.01),
+                "{}", ft3.flops_per_seq_fwd);
+    }
+
+    #[test]
+    fn app_table3_totals() {
+        // E2E totals: 5.15e16 (small), 5.27e17 (XL)
+        assert!(close(finetune_flops(&gpt2_small(), "e2e").total_flops,
+                      5.15e16, 0.01));
+        assert!(close(finetune_flops(&gpt3_xl(), "e2e").total_flops,
+                      5.27e17, 0.02));
+        // Curation: 1.38e16 / 1.41e17
+        assert!(close(
+            finetune_flops(&gpt2_small(), "curation").total_flops,
+            1.38e16, 0.02));
+        assert!(close(
+            finetune_flops(&gpt3_xl(), "curation").total_flops,
+            1.41e17, 0.02));
+    }
+
+    // ---- Table 2 (headline) --------------------------------------------
+
+    #[test]
+    fn table2_gpt3_xl_75_is_2_5x() {
+        let cfg = gpt3_xl();
+        let row = table2_cell(&cfg, paper_tokens("gpt3-xl"), "e2e", 0.75);
+        assert!(close(row.total_flops, 95.29e18, 0.01),
+                "{}", row.total_flops);
+        assert!(close(row.speedup_vs_dense, 2.48, 0.01),
+                "{}", row.speedup_vs_dense);
+        let dense = table2_cell(&cfg, paper_tokens("gpt3-xl"), "e2e", 0.0);
+        assert!(close(dense.total_flops, 236.62e18, 0.01));
+    }
+
+    #[test]
+    fn table2_gpt2_small_75() {
+        let cfg = gpt2_small();
+        let row = table2_cell(&cfg, paper_tokens("gpt2-small"),
+                              "webnlg", 0.75);
+        assert!(close(row.speedup_vs_dense, 1.65, 0.01),
+                "{}", row.speedup_vs_dense);
+    }
+
+    #[test]
+    fn flop_reduction_grows_with_model_size() {
+        // paper §3.5: the trend continues with larger models
+        let small = table2_cell(&gpt2_small(),
+                                paper_tokens("gpt2-small"), "e2e", 0.75)
+            .speedup_vs_dense;
+        let xl = table2_cell(&gpt3_xl(), paper_tokens("gpt3-xl"),
+                             "e2e", 0.75).speedup_vs_dense;
+        assert!(xl > small);
+    }
+
+    #[test]
+    fn chinchilla_budgets() {
+        assert!(close(chinchilla_tokens(125_000_000) as f64, 2.5e9,
+                      0.001));
+        assert!(close(chinchilla_tokens(1_300_000_000) as f64, 2.6e10,
+                      0.001));
+    }
+
+    #[test]
+    fn shares_match_paper_narrative() {
+        // §3.5: GPT-2 Small vocab ~27% of FLOPs; GPT-3 XL vocab ~6.8%
+        let (_, v_small) = flop_shares(&gpt2_small(), PRETRAIN_SEQ_LEN);
+        let (_, v_xl) = flop_shares(&gpt3_xl(), PRETRAIN_SEQ_LEN);
+        assert!((0.18..0.30).contains(&v_small), "{v_small}");
+        assert!((0.05..0.09).contains(&v_xl), "{v_xl}");
+        assert!(v_xl < v_small);
+    }
+}

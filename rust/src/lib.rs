@@ -1,0 +1,33 @@
+//! # spdf — Sparse Pre-training and Dense Fine-tuning for LLMs
+//!
+//! A rust + JAX + Pallas reproduction of *SPDF: Sparse Pre-training and
+//! Dense Fine-tuning for Large Language Models* (Thangarasa et al.,
+//! 2023). Three layers:
+//!
+//!  * **L3 (this crate)** — the coordinator: SPDF pipeline orchestration
+//!    (sparsify → sparse pre-train → densify → dense fine-tune →
+//!    evaluate), plus every substrate the experiments need: tokenizer,
+//!    synthetic corpora, NLG metrics, decoding, FLOPs accounting,
+//!    sparse compute engine, analysis tools.
+//!  * **L2/L1 (python/, build time only)** — the GPT model and Pallas
+//!    kernels, AOT-lowered to HLO text artifacts.
+//!  * **runtime/** — loads the artifacts through PJRT; python is never
+//!    on the run path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod analysis;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod flops;
+pub mod generate;
+pub mod runtime;
+pub mod sparse_compute;
+pub mod sparsity;
+pub mod tokenizer;
+pub mod train;
+pub mod util;

@@ -1,0 +1,459 @@
+//! `spdf` — the SPDF coordinator CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info        manifest + model registry summary
+//!   flops       regenerate the paper's FLOP tables (Table 2, A.2, A.3)
+//!   pretrain    sparse pre-train one model, save a checkpoint
+//!   finetune    dense/sparse fine-tune from a checkpoint, evaluate
+//!   run-matrix  the full experiment matrix (Table 1 / Fig. 2 data)
+//!   report      render tables from the results ledger
+//!   subspace    Figures 3–4 cosine-distance analysis
+//!   gen-data    dump synthetic task examples (inspection/demo)
+
+use std::path::PathBuf;
+
+use spdf::bench_support::Table;
+use spdf::config;
+use spdf::coordinator::experiments::{self, RunKnobs, RunSpec};
+use spdf::coordinator::{self, report, World, WorldConfig};
+use spdf::data::Task;
+use spdf::flops;
+use spdf::generate::DecodeParams;
+use spdf::runtime::Engine;
+use spdf::sparsity::MaskScheme;
+use spdf::train::checkpoint;
+use spdf::util::cli::Cli;
+use spdf::util::rng::Rng;
+use spdf::util::Timer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let r = match cmd {
+        "info" => cmd_info(),
+        "flops" => cmd_flops(),
+        "pretrain" => cmd_pretrain(rest),
+        "finetune" => cmd_finetune(rest),
+        "run-matrix" => cmd_run_matrix(rest),
+        "report" => cmd_report(rest),
+        "subspace" => cmd_subspace(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "spdf — Sparse Pre-training and Dense Fine-tuning coordinator\n\n\
+         commands:\n\
+           info        manifest + model registry summary\n\
+           flops       regenerate paper FLOP tables (Table 2, A.2, A.3)\n\
+           pretrain    sparse pre-train a model, save checkpoint\n\
+           finetune    fine-tune from a checkpoint + evaluate\n\
+           run-matrix  full experiment matrix (Table 1 / Fig. 2)\n\
+           report      render tables from the results ledger\n\
+           subspace    Figures 3-4 cosine-distance analysis\n\
+           gen-data    dump synthetic task examples\n\n\
+         run `spdf <command> --help` for flags"
+    );
+}
+
+fn world_flags(cli: Cli) -> Cli {
+    cli.flag("seed", "0", "world/data seed")
+        .flag("corpus-words", "400000", "SynthPile size in words")
+        .flag("task-scale", "0.15", "task dataset scale (1.0 = paper/10)")
+}
+
+fn build_world(a: &spdf::util::cli::Args) -> anyhow::Result<World> {
+    let t = Timer::start();
+    let w = World::build(&WorldConfig {
+        seed: a.get_u64("seed")?,
+        corpus_words: a.get_usize("corpus-words")?,
+        vocab_size: 512,
+        task_scale: a.get_f64("task-scale")?,
+    });
+    eprintln!("[spdf] world built in {:.1}s ({} corpus tokens)",
+              t.secs(), w.stream.len());
+    Ok(w)
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = spdf::runtime::default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    let manifest = spdf::runtime::Manifest::load(&dir)?;
+    let mut t = Table::new(&["model", "layers", "d_model", "heads",
+                             "vocab", "ctx", "params", "artifacts"]);
+    for (name, mm) in &manifest.models {
+        t.row(&[
+            name.clone(),
+            mm.config.n_layers.to_string(),
+            mm.config.d_model.to_string(),
+            mm.config.n_heads.to_string(),
+            mm.config.vocab_size.to_string(),
+            mm.config.ctx_len.to_string(),
+            format!("{:.2}M", mm.total_params() as f64 / 1e6),
+            mm.artifacts.keys().cloned().collect::<Vec<_>>()
+                .join(","),
+        ]);
+    }
+    t.print();
+    println!("\npaper-scale configs (analytic FLOPs only):");
+    let mut t2 = Table::new(&["model", "layers", "d_model", "heads",
+                              "d_head", "params"]);
+    for cfg in [config::gpt2_small(), config::gpt3_xl()] {
+        t2.row(&[
+            cfg.name.clone(),
+            cfg.n_layers.to_string(),
+            cfg.d_model.to_string(),
+            cfg.n_heads.to_string(),
+            cfg.d_head().to_string(),
+            format!("{:.0}M", cfg.total_params() as f64 / 1e6),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}
+
+fn cmd_flops() -> anyhow::Result<()> {
+    println!("== App. Table 2: pre-training FLOPs (paper scale) ==");
+    let mut t = Table::new(&["Model", "Sparsity", "Total Seqs",
+                             "FLOPs/Seq", "Total exaFLOPs",
+                             "Reduction"]);
+    for cfg in [config::gpt2_small(), config::gpt3_xl()] {
+        let tokens = flops::paper_tokens(&cfg.name);
+        for s in [0.0, 0.5, 0.75] {
+            let p = flops::pretrain_flops(&cfg, tokens, s);
+            t.row(&[
+                cfg.name.clone(),
+                format!("{:.0}%", s * 100.0),
+                format!("{:.2e}", p.total_seqs),
+                format!("{:.2e}", p.flops_per_seq),
+                format!("{:.2}", p.total_flops / 1e18),
+                format!("{:.3}x", p.reduction_over_dense),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== App. Table 3: fine-tuning FLOPs (dense, paper scale) ==");
+    let mut t3 = Table::new(&["Task", "Model", "Total Seqs",
+                              "fwd FLOPs/Seq", "Total exaFLOPs"]);
+    for task in ["e2e", "webnlg", "dart", "curation"] {
+        for cfg in [config::gpt2_small(), config::gpt3_xl()] {
+            let f = flops::finetune_flops(&cfg, task);
+            t3.row(&[
+                task.to_string(),
+                cfg.name.clone(),
+                format!("{:.2e}", f.total_seqs),
+                format!("{:.2e}", f.flops_per_seq_fwd),
+                format!("{:.3}", f.total_flops / 1e18),
+            ]);
+        }
+    }
+    t3.print();
+
+    println!("\n== Table 2: total training FLOPs + speedup ==");
+    let mut t2 = Table::new(&["Model", "Sparsity", "E2E", "WebNLG",
+                              "DART", "Curation"]);
+    for cfg in [config::gpt2_small(), config::gpt3_xl()] {
+        let tokens = flops::paper_tokens(&cfg.name);
+        for s in [0.0, 0.5, 0.75] {
+            let cell = |task: &str| {
+                let r = flops::table2_cell(&cfg, tokens, task, s);
+                format!("{:.2} ({:.2}x)", r.total_flops / 1e18,
+                        r.speedup_vs_dense)
+            };
+            t2.row(&[
+                cfg.name.clone(),
+                format!("{:.0}%", s * 100.0),
+                cell("e2e"),
+                cell("webnlg"),
+                cell("dart"),
+                cell("curation"),
+            ]);
+        }
+    }
+    t2.print();
+    Ok(())
+}
+
+fn cmd_pretrain(raw: &[String]) -> anyhow::Result<()> {
+    let cli = world_flags(
+        Cli::new("spdf pretrain", "sparse pre-train a model"))
+        .flag("model", "gpt-nano", "model name")
+        .flag("sparsity", "0.75", "weight sparsity in [0,1)")
+        .flag("scheme", "uniform", "uniform | erk")
+        .flag("steps", "1200", "optimizer steps")
+        .flag("lr", "0.001", "peak learning rate")
+        .flag("run-dir", "runs", "checkpoint directory");
+    let a = cli.parse(raw)?;
+    let world = build_world(&a)?;
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    let runtime = engine.load_model(a.get("model"))?;
+    let scheme = match a.get("scheme") {
+        "erk" => MaskScheme::Erk,
+        _ => MaskScheme::Uniform,
+    };
+    let res = coordinator::pretrain(&runtime, &world,
+        &coordinator::PretrainConfig {
+            sparsity: a.get_f64("sparsity")?,
+            scheme,
+            steps: a.get_u64("steps")?,
+            peak_lr: a.get_f32("lr")?,
+            seed: a.get_u64("seed")?,
+            log_every: 100,
+        })?;
+    let path = experiments::pretrain_ckpt_path(
+        &PathBuf::from(a.get("run-dir")), a.get("model"),
+        a.get_f64("sparsity")?, a.get_u64("seed")?);
+    checkpoint::save(&res.state, &path)?;
+    println!("eval loss {:.4} | ppl {:.2} | train flops {:.3e} | \
+              checkpoint {}",
+             res.final_eval_loss,
+             spdf::train::perplexity(res.final_eval_loss),
+             res.train_flops, path.display());
+    Ok(())
+}
+
+fn cmd_finetune(raw: &[String]) -> anyhow::Result<()> {
+    let cli = world_flags(
+        Cli::new("spdf finetune", "fine-tune from a checkpoint"))
+        .flag("model", "gpt-nano", "model name")
+        .flag_req("ckpt", "pre-trained checkpoint path")
+        .flag("task", "e2e", "e2e | webnlg | dart | curation")
+        .flag("epochs", "4", "max epochs (early stopping)")
+        .flag("lr", "0.0003", "peak learning rate")
+        .flag("eval-examples", "48", "test examples to decode")
+        .flag("beam", "1", "beam size (1 = greedy)")
+        .switch("sparse-ft", "keep the mask during fine-tuning (Fig. 2)");
+    let a = cli.parse(raw)?;
+    let world = build_world(&a)?;
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    let runtime = engine.load_model(a.get("model"))?;
+    let state = checkpoint::load(&PathBuf::from(a.get("ckpt")))?;
+    let task = Task::parse(a.get("task"))?;
+    let ft = coordinator::finetune(&runtime, &world, state,
+        &coordinator::FinetuneConfig {
+            task,
+            epochs: a.get_usize("epochs")?,
+            peak_lr: a.get_f32("lr")?,
+            dense: !a.is_set("sparse-ft"),
+            seed: a.get_u64("seed")?,
+            patience: 2,
+            log_every: 50,
+        })?;
+    let dp = DecodeParams {
+        beam_size: a.get_usize("beam")?,
+        ..Default::default()
+    };
+    let m = coordinator::evaluate_task(
+        &runtime, &ft.state, &world, task,
+        a.get_usize("eval-examples")?, &dp)?;
+    println!("task {} | BLEU {:.2} NIST {:.2} METEOR {:.3} \
+              ROUGE-L {:.2} CIDEr {:.2} TER {:.3} PPL {:.2} \
+              (n={})",
+             task.name(), m.bleu, m.nist, m.meteor, m.rouge_l,
+             m.cider, m.ter, m.ppl, m.n_examples);
+    Ok(())
+}
+
+fn cmd_run_matrix(raw: &[String]) -> anyhow::Result<()> {
+    let cli = world_flags(
+        Cli::new("spdf run-matrix",
+                 "run the Table 1 / Fig. 2 experiment matrix"))
+        .flag("models", "gpt-nano", "comma-separated models")
+        .flag("sparsities", "0,0.5,0.75", "comma-separated sparsity")
+        .flag("tasks", "e2e,webnlg,dart,curation", "tasks")
+        .flag("seeds", "0", "fine-tuning seeds")
+        .flag("pretrain-steps", "1000",
+              "pre-training steps (nano; micro gets 2x)")
+        .flag("pretrain-lr", "0.001", "pre-training peak lr")
+        .flag("ft-epochs", "3", "fine-tuning epochs")
+        .flag("ft-lr", "0.0003", "fine-tuning peak lr")
+        .flag("eval-examples", "48", "test examples to decode")
+        .flag("run-dir", "runs", "checkpoints + ledger dir")
+        .flag("ft-mode", "dense", "dense | sparse | both (Fig. 2 \
+              baseline needs sparse)");
+    let a = cli.parse(raw)?;
+    let world = build_world(&a)?;
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    let run_dir = PathBuf::from(a.get("run-dir"));
+    let knobs = RunKnobs {
+        pretrain_steps: a.get_u64("pretrain-steps")?,
+        pretrain_lr: a.get_f32("pretrain-lr")?,
+        ft_epochs: a.get_usize("ft-epochs")?,
+        ft_lr: a.get_f32("ft-lr")?,
+        eval_examples: a.get_usize("eval-examples")?,
+        world: WorldConfig {
+            seed: a.get_u64("seed")?,
+            corpus_words: a.get_usize("corpus-words")?,
+            vocab_size: 512,
+            task_scale: a.get_f64("task-scale")?,
+        },
+        decode: DecodeParams::default(),
+        run_dir: run_dir.clone(),
+    };
+    let total = Timer::start();
+    for model in a.get_list("models") {
+        let runtime = engine.load_model(&model)?;
+        for sp in a.get_list("sparsities") {
+            let sparsity: f64 = sp.parse()
+                .map_err(|_| anyhow::anyhow!("bad sparsity {sp}"))?;
+            for task_s in a.get_list("tasks") {
+                let task = Task::parse(&task_s)?;
+                for seed_s in a.get_list("seeds") {
+                    let seed: u64 = seed_s.parse()?;
+                    let base = RunSpec {
+                        model: model.clone(),
+                        sparsity,
+                        scheme: MaskScheme::Uniform,
+                        seed,
+                        task,
+                        dense_ft: true,
+                    };
+                    let mode = a.get("ft-mode");
+                    let mut specs = Vec::new();
+                    if mode == "dense" || mode == "both" {
+                        specs.push(base.clone());
+                    }
+                    if (mode == "sparse" || mode == "both")
+                        && sparsity > 0.0
+                    {
+                        let mut s2 = base.clone();
+                        s2.dense_ft = false;
+                        specs.push(s2);
+                    }
+                    for spec in specs {
+                        let res = experiments::run_cell(
+                            &runtime, &world, &knobs, &spec)?;
+                        experiments::append_result(&run_dir, &res)?;
+                    }
+                }
+            }
+        }
+    }
+    eprintln!("[spdf] matrix done in {:.0}s", total.secs());
+    cmd_report_inner(&run_dir)?;
+    Ok(())
+}
+
+fn cmd_report(raw: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("spdf report", "render ledger tables")
+        .flag("run-dir", "runs", "ledger dir");
+    let a = cli.parse(raw)?;
+    cmd_report_inner(&PathBuf::from(a.get("run-dir")))
+}
+
+fn cmd_report_inner(run_dir: &PathBuf) -> anyhow::Result<()> {
+    let results = experiments::load_results(run_dir)?;
+    anyhow::ensure!(!results.is_empty(),
+                    "no results in {}/results.jsonl", run_dir.display());
+    println!("== Table 1: downstream accuracy vs pre-train sparsity ==");
+    println!("{}", report::table1(&results));
+    for task in ["e2e", "webnlg", "dart"] {
+        println!("== App. Table ({task}): all metrics ==");
+        println!("{}", report::full_metrics_table(&results, task));
+    }
+    let models: Vec<String> = {
+        let mut m: Vec<String> = results.iter()
+            .map(|r| r.spec_model.clone()).collect();
+        m.sort();
+        m.dedup();
+        m
+    };
+    for model in models {
+        if results.iter().any(|r| !r.dense_ft && r.spec_model == model) {
+            println!("== Figure 2 ({model}): dense FT vs sparse FT ==");
+            println!("{}", report::fig2_table(&results, &model));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_subspace(raw: &[String]) -> anyhow::Result<()> {
+    let cli = world_flags(
+        Cli::new("spdf subspace",
+                 "Figures 3-4: cosine distance pre-trained vs fine-tuned"))
+        .flag("model", "gpt-nano", "model name")
+        .flag("sparsity", "0.75", "pre-train sparsity of the checkpoint")
+        .flag("task", "dart", "fine-tuning task (paper uses DART)")
+        .flag("ft-epochs", "3", "fine-tuning epochs")
+        .flag("ft-lr", "0.0003", "fine-tuning lr")
+        .flag("run-dir", "runs", "checkpoint dir");
+    let a = cli.parse(raw)?;
+    let world = build_world(&a)?;
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    let runtime = engine.load_model(a.get("model"))?;
+    let ckpt = experiments::pretrain_ckpt_path(
+        &PathBuf::from(a.get("run-dir")), a.get("model"),
+        a.get_f64("sparsity")?, 0);
+    anyhow::ensure!(ckpt.exists(),
+                    "missing {} — run `spdf pretrain` or run-matrix first",
+                    ckpt.display());
+    let pre = checkpoint::load(&ckpt)?;
+    let pre_params = pre.params.clone();
+    let ft = coordinator::finetune(&runtime, &world, pre,
+        &coordinator::FinetuneConfig {
+            task: Task::parse(a.get("task"))?,
+            epochs: a.get_usize("ft-epochs")?,
+            peak_lr: a.get_f32("ft-lr")?,
+            dense: true,
+            seed: a.get_u64("seed")?,
+            patience: 2,
+            log_every: 0,
+        })?;
+    let d = spdf::analysis::subspace_distances(&pre_params,
+                                               &ft.state.params);
+    let mut t = Table::new(&["module", "per-layer cosine distance"]);
+    for (module, dists) in &d {
+        t.row(&[module.to_string(),
+                dists.iter().map(|x| format!("{x:.4}"))
+                    .collect::<Vec<_>>().join("  ")]);
+    }
+    t.print();
+    println!("mean distance: {:.4}",
+             spdf::analysis::mean_distance(&pre_params,
+                                           &ft.state.params));
+    Ok(())
+}
+
+fn cmd_gen_data(raw: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("spdf gen-data", "dump synthetic task examples")
+        .flag("task", "e2e", "e2e | webnlg | dart | curation | pile")
+        .flag("n", "5", "examples to print")
+        .flag("seed", "0", "generator seed");
+    let a = cli.parse(raw)?;
+    let n = a.get_usize("n")?;
+    let mut rng = Rng::new(a.get_u64("seed")?);
+    if a.get("task") == "pile" {
+        for _ in 0..n {
+            println!("{}", spdf::data::synthpile::sentence(&mut rng));
+        }
+        return Ok(());
+    }
+    let task = Task::parse(a.get("task"))?;
+    let data = task.generate(&mut rng, 0.01);
+    for ex in data.train.iter().take(n) {
+        println!("IN : {}", ex.input);
+        for r in &ex.refs {
+            println!("REF: {r}");
+        }
+        println!();
+    }
+    Ok(())
+}

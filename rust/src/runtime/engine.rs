@@ -1,0 +1,211 @@
+//! PJRT execution engine: load HLO text artifacts, compile once, execute
+//! many times from the L3 hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so multi-output
+//! programs come back as a single tuple literal which we decompose.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::manifest::{ArtifactSpec, Manifest, ModelManifest};
+use super::tensor::HostTensor;
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative stats for §Perf
+    pub runs: std::cell::Cell<u64>,
+    pub exec_secs: std::cell::Cell<f64>,
+}
+
+impl Executable {
+    pub fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec)
+                   -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow::anyhow!(
+                "loading {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executable {
+            spec: spec.clone(),
+            exe,
+            runs: std::cell::Cell::new(0),
+            exec_secs: std::cell::Cell::new(0.0),
+        })
+    }
+
+    /// Execute with spec validation; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostTensor])
+               -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, expected {}",
+            self.spec.name, inputs.len(), self.spec.inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs)
+            .enumerate()
+        {
+            anyhow::ensure!(
+                t.matches(s),
+                "artifact {} input #{i} ({}): shape/dtype {:?}/{:?} \
+                 does not match manifest {:?}/{:?}",
+                self.spec.name, s.name, t.shape(), t.dtype(),
+                s.shape, s.dtype
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs.iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        self.runs.set(self.runs.get() + 1);
+        self.exec_secs.set(self.exec_secs.get()
+                           + t0.elapsed().as_secs_f64());
+        self.collect_outputs(result)
+    }
+
+    /// Fast path: execute over pre-built literals, returning output
+    /// literals without HostTensor conversion. Spec validation is the
+    /// caller's responsibility (done once at loop setup) — this is the
+    /// training hot loop (§Perf: literal-resident state avoids two full
+    /// host copies of params+moments per step).
+    pub fn run_raw(&self, inputs: &[&xla::Literal])
+                   -> anyhow::Result<Vec<xla::Literal>> {
+        let t0 = std::time::Instant::now();
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        self.runs.set(self.runs.get() + 1);
+        self.exec_secs.set(self.exec_secs.get()
+                           + t0.elapsed().as_secs_f64());
+        anyhow::ensure!(!result.is_empty() && !result[0].is_empty(),
+                        "artifact {} returned no buffers",
+                        self.spec.name);
+        let bufs = &result[0];
+        let mut outs = Vec::new();
+        if bufs.len() == 1 {
+            // return_tuple=True lowering: one tuple buffer holds all
+            let mut lit = bufs[0].to_literal_sync()?;
+            match lit.decompose_tuple() {
+                Ok(elems) if !elems.is_empty() => outs = elems,
+                _ => outs.push(lit),
+            }
+        } else {
+            for b in bufs {
+                outs.push(b.to_literal_sync()?);
+            }
+        }
+        anyhow::ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.spec.name, outs.len(), self.spec.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    fn collect_outputs(&self, result: Vec<Vec<xla::PjRtBuffer>>)
+                       -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::ensure!(!result.is_empty() && !result[0].is_empty(),
+                        "artifact {} returned no buffers", self.spec.name);
+        let bufs = &result[0];
+        let mut outs: Vec<HostTensor> = Vec::new();
+        if bufs.len() == 1 && self.spec.outputs.len() >= 1 {
+            // return_tuple=True: one tuple literal holds all outputs
+            let lit = bufs[0].to_literal_sync()?;
+            let elems = lit.to_tuple()?;
+            for e in &elems {
+                outs.push(HostTensor::from_literal(e)?);
+            }
+        } else {
+            for b in bufs {
+                let lit = b.to_literal_sync()?;
+                outs.push(HostTensor::from_literal(&lit)?);
+            }
+        }
+        anyhow::ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, expected {}",
+            self.spec.name, outs.len(), self.spec.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    pub fn mean_exec_ms(&self) -> f64 {
+        if self.runs.get() == 0 {
+            0.0
+        } else {
+            1e3 * self.exec_secs.get() / self.runs.get() as f64
+        }
+    }
+}
+
+/// The per-model runtime: all compiled artifacts + the manifest view.
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    pub executables: BTreeMap<String, Executable>,
+}
+
+impl ModelRuntime {
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&Executable> {
+        self.executables.get(name).ok_or_else(|| {
+            anyhow::anyhow!("artifact {name} not compiled for {}",
+                            self.manifest.config.name)
+        })
+    }
+}
+
+/// Top-level engine: one PJRT client, N compiled models.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest })
+    }
+
+    /// Compile every artifact of one model (train/eval/decode).
+    pub fn load_model(&self, name: &str) -> anyhow::Result<ModelRuntime> {
+        let mm = self.manifest.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {name} not in manifest (have: {:?})",
+                self.manifest.models.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let mut executables = BTreeMap::new();
+        for (aname, aspec) in &mm.artifacts {
+            let t0 = std::time::Instant::now();
+            let exe = Executable::compile(&self.client, aspec)?;
+            log_compile(aname, t0.elapsed().as_secs_f64());
+            executables.insert(aname.clone(), exe);
+        }
+        Ok(ModelRuntime { manifest: mm.clone(), executables })
+    }
+
+    /// Compile a subset (e.g. decode-only tools skip train_step).
+    pub fn load_model_artifacts(&self, name: &str, which: &[&str])
+                                -> anyhow::Result<ModelRuntime> {
+        let mm = self.manifest.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!("model {name} not in manifest")
+        })?;
+        let mut executables = BTreeMap::new();
+        for aname in which {
+            let aspec = mm.artifacts.get(*aname).ok_or_else(|| {
+                anyhow::anyhow!("artifact {aname} missing")
+            })?;
+            executables.insert(aname.to_string(),
+                               Executable::compile(&self.client, aspec)?);
+        }
+        Ok(ModelRuntime { manifest: mm.clone(), executables })
+    }
+}
+
+fn log_compile(name: &str, secs: f64) {
+    if std::env::var("SPDF_QUIET").is_err() {
+        eprintln!("[runtime] compiled {name} in {secs:.2}s");
+    }
+}

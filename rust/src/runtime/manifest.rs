@@ -1,0 +1,319 @@
+//! AOT manifest loader.
+//!
+//! `python/compile/aot.py` records, per model, the exact flattened
+//! input/output order, shapes and dtypes of every HLO artifact plus the
+//! parameter init spec and optimizer constants. This module parses that
+//! JSON into typed structs; it is the *only* contract between the python
+//! compile path and the rust run path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::GPTConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "float32" | "f32" => Ok(Dtype::F32),
+            "int32" | "i32" | "s32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One tensor slot in an artifact's flattened input/output list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let name = j.req("name")?.as_str()
+            .ok_or_else(|| anyhow::anyhow!("tensor name not a string"))?
+            .to_string();
+        let shape = j.req("shape")?.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tensor shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = Dtype::parse(
+            j.req("dtype")?.as_str().unwrap_or("float32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered HLO program.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parameter init kinds (mirrors python `param_specs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    Zeros,
+    Ones,
+    Normal,
+    NormalResid,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Everything the runtime knows about one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub config: GPTConfig,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub decode_batch: usize,
+    /// In manifest (= python spec) order, NOT flatten order.
+    pub params: Vec<ParamSpec>,
+    pub masked_params: Vec<String>,
+    pub decay_params: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelManifest {
+    /// Parameter names in jax flatten order (sorted), the order every
+    /// artifact's leading inputs use.
+    pub fn param_flatten_order(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.params.iter().map(|p| p.name.clone()).collect();
+        names.sort();
+        names
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.params.iter().map(|p| p.elems() as u64).sum()
+    }
+
+    pub fn is_masked(&self, name: &str) -> bool {
+        self.masked_params.iter().any(|m| m == name)
+    }
+}
+
+/// Optimizer constants baked into the artifacts (for reporting only —
+/// the artifact itself implements them).
+#[derive(Debug, Clone)]
+pub struct OptimizerInfo {
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    pub weight_decay: f64,
+    pub grad_clip_norm: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub optimizer: OptimizerInfo,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: PathBuf, j: &Json) -> anyhow::Result<Manifest> {
+        let opt = j.req("optimizer")?;
+        let num = |o: &Json, k: &str| -> anyhow::Result<f64> {
+            o.req(k)?.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{k} not a number"))
+        };
+        let optimizer = OptimizerInfo {
+            adam_b1: num(opt, "adam_b1")?,
+            adam_b2: num(opt, "adam_b2")?,
+            adam_eps: num(opt, "adam_eps")?,
+            weight_decay: num(opt, "weight_decay")?,
+            grad_clip_norm: num(opt, "grad_clip_norm")?,
+        };
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.req("models")?.as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(),
+                          Self::model_from_json(&dir, name, mj)?);
+        }
+        Ok(Manifest { dir, optimizer, models })
+    }
+
+    fn model_from_json(dir: &Path, name: &str, j: &Json)
+                       -> anyhow::Result<ModelManifest> {
+        let config = GPTConfig::from_json(name, j.req("config")?)?;
+        let params = j.req("params")?.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamSpec> {
+                let name = p.req("name")?.as_str().unwrap().to_string();
+                let shape = p.req("shape")?.as_arr().unwrap()
+                    .iter().map(|x| x.as_usize().unwrap()).collect();
+                let init = match p.req("init")?.as_str().unwrap() {
+                    "zeros" => InitKind::Zeros,
+                    "ones" => InitKind::Ones,
+                    "normal" => InitKind::Normal,
+                    "normal_resid" => InitKind::NormalResid,
+                    other => anyhow::bail!("unknown init kind {other}"),
+                };
+                Ok(ParamSpec { name, shape, init })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let str_list = |key: &str| -> anyhow::Result<Vec<String>> {
+            Ok(j.req(key)?.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .map(|x| x.as_str().unwrap_or("").to_string())
+                .collect())
+        };
+        let mut artifacts = BTreeMap::new();
+        for (aname, aj) in j.req("artifacts")?.as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an object"))?
+        {
+            let file = dir.join(aj.req("file")?.as_str().unwrap());
+            let tensors = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                aj.req(key)?.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{key} not array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(aname.clone(), ArtifactSpec {
+                name: aname.clone(),
+                file,
+                inputs: tensors("inputs")?,
+                outputs: tensors("outputs")?,
+            });
+        }
+        Ok(ModelManifest {
+            config,
+            train_batch: j.req("train_batch")?.as_usize().unwrap_or(0),
+            eval_batch: j.req("eval_batch")?.as_usize().unwrap_or(0),
+            decode_batch: j.req("decode_batch")?.as_usize().unwrap_or(0),
+            params,
+            masked_params: str_list("masked_params")?,
+            decay_params: str_list("decay_params")?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> Json {
+        Json::parse(r#"{
+          "format_version": 1,
+          "optimizer": {"adam_b1": 0.9, "adam_b2": 0.999,
+                        "adam_eps": 1e-08, "weight_decay": 0.1,
+                        "grad_clip_norm": 1.0},
+          "models": {
+            "m": {
+              "config": {"name": "m", "n_layers": 1, "d_model": 8,
+                         "n_heads": 2, "vocab_size": 16, "ctx_len": 4},
+              "train_batch": 2, "eval_batch": 2, "decode_batch": 2,
+              "params": [
+                {"name": "wte", "shape": [16, 8], "init": "normal"},
+                {"name": "h0.mlp.wi", "shape": [8, 32], "init": "normal"}
+              ],
+              "masked_params": ["h0.mlp.wi"],
+              "decay_params": ["wte", "h0.mlp.wi"],
+              "artifacts": {
+                "eval_loss": {
+                  "file": "m.eval_loss.hlo.txt",
+                  "inputs": [
+                    {"name": "params/h0.mlp.wi", "shape": [8, 32],
+                     "dtype": "float32"},
+                    {"name": "params/wte", "shape": [16, 8],
+                     "dtype": "float32"},
+                    {"name": "tokens", "shape": [2, 4], "dtype": "int32"}
+                  ],
+                  "outputs": [
+                    {"name": "out/0", "shape": [], "dtype": "float32"}
+                  ]
+                }
+              }
+            }
+          }
+        }"#).unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"),
+                                    &tiny_manifest_json()).unwrap();
+        assert_eq!(m.optimizer.adam_eps, 1e-8);
+        let mm = &m.models["m"];
+        assert_eq!(mm.config.d_model, 8);
+        assert_eq!(mm.params.len(), 2);
+        assert!(mm.is_masked("h0.mlp.wi"));
+        assert!(!mm.is_masked("wte"));
+        let art = &mm.artifacts["eval_loss"];
+        assert_eq!(art.inputs.len(), 3);
+        assert_eq!(art.inputs[2].dtype, Dtype::I32);
+        assert_eq!(art.inputs[0].elems(), 256);
+    }
+
+    #[test]
+    fn flatten_order_is_sorted() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"),
+                                    &tiny_manifest_json()).unwrap();
+        let order = m.models["m"].param_flatten_order();
+        assert_eq!(order, vec!["h0.mlp.wi".to_string(),
+                               "wte".to_string()]);
+    }
+
+    #[test]
+    fn scalar_spec_has_one_elem() {
+        let t = TensorSpec {
+            name: "lr".into(), shape: vec![], dtype: Dtype::F32,
+        };
+        assert_eq!(t.elems(), 1);
+    }
+}

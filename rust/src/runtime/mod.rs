@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + manifest) emitted
+//! by `python/compile/aot.py` and executes them from the rust hot path.
+//! Python is never imported at run time.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, Executable, ModelRuntime};
+pub use manifest::{ArtifactSpec, Dtype, InitKind, Manifest,
+                   ModelManifest, ParamSpec, TensorSpec};
+pub use tensor::HostTensor;
+
+/// Default artifact directory, overridable via SPDF_ARTIFACTS.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("SPDF_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,179 @@
+//! Host-side tensors marshalled to/from PJRT literals.
+
+use super::manifest::{Dtype, TensorSpec};
+
+/// A host tensor: shape + typed data. The runtime converts these to
+//  `xla::Literal`s on the way in and back on the way out.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones_f32(shape: &[usize]) -> HostTensor {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> anyhow::Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> anyhow::Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            _ => anyhow::bail!("tensor is not a f32 scalar"),
+        }
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == &spec.shape[..]
+    }
+
+    /// Convert to an xla literal.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let (bytes, ty, shape): (&[u8], xla::ElementType, &[usize]) =
+            match self {
+                HostTensor::F32 { shape, data } => (
+                    bytemuck_f32(data), xla::ElementType::F32, shape,
+                ),
+                HostTensor::I32 { shape, data } => (
+                    bytemuck_i32(data), xla::ElementType::S32, shape,
+                ),
+            };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, shape, bytes)?)
+    }
+
+    /// Convert back from an xla literal.
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data: Vec<f32> = lit.to_vec()?;
+                Ok(HostTensor::F32 { shape: dims, data })
+            }
+            xla::ElementType::S32 => {
+                let data: Vec<i32> = lit.to_vec()?;
+                Ok(HostTensor::I32 { shape: dims, data })
+            }
+            other => anyhow::bail!("unsupported literal type {other:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(xs: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8,
+                                   std::mem::size_of_val(xs))
+    }
+}
+
+fn bytemuck_i32(xs: &[i32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8,
+                                   std::mem::size_of_val(xs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = HostTensor::zeros_f32(&[2, 3]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.as_i32().is_err());
+        let s = HostTensor::scalar_f32(2.5);
+        assert_eq!(s.scalar().unwrap(), 2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let spec = TensorSpec {
+            name: "x".into(), shape: vec![2, 2], dtype: Dtype::I32,
+        };
+        assert!(HostTensor::from_i32(&[2, 2], vec![0; 4]).matches(&spec));
+        assert!(!HostTensor::zeros_f32(&[2, 2]).matches(&spec));
+        assert!(!HostTensor::from_i32(&[4], vec![0; 4]).matches(&spec));
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_round_trip_i32_scalar() {
+        let t = HostTensor::from_i32(&[], vec![7]);
+        let back =
+            HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7]);
+    }
+}

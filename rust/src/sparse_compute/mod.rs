@@ -1,0 +1,259 @@
+//! Sparse compute engine: CSR matrices + sparse/dense matmul kernels.
+//!
+//! This is the Appendix-C substrate: the paper shows *measured* speedup
+//! of a 12k×12k GPT-3-layer matmul on the Cerebras CS-2 versus the
+//! theoretical 1/(1-S) bound. Our hardware is a CPU, so we build the
+//! honest CPU analogue — a parallel CSR sparse-times-dense matmul — and
+//! measure its realized speedup against an equally-optimized dense
+//! kernel across the same sparsity sweep (`benches/appc_sparse_speedup`).
+
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+/// Compressed Sparse Row matrix (f32).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense row-major matrix, dropping exact zeros.
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize) -> Csr {
+        assert_eq!(dense.len(), rows * cols);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows, cols, row_ptr, col_idx, values }
+    }
+
+    /// Random matrix at the target sparsity (Bernoulli per element —
+    /// representative of an unstructured random mask).
+    pub fn random(rows: usize, cols: usize, sparsity: f64, rng: &mut Rng)
+                  -> Csr {
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for _ in 0..rows {
+            for c in 0..cols {
+                if !rng.bernoulli(sparsity) {
+                    col_idx.push(c as u32);
+                    values.push(rng.normal_f32(0.0, 1.0));
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows, cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                out[r * self.cols + self.col_idx[k] as usize] =
+                    self.values[k];
+            }
+        }
+        out
+    }
+
+    /// y = A x (sparse matrix-vector).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.values[k]
+                    * x[self.col_idx[k] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// C = A · B where B is dense (cols × n), row-parallel.
+    /// Inner loop is laid out for streaming access over B's rows.
+    pub fn spmm(&self, b: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(b.len(), self.cols * n);
+        let mut c = vec![0.0f32; self.rows * n];
+        let rows_per_chunk =
+            (self.rows / (4 * threads::worker_count())).max(8);
+        threads::parallel_chunks_mut(
+            &mut c,
+            rows_per_chunk * n,
+            |start_elem, chunk| {
+                let row0 = start_elem / n;
+                for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                    let r = row0 + ri;
+                    for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                        let v = self.values[k];
+                        let brow = &b[self.col_idx[k] as usize * n..]
+                            [..n];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += v * bv;
+                        }
+                    }
+                }
+            },
+        );
+        c
+    }
+}
+
+/// Equally-optimized dense baseline: row-parallel, k-major inner loop
+/// (same memory pattern as spmm with a fully-dense A).
+pub fn dense_matmul(
+    a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    let rows_per_chunk = (m / (4 * threads::worker_count())).max(8);
+    threads::parallel_chunks_mut(
+        &mut c,
+        rows_per_chunk * n,
+        |start_elem, chunk| {
+            let row0 = start_elem / n;
+            for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                let r = row0 + ri;
+                let arow = &a[r * k..(r + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue; // branch mirrors spmm's skip
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        },
+    );
+    c
+}
+
+/// Theoretical speedup of sparsity S over dense: 1 / (1 - S)
+/// (the dashed line in App. C Figure 1).
+pub fn theoretical_speedup(sparsity: f64) -> f64 {
+    1.0 / (1.0 - sparsity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+                 -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn close(a: &[f32], b: &[f32]) -> bool {
+        a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-3)
+    }
+
+    #[test]
+    fn csr_round_trip() {
+        let dense = vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0];
+        let csr = Csr::from_dense(&dense, 2, 3);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.to_dense(), dense);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Rng::new(0);
+        let csr = Csr::random(33, 17, 0.7, &mut rng);
+        let dense = csr.to_dense();
+        let x: Vec<f32> = (0..17).map(|i| (i as f32) * 0.1 - 0.5)
+            .collect();
+        let want = dense_ref(&dense, &x, 33, 17, 1);
+        assert!(close(&csr.spmv(&x), &want));
+    }
+
+    #[test]
+    fn spmm_matches_dense_ref_various_shapes() {
+        let mut rng = Rng::new(1);
+        for (m, k, n, s) in [(16, 16, 8, 0.5), (64, 48, 32, 0.75),
+                             (100, 37, 19, 0.9), (8, 8, 8, 0.0)] {
+            let csr = Csr::random(m, k, s, &mut rng);
+            let dense = csr.to_dense();
+            let b: Vec<f32> = (0..k * n)
+                .map(|i| ((i % 13) as f32) * 0.3 - 1.0)
+                .collect();
+            let want = dense_ref(&dense, &b, m, k, n);
+            assert!(close(&csr.spmm(&b, n), &want), "shape {m}x{k}x{n}");
+            assert!(close(&dense_matmul(&dense, &b, m, k, n), &want));
+        }
+    }
+
+    #[test]
+    fn random_density_tracks_target() {
+        let mut rng = Rng::new(2);
+        let csr = Csr::random(200, 200, 0.75, &mut rng);
+        assert!((csr.density() - 0.25).abs() < 0.02,
+                "density={}", csr.density());
+    }
+
+    #[test]
+    fn theoretical_speedup_values() {
+        assert_eq!(theoretical_speedup(0.5), 2.0);
+        assert_eq!(theoretical_speedup(0.75), 4.0);
+        assert!((theoretical_speedup(0.9983) - 588.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn property_spmm_equals_dense_on_random_inputs() {
+        crate::util::proptest::check(
+            3, 12, 48,
+            |rng: &mut Rng, size: usize| {
+                let m = 4 + rng.below(size.max(4));
+                let k = 4 + rng.below(size.max(4));
+                let n = 1 + rng.below(16);
+                let s = [0.0, 0.5, 0.9][rng.below(3)];
+                (m, k, n, s, rng.next_u64())
+            },
+            |&(m, k, n, s, seed)| {
+                let mut rng = Rng::new(seed);
+                let csr = Csr::random(m, k, s, &mut rng);
+                let dense = csr.to_dense();
+                let b: Vec<f32> = (0..k * n)
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect();
+                let want = dense_ref(&dense, &b, m, k, n);
+                close(&csr.spmm(&b, n), &want)
+            },
+        );
+    }
+}

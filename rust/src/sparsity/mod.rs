@@ -1,0 +1,341 @@
+//! Sparsity engine: static unstructured weight masks.
+//!
+//! The paper's method is the simplest possible one — *uniform random
+//! static sparsity*: every sparsifiable layer is pruned to the same
+//! target sparsity with a random mask fixed at initialization (§2.2).
+//! For the ablation benches we also implement Erdős–Rényi-Kernel (ERK)
+//! layer-wise ratios [Evci et al. 2020] and magnitude-based pruning at
+//! init, both cited by the paper as alternatives it deliberately skips.
+//!
+//! The **densify** transition (the D in SPDF) is an all-ones mask: the
+//! train_step artifact takes the mask as an input, so flipping phases
+//! never recompiles anything.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::ModelManifest;
+use crate::util::rng::Rng;
+
+/// How layer-wise sparsity ratios are assigned.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MaskScheme {
+    /// Every sparsified layer gets the same ratio (the paper's choice).
+    Uniform,
+    /// Erdős–Rényi-Kernel: layer ratio scaled by (fan_in + fan_out) /
+    /// (fan_in * fan_out), renormalized to hit the global target.
+    Erk,
+}
+
+/// A full set of per-parameter binary masks (f32 0/1, flat row-major).
+#[derive(Debug, Clone)]
+pub struct MaskSet {
+    pub scheme: MaskScheme,
+    pub target_sparsity: f64,
+    pub masks: BTreeMap<String, Vec<f32>>,
+}
+
+impl MaskSet {
+    /// All-ones masks: dense training / the densify transition.
+    pub fn dense(manifest: &ModelManifest) -> MaskSet {
+        let masks = manifest
+            .masked_params
+            .iter()
+            .map(|name| {
+                let spec = manifest.param(name).expect("masked param");
+                (name.clone(), vec![1.0; spec.elems()])
+            })
+            .collect();
+        MaskSet { scheme: MaskScheme::Uniform, target_sparsity: 0.0, masks }
+    }
+
+    /// Random mask at `sparsity` with the given scheme (paper: Uniform).
+    ///
+    /// Exact-count sampling per layer (not Bernoulli): the realized
+    /// sparsity matches the target to within one weight, like an actual
+    /// pruning implementation.
+    pub fn random(
+        manifest: &ModelManifest,
+        sparsity: f64,
+        scheme: MaskScheme,
+        rng: &mut Rng,
+    ) -> MaskSet {
+        assert!((0.0..1.0).contains(&sparsity), "sparsity in [0,1)");
+        let ratios = layer_ratios(manifest, sparsity, scheme);
+        let mut masks = BTreeMap::new();
+        for name in &manifest.masked_params {
+            let spec = manifest.param(name).expect("masked param");
+            let n = spec.elems();
+            let s = ratios[name];
+            let n_zero = (s * n as f64).round() as usize;
+            let mut mask = vec![1.0f32; n];
+            for idx in rng.sample_indices(n, n_zero.min(n)) {
+                mask[idx] = 0.0;
+            }
+            masks.insert(name.clone(), mask);
+        }
+        MaskSet { scheme, target_sparsity: sparsity, masks }
+    }
+
+    /// Magnitude pruning at init: keep the largest |w|, zero the rest.
+    /// (Ablation baseline; the paper uses random.)
+    pub fn magnitude(
+        manifest: &ModelManifest,
+        sparsity: f64,
+        params: &BTreeMap<String, Vec<f32>>,
+    ) -> MaskSet {
+        let mut masks = BTreeMap::new();
+        for name in &manifest.masked_params {
+            let w = &params[name];
+            let n = w.len();
+            let n_zero = (sparsity * n as f64).round() as usize;
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                w[a].abs().partial_cmp(&w[b].abs()).unwrap()
+            });
+            let mut mask = vec![1.0f32; n];
+            for &i in idx.iter().take(n_zero) {
+                mask[i] = 0.0;
+            }
+            masks.insert(name.clone(), mask);
+        }
+        MaskSet { scheme: MaskScheme::Uniform, target_sparsity: sparsity,
+                  masks }
+    }
+
+    /// Realized overall sparsity = zeros / total over masked params (the
+    /// paper's S = sum(s_l N_l) / N restricted to sparsifiable layers).
+    pub fn realized_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for m in self.masks.values() {
+            zeros += m.iter().filter(|&&x| x == 0.0).count();
+            total += m.len();
+        }
+        if total == 0 { 0.0 } else { zeros as f64 / total as f64 }
+    }
+
+    /// Per-layer realized sparsity (for the ERK tests + reports).
+    pub fn layer_sparsity(&self) -> BTreeMap<String, f64> {
+        self.masks
+            .iter()
+            .map(|(k, m)| {
+                let z = m.iter().filter(|&&x| x == 0.0).count();
+                (k.clone(), z as f64 / m.len() as f64)
+            })
+            .collect()
+    }
+
+    /// Apply: w <- mask * w (the sparsify step of the pipeline).
+    pub fn apply(&self, params: &mut BTreeMap<String, Vec<f32>>) {
+        for (name, mask) in &self.masks {
+            let w = params.get_mut(name).expect("param exists");
+            for (x, m) in w.iter_mut().zip(mask) {
+                *x *= m;
+            }
+        }
+    }
+
+    /// Check the invariant that masked positions are exactly zero.
+    pub fn check_holes_zero(
+        &self,
+        params: &BTreeMap<String, Vec<f32>>,
+    ) -> Result<(), String> {
+        for (name, mask) in &self.masks {
+            let w = &params[name];
+            for (i, (&x, &m)) in w.iter().zip(mask).enumerate() {
+                if m == 0.0 && x != 0.0 {
+                    return Err(format!(
+                        "{name}[{i}] = {x} but mask is 0"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-layer sparsity ratios for a global target.
+fn layer_ratios(
+    manifest: &ModelManifest,
+    target: f64,
+    scheme: MaskScheme,
+) -> BTreeMap<String, f64> {
+    match scheme {
+        MaskScheme::Uniform => manifest
+            .masked_params
+            .iter()
+            .map(|n| (n.clone(), target))
+            .collect(),
+        MaskScheme::Erk => {
+            // density_l ∝ (fan_in + fan_out) / (fan_in * fan_out),
+            // scaled so the global parameter-weighted density matches.
+            let mut raw = BTreeMap::new();
+            let mut total_params = 0.0;
+            for name in &manifest.masked_params {
+                let spec = manifest.param(name).unwrap();
+                let (fi, fo) = (spec.shape[0] as f64,
+                                spec.shape[1] as f64);
+                raw.insert(name.clone(), (fi + fo) / (fi * fo));
+                total_params += fi * fo;
+            }
+            let target_density = 1.0 - target;
+            // find scale c with sum_l min(1, c*raw_l) * n_l =
+            // target_density * total; bisection is robust to clipping.
+            let (mut lo, mut hi) = (0.0f64, 1e12f64);
+            for _ in 0..200 {
+                let c = 0.5 * (lo + hi);
+                let mut kept = 0.0;
+                for name in &manifest.masked_params {
+                    let spec = manifest.param(name).unwrap();
+                    let n = spec.elems() as f64;
+                    kept += (c * raw[name]).min(1.0) * n;
+                }
+                if kept < target_density * total_params {
+                    lo = c;
+                } else {
+                    hi = c;
+                }
+            }
+            let c = 0.5 * (lo + hi);
+            raw.iter()
+                .map(|(k, &r)| (k.clone(), 1.0 - (c * r).min(1.0)))
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ParamSpec};
+    use crate::config;
+
+    fn tiny_manifest() -> ModelManifest {
+        let params = vec![
+            ParamSpec { name: "wte".into(), shape: vec![64, 16],
+                        init: InitKind::Normal },
+            ParamSpec { name: "h0.attn.wq".into(), shape: vec![16, 16],
+                        init: InitKind::Normal },
+            ParamSpec { name: "h0.mlp.wi".into(), shape: vec![16, 64],
+                        init: InitKind::Normal },
+            ParamSpec { name: "h0.mlp.wo".into(), shape: vec![64, 16],
+                        init: InitKind::NormalResid },
+        ];
+        ModelManifest {
+            config: config::sim_nano(),
+            train_batch: 2,
+            eval_batch: 2,
+            decode_batch: 2,
+            params,
+            masked_params: vec!["h0.attn.wq".into(), "h0.mlp.wi".into(),
+                                "h0.mlp.wo".into()],
+            decay_params: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn uniform_hits_target_exactly() {
+        let m = tiny_manifest();
+        let mut rng = Rng::new(0);
+        for target in [0.5, 0.75, 0.9] {
+            let ms = MaskSet::random(&m, target, MaskScheme::Uniform,
+                                     &mut rng);
+            assert!((ms.realized_sparsity() - target).abs() < 2e-3,
+                    "target={target} got={}", ms.realized_sparsity());
+            for (_, s) in ms.layer_sparsity() {
+                assert!((s - target).abs() < 5e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_masks_are_all_ones() {
+        let m = tiny_manifest();
+        let ms = MaskSet::dense(&m);
+        assert_eq!(ms.realized_sparsity(), 0.0);
+        assert!(ms.masks.values().flatten().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn erk_meets_global_target_with_varied_layers() {
+        let m = tiny_manifest();
+        let mut rng = Rng::new(1);
+        let ms = MaskSet::random(&m, 0.75, MaskScheme::Erk, &mut rng);
+        assert!((ms.realized_sparsity() - 0.75).abs() < 0.01,
+                "got {}", ms.realized_sparsity());
+        // ERK gives squarer layers (wq 16x16) higher density than
+        // wider ones (wi 16x64)
+        let ls = ms.layer_sparsity();
+        assert!(ls["h0.attn.wq"] < ls["h0.mlp.wi"],
+                "{ls:?}");
+    }
+
+    #[test]
+    fn masks_are_deterministic_per_seed() {
+        let m = tiny_manifest();
+        let a = MaskSet::random(&m, 0.5, MaskScheme::Uniform,
+                                &mut Rng::new(7));
+        let b = MaskSet::random(&m, 0.5, MaskScheme::Uniform,
+                                &mut Rng::new(7));
+        assert_eq!(a.masks, b.masks);
+        let c = MaskSet::random(&m, 0.5, MaskScheme::Uniform,
+                                &mut Rng::new(8));
+        assert_ne!(a.masks, c.masks);
+    }
+
+    #[test]
+    fn apply_and_check_holes() {
+        let m = tiny_manifest();
+        let mut rng = Rng::new(3);
+        let ms = MaskSet::random(&m, 0.75, MaskScheme::Uniform, &mut rng);
+        let mut params: BTreeMap<String, Vec<f32>> = m
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), vec![0.5; p.elems()]))
+            .collect();
+        assert!(ms.check_holes_zero(&params).is_err());
+        ms.apply(&mut params);
+        ms.check_holes_zero(&params).unwrap();
+        // unmasked params untouched
+        assert!(params["wte"].iter().all(|&x| x == 0.5));
+    }
+
+    #[test]
+    fn magnitude_keeps_largest() {
+        let m = tiny_manifest();
+        let mut params: BTreeMap<String, Vec<f32>> = m
+            .params
+            .iter()
+            .map(|p| (p.name.clone(),
+                      (0..p.elems()).map(|i| i as f32).collect()))
+            .collect();
+        let ms = MaskSet::magnitude(&m, 0.5, &params);
+        // the smallest half by |w| (the first half here) is zeroed
+        let mask = &ms.masks["h0.attn.wq"];
+        let n = mask.len();
+        assert!(mask[..n / 2].iter().all(|&x| x == 0.0));
+        assert!(mask[n / 2..].iter().all(|&x| x == 1.0));
+        ms.apply(&mut params);
+        ms.check_holes_zero(&params).unwrap();
+    }
+
+    #[test]
+    fn property_random_masks_are_binary_and_sized() {
+        let m = tiny_manifest();
+        crate::util::proptest::check(
+            11, 30, 90,
+            |rng: &mut Rng, size: usize| {
+                let pct = (size % 90) as f64 / 100.0;
+                let seed = rng.next_u64();
+                (pct, seed)
+            },
+            |&(pct, seed)| {
+                let ms = MaskSet::random(&m, pct, MaskScheme::Uniform,
+                                         &mut Rng::new(seed));
+                ms.masks.values().flatten()
+                    .all(|&x| x == 0.0 || x == 1.0)
+                    && (ms.realized_sparsity() - pct).abs() < 0.01
+            },
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! Byte-level BPE tokenizer (trainable), the vocabulary substrate shared
+//! by pre-training and every downstream task.
+//!
+//! Layout: ids 0..4 are specials (PAD, BOS, EOS, SEP), 4..260 the raw
+//! bytes, and the rest learned merges — the GPT-2 scheme scaled to the
+//! simulation vocab (512). Words are whitespace-delimited with a leading
+//! space marker byte, like GPT-2's 'Ġ'.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const N_SPECIAL: u32 = 4;
+const BYTE_BASE: u32 = N_SPECIAL;
+/// Space marker prepended to each non-initial word (GPT-2 'Ġ').
+const SPACE: u8 = 0x20;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+    /// merge rules in training order: (left, right) -> new id
+    merges: Vec<(u32, u32)>,
+    /// lookup: pair -> (rank, merged id)
+    merge_map: HashMap<(u32, u32), (usize, u32)>,
+}
+
+impl Tokenizer {
+    /// Train BPE on a corpus to the target vocab size.
+    pub fn train(corpus: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > (BYTE_BASE + 256) as usize,
+                "vocab must exceed specials+bytes");
+        // word frequency table; each word is a Vec of current token ids
+        let mut word_freq: BTreeMap<Vec<u8>, u64> = BTreeMap::new();
+        for (i, w) in corpus.split_whitespace().enumerate() {
+            let mut bytes = Vec::with_capacity(w.len() + 1);
+            if i > 0 {
+                bytes.push(SPACE);
+            }
+            bytes.extend_from_slice(w.as_bytes());
+            *word_freq.entry(bytes).or_insert(0) += 1;
+        }
+        let mut words: Vec<(Vec<u32>, u64)> = word_freq
+            .into_iter()
+            .map(|(bytes, f)| {
+                (bytes.iter().map(|&b| BYTE_BASE + b as u32).collect(), f)
+            })
+            .collect();
+
+        let mut merges = Vec::new();
+        let mut next_id = BYTE_BASE + 256;
+        while (next_id as usize) < vocab_size {
+            // count all adjacent pairs
+            let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for (toks, f) in &words {
+                for win in toks.windows(2) {
+                    *counts.entry((win[0], win[1])).or_insert(0) += f;
+                }
+            }
+            // deterministic argmax: highest count, then lowest pair ids
+            let best = counts.iter().max_by_key(|(&(a, b), &c)| {
+                (c, std::cmp::Reverse(a), std::cmp::Reverse(b))
+            });
+            let (&pair, &count) = match best {
+                Some(kv) => kv,
+                None => break,
+            };
+            if count < 2 {
+                break; // no productive merges left
+            }
+            merges.push(pair);
+            for (toks, _) in &mut words {
+                merge_in_place(toks, pair, next_id);
+            }
+            next_id += 1;
+        }
+        Tokenizer::from_merges(vocab_size, merges)
+    }
+
+    pub fn from_merges(vocab_size: usize, merges: Vec<(u32, u32)>)
+                       -> Tokenizer {
+        let merge_map = merges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(a, b))| {
+                ((a, b), (rank, BYTE_BASE + 256 + rank as u32))
+            })
+            .collect();
+        Tokenizer { vocab_size, merges, merge_map }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text to token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (i, w) in text.split_whitespace().enumerate() {
+            let mut toks: Vec<u32> = Vec::with_capacity(w.len() + 1);
+            if i > 0 {
+                toks.push(BYTE_BASE + SPACE as u32);
+            }
+            toks.extend(w.as_bytes().iter()
+                        .map(|&b| BYTE_BASE + b as u32));
+            // repeatedly apply the lowest-rank applicable merge
+            loop {
+                let mut best: Option<(usize, usize, u32)> = None; // (rank, pos, id)
+                for (pos, win) in toks.windows(2).enumerate() {
+                    if let Some(&(rank, id)) =
+                        self.merge_map.get(&(win[0], win[1]))
+                    {
+                        if best.map_or(true, |(br, _, _)| rank < br) {
+                            best = Some((rank, pos, id));
+                        }
+                    }
+                }
+                match best {
+                    Some((_, pos, id)) => {
+                        toks[pos] = id;
+                        toks.remove(pos + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(toks);
+        }
+        out
+    }
+
+    /// Decode ids back to text (specials are dropped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        s.trim_start().to_string()
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id < N_SPECIAL {
+            return;
+        }
+        if id < BYTE_BASE + 256 {
+            out.push((id - BYTE_BASE) as u8);
+            return;
+        }
+        let (a, b) = self.merges[(id - BYTE_BASE - 256) as usize];
+        self.push_bytes(a, out);
+        self.push_bytes(b, out);
+    }
+
+    // ---- persistence ---------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("vocab_size", Json::Num(self.vocab_size as f64));
+        o.push("merges", Json::Arr(
+            self.merges.iter()
+                .map(|&(a, b)| Json::Arr(vec![
+                    Json::Num(a as f64), Json::Num(b as f64)]))
+                .collect()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Tokenizer> {
+        let vocab_size = j.req("vocab_size")?.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("vocab_size"))?;
+        let merges = j.req("merges")?.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("merges"))?
+            .iter()
+            .map(|p| {
+                let a = p.as_arr().unwrap();
+                (a[0].as_usize().unwrap() as u32,
+                 a[1].as_usize().unwrap() as u32)
+            })
+            .collect();
+        Ok(Tokenizer::from_merges(vocab_size, merges))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Tokenizer> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("tokenizer json: {e}"))?;
+        Tokenizer::from_json(&j)
+    }
+}
+
+fn merge_in_place(toks: &mut Vec<u32>, pair: (u32, u32), id: u32) {
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if toks[i] == pair.0 && toks[i + 1] == pair.1 {
+            toks[i] = id;
+            toks.remove(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the cat sat on the mat . the dog sat on the \
+        log . the cat and the dog sat together on the mat near the log .";
+
+    #[test]
+    fn round_trip_exact() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        for text in [
+            "the cat sat",
+            "a dog on the mat",
+            "unseen words tokenize too",
+            "punctuation , and . marks",
+        ] {
+            assert_eq!(tok.decode(&tok.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn merges_compress_frequent_words() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        assert!(tok.n_merges() > 0);
+        // "the" is the most frequent word: must encode shorter than bytes
+        let ids = tok.encode("the the the");
+        assert!(ids.len() < 9, "ids={ids:?}");
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        for id in tok.encode("the quick brown fox . zzz") {
+            assert!((id as usize) < 300);
+        }
+    }
+
+    #[test]
+    fn unseen_bytes_fall_back_to_byte_tokens() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        let ids = tok.encode("héllo");
+        assert_eq!(tok.decode(&ids), "héllo");
+    }
+
+    #[test]
+    fn specials_are_skipped_in_decode() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        let mut ids = vec![BOS];
+        ids.extend(tok.encode("the cat"));
+        ids.push(EOS);
+        ids.push(PAD);
+        assert_eq!(tok.decode(&ids), "the cat");
+    }
+
+    #[test]
+    fn json_round_trip_preserves_encoding() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        let tok2 = Tokenizer::from_json(&tok.to_json()).unwrap();
+        let text = "the dog sat on the mat";
+        assert_eq!(tok.encode(text), tok2.encode(text));
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Tokenizer::train(CORPUS, 290);
+        let b = Tokenizer::train(CORPUS, 290);
+        assert_eq!(a.encode("the cat sat"), b.encode("the cat sat"));
+    }
+
+    #[test]
+    fn property_round_trip_ascii() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        crate::util::proptest::check(
+            5, 40, 30,
+            |rng: &mut crate::util::rng::Rng, size: usize| {
+                let words = ["the", "cat", "dog", "xyzzy", "42", ".,!"];
+                (0..1 + rng.below(size))
+                    .map(|_| *rng.choice(&words))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            },
+            |text| tok.decode(&tok.encode(text)) == *text,
+        );
+    }
+}

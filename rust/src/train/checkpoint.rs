@@ -1,0 +1,183 @@
+//! Checkpoint store: params + optimizer moments + masks in a simple
+//! self-describing binary format (JSON header + raw f32 LE blob).
+//!
+//! Format:
+//!   8 bytes magic  "SPDFCKP1"
+//!   8 bytes u64 LE header length H
+//!   H bytes JSON header { step, sparsity, tensors: [{name, kind,
+//!                         shape, offset, len}] }
+//!   raw little-endian f32 data
+//!
+//! Small enough to fully load, explicit enough to survive refactors.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::sparsity::{MaskScheme, MaskSet};
+use crate::train::state::TrainState;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"SPDFCKP1";
+
+pub fn save(state: &TrainState, path: &Path) -> anyhow::Result<()> {
+    let mut tensors = Vec::new(); // (name, kind, shape-less len, data ref)
+    let mut blob: Vec<f32> = Vec::new();
+    let entry = |name: &str, kind: &str, data: &[f32],
+                     tensors: &mut Vec<Json>, blob: &mut Vec<f32>| {
+        let mut o = Json::obj();
+        o.push("name", Json::Str(name.to_string()))
+            .push("kind", Json::Str(kind.to_string()))
+            .push("offset", Json::Num(blob.len() as f64))
+            .push("len", Json::Num(data.len() as f64));
+        tensors.push(o);
+        blob.extend_from_slice(data);
+    };
+    for (name, data) in &state.params {
+        entry(name, "param", data, &mut tensors, &mut blob);
+    }
+    for (name, data) in &state.opt_m {
+        entry(name, "m", data, &mut tensors, &mut blob);
+    }
+    for (name, data) in &state.opt_v {
+        entry(name, "v", data, &mut tensors, &mut blob);
+    }
+    for (name, data) in &state.masks.masks {
+        entry(name, "mask", data, &mut tensors, &mut blob);
+    }
+
+    let mut header = Json::obj();
+    header.push("step", Json::Num(state.step as f64))
+        .push("target_sparsity",
+              Json::Num(state.masks.target_sparsity))
+        .push("tensors", Json::Arr(tensors));
+    let header_bytes = header.to_string().into_bytes();
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+    f.write_all(&header_bytes)?;
+    let bytes = unsafe {
+        std::slice::from_raw_parts(blob.as_ptr() as *const u8,
+                                   blob.len() * 4)
+    };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> anyhow::Result<TrainState> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a SPDF checkpoint: {path:?}");
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    anyhow::ensure!(raw.len() % 4 == 0, "truncated checkpoint blob");
+    let blob: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut params = BTreeMap::new();
+    let mut opt_m = BTreeMap::new();
+    let mut opt_v = BTreeMap::new();
+    let mut masks = BTreeMap::new();
+    for t in header.req("tensors")?.as_arr().unwrap() {
+        let name = t.req("name")?.as_str().unwrap().to_string();
+        let kind = t.req("kind")?.as_str().unwrap();
+        let off = t.req("offset")?.as_usize().unwrap();
+        let len = t.req("len")?.as_usize().unwrap();
+        anyhow::ensure!(off + len <= blob.len(),
+                        "tensor {name} out of bounds");
+        let data = blob[off..off + len].to_vec();
+        match kind {
+            "param" => params.insert(name, data),
+            "m" => opt_m.insert(name, data),
+            "v" => opt_v.insert(name, data),
+            "mask" => masks.insert(name, data),
+            other => anyhow::bail!("unknown tensor kind {other}"),
+        };
+    }
+    let target = header.req("target_sparsity")?.as_f64().unwrap_or(0.0);
+    let step = header.req("step")?.as_usize().unwrap_or(0) as u64;
+    Ok(TrainState {
+        params,
+        opt_m,
+        opt_v,
+        masks: MaskSet {
+            scheme: MaskScheme::Uniform,
+            target_sparsity: target,
+            masks,
+        },
+        step,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InitKind, ModelManifest, ParamSpec};
+    use crate::sparsity::MaskScheme;
+    use crate::util::rng::Rng;
+    use crate::config;
+
+    fn tiny_manifest() -> ModelManifest {
+        ModelManifest {
+            config: config::sim_nano(),
+            train_batch: 2,
+            eval_batch: 2,
+            decode_batch: 2,
+            params: vec![
+                ParamSpec { name: "wte".into(), shape: vec![8, 4],
+                            init: InitKind::Normal },
+                ParamSpec { name: "h0.attn.wq".into(), shape: vec![4, 4],
+                            init: InitKind::Normal },
+            ],
+            masked_params: vec!["h0.attn.wq".into()],
+            decay_params: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let m = tiny_manifest();
+        let mut st = TrainState::init(&m, &mut Rng::new(0));
+        st.sparsify(MaskSet::random(&m, 0.5, MaskScheme::Uniform,
+                                    &mut Rng::new(1)));
+        st.step = 42;
+        st.opt_m.get_mut("wte").unwrap()[0] = 3.25;
+
+        let dir = std::env::temp_dir().join("spdf-ckpt-test");
+        let path = dir.join("test.ckpt");
+        save(&st, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.params, st.params);
+        assert_eq!(loaded.opt_m, st.opt_m);
+        assert_eq!(loaded.opt_v, st.opt_v);
+        assert_eq!(loaded.masks.masks, st.masks.masks);
+        assert_eq!(loaded.masks.target_sparsity, 0.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("spdf-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Training: state management, LR schedules, the step driver, and
+//! checkpointing.
+
+pub mod checkpoint;
+pub mod schedule;
+pub mod session;
+pub mod state;
+
+pub use schedule::Schedule;
+pub use session::{evaluate_loss, perplexity, StepLog, Trainer};
+pub use state::{ParamMap, TrainState};

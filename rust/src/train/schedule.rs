@@ -1,0 +1,102 @@
+//! Learning-rate schedules (paper App. A.1/A.2): linear warmup + cosine
+//! decay to 10% of peak for pre-training; linear decay for fine-tuning.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// warmup over `warmup` steps then cosine decay to `floor_frac *
+    /// peak` at `total` steps (pre-training; paper: warmup over the
+    /// first 375M tokens, decay to 10%).
+    WarmupCosine { peak: f32, warmup: u64, total: u64, floor_frac: f32 },
+    /// Linear from `peak` to 0 over `total` steps (fine-tuning, follows
+    /// Hu et al. 2022).
+    Linear { peak: f32, total: u64 },
+    /// Constant (ablations / debugging).
+    Constant { peak: f32 },
+}
+
+impl Schedule {
+    /// LR at a 1-based step.
+    pub fn lr(&self, step: u64) -> f32 {
+        match *self {
+            Schedule::Constant { peak } => peak,
+            Schedule::Linear { peak, total } => {
+                let t = (step.min(total)) as f32 / total.max(1) as f32;
+                peak * (1.0 - t).max(0.0)
+            }
+            Schedule::WarmupCosine { peak, warmup, total, floor_frac } => {
+                if step <= warmup && warmup > 0 {
+                    return peak * step as f32 / warmup as f32;
+                }
+                let floor = floor_frac * peak;
+                if step >= total {
+                    return floor;
+                }
+                let t = (step - warmup) as f32
+                    / (total - warmup).max(1) as f32;
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                floor + (peak - floor) * cos
+            }
+        }
+    }
+
+    /// The paper's pre-training schedule for a given step budget:
+    /// warmup over the leading ~15% (stand-in for 375M tokens at this
+    /// scale), cosine to 10% of peak.
+    pub fn pretrain(peak: f32, total: u64) -> Schedule {
+        Schedule::WarmupCosine {
+            peak,
+            warmup: (total / 7).max(1),
+            total,
+            floor_frac: 0.1,
+        }
+    }
+
+    pub fn finetune(peak: f32, total: u64) -> Schedule {
+        Schedule::Linear { peak, total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::WarmupCosine {
+            peak: 1.0, warmup: 10, total: 100, floor_frac: 0.1,
+        };
+        assert!((s.lr(5) - 0.5).abs() < 1e-6);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::WarmupCosine {
+            peak: 2.0, warmup: 10, total: 100, floor_frac: 0.1,
+        };
+        assert!((s.lr(100) - 0.2).abs() < 1e-6);
+        assert!((s.lr(1000) - 0.2).abs() < 1e-6);
+        // midpoint between peak and floor at half decay
+        let mid = s.lr(55);
+        assert!((mid - 1.1).abs() < 0.02, "mid={mid}");
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = Schedule::pretrain(6e-4, 1000);
+        let mut prev = f32::MAX;
+        for step in (150..1000).step_by(50) {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn linear_hits_zero() {
+        let s = Schedule::finetune(1e-4, 200);
+        assert!(s.lr(200) == 0.0);
+        assert!((s.lr(100) - 0.5e-4).abs() < 1e-9);
+        assert!(s.lr(1) > 0.0);
+    }
+}

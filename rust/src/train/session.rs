@@ -1,0 +1,194 @@
+//! The training driver: feeds batches through the `train_step` artifact,
+//! tracks loss, runs evaluation through `eval_loss`.
+
+use crate::data::Batch;
+use crate::runtime::{HostTensor, ModelRuntime};
+use crate::train::schedule::Schedule;
+use crate::train::state::TrainState;
+
+/// Per-step record for loss-curve logging.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: u64,
+    pub lr: f32,
+    pub loss: f32,
+    pub wall_ms: f64,
+}
+
+/// Literal-resident training state (§Perf L3): between steps the
+/// params/moments live as the XLA literals returned by the previous
+/// step, so the hot loop never copies them through `Vec<f32>`. Masks
+/// are uploaded once per phase. Host materialization happens only on
+/// `sync()` (evaluate / checkpoint / end of phase).
+struct LitCache {
+    /// 3P literals: params, then m, then v (flatten order each)
+    state: Vec<xla::Literal>,
+    /// mask literals (sorted name order), fixed for the phase
+    masks: Vec<xla::Literal>,
+}
+
+pub struct Trainer<'a> {
+    pub runtime: &'a ModelRuntime,
+    pub state: TrainState,
+    pub schedule: Schedule,
+    pub history: Vec<StepLog>,
+    lits: Option<LitCache>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(runtime: &'a ModelRuntime, state: TrainState,
+               schedule: Schedule) -> Trainer<'a> {
+        Trainer { runtime, state, schedule, history: Vec::new(),
+                  lits: None }
+    }
+
+    fn ensure_lits(&mut self) -> anyhow::Result<()> {
+        if self.lits.is_some() {
+            return Ok(());
+        }
+        let mm = &self.runtime.manifest;
+        let mut state = Vec::new();
+        for t in self.state.param_tensors(mm) {
+            state.push(t.to_literal()?);
+        }
+        let (m, v) = self.state.opt_tensors(mm);
+        for t in m.into_iter().chain(v) {
+            state.push(t.to_literal()?);
+        }
+        let masks = self.state.mask_tensors(mm)
+            .into_iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        self.lits = Some(LitCache { state, masks });
+        Ok(())
+    }
+
+    /// Materialize the literal-resident state back into `self.state`
+    /// (no-op when the fast path hasn't run).
+    pub fn sync(&mut self) -> anyhow::Result<()> {
+        let Some(lits) = &self.lits else { return Ok(()) };
+        let mm = &self.runtime.manifest;
+        let order = mm.param_flatten_order();
+        let p = order.len();
+        for (i, name) in order.iter().enumerate() {
+            self.state.params.insert(
+                name.clone(), lits.state[i].to_vec::<f32>()?);
+            self.state.opt_m.insert(
+                name.clone(), lits.state[p + i].to_vec::<f32>()?);
+            self.state.opt_v.insert(
+                name.clone(), lits.state[2 * p + i].to_vec::<f32>()?);
+        }
+        Ok(())
+    }
+
+    /// Consume the trainer, returning the fully materialized state.
+    pub fn into_state(mut self) -> anyhow::Result<TrainState> {
+        self.sync()?;
+        Ok(self.state)
+    }
+
+    /// One optimizer step on a batch; returns the batch loss.
+    ///
+    /// Hot path: inputs are the cached state literals + fresh batch
+    /// literals; outputs replace the cached literals wholesale.
+    pub fn step(&mut self, batch: &Batch) -> anyhow::Result<f32> {
+        let t0 = std::time::Instant::now();
+        self.ensure_lits()?;
+        let exe = self.runtime.artifact("train_step")?;
+        let step_num = self.state.step + 1;
+        let lr = self.schedule.lr(step_num);
+
+        let [tok, tgt, lmask] = batch.tensors();
+        let tok_l = tok.to_literal()?;
+        let tgt_l = tgt.to_literal()?;
+        let lmask_l = lmask.to_literal()?;
+        let step_l = HostTensor::scalar_f32(step_num as f32)
+            .to_literal()?;
+        let lr_l = HostTensor::scalar_f32(lr).to_literal()?;
+
+        let lits = self.lits.as_ref().unwrap();
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(lits.state.len() + lits.masks.len() + 5);
+        inputs.extend(lits.state.iter());
+        inputs.extend(lits.masks.iter());
+        inputs.push(&tok_l);
+        inputs.push(&tgt_l);
+        inputs.push(&lmask_l);
+        inputs.push(&step_l);
+        inputs.push(&lr_l);
+
+        let mut outputs = exe.run_raw(&inputs)?;
+        let p3 = lits.state.len();
+        anyhow::ensure!(outputs.len() == p3 + 1,
+                        "train_step returned {} outputs, want {}",
+                        outputs.len(), p3 + 1);
+        let loss_lit = outputs.pop().unwrap();
+        let loss: f32 = loss_lit.get_first_element()?;
+        self.lits.as_mut().unwrap().state = outputs;
+        self.state.step += 1;
+
+        self.history.push(StepLog {
+            step: step_num,
+            lr,
+            loss,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(loss)
+    }
+
+    /// Mean loss-per-token over batches via the eval_loss artifact
+    /// (exact: sum of CE / sum of mask). Syncs the literal state first.
+    pub fn evaluate(&mut self, batches: &[Batch]) -> anyhow::Result<f64> {
+        self.sync()?;
+        evaluate_loss(self.runtime, &self.state, batches)
+    }
+
+    /// Trailing mean train loss over the last `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|s| s.loss as f64).sum::<f64>()
+            / tail.len() as f64
+    }
+}
+
+/// Standalone eval (used by the coordinator after training too).
+pub fn evaluate_loss(
+    runtime: &ModelRuntime,
+    state: &TrainState,
+    batches: &[Batch],
+) -> anyhow::Result<f64> {
+    let mm = &runtime.manifest;
+    let exe = runtime.artifact("eval_loss")?;
+    let params = state.param_tensors(mm);
+    let mut total = 0.0f64;
+    let mut count = 0.0f64;
+    for batch in batches {
+        let mut inputs = params.clone();
+        let [tok, tgt, lmask] = batch.tensors();
+        inputs.push(tok);
+        inputs.push(tgt);
+        inputs.push(lmask);
+        let out = exe.run(&inputs)?;
+        total += out[0].scalar()? as f64;
+        count += out[1].scalar()? as f64;
+    }
+    anyhow::ensure!(count > 0.0, "eval batches carried no loss tokens");
+    Ok(total / count)
+}
+
+/// Perplexity from a mean CE loss.
+pub fn perplexity(mean_loss: f64) -> f64 {
+    mean_loss.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn perplexity_of_zero_loss_is_one() {
+        assert_eq!(super::perplexity(0.0), 1.0);
+        assert!((super::perplexity(2.0) - 7.389).abs() < 0.01);
+    }
+}

@@ -1,0 +1,260 @@
+//! Training state: parameters + AdamW moments + the active mask set.
+//!
+//! Parameters are initialized in rust from the manifest's init spec
+//! (matching the python reference initializer's distributions), so the
+//! full SPDF pipeline — init → sparsify → pre-train → densify →
+//! fine-tune — runs without python.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::{HostTensor, InitKind, ModelManifest};
+use crate::sparsity::MaskSet;
+use crate::util::rng::Rng;
+
+pub type ParamMap = BTreeMap<String, Vec<f32>>;
+
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: ParamMap,
+    pub opt_m: ParamMap,
+    pub opt_v: ParamMap,
+    pub masks: MaskSet,
+    /// 1-based AdamW timestep (bias correction).
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Fresh init (GPT-2 style: normal(0, 0.02), residual projections
+    /// scaled by 1/sqrt(2L), zeros/ones for biases/LayerNorm).
+    pub fn init(manifest: &ModelManifest, rng: &mut Rng) -> TrainState {
+        let n_layers = manifest.config.n_layers as f32;
+        let mut params = ParamMap::new();
+        for spec in &manifest.params {
+            let n = spec.elems();
+            let data = match spec.init {
+                InitKind::Zeros => vec![0.0; n],
+                InitKind::Ones => vec![1.0; n],
+                InitKind::Normal => {
+                    (0..n).map(|_| rng.normal_f32(0.0, 0.02)).collect()
+                }
+                InitKind::NormalResid => {
+                    let std = 0.02 / (2.0 * n_layers).sqrt();
+                    (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+                }
+            };
+            params.insert(spec.name.clone(), data);
+        }
+        let zeros: ParamMap = manifest
+            .params
+            .iter()
+            .map(|s| (s.name.clone(), vec![0.0; s.elems()]))
+            .collect();
+        TrainState {
+            params,
+            opt_m: zeros.clone(),
+            opt_v: zeros,
+            masks: MaskSet::dense(manifest),
+            step: 0,
+        }
+    }
+
+    /// Install a mask set and apply it to the weights (sparsify step).
+    pub fn sparsify(&mut self, masks: MaskSet) {
+        masks.apply(&mut self.params);
+        masks.apply(&mut self.opt_m);
+        masks.apply(&mut self.opt_v);
+        self.masks = masks;
+    }
+
+    /// The densify transition (the "D" in SPDF): drop the mask, keep the
+    /// weights — revived weights start at exactly 0 (paper §2.2) because
+    /// sparse pre-training kept them zero. Optimizer moments reset for
+    /// the new task, matching a fresh fine-tuning optimizer.
+    pub fn densify(&mut self, manifest: &ModelManifest) {
+        self.masks = MaskSet::dense(manifest);
+        for v in self.opt_m.values_mut() {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in self.opt_v.values_mut() {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.step = 0;
+    }
+
+    /// Reset the optimizer for a new phase but keep the current masks
+    /// (the sparse fine-tuning baseline of Figure 2).
+    pub fn reset_optimizer(&mut self) {
+        for v in self.opt_m.values_mut() {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in self.opt_v.values_mut() {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.step = 0;
+    }
+
+    /// Flat tensors for the leading inputs of an artifact: params (then
+    /// m, v, masks as requested) in jax flatten (sorted-name) order.
+    pub fn param_tensors(&self, manifest: &ModelManifest)
+                         -> Vec<HostTensor> {
+        self.map_tensors(manifest, &self.params)
+    }
+
+    pub fn opt_tensors(&self, manifest: &ModelManifest)
+                       -> (Vec<HostTensor>, Vec<HostTensor>) {
+        (self.map_tensors(manifest, &self.opt_m),
+         self.map_tensors(manifest, &self.opt_v))
+    }
+
+    pub fn mask_tensors(&self, manifest: &ModelManifest)
+                        -> Vec<HostTensor> {
+        let mut names: Vec<&String> =
+            self.masks.masks.keys().collect();
+        names.sort();
+        names
+            .into_iter()
+            .map(|n| {
+                let spec = manifest.param(n).expect("mask param");
+                HostTensor::from_f32(&spec.shape,
+                                     self.masks.masks[n].clone())
+            })
+            .collect()
+    }
+
+    fn map_tensors(&self, manifest: &ModelManifest, map: &ParamMap)
+                   -> Vec<HostTensor> {
+        manifest
+            .param_flatten_order()
+            .iter()
+            .map(|n| {
+                let spec = manifest.param(n).expect("param spec");
+                HostTensor::from_f32(&spec.shape, map[n].clone())
+            })
+            .collect()
+    }
+
+    /// Write back updated params/moments from train_step outputs.
+    pub fn absorb_step_outputs(
+        &mut self,
+        manifest: &ModelManifest,
+        outputs: &[HostTensor],
+    ) -> anyhow::Result<f32> {
+        let order = manifest.param_flatten_order();
+        let p = order.len();
+        anyhow::ensure!(outputs.len() == 3 * p + 1,
+                        "train_step returned {} outputs, want {}",
+                        outputs.len(), 3 * p + 1);
+        for (i, name) in order.iter().enumerate() {
+            self.params.insert(name.clone(),
+                               outputs[i].as_f32()?.to_vec());
+            self.opt_m.insert(name.clone(),
+                              outputs[p + i].as_f32()?.to_vec());
+            self.opt_v.insert(name.clone(),
+                              outputs[2 * p + i].as_f32()?.to_vec());
+        }
+        self.step += 1;
+        outputs[3 * p].scalar()
+    }
+
+    /// L2 norm of all parameters (training health metric).
+    pub fn param_norm(&self) -> f64 {
+        self.params
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+    use crate::sparsity::MaskScheme;
+    use crate::config;
+
+    fn tiny_manifest() -> ModelManifest {
+        ModelManifest {
+            config: config::sim_nano(),
+            train_batch: 2,
+            eval_batch: 2,
+            decode_batch: 2,
+            params: vec![
+                ParamSpec { name: "wte".into(), shape: vec![8, 4],
+                            init: InitKind::Normal },
+                ParamSpec { name: "h0.attn.wq".into(), shape: vec![4, 4],
+                            init: InitKind::Normal },
+                ParamSpec { name: "h0.ln1.g".into(), shape: vec![4],
+                            init: InitKind::Ones },
+                ParamSpec { name: "h0.ln1.b".into(), shape: vec![4],
+                            init: InitKind::Zeros },
+            ],
+            masked_params: vec!["h0.attn.wq".into()],
+            decay_params: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let m = tiny_manifest();
+        let st = TrainState::init(&m, &mut Rng::new(0));
+        assert!(st.params["h0.ln1.g"].iter().all(|&x| x == 1.0));
+        assert!(st.params["h0.ln1.b"].iter().all(|&x| x == 0.0));
+        assert!(st.params["wte"].iter().any(|&x| x != 0.0));
+        // std roughly 0.02
+        let wte = &st.params["wte"];
+        let var: f32 = wte.iter().map(|x| x * x).sum::<f32>()
+            / wte.len() as f32;
+        assert!(var.sqrt() < 0.08);
+    }
+
+    #[test]
+    fn sparsify_then_densify_keeps_surviving_weights() {
+        let m = tiny_manifest();
+        let mut st = TrainState::init(&m, &mut Rng::new(1));
+        let masks = MaskSet::random(&m, 0.5, MaskScheme::Uniform,
+                                    &mut Rng::new(2));
+        st.sparsify(masks.clone());
+        masks.check_holes_zero(&st.params).unwrap();
+        let frozen = st.params["h0.attn.wq"].clone();
+        st.densify(&m);
+        assert_eq!(st.params["h0.attn.wq"], frozen);
+        assert_eq!(st.masks.realized_sparsity(), 0.0);
+        assert_eq!(st.step, 0);
+    }
+
+    #[test]
+    fn tensor_order_is_sorted_names() {
+        let m = tiny_manifest();
+        let st = TrainState::init(&m, &mut Rng::new(0));
+        let ts = st.param_tensors(&m);
+        assert_eq!(ts.len(), 4);
+        // sorted: h0.attn.wq, h0.ln1.b, h0.ln1.g, wte
+        assert_eq!(ts[0].shape(), &[4, 4]);
+        assert_eq!(ts[3].shape(), &[8, 4]);
+    }
+
+    #[test]
+    fn absorb_outputs_round_trip() {
+        let m = tiny_manifest();
+        let mut st = TrainState::init(&m, &mut Rng::new(0));
+        let order = m.param_flatten_order();
+        let mut outs = Vec::new();
+        for mult in [2.0f32, 3.0, 4.0] {
+            for n in &order {
+                let spec = m.param(n).unwrap();
+                outs.push(HostTensor::from_f32(
+                    &spec.shape, vec![mult; spec.elems()]));
+            }
+        }
+        outs.push(HostTensor::scalar_f32(1.25));
+        let loss = st.absorb_step_outputs(&m, &outs).unwrap();
+        assert_eq!(loss, 1.25);
+        assert!(st.params["wte"].iter().all(|&x| x == 2.0));
+        assert!(st.opt_m["wte"].iter().all(|&x| x == 3.0));
+        assert!(st.opt_v["wte"].iter().all(|&x| x == 4.0));
+        assert_eq!(st.step, 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Declarative CLI flag parser (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, and generates usage text. Each binary declares its flags up
+//! front; unknown flags are hard errors so typos don't silently run the
+//! wrong experiment.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Cli {
+        Cli { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str,
+                help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name, help, default: Some(default), takes_value: true,
+        });
+        self
+    }
+
+    pub fn flag_req(mut self, name: &'static str, help: &'static str)
+                    -> Self {
+        self.flags.push(FlagSpec {
+            name, help, default: None, takes_value: true,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str)
+                  -> Self {
+        self.flags.push(FlagSpec {
+            name, help, default: None, takes_value: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let v = if f.takes_value { "=<v>" } else { "" };
+            let d = f.default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{v:<8} {}{d}\n", f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (excluding argv[0]).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self.flags.iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next()
+                            .ok_or_else(|| anyhow::anyhow!(
+                                "--{name} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    args.bools.insert(name, true);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        // defaults
+        for f in &self.flags {
+            if f.takes_value && !args.values.contains_key(f.name) {
+                if let Some(d) = f.default {
+                    args.values.insert(f.name.to_string(), d.to_string());
+                } else {
+                    anyhow::bail!("missing required flag --{}\n\n{}",
+                                  f.name, self.usage());
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args() (skipping the binary name).
+    pub fn parse_env(&self) -> anyhow::Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&raw)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| {
+            panic!("flag --{name} not declared");
+        })
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name).parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name).parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name).parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be a number"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> anyhow::Result<f32> {
+        Ok(self.get_f64(name)? as f32)
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name).split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("model", "gpt-nano", "model name")
+            .flag("steps", "100", "steps")
+            .flag_req("out", "output path")
+            .switch("verbose", "log more")
+    }
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&s(&["--out", "/tmp/x", "--steps=250"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "gpt-nano");
+        assert_eq!(a.get_usize("steps").unwrap(), 250);
+        assert_eq!(a.get("out"), "/tmp/x");
+        assert!(!a.is_set("verbose"));
+    }
+
+    #[test]
+    fn switch_and_positional() {
+        let a = cli()
+            .parse(&s(&["--out=o", "--verbose", "pos1", "pos2"]))
+            .unwrap();
+        assert!(a.is_set("verbose"));
+        assert_eq!(a.positional, s(&["pos1", "pos2"]));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse(&s(&["--model", "x"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(cli().parse(&s(&["--out=o", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = cli().parse(&s(&["--out=o", "--model", "a, b,c"]))
+            .unwrap();
+        assert_eq!(a.get_list("model"), s(&["a", "b", "c"]));
+    }
+}

@@ -1,0 +1,52 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, RNG, CLI parsing, statistics, thread pool and a tiny
+//! property-testing driver (DESIGN.md §2 "Offline-environment
+//! substitutions").
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+
+use std::time::Instant;
+
+/// Wall-clock timer for coarse phase logging.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Human-readable FLOP counts (paper tables use x10^18 "exaFLOPs").
+pub fn fmt_flops(x: f64) -> String {
+    if x >= 1e18 {
+        format!("{:.2}e18", x / 1e18)
+    } else if x >= 1e12 {
+        format!("{:.2}e12", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.2}e9", x / 1e9)
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt_flops_scales() {
+        assert_eq!(super::fmt_flops(2.48e18), "2.48e18");
+        assert_eq!(super::fmt_flops(1.99e12), "1.99e12");
+    }
+}

@@ -1,0 +1,98 @@
+//! Tiny property-testing driver (no `proptest` crate offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs a simple
+//! halving-shrink over the generator's size parameter and reports the
+//! smallest failing case's debug form. Used by the L3 invariant tests
+//! (routing/batching/sparsity/metrics).
+
+use super::rng::Rng;
+
+/// A generator draws a value of size <= `size` from the rng.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Rng, size: usize) -> T;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen<T> for F {
+    fn gen(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the smallest
+/// failing input found (by shrinking the size parameter).
+pub fn check<T: std::fmt::Debug, G: Gen<T>>(
+    seed: u64,
+    cases: usize,
+    max_size: usize,
+    gen: G,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        // ramp the size up over the run like proptest does
+        let size = 1 + (max_size - 1) * case / cases.max(1);
+        let input = gen.gen(&mut rng, size.max(1));
+        if !prop(&input) {
+            // shrink: re-draw at smaller sizes from a forked stream
+            let mut smallest = input;
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut r2 = Rng::new(seed ^ (s as u64) << 32 | case as u64);
+                for _ in 0..20 {
+                    let candidate = gen.gen(&mut r2, s);
+                    if !prop(&candidate) {
+                        smallest = candidate;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}); \
+                 smallest failing input:\n{smallest:#?}"
+            );
+        }
+    }
+}
+
+/// Common generator: vector of f64 in [-scale, scale].
+pub fn vec_f64(scale: f64) -> impl Gen<Vec<f64>> {
+    move |rng: &mut Rng, size: usize| {
+        let n = 1 + rng.below(size);
+        (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) * scale).collect()
+    }
+}
+
+/// Common generator: vector of u32 tokens below `vocab`.
+pub fn vec_tokens(vocab: u32) -> impl Gen<Vec<u32>> {
+    move |rng: &mut Rng, size: usize| {
+        let n = 1 + rng.below(size);
+        (0..n).map(|_| rng.below(vocab as usize) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check(0, 100, 50, vec_f64(1.0), |xs| {
+            xs.iter().all(|x| x.abs() <= 1.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(0, 100, 50, vec_f64(1.0), |xs| xs.len() < 3);
+    }
+
+    #[test]
+    fn token_gen_in_vocab() {
+        check(1, 50, 64, vec_tokens(512), |ts| {
+            ts.iter().all(|&t| t < 512)
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Thread-pool substrate (no `tokio` offline).
+//!
+//! The coordinator's hot loop is synchronous compute (PJRT execute), so
+//! async isn't load-bearing here; what we need is data-parallel helpers
+//! for corpus generation, metric evaluation and the CSR matmul engine.
+//! `parallel_map` fans work over `std::thread::scope` workers with a
+//! shared atomic work queue (dynamic load balancing).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use: respects SPDF_THREADS, else available cores.
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("SPDF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Apply `f` to every index in [0, n) on a worker pool; results returned
+/// in index order. `f` must be Sync (called concurrently).
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_workers(n, worker_count(), f)
+}
+
+pub fn parallel_map_workers<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n).max(1);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+/// Parallel chunked for-each over a mutable slice: each worker owns a
+/// disjoint chunk (no locking on the data path). Used by the CSR matmul.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk = chunk.max(1);
+    std::thread::scope(|scope| {
+        for (ci, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(ci * chunk, part));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(1000, |i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert!(parallel_map(0, |i| i).is_empty());
+        assert_eq!(parallel_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn parallel_map_worker_counts() {
+        for w in [1, 2, 7, 64] {
+            let out = parallel_map_workers(37, w, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn chunks_mut_disjoint_writes() {
+        let mut data = vec![0usize; 100];
+        parallel_chunks_mut(&mut data, 7, |start, part| {
+            for (k, x) in part.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        assert_eq!(data, (0..100).collect::<Vec<_>>());
+    }
+}
