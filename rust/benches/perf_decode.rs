@@ -1,0 +1,161 @@
+//! §Perf bench: the decode/serving hot path.
+//!
+//! Three measurements on the same random-init model and prompt set:
+//!  * baseline — `generate::reference::greedy`: per-step full parameter
+//!    upload through `Executable::run` + full-vocab sort (the pre-
+//!    DecodeEngine path);
+//!  * engine — `DecodeEngine::greedy`: literal-resident params via
+//!    `run_raw` + partial top-k (outputs asserted bit-identical);
+//!  * serve — continuous slot-refill batching over 3× decode_batch
+//!    requests with mixed generation budgets (occupancy + latency).
+//!
+//! Run: `cargo bench --bench perf_decode`
+//! Writes `BENCH_decode.json` (override with SPDF_BENCH_OUT; set
+//! SPDF_BENCH_SMOKE=1 for the CI smoke variant) so the serving perf
+//! trajectory is machine-readable across PRs.
+
+use spdf::bench_support::Table;
+use spdf::generate::{reference, DecodeEngine, DecodeParams,
+                     DecodeRequest};
+use spdf::runtime::Engine;
+use spdf::tokenizer::{BOS, SEP};
+use spdf::train::TrainState;
+use spdf::util::json::Json;
+use spdf::util::rng::Rng;
+use spdf::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = match Engine::cpu(spdf::runtime::default_artifact_dir())
+    {
+        Ok(e) => e,
+        Err(e) => {
+            println!("artifacts unavailable ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let smoke = std::env::var("SPDF_BENCH_SMOKE").is_ok();
+    let model = "gpt-nano";
+    let runtime = engine.load_model_artifacts(model, &["logits_last"])?;
+    let mm = &runtime.manifest;
+    let (b, t, vocab) =
+        (mm.decode_batch, mm.config.ctx_len, mm.config.vocab_size);
+    let exe = runtime.artifact("logits_last")?;
+
+    let mut rng = Rng::new(0);
+    let state = TrainState::init(mm, &mut rng);
+    let params = state.param_tensors(mm);
+
+    let max_new = if smoke { 8 } else { 32 };
+    let dp = DecodeParams {
+        max_new_tokens: max_new,
+        ..Default::default()
+    };
+    let mk_prompt = |rng: &mut Rng| -> Vec<u32> {
+        let len = 3 + rng.below(6);
+        let mut p = vec![BOS];
+        p.extend((0..len).map(|_| 4 + rng.below(vocab - 4) as u32));
+        p.push(SEP);
+        p
+    };
+    let prompts: Vec<Vec<u32>> =
+        (0..b).map(|_| mk_prompt(&mut rng)).collect();
+
+    // one untimed pass through both paths (PJRT lazy init etc.)
+    let warm = DecodeParams { max_new_tokens: 2, ..dp.clone() };
+    let decode = DecodeEngine::new(&runtime, &params)?;
+    reference::greedy(&runtime, &params, &prompts, &warm)?;
+    decode.greedy(&prompts, &warm)?;
+
+    // per-phase step counts come from the Executable's cumulative
+    // run counter
+    let runs0 = exe.runs.get();
+    let timer = Timer::start();
+    let old_out = reference::greedy(&runtime, &params, &prompts, &dp)?;
+    let old_wall = timer.secs();
+    let old_steps = exe.runs.get() - runs0;
+    let old_tokens: usize = old_out.iter().map(|o| o.len()).sum();
+
+    let runs1 = exe.runs.get();
+    let timer = Timer::start();
+    let new_out = decode.greedy(&prompts, &dp)?;
+    let new_wall = timer.secs();
+    let new_steps = exe.runs.get() - runs1;
+    let new_tokens: usize = new_out.iter().map(|o| o.len()).sum();
+    anyhow::ensure!(new_out == old_out,
+                    "engine output diverged from reference");
+
+    // continuous batching: 3x oversubscribed with mixed budgets
+    let n_req = 3 * b;
+    let requests: Vec<DecodeRequest> = (0..n_req)
+        .map(|i| DecodeRequest::new(
+            i as u64,
+            mk_prompt(&mut rng),
+            max_new / 2 + (i % (max_new / 2 + 1))))
+        .collect();
+    let report = decode.serve(&requests, &dp)?;
+    let st = &report.stats;
+
+    let tps = |tokens: usize, wall: f64| tokens as f64 / wall.max(1e-9);
+    let step_ms = |wall: f64, steps: u64| {
+        1e3 * wall / (steps.max(1)) as f64
+    };
+    let speedup = tps(new_tokens, new_wall) / tps(old_tokens, old_wall);
+
+    println!("=== decode hot path: {model} (B={b}, T={t}, V={vocab}, \
+              {max_new} new tokens) ===\n");
+    let mut tb = Table::new(&["path", "tokens", "steps", "tok/s",
+                              "step ms", "speedup"]);
+    tb.row(&[
+        "reference (full sort, re-upload)".into(),
+        old_tokens.to_string(),
+        old_steps.to_string(),
+        format!("{:.1}", tps(old_tokens, old_wall)),
+        format!("{:.2}", step_ms(old_wall, old_steps)),
+        "1.00x".into(),
+    ]);
+    tb.row(&[
+        "DecodeEngine (top-k, resident)".into(),
+        new_tokens.to_string(),
+        new_steps.to_string(),
+        format!("{:.1}", tps(new_tokens, new_wall)),
+        format!("{:.2}", step_ms(new_wall, new_steps)),
+        format!("{speedup:.2}x"),
+    ]);
+    tb.row(&[
+        format!("serve ({n_req} reqs, slot refill)"),
+        st.generated_tokens.to_string(),
+        st.engine_steps.to_string(),
+        format!("{:.1}", st.tokens_per_sec),
+        format!("{:.2}", st.mean_step_ms),
+        format!("occ {:.0}%", st.occupancy * 100.0),
+    ]);
+    tb.print();
+
+    let mut j = Json::obj();
+    j.push("model", Json::Str(model.into()))
+        .push("decode_batch", Json::Num(b as f64))
+        .push("ctx_len", Json::Num(t as f64))
+        .push("vocab", Json::Num(vocab as f64))
+        .push("max_new_tokens", Json::Num(max_new as f64))
+        .push("smoke", Json::Bool(smoke));
+    let leg = |tokens: usize, wall: f64, steps: u64| {
+        let mut o = Json::obj();
+        o.push("tokens", Json::Num(tokens as f64))
+            .push("steps", Json::Num(steps as f64))
+            .push("wall_secs", Json::Num(wall))
+            .push("tokens_per_sec", Json::Num(tps(tokens, wall)))
+            .push("mean_step_ms", Json::Num(step_ms(wall, steps)));
+        o
+    };
+    j.push("baseline", leg(old_tokens, old_wall, old_steps));
+    j.push("engine", leg(new_tokens, new_wall, new_steps));
+    j.push("speedup", Json::Num(speedup));
+    j.push("serve", st.to_json());
+
+    let out_path = std::env::var("SPDF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_decode.json".into());
+    std::fs::write(&out_path, j.to_string_pretty())?;
+    println!("\nwrote {out_path} (speedup {speedup:.2}x, serve \
+              occupancy {:.0}%)", st.occupancy * 100.0);
+    Ok(())
+}

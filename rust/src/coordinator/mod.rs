@@ -7,7 +7,7 @@ pub mod pipeline;
 pub mod report;
 
 pub use pipeline::{
-    evaluate_task, finetune, load_runtime, pretrain, FinetuneConfig,
-    FinetuneResult, PretrainConfig, PretrainResult, TaskMetrics, World,
-    WorldConfig,
+    evaluate_task, finetune, load_runtime, pretrain, prompt_tokens,
+    FinetuneConfig, FinetuneResult, PretrainConfig, PretrainResult,
+    TaskMetrics, World, WorldConfig,
 };

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use crate::data::{self, Batch, FinetuneBatches, PackedStream, Task,
                   TaskData};
-use crate::generate::{self, DecodeParams};
+use crate::generate::{DecodeEngine, DecodeParams, DecodeRequest};
 use crate::runtime::{Engine, ModelRuntime};
 use crate::sparsity::{MaskScheme, MaskSet};
 use crate::tokenizer::{Tokenizer, BOS, SEP};
@@ -382,23 +382,37 @@ pub fn evaluate_task(
     let ppl = train::perplexity(mean_loss);
 
     // ---- generation ----------------------------------------------------
+    // one engine for the whole split: parameters upload to XLA
+    // literals once, not once per chunk per step (§Perf serving path)
     let params = state.param_tensors(mm);
+    let engine = DecodeEngine::new(runtime, &params)?;
     let mut pairs: Vec<(String, Vec<String>)> = Vec::new();
     if dp.beam_size <= 1 {
-        for chunk in examples.chunks(mm.decode_batch) {
-            let prompts: Vec<Vec<u32>> = chunk
-                .iter()
-                .map(|ex| prompt_tokens(tok, &ex.input, t))
-                .collect();
-            let outs = generate::greedy(runtime, &params, &prompts, dp)?;
-            for (ex, ids) in chunk.iter().zip(outs) {
-                pairs.push((tok.decode(&ids), ex.refs.clone()));
-            }
+        // continuous slot-refill batching: every test prompt queues at
+        // once; row independence keeps outputs identical to per-prompt
+        // greedy decode
+        let requests: Vec<DecodeRequest> = examples
+            .iter()
+            .enumerate()
+            .map(|(i, ex)| DecodeRequest::new(
+                i as u64,
+                prompt_tokens(tok, &ex.input, t),
+                dp.max_new_tokens))
+            .collect();
+        let report = engine.serve(&requests, dp)?;
+        log(&format!(
+            "decode[{}]: {} requests in {} steps, {:.0} tok/s, \
+             occupancy {:.0}%",
+            task.name(), report.stats.requests,
+            report.stats.engine_steps, report.stats.tokens_per_sec,
+            report.stats.occupancy * 100.0));
+        for (ex, res) in examples.iter().zip(&report.results) {
+            pairs.push((tok.decode(&res.tokens), ex.refs.clone()));
         }
     } else {
         for ex in &examples {
             let prompt = prompt_tokens(tok, &ex.input, t);
-            let ids = generate::beam(runtime, &params, &prompt, dp)?;
+            let ids = engine.beam(&prompt, dp)?;
             pairs.push((tok.decode(&ids), ex.refs.clone()));
         }
     }
@@ -472,7 +486,8 @@ pub fn lr_grid_search(
 }
 
 /// `BOS input SEP` — the decode-time prompt (matches format_example).
-fn prompt_tokens(tok: &Tokenizer, input: &str, t: usize) -> Vec<u32> {
+/// Public so `spdf serve` builds request streams the same way.
+pub fn prompt_tokens(tok: &Tokenizer, input: &str, t: usize) -> Vec<u32> {
     let mut inp = tok.encode(input);
     let budget = t.saturating_sub(16); // leave room to generate
     if inp.len() + 2 > budget {

@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 
 use crate::bench_support::Table;
 use crate::coordinator::experiments::RunResult;
+use crate::generate::{RequestResult, ServeStats};
 use crate::util::stats::{pm, summarize};
 
 /// Key for grouping seeds of the same cell.
@@ -148,6 +149,38 @@ pub fn fig2_table(results: &[RunResult], model: &str) -> String {
     t.render()
 }
 
+/// Serving report: aggregate throughput/occupancy plus per-request
+/// latency percentiles from one continuous-batching `serve` call.
+pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
+                   -> String {
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["requests".into(), stats.requests.to_string()]);
+    t.row(&["decode batch".into(), stats.decode_batch.to_string()]);
+    t.row(&["engine steps".into(), stats.engine_steps.to_string()]);
+    t.row(&["batch occupancy".into(),
+            format!("{:.1}%", stats.occupancy * 100.0)]);
+    t.row(&["generated tokens".into(),
+            stats.generated_tokens.to_string()]);
+    t.row(&["throughput".into(),
+            format!("{:.1} tok/s", stats.tokens_per_sec)]);
+    t.row(&["mean step".into(),
+            format!("{:.2} ms", stats.mean_step_ms)]);
+    t.row(&["latency p50 / p95".into(),
+            format!("{:.1} / {:.1} ms", stats.latency_ms_p50,
+                    stats.latency_ms_p95)]);
+    if !results.is_empty() {
+        let waits: Vec<f64> =
+            results.iter().map(|r| r.queue_steps as f64).collect();
+        let lens: Vec<f64> =
+            results.iter().map(|r| r.tokens.len() as f64).collect();
+        t.row(&["mean queue wait".into(),
+                format!("{:.1} steps", summarize(&waits).mean)]);
+        t.row(&["mean generation".into(),
+                format!("{:.1} tokens", summarize(&lens).mean)]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +229,34 @@ mod tests {
         assert!(t.contains("0%"));
         assert!(t.contains("75%"));
         assert!(t.contains("50.00"));
+    }
+
+    #[test]
+    fn serve_table_renders_stats() {
+        let stats = ServeStats {
+            requests: 12,
+            decode_batch: 4,
+            engine_steps: 40,
+            slot_steps: 144,
+            occupancy: 0.9,
+            generated_tokens: 130,
+            wall_secs: 2.0,
+            tokens_per_sec: 65.0,
+            mean_step_ms: 50.0,
+            latency_ms_p50: 800.0,
+            latency_ms_p95: 1900.0,
+        };
+        let results = vec![RequestResult {
+            id: 0,
+            tokens: vec![5, 6, 7],
+            queue_steps: 4,
+            decode_steps: 10,
+            latency_ms: 700.0,
+        }];
+        let t = serve_table(&stats, &results);
+        assert!(t.contains("90.0%"), "{t}");
+        assert!(t.contains("65.0 tok/s"), "{t}");
+        assert!(t.contains("4.0 steps"), "{t}");
     }
 
     #[test]

@@ -1,0 +1,355 @@
+//! Continuous slot-refill batching over the fixed decode geometry.
+//!
+//! The `logits_last` artifact is compiled for a fixed
+//! `(decode_batch, ctx_len)` shape, but serving traffic is an arbitrary
+//! stream of prompts with wildly different generation lengths. Static
+//! chunking (decode `B` prompts, wait for the *slowest*, repeat) burns
+//! batch slots as padding the moment one slot finishes early. Here a
+//! request queue feeds the batch instead: the moment a slot's request
+//! finishes (EOS / length cap), the slot is rewritten with the next
+//! queued prompt **mid-flight** — the model step never idles a slot
+//! while work is waiting. Causal attention plus the explicit `pos`
+//! input make each row independent, so a slot's output is bit-identical
+//! to decoding its prompt alone (`tests/integration_runtime.rs` checks
+//! this).
+//!
+//! Per-request latency and batch-occupancy stats feed
+//! `coordinator::report::serve_table` and `benches/perf_decode`.
+
+use std::time::Instant;
+
+use crate::tokenizer::EOS;
+use crate::util::json::Json;
+use crate::util::stats::summarize;
+
+use super::engine::DecodeEngine;
+use super::{topk, DecodeParams};
+
+/// One queued decode request.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    /// Caller-chosen id, echoed in the result (results are returned
+    /// sorted by id).
+    pub id: u64,
+    /// Prompt token ids (unpadded, non-empty).
+    pub prompt: Vec<u32>,
+    /// Per-request generation budget.
+    pub max_new_tokens: usize,
+}
+
+impl DecodeRequest {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize)
+               -> DecodeRequest {
+        DecodeRequest { id, prompt, max_new_tokens }
+    }
+}
+
+/// The decoded continuation plus per-request serving telemetry.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    /// Generated tokens (without the prompt, without EOS).
+    pub tokens: Vec<u32>,
+    /// Engine steps spent queued before a slot freed up.
+    pub queue_steps: u64,
+    /// Engine steps the request occupied a slot.
+    pub decode_steps: u64,
+    /// Wall time from `serve` entry to request completion (queue wait
+    /// included — this is what a caller would observe).
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving statistics for one `serve` call.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub decode_batch: usize,
+    /// Model steps executed.
+    pub engine_steps: u64,
+    /// Occupied slot-steps (out of `engine_steps * decode_batch`).
+    pub slot_steps: u64,
+    /// `slot_steps / (engine_steps * decode_batch)` — 1.0 means no
+    /// slot ever idled.
+    pub occupancy: f64,
+    pub generated_tokens: u64,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    pub mean_step_ms: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+}
+
+impl ServeStats {
+    /// JSON form for `BENCH_decode.json` and `spdf serve --stats-json`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("requests", Json::Num(self.requests as f64))
+            .push("decode_batch", Json::Num(self.decode_batch as f64))
+            .push("engine_steps", Json::Num(self.engine_steps as f64))
+            .push("slot_steps", Json::Num(self.slot_steps as f64))
+            .push("occupancy", Json::Num(self.occupancy))
+            .push("generated_tokens",
+                  Json::Num(self.generated_tokens as f64))
+            .push("wall_secs", Json::Num(self.wall_secs))
+            .push("tokens_per_sec", Json::Num(self.tokens_per_sec))
+            .push("mean_step_ms", Json::Num(self.mean_step_ms))
+            .push("latency_ms_p50", Json::Num(self.latency_ms_p50))
+            .push("latency_ms_p95", Json::Num(self.latency_ms_p95));
+        j
+    }
+}
+
+/// Results (sorted by request id) + aggregate stats.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub results: Vec<RequestResult>,
+    pub stats: ServeStats,
+}
+
+/// A batch slot currently decoding one request.
+struct Slot {
+    req: usize, // index into `requests`
+    pos: usize, // index of the last filled token in the row
+    out: Vec<u32>,
+    entered_step: u64,
+}
+
+/// Write a request's prompt into row `slot` of the token buffer,
+/// clearing stale tokens from the previous occupant first (junk
+/// *before* `pos` would leak into the new request's context).
+fn fill_slot(
+    tokens: &mut [i32],
+    pos: &mut [i32],
+    t: usize,
+    slot: usize,
+    prompt: &[u32],
+) -> usize {
+    let row = &mut tokens[slot * t..(slot + 1) * t];
+    row.fill(0);
+    let plen = prompt.len().min(t - 1);
+    for (j, &tok) in prompt.iter().take(plen).enumerate() {
+        row[j] = tok as i32;
+    }
+    pos[slot] = plen as i32 - 1;
+    plen - 1
+}
+
+/// Complete zero-budget requests immediately (greedy with
+/// `max_new_tokens == 0` decodes nothing) so they never occupy a slot.
+fn drain_zero_budget(
+    requests: &[DecodeRequest],
+    next_req: &mut usize,
+    results: &mut Vec<RequestResult>,
+    engine_steps: u64,
+    latency_ms: f64,
+) {
+    while *next_req < requests.len()
+        && requests[*next_req].max_new_tokens == 0
+    {
+        results.push(RequestResult {
+            id: requests[*next_req].id,
+            tokens: Vec::new(),
+            queue_steps: engine_steps,
+            decode_steps: 0,
+            latency_ms,
+        });
+        *next_req += 1;
+    }
+}
+
+/// Run a request stream to completion through the engine. Requests
+/// enter slots in order; each finished slot is refilled from the queue
+/// before the next model step. `dp` supplies the sampling knobs
+/// (`no_repeat_ngram`); generation budgets come from each request's
+/// `max_new_tokens`, not `dp.max_new_tokens`.
+pub fn serve(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+) -> anyhow::Result<ServeReport> {
+    let b = engine.decode_batch();
+    let t = engine.ctx_len();
+    let vocab = engine.vocab();
+    anyhow::ensure!(requests.iter().all(|r| !r.prompt.is_empty()),
+                    "empty prompt in decode request stream");
+
+    let t0 = Instant::now();
+    let mut tokens = vec![0i32; b * t];
+    let mut pos = vec![0i32; b];
+    let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+    let mut next_req = 0usize;
+    let mut results: Vec<RequestResult> =
+        Vec::with_capacity(requests.len());
+    let mut engine_steps = 0u64;
+    let mut slot_steps = 0u64;
+
+    // initial fill
+    for s in 0..b {
+        drain_zero_budget(requests, &mut next_req, &mut results, 0,
+                          0.0);
+        if next_req >= requests.len() {
+            break;
+        }
+        let p = fill_slot(&mut tokens, &mut pos, t, s,
+                          &requests[next_req].prompt);
+        slots[s] = Some(Slot {
+            req: next_req,
+            pos: p,
+            out: Vec::new(),
+            entered_step: 0,
+        });
+        next_req += 1;
+    }
+
+    while slots.iter().any(|s| s.is_some()) {
+        let occupied = slots.iter().filter(|s| s.is_some()).count();
+        let lv = engine.step_logits(&tokens, &pos)?;
+        engine_steps += 1;
+        slot_steps += occupied as u64;
+
+        for s in 0..b {
+            let finished = {
+                let Some(slot) = slots[s].as_mut() else { continue };
+                let max_new = requests[slot.req].max_new_tokens;
+                let row = &lv[s * vocab..(s + 1) * vocab];
+                let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
+                    (0..=slot.pos).map(|j| tokens[s * t + j] as u32)
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let next = topk::pick_next(row, &ctx,
+                                           dp.no_repeat_ngram);
+                let new_pos = slot.pos + 1;
+                if next == EOS || new_pos >= t - 1 {
+                    if next != EOS && new_pos < t {
+                        slot.out.push(next);
+                    }
+                    true
+                } else {
+                    tokens[s * t + new_pos] = next as i32;
+                    slot.pos = new_pos;
+                    slot.out.push(next);
+                    slot.out.len() >= max_new
+                }
+            };
+            if finished {
+                let slot = slots[s].take().unwrap();
+                results.push(RequestResult {
+                    id: requests[slot.req].id,
+                    tokens: slot.out,
+                    queue_steps: slot.entered_step,
+                    decode_steps: engine_steps - slot.entered_step,
+                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+                // refill mid-flight: the freed slot decodes the next
+                // queued request starting with the following step
+                drain_zero_budget(requests, &mut next_req,
+                                  &mut results, engine_steps,
+                                  t0.elapsed().as_secs_f64() * 1e3);
+                if next_req < requests.len() {
+                    let p = fill_slot(&mut tokens, &mut pos, t, s,
+                                      &requests[next_req].prompt);
+                    slots[s] = Some(Slot {
+                        req: next_req,
+                        pos: p,
+                        out: Vec::new(),
+                        entered_step: engine_steps,
+                    });
+                    next_req += 1;
+                }
+            }
+        }
+    }
+
+    results.sort_by_key(|r| r.id);
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let generated_tokens: u64 =
+        results.iter().map(|r| r.tokens.len() as u64).sum();
+    let latencies: Vec<f64> =
+        results.iter().map(|r| r.latency_ms).collect();
+    let (p50, p95) = if latencies.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let s = summarize(&latencies);
+        (s.p50, s.p95)
+    };
+    let stats = ServeStats {
+        requests: requests.len(),
+        decode_batch: b,
+        engine_steps,
+        slot_steps,
+        occupancy: if engine_steps == 0 {
+            0.0
+        } else {
+            slot_steps as f64 / (engine_steps * b as u64) as f64
+        },
+        generated_tokens,
+        wall_secs,
+        tokens_per_sec: if wall_secs > 0.0 {
+            generated_tokens as f64 / wall_secs
+        } else {
+            0.0
+        },
+        mean_step_ms: if engine_steps == 0 {
+            0.0
+        } else {
+            wall_secs * 1e3 / engine_steps as f64
+        },
+        latency_ms_p50: p50,
+        latency_ms_p95: p95,
+    };
+    Ok(ServeReport { results, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_slot_clears_previous_occupant() {
+        let t = 8;
+        let mut tokens = vec![7i32; 2 * t];
+        let mut pos = vec![5i32; 2];
+        let p = fill_slot(&mut tokens, &mut pos, t, 1, &[9, 10]);
+        assert_eq!(p, 1);
+        assert_eq!(pos[1], 1);
+        assert_eq!(&tokens[t..], &[9, 10, 0, 0, 0, 0, 0, 0]);
+        // row 0 untouched
+        assert!(tokens[..t].iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn fill_slot_truncates_long_prompt() {
+        let t = 4;
+        let mut tokens = vec![0i32; t];
+        let mut pos = vec![0i32; 1];
+        let prompt: Vec<u32> = (1..=10).collect();
+        let p = fill_slot(&mut tokens, &mut pos, t, 0, &prompt);
+        // plen = t - 1 = 3 tokens kept, pos on the last one
+        assert_eq!(p, 2);
+        assert_eq!(tokens, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn stats_json_has_core_fields() {
+        let stats = ServeStats {
+            requests: 3,
+            decode_batch: 2,
+            engine_steps: 10,
+            slot_steps: 17,
+            occupancy: 0.85,
+            generated_tokens: 15,
+            wall_secs: 0.5,
+            tokens_per_sec: 30.0,
+            mean_step_ms: 50.0,
+            latency_ms_p50: 200.0,
+            latency_ms_p95: 450.0,
+        };
+        let j = stats.to_json();
+        assert_eq!(j.get("tokens_per_sec").unwrap().as_f64(),
+                   Some(30.0));
+        assert_eq!(j.get("occupancy").unwrap().as_f64(), Some(0.85));
+        assert_eq!(j.get("engine_steps").unwrap().as_usize(), Some(10));
+    }
+}

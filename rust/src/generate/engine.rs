@@ -1,0 +1,224 @@
+//! The literal-resident decode engine (§Perf serving path).
+//!
+//! The old decode loop re-validated and re-uploaded the **full
+//! parameter set** to PJRT on every step, then full-sorted the
+//! vocabulary per batch slot. `DecodeEngine` is the session form:
+//! parameters go to XLA literals once at construction (the `LitCache`
+//! pattern proven in `train/session.rs`), every step runs through
+//! `Executable::run_raw` with only the small token/pos buffers
+//! re-marshalled, and candidate selection is the partial top-k of
+//! [`super::topk`]. Greedy output is bit-identical to the pre-engine
+//! path when `no_repeat_ngram == 0`; with blocking on, both this and
+//! [`super::reference`] carry the *fixed* fallback semantics (the old
+//! code could emit a blocked token — see ISSUE 1).
+
+use crate::runtime::{Dtype, Executable, HostTensor, LiteralCache,
+                     ModelRuntime};
+use crate::tokenizer::EOS;
+
+use super::topk;
+use super::DecodeParams;
+
+pub struct DecodeEngine<'a> {
+    pub runtime: &'a ModelRuntime,
+    exe: &'a Executable,
+    params: LiteralCache,
+    b: usize,
+    t: usize,
+    vocab: usize,
+}
+
+impl<'a> DecodeEngine<'a> {
+    /// Validate the parameter set against the `logits_last` spec and
+    /// upload it once. All spec checking happens here; the step loop
+    /// never validates again.
+    pub fn new(runtime: &'a ModelRuntime, params: &[HostTensor])
+               -> anyhow::Result<DecodeEngine<'a>> {
+        let mm = &runtime.manifest;
+        let exe = runtime.artifact("logits_last")?;
+        let spec = &exe.spec;
+        let b = mm.decode_batch;
+        let t = mm.config.ctx_len;
+        anyhow::ensure!(
+            spec.inputs.len() == params.len() + 2,
+            "logits_last expects {} inputs ({} params + tokens + pos), \
+             got {} params",
+            spec.inputs.len(), spec.inputs.len().saturating_sub(2),
+            params.len()
+        );
+        let tok_spec = &spec.inputs[params.len()];
+        let pos_spec = &spec.inputs[params.len() + 1];
+        anyhow::ensure!(
+            tok_spec.shape[..] == [b, t] && tok_spec.dtype == Dtype::I32,
+            "logits_last token slot {:?}/{:?} does not match decode \
+             geometry ({b}, {t})/i32",
+            tok_spec.shape, tok_spec.dtype
+        );
+        anyhow::ensure!(
+            pos_spec.shape[..] == [b] && pos_spec.dtype == Dtype::I32,
+            "logits_last pos slot {:?}/{:?} does not match ({b})/i32",
+            pos_spec.shape, pos_spec.dtype
+        );
+        let params = LiteralCache::upload_validated(
+            params, &spec.inputs[..params.len()])?;
+        Ok(DecodeEngine {
+            runtime,
+            exe,
+            params,
+            b,
+            t,
+            vocab: mm.config.vocab_size,
+        })
+    }
+
+    pub fn decode_batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn ctx_len(&self) -> usize {
+        self.t
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// One model step: flat `(B*T)` token buffer + `(B)` positions in,
+    /// flat `(B*V)` last-token logits out. Only the two small i32
+    /// buffers cross the host boundary.
+    pub(crate) fn step_logits(&self, tokens: &[i32], pos: &[i32])
+                              -> anyhow::Result<Vec<f32>> {
+        debug_assert_eq!(tokens.len(), self.b * self.t);
+        debug_assert_eq!(pos.len(), self.b);
+        let tok_l = HostTensor::literal_i32(&[self.b, self.t], tokens)?;
+        let pos_l = HostTensor::literal_i32(&[self.b], pos)?;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() + 2);
+        inputs.extend(self.params.refs());
+        inputs.push(&tok_l);
+        inputs.push(&pos_l);
+        let outs = self.exe.run_raw(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Greedy decode a batch of prompts (token ids, unpadded). Returns
+    /// the generated continuations (without the prompt, without EOS).
+    /// Bit-identical to `generate::reference::greedy` (and, for
+    /// `no_repeat_ngram == 0`, to the pre-engine implementation).
+    ///
+    /// This is the one-slot-per-prompt special case of the slot-refill
+    /// state machine in [`super::batching`] — one implementation, one
+    /// set of EOS/length-cap edge cases.
+    pub fn greedy(&self, prompts: &[Vec<u32>], dp: &DecodeParams)
+                  -> anyhow::Result<Vec<Vec<u32>>> {
+        anyhow::ensure!(prompts.len() <= self.b,
+                        "batch of {} prompts exceeds decode_batch {}",
+                        prompts.len(), self.b);
+        let requests: Vec<super::DecodeRequest> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| super::DecodeRequest::new(
+                i as u64, p.clone(), dp.max_new_tokens))
+            .collect();
+        let report = super::batching::serve(self, &requests, dp)?;
+        Ok(report.results.into_iter().map(|r| r.tokens).collect())
+    }
+
+    /// Beam-search decode a *single* prompt using the batch slots as
+    /// beams. Expansion candidates come from a partial top-2k instead
+    /// of a full-vocab sort — the exact same 2k-prefix the old path
+    /// read off its stable full sort.
+    pub fn beam(&self, prompt: &[u32], dp: &DecodeParams)
+                -> anyhow::Result<Vec<u32>> {
+        let (b, t, vocab) = (self.b, self.t, self.vocab);
+        let k = dp.beam_size.clamp(1, b);
+
+        #[derive(Clone)]
+        struct Beam {
+            seq: Vec<u32>, // prompt + generated
+            logp: f64,
+        }
+        let plen = prompt.len().min(t - 2);
+        let mut beams = vec![Beam {
+            seq: prompt[..plen].to_vec(),
+            logp: 0.0,
+        }];
+        let mut finished: Vec<Beam> = Vec::new();
+
+        let mut tokens = vec![0i32; b * t];
+        let mut pos = vec![0i32; b];
+        for _ in 0..dp.max_new_tokens {
+            if beams.is_empty() {
+                break;
+            }
+            // pack live beams into the batch
+            tokens.fill(0);
+            pos.fill(0);
+            for (i, bm) in beams.iter().enumerate() {
+                for (j, &tok) in bm.seq.iter().enumerate() {
+                    tokens[i * t + j] = tok as i32;
+                }
+                pos[i] = bm.seq.len() as i32 - 1;
+            }
+            let lv = self.step_logits(&tokens, &pos)?;
+
+            let mut candidates: Vec<Beam> = Vec::new();
+            for (i, bm) in beams.iter().enumerate() {
+                let row = &lv[i * vocab..(i + 1) * vocab];
+                // log-softmax
+                let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                let logz: f64 = row.iter()
+                    .map(|&x| ((x - mx) as f64).exp())
+                    .sum::<f64>()
+                    .ln() + mx as f64;
+                for &tok in &topk::top_k(row, 2 * k) {
+                    if super::repeats_ngram(&bm.seq, tok,
+                                            dp.no_repeat_ngram) {
+                        continue;
+                    }
+                    let lp = row[tok as usize] as f64 - logz;
+                    let mut nb = bm.clone();
+                    nb.logp += lp;
+                    if tok == EOS || nb.seq.len() + 1 >= t - 1 {
+                        finished.push(nb);
+                    } else {
+                        nb.seq.push(tok);
+                        candidates.push(nb);
+                    }
+                }
+            }
+            candidates.sort_by(|a, c| {
+                c.logp.partial_cmp(&a.logp).unwrap()
+            });
+            candidates.truncate(k);
+            beams = candidates;
+            if finished.len() >= 2 * k {
+                break;
+            }
+        }
+        finished.extend(beams);
+        // length-penalized selection: logp / len^alpha
+        let best = finished
+            .into_iter()
+            .max_by(|a, c| {
+                let la = a.logp
+                    / ((a.seq.len() - plen).max(1) as f64)
+                        .powf(dp.length_penalty);
+                let lc = c.logp
+                    / ((c.seq.len() - plen).max(1) as f64)
+                        .powf(dp.length_penalty);
+                la.partial_cmp(&lc).unwrap()
+            })
+            .map(|bm| bm.seq[plen..].to_vec())
+            .unwrap_or_default();
+        Ok(best)
+    }
+
+    /// Serve a request stream through continuous slot-refill batching;
+    /// see [`super::batching`].
+    pub fn serve(&self, requests: &[super::DecodeRequest],
+                 dp: &DecodeParams)
+                 -> anyhow::Result<super::ServeReport> {
+        super::batching::serve(self, requests, dp)
+    }
+}

@@ -3,12 +3,36 @@
 //! al. 2022 / the paper use for NLG fine-tuning evaluation).
 //!
 //! The artifact computes full-context logits at an explicit position, so
-//! the coordinator owns the loop: right-pad prompts into the fixed
-//! (B, T) geometry, read row logits, extend, repeat. Causality makes the
-//! right padding invisible.
+//! the host owns the loop: right-pad prompts into the fixed (B, T)
+//! geometry, read row logits, extend, repeat. Causality makes the right
+//! padding invisible.
+//!
+//! Structure (§Perf serving path):
+//!  * [`engine::DecodeEngine`] — the literal-resident decode session:
+//!    parameters upload to XLA literals once, steps go through
+//!    `Executable::run_raw`, next-token selection is a partial top-k.
+//!  * [`batching`] — continuous slot-refill batching: any number of
+//!    requests stream through the fixed `(decode_batch, ctx_len)`
+//!    geometry, finished slots are refilled mid-flight.
+//!  * [`topk`] — O(V + k log k) candidate selection, exactly equal to
+//!    the old full-vocab stable sort's prefix.
+//!  * [`reference`] — the pre-engine path (per-step param upload +
+//!    full-vocab sort), kept as the equivalence oracle and the bench
+//!    baseline.
+//!
+//! The free functions [`greedy`] and [`beam`] remain the drop-in API;
+//! they build a throwaway engine per call.
+
+pub mod batching;
+pub mod engine;
+pub mod reference;
+pub mod topk;
+
+pub use batching::{DecodeRequest, RequestResult, ServeReport,
+                   ServeStats};
+pub use engine::DecodeEngine;
 
 use crate::runtime::{HostTensor, ModelRuntime};
-use crate::tokenizer::EOS;
 
 #[derive(Debug, Clone)]
 pub struct DecodeParams {
@@ -36,7 +60,7 @@ impl Default for DecodeParams {
 }
 
 /// Would appending `next` create a repeated n-gram of size `n`?
-fn repeats_ngram(seq: &[u32], next: u32, n: usize) -> bool {
+pub(crate) fn repeats_ngram(seq: &[u32], next: u32, n: usize) -> bool {
     if n == 0 || seq.len() + 1 < 2 * n {
         return false;
     }
@@ -53,68 +77,7 @@ pub fn greedy(
     prompts: &[Vec<u32>],
     dp: &DecodeParams,
 ) -> anyhow::Result<Vec<Vec<u32>>> {
-    let mm = &runtime.manifest;
-    let exe = runtime.artifact("logits_last")?;
-    let b = mm.decode_batch;
-    let t = mm.config.ctx_len;
-    let vocab = mm.config.vocab_size;
-    anyhow::ensure!(prompts.len() <= b,
-                    "batch of {} prompts exceeds decode_batch {b}",
-                    prompts.len());
-
-    let mut tokens = vec![0i32; b * t];
-    let mut pos = vec![0i32; b];
-    let mut out: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
-    let mut done = vec![false; prompts.len()];
-    for (i, p) in prompts.iter().enumerate() {
-        let plen = p.len().min(t - 1);
-        for (j, &tok) in p.iter().take(plen).enumerate() {
-            tokens[i * t + j] = tok as i32;
-        }
-        pos[i] = plen as i32 - 1;
-    }
-
-    for _ in 0..dp.max_new_tokens {
-        if done.iter().all(|&d| d) {
-            break;
-        }
-        let inputs = assemble_inputs(params, &tokens, &pos, b, t);
-        let logits = exe.run(&inputs)?;
-        let lv = logits[0].as_f32()?;
-        for i in 0..prompts.len() {
-            if done[i] {
-                continue;
-            }
-            let row = &lv[i * vocab..(i + 1) * vocab];
-            // argmax avoiding blocked n-grams
-            let ctx: Vec<u32> = (0..=pos[i] as usize)
-                .map(|j| tokens[i * t + j] as u32)
-                .collect();
-            let mut order: Vec<usize> = (0..vocab).collect();
-            order.sort_by(|&a, &c| {
-                row[c].partial_cmp(&row[a]).unwrap()
-            });
-            let mut next = order[0] as u32;
-            for &cand in order.iter().take(8) {
-                if !repeats_ngram(&ctx, cand as u32, dp.no_repeat_ngram) {
-                    next = cand as u32;
-                    break;
-                }
-            }
-            let new_pos = pos[i] as usize + 1;
-            if next == EOS || new_pos >= t - 1 {
-                done[i] = true;
-                if next != EOS && new_pos < t {
-                    out[i].push(next);
-                }
-                continue;
-            }
-            tokens[i * t + new_pos] = next as i32;
-            pos[i] = new_pos as i32;
-            out[i].push(next);
-        }
-    }
-    Ok(out)
+    DecodeEngine::new(runtime, params)?.greedy(prompts, dp)
 }
 
 /// Beam-search decode a *single* prompt using the batch slots as beams.
@@ -124,110 +87,7 @@ pub fn beam(
     prompt: &[u32],
     dp: &DecodeParams,
 ) -> anyhow::Result<Vec<u32>> {
-    let mm = &runtime.manifest;
-    let exe = runtime.artifact("logits_last")?;
-    let b = mm.decode_batch;
-    let t = mm.config.ctx_len;
-    let vocab = mm.config.vocab_size;
-    let k = dp.beam_size.clamp(1, b);
-
-    #[derive(Clone)]
-    struct Beam {
-        seq: Vec<u32>,       // prompt + generated
-        logp: f64,
-        finished: bool,
-    }
-    let plen = prompt.len().min(t - 2);
-    let mut beams = vec![Beam {
-        seq: prompt[..plen].to_vec(),
-        logp: 0.0,
-        finished: false,
-    }];
-    let mut finished: Vec<Beam> = Vec::new();
-
-    for _ in 0..dp.max_new_tokens {
-        if beams.is_empty() {
-            break;
-        }
-        // pack live beams into the batch
-        let mut tokens = vec![0i32; b * t];
-        let mut pos = vec![0i32; b];
-        for (i, bm) in beams.iter().enumerate() {
-            for (j, &tok) in bm.seq.iter().enumerate() {
-                tokens[i * t + j] = tok as i32;
-            }
-            pos[i] = bm.seq.len() as i32 - 1;
-        }
-        let inputs = assemble_inputs(params, &tokens, &pos, b, t);
-        let logits = exe.run(&inputs)?;
-        let lv = logits[0].as_f32()?;
-
-        let mut candidates: Vec<Beam> = Vec::new();
-        for (i, bm) in beams.iter().enumerate() {
-            let row = &lv[i * vocab..(i + 1) * vocab];
-            // log-softmax
-            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
-            let logz: f64 = row.iter()
-                .map(|&x| ((x - mx) as f64).exp())
-                .sum::<f64>()
-                .ln() + mx as f64;
-            let mut idx: Vec<usize> = (0..vocab).collect();
-            idx.sort_by(|&a, &c| row[c].partial_cmp(&row[a]).unwrap());
-            let gen = &bm.seq[plen.min(bm.seq.len())..];
-            let _ = gen;
-            for &tok in idx.iter().take(2 * k) {
-                if repeats_ngram(&bm.seq, tok as u32,
-                                 dp.no_repeat_ngram) {
-                    continue;
-                }
-                let lp = row[tok] as f64 - logz;
-                let mut nb = bm.clone();
-                nb.logp += lp;
-                if tok as u32 == EOS || nb.seq.len() + 1 >= t - 1 {
-                    nb.finished = true;
-                    finished.push(nb);
-                } else {
-                    nb.seq.push(tok as u32);
-                    candidates.push(nb);
-                }
-            }
-        }
-        candidates.sort_by(|a, c| c.logp.partial_cmp(&a.logp).unwrap());
-        candidates.truncate(k);
-        beams = candidates;
-        if finished.len() >= 2 * k {
-            break;
-        }
-    }
-    finished.extend(beams);
-    // length-penalized selection: logp / len^alpha
-    let best = finished
-        .into_iter()
-        .max_by(|a, c| {
-            let la = a.logp
-                / ((a.seq.len() - plen).max(1) as f64)
-                    .powf(dp.length_penalty);
-            let lc = c.logp
-                / ((c.seq.len() - plen).max(1) as f64)
-                    .powf(dp.length_penalty);
-            la.partial_cmp(&lc).unwrap()
-        })
-        .map(|bm| bm.seq[plen..].to_vec())
-        .unwrap_or_default();
-    Ok(best)
-}
-
-fn assemble_inputs(
-    params: &[HostTensor],
-    tokens: &[i32],
-    pos: &[i32],
-    b: usize,
-    t: usize,
-) -> Vec<HostTensor> {
-    let mut inputs: Vec<HostTensor> = params.to_vec();
-    inputs.push(HostTensor::from_i32(&[b, t], tokens.to_vec()));
-    inputs.push(HostTensor::from_i32(&[b], pos.to_vec()));
-    inputs
+    DecodeEngine::new(runtime, params)?.beam(prompt, dp)
 }
 
 #[cfg(test)]

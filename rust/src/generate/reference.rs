@@ -1,0 +1,205 @@
+//! The pre-engine decode path, kept verbatim as an oracle.
+//!
+//! This is what `generate::{greedy, beam}` did before `DecodeEngine`:
+//! every step re-validates and re-uploads the **full parameter set**
+//! through `Executable::run`, and candidate selection is a full-vocab
+//! *stable* descending sort (ties resolve to the lowest index — the
+//! ordering contract `topk` reproduces). It exists for two reasons:
+//!
+//!  1. equivalence tests: the engine must produce byte-identical
+//!     output (`tests/integration_runtime.rs`);
+//!  2. `benches/perf_decode` measures the engine's speedup against it.
+//!
+//! The n-gram fallback here carries the *fixed* semantics (fall through
+//! the full candidate order when the top-8 window is exhausted), so the
+//! oracle also covers `no_repeat_ngram > 0`.
+
+use crate::runtime::{HostTensor, ModelRuntime};
+use crate::tokenizer::EOS;
+
+use super::{repeats_ngram, DecodeParams};
+
+/// Stable full descending sort of a logit row — O(V log V) per slot
+/// per step, the cost `topk::top_k` eliminates.
+fn full_sort_desc(row: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..row.len()).collect();
+    order.sort_by(|&a, &c| row[c].partial_cmp(&row[a]).unwrap());
+    order
+}
+
+fn pick_next_full_sort(row: &[f32], ctx: &[u32], n: usize) -> u32 {
+    let order = full_sort_desc(row);
+    let mut next = order[0] as u32;
+    for &cand in &order {
+        if !repeats_ngram(ctx, cand as u32, n) {
+            next = cand as u32;
+            break;
+        }
+    }
+    next
+}
+
+/// Greedy decode, old slow path: per-step param upload + full sort.
+pub fn greedy(
+    runtime: &ModelRuntime,
+    params: &[HostTensor],
+    prompts: &[Vec<u32>],
+    dp: &DecodeParams,
+) -> anyhow::Result<Vec<Vec<u32>>> {
+    let mm = &runtime.manifest;
+    let exe = runtime.artifact("logits_last")?;
+    let b = mm.decode_batch;
+    let t = mm.config.ctx_len;
+    let vocab = mm.config.vocab_size;
+    anyhow::ensure!(prompts.len() <= b,
+                    "batch of {} prompts exceeds decode_batch {b}",
+                    prompts.len());
+
+    let mut tokens = vec![0i32; b * t];
+    let mut pos = vec![0i32; b];
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+    let mut done = vec![false; prompts.len()];
+    for (i, p) in prompts.iter().enumerate() {
+        let plen = p.len().min(t - 1);
+        for (j, &tok) in p.iter().take(plen).enumerate() {
+            tokens[i * t + j] = tok as i32;
+        }
+        pos[i] = plen as i32 - 1;
+    }
+
+    for _ in 0..dp.max_new_tokens {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let inputs = assemble_inputs(params, &tokens, &pos, b, t);
+        let logits = exe.run(&inputs)?;
+        let lv = logits[0].as_f32()?;
+        for i in 0..prompts.len() {
+            if done[i] {
+                continue;
+            }
+            let row = &lv[i * vocab..(i + 1) * vocab];
+            let ctx: Vec<u32> = (0..=pos[i] as usize)
+                .map(|j| tokens[i * t + j] as u32)
+                .collect();
+            let next =
+                pick_next_full_sort(row, &ctx, dp.no_repeat_ngram);
+            let new_pos = pos[i] as usize + 1;
+            if next == EOS || new_pos >= t - 1 {
+                done[i] = true;
+                if next != EOS && new_pos < t {
+                    out[i].push(next);
+                }
+                continue;
+            }
+            tokens[i * t + new_pos] = next as i32;
+            pos[i] = new_pos as i32;
+            out[i].push(next);
+        }
+    }
+    Ok(out)
+}
+
+/// Beam-search decode, old slow path.
+pub fn beam(
+    runtime: &ModelRuntime,
+    params: &[HostTensor],
+    prompt: &[u32],
+    dp: &DecodeParams,
+) -> anyhow::Result<Vec<u32>> {
+    let mm = &runtime.manifest;
+    let exe = runtime.artifact("logits_last")?;
+    let b = mm.decode_batch;
+    let t = mm.config.ctx_len;
+    let vocab = mm.config.vocab_size;
+    let k = dp.beam_size.clamp(1, b);
+
+    #[derive(Clone)]
+    struct Beam {
+        seq: Vec<u32>, // prompt + generated
+        logp: f64,
+    }
+    let plen = prompt.len().min(t - 2);
+    let mut beams = vec![Beam {
+        seq: prompt[..plen].to_vec(),
+        logp: 0.0,
+    }];
+    let mut finished: Vec<Beam> = Vec::new();
+
+    for _ in 0..dp.max_new_tokens {
+        if beams.is_empty() {
+            break;
+        }
+        let mut tokens = vec![0i32; b * t];
+        let mut pos = vec![0i32; b];
+        for (i, bm) in beams.iter().enumerate() {
+            for (j, &tok) in bm.seq.iter().enumerate() {
+                tokens[i * t + j] = tok as i32;
+            }
+            pos[i] = bm.seq.len() as i32 - 1;
+        }
+        let inputs = assemble_inputs(params, &tokens, &pos, b, t);
+        let logits = exe.run(&inputs)?;
+        let lv = logits[0].as_f32()?;
+
+        let mut candidates: Vec<Beam> = Vec::new();
+        for (i, bm) in beams.iter().enumerate() {
+            let row = &lv[i * vocab..(i + 1) * vocab];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let logz: f64 = row.iter()
+                .map(|&x| ((x - mx) as f64).exp())
+                .sum::<f64>()
+                .ln() + mx as f64;
+            let idx = full_sort_desc(row);
+            for &tok in idx.iter().take(2 * k) {
+                if repeats_ngram(&bm.seq, tok as u32,
+                                 dp.no_repeat_ngram) {
+                    continue;
+                }
+                let lp = row[tok] as f64 - logz;
+                let mut nb = bm.clone();
+                nb.logp += lp;
+                if tok as u32 == EOS || nb.seq.len() + 1 >= t - 1 {
+                    finished.push(nb);
+                } else {
+                    nb.seq.push(tok as u32);
+                    candidates.push(nb);
+                }
+            }
+        }
+        candidates.sort_by(|a, c| c.logp.partial_cmp(&a.logp).unwrap());
+        candidates.truncate(k);
+        beams = candidates;
+        if finished.len() >= 2 * k {
+            break;
+        }
+    }
+    finished.extend(beams);
+    let best = finished
+        .into_iter()
+        .max_by(|a, c| {
+            let la = a.logp
+                / ((a.seq.len() - plen).max(1) as f64)
+                    .powf(dp.length_penalty);
+            let lc = c.logp
+                / ((c.seq.len() - plen).max(1) as f64)
+                    .powf(dp.length_penalty);
+            la.partial_cmp(&lc).unwrap()
+        })
+        .map(|bm| bm.seq[plen..].to_vec())
+        .unwrap_or_default();
+    Ok(best)
+}
+
+fn assemble_inputs(
+    params: &[HostTensor],
+    tokens: &[i32],
+    pos: &[i32],
+    b: usize,
+    t: usize,
+) -> Vec<HostTensor> {
+    let mut inputs: Vec<HostTensor> = params.to_vec();
+    inputs.push(HostTensor::from_i32(&[b, t], tokens.to_vec()));
+    inputs.push(HostTensor::from_i32(&[b], pos.to_vec()));
+    inputs
+}

@@ -1,0 +1,195 @@
+//! Partial top-k selection over a logit row.
+//!
+//! The decode hot loop previously full-sorted the vocabulary
+//! (O(V log V)) per batch slot per step just to read off the argmax or
+//! the 2k beam candidates. This module provides the O(V + k log k)
+//! replacement: `select_nth_unstable_by` partitions the top k in linear
+//! time, then only those k entries are sorted.
+//!
+//! Ordering contract: entries are ranked by (logit descending, index
+//! ascending). A *stable* descending sort over the full vocab — what
+//! `generate::reference` does — produces exactly this order, because
+//! stability preserves the ascending index order of tied values. So
+//! `top_k(row, k)` is bit-identical to the first k entries of the old
+//! full sort, ties included, and `argmax` to its first entry.
+
+use std::cmp::Ordering;
+
+/// Descending-by-value, ascending-by-index total order. Logits are
+/// finite by construction; a NaN means the model diverged and we panic
+/// exactly like the old `partial_cmp(..).unwrap()` sort did.
+#[inline]
+fn cmp_desc(row: &[f32], a: u32, b: u32) -> Ordering {
+    row[b as usize]
+        .partial_cmp(&row[a as usize])
+        .expect("NaN logit in decode")
+        .then(a.cmp(&b))
+}
+
+/// Indices of the k largest logits, ordered (value desc, index asc).
+/// Equals the length-k prefix of a stable full descending sort.
+pub fn top_k(row: &[f32], k: usize) -> Vec<u32> {
+    let v = row.len();
+    let k = k.min(v);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..v as u32).collect();
+    if k < v {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| cmp_desc(row, a, b));
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(|&a, &b| cmp_desc(row, a, b));
+    idx
+}
+
+/// Index of the largest logit (smallest index wins ties) — the k=1
+/// special case, done in one linear scan with no allocation.
+pub fn argmax(row: &[f32]) -> u32 {
+    debug_assert!(!row.is_empty());
+    let mut best = 0u32;
+    for (i, &x) in row.iter().enumerate().skip(1) {
+        if x.partial_cmp(&row[best as usize])
+            .expect("NaN logit in decode")
+            == Ordering::Greater
+        {
+            best = i as u32;
+        }
+    }
+    best
+}
+
+/// How many candidates greedy decode tries before falling through the
+/// full order (the historical "top-8" window).
+pub const GREEDY_BLOCK_WINDOW: usize = 8;
+
+/// Greedy next-token choice under n-gram blocking: the first of the
+/// top-`GREEDY_BLOCK_WINDOW` candidates that does not repeat an n-gram;
+/// if all of them are blocked, fall through the *full* candidate order
+/// (this used to silently return the blocked argmax). If every token in
+/// the vocabulary is blocked, the argmax is returned — emitting the
+/// least-bad token beats emitting an arbitrary one.
+pub fn pick_next(
+    row: &[f32],
+    ctx: &[u32],
+    no_repeat_ngram: usize,
+) -> u32 {
+    if no_repeat_ngram == 0 {
+        return argmax(row);
+    }
+    let head = top_k(row, GREEDY_BLOCK_WINDOW);
+    for &cand in &head {
+        if !super::repeats_ngram(ctx, cand, no_repeat_ngram) {
+            return cand;
+        }
+    }
+    let full = top_k(row, row.len());
+    for &cand in &full[head.len()..] {
+        if !super::repeats_ngram(ctx, cand, no_repeat_ngram) {
+            return cand;
+        }
+    }
+    full[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The oracle: the old full stable descending sort.
+    fn full_sort_desc(row: &[f32]) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..row.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            row[b as usize].partial_cmp(&row[a as usize]).unwrap()
+        });
+        order
+    }
+
+    #[test]
+    fn matches_full_sort_on_simple_row() {
+        let row = [0.1f32, 3.0, -1.0, 3.0, 2.0];
+        // ties at 3.0: stable sort keeps index order 1 before 3
+        assert_eq!(top_k(&row, 3), vec![1, 3, 4]);
+        assert_eq!(top_k(&row, 5), full_sort_desc(&row));
+        assert_eq!(argmax(&row), 1);
+    }
+
+    #[test]
+    fn k_zero_and_k_beyond_len() {
+        let row = [1.0f32, 2.0];
+        assert!(top_k(&row, 0).is_empty());
+        assert_eq!(top_k(&row, 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn property_topk_is_full_sort_prefix() {
+        // random logits, including heavy ties (values snapped to a
+        // small grid), across k = 1..V
+        crate::util::proptest::check(
+            7, 64, 40,
+            |rng: &mut Rng, size: usize| {
+                let v = 2 + rng.below(size.max(2) * 8);
+                let snap = rng.below(2) == 0;
+                let row: Vec<f32> = (0..v)
+                    .map(|_| {
+                        let x = rng.normal_f32(0.0, 1.0);
+                        if snap { (x * 4.0).round() / 4.0 } else { x }
+                    })
+                    .collect();
+                let k = 1 + rng.below(v);
+                (row, k)
+            },
+            |(row, k)| {
+                let oracle = full_sort_desc(row);
+                top_k(row, *k) == oracle[..*k]
+                    && argmax(row) == oracle[0]
+            },
+        );
+    }
+
+    #[test]
+    fn property_beam_expansion_candidates_match() {
+        // beam search takes the first 2k of the full sort; top_k must
+        // reproduce that window exactly
+        crate::util::proptest::check(
+            11, 48, 32,
+            |rng: &mut Rng, size: usize| {
+                let v = 4 + rng.below(size.max(4) * 8);
+                let row: Vec<f32> = (0..v)
+                    .map(|_| ((rng.below(9) as f32) - 4.0) * 0.5)
+                    .collect();
+                let k = 1 + rng.below(4);
+                (row, k)
+            },
+            |(row, k)| {
+                let want: Vec<u32> = full_sort_desc(row)
+                    .into_iter()
+                    .take(2 * k)
+                    .collect();
+                top_k(row, 2 * k) == want
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_window_falls_through_full_order() {
+        // 16-token vocab, logits strictly descending by index, and the
+        // context blocks (n=1) every one of the top-8 candidates: the
+        // fixed fallback must yield token 8, not the blocked argmax 0.
+        let row: Vec<f32> = (0..16).map(|i| 16.0 - i as f32).collect();
+        let ctx: Vec<u32> = (0..8).collect();
+        assert_eq!(pick_next(&row, &ctx, 1), 8);
+        // unblocked head: argmax wins as before
+        assert_eq!(pick_next(&row, &[12, 13], 1), 0);
+        // blocking off: pure argmax
+        assert_eq!(pick_next(&row, &ctx, 0), 0);
+    }
+
+    #[test]
+    fn fully_blocked_vocab_returns_argmax() {
+        let row: Vec<f32> = (0..4).map(|i| 4.0 - i as f32).collect();
+        let ctx: Vec<u32> = vec![0, 1, 2, 3];
+        assert_eq!(pick_next(&row, &ctx, 1), 0);
+    }
+}

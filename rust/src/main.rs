@@ -7,6 +7,7 @@
 //!   finetune    dense/sparse fine-tune from a checkpoint, evaluate
 //!   run-matrix  the full experiment matrix (Table 1 / Fig. 2 data)
 //!   report      render tables from the results ledger
+//!   serve       continuous-batching decode over a request stream
 //!   subspace    Figures 3–4 cosine-distance analysis
 //!   gen-data    dump synthetic task examples (inspection/demo)
 
@@ -37,6 +38,7 @@ fn main() {
         "finetune" => cmd_finetune(rest),
         "run-matrix" => cmd_run_matrix(rest),
         "report" => cmd_report(rest),
+        "serve" => cmd_serve(rest),
         "subspace" => cmd_subspace(rest),
         "gen-data" => cmd_gen_data(rest),
         "help" | "--help" | "-h" => {
@@ -65,6 +67,8 @@ fn print_help() {
            finetune    fine-tune from a checkpoint + evaluate\n\
            run-matrix  full experiment matrix (Table 1 / Fig. 2)\n\
            report      render tables from the results ledger\n\
+           serve       continuous-batching decode over a request \
+           stream\n\
            subspace    Figures 3-4 cosine-distance analysis\n\
            gen-data    dump synthetic task examples\n\n\
          run `spdf <command> --help` for flags"
@@ -380,6 +384,67 @@ fn cmd_report_inner(run_dir: &PathBuf) -> anyhow::Result<()> {
         if results.iter().any(|r| !r.dense_ft && r.spec_model == model) {
             println!("== Figure 2 ({model}): dense FT vs sparse FT ==");
             println!("{}", report::fig2_table(&results, &model));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+    let cli = world_flags(
+        Cli::new("spdf serve",
+                 "decode a request stream with continuous slot-refill \
+                  batching"))
+        .flag("model", "gpt-nano", "model name")
+        .flag("ckpt", "", "checkpoint path (empty = random init)")
+        .flag("task", "e2e", "task supplying the prompts")
+        .flag("requests", "32", "number of requests to serve")
+        .flag("max-new-tokens", "48", "generation budget per request")
+        .flag("stats-json", "", "write serving stats JSON to this path");
+    let a = cli.parse(raw)?;
+    let world = build_world(&a)?;
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    // decode-only serving: skip compiling the train/eval artifacts
+    let runtime = engine.load_model_artifacts(a.get("model"),
+                                              &["logits_last"])?;
+    let mm = &runtime.manifest;
+    let state = match a.get("ckpt") {
+        "" => spdf::train::TrainState::init(
+            mm, &mut Rng::new(a.get_u64("seed")?)),
+        path => checkpoint::load(&PathBuf::from(path))?,
+    };
+    let params = state.param_tensors(mm);
+    let decode = spdf::generate::DecodeEngine::new(&runtime, &params)?;
+
+    let task = Task::parse(a.get("task"))?;
+    let examples = &world.task(task).test;
+    anyhow::ensure!(!examples.is_empty(), "task has no test examples");
+    let n = a.get_usize("requests")?;
+    let max_new = a.get_usize("max-new-tokens")?;
+    let t = mm.config.ctx_len;
+    let requests: Vec<spdf::generate::DecodeRequest> = (0..n)
+        .map(|i| spdf::generate::DecodeRequest::new(
+            i as u64,
+            coordinator::prompt_tokens(
+                &world.tokenizer, &examples[i % examples.len()].input,
+                t),
+            max_new))
+        .collect();
+
+    let dp = DecodeParams {
+        max_new_tokens: max_new,
+        ..Default::default()
+    };
+    let total = Timer::start();
+    let report = decode.serve(&requests, &dp)?;
+    eprintln!("[spdf] served {} requests in {:.1}s", n, total.secs());
+    println!("{}", report::serve_table(&report.stats,
+                                       &report.results));
+    match a.get("stats-json") {
+        "" => {}
+        path => {
+            std::fs::write(path,
+                           report.stats.to_json().to_string_pretty())?;
+            eprintln!("[spdf] stats written to {path}");
         }
     }
     Ok(())

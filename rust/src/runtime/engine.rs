@@ -9,8 +9,65 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::manifest::{ArtifactSpec, Manifest, ModelManifest};
+use super::manifest::{ArtifactSpec, Manifest, ModelManifest,
+                      TensorSpec};
 use super::tensor::HostTensor;
+
+/// Host tensors uploaded to XLA literals **once** and reused across
+/// many `run_raw` calls — the pattern `train/session.rs` proved for the
+/// training loop, packaged for any session-resident input set (decode
+/// parameters, fixed masks, …). Validate against the artifact's spec at
+/// construction via [`LiteralCache::upload_validated`], then the hot
+/// loop pays neither validation nor re-upload.
+pub struct LiteralCache {
+    lits: Vec<xla::Literal>,
+}
+
+impl LiteralCache {
+    /// Upload without validation (caller has already checked shapes).
+    pub fn upload(tensors: &[HostTensor]) -> anyhow::Result<LiteralCache> {
+        let lits = tensors
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(LiteralCache { lits })
+    }
+
+    /// Upload after checking every tensor against the matching spec
+    /// slot — the once-per-session stand-in for `Executable::run`'s
+    /// per-call validation.
+    pub fn upload_validated(tensors: &[HostTensor], specs: &[TensorSpec])
+                            -> anyhow::Result<LiteralCache> {
+        anyhow::ensure!(
+            tensors.len() == specs.len(),
+            "literal cache: got {} tensors for {} spec slots",
+            tensors.len(), specs.len()
+        );
+        for (i, (t, s)) in tensors.iter().zip(specs).enumerate() {
+            anyhow::ensure!(
+                t.matches(s),
+                "literal cache slot #{i} ({}): shape/dtype {:?}/{:?} \
+                 does not match manifest {:?}/{:?}",
+                s.name, t.shape(), t.dtype(), s.shape, s.dtype
+            );
+        }
+        Self::upload(tensors)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    /// Borrowed literals in upload order, ready to extend a `run_raw`
+    /// input list.
+    pub fn refs(&self) -> impl Iterator<Item = &xla::Literal> {
+        self.lits.iter()
+    }
+}
 
 /// A compiled artifact, ready to execute.
 pub struct Executable {
@@ -37,9 +94,10 @@ impl Executable {
         })
     }
 
-    /// Execute with spec validation; returns outputs in manifest order.
-    pub fn run(&self, inputs: &[HostTensor])
-               -> anyhow::Result<Vec<HostTensor>> {
+    /// Check a full input list against the manifest spec (what `run`
+    /// does per call; hot paths do it once at setup instead).
+    pub fn validate_inputs(&self, inputs: &[HostTensor])
+                           -> anyhow::Result<()> {
         anyhow::ensure!(
             inputs.len() == self.spec.inputs.len(),
             "artifact {}: got {} inputs, expected {}",
@@ -56,6 +114,13 @@ impl Executable {
                 s.shape, s.dtype
             );
         }
+        Ok(())
+    }
+
+    /// Execute with spec validation; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostTensor])
+               -> anyhow::Result<Vec<HostTensor>> {
+        self.validate_inputs(inputs)?;
         let literals: Vec<xla::Literal> = inputs.iter()
             .map(|t| t.to_literal())
             .collect::<anyhow::Result<_>>()?;

@@ -6,7 +6,7 @@ pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
-pub use engine::{Engine, Executable, ModelRuntime};
+pub use engine::{Engine, Executable, LiteralCache, ModelRuntime};
 pub use manifest::{ArtifactSpec, Dtype, InitKind, Manifest,
                    ModelManifest, ParamSpec, TensorSpec};
 pub use tensor::HostTensor;

@@ -90,17 +90,32 @@ impl HostTensor {
 
     /// Convert to an xla literal.
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        let (bytes, ty, shape): (&[u8], xla::ElementType, &[usize]) =
-            match self {
-                HostTensor::F32 { shape, data } => (
-                    bytemuck_f32(data), xla::ElementType::F32, shape,
-                ),
-                HostTensor::I32 { shape, data } => (
-                    bytemuck_i32(data), xla::ElementType::S32, shape,
-                ),
-            };
+        match self {
+            HostTensor::F32 { shape, data } => {
+                HostTensor::literal_f32(shape, data)
+            }
+            HostTensor::I32 { shape, data } => {
+                HostTensor::literal_i32(shape, data)
+            }
+        }
+    }
+
+    /// Build an f32 literal straight from a borrowed slice — the decode
+    /// hot loop re-uploads its token buffer every step and must not pay
+    /// a `Vec` clone + `HostTensor` allocation on the way.
+    pub fn literal_f32(shape: &[usize], data: &[f32])
+                       -> anyhow::Result<xla::Literal> {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Ok(xla::Literal::create_from_shape_and_untyped_data(
-            ty, shape, bytes)?)
+            xla::ElementType::F32, shape, bytemuck_f32(data))?)
+    }
+
+    /// i32 twin of [`HostTensor::literal_f32`].
+    pub fn literal_i32(shape: &[usize], data: &[i32])
+                       -> anyhow::Result<xla::Literal> {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32, shape, bytemuck_i32(data))?)
     }
 
     /// Convert back from an xla literal.
@@ -167,6 +182,20 @@ mod tests {
         let lit = t.to_literal().unwrap();
         let back = HostTensor::from_literal(&lit).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn borrowed_literal_matches_owned_path() {
+        let shape = [2usize, 3];
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = HostTensor::literal_f32(&shape, &data).unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, HostTensor::from_f32(&shape, data.to_vec()));
+
+        let idata = [7i32, -8, 9];
+        let lit = HostTensor::literal_i32(&[3], &idata).unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &idata);
     }
 
     #[test]

@@ -24,9 +24,12 @@ impl Csr {
     /// Build from a dense row-major matrix, dropping exact zeros.
     pub fn from_dense(dense: &[f32], rows: usize, cols: usize) -> Csr {
         assert_eq!(dense.len(), rows * cols);
+        // exact nnz in one streaming pass: large mask matrices would
+        // otherwise realloc col_idx/values ~log2(nnz) times
+        let nnz = dense.iter().filter(|&&v| v != 0.0).count();
         let mut row_ptr = Vec::with_capacity(rows + 1);
-        let mut col_idx = Vec::new();
-        let mut values = Vec::new();
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
         row_ptr.push(0);
         for r in 0..rows {
             for c in 0..cols {
@@ -45,9 +48,13 @@ impl Csr {
     /// representative of an unstructured random mask).
     pub fn random(rows: usize, cols: usize, sparsity: f64, rng: &mut Rng)
                   -> Csr {
+        // expected nnz + 2% Bernoulli headroom, capped at the dense size
+        let expect = ((rows * cols) as f64 * (1.0 - sparsity) * 1.02)
+            .ceil() as usize;
+        let expect = (expect + 16).min(rows * cols);
         let mut row_ptr = Vec::with_capacity(rows + 1);
-        let mut col_idx = Vec::new();
-        let mut values = Vec::new();
+        let mut col_idx = Vec::with_capacity(expect);
+        let mut values = Vec::with_capacity(expect);
         row_ptr.push(0);
         for _ in 0..rows {
             for c in 0..cols {

@@ -7,18 +7,25 @@
 //! shared atomic work queue (dynamic load balancing).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-/// Number of workers to use: respects SPDF_THREADS, else available cores.
+/// Number of workers to use: respects SPDF_THREADS, else available
+/// cores. Resolved **once per process** — the CSR matmul calls this per
+/// chunk-size computation, and a getenv + parse on every matmul is
+/// measurable noise. Set SPDF_THREADS before the first parallel call;
+/// later changes to the variable are ignored (see rust/README.md).
 pub fn worker_count() -> usize {
-    if let Ok(v) = std::env::var("SPDF_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPDF_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    })
 }
 
 /// Apply `f` to every index in [0, n) on a worker pool; results returned
@@ -86,6 +93,13 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn worker_count_positive_and_stable() {
+        let a = worker_count();
+        assert!(a >= 1);
+        assert_eq!(a, worker_count());
+    }
 
     #[test]
     fn parallel_map_preserves_order() {

@@ -7,7 +7,8 @@
 
 use spdf::coordinator::{self, World, WorldConfig};
 use spdf::data::{PackedStream, Task};
-use spdf::generate::DecodeParams;
+use spdf::generate::{reference, DecodeEngine, DecodeParams,
+                     DecodeRequest};
 use spdf::runtime::{Engine, HostTensor};
 use spdf::sparsity::{MaskScheme, MaskSet};
 use spdf::tokenizer::{BOS, SEP};
@@ -190,6 +191,97 @@ fn greedy_decode_generates_tokens() {
         assert!(o.len() <= 8);
         assert!(o.iter().all(|&t| (t as usize) < mm.config.vocab_size));
     }
+}
+
+#[test]
+fn decode_engine_matches_reference_bit_for_bit() {
+    // the literal-resident engine (run_raw + partial top-k) must be
+    // indistinguishable from the old path (per-step upload + full
+    // sort), with and without n-gram blocking
+    let engine = engine();
+    let runtime = engine.load_model("gpt-nano").unwrap();
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(42));
+    let params = state.param_tensors(mm);
+    let prompts = vec![
+        vec![BOS, 40, 41, SEP],
+        vec![BOS, 50, 51, 52, SEP],
+    ];
+    for ngram in [0usize, 2] {
+        let dp = DecodeParams {
+            max_new_tokens: 10,
+            no_repeat_ngram: ngram,
+            ..Default::default()
+        };
+        let old = reference::greedy(&runtime, &params, &prompts, &dp)
+            .unwrap();
+        let new = spdf::generate::greedy(&runtime, &params, &prompts,
+                                         &dp).unwrap();
+        assert_eq!(old, new, "greedy diverged at ngram={ngram}");
+    }
+    let dp = DecodeParams {
+        max_new_tokens: 8,
+        beam_size: 3,
+        ..Default::default()
+    };
+    let old = reference::beam(&runtime, &params, &prompts[0], &dp)
+        .unwrap();
+    let new = spdf::generate::beam(&runtime, &params, &prompts[0], &dp)
+        .unwrap();
+    assert_eq!(old, new, "beam diverged");
+}
+
+#[test]
+fn slot_refill_serve_matches_solo_greedy() {
+    // oversubscribe the batch with mixed budgets so slots refill
+    // mid-flight; every request must decode exactly as it would alone
+    let engine = engine();
+    let runtime = engine.load_model("gpt-nano").unwrap();
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(6));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let b = mm.decode_batch;
+    let n = 2 * b + 1;
+    let prompts: Vec<Vec<u32>> = (0..n)
+        .map(|i| vec![BOS, 30 + i as u32, SEP])
+        .collect();
+    let requests: Vec<DecodeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| DecodeRequest::new(i as u64, p.clone(),
+                                         4 + i % 5))
+        .collect();
+    let report = decode.serve(&requests,
+                              &DecodeParams::default()).unwrap();
+
+    assert_eq!(report.results.len(), n);
+    for (i, (res, p)) in
+        report.results.iter().zip(&prompts).enumerate()
+    {
+        assert_eq!(res.id, i as u64);
+        let dp = DecodeParams {
+            max_new_tokens: 4 + i % 5,
+            ..Default::default()
+        };
+        let solo =
+            decode.greedy(std::slice::from_ref(p), &dp).unwrap();
+        assert_eq!(res.tokens, solo[0],
+                   "slot-refilled request {i} diverged");
+    }
+    let st = &report.stats;
+    assert!(st.engine_steps > 0);
+    assert!(st.occupancy > 0.0 && st.occupancy <= 1.0);
+    assert_eq!(
+        st.generated_tokens,
+        report.results.iter()
+            .map(|r| r.tokens.len() as u64)
+            .sum::<u64>()
+    );
+    // the queue really waited: someone entered after step 0
+    assert!(report.results.iter().any(|r| r.queue_steps > 0),
+            "oversubscribed stream should have queued requests");
 }
 
 #[test]

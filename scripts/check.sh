@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1+ gate: build, tests, lints, decode perf smoke.
+#
+#   scripts/check.sh            full gate
+#   SKIP_CLIPPY=1 scripts/check.sh   when clippy is unavailable
+#
+# The decode smoke writes BENCH_decode.json at the repo root
+# (tokens/sec, mean step ms, batch occupancy) so the serving perf
+# trajectory is tracked across PRs — see rust/README.md §Serving
+# performance.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy -- -D warnings
+fi
+
+echo "== decode perf smoke (BENCH_decode.json) =="
+rm -f "$ROOT/BENCH_decode.json"
+SPDF_BENCH_SMOKE=1 SPDF_BENCH_OUT="$ROOT/BENCH_decode.json" \
+    cargo bench --bench perf_decode
+# perf_decode exits 0 with a notice when artifacts are missing; a
+# green gate must mean the smoke actually ran and left a datapoint
+if [ ! -f "$ROOT/BENCH_decode.json" ]; then
+    echo "check.sh: perf_decode smoke produced no BENCH_decode.json" \
+         "(AOT artifacts missing? run \`make artifacts\`)" >&2
+    exit 1
+fi
+
+echo "check.sh: all gates passed"
