@@ -106,10 +106,12 @@ pub struct ServeReport {
     pub stats: ServeStats,
 }
 
-/// A batch slot currently decoding one request.
+/// A batch slot currently decoding one request. The slot's cursor
+/// lives only in the shared `pos` buffer fed to `step_logits` — a
+/// slot-local copy would have to be advanced in lockstep and has
+/// already caused one logits-read-at-stale-position bug.
 struct Slot {
     req: usize, // index into `requests`
-    pos: usize, // index of the last filled token in the row
     out: Vec<u32>,
     entered_step: u64,
 }
@@ -117,21 +119,23 @@ struct Slot {
 /// Write a request's prompt into row `slot` of the token buffer,
 /// clearing stale tokens from the previous occupant first (junk
 /// *before* `pos` would leak into the new request's context).
+/// `serve` validates up front that the prompt is non-empty and fits
+/// the row (`len < t`).
 fn fill_slot(
     tokens: &mut [i32],
     pos: &mut [i32],
     t: usize,
     slot: usize,
     prompt: &[u32],
-) -> usize {
+) {
+    debug_assert!(!prompt.is_empty() && prompt.len() < t,
+                  "serve() validates prompt lengths up front");
     let row = &mut tokens[slot * t..(slot + 1) * t];
     row.fill(0);
-    let plen = prompt.len().min(t - 1);
-    for (j, &tok) in prompt.iter().take(plen).enumerate() {
+    for (j, &tok) in prompt.iter().enumerate() {
         row[j] = tok as i32;
     }
-    pos[slot] = plen as i32 - 1;
-    plen - 1
+    pos[slot] = prompt.len() as i32 - 1;
 }
 
 /// Complete zero-budget requests immediately (greedy with
@@ -172,6 +176,13 @@ pub fn serve(
     let vocab = engine.vocab();
     anyhow::ensure!(requests.iter().all(|r| !r.prompt.is_empty()),
                     "empty prompt in decode request stream");
+    anyhow::ensure!(
+        requests.iter().all(|r| r.prompt.len() < t),
+        "prompt longer than ctx_len - 1 ({}) in decode request \
+         stream — pre-truncate (keeping the tail) with \
+         coordinator::prompt_tokens",
+        t - 1
+    );
 
     let t0 = Instant::now();
     let mut tokens = vec![0i32; b * t];
@@ -190,11 +201,10 @@ pub fn serve(
         if next_req >= requests.len() {
             break;
         }
-        let p = fill_slot(&mut tokens, &mut pos, t, s,
-                          &requests[next_req].prompt);
+        fill_slot(&mut tokens, &mut pos, t, s,
+                  &requests[next_req].prompt);
         slots[s] = Some(Slot {
             req: next_req,
-            pos: p,
             out: Vec::new(),
             entered_step: 0,
         });
@@ -212,15 +222,16 @@ pub fn serve(
                 let Some(slot) = slots[s].as_mut() else { continue };
                 let max_new = requests[slot.req].max_new_tokens;
                 let row = &lv[s * vocab..(s + 1) * vocab];
+                let cur = pos[s] as usize;
                 let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
-                    (0..=slot.pos).map(|j| tokens[s * t + j] as u32)
+                    (0..=cur).map(|j| tokens[s * t + j] as u32)
                         .collect()
                 } else {
                     Vec::new()
                 };
                 let next = topk::pick_next(row, &ctx,
                                            dp.no_repeat_ngram);
-                let new_pos = slot.pos + 1;
+                let new_pos = cur + 1;
                 if next == EOS || new_pos >= t - 1 {
                     if next != EOS && new_pos < t {
                         slot.out.push(next);
@@ -228,7 +239,7 @@ pub fn serve(
                     true
                 } else {
                     tokens[s * t + new_pos] = next as i32;
-                    slot.pos = new_pos;
+                    pos[s] = new_pos as i32;
                     slot.out.push(next);
                     slot.out.len() >= max_new
                 }
@@ -248,11 +259,10 @@ pub fn serve(
                                   &mut results, engine_steps,
                                   t0.elapsed().as_secs_f64() * 1e3);
                 if next_req < requests.len() {
-                    let p = fill_slot(&mut tokens, &mut pos, t, s,
-                                      &requests[next_req].prompt);
+                    fill_slot(&mut tokens, &mut pos, t, s,
+                              &requests[next_req].prompt);
                     slots[s] = Some(Slot {
                         req: next_req,
-                        pos: p,
                         out: Vec::new(),
                         entered_step: engine_steps,
                     });
@@ -311,8 +321,7 @@ mod tests {
         let t = 8;
         let mut tokens = vec![7i32; 2 * t];
         let mut pos = vec![5i32; 2];
-        let p = fill_slot(&mut tokens, &mut pos, t, 1, &[9, 10]);
-        assert_eq!(p, 1);
+        fill_slot(&mut tokens, &mut pos, t, 1, &[9, 10]);
         assert_eq!(pos[1], 1);
         assert_eq!(&tokens[t..], &[9, 10, 0, 0, 0, 0, 0, 0]);
         // row 0 untouched
@@ -320,14 +329,13 @@ mod tests {
     }
 
     #[test]
-    fn fill_slot_truncates_long_prompt() {
+    fn fill_slot_max_length_prompt_fits() {
+        // longest prompt serve() admits: t - 1 tokens, pos on the last
         let t = 4;
         let mut tokens = vec![0i32; t];
         let mut pos = vec![0i32; 1];
-        let prompt: Vec<u32> = (1..=10).collect();
-        let p = fill_slot(&mut tokens, &mut pos, t, 0, &prompt);
-        // plen = t - 1 = 3 tokens kept, pos on the last one
-        assert_eq!(p, 2);
+        fill_slot(&mut tokens, &mut pos, t, 0, &[1, 2, 3]);
+        assert_eq!(pos[0], 2);
         assert_eq!(tokens, vec![1, 2, 3, 0]);
     }
 

@@ -20,7 +20,6 @@ use super::topk;
 use super::DecodeParams;
 
 pub struct DecodeEngine<'a> {
-    pub runtime: &'a ModelRuntime,
     exe: &'a Executable,
     params: LiteralCache,
     b: usize,
@@ -62,7 +61,6 @@ impl<'a> DecodeEngine<'a> {
         let params = LiteralCache::upload_validated(
             params, &spec.inputs[..params.len()])?;
         Ok(DecodeEngine {
-            runtime,
             exe,
             params,
             b,
@@ -104,7 +102,11 @@ impl<'a> DecodeEngine<'a> {
     /// Greedy decode a batch of prompts (token ids, unpadded). Returns
     /// the generated continuations (without the prompt, without EOS).
     /// Bit-identical to `generate::reference::greedy` (and, for
-    /// `no_repeat_ngram == 0`, to the pre-engine implementation).
+    /// `no_repeat_ngram == 0`, to the pre-engine implementation) for
+    /// prompts that fit the context (`len <= ctx_len - 1`). Longer
+    /// prompts now error instead of being silently head-truncated to
+    /// garbage — pre-truncate (keeping the tail) with
+    /// `coordinator::prompt_tokens`.
     ///
     /// This is the one-slot-per-prompt special case of the slot-refill
     /// state machine in [`super::batching`] — one implementation, one
@@ -127,20 +129,31 @@ impl<'a> DecodeEngine<'a> {
     /// Beam-search decode a *single* prompt using the batch slots as
     /// beams. Expansion candidates come from a partial top-2k instead
     /// of a full-vocab sort — the exact same 2k-prefix the old path
-    /// read off its stable full sort.
+    /// read off its stable full sort. Like [`Self::greedy`], prompts
+    /// must fit the context (`len <= ctx_len - 2`, one step of
+    /// headroom); over-length prompts error instead of being silently
+    /// head-truncated — pre-truncate (keeping the tail) with
+    /// `coordinator::prompt_tokens`.
     pub fn beam(&self, prompt: &[u32], dp: &DecodeParams)
                 -> anyhow::Result<Vec<u32>> {
         let (b, t, vocab) = (self.b, self.t, self.vocab);
         let k = dp.beam_size.clamp(1, b);
+        anyhow::ensure!(!prompt.is_empty(), "empty beam prompt");
+        anyhow::ensure!(
+            prompt.len() <= t - 2,
+            "beam prompt longer than ctx_len - 2 ({}) — pre-truncate \
+             (keeping the tail) with coordinator::prompt_tokens",
+            t - 2
+        );
 
         #[derive(Clone)]
         struct Beam {
             seq: Vec<u32>, // prompt + generated
             logp: f64,
         }
-        let plen = prompt.len().min(t - 2);
+        let plen = prompt.len();
         let mut beams = vec![Beam {
-            seq: prompt[..plen].to_vec(),
+            seq: prompt.to_vec(),
             logp: 0.0,
         }];
         let mut finished: Vec<Beam> = Vec::new();

@@ -265,8 +265,12 @@ fn slot_refill_serve_matches_solo_greedy() {
             max_new_tokens: 4 + i % 5,
             ..Default::default()
         };
-        let solo =
-            decode.greedy(std::slice::from_ref(p), &dp).unwrap();
+        // oracle is the independent pre-engine path, NOT
+        // DecodeEngine::greedy (which is itself built on serve and
+        // would self-compare away shared bugs)
+        let solo = reference::greedy(&runtime, &params,
+                                     std::slice::from_ref(p), &dp)
+            .unwrap();
         assert_eq!(res.tokens, solo[0],
                    "slot-refilled request {i} diverged");
     }
