@@ -1,0 +1,29 @@
+# SPDF reproduction — top-level convenience targets.
+#
+#   make artifacts   lower the JAX graphs to HLO artifacts + manifest
+#   make check       full tier-1+ gate (scripts/check.sh)
+#   make test        cargo test only
+#   make bench       decode perf bench (refreshes BENCH_decode.json)
+#
+# Every rust binary loads the AOT artifacts at startup, so `make
+# artifacts` must run before `make check`/`make test`. The target also
+# links rust/artifacts -> ../artifacts so cargo invocations from the
+# rust/ workspace find them without setting SPDF_ARTIFACTS.
+
+.PHONY: artifacts check test bench clean-artifacts
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+	ln -sfn ../artifacts rust/artifacts
+
+check:
+	scripts/check.sh
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench perf_decode
+
+clean-artifacts:
+	rm -rf artifacts rust/artifacts

@@ -4,7 +4,9 @@ For every simulation model config this emits:
 
   artifacts/<model>.train_step.hlo.txt   sparse/dense AdamW step
   artifacts/<model>.eval_loss.hlo.txt    summed CE + token count
-  artifacts/<model>.logits_last.hlo.txt  decode primitive
+  artifacts/<model>.logits_last.hlo.txt  decode primitive (full recompute)
+  artifacts/<model>.prefill.hlo.txt      KV-cache population per slot
+  artifacts/<model>.decode_step.hlo.txt  KV-cache incremental decode
   artifacts/manifest.json                everything rust needs to marshal
 
 Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
@@ -132,6 +134,24 @@ def build_artifacts(cfg, out_dir, use_pallas=True):
     emit("logits_last", logits_last, (params, dec_tokens, pos),
          ("params", "tokens", "pos"))
 
+    # KV-cache serving pair: prefill populates a slot's per-layer K/V
+    # state from its prompt; decode_step advances one token per call.
+    # The cache crosses the artifact boundary as explicit inputs and
+    # outputs — the rust runtime holds it as session state and feeds
+    # each step's output literals back in.
+    kv_specs = M.kv_cache_specs(cfg, DECODE_BATCH)
+    kv_cache = {n: jnp.zeros(s, jnp.float32) for n, s in kv_specs}
+    next_token = jnp.zeros((DECODE_BATCH,), jnp.int32)
+    refill = jnp.zeros((DECODE_BATCH,), jnp.float32)
+
+    prefill = M.make_prefill(cfg, use_pallas=use_pallas)
+    emit("prefill", prefill, (params, kv_cache, dec_tokens, pos, refill),
+         ("params", "kv", "tokens", "pos", "refill"))
+
+    decode_step = M.make_decode_step(cfg)
+    emit("decode_step", decode_step, (params, kv_cache, next_token, pos),
+         ("params", "kv", "next_token", "pos"))
+
     return {
         "config": cfg.to_dict(),
         "train_batch": TRAIN_BATCH,
@@ -139,6 +159,10 @@ def build_artifacts(cfg, out_dir, use_pallas=True):
         "decode_batch": DECODE_BATCH,
         "params": [{"name": n, "shape": list(s), "init": k}
                    for n, s, k in specs],
+        # decode session-state tensors (KV cache), in flatten order —
+        # the rust SessionState zero-initializes and round-trips these
+        "decode_state": [{"name": n, "shape": list(s),
+                          "dtype": "float32"} for n, s in kv_specs],
         "masked_params": masked,
         "decay_params": M.decay_param_names(cfg),
         "artifacts": artifacts,

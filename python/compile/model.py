@@ -22,6 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from .kernels import masked_matmul, causal_attention
+# masked-score fill value shared with the fused kernel so the KV
+# decode path's softmax reproduces its masked-lane math exactly
+from .kernels.attention import NEG_INF
 
 # ---------------------------------------------------------------------------
 # Optimizer / training constants (paper Appendix A.1)
@@ -212,12 +215,17 @@ def _attention_pallas(q, k, v, n_heads):
 
 
 def gpt_forward(cfg: GPTConfig, params, tokens, masks=None,
-                use_pallas=True, fused_attn=False):
+                use_pallas=True, fused_attn=False, return_kv=False):
     """Token logits for a (B, T) int32 batch.
 
     masks: dict name->f32 mask for the sparsified weights, or None for a
     fully dense forward (valid whenever params are stored masked, which
     the train_step output invariant guarantees).
+
+    return_kv: also return the per-layer attention K/V activations
+    (pre-head-split, post-bias) as a dict ``{"h<i>.k": (B, T, D), ...}``
+    — the tensors the KV-cache decode path (``make_decode_step``) reads
+    back.  The logits computation is unchanged.
     """
     b, t = tokens.shape
 
@@ -226,6 +234,7 @@ def gpt_forward(cfg: GPTConfig, params, tokens, masks=None,
             return None
         return masks.get(name)
 
+    kv = {}
     h = params["wte"][tokens] + params["wpe"][:t][None, :, :]
     for i in range(cfg.n_layers):
         p = f"h{i}."
@@ -236,6 +245,9 @@ def gpt_forward(cfg: GPTConfig, params, tokens, masks=None,
                     mask_of(p + "attn.wk"), use_pallas)
         v = _linear(x, params[p + "attn.wv"], params[p + "attn.bv"],
                     mask_of(p + "attn.wv"), use_pallas)
+        if return_kv:
+            kv[f"h{i}.k"] = k
+            kv[f"h{i}.v"] = v
         attn = _attention_pallas(q, k, v, cfg.n_heads) if fused_attn \
             else _attention_jnp(q, k, v, cfg.n_heads)
         h = h + _linear(attn, params[p + "attn.wd"], params[p + "attn.bd"],
@@ -249,6 +261,8 @@ def gpt_forward(cfg: GPTConfig, params, tokens, masks=None,
     h = _layer_norm(h, params["lnf.g"], params["lnf.b"])
     # tied output embedding
     logits = h @ params["wte"].T
+    if return_kv:
+        return logits, kv
     return logits
 
 
@@ -353,3 +367,152 @@ def make_logits_last(cfg: GPTConfig, use_pallas=True, fused_attn=True):
         return logits[jnp.arange(b), pos, :]
 
     return logits_last
+
+
+# ---------------------------------------------------------------------------
+# KV-cache incremental decode
+# ---------------------------------------------------------------------------
+#
+# ``logits_last`` recomputes the full (B, T) forward per generated token
+# — O(T^2) total work per request. The incremental pair below converts
+# decode to O(T): ``prefill`` populates a slot's per-layer K/V cache
+# from its prompt (one full forward), then ``decode_step`` advances one
+# token per call, touching only (B,)-sized token/pos buffers plus the
+# cache state tensors the runtime feeds back output→input.
+
+def kv_cache_specs(cfg: GPTConfig, batch: int):
+    """Ordered (name, shape) specs of the decode session state: one K
+    and one V tensor per layer, (batch, ctx_len, d_model) f32, stored
+    pre-head-split exactly as the attention linears emit them. Names
+    sort in layer order for n_layers < 10, so jax dict-flatten order ==
+    spec order — the contract the rust session state relies on."""
+    specs = []
+    for i in range(cfg.n_layers):
+        specs.append((f"h{i}.k", (batch, cfg.ctx_len, cfg.d_model)))
+        specs.append((f"h{i}.v", (batch, cfg.ctx_len, cfg.d_model)))
+    return specs
+
+
+def init_kv_cache(cfg: GPTConfig, batch: int):
+    """Zero-initialized cache tree (the pre-first-prefill state)."""
+    return {n: jnp.zeros(s, jnp.float32)
+            for n, s in kv_cache_specs(cfg, batch)}
+
+
+def _cache_write(cache, vec, pos):
+    """Write ``vec[b]`` into ``cache[b, pos[b], :]`` (per-layer
+    dynamic_update_slice, vmapped over the batch)."""
+
+    def write_row(c, x, p):
+        return jax.lax.dynamic_update_slice(c, x[None, :], (p, 0))
+
+    return jax.vmap(write_row)(cache, vec, pos)
+
+
+def _cached_attention(q, ck, cv, pos, n_heads):
+    """One-query-per-row attention over a (B, T, D) K/V cache.
+
+    Mirrors the single-block numerics of ``kernels.causal_attention``
+    (interpret-mode online softmax with one key block at T <= 128):
+    scale by multiplication, mask invalid lanes to NEG_INF, subtract
+    the running max, and normalize ``p @ v`` by the summed denominator
+    *after* the value contraction. Keeping the op sequence identical is
+    what lets KV greedy decode stay bit-compatible with the
+    ``logits_last`` path.
+    """
+    b, t, d = ck.shape
+    dh = d // n_heads
+    scale = 1.0 / (dh ** 0.5)
+    qh = q.reshape(b, n_heads, dh)
+    kh = ck.reshape(b, t, n_heads, dh)
+    vh = cv.reshape(b, t, n_heads, dh)
+    s = jnp.einsum("bhd,bthd->bht", qh, kh) * scale
+    valid = jnp.arange(t)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bht,bthd->bhd", p, vh)
+    return (acc / l.reshape(b, n_heads, 1)).reshape(b, d)
+
+
+def make_decode_step(cfg: GPTConfig):
+    """Build the incremental decode step.
+
+    signature:
+      (params, kv_cache, next_token i32 (B,), pos i32 (B,))
+      -> (logits (B, vocab), kv_cache')
+
+    ``next_token[b]`` is the token at position ``pos[b]`` (already
+    appended by the host); the step writes its K/V into the cache at
+    ``pos`` and returns the logits predicting position ``pos + 1``.
+    The cache rows above ``pos`` may hold garbage — attention masks
+    them out, and generation overwrites them before they ever become
+    visible. Params are stored masked (the train_step invariant), so
+    the forward is dense.
+    """
+    # The incremental softmax mirrors the fused kernel's *single-block*
+    # numerics; at ctx_len > 128 the kernel sweeps multiple key blocks
+    # with a running max and last-bit equality would silently break.
+    # Longer-context configs need block-aware math here first.
+    assert cfg.ctx_len <= 128, (
+        f"decode_step bit-identity contract only holds for ctx_len <= "
+        f"128 (single attention key block); got {cfg.ctx_len}"
+    )
+
+    def decode_step(params, kv_cache, next_token, pos):
+        h = params["wte"][next_token] + params["wpe"][pos]
+        new_kv = {}
+        for i in range(cfg.n_layers):
+            p = f"h{i}."
+            x = _layer_norm(h, params[p + "ln1.g"], params[p + "ln1.b"])
+            q = _linear(x, params[p + "attn.wq"], params[p + "attn.bq"])
+            k = _linear(x, params[p + "attn.wk"], params[p + "attn.bk"])
+            v = _linear(x, params[p + "attn.wv"], params[p + "attn.bv"])
+            ck = _cache_write(kv_cache[f"h{i}.k"], k, pos)
+            cv = _cache_write(kv_cache[f"h{i}.v"], v, pos)
+            new_kv[f"h{i}.k"] = ck
+            new_kv[f"h{i}.v"] = cv
+            attn = _cached_attention(q, ck, cv, pos, cfg.n_heads)
+            h = h + _linear(attn, params[p + "attn.wd"],
+                            params[p + "attn.bd"])
+            x = _layer_norm(h, params[p + "ln2.g"], params[p + "ln2.b"])
+            x = _linear(x, params[p + "mlp.wi"], params[p + "mlp.bi"])
+            x = jax.nn.gelu(x)
+            h = h + _linear(x, params[p + "mlp.wo"],
+                            params[p + "mlp.bo"])
+        h = _layer_norm(h, params["lnf.g"], params["lnf.b"])
+        logits = h @ params["wte"].T
+        return logits, new_kv
+
+    return decode_step
+
+
+def make_prefill(cfg: GPTConfig, use_pallas=True, fused_attn=True):
+    """Build the per-slot cache prefill.
+
+    signature:
+      (params, kv_cache, tokens i32 (B, T), pos i32 (B,),
+       refill f32 (B,))
+      -> (logits (B, vocab), kv_cache')
+
+    Rows with ``refill > 0.5`` get their cache recomputed from
+    ``tokens`` (one full forward — the same graph as ``logits_last``
+    plus the K/V taps); rows with ``refill == 0`` pass their cache
+    through untouched, so one batch slot can be re-prompted mid-flight
+    without disturbing its neighbours. Returned logits are read at
+    ``pos`` for every row; callers use the refilled rows' entries.
+    """
+
+    def prefill(params, kv_cache, tokens, pos, refill):
+        logits, new_kv = gpt_forward(cfg, params, tokens, masks=None,
+                                     use_pallas=use_pallas,
+                                     fused_attn=fused_attn,
+                                     return_kv=True)
+        b = tokens.shape[0]
+        sel = refill[:, None, None] > 0.5
+        out_kv = {n: jnp.where(sel, new_kv[n], kv_cache[n])
+                  for n in kv_cache}
+        return logits[jnp.arange(b), pos, :], out_kv
+
+    return prefill

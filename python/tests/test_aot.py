@@ -70,6 +70,36 @@ class TestManifest:
         assert shapes["wte"] == [cfg.vocab_size, cfg.d_model]
         assert shapes["h0.mlp.wi"] == [cfg.d_model, 4 * cfg.d_model]
 
+    def test_decode_state_specs_and_artifact_wiring(self, built):
+        """decode_step inputs = params ++ kv state ++ (next_token, pos);
+        outputs = logits ++ kv state. prefill adds tokens/refill. The
+        manifest's decode_state block is the rust SessionState spec."""
+        _, cfg, entry = built
+        st = entry["decode_state"]
+        b, t, d = aot.DECODE_BATCH, cfg.ctx_len, cfg.d_model
+        assert [s["name"] for s in st] == \
+            sorted(s["name"] for s in st)
+        assert len(st) == 2 * cfg.n_layers
+        assert all(s["shape"] == [b, t, d] for s in st)
+        n_params = len(entry["params"])
+        n_state = len(st)
+
+        dec = entry["artifacts"]["decode_step"]
+        assert len(dec["inputs"]) == n_params + n_state + 2
+        kv_in = dec["inputs"][n_params:n_params + n_state]
+        assert [i["name"] for i in kv_in] == \
+            [f"kv/{s['name']}" for s in st]
+        assert dec["inputs"][-2]["shape"] == [b]  # next_token
+        assert dec["inputs"][-1]["shape"] == [b]  # pos
+        assert len(dec["outputs"]) == 1 + n_state
+        assert dec["outputs"][0]["shape"] == [b, cfg.vocab_size]
+
+        pre = entry["artifacts"]["prefill"]
+        assert len(pre["inputs"]) == n_params + n_state + 3
+        assert pre["inputs"][-3]["shape"] == [b, t]  # tokens
+        assert pre["inputs"][-1]["dtype"] == "float32"  # refill
+        assert len(pre["outputs"]) == 1 + n_state
+
 
 class TestHloRoundTrip:
     def test_hlo_text_parameter_count_matches_manifest(self, built):
@@ -121,6 +151,7 @@ class TestCliEndToEnd:
         assert "gpt-nano" in manifest["models"]
         m = manifest["models"]["gpt-nano"]
         assert set(m["artifacts"]) == {"train_step", "eval_loss",
-                                       "logits_last"}
+                                       "logits_last", "prefill",
+                                       "decode_step"}
         for art in m["artifacts"].values():
             assert (tmp_path / art["file"]).exists()

@@ -191,6 +191,117 @@ class TestEvalAndDecode:
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
 
 
+class TestKvDecode:
+    """The KV-cache incremental pair must be *bit-identical* to the
+    full-recompute ``logits_last`` path — the rust serve loop's
+    equivalence guarantee sits on exactly this property."""
+
+    def _decode_setup(self, seed=0, b=4):
+        key = jax.random.PRNGKey(seed)
+        params = M.init_params(CFG, key)
+        t, v = CFG.ctx_len, CFG.vocab_size
+        rng = np.random.default_rng(seed)
+        plens = [3 + 2 * i for i in range(b)]
+        tokens = np.zeros((b, t), np.int32)
+        for i, plen in enumerate(plens):
+            tokens[i, :plen] = rng.integers(4, v, size=plen)
+        pos = np.array([plen - 1 for plen in plens], np.int32)
+        return params, tokens, pos
+
+    def test_prefill_matches_logits_last_bitwise(self):
+        params, tokens, pos = self._decode_setup()
+        b = tokens.shape[0]
+        logits_last = jax.jit(M.make_logits_last(CFG, use_pallas=False))
+        prefill = jax.jit(M.make_prefill(CFG, use_pallas=False))
+        kv = M.init_kv_cache(CFG, b)
+        got, _ = prefill(params, kv, jnp.array(tokens), jnp.array(pos),
+                         jnp.ones((b,), jnp.float32))
+        want = logits_last(params, jnp.array(tokens), jnp.array(pos))
+        assert bool(jnp.all(got == want)), \
+            float(jnp.abs(got - want).max())
+
+    def test_decode_step_bit_identical_to_full_recompute(self):
+        """Greedy-extend every row to the context edge: each
+        incremental step's logits must equal the full forward's, bit
+        for bit, so argmax trajectories can never diverge."""
+        params, tokens, pos = self._decode_setup()
+        b, t = tokens.shape
+        logits_last = jax.jit(M.make_logits_last(CFG, use_pallas=False))
+        decode_step = jax.jit(M.make_decode_step(CFG))
+        prefill = jax.jit(M.make_prefill(CFG, use_pallas=False))
+        kv = M.init_kv_cache(CFG, b)
+        _, kv = prefill(params, kv, jnp.array(tokens), jnp.array(pos),
+                        jnp.ones((b,), jnp.float32))
+        while int(pos.max()) < t - 2:
+            full = np.asarray(logits_last(params, jnp.array(tokens),
+                                          jnp.array(pos)))
+            ntok = np.array([tokens[i, pos[i]] for i in range(b)],
+                            np.int32)
+            inc, kv = decode_step(params, kv, jnp.array(ntok),
+                                  jnp.array(pos))
+            np.testing.assert_array_equal(np.asarray(inc), full)
+            nxt = full.argmax(axis=1)
+            for i in range(b):
+                if pos[i] < t - 2:
+                    pos[i] += 1
+                    tokens[i, pos[i]] = nxt[i]
+
+    def test_prefill_passthrough_keeps_other_rows(self):
+        """refill=0 rows keep their cache exactly — a refilled slot
+        must not disturb its batch neighbours."""
+        params, tokens, pos = self._decode_setup()
+        b = tokens.shape[0]
+        prefill = jax.jit(M.make_prefill(CFG, use_pallas=False))
+        kv = M.init_kv_cache(CFG, b)
+        _, kv = prefill(params, kv, jnp.array(tokens), jnp.array(pos),
+                        jnp.ones((b,), jnp.float32))
+        # re-prompt row 0 only; rows 1.. must be untouched
+        tokens2 = tokens.copy()
+        tokens2[0] = 0
+        tokens2[0, :4] = [9, 8, 7, 6]
+        refill = np.zeros((b,), np.float32)
+        refill[0] = 1.0
+        _, kv2 = prefill(params, kv, jnp.array(tokens2),
+                         jnp.array(pos), jnp.array(refill))
+        for name in kv:
+            a, c = np.asarray(kv[name]), np.asarray(kv2[name])
+            np.testing.assert_array_equal(a[1:], c[1:], err_msg=name)
+            assert not np.array_equal(a[0], c[0]), \
+                f"{name} row 0 should have been recomputed"
+
+    def test_cache_rows_above_pos_are_invisible(self):
+        """Garbage in cache positions > pos must not change logits
+        (the serve loop relies on stale cache tails being masked)."""
+        params, tokens, pos = self._decode_setup()
+        b, t = tokens.shape
+        decode_step = jax.jit(M.make_decode_step(CFG))
+        prefill = jax.jit(M.make_prefill(CFG, use_pallas=False))
+        kv = M.init_kv_cache(CFG, b)
+        _, kv = prefill(params, kv, jnp.array(tokens), jnp.array(pos),
+                        jnp.ones((b,), jnp.float32))
+        ntok = jnp.array([tokens[i, pos[i]] for i in range(b)],
+                         jnp.int32)
+        la, _ = decode_step(params, kv, ntok, jnp.array(pos))
+        junk = {n: np.asarray(c).copy() for n, c in kv.items()}
+        for i in range(b):
+            for n in junk:
+                junk[n][i, pos[i] + 1:] = 1e3
+        lb, _ = decode_step(params,
+                            {n: jnp.array(c) for n, c in junk.items()},
+                            ntok, jnp.array(pos))
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_kv_specs_sorted_matches_flatten_order(self):
+        specs = M.kv_cache_specs(CFG, 4)
+        names = [n for n, _ in specs]
+        assert names == sorted(names)
+        cache = M.init_kv_cache(CFG, 4)
+        leaves, _ = jax.tree_util.tree_flatten_with_path(cache)
+        assert [p[0].key for p, _ in leaves] == names
+        assert all(s == (4, CFG.ctx_len, CFG.d_model)
+                   for _, s in specs)
+
+
 class TestParamSpecs:
     def test_spec_names_unique_and_sorted_matches_dict_flatten(self):
         specs = M.param_specs(CFG)

@@ -1,13 +1,17 @@
 //! §Perf bench: the decode/serving hot path.
 //!
-//! Three measurements on the same random-init model and prompt set:
+//! Four measurements on the same random-init model and prompt set:
 //!  * baseline — `generate::reference::greedy`: per-step full parameter
 //!    upload through `Executable::run` + full-vocab sort (the pre-
 //!    DecodeEngine path);
 //!  * engine — `DecodeEngine::greedy`: literal-resident params via
 //!    `run_raw` + partial top-k (outputs asserted bit-identical);
+//!  * kv — `DecodeEngine::greedy_kv`: KV-cache incremental decode
+//!    (`prefill` + `decode_step` artifacts, O(1) model work per token;
+//!    outputs asserted bit-identical to both paths above);
 //!  * serve — continuous slot-refill batching over 3× decode_batch
-//!    requests with mixed generation budgets (occupancy + latency).
+//!    requests with mixed generation budgets (occupancy + latency),
+//!    on the KV path when the artifacts carry it.
 //!
 //! Run: `cargo bench --bench perf_decode`
 //! Writes `BENCH_decode.json` (override with SPDF_BENCH_OUT; set
@@ -35,7 +39,12 @@ fn main() -> anyhow::Result<()> {
     };
     let smoke = std::env::var("SPDF_BENCH_SMOKE").is_ok();
     let model = "gpt-nano";
-    let runtime = engine.load_model_artifacts(model, &["logits_last"])?;
+    // pre-KV manifests only carry logits_last; compile what exists
+    let decode_artifacts = engine.manifest.models.get(model)
+        .map(|m| m.decode_artifact_names())
+        .unwrap_or_else(|| vec!["logits_last"]);
+    let runtime = engine.load_model_artifacts(model,
+                                              &decode_artifacts)?;
     let mm = &runtime.manifest;
     let (b, t, vocab) =
         (mm.decode_batch, mm.config.ctx_len, mm.config.vocab_size);
@@ -60,11 +69,14 @@ fn main() -> anyhow::Result<()> {
     let prompts: Vec<Vec<u32>> =
         (0..b).map(|_| mk_prompt(&mut rng)).collect();
 
-    // one untimed pass through both paths (PJRT lazy init etc.)
+    // one untimed pass through every path (PJRT lazy init etc.)
     let warm = DecodeParams { max_new_tokens: 2, ..dp.clone() };
     let decode = DecodeEngine::new(&runtime, &params)?;
     reference::greedy(&runtime, &params, &prompts, &warm)?;
     decode.greedy(&prompts, &warm)?;
+    if decode.kv_available() {
+        decode.greedy_kv(&prompts, &warm)?;
+    }
 
     // per-phase step counts come from the Executable's cumulative
     // run counter
@@ -84,7 +96,27 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(new_out == old_out,
                     "engine output diverged from reference");
 
-    // continuous batching: 3x oversubscribed with mixed budgets
+    // KV-resident incremental decode (prefill + decode_step)
+    let kv_leg = if decode.kv_available() {
+        let step_exe = runtime.artifact("decode_step")?;
+        let pre_exe = runtime.artifact("prefill")?;
+        let (r0, p0) = (step_exe.runs.get(), pre_exe.runs.get());
+        let timer = Timer::start();
+        let kv_out = decode.greedy_kv(&prompts, &dp)?;
+        let kv_wall = timer.secs();
+        anyhow::ensure!(kv_out == old_out,
+                        "KV output diverged from reference");
+        let kv_tokens: usize = kv_out.iter().map(|o| o.len()).sum();
+        Some((kv_tokens, kv_wall, step_exe.runs.get() - r0,
+              pre_exe.runs.get() - p0))
+    } else {
+        println!("(KV artifacts not in manifest — run `make \
+                  artifacts` to regenerate; skipping KV leg)");
+        None
+    };
+
+    // continuous batching: 3x oversubscribed with mixed budgets, on
+    // the production (KV) path when available
     let n_req = 3 * b;
     let requests: Vec<DecodeRequest> = (0..n_req)
         .map(|i| DecodeRequest::new(
@@ -92,7 +124,11 @@ fn main() -> anyhow::Result<()> {
             mk_prompt(&mut rng),
             max_new / 2 + (i % (max_new / 2 + 1))))
         .collect();
-    let report = decode.serve(&requests, &dp)?;
+    let report = if decode.kv_available() {
+        decode.serve_kv(&requests, &dp)?
+    } else {
+        decode.serve(&requests, &dp)?
+    };
     let st = &report.stats;
 
     let tps = |tokens: usize, wall: f64| tokens as f64 / wall.max(1e-9);
@@ -121,8 +157,21 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}", step_ms(new_wall, new_steps)),
         format!("{speedup:.2}x"),
     ]);
+    if let Some((kv_tokens, kv_wall, kv_steps, kv_prefills)) = kv_leg {
+        let kv_speedup =
+            tps(kv_tokens, kv_wall) / tps(old_tokens, old_wall);
+        tb.row(&[
+            format!("KV (decode_step, {kv_prefills} prefills)"),
+            kv_tokens.to_string(),
+            kv_steps.to_string(),
+            format!("{:.1}", tps(kv_tokens, kv_wall)),
+            format!("{:.2}", step_ms(kv_wall, kv_steps)),
+            format!("{kv_speedup:.2}x"),
+        ]);
+    }
     tb.row(&[
-        format!("serve ({n_req} reqs, slot refill)"),
+        format!("serve ({n_req} reqs, slot refill, {})",
+                if decode.kv_available() { "kv" } else { "literal" }),
         st.generated_tokens.to_string(),
         st.engine_steps.to_string(),
         format!("{:.1}", st.tokens_per_sec),
@@ -150,6 +199,19 @@ fn main() -> anyhow::Result<()> {
     j.push("baseline", leg(old_tokens, old_wall, old_steps));
     j.push("engine", leg(new_tokens, new_wall, new_steps));
     j.push("speedup", Json::Num(speedup));
+    if let Some((kv_tokens, kv_wall, kv_steps, kv_prefills)) = kv_leg {
+        let mut o = leg(kv_tokens, kv_wall, kv_steps);
+        o.push("prefill_steps", Json::Num(kv_prefills as f64));
+        j.push("kv", o);
+        j.push("kv_speedup",
+               Json::Num(tps(kv_tokens, kv_wall)
+                         / tps(old_tokens, old_wall)));
+        j.push("kv_vs_engine",
+               Json::Num(tps(kv_tokens, kv_wall)
+                         / tps(new_tokens, new_wall)));
+    }
+    j.push("serve_path", Json::Str(
+        if decode.kv_available() { "kv" } else { "literal" }.into()));
     j.push("serve", st.to_json());
 
     let out_path = std::env::var("SPDF_BENCH_OUT")

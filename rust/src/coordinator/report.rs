@@ -157,6 +157,11 @@ pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
     t.row(&["requests".into(), stats.requests.to_string()]);
     t.row(&["decode batch".into(), stats.decode_batch.to_string()]);
     t.row(&["engine steps".into(), stats.engine_steps.to_string()]);
+    if stats.prefill_steps > 0 {
+        // KV path only: cache-population runs on top of the steps
+        t.row(&["prefill steps".into(),
+                stats.prefill_steps.to_string()]);
+    }
     t.row(&["batch occupancy".into(),
             format!("{:.1}%", stats.occupancy * 100.0)]);
     t.row(&["generated tokens".into(),
@@ -237,6 +242,7 @@ mod tests {
             requests: 12,
             decode_batch: 4,
             engine_steps: 40,
+            prefill_steps: 3,
             slot_steps: 144,
             occupancy: 0.9,
             generated_tokens: 130,

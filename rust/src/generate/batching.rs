@@ -13,6 +13,12 @@
 //! to decoding its prompt alone (`tests/integration_runtime.rs` checks
 //! this).
 //!
+//! Two logits backends share one state machine: [`serve`] recomputes
+//! the full context per step (`logits_last`), [`serve_kv`] holds
+//! per-layer K/V caches as runtime session state and advances with the
+//! incremental `decode_step` artifact, re-populating a slot's cache
+//! rows via the `prefill` artifact whenever the slot is rewritten.
+//!
 //! Per-request latency and batch-occupancy stats feed
 //! `coordinator::report::serve_table` and `benches/perf_decode`.
 
@@ -66,6 +72,10 @@ pub struct ServeStats {
     pub decode_batch: usize,
     /// Model steps executed.
     pub engine_steps: u64,
+    /// KV cache-population runs (0 on the literal-resident path). A
+    /// prefill fires once per engine step in which at least one slot
+    /// was (re)filled, not per request.
+    pub prefill_steps: u64,
     /// Occupied slot-steps (out of `engine_steps * decode_batch`).
     pub slot_steps: u64,
     /// `slot_steps / (engine_steps * decode_batch)` — 1.0 means no
@@ -86,6 +96,7 @@ impl ServeStats {
         j.push("requests", Json::Num(self.requests as f64))
             .push("decode_batch", Json::Num(self.decode_batch as f64))
             .push("engine_steps", Json::Num(self.engine_steps as f64))
+            .push("prefill_steps", Json::Num(self.prefill_steps as f64))
             .push("slot_steps", Json::Num(self.slot_steps as f64))
             .push("occupancy", Json::Num(self.occupancy))
             .push("generated_tokens",
@@ -161,15 +172,45 @@ fn drain_zero_budget(
     }
 }
 
-/// Run a request stream to completion through the engine. Requests
-/// enter slots in order; each finished slot is refilled from the queue
-/// before the next model step. `dp` supplies the sampling knobs
-/// (`no_repeat_ngram`); generation budgets come from each request's
-/// `max_new_tokens`, not `dp.max_new_tokens`.
+/// Run a request stream to completion through the engine's
+/// literal-resident path (`logits_last`: full-context recompute per
+/// step). Requests enter slots in order; each finished slot is
+/// refilled from the queue before the next model step. `dp` supplies
+/// the sampling knobs (`no_repeat_ngram`); generation budgets come
+/// from each request's `max_new_tokens`, not `dp.max_new_tokens`.
 pub fn serve(
     engine: &DecodeEngine,
     requests: &[DecodeRequest],
     dp: &DecodeParams,
+) -> anyhow::Result<ServeReport> {
+    serve_impl(engine, requests, dp, false)
+}
+
+/// [`serve`] over the KV-resident incremental path: a slot's cache is
+/// populated once per (re)fill by the `prefill` artifact, then every
+/// step runs `decode_step` — only `(B,)` token/pos vectors cross the
+/// host boundary and per-token model work is O(1) in the context
+/// length. Greedy output is bit-identical to [`serve`] and to
+/// [`super::reference::greedy`] (integration-tested, including across
+/// slot refills). Errors if the KV artifacts were not compiled.
+pub fn serve_kv(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+) -> anyhow::Result<ServeReport> {
+    serve_impl(engine, requests, dp, true)
+}
+
+/// One slot-refill state machine for both decode paths. The host-side
+/// bookkeeping (token buffer, positions, EOS/length-cap edges, refill
+/// order, telemetry) is identical; the paths differ only in how a
+/// step's logits are produced, so any divergence between them is a
+/// model-side bug by construction.
+fn serve_impl(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    use_kv: bool,
 ) -> anyhow::Result<ServeReport> {
     let b = engine.decode_batch();
     let t = engine.ctx_len();
@@ -193,6 +234,17 @@ pub fn serve(
         Vec::with_capacity(requests.len());
     let mut engine_steps = 0u64;
     let mut slot_steps = 0u64;
+    let mut prefill_steps = 0u64;
+
+    // KV session state: the cache literals round-trip output→input
+    // across steps; `refill` marks rows whose cache must be
+    // (re)populated from the token buffer before the next step.
+    let mut kv_state = if use_kv { Some(engine.kv_state()?) } else {
+        None
+    };
+    let mut refill = vec![0f32; b];
+    let mut any_refill = false;
+    let mut next_tok = vec![0i32; b];
 
     // initial fill
     for s in 0..b {
@@ -203,6 +255,8 @@ pub fn serve(
         }
         fill_slot(&mut tokens, &mut pos, t, s,
                   &requests[next_req].prompt);
+        refill[s] = 1.0;
+        any_refill = true;
         slots[s] = Some(Slot {
             req: next_req,
             out: Vec::new(),
@@ -213,7 +267,28 @@ pub fn serve(
 
     while slots.iter().any(|s| s.is_some()) {
         let occupied = slots.iter().filter(|s| s.is_some()).count();
-        let lv = engine.step_logits(&tokens, &pos)?;
+        let lv = if let Some(state) = kv_state.as_mut() {
+            if any_refill {
+                // populate the marked rows' caches (positions up to
+                // and including `pos`) from their prompt rows; other
+                // rows pass through untouched
+                engine.kv_prefill(state, &tokens, &pos, &refill)?;
+                prefill_steps += 1;
+                refill.fill(0.0);
+                any_refill = false;
+            }
+            // each row advances by its token at `pos` (for a freshly
+            // prefilled row that re-derives the prompt tail's K/V —
+            // same values — and yields the same logits the prefill
+            // already read; uniformity keeps every emitted logit on
+            // the incremental program)
+            for s in 0..b {
+                next_tok[s] = tokens[s * t + pos[s] as usize];
+            }
+            engine.kv_step(state, &next_tok, &pos)?
+        } else {
+            engine.step_logits(&tokens, &pos)?
+        };
         engine_steps += 1;
         slot_steps += occupied as u64;
 
@@ -261,6 +336,11 @@ pub fn serve(
                 if next_req < requests.len() {
                     fill_slot(&mut tokens, &mut pos, t, s,
                               &requests[next_req].prompt);
+                    // KV path: the freed slot's cache still holds the
+                    // previous occupant — mark it for re-population
+                    // before the next step
+                    refill[s] = 1.0;
+                    any_refill = true;
                     slots[s] = Some(Slot {
                         req: next_req,
                         out: Vec::new(),
@@ -288,6 +368,7 @@ pub fn serve(
         requests: requests.len(),
         decode_batch: b,
         engine_steps,
+        prefill_steps,
         slot_steps,
         occupancy: if engine_steps == 0 {
             0.0
@@ -345,6 +426,7 @@ mod tests {
             requests: 3,
             decode_batch: 2,
             engine_steps: 10,
+            prefill_steps: 2,
             slot_steps: 17,
             occupancy: 0.85,
             generated_tokens: 15,
@@ -359,5 +441,6 @@ mod tests {
                    Some(30.0));
         assert_eq!(j.get("occupancy").unwrap().as_f64(), Some(0.85));
         assert_eq!(j.get("engine_steps").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("prefill_steps").unwrap().as_usize(), Some(2));
     }
 }

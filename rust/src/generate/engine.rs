@@ -13,24 +13,37 @@
 //! code could emit a blocked token — see ISSUE 1).
 
 use crate::runtime::{Dtype, Executable, HostTensor, LiteralCache,
-                     ModelRuntime};
+                     ModelRuntime, SessionState};
 use crate::tokenizer::EOS;
 
 use super::topk;
 use super::DecodeParams;
 
+/// The compiled KV serving pair (present when the manifest carries the
+/// incremental artifacts).
+struct KvExes<'a> {
+    step: &'a Executable,
+    prefill: &'a Executable,
+}
+
 pub struct DecodeEngine<'a> {
     exe: &'a Executable,
+    kv: Option<KvExes<'a>>,
     params: LiteralCache,
     b: usize,
     t: usize,
     vocab: usize,
+    /// KV state tensors per session (2 per layer), 0 without KV.
+    n_state: usize,
 }
 
 impl<'a> DecodeEngine<'a> {
     /// Validate the parameter set against the `logits_last` spec and
     /// upload it once. All spec checking happens here; the step loop
-    /// never validates again.
+    /// never validates again. When the runtime also compiled the
+    /// `decode_step`/`prefill` pair, the KV-resident path
+    /// ([`Self::serve_kv`], [`Self::greedy_kv`]) is validated and made
+    /// available too.
     pub fn new(runtime: &'a ModelRuntime, params: &[HostTensor])
                -> anyhow::Result<DecodeEngine<'a>> {
         let mm = &runtime.manifest;
@@ -38,15 +51,17 @@ impl<'a> DecodeEngine<'a> {
         let spec = &exe.spec;
         let b = mm.decode_batch;
         let t = mm.config.ctx_len;
+        let vocab = mm.config.vocab_size;
+        let n_params = params.len();
         anyhow::ensure!(
-            spec.inputs.len() == params.len() + 2,
+            spec.inputs.len() == n_params + 2,
             "logits_last expects {} inputs ({} params + tokens + pos), \
              got {} params",
             spec.inputs.len(), spec.inputs.len().saturating_sub(2),
             params.len()
         );
-        let tok_spec = &spec.inputs[params.len()];
-        let pos_spec = &spec.inputs[params.len() + 1];
+        let tok_spec = &spec.inputs[n_params];
+        let pos_spec = &spec.inputs[n_params + 1];
         anyhow::ensure!(
             tok_spec.shape[..] == [b, t] && tok_spec.dtype == Dtype::I32,
             "logits_last token slot {:?}/{:?} does not match decode \
@@ -58,15 +73,109 @@ impl<'a> DecodeEngine<'a> {
             "logits_last pos slot {:?}/{:?} does not match ({b})/i32",
             pos_spec.shape, pos_spec.dtype
         );
+
+        let n_state = mm.decode_state.len();
+        let kv = match (runtime.executables.get("decode_step"),
+                        runtime.executables.get("prefill")) {
+            (Some(step), Some(prefill)) => {
+                Self::validate_kv_specs(step, prefill, n_params,
+                                        n_state, b, t, vocab)?;
+                Some(KvExes { step, prefill })
+            }
+            _ => None,
+        };
+
         let params = LiteralCache::upload_validated(
-            params, &spec.inputs[..params.len()])?;
+            params, &spec.inputs[..n_params])?;
         Ok(DecodeEngine {
             exe,
+            kv,
             params,
             b,
             t,
-            vocab: mm.config.vocab_size,
+            vocab,
+            n_state,
         })
+    }
+
+    /// Once-per-session spec check of the KV pair: both artifacts take
+    /// the same leading parameter slots as `logits_last`, then the
+    /// state tensors, then their small host-marshalled buffers.
+    fn validate_kv_specs(step: &Executable, prefill: &Executable,
+                         n_params: usize, n_state: usize, b: usize,
+                         t: usize, vocab: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            n_state > 0,
+            "manifest carries decode_step/prefill artifacts but no \
+             decode_state specs — regenerate with `make artifacts`"
+        );
+        let sspec = &step.spec;
+        anyhow::ensure!(
+            sspec.inputs.len() == n_params + n_state + 2,
+            "decode_step expects {} inputs, want {} params + {} state \
+             + next_token + pos",
+            sspec.inputs.len(), n_params, n_state
+        );
+        let tok = &sspec.inputs[n_params + n_state];
+        let pos = &sspec.inputs[n_params + n_state + 1];
+        anyhow::ensure!(
+            tok.shape[..] == [b] && tok.dtype == Dtype::I32
+                && pos.shape[..] == [b] && pos.dtype == Dtype::I32,
+            "decode_step token/pos slots do not match ({b},)/i32"
+        );
+        anyhow::ensure!(
+            sspec.outputs.len() == 1 + n_state
+                && sspec.outputs[0].shape[..] == [b, vocab],
+            "decode_step outputs {:?} do not match (logits, state...)",
+            sspec.outputs.len()
+        );
+        let pspec = &prefill.spec;
+        anyhow::ensure!(
+            pspec.inputs.len() == n_params + n_state + 3,
+            "prefill expects {} inputs, want {} params + {} state + \
+             tokens + pos + refill",
+            pspec.inputs.len(), n_params, n_state
+        );
+        let ptok = &pspec.inputs[n_params + n_state];
+        let ppos = &pspec.inputs[n_params + n_state + 1];
+        let refill = &pspec.inputs[n_params + n_state + 2];
+        anyhow::ensure!(
+            ptok.shape[..] == [b, t] && ptok.dtype == Dtype::I32
+                && ppos.shape[..] == [b] && ppos.dtype == Dtype::I32
+                && refill.shape[..] == [b]
+                && refill.dtype == Dtype::F32,
+            "prefill tokens/pos/refill slots do not match \
+             ({b},{t})/i32 + ({b},)/i32 + ({b},)/f32"
+        );
+        anyhow::ensure!(
+            pspec.outputs.len() == 1 + n_state
+                && pspec.outputs[0].shape[..] == [b, vocab],
+            "prefill outputs {:?} do not match (logits, state...)",
+            pspec.outputs.len()
+        );
+        // state tensors must round-trip across BOTH artifacts: each
+        // step adopts the previous output (from either program) as the
+        // next input, so all four slots per state tensor must agree —
+        // a stale prefill HLO next to a regenerated decode_step should
+        // fail here, not mid-serve with an opaque XLA shape error
+        for i in 0..n_state {
+            let slots = [
+                ("decode_step input", &sspec.inputs[n_params + i]),
+                ("decode_step output", &sspec.outputs[1 + i]),
+                ("prefill input", &pspec.inputs[n_params + i]),
+                ("prefill output", &pspec.outputs[1 + i]),
+            ];
+            let (_, first) = slots[0];
+            for (what, s) in &slots[1..] {
+                anyhow::ensure!(
+                    s.shape == first.shape && s.dtype == first.dtype,
+                    "KV state slot #{i} ({}): {what} {:?} vs {:?} — \
+                     state cannot round-trip",
+                    first.name, s.shape, first.shape
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn decode_batch(&self) -> usize {
@@ -79,6 +188,89 @@ impl<'a> DecodeEngine<'a> {
 
     pub fn vocab(&self) -> usize {
         self.vocab
+    }
+
+    /// Is the KV-resident incremental path available (manifest carried
+    /// the `decode_step`/`prefill` artifacts and they were compiled)?
+    pub fn kv_available(&self) -> bool {
+        self.kv.is_some()
+    }
+
+    fn kv_exes(&self) -> anyhow::Result<&KvExes<'a>> {
+        self.kv.as_ref().ok_or_else(|| anyhow::anyhow!(
+            "KV decode artifacts (decode_step/prefill) not compiled \
+             for this model — regenerate with `make artifacts` and \
+             load them alongside logits_last"
+        ))
+    }
+
+    /// Fresh zero-filled KV session state (one per `serve_kv` call).
+    pub fn kv_state(&self) -> anyhow::Result<SessionState> {
+        let kv = self.kv_exes()?;
+        let p = self.params.len();
+        SessionState::zeros(&kv.step.spec.inputs[p..p + self.n_state])
+    }
+
+    /// Strip the logits off an output list and adopt the remaining
+    /// literals as the next step's KV state.
+    fn adopt_state(state: &mut SessionState, mut outs: Vec<xla::Literal>)
+                   -> anyhow::Result<Vec<f32>> {
+        let logits = outs.remove(0).to_vec::<f32>()?;
+        state.replace(outs);
+        Ok(logits)
+    }
+
+    /// Populate the cache rows with `refill[s] > 0` from the token
+    /// buffer (one full forward); rows with `refill[s] == 0` pass
+    /// their cache through untouched. Returns `(B * vocab)` logits
+    /// read at `pos` (valid for every row whose token-buffer row is
+    /// current — callers use the refilled rows' entries).
+    pub(crate) fn kv_prefill(&self, state: &mut SessionState,
+                             tokens: &[i32], pos: &[i32],
+                             refill: &[f32])
+                             -> anyhow::Result<Vec<f32>> {
+        let kv = self.kv_exes()?;
+        debug_assert_eq!(tokens.len(), self.b * self.t);
+        debug_assert_eq!(pos.len(), self.b);
+        debug_assert_eq!(refill.len(), self.b);
+        debug_assert_eq!(state.len(), self.n_state);
+        let tok_l = HostTensor::literal_i32(&[self.b, self.t], tokens)?;
+        let pos_l = HostTensor::literal_i32(&[self.b], pos)?;
+        let ref_l = HostTensor::literal_f32(&[self.b], refill)?;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() + self.n_state + 3);
+        inputs.extend(self.params.refs());
+        inputs.extend(state.refs());
+        inputs.push(&tok_l);
+        inputs.push(&pos_l);
+        inputs.push(&ref_l);
+        let outs = kv.prefill.run_raw(&inputs)?;
+        Self::adopt_state(state, outs)
+    }
+
+    /// One incremental model step: `next[s]` is the token at position
+    /// `pos[s]` (already appended by the serve loop); the program
+    /// writes its K/V into the cache at `pos` and returns the logits
+    /// predicting `pos + 1`. Only the two `(B,)` i32 buffers cross the
+    /// host boundary as fresh uploads — O(1) work per token instead of
+    /// `logits_last`'s O(context) recompute.
+    pub(crate) fn kv_step(&self, state: &mut SessionState,
+                          next: &[i32], pos: &[i32])
+                          -> anyhow::Result<Vec<f32>> {
+        let kv = self.kv_exes()?;
+        debug_assert_eq!(next.len(), self.b);
+        debug_assert_eq!(pos.len(), self.b);
+        debug_assert_eq!(state.len(), self.n_state);
+        let tok_l = HostTensor::literal_i32(&[self.b], next)?;
+        let pos_l = HostTensor::literal_i32(&[self.b], pos)?;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() + self.n_state + 2);
+        inputs.extend(self.params.refs());
+        inputs.extend(state.refs());
+        inputs.push(&tok_l);
+        inputs.push(&pos_l);
+        let outs = kv.step.run_raw(&inputs)?;
+        Self::adopt_state(state, outs)
     }
 
     /// One model step: flat `(B*T)` token buffer + `(B)` positions in,
@@ -113,6 +305,19 @@ impl<'a> DecodeEngine<'a> {
     /// set of EOS/length-cap edge cases.
     pub fn greedy(&self, prompts: &[Vec<u32>], dp: &DecodeParams)
                   -> anyhow::Result<Vec<Vec<u32>>> {
+        self.greedy_impl(prompts, dp, false)
+    }
+
+    /// [`Self::greedy`] over the KV-resident incremental path —
+    /// bit-identical output (enforced by the integration suite and the
+    /// perf bench), O(T) total work per request instead of O(T²).
+    pub fn greedy_kv(&self, prompts: &[Vec<u32>], dp: &DecodeParams)
+                     -> anyhow::Result<Vec<Vec<u32>>> {
+        self.greedy_impl(prompts, dp, true)
+    }
+
+    fn greedy_impl(&self, prompts: &[Vec<u32>], dp: &DecodeParams,
+                   use_kv: bool) -> anyhow::Result<Vec<Vec<u32>>> {
         anyhow::ensure!(prompts.len() <= self.b,
                         "batch of {} prompts exceeds decode_batch {}",
                         prompts.len(), self.b);
@@ -122,7 +327,11 @@ impl<'a> DecodeEngine<'a> {
             .map(|(i, p)| super::DecodeRequest::new(
                 i as u64, p.clone(), dp.max_new_tokens))
             .collect();
-        let report = super::batching::serve(self, &requests, dp)?;
+        let report = if use_kv {
+            super::batching::serve_kv(self, &requests, dp)?
+        } else {
+            super::batching::serve(self, &requests, dp)?
+        };
         Ok(report.results.into_iter().map(|r| r.tokens).collect())
     }
 
@@ -192,7 +401,15 @@ impl<'a> DecodeEngine<'a> {
                     let lp = row[tok as usize] as f64 - logz;
                     let mut nb = bm.clone();
                     nb.logp += lp;
-                    if tok == EOS || nb.seq.len() + 1 >= t - 1 {
+                    if tok == EOS {
+                        // EOS is scored but never emitted
+                        finished.push(nb);
+                    } else if nb.seq.len() + 1 >= t - 1 {
+                        // context capacity: the candidate token IS
+                        // emitted (matching greedy/serve, which push
+                        // the boundary token) — a beam must not be
+                        // scored on a token it doesn't produce
+                        nb.seq.push(tok);
                         finished.push(nb);
                     } else {
                         nb.seq.push(tok);
@@ -233,5 +450,13 @@ impl<'a> DecodeEngine<'a> {
                  dp: &DecodeParams)
                  -> anyhow::Result<super::ServeReport> {
         super::batching::serve(self, requests, dp)
+    }
+
+    /// [`Self::serve`] over the KV-resident incremental path; see
+    /// [`super::batching::serve_kv`].
+    pub fn serve_kv(&self, requests: &[super::DecodeRequest],
+                    dp: &DecodeParams)
+                    -> anyhow::Result<super::ServeReport> {
+        super::batching::serve_kv(self, requests, dp)
     }
 }

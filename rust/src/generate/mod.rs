@@ -11,14 +11,21 @@
 //!  * [`engine::DecodeEngine`] — the literal-resident decode session:
 //!    parameters upload to XLA literals once, steps go through
 //!    `Executable::run_raw`, next-token selection is a partial top-k.
+//!    When the manifest carries the `decode_step`/`prefill` artifacts
+//!    it also exposes the KV-resident path: per-layer K/V caches live
+//!    as session-state literals fed back output→input, so each step
+//!    does O(1) model work per token (vs `logits_last`'s O(context)
+//!    recompute) and only `(B,)` token/pos vectors cross the host
+//!    boundary.
 //!  * [`batching`] — continuous slot-refill batching: any number of
 //!    requests stream through the fixed `(decode_batch, ctx_len)`
-//!    geometry, finished slots are refilled mid-flight.
+//!    geometry, finished slots are refilled mid-flight (with per-slot
+//!    cache prefill on the KV path).
 //!  * [`topk`] — O(V + k log k) candidate selection, exactly equal to
 //!    the old full-vocab stable sort's prefix.
 //!  * [`reference`] — the pre-engine path (per-step param upload +
 //!    full-vocab sort), kept as the equivalence oracle and the bench
-//!    baseline.
+//!    baseline; both serve paths decode bit-identically to it.
 //!
 //! The free functions [`greedy`] and [`beam`] remain the drop-in API;
 //! they build a throwaway engine per call.

@@ -12,7 +12,10 @@
 //!
 //! The n-gram fallback here carries the *fixed* semantics (fall through
 //! the full candidate order when the top-8 window is exhausted), so the
-//! oracle also covers `no_repeat_ngram > 0`.
+//! oracle also covers `no_repeat_ngram > 0`. Likewise the beam
+//! capacity boundary (ISSUE 2): a beam finished by the length cap
+//! emits the token it accumulated the log-prob of, exactly as greedy
+//! and `batching::serve` emit their boundary token.
 
 use crate::runtime::{HostTensor, ModelRuntime};
 use crate::tokenizer::EOS;
@@ -159,7 +162,13 @@ pub fn beam(
                 let lp = row[tok] as f64 - logz;
                 let mut nb = bm.clone();
                 nb.logp += lp;
-                if tok as u32 == EOS || nb.seq.len() + 1 >= t - 1 {
+                if tok as u32 == EOS {
+                    finished.push(nb);
+                } else if nb.seq.len() + 1 >= t - 1 {
+                    // capacity-finished beams emit the token they were
+                    // scored on (the fixed boundary semantics; see
+                    // engine::DecodeEngine::beam)
+                    nb.seq.push(tok as u32);
                     finished.push(nb);
                 } else {
                     nb.seq.push(tok as u32);

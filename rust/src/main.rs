@@ -399,13 +399,30 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         .flag("task", "e2e", "task supplying the prompts")
         .flag("requests", "32", "number of requests to serve")
         .flag("max-new-tokens", "48", "generation budget per request")
+        .flag("engine", "auto",
+              "decode path: auto | kv | literal (auto = kv when the \
+               manifest carries the incremental artifacts)")
         .flag("stats-json", "", "write serving stats JSON to this path");
     let a = cli.parse(raw)?;
+    let engine_flag = a.get("engine");
+    anyhow::ensure!(
+        matches!(engine_flag, "auto" | "kv" | "literal"),
+        "unknown --engine {engine_flag} (want auto | kv | literal)"
+    );
     let world = build_world(&a)?;
     let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
-    // decode-only serving: skip compiling the train/eval artifacts
+    // decode-only serving: skip compiling the train/eval artifacts,
+    // and skip the KV pair too when --engine literal was asked for
+    // (or the manifest predates it)
+    let mm0 = engine.manifest.models.get(a.get("model")).ok_or_else(
+        || anyhow::anyhow!("model {} not in manifest", a.get("model")))?;
+    let decode_artifacts = if engine_flag == "literal" {
+        vec!["logits_last"]
+    } else {
+        mm0.decode_artifact_names()
+    };
     let runtime = engine.load_model_artifacts(a.get("model"),
-                                              &["logits_last"])?;
+                                              &decode_artifacts)?;
     let mm = &runtime.manifest;
     let state = match a.get("ckpt") {
         "" => spdf::train::TrainState::init(
@@ -434,9 +451,19 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         max_new_tokens: max_new,
         ..Default::default()
     };
+    let use_kv = match engine_flag {
+        "kv" => true, // serve_kv errors helpfully if not compiled
+        "literal" => false,
+        _ => decode.kv_available(),
+    };
     let total = Timer::start();
-    let report = decode.serve(&requests, &dp)?;
-    eprintln!("[spdf] served {} requests in {:.1}s", n, total.secs());
+    let report = if use_kv {
+        decode.serve_kv(&requests, &dp)?
+    } else {
+        decode.serve(&requests, &dp)?
+    };
+    eprintln!("[spdf] served {} requests in {:.1}s ({} path)", n,
+              total.secs(), if use_kv { "kv" } else { "literal" });
     println!("{}", report::serve_table(&report.stats,
                                        &report.results));
     match a.get("stats-json") {

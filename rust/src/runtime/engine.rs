@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::manifest::{ArtifactSpec, Manifest, ModelManifest,
+use super::manifest::{ArtifactSpec, Dtype, Manifest, ModelManifest,
                       TensorSpec};
 use super::tensor::HostTensor;
 
@@ -66,6 +66,57 @@ impl LiteralCache {
     /// input list.
     pub fn refs(&self) -> impl Iterator<Item = &xla::Literal> {
         self.lits.iter()
+    }
+}
+
+/// The *mutable* companion to [`LiteralCache`]: session state tensors
+/// that an artifact consumes as inputs and re-emits as outputs each
+/// call (the KV decode cache). Where `LiteralCache` uploads once and
+/// stays frozen, `SessionState` is replaced wholesale from the
+/// previous step's output literals — the state never round-trips
+/// through `HostTensor` on the hot path.
+pub struct SessionState {
+    lits: Vec<xla::Literal>,
+}
+
+impl SessionState {
+    /// Zero-initialized state matching `specs` (the pre-first-prefill
+    /// KV cache, or any state program's initial tensors).
+    pub fn zeros(specs: &[TensorSpec]) -> anyhow::Result<SessionState> {
+        let lits = specs
+            .iter()
+            .map(|s| match s.dtype {
+                Dtype::F32 => HostTensor::zeros_f32(&s.shape).to_literal(),
+                Dtype::I32 => HostTensor::from_i32(
+                    &s.shape, vec![0; s.elems()]).to_literal(),
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(SessionState { lits })
+    }
+
+    /// Adopt output literals as the next step's state (e.g. the KV
+    /// slots of a `decode_step` result).
+    pub fn replace(&mut self, lits: Vec<xla::Literal>) {
+        self.lits = lits;
+    }
+
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    /// Borrowed literals in state order, ready to extend a `run_raw`
+    /// input list.
+    pub fn refs(&self) -> impl Iterator<Item = &xla::Literal> {
+        self.lits.iter()
+    }
+
+    /// Host copies of the state (inspection/tests — not the hot path).
+    pub fn to_tensors(&self) -> anyhow::Result<Vec<HostTensor>> {
+        self.lits.iter().map(HostTensor::from_literal).collect()
     }
 }
 
@@ -129,7 +180,10 @@ impl Executable {
         self.runs.set(self.runs.get() + 1);
         self.exec_secs.set(self.exec_secs.get()
                            + t0.elapsed().as_secs_f64());
-        self.collect_outputs(result)
+        self.result_literals(result)?
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
     }
 
     /// Fast path: execute over pre-built literals, returning output
@@ -144,13 +198,23 @@ impl Executable {
         self.runs.set(self.runs.get() + 1);
         self.exec_secs.set(self.exec_secs.get()
                            + t0.elapsed().as_secs_f64());
+        self.result_literals(result)
+    }
+
+    /// Decompose one `execute` result into per-output literals. A
+    /// single returned buffer is either the `return_tuple=True` tuple
+    /// holding every output, or — when tuple decomposition does not
+    /// apply — a plain literal from a single-output non-tuple
+    /// artifact; both shapes are accepted. (`run` used to call
+    /// `to_tuple` unconditionally here and errored on the latter.)
+    fn result_literals(&self, result: Vec<Vec<xla::PjRtBuffer>>)
+                       -> anyhow::Result<Vec<xla::Literal>> {
         anyhow::ensure!(!result.is_empty() && !result[0].is_empty(),
                         "artifact {} returned no buffers",
                         self.spec.name);
         let bufs = &result[0];
         let mut outs = Vec::new();
         if bufs.len() == 1 {
-            // return_tuple=True lowering: one tuple buffer holds all
             let mut lit = bufs[0].to_literal_sync()?;
             match lit.decompose_tuple() {
                 Ok(elems) if !elems.is_empty() => outs = elems,
@@ -159,33 +223,6 @@ impl Executable {
         } else {
             for b in bufs {
                 outs.push(b.to_literal_sync()?);
-            }
-        }
-        anyhow::ensure!(
-            outs.len() == self.spec.outputs.len(),
-            "artifact {}: got {} outputs, expected {}",
-            self.spec.name, outs.len(), self.spec.outputs.len()
-        );
-        Ok(outs)
-    }
-
-    fn collect_outputs(&self, result: Vec<Vec<xla::PjRtBuffer>>)
-                       -> anyhow::Result<Vec<HostTensor>> {
-        anyhow::ensure!(!result.is_empty() && !result[0].is_empty(),
-                        "artifact {} returned no buffers", self.spec.name);
-        let bufs = &result[0];
-        let mut outs: Vec<HostTensor> = Vec::new();
-        if bufs.len() == 1 && self.spec.outputs.len() >= 1 {
-            // return_tuple=True: one tuple literal holds all outputs
-            let lit = bufs[0].to_literal_sync()?;
-            let elems = lit.to_tuple()?;
-            for e in &elems {
-                outs.push(HostTensor::from_literal(e)?);
-            }
-        } else {
-            for b in bufs {
-                let lit = b.to_literal_sync()?;
-                outs.push(HostTensor::from_literal(&lit)?);
             }
         }
         anyhow::ensure!(

@@ -100,6 +100,9 @@ pub struct ModelManifest {
     pub decode_batch: usize,
     /// In manifest (= python spec) order, NOT flatten order.
     pub params: Vec<ParamSpec>,
+    /// Decode session-state tensors (the per-layer KV cache), in
+    /// flatten order. Empty for manifests predating the KV artifacts.
+    pub decode_state: Vec<TensorSpec>,
     pub masked_params: Vec<String>,
     pub decay_params: Vec<String>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
@@ -125,6 +128,24 @@ impl ModelManifest {
 
     pub fn is_masked(&self, name: &str) -> bool {
         self.masked_params.iter().any(|m| m == name)
+    }
+
+    /// Does the manifest carry the KV serving pair (incremental
+    /// decode)? Pre-KV manifests only have `logits_last`.
+    pub fn has_kv_artifacts(&self) -> bool {
+        self.artifacts.contains_key("decode_step")
+            && self.artifacts.contains_key("prefill")
+    }
+
+    /// The artifacts a decode-only consumer (`spdf serve`,
+    /// `perf_decode`) should compile — the single source of truth for
+    /// the KV-aware artifact list.
+    pub fn decode_artifact_names(&self) -> Vec<&'static str> {
+        if self.has_kv_artifacts() {
+            vec!["logits_last", "decode_step", "prefill"]
+        } else {
+            vec!["logits_last"]
+        }
     }
 }
 
@@ -204,6 +225,16 @@ impl Manifest {
                 Ok(ParamSpec { name, shape, init })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // optional: absent in pre-KV manifests
+        let decode_state = match j.get("decode_state") {
+            Some(ds) => ds.as_arr()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "decode_state not an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         let str_list = |key: &str| -> anyhow::Result<Vec<String>> {
             Ok(j.req(key)?.as_arr()
                 .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
@@ -236,6 +267,7 @@ impl Manifest {
             eval_batch: j.req("eval_batch")?.as_usize().unwrap_or(0),
             decode_batch: j.req("decode_batch")?.as_usize().unwrap_or(0),
             params,
+            decode_state,
             masked_params: str_list("masked_params")?,
             decay_params: str_list("decay_params")?,
             artifacts,
@@ -298,6 +330,29 @@ mod tests {
         assert_eq!(art.inputs.len(), 3);
         assert_eq!(art.inputs[2].dtype, Dtype::I32);
         assert_eq!(art.inputs[0].elems(), 256);
+    }
+
+    #[test]
+    fn decode_state_absent_is_empty_present_is_parsed() {
+        // pre-KV manifests carry no decode_state block
+        let m = Manifest::from_json(PathBuf::from("/tmp"),
+                                    &tiny_manifest_json()).unwrap();
+        assert!(m.models["m"].decode_state.is_empty());
+
+        let mut text = tiny_manifest_json().to_string_pretty();
+        text = text.replace(
+            "\"masked_params\"",
+            "\"decode_state\": [\n  {\"name\": \"h0.k\", \"shape\": \
+             [2, 4, 8], \"dtype\": \"float32\"},\n  {\"name\": \
+             \"h0.v\", \"shape\": [2, 4, 8], \"dtype\": \
+             \"float32\"}\n],\n\"masked_params\"");
+        let j = Json::parse(&text).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &j).unwrap();
+        let ds = &m.models["m"].decode_state;
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].name, "h0.k");
+        assert_eq!(ds[0].shape, vec![2, 4, 8]);
+        assert_eq!(ds[1].dtype, Dtype::F32);
     }
 
     #[test]

@@ -6,7 +6,8 @@ pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
-pub use engine::{Engine, Executable, LiteralCache, ModelRuntime};
+pub use engine::{Engine, Executable, LiteralCache, ModelRuntime,
+                 SessionState};
 pub use manifest::{ArtifactSpec, Dtype, InitKind, Manifest,
                    ModelManifest, ParamSpec, TensorSpec};
 pub use tensor::HostTensor;

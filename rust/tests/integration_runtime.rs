@@ -288,6 +288,245 @@ fn slot_refill_serve_matches_solo_greedy() {
             "oversubscribed stream should have queued requests");
 }
 
+/// Decode-only runtime (logits_last + the KV pair) — keeps the serving
+/// tests from paying the train_step compile.
+fn decode_runtime(engine: &Engine) -> spdf::runtime::ModelRuntime {
+    engine
+        .load_model_artifacts("gpt-nano",
+                              &["logits_last", "decode_step",
+                                "prefill"])
+        .expect("decode artifacts — run `make artifacts`")
+}
+
+#[test]
+fn kv_greedy_matches_reference_bit_for_bit() {
+    // the KV-resident incremental path (prefill + decode_step session
+    // state) must be indistinguishable from the full-recompute oracle,
+    // with and without n-gram blocking
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(42));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+    assert!(decode.kv_available(), "manifest should carry KV artifacts");
+    let prompts = vec![
+        vec![BOS, 40, 41, SEP],
+        vec![BOS, 50, 51, 52, SEP],
+        vec![BOS, 60, SEP],
+    ];
+    for ngram in [0usize, 2] {
+        let dp = DecodeParams {
+            max_new_tokens: 12,
+            no_repeat_ngram: ngram,
+            ..Default::default()
+        };
+        let old = reference::greedy(&runtime, &params, &prompts, &dp)
+            .unwrap();
+        let kv = decode.greedy_kv(&prompts, &dp).unwrap();
+        assert_eq!(old, kv, "KV greedy diverged at ngram={ngram}");
+    }
+}
+
+#[test]
+fn kv_serve_matches_solo_greedy_across_slot_refills() {
+    // acceptance: a refilled slot must decode exactly as it would
+    // alone — in particular it must never see the previous occupant's
+    // cache rows
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(6));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let b = mm.decode_batch;
+    let n = 2 * b + 1;
+    let prompts: Vec<Vec<u32>> = (0..n)
+        .map(|i| vec![BOS, 30 + i as u32, SEP])
+        .collect();
+    let requests: Vec<DecodeRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| DecodeRequest::new(i as u64, p.clone(),
+                                         4 + i % 5))
+        .collect();
+    let report = decode.serve_kv(&requests,
+                                 &DecodeParams::default()).unwrap();
+    assert_eq!(report.results.len(), n);
+    for (i, (res, p)) in
+        report.results.iter().zip(&prompts).enumerate()
+    {
+        assert_eq!(res.id, i as u64);
+        let dp = DecodeParams {
+            max_new_tokens: 4 + i % 5,
+            ..Default::default()
+        };
+        let solo = reference::greedy(&runtime, &params,
+                                     std::slice::from_ref(p), &dp)
+            .unwrap();
+        assert_eq!(res.tokens, solo[0],
+                   "KV slot-refilled request {i} diverged");
+    }
+    let st = &report.stats;
+    // initial fill is one prefill; every refill wave adds another
+    assert!(st.prefill_steps >= 2,
+            "oversubscribed KV serve should have refilled slots \
+             (prefill_steps = {})", st.prefill_steps);
+    assert!(st.engine_steps > 0 && st.occupancy > 0.0);
+    assert!(report.results.iter().any(|r| r.queue_steps > 0));
+}
+
+#[test]
+fn serve_mixed_zero_budget_stream_both_paths() {
+    // zero-budget requests must complete instantly without occupying
+    // a slot, on the literal and the KV path alike
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(7));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let n = mm.decode_batch + 3;
+    let requests: Vec<DecodeRequest> = (0..n)
+        .map(|i| DecodeRequest::new(
+            i as u64,
+            vec![BOS, 20 + i as u32, SEP],
+            if i % 2 == 0 { 0 } else { 5 }))
+        .collect();
+    let dp = DecodeParams::default();
+    for kv in [false, true] {
+        let report = if kv {
+            decode.serve_kv(&requests, &dp).unwrap()
+        } else {
+            decode.serve(&requests, &dp).unwrap()
+        };
+        assert_eq!(report.results.len(), n, "kv={kv}");
+        for (i, res) in report.results.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(res.tokens.is_empty(), "kv={kv} req {i}");
+                assert_eq!(res.decode_steps, 0, "kv={kv} req {i}");
+            } else {
+                let solo = reference::greedy(
+                    &runtime, &params,
+                    &[requests[i].prompt.clone()],
+                    &DecodeParams { max_new_tokens: 5,
+                                    ..Default::default() })
+                    .unwrap();
+                assert_eq!(res.tokens, solo[0], "kv={kv} req {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_max_length_prompt_both_paths() {
+    // the longest admissible prompt (t - 1 tokens) decodes exactly one
+    // token (or zero on EOS) and must agree with the oracle
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let t = mm.config.ctx_len;
+    let state = TrainState::init(mm, &mut Rng::new(8));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let mut prompt = vec![BOS];
+    prompt.extend((0..t - 3).map(|j| 4 + (j % 400) as u32));
+    prompt.push(SEP);
+    assert_eq!(prompt.len(), t - 1);
+
+    let dp = DecodeParams { max_new_tokens: 8, ..Default::default() };
+    let solo = reference::greedy(&runtime, &params,
+                                 &[prompt.clone()], &dp).unwrap();
+    assert!(solo[0].len() <= 1, "context-edge prompt over-generated");
+    let requests =
+        vec![DecodeRequest::new(0, prompt.clone(), dp.max_new_tokens)];
+    for kv in [false, true] {
+        let report = if kv {
+            decode.serve_kv(&requests, &dp).unwrap()
+        } else {
+            decode.serve(&requests, &dp).unwrap()
+        };
+        assert_eq!(report.results[0].tokens, solo[0], "kv={kv}");
+    }
+}
+
+#[test]
+fn beam_capacity_boundary_emits_scored_token() {
+    // regression (ISSUE 2): a beam finished by the capacity check used
+    // to accumulate the candidate's log-prob but drop the token — the
+    // winner was scored on a token it never emitted. At the context
+    // edge beam must agree with greedy's boundary semantics.
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let t = mm.config.ctx_len;
+    let state = TrainState::init(mm, &mut Rng::new(13));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let mut prompt = vec![BOS];
+    prompt.extend((0..t - 4).map(|j| 4 + (j % 399) as u32));
+    prompt.push(SEP);
+    assert_eq!(prompt.len(), t - 2); // every candidate hits capacity
+
+    let dp = DecodeParams {
+        max_new_tokens: 4,
+        beam_size: 3,
+        ..Default::default()
+    };
+    let out = decode.beam(&prompt, &dp).unwrap();
+    let old = reference::beam(&runtime, &params, &prompt, &dp).unwrap();
+    assert_eq!(out, old, "engine/oracle beam diverged at capacity");
+    // with a single expansion step the length penalty is degenerate,
+    // so the beam winner is exactly the greedy boundary token
+    let greedy = decode
+        .greedy(&[prompt.clone()],
+                &DecodeParams { max_new_tokens: 1,
+                                ..Default::default() })
+        .unwrap();
+    assert_eq!(out, greedy[0],
+               "capacity-finished beam must emit the token it was \
+                scored on");
+}
+
+#[test]
+fn run_and_run_raw_decompose_outputs_identically() {
+    // `run` and `run_raw` share one result-decomposition helper; both
+    // must hand back the same logits for the same inputs (`run` used
+    // to fail on single-output non-tuple artifacts)
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(14));
+    let params = state.param_tensors(mm);
+    let b = mm.decode_batch;
+    let t = mm.config.ctx_len;
+    let mut tokens = vec![0i32; b * t];
+    for (j, tok) in [BOS, 40, 41, SEP].iter().enumerate() {
+        tokens[j] = *tok as i32;
+    }
+    let pos = vec![3i32; b];
+    let exe = runtime.artifact("logits_last").unwrap();
+
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::from_i32(&[b, t], tokens.clone()));
+    inputs.push(HostTensor::from_i32(&[b], pos.clone()));
+    let via_run = exe.run(&inputs).unwrap();
+
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|h| h.to_literal().unwrap())
+        .collect();
+    let refs: Vec<&xla::Literal> = literals.iter().collect();
+    let via_raw = exe.run_raw(&refs).unwrap();
+    assert_eq!(via_run.len(), via_raw.len());
+    assert_eq!(via_run[0].as_f32().unwrap(),
+               &via_raw[0].to_vec::<f32>().unwrap()[..]);
+}
+
 #[test]
 fn beam_decode_runs() {
     let engine = engine();
