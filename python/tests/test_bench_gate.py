@@ -1,0 +1,191 @@
+"""scripts/bench_gate.py — the CI perf-regression gate.
+
+Pure-stdlib tests (no jax): the gate must stay green on identical /
+within-tolerance datapoints, demonstrably fail on synthetically
+regressed ones, bootstrap when baselines are missing, and honor the
+refresh knob.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_GATE_PATH = (Path(__file__).resolve().parent.parent.parent
+              / "scripts" / "bench_gate.py")
+_spec = importlib.util.spec_from_file_location("bench_gate",
+                                               _GATE_PATH)
+gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(gate)
+
+
+def decode_json(tps=100.0, p95=500.0, with_kv=True):
+    j = {
+        "engine": {"tokens_per_sec": tps},
+        "serve": {
+            "tokens_per_sec": tps * 2,
+            "latency_ms": {"p95": p95},
+        },
+    }
+    if with_kv:
+        j["kv"] = {"tokens_per_sec": tps * 1.5}
+    return j
+
+
+def point(engine, p95, ttft):
+    return {
+        "engine": engine,
+        "pattern": "poisson",
+        "latency_ms": {"p95": p95},
+        "ttft_ms": {"p95": ttft},
+    }
+
+
+def serve_load_json(ratio=0.9, p95=100.0):
+    return {
+        "kv_p95_vs_literal": ratio,
+        "points": [
+            point("literal", p95, p95 / 2),
+            point("kv", p95 * 0.8, p95 / 3),
+        ],
+    }
+
+
+class TestMetricComparison:
+    def test_identical_is_green(self):
+        cur = decode_json()
+        fails, _ = gate.check_file("BENCH_decode.json", cur, cur, 0.25)
+        assert fails == []
+
+    def test_within_tolerance_is_green(self):
+        fails, _ = gate.check_file("BENCH_decode.json",
+                                   decode_json(tps=80.0),
+                                   decode_json(tps=100.0), 0.25)
+        assert fails == []
+
+    def test_tokens_per_sec_regression_fails(self):
+        # 50% throughput drop >> 25% tolerance
+        fails, _ = gate.check_file("BENCH_decode.json",
+                                   decode_json(tps=50.0),
+                                   decode_json(tps=100.0), 0.25)
+        assert any("engine.tokens_per_sec" in f for f in fails)
+
+    def test_latency_regression_fails(self):
+        fails, _ = gate.check_file("BENCH_decode.json",
+                                   decode_json(p95=800.0),
+                                   decode_json(p95=500.0), 0.25)
+        assert any("serve.latency_ms.p95" in f for f in fails)
+
+    def test_improvement_is_green(self):
+        fails, _ = gate.check_file("BENCH_decode.json",
+                                   decode_json(tps=300.0, p95=100.0),
+                                   decode_json(tps=100.0, p95=500.0),
+                                   0.25)
+        assert fails == []
+
+    def test_missing_kv_leg_is_skipped(self):
+        # a pre-KV manifest has no kv block: skip, don't crash/fail
+        fails, _ = gate.check_file("BENCH_decode.json",
+                                   decode_json(with_kv=False),
+                                   decode_json(), 0.25)
+        assert fails == []
+
+
+class TestServeLoadGates:
+    def test_identical_sweep_is_green(self):
+        cur = serve_load_json()
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, cur,
+                                   0.25)
+        assert fails == []
+
+    def test_point_p95_regression_fails(self):
+        fails, _ = gate.check_file("BENCH_serve_load.json",
+                                   serve_load_json(p95=200.0),
+                                   serve_load_json(p95=100.0), 0.25)
+        assert any("latency_ms.p95" in f for f in fails)
+
+    def test_kv_worse_than_literal_fails_absolutely(self):
+        # the acceptance invariant: KV p95 <= literal p95 (+tol) at
+        # budgets >= 32, enforced even with NO baseline at all
+        cur = serve_load_json(ratio=1.6)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("kv_p95_vs_literal" in f for f in fails)
+
+    def test_layout_change_skips_with_note(self):
+        base = serve_load_json()
+        cur = serve_load_json()
+        cur["points"].append(point("literal", 50.0, 10.0))
+        fails, notes = gate.check_file("BENCH_serve_load.json", cur,
+                                       base, 0.25)
+        assert fails == []
+        assert any("layout changed" in n for n in notes)
+
+
+class TestBootstrapAndRefresh:
+    def test_missing_baseline_bootstraps_green(self):
+        fails, notes = gate.check_file("BENCH_decode.json",
+                                       decode_json(), None, 0.25)
+        assert fails == []
+        assert any("bootstrap" in n for n in notes)
+
+    def _write_fresh(self, root, ratio=0.9, tps=100.0, p95=100.0):
+        (root / "BENCH_decode.json").write_text(
+            json.dumps(decode_json(tps=tps)))
+        (root / "BENCH_serve_load.json").write_text(
+            json.dumps(serve_load_json(ratio=ratio, p95=p95)))
+
+    def test_main_end_to_end(self, tmp_path, monkeypatch):
+        root = tmp_path
+        self._write_fresh(root)
+        # bootstrap: no baselines committed yet -> green
+        monkeypatch.delenv("BENCH_GATE_REFRESH", raising=False)
+        monkeypatch.delenv("BENCH_GATE_TOL", raising=False)
+        assert gate.main(["bench_gate.py", str(root)]) == 0
+
+        # refresh knob commits the fresh datapoints as baselines
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(root)]) == 0
+        assert (root / "bench_baselines"
+                / "BENCH_decode.json").exists()
+        monkeypatch.delenv("BENCH_GATE_REFRESH")
+
+        # same numbers vs the new baselines -> green
+        assert gate.main(["bench_gate.py", str(root)]) == 0
+
+        # synthetically regressed datapoint -> the gate demonstrably
+        # fails
+        self._write_fresh(root, tps=40.0, p95=300.0)
+        assert gate.main(["bench_gate.py", str(root)]) == 1
+
+        # a looser tolerance waves the same numbers through
+        monkeypatch.setenv("BENCH_GATE_TOL", "5.0")
+        assert gate.main(["bench_gate.py", str(root)]) == 0
+
+    def test_main_fails_on_missing_fresh_datapoint(self, tmp_path):
+        # smoke produced nothing: hard failure, not a silent pass
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+
+    def test_refresh_refuses_invariant_violating_baseline(
+            self, tmp_path, monkeypatch):
+        # a kv-worse-than-literal datapoint must not be committable as
+        # the new norm via the refresh knob
+        self._write_fresh(tmp_path, ratio=1.6)
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+        # the healthy file still refreshes
+        assert (tmp_path / "bench_baselines"
+                / "BENCH_decode.json").exists()
+
+
+@pytest.mark.parametrize("dotted,expect", [
+    ("engine.tokens_per_sec", 100.0),
+    ("serve.latency_ms.p95", 500.0),
+    ("missing.path", None),
+    ("engine", None),  # non-leaf is not a number
+])
+def test_get_path(dotted, expect):
+    assert gate.get_path(decode_json(), dotted) == expect

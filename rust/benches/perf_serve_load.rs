@@ -1,0 +1,192 @@
+//! §Perf bench: latency under load (the serving trajectory's second
+//! axis).
+//!
+//! `perf_decode` tracks saturated throughput; this bench drives the
+//! slot-refill serve loop with a *seeded arrival-time trace*
+//! (`generate::loadgen`) and records how queue wait, time-to-first-
+//! token and end-to-end latency degrade as offered load approaches
+//! capacity — on both decode paths, under the exact same trace.
+//!
+//! Two legs:
+//!  * determinism — the same seed + pinned virtual step costs must
+//!    reproduce bit-identical per-request latencies (hard assert;
+//!    this is what makes the curves reviewable in CI);
+//!  * calibrated sweep — per-path step costs are measured (KV prefill
+//!    passes are costed at the literal full-step price), then the
+//!    offered rate sweeps fractions of capacity. Budgets are ≥ 32
+//!    tokens, where the KV path's floor is ≥ the literal path — so
+//!    its p95 should be no worse; the paired ratio is recorded as
+//!    `kv_p95_vs_literal` for `scripts/bench_gate.py`.
+//!
+//! Run: `cargo bench --bench perf_serve_load`
+//! Writes `BENCH_serve_load.json` (override with SPDF_BENCH_OUT; set
+//! SPDF_BENCH_SMOKE=1 for the CI smoke variant).
+
+use spdf::coordinator::report;
+use spdf::generate::loadgen::{self, Pattern, StepCosts, TraceConfig};
+use spdf::generate::{DecodeEngine, DecodeParams};
+use spdf::runtime::Engine;
+use spdf::train::TrainState;
+use spdf::util::json::Json;
+use spdf::util::rng::Rng;
+use spdf::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = match Engine::cpu(spdf::runtime::default_artifact_dir())
+    {
+        Ok(e) => e,
+        Err(e) => {
+            println!("artifacts unavailable ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let smoke = std::env::var("SPDF_BENCH_SMOKE").is_ok();
+    let model = "gpt-nano";
+    let decode_artifacts = engine.manifest.models.get(model)
+        .map(|m| m.decode_artifact_names())
+        .unwrap_or_else(|| vec!["logits_last"]);
+    let runtime = engine.load_model_artifacts(model,
+                                              &decode_artifacts)?;
+    let mm = &runtime.manifest;
+    let b = mm.decode_batch;
+    let state = TrainState::init(mm, &mut Rng::new(0));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params)?;
+    let dp = DecodeParams::default();
+    let total = Timer::start();
+
+    // --- determinism leg: pinned virtual costs, same trace, twice ---
+    let det_cfg = TraceConfig {
+        seed: 7,
+        requests: b,
+        rate_rps: 200.0,
+        pattern: Pattern::Poisson,
+        prompt_lens: (4, 10),
+        budgets: (4, 8),
+        vocab: mm.config.vocab_size,
+    };
+    let det_trace = loadgen::generate_trace(&det_cfg)?;
+    let pinned = StepCosts::default();
+    let (_, rep_a) =
+        loadgen::run_trace(&decode, &det_trace, &dp, false, &pinned)?;
+    let (_, rep_b) =
+        loadgen::run_trace(&decode, &det_trace, &dp, false, &pinned)?;
+    anyhow::ensure!(rep_a.results.len() == rep_b.results.len());
+    for (x, y) in rep_a.results.iter().zip(&rep_b.results) {
+        anyhow::ensure!(
+            x.tokens == y.tokens
+                && x.latency_ms == y.latency_ms
+                && x.ttft_ms == y.ttft_ms
+                && x.queue_ms == y.queue_ms,
+            "loadgen virtual-clock run is not deterministic \
+             (request {})", x.id
+        );
+    }
+    println!("determinism: two pinned-cost runs identical \
+              ({} requests)", rep_a.results.len());
+
+    // --- calibrated latency-under-load sweep, both engines ---
+    let lit = loadgen::calibrate(&decode, false, None)?;
+    let kvc = if decode.kv_available() {
+        Some(loadgen::calibrate(&decode, true, Some(lit.step_ms))?)
+    } else {
+        println!("(KV artifacts not in manifest — literal sweep only)");
+        None
+    };
+    let mut engines = vec![(false, lit)];
+    if let Some(c) = kvc {
+        engines.push((true, c));
+    }
+
+    // budgets >= 32: the regime where the KV floor (>= literal
+    // tokens/sec, see perf_decode) makes its p95 no worse
+    let budgets = (32usize, 48usize);
+    let mean_budget = (budgets.0 + budgets.1) as f64 / 2.0;
+    let requests = if smoke { 2 * b } else { 4 * b };
+    let utils: &[f64] = if smoke {
+        &[0.6, 1.0]
+    } else {
+        &[0.25, 0.5, 0.75, 0.9, 1.1]
+    };
+    let cap = loadgen::capacity_rps(b, lit.step_ms, mean_budget);
+    let rates: Vec<f64> = utils.iter().map(|u| u * cap).collect();
+    let base = TraceConfig {
+        seed: 11,
+        requests,
+        rate_rps: 1.0, // overridden per sweep point
+        pattern: Pattern::Poisson,
+        prompt_lens: (4, 12),
+        budgets,
+        vocab: mm.config.vocab_size,
+    };
+    let points = loadgen::sweep(&decode, &base, &rates, &engines,
+                                &dp)?;
+
+    println!("\n=== latency under load: {model} (B={b}, {} reqs/point, \
+              budgets {}..={}, literal step {:.3} ms{}) ===\n",
+             requests, budgets.0, budgets.1, lit.step_ms,
+             match &engines[..] {
+                 [_, (_, c)] => format!(", kv step {:.3} ms",
+                                        c.step_ms),
+                 _ => String::new(),
+             });
+    println!("{}", report::load_table(&points));
+
+    // paired KV-vs-literal p95 at each rate (sweep emits literal then
+    // kv per rate)
+    let kv_ratio = if engines.len() == 2 {
+        let mut worst = 0.0f64;
+        for pair in points.chunks(2) {
+            if let [l, k] = pair {
+                if l.latency_ms.p95 > 0.0 {
+                    worst = worst.max(k.latency_ms.p95
+                                      / l.latency_ms.p95);
+                }
+            }
+        }
+        if worst > 1.0 {
+            println!("WARNING: KV p95 exceeded literal p95 \
+                      ({worst:.2}x) at budgets >= 32");
+        }
+        Some(worst)
+    } else {
+        None
+    };
+
+    let costs_json = |c: &StepCosts| {
+        let mut o = Json::obj();
+        o.push("step_ms", Json::Num(c.step_ms))
+            .push("prefill_ms", Json::Num(c.prefill_ms));
+        o
+    };
+    let mut j = Json::obj();
+    j.push("model", Json::Str(model.into()))
+        .push("decode_batch", Json::Num(b as f64))
+        .push("ctx_len", Json::Num(mm.config.ctx_len as f64))
+        .push("smoke", Json::Bool(smoke))
+        .push("calibrated", Json::Bool(true))
+        .push("requests_per_point", Json::Num(requests as f64))
+        .push("budget_lo", Json::Num(budgets.0 as f64))
+        .push("budget_hi", Json::Num(budgets.1 as f64))
+        .push("capacity_rps", Json::Num(cap))
+        .push("determinism_ok", Json::Bool(true));
+    let mut costs = Json::obj();
+    costs.push("literal", costs_json(&engines[0].1));
+    if let Some((_, c)) = engines.get(1) {
+        costs.push("kv", costs_json(c));
+    }
+    j.push("costs", costs);
+    if let Some(r) = kv_ratio {
+        j.push("kv_p95_vs_literal", Json::Num(r));
+    }
+    j.push("points", loadgen::points_json(&points));
+
+    let out_path = std::env::var("SPDF_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_serve_load.json".into());
+    std::fs::write(&out_path, j.to_string_pretty())?;
+    println!("\nwrote {out_path} ({} points in {:.1}s{})",
+             points.len(), total.secs(),
+             kv_ratio.map(|r| format!(", kv p95 {r:.2}x literal"))
+                 .unwrap_or_default());
+    Ok(())
+}

@@ -5,8 +5,9 @@ use std::collections::BTreeMap;
 
 use crate::bench_support::Table;
 use crate::coordinator::experiments::RunResult;
+use crate::generate::loadgen::LoadPoint;
 use crate::generate::{RequestResult, ServeStats};
-use crate::util::stats::{pm, summarize};
+use crate::util::stats::{pm, summarize, Summary};
 
 /// Key for grouping seeds of the same cell.
 fn cell_key(r: &RunResult) -> (String, String, String, bool) {
@@ -170,18 +171,59 @@ pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
             format!("{:.1} tok/s", stats.tokens_per_sec)]);
     t.row(&["mean step".into(),
             format!("{:.2} ms", stats.mean_step_ms)]);
-    t.row(&["latency p50 / p95".into(),
-            format!("{:.1} / {:.1} ms", stats.latency_ms_p50,
-                    stats.latency_ms_p95)]);
+    t.row(&["latency p50 / p95 / p99".into(),
+            fmt_percentiles(&stats.latency_ms)]);
+    t.row(&["TTFT p50 / p95 / p99".into(),
+            fmt_percentiles(&stats.ttft_ms)]);
     if !results.is_empty() {
         let waits: Vec<f64> =
             results.iter().map(|r| r.queue_steps as f64).collect();
         let lens: Vec<f64> =
             results.iter().map(|r| r.tokens.len() as f64).collect();
         t.row(&["mean queue wait".into(),
-                format!("{:.1} steps", summarize(&waits).mean)]);
+                format!("{:.1} steps / {:.1} ms",
+                        summarize(&waits).mean,
+                        stats.queue_ms.mean)]);
         t.row(&["mean generation".into(),
                 format!("{:.1} tokens", summarize(&lens).mean)]);
+    }
+    t.render()
+}
+
+fn fmt_percentiles(s: &Summary) -> String {
+    format!("{:.1} / {:.1} / {:.1} ms", s.p50, s.p95, s.p99)
+}
+
+/// Latency-under-load table from a `loadgen` sweep: one row per
+/// (engine, offered load), percentiles on the virtual clock. Reading
+/// it: occupancy → how saturated the batch was; queue/TTFT → how long
+/// callers waited for service to begin; e2e p95/p99 → the tail a
+/// latency SLO would bind on. A healthy engine shows flat percentiles
+/// at low load and a sharp knee as the offered rate crosses capacity.
+pub fn load_table(points: &[LoadPoint]) -> String {
+    let mut t = Table::new(&["engine", "pattern", "offered rps",
+                             "achieved rps", "occ", "tok/vs",
+                             "queue p95", "TTFT p50/p95/p99",
+                             "e2e p50/p95/p99"]);
+    for p in points {
+        let tri = |s: &Summary| {
+            format!("{:.1}/{:.1}/{:.1}", s.p50, s.p95, s.p99)
+        };
+        t.row(&[
+            p.engine.clone(),
+            p.pattern.clone(),
+            if p.offered_rps > 0.0 {
+                format!("{:.1}", p.offered_rps)
+            } else {
+                "closed".into()
+            },
+            format!("{:.1}", p.achieved_rps),
+            format!("{:.0}%", p.occupancy * 100.0),
+            format!("{:.0}", p.tokens_per_vsec),
+            format!("{:.1}", p.queue_ms.p95),
+            tri(&p.ttft_ms),
+            tri(&p.latency_ms),
+        ]);
     }
     t.render()
 }
@@ -249,20 +291,57 @@ mod tests {
             wall_secs: 2.0,
             tokens_per_sec: 65.0,
             mean_step_ms: 50.0,
-            latency_ms_p50: 800.0,
-            latency_ms_p95: 1900.0,
+            sim_ms: 2000.0,
+            queue_ms: summarize(&[0.0, 120.0]),
+            ttft_ms: summarize(&[60.0, 200.0]),
+            latency_ms: summarize(&[700.0, 800.0, 1900.0]),
         };
         let results = vec![RequestResult {
             id: 0,
             tokens: vec![5, 6, 7],
             queue_steps: 4,
             decode_steps: 10,
+            arrival_ms: 0.0,
+            queue_ms: 120.0,
+            ttft_ms: 200.0,
             latency_ms: 700.0,
         }];
         let t = serve_table(&stats, &results);
         assert!(t.contains("90.0%"), "{t}");
         assert!(t.contains("65.0 tok/s"), "{t}");
         assert!(t.contains("4.0 steps"), "{t}");
+        // p50 / p95 / p99 of the latency sample
+        assert!(t.contains("800.0"), "{t}");
+        assert!(t.contains("TTFT"), "{t}");
+    }
+
+    #[test]
+    fn load_table_renders_sweep_points() {
+        let mk = |engine: &str, rps: f64, p95: f64| LoadPoint {
+            engine: engine.into(),
+            pattern: "poisson".into(),
+            offered_rps: rps,
+            requests: 64,
+            generated_tokens: 1000,
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+            sim_ms: 4000.0,
+            achieved_rps: rps * 0.97,
+            tokens_per_vsec: 250.0,
+            occupancy: 0.8,
+            queue_ms: summarize(&[1.0, 5.0]),
+            ttft_ms: summarize(&[4.0, 9.0]),
+            latency_ms: summarize(&[30.0, p95]),
+            wall_secs: 0.5,
+        };
+        let t = load_table(&[mk("literal", 50.0, 120.0),
+                             mk("kv", 50.0, 90.0),
+                             mk("kv", 0.0, 70.0)]);
+        assert!(t.contains("literal"), "{t}");
+        assert!(t.contains("50.0"), "{t}");
+        assert!(t.contains("80%"), "{t}");
+        // closed-loop points render without an offered rate
+        assert!(t.contains("closed"), "{t}");
     }
 
     #[test]

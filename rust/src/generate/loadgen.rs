@@ -1,0 +1,626 @@
+//! Workload-driven load generation: arrival-time traces and
+//! latency-under-load sweeps over the slot-refill serve loop.
+//!
+//! `BENCH_decode.json` tracks a single saturated-throughput point;
+//! deployment behavior is governed by what happens *under load* — how
+//! queue wait, time-to-first-token and end-to-end latency degrade as
+//! the offered request rate approaches the engine's capacity. This
+//! module supplies the missing scenario layer:
+//!
+//!  * [`generate_trace`] — a **seeded, deterministic** trace of timed
+//!    [`DecodeRequest`]s: Poisson or bursty open-loop arrivals at a
+//!    configurable rate, or closed-loop client chains
+//!    ([`Pattern::Closed`]), with uniform prompt-length and
+//!    generation-budget distributions. The same seed always yields
+//!    the same prompts/budgets regardless of the arrival rate, so a
+//!    rate sweep varies *only* the arrival process.
+//!  * [`run_trace`] — drives `batching::serve_timed`: requests are
+//!    injected as their arrival times pass on the **virtual clock**
+//!    (each engine step costs [`StepCosts::step_ms`], each KV prefill
+//!    pass [`StepCosts::prefill_ms`]), and per-request queue wait /
+//!    TTFT / latency are read off that clock. With pinned step costs
+//!    the whole simulation is bit-deterministic; [`calibrate`]
+//!    measures real per-step costs so the curves can be denominated
+//!    in honest milliseconds per engine path.
+//!  * [`sweep`] — the offered-load sweep feeding
+//!    `coordinator::report::load_table`, `spdf loadgen` and
+//!    `benches/perf_serve_load` (`BENCH_serve_load.json`).
+//!
+//! The model steps are real (the decoded tokens are exactly what
+//! `serve`/`serve_kv` would produce); only *time* is simulated, which
+//! is what makes the latency curves reproducible in CI.
+
+use crate::tokenizer::N_SPECIAL;
+use crate::tokenizer::{BOS, SEP};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+use super::batching::{self, Schedule, ServeReport};
+use super::{DecodeEngine, DecodeParams, DecodeRequest};
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// Memoryless open-loop arrivals: exponential inter-arrival times
+    /// at the configured rate.
+    Poisson,
+    /// Open-loop bursts: groups of `burst` requests arrive at the
+    /// same instant, with exponential gaps between groups sized so
+    /// the mean rate is preserved.
+    Bursty { burst: usize },
+    /// Closed loop: `clients` concurrent callers, each issuing its
+    /// next request `think_ms` after its previous one completes. The
+    /// offered rate is an outcome, not an input.
+    Closed { clients: usize, think_ms: f64 },
+}
+
+impl Pattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Poisson => "poisson",
+            Pattern::Bursty { .. } => "bursty",
+            Pattern::Closed { .. } => "closed",
+        }
+    }
+
+    /// Parse the `spdf loadgen --pattern` flag, taking the burst /
+    /// client knobs from their own flags.
+    pub fn parse(s: &str, burst: usize, clients: usize, think_ms: f64)
+                 -> anyhow::Result<Pattern> {
+        match s {
+            "poisson" => Ok(Pattern::Poisson),
+            "bursty" => {
+                anyhow::ensure!(burst >= 1, "--burst must be >= 1");
+                Ok(Pattern::Bursty { burst })
+            }
+            "closed" => {
+                anyhow::ensure!(clients >= 1,
+                                "--clients must be >= 1");
+                anyhow::ensure!(think_ms >= 0.0 && think_ms.is_finite(),
+                                "--think-ms must be non-negative");
+                Ok(Pattern::Closed { clients, think_ms })
+            }
+            other => anyhow::bail!(
+                "unknown --pattern {other} (want poisson | bursty | \
+                 closed)"
+            ),
+        }
+    }
+}
+
+/// Trace-generation knobs. Prompt lengths and budgets are inclusive
+/// uniform ranges; prompts are `BOS <body> SEP` with body tokens drawn
+/// from the non-special vocabulary, mirroring the perf benches.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub requests: usize,
+    /// Offered load, requests per (virtual) second — open-loop
+    /// patterns only.
+    pub rate_rps: f64,
+    pub pattern: Pattern,
+    /// Prompt body length range (tokens between BOS and SEP).
+    pub prompt_lens: (usize, usize),
+    /// `max_new_tokens` range.
+    pub budgets: (usize, usize),
+    pub vocab: usize,
+}
+
+/// A generated workload: requests plus their (virtual-ms) arrival
+/// times and closed-loop release chains.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<DecodeRequest>,
+    pub arrivals: Vec<f64>,
+    pub release: Vec<Option<(usize, f64)>>,
+    pub pattern: Pattern,
+    pub rate_rps: f64,
+    pub mean_budget: f64,
+}
+
+impl Trace {
+    /// Bind the trace to virtual step costs for `serve_timed`.
+    pub fn schedule(&self, costs: &StepCosts) -> Schedule {
+        Schedule {
+            arrivals: self.arrivals.clone(),
+            release: self.release.clone(),
+            step_ms: costs.step_ms,
+            prefill_ms: costs.prefill_ms,
+        }
+    }
+}
+
+/// Generate a deterministic timed request trace. Two calls with the
+/// same config are identical; prompts/budgets depend only on
+/// `(seed, requests, prompt_lens, budgets, vocab)` — not on the
+/// pattern or rate — so load sweeps reuse the exact same work items.
+pub fn generate_trace(cfg: &TraceConfig) -> anyhow::Result<Trace> {
+    anyhow::ensure!(cfg.requests > 0, "trace needs at least 1 request");
+    let (plo, phi) = cfg.prompt_lens;
+    let (blo, bhi) = cfg.budgets;
+    anyhow::ensure!(plo >= 1 && plo <= phi,
+                    "bad prompt length range {plo}..={phi}");
+    anyhow::ensure!(blo <= bhi, "bad budget range {blo}..={bhi}");
+    anyhow::ensure!(cfg.vocab > N_SPECIAL as usize + 1,
+                    "vocab {} leaves no non-special tokens", cfg.vocab);
+    match cfg.pattern {
+        Pattern::Closed { clients, .. } => {
+            anyhow::ensure!(clients >= 1,
+                            "closed loop needs at least 1 client");
+        }
+        Pattern::Bursty { burst } => {
+            anyhow::ensure!(burst >= 1, "bursts need at least 1 \
+                                         request");
+        }
+        Pattern::Poisson => {}
+    }
+    if !matches!(cfg.pattern, Pattern::Closed { .. }) {
+        anyhow::ensure!(cfg.rate_rps > 0.0 && cfg.rate_rps.is_finite(),
+                        "open-loop patterns need a positive rate");
+    }
+
+    let n = cfg.requests;
+    let mut rng = Rng::new(cfg.seed);
+    // phase 1: work items (prompts + budgets) — consumed draws do not
+    // depend on the arrival process
+    let mut requests = Vec::with_capacity(n);
+    let mut budget_sum = 0usize;
+    for i in 0..n {
+        let len = plo + rng.below(phi - plo + 1);
+        let mut p = Vec::with_capacity(len + 2);
+        p.push(BOS);
+        let span = cfg.vocab - N_SPECIAL as usize;
+        p.extend((0..len).map(|_| N_SPECIAL + rng.below(span) as u32));
+        p.push(SEP);
+        let budget = blo + rng.below(bhi - blo + 1);
+        budget_sum += budget;
+        requests.push(DecodeRequest::new(i as u64, p, budget));
+    }
+
+    // phase 2: the arrival process
+    let mut arrivals = vec![0.0f64; n];
+    let mut release: Vec<Option<(usize, f64)>> = vec![None; n];
+    match cfg.pattern {
+        Pattern::Poisson => {
+            let mut t = 0.0f64;
+            for a in arrivals.iter_mut() {
+                t += exp_ms(&mut rng, cfg.rate_rps);
+                *a = t;
+            }
+        }
+        Pattern::Bursty { burst } => {
+            // groups of `burst` arrive together; the gap between
+            // groups is exponential with mean `burst / rate`, so the
+            // long-run request rate stays `rate_rps`
+            let group_rate = cfg.rate_rps / burst as f64;
+            let mut t = 0.0f64;
+            for g in (0..n).step_by(burst) {
+                t += exp_ms(&mut rng, group_rate);
+                for a in arrivals.iter_mut().skip(g).take(burst) {
+                    *a = t;
+                }
+            }
+        }
+        Pattern::Closed { clients, think_ms } => {
+            let k = clients.min(n);
+            for (i, a) in arrivals.iter_mut().enumerate() {
+                *a = if i < k { 0.0 } else { f64::INFINITY };
+            }
+            for i in 0..n.saturating_sub(k) {
+                release[i] = Some((i + k, think_ms));
+            }
+        }
+    }
+
+    Ok(Trace {
+        requests,
+        arrivals,
+        release,
+        pattern: cfg.pattern,
+        rate_rps: match cfg.pattern {
+            Pattern::Closed { .. } => 0.0,
+            _ => cfg.rate_rps,
+        },
+        mean_budget: budget_sum as f64 / n as f64,
+    })
+}
+
+/// Exponential inter-arrival draw, milliseconds, `rate` per second.
+fn exp_ms(rng: &mut Rng, rate: f64) -> f64 {
+    // uniform() is in [0, 1) so 1 - u is in (0, 1] — ln never sees 0
+    -(1.0 - rng.uniform()).ln() / rate * 1000.0
+}
+
+/// Virtual cost of one engine invocation, per path. Pinned values
+/// (the default `1.0/1.0`) make the whole simulation deterministic —
+/// latencies then measure pure queueing in step units. [`calibrate`]
+/// replaces them with measured wall costs for honest-ms curves.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCosts {
+    pub step_ms: f64,
+    pub prefill_ms: f64,
+}
+
+impl Default for StepCosts {
+    fn default() -> StepCosts {
+        StepCosts { step_ms: 1.0, prefill_ms: 1.0 }
+    }
+}
+
+/// Measure an engine path's real mean step cost (wall ms) with a
+/// short saturated serve — one untimed warm pass first, so PJRT lazy
+/// init never pollutes the sample.
+///
+/// The literal path has no prefill; its `prefill_ms` echoes `step_ms`.
+/// For the KV path pass the literal calibration as `full_step_ms`: a
+/// prefill pass is a full-context forward (the `logits_last` graph
+/// plus cache taps), so it is costed at the literal step price and the
+/// residual wall time is attributed to the cheap incremental steps.
+pub fn calibrate(engine: &DecodeEngine, use_kv: bool,
+                 full_step_ms: Option<f64>)
+                 -> anyhow::Result<StepCosts> {
+    let b = engine.decode_batch();
+    let vocab = engine.vocab();
+    let mk = |n: usize, budget: usize| -> Vec<DecodeRequest> {
+        let mut rng = Rng::new(17);
+        (0..n)
+            .map(|i| {
+                let mut p = vec![BOS];
+                p.extend((0..4).map(|_| {
+                    N_SPECIAL + rng.below(vocab - N_SPECIAL as usize)
+                        as u32
+                }));
+                p.push(SEP);
+                DecodeRequest::new(i as u64, p, budget)
+            })
+            .collect()
+    };
+    let dp = DecodeParams::default();
+    let run = |requests: &[DecodeRequest]| {
+        if use_kv {
+            batching::serve_kv(engine, requests, &dp)
+        } else {
+            batching::serve(engine, requests, &dp)
+        }
+    };
+    run(&mk(b.min(2), 2))?; // warm
+    let report = run(&mk(2 * b, 8))?;
+    let st = &report.stats;
+    anyhow::ensure!(st.engine_steps > 0, "calibration serve ran no steps");
+    let wall_ms = st.wall_secs * 1e3;
+    if use_kv {
+        let prefill_ms = full_step_ms
+            .unwrap_or(wall_ms / st.engine_steps as f64);
+        let residual =
+            wall_ms - st.prefill_steps as f64 * prefill_ms;
+        let step_ms =
+            (residual / st.engine_steps as f64).max(1e-6);
+        Ok(StepCosts { step_ms, prefill_ms })
+    } else {
+        let step_ms = wall_ms / st.engine_steps as f64;
+        Ok(StepCosts { step_ms, prefill_ms: step_ms })
+    }
+}
+
+/// Saturation request rate for a batch of `decode_batch` slots at
+/// `step_ms` per step and `mean_budget` tokens per request: the serve
+/// loop emits at most one token per slot per step.
+pub fn capacity_rps(decode_batch: usize, step_ms: f64,
+                    mean_budget: f64) -> f64 {
+    (decode_batch as f64 * 1000.0 / step_ms.max(1e-9))
+        / mean_budget.max(1.0)
+}
+
+/// One measured point on the latency-under-load curve.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    /// "literal" | "kv".
+    pub engine: String,
+    pub pattern: String,
+    /// Offered request rate (0.0 for closed loop, where rate is an
+    /// outcome).
+    pub offered_rps: f64,
+    pub requests: usize,
+    pub generated_tokens: u64,
+    pub step_ms: f64,
+    pub prefill_ms: f64,
+    /// Virtual duration of the simulation.
+    pub sim_ms: f64,
+    /// Completions per virtual second.
+    pub achieved_rps: f64,
+    /// Generated tokens per virtual second.
+    pub tokens_per_vsec: f64,
+    pub occupancy: f64,
+    pub queue_ms: Summary,
+    pub ttft_ms: Summary,
+    pub latency_ms: Summary,
+    /// Real host time the simulation took (the model steps are real).
+    pub wall_secs: f64,
+}
+
+impl LoadPoint {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("engine", Json::Str(self.engine.clone()))
+            .push("pattern", Json::Str(self.pattern.clone()))
+            .push("offered_rps", Json::Num(self.offered_rps))
+            .push("requests", Json::Num(self.requests as f64))
+            .push("generated_tokens",
+                  Json::Num(self.generated_tokens as f64))
+            .push("step_ms", Json::Num(self.step_ms))
+            .push("prefill_ms", Json::Num(self.prefill_ms))
+            .push("sim_ms", Json::Num(self.sim_ms))
+            .push("achieved_rps", Json::Num(self.achieved_rps))
+            .push("tokens_per_vsec", Json::Num(self.tokens_per_vsec))
+            .push("occupancy", Json::Num(self.occupancy))
+            .push("queue_ms", self.queue_ms.to_json())
+            .push("ttft_ms", self.ttft_ms.to_json())
+            .push("latency_ms", self.latency_ms.to_json())
+            .push("wall_secs", Json::Num(self.wall_secs));
+        j
+    }
+}
+
+/// Drive one trace through `serve_timed` on the chosen path and fold
+/// the report into a [`LoadPoint`]. Deterministic for a given trace +
+/// costs (the decoded tokens are real; only time is simulated).
+pub fn run_trace(engine: &DecodeEngine, trace: &Trace,
+                 dp: &DecodeParams, use_kv: bool, costs: &StepCosts)
+                 -> anyhow::Result<(LoadPoint, ServeReport)> {
+    let schedule = trace.schedule(costs);
+    let report = batching::serve_timed(engine, &trace.requests, dp,
+                                       use_kv, &schedule)?;
+    let st = &report.stats;
+    let sim_secs = (st.sim_ms / 1e3).max(1e-9);
+    let point = LoadPoint {
+        engine: if use_kv { "kv" } else { "literal" }.into(),
+        pattern: trace.pattern.name().into(),
+        offered_rps: trace.rate_rps,
+        requests: trace.requests.len(),
+        generated_tokens: st.generated_tokens,
+        step_ms: costs.step_ms,
+        prefill_ms: costs.prefill_ms,
+        sim_ms: st.sim_ms,
+        achieved_rps: trace.requests.len() as f64 / sim_secs,
+        tokens_per_vsec: st.generated_tokens as f64 / sim_secs,
+        occupancy: st.occupancy,
+        queue_ms: st.queue_ms.clone(),
+        ttft_ms: st.ttft_ms.clone(),
+        latency_ms: st.latency_ms.clone(),
+        wall_secs: st.wall_secs,
+    };
+    Ok((point, report))
+}
+
+/// Offered-load sweep: one point per (rate, engine path), all points
+/// at one rate sharing the exact same trace. `engines` holds
+/// `use_kv` flags with their step costs.
+pub fn sweep(engine: &DecodeEngine, base: &TraceConfig,
+             rates: &[f64], engines: &[(bool, StepCosts)],
+             dp: &DecodeParams) -> anyhow::Result<Vec<LoadPoint>> {
+    let mut points = Vec::new();
+    for &rate in rates {
+        let cfg = TraceConfig { rate_rps: rate, ..base.clone() };
+        let trace = generate_trace(&cfg)?;
+        for (use_kv, costs) in engines {
+            let (point, _) =
+                run_trace(engine, &trace, dp, *use_kv, costs)?;
+            points.push(point);
+        }
+    }
+    Ok(points)
+}
+
+/// JSON array of sweep points (`BENCH_serve_load.json` / `--out`).
+pub fn points_json(points: &[LoadPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batching::mock::MockBackend;
+    use super::super::batching::run_loop;
+    use super::*;
+
+    fn cfg(pattern: Pattern, rate: f64) -> TraceConfig {
+        TraceConfig {
+            seed: 42,
+            requests: 40,
+            rate_rps: rate,
+            pattern,
+            prompt_lens: (3, 6),
+            budgets: (2, 5),
+            vocab: 16,
+        }
+    }
+
+    #[test]
+    fn trace_is_seed_deterministic() {
+        let c = cfg(Pattern::Poisson, 50.0);
+        let (a, b) = (generate_trace(&c).unwrap(),
+                      generate_trace(&c).unwrap());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        assert_eq!(a.arrivals, b.arrivals);
+        let c2 = TraceConfig { seed: 43, ..c };
+        let d = generate_trace(&c2).unwrap();
+        assert_ne!(a.arrivals, d.arrivals);
+    }
+
+    #[test]
+    fn work_items_independent_of_rate_and_pattern() {
+        // a load sweep must vary only the arrival process
+        let a = generate_trace(&cfg(Pattern::Poisson, 10.0)).unwrap();
+        let b = generate_trace(&cfg(Pattern::Poisson, 500.0)).unwrap();
+        let c = generate_trace(&cfg(Pattern::Bursty { burst: 4 },
+                                    10.0)).unwrap();
+        for ((x, y), z) in a.requests.iter().zip(&b.requests)
+            .zip(&c.requests)
+        {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.prompt, z.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        assert_ne!(a.arrivals, b.arrivals);
+    }
+
+    #[test]
+    fn poisson_arrivals_sorted_with_plausible_mean() {
+        let c = TraceConfig { requests: 4000,
+                              ..cfg(Pattern::Poisson, 100.0) };
+        let t = generate_trace(&c).unwrap();
+        assert!(t.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        // mean inter-arrival should be near 1000/rate = 10ms
+        let mean = t.arrivals.last().unwrap() / 4000.0;
+        assert!((mean - 10.0).abs() < 1.5, "mean gap {mean}");
+        assert!(t.release.iter().all(|r| r.is_none()));
+    }
+
+    #[test]
+    fn bursty_groups_share_arrival_instants() {
+        let c = TraceConfig { requests: 32,
+                              ..cfg(Pattern::Bursty { burst: 4 },
+                                    80.0) };
+        let t = generate_trace(&c).unwrap();
+        for g in (0..32).step_by(4) {
+            for i in g..g + 4 {
+                assert_eq!(t.arrivals[i], t.arrivals[g]);
+            }
+        }
+        // distinct groups at distinct instants
+        assert!(t.arrivals[0] < t.arrivals[4]);
+    }
+
+    #[test]
+    fn closed_loop_chains_clients() {
+        let c = TraceConfig {
+            requests: 7,
+            ..cfg(Pattern::Closed { clients: 3, think_ms: 2.0 }, 0.0)
+        };
+        let t = generate_trace(&c).unwrap();
+        assert_eq!(&t.arrivals[..3], &[0.0, 0.0, 0.0]);
+        assert!(t.arrivals[3..].iter().all(|a| a.is_infinite()));
+        assert_eq!(t.release[0], Some((3, 2.0)));
+        assert_eq!(t.release[3], Some((6, 2.0)));
+        assert_eq!(t.release[4], None);
+        assert_eq!(t.rate_rps, 0.0);
+    }
+
+    #[test]
+    fn trace_through_mock_serve_is_deterministic() {
+        // the satellite guarantee: one seed → identical trace AND
+        // identical ServeStats, end to end through the serve loop
+        let c = TraceConfig { requests: 12,
+                              ..cfg(Pattern::Poisson, 400.0) };
+        let run = || {
+            let trace = generate_trace(&c).unwrap();
+            let sched = trace.schedule(&StepCosts::default());
+            let mut be = MockBackend::new(2, 16, false);
+            run_loop(&mut be, &trace.requests,
+                     &DecodeParams::default(), Some(&sched)).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.stats.engine_steps, b.stats.engine_steps);
+        assert_eq!(a.stats.sim_ms, b.stats.sim_ms);
+        assert_eq!(a.stats.latency_ms, b.stats.latency_ms);
+        assert_eq!(a.stats.ttft_ms, b.stats.ttft_ms);
+        assert_eq!(a.stats.queue_ms, b.stats.queue_ms);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.latency_ms, y.latency_ms);
+        }
+        // and the latency percentiles are populated
+        assert!(a.stats.latency_ms.p95 >= a.stats.latency_ms.p50);
+        assert!(a.stats.latency_ms.p99 >= a.stats.latency_ms.p95);
+    }
+
+    #[test]
+    fn closed_loop_trace_runs_through_mock_serve() {
+        let c = TraceConfig {
+            requests: 9,
+            ..cfg(Pattern::Closed { clients: 2, think_ms: 1.5 }, 0.0)
+        };
+        let trace = generate_trace(&c).unwrap();
+        let sched = trace.schedule(&StepCosts::default());
+        let mut be = MockBackend::new(2, 16, false);
+        let report = run_loop(&mut be, &trace.requests,
+                              &DecodeParams::default(), Some(&sched))
+            .unwrap();
+        assert_eq!(report.results.len(), 9);
+        // closed loop: a successor arrives only after its
+        // predecessor completes (+ think), and with in-flight ≤
+        // clients ≤ slots it waits at most one step of admission
+        // quantization, never a real queue
+        let r3 = &report.results[3];
+        let r1 = &report.results[1];
+        assert!(r3.arrival_ms >= r1.arrival_ms + r1.latency_ms,
+                "successor arrived before predecessor finished");
+        assert!(r3.queue_ms < sched.step_ms + 1e-9,
+                "closed loop queued for {} ms", r3.queue_ms);
+    }
+
+    #[test]
+    fn capacity_rps_scales() {
+        // 16 slots, 1ms steps → 16k tokens/s; 32-token requests →
+        // 500 rps
+        assert!((capacity_rps(16, 1.0, 32.0) - 500.0).abs() < 1e-9);
+        // slower steps halve it
+        assert!((capacity_rps(16, 2.0, 32.0) - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generate_trace_rejects_bad_configs() {
+        assert!(generate_trace(&TraceConfig {
+            requests: 0, ..cfg(Pattern::Poisson, 10.0)
+        }).is_err());
+        assert!(generate_trace(&TraceConfig {
+            rate_rps: 0.0, ..cfg(Pattern::Poisson, 0.0)
+        }).is_err());
+        assert!(generate_trace(&TraceConfig {
+            prompt_lens: (5, 3), ..cfg(Pattern::Poisson, 10.0)
+        }).is_err());
+        // degenerate patterns error instead of panicking (step_by 0)
+        // or producing self-release chains
+        assert!(generate_trace(&cfg(Pattern::Bursty { burst: 0 },
+                                    10.0)).is_err());
+        assert!(generate_trace(&cfg(
+            Pattern::Closed { clients: 0, think_ms: 0.0 }, 0.0
+        )).is_err());
+        // closed loop ignores the rate entirely
+        assert!(generate_trace(&cfg(
+            Pattern::Closed { clients: 2, think_ms: 0.0 }, 0.0
+        )).is_ok());
+    }
+
+    #[test]
+    fn load_point_json_round_trips_percentiles() {
+        let p = LoadPoint {
+            engine: "kv".into(),
+            pattern: "poisson".into(),
+            offered_rps: 120.0,
+            requests: 64,
+            generated_tokens: 900,
+            step_ms: 0.8,
+            prefill_ms: 2.0,
+            sim_ms: 700.0,
+            achieved_rps: 91.4,
+            tokens_per_vsec: 1285.7,
+            occupancy: 0.93,
+            queue_ms: Summary::zero(),
+            ttft_ms: Summary::zero(),
+            latency_ms: crate::util::stats::summarize(
+                &[10.0, 20.0, 80.0]),
+            wall_secs: 1.25,
+        };
+        let j = p.to_json();
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("kv"));
+        assert_eq!(j.get("offered_rps").unwrap().as_f64(),
+                   Some(120.0));
+        assert_eq!(j.get("latency_ms").unwrap().get("p50")
+                       .unwrap().as_f64(),
+                   Some(20.0));
+    }
+}

@@ -20,7 +20,13 @@
 //!  * [`batching`] — continuous slot-refill batching: any number of
 //!    requests stream through the fixed `(decode_batch, ctx_len)`
 //!    geometry, finished slots are refilled mid-flight (with per-slot
-//!    cache prefill on the KV path).
+//!    cache prefill on the KV path). Admission is either immediate
+//!    ([`batching::serve`]/[`batching::serve_kv`]) or arrival-gated on
+//!    a deterministic virtual clock ([`batching::serve_timed`]).
+//!  * [`loadgen`] — seeded arrival-time traces (Poisson / bursty /
+//!    closed-loop) and the offered-load sweep producing
+//!    latency-under-load curves (`spdf loadgen`,
+//!    `BENCH_serve_load.json`).
 //!  * [`topk`] — O(V + k log k) candidate selection, exactly equal to
 //!    the old full-vocab stable sort's prefix.
 //!  * [`reference`] — the pre-engine path (per-step param upload +
@@ -32,11 +38,12 @@
 
 pub mod batching;
 pub mod engine;
+pub mod loadgen;
 pub mod reference;
 pub mod topk;
 
-pub use batching::{DecodeRequest, RequestResult, ServeReport,
-                   ServeStats};
+pub use batching::{DecodeRequest, RequestResult, Schedule,
+                   ServeReport, ServeStats};
 pub use engine::DecodeEngine;
 
 use crate::runtime::{HostTensor, ModelRuntime};

@@ -8,6 +8,7 @@
 //!   run-matrix  the full experiment matrix (Table 1 / Fig. 2 data)
 //!   report      render tables from the results ledger
 //!   serve       continuous-batching decode over a request stream
+//!   loadgen     arrival-time load generator: latency-under-load sweep
 //!   subspace    Figures 3–4 cosine-distance analysis
 //!   gen-data    dump synthetic task examples (inspection/demo)
 
@@ -19,8 +20,10 @@ use spdf::coordinator::experiments::{self, RunKnobs, RunSpec};
 use spdf::coordinator::{self, report, World, WorldConfig};
 use spdf::data::Task;
 use spdf::flops;
+use spdf::generate::loadgen::{self, Pattern, StepCosts};
 use spdf::generate::DecodeParams;
 use spdf::runtime::Engine;
+use spdf::util::json::Json;
 use spdf::sparsity::MaskScheme;
 use spdf::train::checkpoint;
 use spdf::util::cli::Cli;
@@ -39,6 +42,7 @@ fn main() {
         "run-matrix" => cmd_run_matrix(rest),
         "report" => cmd_report(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "subspace" => cmd_subspace(rest),
         "gen-data" => cmd_gen_data(rest),
         "help" | "--help" | "-h" => {
@@ -69,6 +73,8 @@ fn print_help() {
            report      render tables from the results ledger\n\
            serve       continuous-batching decode over a request \
            stream\n\
+           loadgen     arrival-time load generator \
+           (latency-under-load sweep)\n\
            subspace    Figures 3-4 cosine-distance analysis\n\
            gen-data    dump synthetic task examples\n\n\
          run `spdf <command> --help` for flags"
@@ -389,6 +395,36 @@ fn cmd_report_inner(run_dir: &PathBuf) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Decode-only serving setup shared by `serve` and `loadgen`: compile
+/// just the decode artifacts (skipping train/eval — and the KV pair
+/// too when `--engine literal` was asked for or the manifest predates
+/// it), then load checkpoint params or a seeded random init.
+fn decode_runtime_and_params(
+    engine: &Engine,
+    model: &str,
+    engine_flag: &str,
+    ckpt: &str,
+    seed: u64,
+) -> anyhow::Result<(spdf::runtime::ModelRuntime,
+                     Vec<spdf::runtime::HostTensor>)> {
+    let mm0 = engine.manifest.models.get(model).ok_or_else(
+        || anyhow::anyhow!("model {model} not in manifest"))?;
+    let decode_artifacts = if engine_flag == "literal" {
+        vec!["logits_last"]
+    } else {
+        mm0.decode_artifact_names()
+    };
+    let runtime = engine.load_model_artifacts(model,
+                                              &decode_artifacts)?;
+    let state = match ckpt {
+        "" => spdf::train::TrainState::init(&runtime.manifest,
+                                            &mut Rng::new(seed)),
+        path => checkpoint::load(&PathBuf::from(path))?,
+    };
+    let params = state.param_tensors(&runtime.manifest);
+    Ok((runtime, params))
+}
+
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let cli = world_flags(
         Cli::new("spdf serve",
@@ -411,25 +447,10 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     );
     let world = build_world(&a)?;
     let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
-    // decode-only serving: skip compiling the train/eval artifacts,
-    // and skip the KV pair too when --engine literal was asked for
-    // (or the manifest predates it)
-    let mm0 = engine.manifest.models.get(a.get("model")).ok_or_else(
-        || anyhow::anyhow!("model {} not in manifest", a.get("model")))?;
-    let decode_artifacts = if engine_flag == "literal" {
-        vec!["logits_last"]
-    } else {
-        mm0.decode_artifact_names()
-    };
-    let runtime = engine.load_model_artifacts(a.get("model"),
-                                              &decode_artifacts)?;
+    let (runtime, params) = decode_runtime_and_params(
+        &engine, a.get("model"), engine_flag, a.get("ckpt"),
+        a.get_u64("seed")?)?;
     let mm = &runtime.manifest;
-    let state = match a.get("ckpt") {
-        "" => spdf::train::TrainState::init(
-            mm, &mut Rng::new(a.get_u64("seed")?)),
-        path => checkpoint::load(&PathBuf::from(path))?,
-    };
-    let params = state.param_tensors(mm);
     let decode = spdf::generate::DecodeEngine::new(&runtime, &params)?;
 
     let task = Task::parse(a.get("task"))?;
@@ -472,6 +493,174 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
             std::fs::write(path,
                            report.stats.to_json().to_string_pretty())?;
             eprintln!("[spdf] stats written to {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "spdf loadgen",
+        "seeded arrival-time load generator: sweep offered load over \
+         the serve loop and report latency-under-load percentiles")
+        .flag("model", "gpt-nano", "model name")
+        .flag("ckpt", "", "checkpoint path (empty = random init)")
+        .flag("seed", "0", "trace seed (same seed = same trace)")
+        .flag("requests", "64", "requests per load point")
+        .flag("pattern", "poisson", "poisson | bursty | closed")
+        .flag("burst", "8", "requests per burst (bursty pattern)")
+        .flag("clients", "8", "concurrent clients (closed pattern)")
+        .flag("think-ms", "0", "client think time (closed pattern)")
+        .flag("rates", "auto",
+              "offered requests/sec sweep (comma list, or auto = \
+               {0.25,0.5,0.75,0.9,1.1} x capacity)")
+        .flag("prompt-lens", "4,12", "prompt body length range lo,hi")
+        .flag("budgets", "8,32", "max-new-tokens range lo,hi")
+        .flag("engine", "auto",
+              "decode path: auto (= both when the manifest carries \
+               the KV artifacts) | both | kv | literal")
+        .flag("step-ms", "1",
+              "pinned virtual cost of one engine step (deterministic \
+               latencies, step-denominated)")
+        .flag("prefill-ms", "0",
+              "pinned virtual cost of a KV prefill pass (0 = same as \
+               --step-ms)")
+        .switch("calibrate",
+                "measure real per-path step costs instead of the \
+                 pinned --step-ms (honest-ms curves; the trace itself \
+                 stays seed-deterministic)")
+        .flag("out", "", "write the sweep JSON to this path");
+    let a = cli.parse(raw)?;
+    let engine_flag = a.get("engine");
+    anyhow::ensure!(
+        matches!(engine_flag, "auto" | "both" | "kv" | "literal"),
+        "unknown --engine {engine_flag} (want auto | both | kv | \
+         literal)"
+    );
+    let range = |name: &str| -> anyhow::Result<(usize, usize)> {
+        let xs = a.get_list(name);
+        anyhow::ensure!(xs.len() == 2, "--{name} wants lo,hi");
+        let lo = xs[0].parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --{name} lo"))?;
+        let hi = xs[1].parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --{name} hi"))?;
+        Ok((lo, hi))
+    };
+    let prompt_lens = range("prompt-lens")?;
+    let budgets = range("budgets")?;
+
+    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
+    let (runtime, params) = decode_runtime_and_params(
+        &engine, a.get("model"), engine_flag, a.get("ckpt"),
+        a.get_u64("seed")?)?;
+    let mm = &runtime.manifest;
+    anyhow::ensure!(
+        prompt_lens.1 + 2 <= mm.config.ctx_len - 1,
+        "--prompt-lens hi {} does not fit ctx_len {} (BOS + body + \
+         SEP must leave one slot)",
+        prompt_lens.1, mm.config.ctx_len
+    );
+    let decode = spdf::generate::DecodeEngine::new(&runtime, &params)?;
+
+    let paths: Vec<bool> = match engine_flag {
+        "literal" => vec![false],
+        "kv" => {
+            anyhow::ensure!(decode.kv_available(),
+                            "--engine kv but the manifest carries no \
+                             KV artifacts — run `make artifacts`");
+            vec![true]
+        }
+        _ => {
+            if decode.kv_available() {
+                vec![false, true]
+            } else {
+                vec![false]
+            }
+        }
+    };
+
+    let calibrated = a.is_set("calibrate");
+    let mut engines: Vec<(bool, StepCosts)> = Vec::new();
+    if calibrated {
+        eprintln!("[spdf] calibrating per-path step costs...");
+        let lit = loadgen::calibrate(&decode, false, None)?;
+        for &kv in &paths {
+            let costs = if kv {
+                loadgen::calibrate(&decode, true, Some(lit.step_ms))?
+            } else {
+                lit
+            };
+            eprintln!("[spdf]   {}: step {:.3} ms, prefill {:.3} ms",
+                      if kv { "kv" } else { "literal" },
+                      costs.step_ms, costs.prefill_ms);
+            engines.push((kv, costs));
+        }
+    } else {
+        let step_ms = a.get_f64("step-ms")?;
+        anyhow::ensure!(step_ms > 0.0, "--step-ms must be positive");
+        let pf = a.get_f64("prefill-ms")?;
+        let prefill_ms = if pf <= 0.0 { step_ms } else { pf };
+        for &kv in &paths {
+            engines.push((kv, StepCosts { step_ms, prefill_ms }));
+        }
+    }
+
+    let pattern = Pattern::parse(a.get("pattern"),
+                                 a.get_usize("burst")?,
+                                 a.get_usize("clients")?,
+                                 a.get_f64("think-ms")?)?;
+    let mean_budget = (budgets.0 + budgets.1) as f64 / 2.0;
+    let rates: Vec<f64> = if matches!(pattern, Pattern::Closed { .. }) {
+        vec![0.0] // rate is an outcome of the client loop
+    } else if a.get("rates") == "auto" {
+        let cap = loadgen::capacity_rps(mm.decode_batch,
+                                        engines[0].1.step_ms,
+                                        mean_budget);
+        [0.25, 0.5, 0.75, 0.9, 1.1].iter().map(|u| u * cap).collect()
+    } else {
+        a.get_list("rates")
+            .iter()
+            .map(|s| s.parse::<f64>().map_err(
+                |_| anyhow::anyhow!("bad rate {s}")))
+            .collect::<anyhow::Result<Vec<f64>>>()?
+    };
+
+    let base = loadgen::TraceConfig {
+        seed: a.get_u64("seed")?,
+        requests: a.get_usize("requests")?,
+        rate_rps: 1.0, // overridden per sweep point
+        pattern,
+        prompt_lens,
+        budgets,
+        vocab: mm.config.vocab_size,
+    };
+    let dp = DecodeParams::default();
+    let total = Timer::start();
+    let points = loadgen::sweep(&decode, &base, &rates, &engines,
+                                &dp)?;
+    eprintln!("[spdf] swept {} load points in {:.1}s ({})",
+              points.len(), total.secs(),
+              if calibrated {
+                  "calibrated ms"
+              } else {
+                  "pinned virtual step costs"
+              });
+    println!("{}", report::load_table(&points));
+
+    match a.get("out") {
+        "" => {}
+        path => {
+            let mut j = Json::obj();
+            j.push("model", Json::Str(a.get("model").into()))
+                .push("decode_batch", Json::Num(mm.decode_batch as f64))
+                .push("ctx_len", Json::Num(mm.config.ctx_len as f64))
+                .push("seed", Json::Num(base.seed as f64))
+                .push("pattern", Json::Str(pattern.name().into()))
+                .push("requests", Json::Num(base.requests as f64))
+                .push("calibrated", Json::Bool(calibrated))
+                .push("points", loadgen::points_json(&points));
+            std::fs::write(path, j.to_string_pretty())?;
+            eprintln!("[spdf] sweep written to {path}");
         }
     }
     Ok(())

@@ -2,6 +2,8 @@
 //! mean±std reporting the paper's tables use, plus Pearson/Spearman
 //! correlation for the H2/H3 hypothesis checks.
 
+use crate::util::json::Json;
+
 /// Summary of a sample.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
@@ -12,10 +14,48 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
+impl Summary {
+    /// The empty-sample summary (`n == 0`, every statistic 0.0) —
+    /// what `summarize(&[])` returns, so latency tables over an empty
+    /// request stream render zeros instead of panicking.
+    pub fn zero() -> Summary {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        }
+    }
+
+    /// JSON form used by the serve/loadgen stats blocks
+    /// (`BENCH_decode.json`, `BENCH_serve_load.json`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push("n", Json::Num(self.n as f64))
+            .push("mean", Json::Num(self.mean))
+            .push("min", Json::Num(self.min))
+            .push("max", Json::Num(self.max))
+            .push("p50", Json::Num(self.p50))
+            .push("p95", Json::Num(self.p95))
+            .push("p99", Json::Num(self.p99));
+        j
+    }
+}
+
+/// Summary statistics of a sample. An empty sample yields
+/// [`Summary::zero`] rather than panicking (serving stats legitimately
+/// aggregate zero requests).
 pub fn summarize(xs: &[f64]) -> Summary {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return Summary::zero();
+    }
     let n = xs.len();
     let mean = xs.iter().sum::<f64>() / n as f64;
     let var = if n > 1 {
@@ -33,12 +73,17 @@ pub fn summarize(xs: &[f64]) -> Summary {
         max: sorted[n - 1],
         p50: percentile(&sorted, 0.50),
         p95: percentile(&sorted, 0.95),
+        p99: percentile(&sorted, 0.99),
     }
 }
 
-/// Percentile by linear interpolation over a pre-sorted slice.
+/// Percentile by linear interpolation over a pre-sorted slice; `q` is
+/// clamped to [0, 1]. An empty slice yields 0.0 (matching
+/// [`summarize`]'s empty-sample convention).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -119,6 +164,57 @@ mod tests {
         assert_eq!(percentile(&xs, 0.5), 5.0);
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn summarize_empty_is_zero() {
+        let s = summarize(&[]);
+        assert_eq!(s, Summary::zero());
+        assert_eq!(s.n, 0);
+        assert_eq!(percentile(&[], 0.95), 0.0);
+    }
+
+    #[test]
+    fn summarize_single_element() {
+        let s = summarize(&[7.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 7.5);
+        assert_eq!(s.std, 0.0);
+        assert_eq!((s.min, s.max), (7.5, 7.5));
+        assert_eq!((s.p50, s.p95, s.p99), (7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn summarize_duplicate_heavy() {
+        // 99 copies of 1.0 and one 100.0: the duplicates pin every
+        // percentile up to p98; p99 interpolates into the outlier
+        let mut xs = vec![1.0; 99];
+        xs.push(100.0);
+        let s = summarize(&xs);
+        assert_eq!(s.p50, 1.0);
+        assert_eq!(s.p95, 1.0);
+        assert!(s.p99 > 1.0 && s.p99 < 100.0, "p99={}", s.p99);
+        assert_eq!(s.max, 100.0);
+        // all-identical sample: zero spread, every percentile equal
+        let t = summarize(&vec![3.0; 40]);
+        assert_eq!(t.std, 0.0);
+        assert_eq!((t.p50, t.p95, t.p99), (3.0, 3.0, 3.0));
+    }
+
+    #[test]
+    fn percentile_clamps_q() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -0.5), 1.0);
+        assert_eq!(percentile(&xs, 1.5), 3.0);
+    }
+
+    #[test]
+    fn summary_json_has_percentiles() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        let j = s.to_json();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("p50").unwrap().as_f64(), Some(2.5));
+        assert!(j.get("p99").unwrap().as_f64().unwrap() > 3.9);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use spdf::coordinator::{self, World, WorldConfig};
 use spdf::data::{PackedStream, Task};
+use spdf::generate::loadgen::{self, Pattern, StepCosts, TraceConfig};
 use spdf::generate::{reference, DecodeEngine, DecodeParams,
                      DecodeRequest};
 use spdf::runtime::{Engine, HostTensor};
@@ -451,6 +452,104 @@ fn serve_max_length_prompt_both_paths() {
         };
         assert_eq!(report.results[0].tokens, solo[0], "kv={kv}");
     }
+}
+
+#[test]
+fn loadgen_timed_serve_deterministic_and_decode_exact() {
+    // acceptance: the same seed + pinned virtual step costs reproduce
+    // identical per-request latencies, and arrival-gated admission
+    // must not change WHAT is decoded — every request still decodes
+    // exactly as it would alone
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(21));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let cfg = TraceConfig {
+        seed: 5,
+        requests: mm.decode_batch + 3,
+        rate_rps: 300.0,
+        pattern: Pattern::Poisson,
+        prompt_lens: (3, 6),
+        budgets: (2, 6),
+        vocab: mm.config.vocab_size,
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    let dp = DecodeParams::default();
+    let costs = StepCosts::default();
+    let (pa, ra) =
+        loadgen::run_trace(&decode, &trace, &dp, false, &costs)
+            .unwrap();
+    let (_pb, rb) =
+        loadgen::run_trace(&decode, &trace, &dp, false, &costs)
+            .unwrap();
+    assert_eq!(ra.results.len(), rb.results.len());
+    for (x, y) in ra.results.iter().zip(&rb.results) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(
+            (x.arrival_ms, x.queue_ms, x.ttft_ms, x.latency_ms),
+            (y.arrival_ms, y.queue_ms, y.ttft_ms, y.latency_ms),
+            "virtual-clock latencies not reproducible for request {}",
+            x.id
+        );
+    }
+    assert_eq!(ra.stats.sim_ms, rb.stats.sim_ms);
+    // results are id-sorted and trace ids are indices
+    for (res, req) in ra.results.iter().zip(&trace.requests) {
+        let solo = reference::greedy(
+            &runtime, &params, std::slice::from_ref(&req.prompt),
+            &DecodeParams { max_new_tokens: req.max_new_tokens,
+                            ..Default::default() })
+            .unwrap();
+        assert_eq!(res.tokens, solo[0],
+                   "timed request {} diverged from solo decode",
+                   res.id);
+    }
+    assert!(pa.latency_ms.p95 >= pa.latency_ms.p50);
+    assert!(pa.sim_ms > 0.0);
+}
+
+#[test]
+fn loadgen_kv_and_literal_decode_same_trace_identically() {
+    // both engines under the exact same trace: identical tokens,
+    // with the KV path re-populating caches across timed refills
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(22));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+    assert!(decode.kv_available());
+
+    let cfg = TraceConfig {
+        seed: 9,
+        requests: 2 * mm.decode_batch + 1,
+        rate_rps: 500.0,
+        pattern: Pattern::Bursty { burst: 4 },
+        prompt_lens: (3, 5),
+        budgets: (2, 5),
+        vocab: mm.config.vocab_size,
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    let dp = DecodeParams::default();
+    let costs = StepCosts::default();
+    let (_, rl) =
+        loadgen::run_trace(&decode, &trace, &dp, false, &costs)
+            .unwrap();
+    let (_, rk) =
+        loadgen::run_trace(&decode, &trace, &dp, true, &costs)
+            .unwrap();
+    assert_eq!(rl.results.len(), rk.results.len());
+    for (x, y) in rl.results.iter().zip(&rk.results) {
+        assert_eq!(x.tokens, y.tokens,
+                   "kv/literal diverged on timed request {}", x.id);
+    }
+    // oversubscribed: the initial fill plus at least one refill wave
+    assert!(rk.stats.prefill_steps >= 2,
+            "timed KV serve should have refilled slots \
+             (prefill_steps = {})", rk.stats.prefill_steps);
 }
 
 #[test]

@@ -1,0 +1,220 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the BENCH_*.json serving datapoints.
+
+scripts/check.sh runs the decode + serve-load smokes, then calls this
+gate to compare the fresh datapoints against the committed baselines
+in bench_baselines/. The gate fails (exit 1) when a gated metric
+regresses by more than the tolerance:
+
+  BENCH_decode.json      tokens/sec legs (higher is better) and the
+                         serve latency p95 (lower is better)
+  BENCH_serve_load.json  per-point latency/TTFT p95 (lower is better)
+                         plus the absolute invariant that the KV
+                         path's p95 is no worse than the literal
+                         path's at budgets >= 32 (kv_p95_vs_literal)
+
+Usage:
+    python3 scripts/bench_gate.py [ROOT]
+
+Env knobs:
+    BENCH_GATE_TOL      relative tolerance, default 0.25 (25%)
+    BENCH_GATE_REFRESH  =1: overwrite bench_baselines/ with the fresh
+                        datapoints and exit green — use after an
+                        intentional perf change, then commit the new
+                        baselines
+
+A missing baseline passes with a bootstrap notice (the first machine
+with a toolchain runs BENCH_GATE_REFRESH=1 and commits the result);
+a missing *fresh* datapoint is a hard failure — the smoke must have
+produced it.
+"""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+TOL_DEFAULT = 0.25
+BASELINE_DIR = "bench_baselines"
+
+# file -> [(dotted metric path, direction)]
+RELATIVE_SPECS = {
+    "BENCH_decode.json": [
+        ("engine.tokens_per_sec", "higher"),
+        ("kv.tokens_per_sec", "higher"),
+        ("serve.tokens_per_sec", "higher"),
+        ("serve.latency_ms.p95", "lower"),
+    ],
+    "BENCH_serve_load.json": [
+        ("kv_p95_vs_literal", "lower"),
+    ],
+}
+
+# file -> [(dotted metric path, cap)]: current <= cap * (1 + tol),
+# independent of any baseline
+ABSOLUTE_SPECS = {
+    "BENCH_serve_load.json": [
+        ("kv_p95_vs_literal", 1.0),
+    ],
+}
+
+# serve-load points: per-point percentile metrics (lower is better)
+POINT_METRICS = [
+    ("latency_ms", "p95"),
+    ("ttft_ms", "p95"),
+]
+
+
+def get_path(obj, dotted):
+    """Resolve a dotted key path to a number, or None."""
+    cur = obj
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def compare_metric(label, current, baseline, direction, tol):
+    """One relative comparison. Returns a failure string or None;
+    metrics absent on either side are skipped (legs are optional —
+    e.g. no KV artifacts in a pre-KV manifest)."""
+    if current is None or baseline is None:
+        return None
+    if baseline <= 0:
+        return None
+    if direction == "higher":
+        if current < baseline * (1.0 - tol):
+            return (f"{label}: {current:.3f} < baseline "
+                    f"{baseline:.3f} - {tol:.0%}")
+    else:
+        if current > baseline * (1.0 + tol):
+            return (f"{label}: {current:.3f} > baseline "
+                    f"{baseline:.3f} + {tol:.0%}")
+    return None
+
+
+def check_absolute(name, current, tol):
+    """Baseline-independent invariants (e.g. KV p95 <= literal p95)."""
+    failures = []
+    for dotted, cap in ABSOLUTE_SPECS.get(name, []):
+        value = get_path(current, dotted)
+        if value is None:
+            continue
+        if value > cap * (1.0 + tol):
+            failures.append(f"{name}:{dotted}: {value:.3f} exceeds "
+                            f"{cap} + {tol:.0%}")
+    return failures
+
+
+def check_points(name, current, baseline, tol):
+    """Pair serve-load sweep points by position (the sweep layout —
+    rates x engines — is fixed by the bench) and gate the latency
+    percentiles. Layout changes skip with a notice instead of
+    misparing points."""
+    failures, notes = [], []
+    cur_pts = current.get("points") or []
+    base_pts = baseline.get("points") or []
+    if len(cur_pts) != len(base_pts):
+        notes.append(f"{name}: point layout changed "
+                     f"({len(base_pts)} -> {len(cur_pts)}), "
+                     "skipping per-point gates — refresh baselines")
+        return failures, notes
+    for i, (c, b) in enumerate(zip(cur_pts, base_pts)):
+        if c.get("engine") != b.get("engine") \
+                or c.get("pattern") != b.get("pattern"):
+            notes.append(f"{name}: point {i} identity changed, "
+                         "skipping — refresh baselines")
+            continue
+        for block, pct in POINT_METRICS:
+            label = (f"{name}:points[{i}]"
+                     f"({c.get('engine')}).{block}.{pct}")
+            fail = compare_metric(label,
+                                  get_path(c, f"{block}.{pct}"),
+                                  get_path(b, f"{block}.{pct}"),
+                                  "lower", tol)
+            if fail:
+                failures.append(fail)
+    return failures, notes
+
+
+def check_file(name, current, baseline, tol):
+    """All gates for one datapoint file. `baseline` may be None
+    (bootstrap)."""
+    failures = list(check_absolute(name, current, tol))
+    notes = []
+    if baseline is None:
+        notes.append(f"{name}: no committed baseline — bootstrap "
+                     "pass (run with BENCH_GATE_REFRESH=1 and commit "
+                     f"{BASELINE_DIR}/{name})")
+        return failures, notes
+    for dotted, direction in RELATIVE_SPECS.get(name, []):
+        fail = compare_metric(f"{name}:{dotted}",
+                              get_path(current, dotted),
+                              get_path(baseline, dotted),
+                              direction, tol)
+        if fail:
+            failures.append(fail)
+    if name == "BENCH_serve_load.json":
+        pf, pn = check_points(name, current, baseline, tol)
+        failures.extend(pf)
+        notes.extend(pn)
+    return failures, notes
+
+
+def load_json(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv):
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__) \
+        .resolve().parent.parent
+    tol = float(os.environ.get("BENCH_GATE_TOL", TOL_DEFAULT))
+    refresh = os.environ.get("BENCH_GATE_REFRESH", "") == "1"
+    baseline_dir = root / BASELINE_DIR
+
+    all_failures, all_notes = [], []
+    for name in sorted(RELATIVE_SPECS):
+        fresh_path = root / name
+        if not fresh_path.exists():
+            all_failures.append(
+                f"{name}: fresh datapoint missing — the bench smoke "
+                "did not produce it")
+            continue
+        current = load_json(fresh_path)
+        base_path = baseline_dir / name
+        if refresh:
+            # absolute invariants hold even when rebaselining — a
+            # violating datapoint must never become the norm
+            abs_failures = check_absolute(name, current, tol)
+            if abs_failures:
+                all_failures.extend(
+                    f"{f} (refusing to refresh baseline)"
+                    for f in abs_failures)
+                continue
+            baseline_dir.mkdir(parents=True, exist_ok=True)
+            base_path.write_text(fresh_path.read_text())
+            all_notes.append(f"{name}: baseline refreshed")
+            continue
+        baseline = load_json(base_path) if base_path.exists() else None
+        failures, notes = check_file(name, current, baseline, tol)
+        all_failures.extend(failures)
+        all_notes.extend(notes)
+
+    for note in all_notes:
+        print(f"bench_gate: note: {note}")
+    if all_failures:
+        for fail in all_failures:
+            print(f"bench_gate: FAIL: {fail}", file=sys.stderr)
+        print(f"bench_gate: {len(all_failures)} regression(s) beyond "
+              f"{tol:.0%} tolerance (intentional? rerun with "
+              "BENCH_GATE_REFRESH=1 and commit the new baselines)",
+              file=sys.stderr)
+        return 1
+    print(f"bench_gate: green (tolerance {tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,17 +1,28 @@
 #!/usr/bin/env bash
-# Tier-1+ gate: build, tests, lints, decode perf smoke.
+# Tier-1+ gate: build, tests, lints, perf smokes, perf-regression gate.
 #
-#   scripts/check.sh            full gate
+#   scripts/check.sh                 full gate
 #   SKIP_CLIPPY=1 scripts/check.sh   when clippy is unavailable
+#   SKIP_FMT=1 scripts/check.sh      when rustfmt is unavailable
+#   BENCH_GATE_REFRESH=1 ...         refresh bench_baselines/ after an
+#                                    intentional perf change (commit
+#                                    the result)
 #
-# The decode smoke writes BENCH_decode.json at the repo root
-# (tokens/sec, mean step ms, batch occupancy) so the serving perf
-# trajectory is tracked across PRs — see rust/README.md §Serving
-# performance.
+# The smokes write BENCH_decode.json (tokens/sec, occupancy) and
+# BENCH_serve_load.json (latency-under-load percentiles) at the repo
+# root so the serving perf trajectory is tracked across PRs — see
+# rust/README.md §Serving performance and §Load testing. The gate
+# (scripts/bench_gate.py) then compares them against the committed
+# bench_baselines/.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
+
+# every datapoint the perf gate expects: stale copies are removed up
+# front and each is re-verified after its smoke, so a green gate can
+# never ride on a previous run's file
+BENCH_FILES=(BENCH_decode.json BENCH_serve_load.json)
 
 echo "== cargo build --release =="
 cargo build --release
@@ -19,21 +30,44 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+if [ "${SKIP_FMT:-0}" != "1" ]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== cargo fmt --check =="
+        cargo fmt --check
+    else
+        echo "check.sh: rustfmt unavailable, skipping format check" \
+             "(set SKIP_FMT=1 to silence)"
+    fi
+fi
+
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     echo "== cargo clippy -- -D warnings =="
     cargo clippy -- -D warnings
 fi
 
+for f in "${BENCH_FILES[@]}"; do
+    rm -f "$ROOT/$f"
+done
+
 echo "== decode perf smoke (BENCH_decode.json) =="
-rm -f "$ROOT/BENCH_decode.json"
 SPDF_BENCH_SMOKE=1 SPDF_BENCH_OUT="$ROOT/BENCH_decode.json" \
     cargo bench --bench perf_decode
-# perf_decode exits 0 with a notice when artifacts are missing; a
-# green gate must mean the smoke actually ran and left a datapoint
-if [ ! -f "$ROOT/BENCH_decode.json" ]; then
-    echo "check.sh: perf_decode smoke produced no BENCH_decode.json" \
-         "(AOT artifacts missing? run \`make artifacts\`)" >&2
-    exit 1
-fi
+
+echo "== serve-load perf smoke (BENCH_serve_load.json) =="
+SPDF_BENCH_SMOKE=1 SPDF_BENCH_OUT="$ROOT/BENCH_serve_load.json" \
+    cargo bench --bench perf_serve_load
+
+# the benches exit 0 with a notice when artifacts are missing; a green
+# gate must mean every smoke actually ran and left its datapoint
+for f in "${BENCH_FILES[@]}"; do
+    if [ ! -f "$ROOT/$f" ]; then
+        echo "check.sh: perf smoke produced no $f" \
+             "(AOT artifacts missing? run \`make artifacts\`)" >&2
+        exit 1
+    fi
+done
+
+echo "== perf-regression gate (scripts/bench_gate.py) =="
+python3 "$ROOT/scripts/bench_gate.py" "$ROOT"
 
 echo "check.sh: all gates passed"
