@@ -33,21 +33,32 @@ def decode_json(tps=100.0, p95=500.0, with_kv=True):
     return j
 
 
-def point(engine, p95, ttft):
+def point(engine, p95, ttft, admission="unbounded", shed_rate=0.0,
+          goodput=500.0):
     return {
         "engine": engine,
         "pattern": "poisson",
+        "admission": admission,
+        "shed_rate": shed_rate,
+        "goodput_tokens_per_sec": goodput,
         "latency_ms": {"p95": p95},
         "ttft_ms": {"p95": ttft},
     }
 
 
-def serve_load_json(ratio=0.9, p95=100.0):
+def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
+                    goodput=500.0):
     return {
         "kv_p95_vs_literal": ratio,
+        "shed": {
+            "offered_rps": 120.0,
+            "shed_rate": 0.3,
+            "p95_vs_unbounded": shed_ratio,
+            "goodput_tokens_per_sec": goodput * 0.7,
+        },
         "points": [
-            point("literal", p95, p95 / 2),
-            point("kv", p95 * 0.8, p95 / 3),
+            point("literal", p95, p95 / 2, goodput=goodput),
+            point("kv", p95 * 0.8, p95 / 3, goodput=goodput * 1.2),
         ],
     }
 
@@ -121,6 +132,98 @@ class TestServeLoadGates:
                                        base, 0.25)
         assert fails == []
         assert any("layout changed" in n for n in notes)
+
+    def test_goodput_regression_fails(self):
+        # per-point goodput halving is a regression (higher is better)
+        fails, _ = gate.check_file("BENCH_serve_load.json",
+                                   serve_load_json(goodput=250.0),
+                                   serve_load_json(goodput=500.0),
+                                   0.25)
+        assert any("goodput_tokens_per_sec" in f for f in fails)
+
+    def test_nonzero_shed_rate_under_unbounded_fails_absolutely(self):
+        # shedding with unbounded admission means the loop miscounted;
+        # enforced with no baseline at all
+        cur = serve_load_json()
+        cur["points"][0]["shed_rate"] = 0.1
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("unbounded admission" in f for f in fails)
+        # a bounded-admission point may shed freely
+        cur = serve_load_json()
+        cur["points"][0]["admission"] = "max-queue(2)"
+        cur["points"][0]["shed_rate"] = 0.4
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert fails == []
+
+    def test_missing_shed_datapoints_fails(self):
+        # the smoke must carry the new datapoints on every point
+        cur = serve_load_json()
+        del cur["points"][1]["shed_rate"]
+        del cur["points"][1]["goodput_tokens_per_sec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("shed/goodput datapoints" in f for f in fails)
+
+    def test_missing_shed_leg_fails_even_on_refresh(self, tmp_path,
+                                                    monkeypatch):
+        # a stale bench that stops producing the shed leg must not
+        # pass green, and REFRESH must refuse to bake the gap into
+        # the committed baseline (which would disable the shed gates)
+        cur = serve_load_json()
+        del cur["shed"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("shed: block missing" in f for f in fails)
+        # truncated shed block is caught too
+        cur = serve_load_json()
+        del cur["shed"]["p95_vs_unbounded"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("shed: missing" in f for f in fails)
+        # end to end: refresh refuses
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        nolegs = serve_load_json()
+        del nolegs["shed"]
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(nolegs))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_shed_p95_above_unbounded_fails_absolutely(self):
+        # shedding must never make the completed tail WORSE than just
+        # queueing unbounded — enforced without a baseline
+        cur = serve_load_json(shed_ratio=1.5)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("shed.p95_vs_unbounded" in f for f in fails)
+
+    def test_shed_goodput_relative_regression_fails(self):
+        base = serve_load_json()
+        cur = serve_load_json()
+        cur["shed"]["goodput_tokens_per_sec"] = \
+            base["shed"]["goodput_tokens_per_sec"] * 0.5
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert any("shed.goodput_tokens_per_sec" in f for f in fails)
+
+    def test_baseline_without_shed_fields_is_tolerated(self):
+        # old committed baselines predate the shed/goodput datapoints:
+        # relative gates skip them, fresh-side structure still holds
+        cur = serve_load_json()
+        base = serve_load_json()
+        del base["shed"]
+        for p in base["points"]:
+            del p["shed_rate"]
+            del p["goodput_tokens_per_sec"]
+            del p["admission"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert fails == []
 
 
 class TestBootstrapAndRefresh:

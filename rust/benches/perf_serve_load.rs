@@ -16,7 +16,15 @@
 //!    offered rate sweeps fractions of capacity. Budgets are ≥ 32
 //!    tokens, where the KV path's floor is ≥ the literal path — so
 //!    its p95 should be no worse; the paired ratio is recorded as
-//!    `kv_p95_vs_literal` for `scripts/bench_gate.py`.
+//!    `kv_p95_vs_literal` for `scripts/bench_gate.py`;
+//!  * shed leg — the same work items arriving as one past-the-knee
+//!    burst, under unbounded admission vs a depth-1 bounded queue
+//!    (`serve::admission`): the bounded run must shed a nonzero
+//!    fraction (deterministically `requests - decode_batch - 1`)
+//!    while holding completed-request p95 at or below the unbounded
+//!    run's (recorded as `shed.p95_vs_unbounded` + `shed.shed_rate`,
+//!    gated alongside the per-point
+//!    `goodput_tokens_per_sec`/`shed_rate` datapoints).
 //!
 //! Run: `cargo bench --bench perf_serve_load`
 //! Writes `BENCH_serve_load.json` (override with SPDF_BENCH_OUT; set
@@ -24,6 +32,8 @@
 
 use spdf::coordinator::report;
 use spdf::generate::loadgen::{self, Pattern, StepCosts, TraceConfig};
+use spdf::generate::serve::admission::MaxQueueDepth;
+use spdf::generate::serve::policy::Fifo;
 use spdf::generate::{DecodeEngine, DecodeParams};
 use spdf::runtime::Engine;
 use spdf::train::TrainState;
@@ -64,6 +74,7 @@ fn main() -> anyhow::Result<()> {
         prompt_lens: (4, 10),
         budgets: (4, 8),
         vocab: mm.config.vocab_size,
+        priority_classes: 1,
     };
     let det_trace = loadgen::generate_trace(&det_cfg)?;
     let pinned = StepCosts::default();
@@ -118,6 +129,7 @@ fn main() -> anyhow::Result<()> {
         prompt_lens: (4, 12),
         budgets,
         vocab: mm.config.vocab_size,
+        priority_classes: 1,
     };
     let points = loadgen::sweep(&decode, &base, &rates, &engines,
                                 &dp)?;
@@ -153,6 +165,52 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // --- shed leg: past the knee, bounded queue vs unbounded ---
+    // Overload the literal path with every request arriving in one
+    // burst (2-4x decode_batch at a single instant — far past any
+    // knee) and compare unbounded admission against max-queue(1) on
+    // the exact same trace. With B free slots and a depth-1 queue the
+    // bounded run admits exactly B + 1 requests whatever the seed, so
+    // the nonzero shed rate is deterministic, and its completed-
+    // request p95 must hold at or below the unbounded run's.
+    let shed_cfg = TraceConfig {
+        rate_rps: 1.5 * cap,
+        pattern: Pattern::Bursty { burst: requests },
+        ..base.clone()
+    };
+    let shed_trace = loadgen::generate_trace(&shed_cfg)?;
+    let (unb_pt, _) =
+        loadgen::run_trace(&decode, &shed_trace, &dp, false, &lit)?;
+    let (shed_pt, _) = loadgen::run_trace_with(
+        &decode, &shed_trace, &dp, false, &lit, &Fifo,
+        &MaxQueueDepth(1))?;
+    anyhow::ensure!(
+        unb_pt.shed_rate == 0.0,
+        "unbounded admission shed {} requests", unb_pt.shed
+    );
+    anyhow::ensure!(
+        shed_pt.shed_rate > 0.0,
+        "bounded queue shed nothing under a {}-request burst \
+         (completed {} of {})", requests, shed_pt.completed,
+        shed_pt.requests
+    );
+    anyhow::ensure!(
+        shed_pt.latency_ms.p95 <= unb_pt.latency_ms.p95,
+        "shedding did not bound p95: {} > {} (unbounded)",
+        shed_pt.latency_ms.p95, unb_pt.latency_ms.p95
+    );
+    let p95_vs_unbounded = if unb_pt.latency_ms.p95 > 0.0 {
+        shed_pt.latency_ms.p95 / unb_pt.latency_ms.p95
+    } else {
+        0.0
+    };
+    println!("\nshed leg ({}-request burst, max-queue 1): \
+              shed rate {:.0}%, p95 {:.1} ms vs unbounded {:.1} ms \
+              ({:.2}x), goodput {:.0} tok/vs",
+             requests, shed_pt.shed_rate * 100.0,
+             shed_pt.latency_ms.p95, unb_pt.latency_ms.p95,
+             p95_vs_unbounded, shed_pt.goodput_tokens_per_sec);
+
     let costs_json = |c: &StepCosts| {
         let mut o = Json::obj();
         o.push("step_ms", Json::Num(c.step_ms))
@@ -179,6 +237,18 @@ fn main() -> anyhow::Result<()> {
     if let Some(r) = kv_ratio {
         j.push("kv_p95_vs_literal", Json::Num(r));
     }
+    let mut shed = Json::obj();
+    shed.push_num("offered_rps", shed_pt.offered_rps)
+        .push_num("max_queue", 1usize)
+        .push_num("requests", shed_pt.requests)
+        .push_num("completed", shed_pt.completed)
+        .push_num("shed_rate", shed_pt.shed_rate)
+        .push_num("unbounded_p95", unb_pt.latency_ms.p95)
+        .push_num("bounded_p95", shed_pt.latency_ms.p95)
+        .push_num("p95_vs_unbounded", p95_vs_unbounded)
+        .push_num("goodput_tokens_per_sec",
+                  shed_pt.goodput_tokens_per_sec);
+    j.push("shed", shed);
     j.push("points", loadgen::points_json(&points));
 
     let out_path = std::env::var("SPDF_BENCH_OUT")

@@ -167,6 +167,18 @@ pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
             format!("{:.1}%", stats.occupancy * 100.0)]);
     t.row(&["generated tokens".into(),
             stats.generated_tokens.to_string()]);
+    if stats.shed + stats.expired > 0 {
+        // admission control engaged: show the outcome split and the
+        // useful-work rate next to the raw throughput
+        t.row(&["completed / shed / expired".into(),
+                format!("{} / {} / {}", stats.completed, stats.shed,
+                        stats.expired)]);
+        t.row(&["shed rate".into(),
+                format!("{:.1}%", stats.shed_rate * 100.0)]);
+        t.row(&["goodput".into(),
+                format!("{:.1} tok/s",
+                        stats.goodput_tokens_per_sec)]);
+    }
     t.row(&["throughput".into(),
             format!("{:.1} tok/s", stats.tokens_per_sec)]);
     t.row(&["mean step".into(),
@@ -198,13 +210,19 @@ fn fmt_percentiles(s: &Summary) -> String {
 /// (engine, offered load), percentiles on the virtual clock. Reading
 /// it: occupancy → how saturated the batch was; queue/TTFT → how long
 /// callers waited for service to begin; e2e p95/p99 → the tail a
-/// latency SLO would bind on. A healthy engine shows flat percentiles
-/// at low load and a sharp knee as the offered rate crosses capacity.
+/// latency SLO would bind on — over **completed** requests only.
+/// `goodput` is tokens delivered to completed requests per virtual
+/// second and `shed%` the fraction of requests shed or expired by the
+/// admission policy: under unbounded admission shed% is 0 and goodput
+/// equals raw throughput; past the knee a bounded queue trades a
+/// nonzero shed% for a bounded p95. A healthy engine shows flat
+/// percentiles at low load and a sharp knee as the offered rate
+/// crosses capacity.
 pub fn load_table(points: &[LoadPoint]) -> String {
-    let mut t = Table::new(&["engine", "pattern", "offered rps",
-                             "achieved rps", "occ", "tok/vs",
-                             "queue p95", "TTFT p50/p95/p99",
-                             "e2e p50/p95/p99"]);
+    let mut t = Table::new(&["engine", "pattern", "policy",
+                             "offered rps", "achieved rps", "occ",
+                             "goodput", "shed%", "queue p95",
+                             "TTFT p50/p95/p99", "e2e p50/p95/p99"]);
     for p in points {
         let tri = |s: &Summary| {
             format!("{:.1}/{:.1}/{:.1}", s.p50, s.p95, s.p99)
@@ -212,6 +230,7 @@ pub fn load_table(points: &[LoadPoint]) -> String {
         t.row(&[
             p.engine.clone(),
             p.pattern.clone(),
+            format!("{}/{}", p.scheduler, p.admission),
             if p.offered_rps > 0.0 {
                 format!("{:.1}", p.offered_rps)
             } else {
@@ -219,7 +238,8 @@ pub fn load_table(points: &[LoadPoint]) -> String {
             },
             format!("{:.1}", p.achieved_rps),
             format!("{:.0}%", p.occupancy * 100.0),
-            format!("{:.0}", p.tokens_per_vsec),
+            format!("{:.0}", p.goodput_tokens_per_sec),
+            format!("{:.1}%", p.shed_rate * 100.0),
             format!("{:.1}", p.queue_ms.p95),
             tri(&p.ttft_ms),
             tri(&p.latency_ms),
@@ -278,10 +298,14 @@ mod tests {
         assert!(t.contains("50.00"));
     }
 
-    #[test]
-    fn serve_table_renders_stats() {
-        let stats = ServeStats {
-            requests: 12,
+    fn serve_stats(shed: usize, expired: usize) -> ServeStats {
+        let requests = 12;
+        ServeStats {
+            requests,
+            completed: requests - shed - expired,
+            shed,
+            expired,
+            shed_rate: (shed + expired) as f64 / requests as f64,
             decode_batch: 4,
             engine_steps: 40,
             prefill_steps: 3,
@@ -290,12 +314,18 @@ mod tests {
             generated_tokens: 130,
             wall_secs: 2.0,
             tokens_per_sec: 65.0,
+            goodput_tokens_per_sec: 65.0,
             mean_step_ms: 50.0,
             sim_ms: 2000.0,
             queue_ms: summarize(&[0.0, 120.0]),
             ttft_ms: summarize(&[60.0, 200.0]),
             latency_ms: summarize(&[700.0, 800.0, 1900.0]),
-        };
+        }
+    }
+
+    #[test]
+    fn serve_table_renders_stats() {
+        let stats = serve_stats(0, 0);
         let results = vec![RequestResult {
             id: 0,
             tokens: vec![5, 6, 7],
@@ -305,6 +335,7 @@ mod tests {
             queue_ms: 120.0,
             ttft_ms: 200.0,
             latency_ms: 700.0,
+            outcome: crate::generate::RequestOutcome::Completed,
         }];
         let t = serve_table(&stats, &results);
         assert!(t.contains("90.0%"), "{t}");
@@ -313,6 +344,16 @@ mod tests {
         // p50 / p95 / p99 of the latency sample
         assert!(t.contains("800.0"), "{t}");
         assert!(t.contains("TTFT"), "{t}");
+        // no admission control engaged: no shed rows
+        assert!(!t.contains("shed rate"), "{t}");
+    }
+
+    #[test]
+    fn serve_table_renders_shed_rows_when_admission_engaged() {
+        let t = serve_table(&serve_stats(2, 1), &[]);
+        assert!(t.contains("9 / 2 / 1"), "{t}");
+        assert!(t.contains("25.0%"), "{t}");
+        assert!(t.contains("goodput"), "{t}");
     }
 
     #[test]
@@ -320,28 +361,46 @@ mod tests {
         let mk = |engine: &str, rps: f64, p95: f64| LoadPoint {
             engine: engine.into(),
             pattern: "poisson".into(),
+            scheduler: "fifo".into(),
+            admission: "unbounded".into(),
             offered_rps: rps,
             requests: 64,
+            completed: 64,
+            shed: 0,
+            expired: 0,
+            shed_rate: 0.0,
             generated_tokens: 1000,
             step_ms: 1.0,
             prefill_ms: 1.0,
             sim_ms: 4000.0,
             achieved_rps: rps * 0.97,
             tokens_per_vsec: 250.0,
+            goodput_tokens_per_sec: 250.0,
             occupancy: 0.8,
             queue_ms: summarize(&[1.0, 5.0]),
             ttft_ms: summarize(&[4.0, 9.0]),
             latency_ms: summarize(&[30.0, p95]),
             wall_secs: 0.5,
         };
+        let mut shedding = mk("literal", 60.0, 45.0);
+        shedding.admission = "max-queue(4)".into();
+        shedding.completed = 48;
+        shedding.shed = 16;
+        shedding.shed_rate = 0.25;
         let t = load_table(&[mk("literal", 50.0, 120.0),
                              mk("kv", 50.0, 90.0),
-                             mk("kv", 0.0, 70.0)]);
+                             mk("kv", 0.0, 70.0),
+                             shedding]);
         assert!(t.contains("literal"), "{t}");
         assert!(t.contains("50.0"), "{t}");
         assert!(t.contains("80%"), "{t}");
         // closed-loop points render without an offered rate
         assert!(t.contains("closed"), "{t}");
+        // policy column + shed percentage
+        assert!(t.contains("fifo/unbounded"), "{t}");
+        assert!(t.contains("fifo/max-queue(4)"), "{t}");
+        assert!(t.contains("25.0%"), "{t}");
+        assert!(t.contains("0.0%"), "{t}");
     }
 
     #[test]

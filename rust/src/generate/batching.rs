@@ -1,1047 +1,17 @@
-//! Continuous slot-refill batching over the fixed decode geometry.
+//! Compatibility shim: continuous slot-refill batching now lives in
+//! the [`super::serve`] module tree (`core` — the backend-agnostic
+//! state machine, `policy` — scheduling, `admission` — load shedding,
+//! `clock`, `telemetry`). This module re-exports the pre-split names
+//! so existing call sites (`main.rs`, benches, tests, downstream
+//! users of `generate::batching::*`) compile unchanged.
 //!
-//! The `logits_last` artifact is compiled for a fixed
-//! `(decode_batch, ctx_len)` shape, but serving traffic is an arbitrary
-//! stream of prompts with wildly different generation lengths. Static
-//! chunking (decode `B` prompts, wait for the *slowest*, repeat) burns
-//! batch slots as padding the moment one slot finishes early. Here a
-//! request queue feeds the batch instead: the moment a slot's request
-//! finishes (EOS / length cap), the slot is rewritten with the next
-//! queued prompt **mid-flight** — the model step never idles a slot
-//! while work is waiting. Causal attention plus the explicit `pos`
-//! input make each row independent, so a slot's output is bit-identical
-//! to decoding its prompt alone (`tests/integration_runtime.rs` checks
-//! this).
-//!
-//! One state machine, three entry points:
-//!  * [`serve`] — the literal-resident path (`logits_last`, full
-//!    context recompute per step), whole request stream present at
-//!    entry, wall-clock latencies;
-//!  * [`serve_kv`] — same queueing over the KV-resident incremental
-//!    path (`prefill` + `decode_step` session state);
-//!  * [`serve_timed`] — arrival-gated admission on a **virtual
-//!    clock** (the `loadgen` workload driver): each request becomes
-//!    visible only once the simulated clock passes its
-//!    [`Schedule::arrivals`] entry, every model invocation advances
-//!    the clock by a fixed cost, and per-request queue-wait / TTFT /
-//!    end-to-end latencies are read off the virtual clock — fully
-//!    deterministic for a given trace and step costs.
-//!
-//! The logits producer behind the loop is a [`LogitsBackend`]: the two
-//! engine paths plus deterministic in-process mocks, so every queueing
-//! and clock edge case is unit-testable without compiled artifacts.
-//!
-//! Per-request latency and batch-occupancy stats feed
-//! `coordinator::report::{serve_table, load_table}` and the
-//! `perf_decode` / `perf_serve_load` benches.
-
-use std::time::Instant;
-
-use crate::runtime::SessionState;
-use crate::tokenizer::EOS;
-use crate::util::json::Json;
-use crate::util::stats::{summarize, Summary};
-
-use super::engine::DecodeEngine;
-use super::{topk, DecodeParams};
-
-/// One queued decode request.
-#[derive(Debug, Clone)]
-pub struct DecodeRequest {
-    /// Caller-chosen id, echoed in the result (results are returned
-    /// sorted by id).
-    pub id: u64,
-    /// Prompt token ids (unpadded, non-empty).
-    pub prompt: Vec<u32>,
-    /// Per-request generation budget.
-    pub max_new_tokens: usize,
-}
-
-impl DecodeRequest {
-    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize)
-               -> DecodeRequest {
-        DecodeRequest { id, prompt, max_new_tokens }
-    }
-}
-
-/// The decoded continuation plus per-request serving telemetry. All
-/// `*_ms` fields are wall-clock on the [`serve`]/[`serve_kv`] path and
-/// virtual-clock under a [`serve_timed`] schedule.
-#[derive(Debug, Clone)]
-pub struct RequestResult {
-    pub id: u64,
-    /// Generated tokens (without the prompt, without EOS).
-    pub tokens: Vec<u32>,
-    /// Engine steps spent queued before a slot freed up.
-    pub queue_steps: u64,
-    /// Engine steps the request occupied a slot.
-    pub decode_steps: u64,
-    /// When the request became visible to the server (0.0 when the
-    /// whole stream is present at entry).
-    pub arrival_ms: f64,
-    /// Arrival → slot entry (queue wait).
-    pub queue_ms: f64,
-    /// Arrival → first generated token; equals `latency_ms` for
-    /// requests that produce none (zero budget / immediate EOS).
-    pub ttft_ms: f64,
-    /// Arrival → completion — what a caller would observe.
-    pub latency_ms: f64,
-}
-
-/// Aggregate serving statistics for one serve call.
-#[derive(Debug, Clone)]
-pub struct ServeStats {
-    pub requests: usize,
-    pub decode_batch: usize,
-    /// Model steps executed.
-    pub engine_steps: u64,
-    /// KV cache-population runs (0 on the literal-resident path). A
-    /// prefill fires once per engine step in which at least one slot
-    /// was (re)filled, not per request.
-    pub prefill_steps: u64,
-    /// Occupied slot-steps (out of `engine_steps * decode_batch`).
-    pub slot_steps: u64,
-    /// `slot_steps / (engine_steps * decode_batch)` — 1.0 means no
-    /// slot ever idled.
-    pub occupancy: f64,
-    pub generated_tokens: u64,
-    /// Real host time spent, always wall-clock (the virtual schedule
-    /// does not change how long the model actually runs).
-    pub wall_secs: f64,
-    pub tokens_per_sec: f64,
-    pub mean_step_ms: f64,
-    /// Clock reading when the last request completed: wall ms on the
-    /// untimed path, virtual ms under a [`Schedule`].
-    pub sim_ms: f64,
-    /// Per-request queue wait (arrival → slot entry).
-    pub queue_ms: Summary,
-    /// Per-request time-to-first-token.
-    pub ttft_ms: Summary,
-    /// Per-request end-to-end latency (p50/p95/p99 et al).
-    pub latency_ms: Summary,
-}
-
-impl ServeStats {
-    /// JSON form for `BENCH_decode.json`, `BENCH_serve_load.json` and
-    /// `spdf serve --stats-json`.
-    pub fn to_json(&self) -> Json {
-        let mut j = Json::obj();
-        j.push("requests", Json::Num(self.requests as f64))
-            .push("decode_batch", Json::Num(self.decode_batch as f64))
-            .push("engine_steps", Json::Num(self.engine_steps as f64))
-            .push("prefill_steps", Json::Num(self.prefill_steps as f64))
-            .push("slot_steps", Json::Num(self.slot_steps as f64))
-            .push("occupancy", Json::Num(self.occupancy))
-            .push("generated_tokens",
-                  Json::Num(self.generated_tokens as f64))
-            .push("wall_secs", Json::Num(self.wall_secs))
-            .push("tokens_per_sec", Json::Num(self.tokens_per_sec))
-            .push("mean_step_ms", Json::Num(self.mean_step_ms))
-            .push("sim_ms", Json::Num(self.sim_ms))
-            .push("queue_ms", self.queue_ms.to_json())
-            .push("ttft_ms", self.ttft_ms.to_json())
-            .push("latency_ms", self.latency_ms.to_json());
-        j
-    }
-}
-
-/// Results (sorted by request id) + aggregate stats.
-#[derive(Debug, Clone)]
-pub struct ServeReport {
-    pub results: Vec<RequestResult>,
-    pub stats: ServeStats,
-}
-
-/// Timed-arrival schedule for [`serve_timed`]: the virtual clock and
-/// when each request joins the queue. Built by `generate::loadgen`.
-#[derive(Debug, Clone)]
-pub struct Schedule {
-    /// Admission time per request, virtual ms, aligned with the
-    /// request slice. `f64::INFINITY` marks a closed-loop successor
-    /// that is released by its predecessor's completion (see
-    /// `release`).
-    pub arrivals: Vec<f64>,
-    /// `release[i] = Some((j, think_ms))`: completing request `i`
-    /// releases request `j` at `completion(i) + think_ms` (closed-loop
-    /// client chains). Empty or all-`None` for open-loop traces.
-    pub release: Vec<Option<(usize, f64)>>,
-    /// Virtual cost of one engine step, ms.
-    pub step_ms: f64,
-    /// Virtual cost of one KV prefill pass, ms (unused on the literal
-    /// path).
-    pub prefill_ms: f64,
-}
-
-impl Schedule {
-    /// Open-loop schedule: explicit arrival times, no release chains.
-    pub fn open(arrivals: Vec<f64>, step_ms: f64, prefill_ms: f64)
-                -> Schedule {
-        let n = arrivals.len();
-        Schedule { arrivals, release: vec![None; n], step_ms,
-                   prefill_ms }
-    }
-
-    fn validate(&self, n: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(self.arrivals.len() == n,
-                        "schedule has {} arrivals for {} requests",
-                        self.arrivals.len(), n);
-        anyhow::ensure!(self.release.len() == n,
-                        "schedule has {} release entries for {} \
-                         requests", self.release.len(), n);
-        anyhow::ensure!(
-            self.step_ms >= 0.0 && self.prefill_ms >= 0.0
-                && self.step_ms.is_finite()
-                && self.prefill_ms.is_finite(),
-            "schedule step costs must be finite and non-negative"
-        );
-        let mut released = vec![false; n];
-        for (i, r) in self.release.iter().enumerate() {
-            if let Some((j, think)) = r {
-                anyhow::ensure!(*j < n && *j != i,
-                                "release target {j} out of range (from \
-                                 request {i})");
-                anyhow::ensure!(!released[*j],
-                                "request {j} released twice");
-                anyhow::ensure!(self.arrivals[*j] == f64::INFINITY,
-                                "release target {j} must be gated at \
-                                 +infinity");
-                anyhow::ensure!(think.is_finite() && *think >= 0.0,
-                                "bad think time for release of {j}");
-                released[*j] = true;
-            }
-        }
-        for (i, a) in self.arrivals.iter().enumerate() {
-            if *a == f64::INFINITY {
-                anyhow::ensure!(released[i],
-                                "request {i} is gated (infinite \
-                                 arrival) but nothing releases it");
-            } else {
-                // NaN and -inf both fail here: a negative-infinity
-                // arrival would be admitted immediately AND look
-                // "gated" to on_complete, decoding the request twice
-                anyhow::ensure!(a.is_finite() && *a >= 0.0,
-                                "bad arrival time for request {i}");
-            }
-        }
-        Ok(())
-    }
-}
-
-/// The per-step logits producer behind the slot-refill state machine:
-/// the literal-resident engine path, the KV-resident path, and
-/// deterministic test mocks (so queueing/clock behavior is testable
-/// without compiled artifacts).
-pub(crate) trait LogitsBackend {
-    /// `(decode_batch, ctx_len, vocab)`.
-    fn dims(&self) -> (usize, usize, usize);
-    /// true → the serve loop maintains per-slot refill marks and calls
-    /// [`Self::prefill`] before a step whenever any slot was
-    /// (re)written.
-    fn needs_prefill(&self) -> bool {
-        false
-    }
-    /// (Re)populate cache rows with `refill[s] > 0` from the token
-    /// buffer; other rows pass through untouched.
-    fn prefill(&mut self, _tokens: &[i32], _pos: &[i32],
-               _refill: &[f32]) -> anyhow::Result<()> {
-        Ok(())
-    }
-    /// Logits for every row read at its `pos` (flat `B * vocab`).
-    fn step(&mut self, tokens: &[i32], pos: &[i32])
-            -> anyhow::Result<Vec<f32>>;
-}
-
-/// Literal-resident backend: full-context recompute per step.
-struct LiteralBackend<'e, 'a> {
-    engine: &'e DecodeEngine<'a>,
-}
-
-impl LogitsBackend for LiteralBackend<'_, '_> {
-    fn dims(&self) -> (usize, usize, usize) {
-        (self.engine.decode_batch(), self.engine.ctx_len(),
-         self.engine.vocab())
-    }
-
-    fn step(&mut self, tokens: &[i32], pos: &[i32])
-            -> anyhow::Result<Vec<f32>> {
-        self.engine.step_logits(tokens, pos)
-    }
-}
-
-/// KV-resident backend: per-layer caches as session-state literals,
-/// advanced by the incremental `decode_step` artifact. Each row steps
-/// by its token at `pos` (for a freshly prefilled row that re-derives
-/// the prompt tail's K/V — same values — and yields the same logits
-/// the prefill already read; uniformity keeps every emitted logit on
-/// the incremental program).
-struct KvBackend<'e, 'a> {
-    engine: &'e DecodeEngine<'a>,
-    state: SessionState,
-    next_tok: Vec<i32>,
-}
-
-impl LogitsBackend for KvBackend<'_, '_> {
-    fn dims(&self) -> (usize, usize, usize) {
-        (self.engine.decode_batch(), self.engine.ctx_len(),
-         self.engine.vocab())
-    }
-
-    fn needs_prefill(&self) -> bool {
-        true
-    }
-
-    fn prefill(&mut self, tokens: &[i32], pos: &[i32], refill: &[f32])
-               -> anyhow::Result<()> {
-        self.engine.kv_prefill(&mut self.state, tokens, pos, refill)?;
-        Ok(())
-    }
-
-    fn step(&mut self, tokens: &[i32], pos: &[i32])
-            -> anyhow::Result<Vec<f32>> {
-        let t = self.engine.ctx_len();
-        for (s, nt) in self.next_tok.iter_mut().enumerate() {
-            *nt = tokens[s * t + pos[s] as usize];
-        }
-        self.engine.kv_step(&mut self.state, &self.next_tok, pos)
-    }
-}
-
-/// The serve loop's notion of time: real on the untimed path, a
-/// deterministic per-invocation accumulator under a [`Schedule`].
-enum Clock {
-    Wall,
-    Virtual { now_ms: f64, step_ms: f64, prefill_ms: f64 },
-}
-
-impl Clock {
-    fn now_ms(&self, t0: &Instant) -> f64 {
-        match self {
-            Clock::Wall => t0.elapsed().as_secs_f64() * 1e3,
-            Clock::Virtual { now_ms, .. } => *now_ms,
-        }
-    }
-
-    fn on_step(&mut self) {
-        if let Clock::Virtual { now_ms, step_ms, .. } = self {
-            *now_ms += *step_ms;
-        }
-    }
-
-    fn on_prefill(&mut self) {
-        if let Clock::Virtual { now_ms, prefill_ms, .. } = self {
-            *now_ms += *prefill_ms;
-        }
-    }
-
-    /// Idle jump: nothing is decoding and nothing has arrived yet.
-    fn jump_to(&mut self, t: f64) {
-        if let Clock::Virtual { now_ms, .. } = self {
-            *now_ms = now_ms.max(t);
-        }
-    }
-}
-
-/// Admission queue: request indices ordered by (arrival, index), with
-/// closed-loop successors gated at infinity until their predecessor's
-/// completion releases them.
-struct ArrivalQueue {
-    arrivals: Vec<f64>,
-    release: Vec<Option<(usize, f64)>>,
-    /// Not-yet-admitted request indices, sorted by (arrival, index);
-    /// gated (infinite-arrival) entries sit at the tail.
-    waiting: Vec<usize>,
-}
-
-impl ArrivalQueue {
-    fn new(n: usize, schedule: Option<&Schedule>) -> ArrivalQueue {
-        let (arrivals, release) = match schedule {
-            Some(s) => (s.arrivals.clone(), s.release.clone()),
-            None => (vec![0.0; n], vec![None; n]),
-        };
-        let mut waiting: Vec<usize> = (0..n).collect();
-        waiting.sort_by(|&a, &b| {
-            arrivals[a].partial_cmp(&arrivals[b]).unwrap()
-                .then(a.cmp(&b))
-        });
-        ArrivalQueue { arrivals, release, waiting }
-    }
-
-    fn arrival_of(&self, i: usize) -> f64 {
-        self.arrivals[i]
-    }
-
-    /// Head of the queue if it has arrived by `now`.
-    fn pop_ready(&mut self, now: f64) -> Option<usize> {
-        let ready = matches!(self.waiting.first(),
-                             Some(&i) if self.arrivals[i] <= now);
-        if ready {
-            Some(self.waiting.remove(0))
-        } else {
-            None
-        }
-    }
-
-    /// Earliest pending arrival, if any is finite (i.e. not gated).
-    fn next_arrival(&self) -> Option<f64> {
-        self.waiting.first()
-            .map(|&i| self.arrivals[i])
-            .filter(|a| a.is_finite())
-    }
-
-    fn is_empty(&self) -> bool {
-        self.waiting.is_empty()
-    }
-
-    /// Completion hook: release request `i`'s closed-loop successor.
-    fn on_complete(&mut self, i: usize, now: f64) {
-        if let Some((j, think)) = self.release[i] {
-            debug_assert!(self.arrivals[j] == f64::INFINITY,
-                          "successor released twice");
-            let at = now + think;
-            self.arrivals[j] = at;
-            // reposition j from the gated tail to its sorted slot
-            self.waiting.retain(|&w| w != j);
-            let idx = self.waiting
-                .iter()
-                .position(|&w| {
-                    let (aw, ai) = (self.arrivals[w], self.arrivals[j]);
-                    aw > ai || (aw == ai && w > j)
-                })
-                .unwrap_or(self.waiting.len());
-            self.waiting.insert(idx, j);
-        }
-    }
-}
-
-/// A batch slot currently decoding one request. The slot's cursor
-/// lives only in the shared `pos` buffer fed to the backend — a
-/// slot-local copy would have to be advanced in lockstep and has
-/// already caused one logits-read-at-stale-position bug.
-struct Slot {
-    req: usize, // index into `requests`
-    out: Vec<u32>,
-    entered_step: u64,
-    /// Clock reading at slot entry.
-    admit_ms: f64,
-    /// Clock reading when the first token was emitted.
-    first_tok_ms: Option<f64>,
-}
-
-/// Write a request's prompt into row `slot` of the token buffer,
-/// clearing stale tokens from the previous occupant first (junk
-/// *before* `pos` would leak into the new request's context).
-/// `serve` validates up front that the prompt is non-empty and fits
-/// the row (`len < t`).
-fn fill_slot(
-    tokens: &mut [i32],
-    pos: &mut [i32],
-    t: usize,
-    slot: usize,
-    prompt: &[u32],
-) {
-    debug_assert!(!prompt.is_empty() && prompt.len() < t,
-                  "serve() validates prompt lengths up front");
-    let row = &mut tokens[slot * t..(slot + 1) * t];
-    row.fill(0);
-    for (j, &tok) in prompt.iter().enumerate() {
-        row[j] = tok as i32;
-    }
-    pos[slot] = prompt.len() as i32 - 1;
-}
-
-/// Run a request stream to completion through the engine's
-/// literal-resident path (`logits_last`: full-context recompute per
-/// step). Requests enter slots in order; each finished slot is
-/// refilled from the queue before the next model step. `dp` supplies
-/// the sampling knobs (`no_repeat_ngram`); generation budgets come
-/// from each request's `max_new_tokens`, not `dp.max_new_tokens`.
-pub fn serve(
-    engine: &DecodeEngine,
-    requests: &[DecodeRequest],
-    dp: &DecodeParams,
-) -> anyhow::Result<ServeReport> {
-    serve_with(engine, requests, dp, false, None)
-}
-
-/// [`serve`] over the KV-resident incremental path: a slot's cache is
-/// populated once per (re)fill by the `prefill` artifact, then every
-/// step runs `decode_step` — only `(B,)` token/pos vectors cross the
-/// host boundary and per-token model work is O(1) in the context
-/// length. Greedy output is bit-identical to [`serve`] and to
-/// [`super::reference::greedy`] (integration-tested, including across
-/// slot refills). Errors if the KV artifacts were not compiled.
-pub fn serve_kv(
-    engine: &DecodeEngine,
-    requests: &[DecodeRequest],
-    dp: &DecodeParams,
-) -> anyhow::Result<ServeReport> {
-    serve_with(engine, requests, dp, true, None)
-}
-
-/// Arrival-gated serving on the virtual clock — the `loadgen`
-/// simulation driver. Decoded tokens are exactly what [`serve`] /
-/// [`serve_kv`] produce for the same prompts; only admission timing
-/// and the reported `*_ms` telemetry differ. Deterministic for a
-/// given request list + schedule.
-pub fn serve_timed(
-    engine: &DecodeEngine,
-    requests: &[DecodeRequest],
-    dp: &DecodeParams,
-    use_kv: bool,
-    schedule: &Schedule,
-) -> anyhow::Result<ServeReport> {
-    serve_with(engine, requests, dp, use_kv, Some(schedule))
-}
-
-/// One backend-construction site for every public entry point.
-fn serve_with(
-    engine: &DecodeEngine,
-    requests: &[DecodeRequest],
-    dp: &DecodeParams,
-    use_kv: bool,
-    schedule: Option<&Schedule>,
-) -> anyhow::Result<ServeReport> {
-    if use_kv {
-        let mut backend = KvBackend {
-            engine,
-            state: engine.kv_state()?,
-            next_tok: vec![0i32; engine.decode_batch()],
-        };
-        run_loop(&mut backend, requests, dp, schedule)
-    } else {
-        let mut backend = LiteralBackend { engine };
-        run_loop(&mut backend, requests, dp, schedule)
-    }
-}
-
-/// One slot-refill state machine for every decode path. The host-side
-/// bookkeeping (token buffer, positions, EOS/length-cap edges, refill
-/// order, admission, telemetry) is identical across backends; the
-/// paths differ only in how a step's logits are produced, so any
-/// divergence between them is a model-side bug by construction.
-pub(crate) fn run_loop(
-    backend: &mut dyn LogitsBackend,
-    requests: &[DecodeRequest],
-    dp: &DecodeParams,
-    schedule: Option<&Schedule>,
-) -> anyhow::Result<ServeReport> {
-    let (b, t, vocab) = backend.dims();
-    anyhow::ensure!(requests.iter().all(|r| !r.prompt.is_empty()),
-                    "empty prompt in decode request stream");
-    anyhow::ensure!(
-        requests.iter().all(|r| r.prompt.len() < t),
-        "prompt longer than ctx_len - 1 ({}) in decode request \
-         stream — pre-truncate (keeping the tail) with \
-         coordinator::prompt_tokens",
-        t - 1
-    );
-    if let Some(s) = schedule {
-        s.validate(requests.len())?;
-    }
-
-    let t0 = Instant::now();
-    let mut clock = match schedule {
-        Some(s) => Clock::Virtual {
-            now_ms: 0.0,
-            step_ms: s.step_ms,
-            prefill_ms: s.prefill_ms,
-        },
-        None => Clock::Wall,
-    };
-    let mut queue = ArrivalQueue::new(requests.len(), schedule);
-    let mut tokens = vec![0i32; b * t];
-    let mut pos = vec![0i32; b];
-    let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
-    let mut results: Vec<RequestResult> =
-        Vec::with_capacity(requests.len());
-    let mut engine_steps = 0u64;
-    let mut slot_steps = 0u64;
-    let mut prefill_steps = 0u64;
-
-    // KV path: `refill` marks rows whose cache must be (re)populated
-    // from the token buffer before the next step.
-    let needs_prefill = backend.needs_prefill();
-    let mut refill = vec![0f32; b];
-    let mut any_refill = false;
-
-    loop {
-        // Admission: fill every free slot from the ready queue.
-        // Zero-budget requests complete the moment they reach the
-        // queue head (greedy with `max_new_tokens == 0` decodes
-        // nothing) and never occupy a slot.
-        let now = clock.now_ms(&t0);
-        for s in 0..b {
-            if slots[s].is_some() {
-                continue;
-            }
-            while let Some(i) = queue.pop_ready(now) {
-                if requests[i].max_new_tokens == 0 {
-                    let arrival = queue.arrival_of(i);
-                    results.push(RequestResult {
-                        id: requests[i].id,
-                        tokens: Vec::new(),
-                        queue_steps: engine_steps,
-                        decode_steps: 0,
-                        arrival_ms: arrival,
-                        queue_ms: now - arrival,
-                        ttft_ms: now - arrival,
-                        latency_ms: now - arrival,
-                    });
-                    queue.on_complete(i, now);
-                    continue;
-                }
-                fill_slot(&mut tokens, &mut pos, t, s,
-                          &requests[i].prompt);
-                if needs_prefill {
-                    refill[s] = 1.0;
-                    any_refill = true;
-                }
-                slots[s] = Some(Slot {
-                    req: i,
-                    out: Vec::new(),
-                    entered_step: engine_steps,
-                    admit_ms: now,
-                    first_tok_ms: None,
-                });
-                break;
-            }
-        }
-
-        if slots.iter().all(|s| s.is_none()) {
-            if queue.is_empty() {
-                break;
-            }
-            match queue.next_arrival() {
-                // idle: nothing decoding, next arrival in the future
-                Some(next) => {
-                    clock.jump_to(next);
-                    continue;
-                }
-                None => anyhow::bail!(
-                    "request queue deadlocked: gated requests remain \
-                     but nothing will release them"
-                ),
-            }
-        }
-
-        let occupied = slots.iter().filter(|s| s.is_some()).count();
-        if needs_prefill && any_refill {
-            // populate the marked rows' caches (positions up to and
-            // including `pos`) from their prompt rows; other rows
-            // pass through untouched
-            backend.prefill(&tokens, &pos, &refill)?;
-            prefill_steps += 1;
-            refill.fill(0.0);
-            any_refill = false;
-            clock.on_prefill();
-        }
-        let lv = backend.step(&tokens, &pos)?;
-        engine_steps += 1;
-        slot_steps += occupied as u64;
-        clock.on_step();
-        let now = clock.now_ms(&t0);
-
-        for s in 0..b {
-            let finished = {
-                let Some(slot) = slots[s].as_mut() else { continue };
-                let max_new = requests[slot.req].max_new_tokens;
-                let row = &lv[s * vocab..(s + 1) * vocab];
-                let cur = pos[s] as usize;
-                let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
-                    (0..=cur).map(|j| tokens[s * t + j] as u32)
-                        .collect()
-                } else {
-                    Vec::new()
-                };
-                let next = topk::pick_next(row, &ctx,
-                                           dp.no_repeat_ngram);
-                let new_pos = cur + 1;
-                let done = if next == EOS || new_pos >= t - 1 {
-                    if next != EOS && new_pos < t {
-                        slot.out.push(next);
-                    }
-                    true
-                } else {
-                    tokens[s * t + new_pos] = next as i32;
-                    pos[s] = new_pos as i32;
-                    slot.out.push(next);
-                    slot.out.len() >= max_new
-                };
-                if slot.first_tok_ms.is_none() && !slot.out.is_empty() {
-                    slot.first_tok_ms = Some(now);
-                }
-                done
-            };
-            if finished {
-                let slot = slots[s].take().unwrap();
-                let arrival = queue.arrival_of(slot.req);
-                results.push(RequestResult {
-                    id: requests[slot.req].id,
-                    queue_steps: slot.entered_step,
-                    decode_steps: engine_steps - slot.entered_step,
-                    arrival_ms: arrival,
-                    queue_ms: slot.admit_ms - arrival,
-                    ttft_ms: slot.first_tok_ms.unwrap_or(now)
-                        - arrival,
-                    latency_ms: now - arrival,
-                    tokens: slot.out,
-                });
-                queue.on_complete(slot.req, now);
-                // the freed slot refills from the queue at the top of
-                // the next iteration, before the next model step
-            }
-        }
-    }
-
-    results.sort_by_key(|r| r.id);
-    let wall_secs = t0.elapsed().as_secs_f64();
-    let sim_ms = clock.now_ms(&t0);
-    let generated_tokens: u64 =
-        results.iter().map(|r| r.tokens.len() as u64).sum();
-    let collect = |f: fn(&RequestResult) -> f64| -> Summary {
-        summarize(&results.iter().map(f).collect::<Vec<f64>>())
-    };
-    let stats = ServeStats {
-        requests: requests.len(),
-        decode_batch: b,
-        engine_steps,
-        prefill_steps,
-        slot_steps,
-        occupancy: if engine_steps == 0 {
-            0.0
-        } else {
-            slot_steps as f64 / (engine_steps * b as u64) as f64
-        },
-        generated_tokens,
-        wall_secs,
-        tokens_per_sec: if wall_secs > 0.0 {
-            generated_tokens as f64 / wall_secs
-        } else {
-            0.0
-        },
-        mean_step_ms: if engine_steps == 0 {
-            0.0
-        } else {
-            wall_secs * 1e3 / engine_steps as f64
-        },
-        sim_ms,
-        queue_ms: collect(|r| r.queue_ms),
-        ttft_ms: collect(|r| r.ttft_ms),
-        latency_ms: collect(|r| r.latency_ms),
-    };
-    Ok(ServeReport { results, stats })
-}
-
-#[cfg(test)]
-pub(crate) mod mock {
-    //! Deterministic artifact-free backends for queueing/clock tests
-    //! (also used by `generate::loadgen` unit tests).
-
-    use super::LogitsBackend;
-
-    /// Emits logits whose argmax is always `tok` (never EOS), so
-    /// generation length is exactly each request's budget; counts
-    /// prefill passes when `kv` is set.
-    pub struct MockBackend {
-        pub b: usize,
-        pub t: usize,
-        pub vocab: usize,
-        pub tok: usize,
-        pub kv: bool,
-        pub prefills: u64,
-    }
-
-    impl MockBackend {
-        pub fn new(b: usize, t: usize, kv: bool) -> MockBackend {
-            MockBackend { b, t, vocab: 16, tok: 5, kv, prefills: 0 }
-        }
-    }
-
-    impl LogitsBackend for MockBackend {
-        fn dims(&self) -> (usize, usize, usize) {
-            (self.b, self.t, self.vocab)
-        }
-
-        fn needs_prefill(&self) -> bool {
-            self.kv
-        }
-
-        fn prefill(&mut self, _tokens: &[i32], _pos: &[i32],
-                   _refill: &[f32]) -> anyhow::Result<()> {
-            self.prefills += 1;
-            Ok(())
-        }
-
-        fn step(&mut self, _tokens: &[i32], _pos: &[i32])
-                -> anyhow::Result<Vec<f32>> {
-            let mut lv = vec![0.0f32; self.b * self.vocab];
-            for s in 0..self.b {
-                lv[s * self.vocab + self.tok] = 1.0;
-            }
-            Ok(lv)
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::mock::MockBackend;
-    use super::*;
-
-    fn reqs(budgets: &[usize]) -> Vec<DecodeRequest> {
-        budgets.iter().enumerate()
-            .map(|(i, &m)| DecodeRequest::new(i as u64, vec![1, 9, 3],
-                                              m))
-            .collect()
-    }
-
-    fn sched(arrivals: &[f64], step_ms: f64) -> Schedule {
-        Schedule::open(arrivals.to_vec(), step_ms, step_ms)
-    }
-
-    #[test]
-    fn fill_slot_clears_previous_occupant() {
-        let t = 8;
-        let mut tokens = vec![7i32; 2 * t];
-        let mut pos = vec![5i32; 2];
-        fill_slot(&mut tokens, &mut pos, t, 1, &[9, 10]);
-        assert_eq!(pos[1], 1);
-        assert_eq!(&tokens[t..], &[9, 10, 0, 0, 0, 0, 0, 0]);
-        // row 0 untouched
-        assert!(tokens[..t].iter().all(|&x| x == 7));
-    }
-
-    #[test]
-    fn fill_slot_max_length_prompt_fits() {
-        // longest prompt serve() admits: t - 1 tokens, pos on the last
-        let t = 4;
-        let mut tokens = vec![0i32; t];
-        let mut pos = vec![0i32; 1];
-        fill_slot(&mut tokens, &mut pos, t, 0, &[1, 2, 3]);
-        assert_eq!(pos[0], 2);
-        assert_eq!(tokens, vec![1, 2, 3, 0]);
-    }
-
-    #[test]
-    fn stats_json_has_core_fields() {
-        let mut stats = ServeStats {
-            requests: 3,
-            decode_batch: 2,
-            engine_steps: 10,
-            prefill_steps: 2,
-            slot_steps: 17,
-            occupancy: 0.85,
-            generated_tokens: 15,
-            wall_secs: 0.5,
-            tokens_per_sec: 30.0,
-            mean_step_ms: 50.0,
-            sim_ms: 500.0,
-            queue_ms: Summary::zero(),
-            ttft_ms: Summary::zero(),
-            latency_ms: summarize(&[200.0, 300.0, 450.0]),
-        };
-        stats.latency_ms.p95 = 440.0;
-        let j = stats.to_json();
-        assert_eq!(j.get("tokens_per_sec").unwrap().as_f64(),
-                   Some(30.0));
-        assert_eq!(j.get("occupancy").unwrap().as_f64(), Some(0.85));
-        assert_eq!(j.get("engine_steps").unwrap().as_usize(), Some(10));
-        assert_eq!(j.get("prefill_steps").unwrap().as_usize(), Some(2));
-        let lat = j.get("latency_ms").unwrap();
-        assert_eq!(lat.get("p95").unwrap().as_f64(), Some(440.0));
-        assert_eq!(lat.get("p50").unwrap().as_f64(), Some(300.0));
-    }
-
-    #[test]
-    fn untimed_mock_serve_fifo_and_occupancy() {
-        // 5 requests through 2 slots: FIFO assignment, full stats
-        let mut be = MockBackend::new(2, 16, false);
-        let requests = reqs(&[3, 3, 2, 2, 1]);
-        let report = run_loop(&mut be, &requests,
-                              &DecodeParams::default(), None).unwrap();
-        assert_eq!(report.results.len(), 5);
-        for (i, r) in report.results.iter().enumerate() {
-            assert_eq!(r.id, i as u64);
-            assert_eq!(r.tokens.len(), requests[i].max_new_tokens);
-            assert!(r.tokens.iter().all(|&t| t == 5));
-        }
-        let st = &report.stats;
-        // steps: slots run [3,3] then [2,2] then [1] → 6 engine steps,
-        // slot_steps = 3+3+2+2+1 = 11
-        assert_eq!(st.engine_steps, 6);
-        assert_eq!(st.slot_steps, 11);
-        assert_eq!(st.generated_tokens, 11);
-        assert!((st.occupancy - 11.0 / 12.0).abs() < 1e-12);
-        // later requests queued
-        assert_eq!(report.results[4].queue_steps, 5);
-    }
-
-    #[test]
-    fn timed_serve_waits_for_arrivals_and_jumps_idle_gaps() {
-        let mut be = MockBackend::new(2, 16, false);
-        let requests = reqs(&[3, 3, 3, 3]);
-        let s = sched(&[0.0, 0.0, 10.0, 10.0], 1.0);
-        let report = run_loop(&mut be, &requests,
-                              &DecodeParams::default(), Some(&s))
-            .unwrap();
-        let r = &report.results;
-        // first wave: admit at 0, one token per 1ms step, done at 3
-        assert_eq!(r[0].queue_ms, 0.0);
-        assert_eq!(r[0].ttft_ms, 1.0);
-        assert_eq!(r[0].latency_ms, 3.0);
-        // second wave: clock jumps the idle gap to t=10
-        assert_eq!(r[2].arrival_ms, 10.0);
-        assert_eq!(r[2].queue_ms, 0.0);
-        assert_eq!(r[2].latency_ms, 3.0);
-        assert_eq!(report.stats.engine_steps, 6);
-        assert_eq!(report.stats.sim_ms, 13.0);
-        // no slot idled while work was pending
-        assert!((report.stats.occupancy - 1.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn timed_serve_records_queue_wait_under_saturation() {
-        // one slot, three simultaneous arrivals: head-of-line blocking
-        let mut be = MockBackend::new(1, 16, false);
-        let requests = reqs(&[2, 2, 2]);
-        let s = sched(&[0.0, 0.0, 0.0], 1.0);
-        let report = run_loop(&mut be, &requests,
-                              &DecodeParams::default(), Some(&s))
-            .unwrap();
-        let r = &report.results;
-        assert_eq!(
-            r.iter().map(|x| x.queue_ms).collect::<Vec<_>>(),
-            vec![0.0, 2.0, 4.0]
-        );
-        assert_eq!(
-            r.iter().map(|x| x.latency_ms).collect::<Vec<_>>(),
-            vec![2.0, 4.0, 6.0]
-        );
-        assert_eq!(
-            r.iter().map(|x| x.queue_steps).collect::<Vec<_>>(),
-            vec![0, 2, 4]
-        );
-        assert_eq!(report.stats.latency_ms.p50, 4.0);
-    }
-
-    #[test]
-    fn timed_serve_closed_loop_releases_successor() {
-        let mut be = MockBackend::new(1, 16, false);
-        let requests = reqs(&[1, 1]);
-        let s = Schedule {
-            arrivals: vec![0.0, f64::INFINITY],
-            release: vec![Some((1, 5.0)), None],
-            step_ms: 1.0,
-            prefill_ms: 1.0,
-        };
-        let report = run_loop(&mut be, &requests,
-                              &DecodeParams::default(), Some(&s))
-            .unwrap();
-        let r = &report.results;
-        // request 0 completes at t=1; successor arrives at 1 + 5
-        assert_eq!(r[1].arrival_ms, 6.0);
-        assert_eq!(r[1].queue_ms, 0.0);
-        assert_eq!(r[1].latency_ms, 1.0);
-        assert_eq!(report.stats.sim_ms, 7.0);
-    }
-
-    #[test]
-    fn timed_serve_zero_budget_completes_at_arrival() {
-        let mut be = MockBackend::new(1, 16, false);
-        let requests = reqs(&[2, 0]);
-        let s = sched(&[0.0, 5.0], 1.0);
-        let report = run_loop(&mut be, &requests,
-                              &DecodeParams::default(), Some(&s))
-            .unwrap();
-        let r = &report.results;
-        assert_eq!(r[0].latency_ms, 2.0);
-        assert!(r[1].tokens.is_empty());
-        assert_eq!(r[1].arrival_ms, 5.0);
-        assert_eq!(r[1].latency_ms, 0.0);
-        assert_eq!(r[1].decode_steps, 0);
-    }
-
-    #[test]
-    fn timed_serve_kv_prefill_costs_virtual_time() {
-        let mut be = MockBackend::new(2, 16, true);
-        let requests = reqs(&[2, 2, 2]);
-        let s = sched(&[0.0, 0.0, 0.0], 1.0);
-        let report = run_loop(&mut be, &requests,
-                              &DecodeParams::default(), Some(&s))
-            .unwrap();
-        // initial fill: one prefill; request 2's refill: another
-        assert_eq!(be.prefills, 2);
-        assert_eq!(report.stats.prefill_steps, 2);
-        let r = &report.results;
-        // wave 1: prefill(1) + step(2) + step(3) → done at 3
-        assert_eq!(r[0].latency_ms, 3.0);
-        // request 2 admitted at 3, prefill(4) + step(5) + step(6)
-        assert_eq!(r[2].queue_ms, 3.0);
-        assert_eq!(r[2].latency_ms, 6.0);
-    }
-
-    #[test]
-    fn timed_serve_is_deterministic() {
-        let requests = reqs(&[3, 1, 4, 2, 2, 3, 1]);
-        let s = sched(&[0.0, 0.5, 0.5, 2.0, 2.25, 7.0, 7.0], 0.75);
-        let run = || {
-            let mut be = MockBackend::new(2, 16, false);
-            run_loop(&mut be, &requests, &DecodeParams::default(),
-                     Some(&s)).unwrap()
-        };
-        let (a, b) = (run(), run());
-        assert_eq!(a.results.len(), b.results.len());
-        for (x, y) in a.results.iter().zip(&b.results) {
-            assert_eq!(x.tokens, y.tokens);
-            assert_eq!(
-                (x.arrival_ms, x.queue_ms, x.ttft_ms, x.latency_ms),
-                (y.arrival_ms, y.queue_ms, y.ttft_ms, y.latency_ms)
-            );
-        }
-        assert_eq!(a.stats.engine_steps, b.stats.engine_steps);
-        assert_eq!(a.stats.sim_ms, b.stats.sim_ms);
-        assert_eq!(a.stats.latency_ms, b.stats.latency_ms);
-    }
-
-    #[test]
-    fn schedule_validation_rejects_bad_shapes() {
-        let requests = reqs(&[1, 1]);
-        let mut be = MockBackend::new(1, 16, false);
-        // wrong arrival count
-        let s = Schedule::open(vec![0.0], 1.0, 1.0);
-        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
-                         Some(&s)).is_err());
-        // gated request that nothing releases
-        let s = Schedule {
-            arrivals: vec![0.0, f64::INFINITY],
-            release: vec![None, None],
-            step_ms: 1.0,
-            prefill_ms: 1.0,
-        };
-        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
-                         Some(&s)).is_err());
-        // double release
-        let s = Schedule {
-            arrivals: vec![0.0, 0.0, f64::INFINITY],
-            release: vec![Some((2, 0.0)), Some((2, 0.0)), None],
-            step_ms: 1.0,
-            prefill_ms: 1.0,
-        };
-        assert!(run_loop(&mut be, &reqs(&[1, 1, 1]),
-                         &DecodeParams::default(), Some(&s)).is_err());
-        // -inf arrival: would be admitted immediately AND re-queued
-        // by its release (decoded twice) — must be rejected
-        let s = Schedule {
-            arrivals: vec![0.0, f64::NEG_INFINITY],
-            release: vec![Some((1, 5.0)), None],
-            step_ms: 1.0,
-            prefill_ms: 1.0,
-        };
-        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
-                         Some(&s)).is_err());
-        // NaN arrival rejected too
-        let s = Schedule::open(vec![0.0, f64::NAN], 1.0, 1.0);
-        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
-                         Some(&s)).is_err());
-    }
-}
+//! New code should import from [`super::serve`] directly — in
+//! particular the policy-aware entry point
+//! [`serve_with`]/[`ServeConfig`], which this shim forwards too.
+
+pub use super::serve::clock::Schedule;
+pub use super::serve::core::{serve, serve_kv, serve_timed, serve_with,
+                             ServeConfig};
+pub use super::serve::telemetry::{RequestOutcome, RequestResult,
+                                  ServeReport, ServeStats};
+pub use super::serve::DecodeRequest;

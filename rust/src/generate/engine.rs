@@ -328,9 +328,9 @@ impl<'a> DecodeEngine<'a> {
                 i as u64, p.clone(), dp.max_new_tokens))
             .collect();
         let report = if use_kv {
-            super::batching::serve_kv(self, &requests, dp)?
+            super::serve::core::serve_kv(self, &requests, dp)?
         } else {
-            super::batching::serve(self, &requests, dp)?
+            super::serve::core::serve(self, &requests, dp)?
         };
         Ok(report.results.into_iter().map(|r| r.tokens).collect())
     }
@@ -444,19 +444,29 @@ impl<'a> DecodeEngine<'a> {
         Ok(best)
     }
 
-    /// Serve a request stream through continuous slot-refill batching;
-    /// see [`super::batching`].
+    /// Serve a request stream through continuous slot-refill batching
+    /// (FIFO, unbounded admission); see [`super::serve`].
     pub fn serve(&self, requests: &[super::DecodeRequest],
                  dp: &DecodeParams)
                  -> anyhow::Result<super::ServeReport> {
-        super::batching::serve(self, requests, dp)
+        super::serve::core::serve(self, requests, dp)
     }
 
     /// [`Self::serve`] over the KV-resident incremental path; see
-    /// [`super::batching::serve_kv`].
+    /// [`super::serve::core::serve_kv`].
     pub fn serve_kv(&self, requests: &[super::DecodeRequest],
                     dp: &DecodeParams)
                     -> anyhow::Result<super::ServeReport> {
-        super::batching::serve_kv(self, requests, dp)
+        super::serve::core::serve_kv(self, requests, dp)
+    }
+
+    /// Fully configurable serving: engine path, arrival schedule,
+    /// scheduling policy and admission control; see
+    /// [`super::serve::core::serve_with`].
+    pub fn serve_with(&self, requests: &[super::DecodeRequest],
+                      dp: &DecodeParams,
+                      cfg: &super::serve::ServeConfig)
+                      -> anyhow::Result<super::ServeReport> {
+        super::serve::core::serve_with(self, requests, dp, cfg)
     }
 }

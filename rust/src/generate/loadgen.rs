@@ -14,7 +14,8 @@
 //!    generation-budget distributions. The same seed always yields
 //!    the same prompts/budgets regardless of the arrival rate, so a
 //!    rate sweep varies *only* the arrival process.
-//!  * [`run_trace`] — drives `batching::serve_timed`: requests are
+//!  * [`run_trace`] — drives the timed serve loop
+//!    (`serve::core::serve_with`): requests are
 //!    injected as their arrival times pass on the **virtual clock**
 //!    (each engine step costs [`StepCosts::step_ms`], each KV prefill
 //!    pass [`StepCosts::prefill_ms`]), and per-request queue wait /
@@ -36,8 +37,18 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
-use super::batching::{self, Schedule, ServeReport};
+use super::serve::admission::{AdmissionPolicy, Unbounded};
+use super::serve::core as serve_core;
+use super::serve::core::ServeConfig;
+use super::serve::policy::{Fifo, Scheduler};
+use super::serve::{Schedule, ServeReport};
 use super::{DecodeEngine, DecodeParams, DecodeRequest};
+
+/// Seed salt for the priority-class phase: priorities come from their
+/// own stream so enabling them never perturbs prompts, budgets or
+/// arrivals (and `priority_classes: 1` traces are bit-identical to
+/// traces generated before priorities existed).
+const PRIORITY_SALT: u64 = 0x7072_696f;
 
 /// Arrival process shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -105,6 +116,11 @@ pub struct TraceConfig {
     /// `max_new_tokens` range.
     pub budgets: (usize, usize),
     pub vocab: usize,
+    /// Number of priority classes to draw per request (uniform over
+    /// `0..classes`, higher = more urgent — the feed for
+    /// `serve::policy::PriorityClass`). 1 = everything priority 0,
+    /// bit-identical to pre-priority traces.
+    pub priority_classes: u8,
 }
 
 /// A generated workload: requests plus their (virtual-ms) arrival
@@ -144,6 +160,8 @@ pub fn generate_trace(cfg: &TraceConfig) -> anyhow::Result<Trace> {
     anyhow::ensure!(blo <= bhi, "bad budget range {blo}..={bhi}");
     anyhow::ensure!(cfg.vocab > N_SPECIAL as usize + 1,
                     "vocab {} leaves no non-special tokens", cfg.vocab);
+    anyhow::ensure!(cfg.priority_classes >= 1,
+                    "need at least 1 priority class");
     match cfg.pattern {
         Pattern::Closed { clients, .. } => {
             anyhow::ensure!(clients >= 1,
@@ -176,6 +194,16 @@ pub fn generate_trace(cfg: &TraceConfig) -> anyhow::Result<Trace> {
         let budget = blo + rng.below(bhi - blo + 1);
         budget_sum += budget;
         requests.push(DecodeRequest::new(i as u64, p, budget));
+    }
+
+    // phase 1b: priority classes, from their own seeded stream so the
+    // draws never shift the prompt/budget/arrival sequences
+    if cfg.priority_classes > 1 {
+        let mut prng = Rng::new(cfg.seed ^ PRIORITY_SALT);
+        for r in requests.iter_mut() {
+            r.priority =
+                prng.below(cfg.priority_classes as usize) as u8;
+        }
     }
 
     // phase 2: the arrival process
@@ -279,9 +307,9 @@ pub fn calibrate(engine: &DecodeEngine, use_kv: bool,
     let dp = DecodeParams::default();
     let run = |requests: &[DecodeRequest]| {
         if use_kv {
-            batching::serve_kv(engine, requests, &dp)
+            serve_core::serve_kv(engine, requests, &dp)
         } else {
-            batching::serve(engine, requests, &dp)
+            serve_core::serve(engine, requests, &dp)
         }
     };
     run(&mk(b.min(2), 2))?; // warm
@@ -318,19 +346,35 @@ pub struct LoadPoint {
     /// "literal" | "kv".
     pub engine: String,
     pub pattern: String,
+    /// Scheduling policy name ("fifo", "priority", ...).
+    pub scheduler: String,
+    /// Admission policy name ("unbounded", "max-queue(8)", ...).
+    pub admission: String,
     /// Offered request rate (0.0 for closed loop, where rate is an
     /// outcome).
     pub offered_rps: f64,
     pub requests: usize,
+    /// Outcome buckets (completed + shed + expired == requests).
+    pub completed: usize,
+    pub shed: usize,
+    pub expired: usize,
+    /// `(shed + expired) / requests` — 0.0 under unbounded admission.
+    pub shed_rate: f64,
     pub generated_tokens: u64,
     pub step_ms: f64,
     pub prefill_ms: f64,
     /// Virtual duration of the simulation.
     pub sim_ms: f64,
-    /// Completions per virtual second.
+    /// **Completions** per virtual second (sheds don't count).
     pub achieved_rps: f64,
     /// Generated tokens per virtual second.
     pub tokens_per_vsec: f64,
+    /// Tokens delivered to completed requests per virtual second —
+    /// the goodput a caller-facing SLO cares about. Currently always
+    /// equal to `tokens_per_vsec` (failures never reach a slot); a
+    /// distinct datapoint so the gate contract survives future
+    /// mid-slot cancellation.
+    pub goodput_tokens_per_sec: f64,
     pub occupancy: f64,
     pub queue_ms: Summary,
     pub ttft_ms: Summary,
@@ -342,48 +386,87 @@ pub struct LoadPoint {
 impl LoadPoint {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
-        j.push("engine", Json::Str(self.engine.clone()))
-            .push("pattern", Json::Str(self.pattern.clone()))
-            .push("offered_rps", Json::Num(self.offered_rps))
-            .push("requests", Json::Num(self.requests as f64))
-            .push("generated_tokens",
-                  Json::Num(self.generated_tokens as f64))
-            .push("step_ms", Json::Num(self.step_ms))
-            .push("prefill_ms", Json::Num(self.prefill_ms))
-            .push("sim_ms", Json::Num(self.sim_ms))
-            .push("achieved_rps", Json::Num(self.achieved_rps))
-            .push("tokens_per_vsec", Json::Num(self.tokens_per_vsec))
-            .push("occupancy", Json::Num(self.occupancy))
+        j.push_str("engine", &self.engine)
+            .push_str("pattern", &self.pattern)
+            .push_str("scheduler", &self.scheduler)
+            .push_str("admission", &self.admission)
+            .push_num("offered_rps", self.offered_rps)
+            .push_num("requests", self.requests)
+            .push_num("completed", self.completed)
+            .push_num("shed", self.shed)
+            .push_num("expired", self.expired)
+            .push_num("shed_rate", self.shed_rate)
+            .push_num("generated_tokens", self.generated_tokens)
+            .push_num("step_ms", self.step_ms)
+            .push_num("prefill_ms", self.prefill_ms)
+            .push_num("sim_ms", self.sim_ms)
+            .push_num("achieved_rps", self.achieved_rps)
+            .push_num("tokens_per_vsec", self.tokens_per_vsec)
+            .push_num("goodput_tokens_per_sec",
+                      self.goodput_tokens_per_sec)
+            .push_num("occupancy", self.occupancy)
             .push("queue_ms", self.queue_ms.to_json())
             .push("ttft_ms", self.ttft_ms.to_json())
             .push("latency_ms", self.latency_ms.to_json())
-            .push("wall_secs", Json::Num(self.wall_secs));
+            .push_num("wall_secs", self.wall_secs);
         j
     }
 }
 
-/// Drive one trace through `serve_timed` on the chosen path and fold
-/// the report into a [`LoadPoint`]. Deterministic for a given trace +
-/// costs (the decoded tokens are real; only time is simulated).
+/// Drive one trace through the timed serve loop on the chosen path
+/// with the default policies (FIFO, unbounded) and fold the report
+/// into a [`LoadPoint`]. Deterministic for a given trace + costs (the
+/// decoded tokens are real; only time is simulated).
 pub fn run_trace(engine: &DecodeEngine, trace: &Trace,
                  dp: &DecodeParams, use_kv: bool, costs: &StepCosts)
                  -> anyhow::Result<(LoadPoint, ServeReport)> {
+    run_trace_with(engine, trace, dp, use_kv, costs, &Fifo,
+                   &Unbounded)
+}
+
+/// [`run_trace`] under explicit scheduling + admission policies —
+/// the shedding/goodput measurement driver.
+pub fn run_trace_with(
+    engine: &DecodeEngine,
+    trace: &Trace,
+    dp: &DecodeParams,
+    use_kv: bool,
+    costs: &StepCosts,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> anyhow::Result<(LoadPoint, ServeReport)> {
     let schedule = trace.schedule(costs);
-    let report = batching::serve_timed(engine, &trace.requests, dp,
-                                       use_kv, &schedule)?;
+    let report = serve_core::serve_with(
+        engine, &trace.requests, dp,
+        &ServeConfig {
+            use_kv,
+            schedule: Some(&schedule),
+            scheduler,
+            admission,
+        })?;
     let st = &report.stats;
     let sim_secs = (st.sim_ms / 1e3).max(1e-9);
     let point = LoadPoint {
         engine: if use_kv { "kv" } else { "literal" }.into(),
         pattern: trace.pattern.name().into(),
+        scheduler: scheduler.name().into(),
+        admission: admission.name(),
         offered_rps: trace.rate_rps,
         requests: trace.requests.len(),
+        completed: st.completed,
+        shed: st.shed,
+        expired: st.expired,
+        shed_rate: st.shed_rate,
         generated_tokens: st.generated_tokens,
         step_ms: costs.step_ms,
         prefill_ms: costs.prefill_ms,
         sim_ms: st.sim_ms,
-        achieved_rps: trace.requests.len() as f64 / sim_secs,
+        achieved_rps: st.completed as f64 / sim_secs,
         tokens_per_vsec: st.generated_tokens as f64 / sim_secs,
+        // failures never decode, so generated tokens all belong to
+        // completed requests (see ServeStats::from_results); the
+        // named goodput datapoint survives future mid-slot cancels
+        goodput_tokens_per_sec: st.generated_tokens as f64 / sim_secs,
         occupancy: st.occupancy,
         queue_ms: st.queue_ms.clone(),
         ttft_ms: st.ttft_ms.clone(),
@@ -395,17 +478,33 @@ pub fn run_trace(engine: &DecodeEngine, trace: &Trace,
 
 /// Offered-load sweep: one point per (rate, engine path), all points
 /// at one rate sharing the exact same trace. `engines` holds
-/// `use_kv` flags with their step costs.
+/// `use_kv` flags with their step costs. Default policies.
 pub fn sweep(engine: &DecodeEngine, base: &TraceConfig,
              rates: &[f64], engines: &[(bool, StepCosts)],
              dp: &DecodeParams) -> anyhow::Result<Vec<LoadPoint>> {
+    sweep_with(engine, base, rates, engines, dp, &Fifo, &Unbounded)
+}
+
+/// [`sweep`] under explicit scheduling + admission policies (`spdf
+/// loadgen --policy/--max-queue/--queue-deadline-ms`).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_with(
+    engine: &DecodeEngine,
+    base: &TraceConfig,
+    rates: &[f64],
+    engines: &[(bool, StepCosts)],
+    dp: &DecodeParams,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> anyhow::Result<Vec<LoadPoint>> {
     let mut points = Vec::new();
     for &rate in rates {
         let cfg = TraceConfig { rate_rps: rate, ..base.clone() };
         let trace = generate_trace(&cfg)?;
         for (use_kv, costs) in engines {
-            let (point, _) =
-                run_trace(engine, &trace, dp, *use_kv, costs)?;
+            let (point, _) = run_trace_with(engine, &trace, dp,
+                                            *use_kv, costs, scheduler,
+                                            admission)?;
             points.push(point);
         }
     }
@@ -419,8 +518,8 @@ pub fn points_json(points: &[LoadPoint]) -> Json {
 
 #[cfg(test)]
 mod tests {
-    use super::super::batching::mock::MockBackend;
-    use super::super::batching::run_loop;
+    use super::super::serve::core::mock::MockBackend;
+    use super::super::serve::core::run_loop;
     use super::*;
 
     fn cfg(pattern: Pattern, rate: f64) -> TraceConfig {
@@ -432,6 +531,7 @@ mod tests {
             prompt_lens: (3, 6),
             budgets: (2, 5),
             vocab: 16,
+            priority_classes: 1,
         }
     }
 
@@ -600,14 +700,21 @@ mod tests {
         let p = LoadPoint {
             engine: "kv".into(),
             pattern: "poisson".into(),
+            scheduler: "fifo".into(),
+            admission: "max-queue(8)".into(),
             offered_rps: 120.0,
             requests: 64,
+            completed: 60,
+            shed: 3,
+            expired: 1,
+            shed_rate: 4.0 / 64.0,
             generated_tokens: 900,
             step_ms: 0.8,
             prefill_ms: 2.0,
             sim_ms: 700.0,
             achieved_rps: 91.4,
             tokens_per_vsec: 1285.7,
+            goodput_tokens_per_sec: 1285.7,
             occupancy: 0.93,
             queue_ms: Summary::zero(),
             ttft_ms: Summary::zero(),
@@ -617,10 +724,79 @@ mod tests {
         };
         let j = p.to_json();
         assert_eq!(j.get("engine").unwrap().as_str(), Some("kv"));
+        assert_eq!(j.get("scheduler").unwrap().as_str(), Some("fifo"));
+        assert_eq!(j.get("admission").unwrap().as_str(),
+                   Some("max-queue(8)"));
         assert_eq!(j.get("offered_rps").unwrap().as_f64(),
                    Some(120.0));
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(60));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("expired").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("shed_rate").unwrap().as_f64(),
+                   Some(4.0 / 64.0));
+        assert_eq!(j.get("goodput_tokens_per_sec").unwrap().as_f64(),
+                   Some(1285.7));
         assert_eq!(j.get("latency_ms").unwrap().get("p50")
                        .unwrap().as_f64(),
                    Some(20.0));
+    }
+
+    #[test]
+    fn priority_classes_are_deterministic_and_isolated() {
+        // priorities come from their own stream: enabling them must
+        // not perturb prompts, budgets or arrivals
+        let base = cfg(Pattern::Poisson, 50.0);
+        let plain = generate_trace(&base).unwrap();
+        assert!(plain.requests.iter().all(|r| r.priority == 0));
+        let with = TraceConfig { priority_classes: 3, ..base.clone() };
+        let (a, b) = (generate_trace(&with).unwrap(),
+                      generate_trace(&with).unwrap());
+        for ((x, y), z) in a.requests.iter().zip(&b.requests)
+            .zip(&plain.requests)
+        {
+            assert_eq!(x.priority, y.priority);
+            assert!(x.priority < 3);
+            assert_eq!(x.prompt, z.prompt);
+            assert_eq!(x.max_new_tokens, z.max_new_tokens);
+        }
+        assert_eq!(a.arrivals, plain.arrivals);
+        // more than one class actually drawn
+        assert!(a.requests.iter().any(|r| r.priority > 0));
+        // zero classes rejected
+        assert!(generate_trace(&TraceConfig {
+            priority_classes: 0, ..base
+        }).is_err());
+    }
+
+    #[test]
+    fn bounded_admission_through_mock_serve_sheds_and_keeps_goodput() {
+        // trace + policies end to end at the mock level: overload one
+        // slot hard, bound the queue, and the outcome buckets must
+        // partition the trace deterministically
+        use super::super::serve::admission::MaxQueueDepth;
+        use super::super::serve::core::run_loop_with;
+        use super::super::serve::policy::Fifo as FifoPolicy;
+        let c = TraceConfig { requests: 12,
+                              ..cfg(Pattern::Bursty { burst: 12 },
+                                    400.0) };
+        let trace = generate_trace(&c).unwrap();
+        let sched = trace.schedule(&StepCosts::default());
+        let run = || {
+            let mut be = MockBackend::new(1, 16, false);
+            run_loop_with(&mut be, &trace.requests,
+                          &DecodeParams::default(), Some(&sched),
+                          &FifoPolicy, &MaxQueueDepth(2))
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        let st = &a.stats;
+        // 1 seated + 2 queued admitted; the other 9 shed at arrival
+        assert_eq!((st.completed, st.shed, st.expired), (3, 9, 0));
+        assert!((st.shed_rate - 0.75).abs() < 1e-12);
+        assert_eq!(st.latency_ms.n, 3);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.outcome, y.outcome);
+            assert_eq!(x.latency_ms, y.latency_ms);
+        }
     }
 }

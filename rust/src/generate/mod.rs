@@ -17,12 +17,19 @@
 //!    does O(1) model work per token (vs `logits_last`'s O(context)
 //!    recompute) and only `(B,)` token/pos vectors cross the host
 //!    boundary.
-//!  * [`batching`] — continuous slot-refill batching: any number of
-//!    requests stream through the fixed `(decode_batch, ctx_len)`
-//!    geometry, finished slots are refilled mid-flight (with per-slot
-//!    cache prefill on the KV path). Admission is either immediate
-//!    ([`batching::serve`]/[`batching::serve_kv`]) or arrival-gated on
-//!    a deterministic virtual clock ([`batching::serve_timed`]).
+//!  * [`serve`] — the scheduler-driven serving core: continuous
+//!    slot-refill batching (any number of requests stream through the
+//!    fixed `(decode_batch, ctx_len)` geometry, finished slots are
+//!    refilled mid-flight, with per-slot cache prefill on the KV
+//!    path), with pluggable queue policies ([`serve::policy`]:
+//!    FIFO / shortest-prompt / smallest-budget / priority classes)
+//!    and admission control ([`serve::admission`]: unbounded /
+//!    max-queue-depth / queue-deadline shedding). Admission timing is
+//!    either immediate ([`serve::core::serve`] /
+//!    [`serve::core::serve_kv`]) or arrival-gated on a deterministic
+//!    virtual clock ([`serve::core::serve_timed`]);
+//!    [`serve::core::serve_with`] exposes every axis. The old
+//!    [`batching`] module remains as a re-export shim.
 //!  * [`loadgen`] — seeded arrival-time traces (Poisson / bursty /
 //!    closed-loop) and the offered-load sweep producing
 //!    latency-under-load curves (`spdf loadgen`,
@@ -40,11 +47,12 @@ pub mod batching;
 pub mod engine;
 pub mod loadgen;
 pub mod reference;
+pub mod serve;
 pub mod topk;
 
-pub use batching::{DecodeRequest, RequestResult, Schedule,
-                   ServeReport, ServeStats};
 pub use engine::DecodeEngine;
+pub use serve::{DecodeRequest, RequestOutcome, RequestResult,
+                Schedule, ServeConfig, ServeReport, ServeStats};
 
 use crate::runtime::{HostTensor, ModelRuntime};
 

@@ -1,0 +1,171 @@
+//! Admission control: whether an arriving request joins the queue, is
+//! shed on the spot, or later expires waiting — the lever that turns
+//! the loadgen knee from an observation into a controlled operating
+//! point (past saturation, an open-loop queue grows without bound; a
+//! bounded queue trades a nonzero shed rate for a bounded p95).
+//!
+//! The serve loop consults the policy at two points:
+//!
+//!  * **arrival** — [`AdmissionPolicy::admit`] sees how many requests
+//!    are already *waiting* (excluding those about to seat in a free
+//!    slot, so a cold server never sheds below its own batch size)
+//!    and decides enqueue vs [`shed`](super::RequestOutcome::Shed);
+//!  * **while queued** — a request whose wait exceeds
+//!    [`AdmissionPolicy::deadline_ms`] is
+//!    [`expired`](super::RequestOutcome::Expired) at
+//!    `arrival + deadline` on the serve clock (virtual under a
+//!    schedule, wall otherwise) — the instant the caller gave up.
+//!
+//! [`Unbounded`] is the default and reproduces the pre-split behavior
+//! bit-for-bit (nothing is ever shed or expired).
+
+/// Decide the fate of arriving and waiting requests.
+pub trait AdmissionPolicy {
+    /// Flag/report name ("unbounded", "max-queue(8)", ...).
+    fn name(&self) -> String;
+
+    /// May a request that would have to wait behind `waiting` queued
+    /// requests join the queue? (`waiting` excludes requests that
+    /// will seat immediately in a free slot.)
+    fn admit(&self, waiting: usize) -> bool {
+        let _ = waiting;
+        true
+    }
+
+    /// Shed a queued request once its wait exceeds this many (serve-
+    /// clock) ms. `None` = requests wait forever.
+    fn deadline_ms(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Everything is admitted and waits forever — the pre-split behavior.
+pub struct Unbounded;
+
+impl AdmissionPolicy for Unbounded {
+    fn name(&self) -> String {
+        "unbounded".into()
+    }
+}
+
+/// At most this many requests may wait; later arrivals are shed.
+pub struct MaxQueueDepth(pub usize);
+
+impl AdmissionPolicy for MaxQueueDepth {
+    fn name(&self) -> String {
+        format!("max-queue({})", self.0)
+    }
+
+    fn admit(&self, waiting: usize) -> bool {
+        waiting < self.0
+    }
+}
+
+/// Queued requests give up after waiting this many ms.
+pub struct QueueDeadline(pub f64);
+
+impl AdmissionPolicy for QueueDeadline {
+    fn name(&self) -> String {
+        format!("deadline({}ms)", self.0)
+    }
+
+    fn deadline_ms(&self) -> Option<f64> {
+        Some(self.0)
+    }
+}
+
+/// Both knobs at once — what `--max-queue` + `--queue-deadline-ms`
+/// build when the operator sets the two together.
+pub struct Bounded {
+    pub max_queue: usize,
+    pub deadline_ms: f64,
+}
+
+impl AdmissionPolicy for Bounded {
+    fn name(&self) -> String {
+        format!("max-queue({})+deadline({}ms)", self.max_queue,
+                self.deadline_ms)
+    }
+
+    fn admit(&self, waiting: usize) -> bool {
+        waiting < self.max_queue
+    }
+
+    fn deadline_ms(&self) -> Option<f64> {
+        Some(self.deadline_ms)
+    }
+}
+
+/// Build the policy the CLI flags describe. `max_queue == 0` and
+/// `deadline_ms <= 0.0` each mean "unlimited" (the flag defaults), so
+/// plain `spdf serve`/`spdf loadgen` stay on [`Unbounded`].
+pub fn from_flags(max_queue: usize, deadline_ms: f64)
+                  -> anyhow::Result<Box<dyn AdmissionPolicy>> {
+    anyhow::ensure!(deadline_ms.is_finite(),
+                    "--queue-deadline-ms must be finite");
+    let deadline = (deadline_ms > 0.0).then_some(deadline_ms);
+    Ok(match (max_queue, deadline) {
+        (0, None) => Box::new(Unbounded),
+        (n, None) => Box::new(MaxQueueDepth(n)),
+        (0, Some(d)) => Box::new(QueueDeadline(d)),
+        (n, Some(d)) => {
+            Box::new(Bounded { max_queue: n, deadline_ms: d })
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_admits_everything_forever() {
+        assert!(Unbounded.admit(0));
+        assert!(Unbounded.admit(1_000_000));
+        assert_eq!(Unbounded.deadline_ms(), None);
+        assert_eq!(Unbounded.name(), "unbounded");
+    }
+
+    #[test]
+    fn max_queue_depth_bounds_waiters() {
+        let p = MaxQueueDepth(2);
+        assert!(p.admit(0));
+        assert!(p.admit(1));
+        assert!(!p.admit(2));
+        assert_eq!(p.deadline_ms(), None);
+        assert_eq!(p.name(), "max-queue(2)");
+        // depth 0: nothing may wait (immediate dispatch only)
+        assert!(!MaxQueueDepth(0).admit(0));
+    }
+
+    #[test]
+    fn queue_deadline_sets_expiry_only() {
+        let p = QueueDeadline(250.0);
+        assert!(p.admit(usize::MAX));
+        assert_eq!(p.deadline_ms(), Some(250.0));
+        assert_eq!(p.name(), "deadline(250ms)");
+    }
+
+    #[test]
+    fn bounded_combines_both_knobs() {
+        let p = Bounded { max_queue: 3, deadline_ms: 100.0 };
+        assert!(p.admit(2));
+        assert!(!p.admit(3));
+        assert_eq!(p.deadline_ms(), Some(100.0));
+        assert_eq!(p.name(), "max-queue(3)+deadline(100ms)");
+    }
+
+    #[test]
+    fn from_flags_maps_zero_sentinels_to_unbounded() {
+        assert_eq!(from_flags(0, 0.0).unwrap().name(), "unbounded");
+        assert_eq!(from_flags(4, 0.0).unwrap().name(), "max-queue(4)");
+        assert_eq!(from_flags(0, 50.0).unwrap().name(),
+                   "deadline(50ms)");
+        assert_eq!(from_flags(4, 50.0).unwrap().name(),
+                   "max-queue(4)+deadline(50ms)");
+        assert!(from_flags(1, f64::NAN).is_err());
+        assert!(from_flags(1, f64::INFINITY).is_err());
+        // negative deadline is treated as unset, like the 0 default
+        assert_eq!(from_flags(0, -1.0).unwrap().name(), "unbounded");
+    }
+}

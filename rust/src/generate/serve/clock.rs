@@ -1,0 +1,318 @@
+//! The serve loop's notion of time: the wall/virtual [`Clock`], the
+//! timed-arrival [`Schedule`], and the [`ArrivalQueue`] that feeds
+//! requests to the admission stage as their arrival times pass.
+
+use std::time::Instant;
+
+/// Timed-arrival schedule for `serve_timed`: the virtual clock and
+/// when each request joins the queue. Built by `generate::loadgen`.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Admission time per request, virtual ms, aligned with the
+    /// request slice. `f64::INFINITY` marks a closed-loop successor
+    /// that is released by its predecessor's completion (see
+    /// `release`).
+    pub arrivals: Vec<f64>,
+    /// `release[i] = Some((j, think_ms))`: completing request `i`
+    /// releases request `j` at `completion(i) + think_ms` (closed-loop
+    /// client chains). Empty or all-`None` for open-loop traces.
+    pub release: Vec<Option<(usize, f64)>>,
+    /// Virtual cost of one engine step, ms.
+    pub step_ms: f64,
+    /// Virtual cost of one KV prefill pass, ms (unused on the literal
+    /// path).
+    pub prefill_ms: f64,
+}
+
+impl Schedule {
+    /// Open-loop schedule: explicit arrival times, no release chains.
+    pub fn open(arrivals: Vec<f64>, step_ms: f64, prefill_ms: f64)
+                -> Schedule {
+        let n = arrivals.len();
+        Schedule { arrivals, release: vec![None; n], step_ms,
+                   prefill_ms }
+    }
+
+    pub(crate) fn validate(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.arrivals.len() == n,
+                        "schedule has {} arrivals for {} requests",
+                        self.arrivals.len(), n);
+        anyhow::ensure!(self.release.len() == n,
+                        "schedule has {} release entries for {} \
+                         requests", self.release.len(), n);
+        anyhow::ensure!(
+            self.step_ms >= 0.0 && self.prefill_ms >= 0.0
+                && self.step_ms.is_finite()
+                && self.prefill_ms.is_finite(),
+            "schedule step costs must be finite and non-negative"
+        );
+        let mut released = vec![false; n];
+        for (i, r) in self.release.iter().enumerate() {
+            if let Some((j, think)) = r {
+                anyhow::ensure!(*j < n && *j != i,
+                                "release target {j} out of range (from \
+                                 request {i})");
+                anyhow::ensure!(!released[*j],
+                                "request {j} released twice");
+                anyhow::ensure!(self.arrivals[*j] == f64::INFINITY,
+                                "release target {j} must be gated at \
+                                 +infinity");
+                anyhow::ensure!(think.is_finite() && *think >= 0.0,
+                                "bad think time for release of {j}");
+                released[*j] = true;
+            }
+        }
+        for (i, a) in self.arrivals.iter().enumerate() {
+            if *a == f64::INFINITY {
+                anyhow::ensure!(released[i],
+                                "request {i} is gated (infinite \
+                                 arrival) but nothing releases it");
+            } else {
+                // NaN and -inf both fail here: a negative-infinity
+                // arrival would be admitted immediately AND look
+                // "gated" to on_complete, decoding the request twice
+                anyhow::ensure!(a.is_finite() && *a >= 0.0,
+                                "bad arrival time for request {i}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The serve loop's notion of time: real on the untimed path, a
+/// deterministic per-invocation accumulator under a [`Schedule`].
+pub(crate) enum Clock {
+    Wall,
+    Virtual { now_ms: f64, step_ms: f64, prefill_ms: f64 },
+}
+
+impl Clock {
+    pub(crate) fn new(schedule: Option<&Schedule>) -> Clock {
+        match schedule {
+            Some(s) => Clock::Virtual {
+                now_ms: 0.0,
+                step_ms: s.step_ms,
+                prefill_ms: s.prefill_ms,
+            },
+            None => Clock::Wall,
+        }
+    }
+
+    pub(crate) fn now_ms(&self, t0: &Instant) -> f64 {
+        match self {
+            Clock::Wall => t0.elapsed().as_secs_f64() * 1e3,
+            Clock::Virtual { now_ms, .. } => *now_ms,
+        }
+    }
+
+    pub(crate) fn on_step(&mut self) {
+        if let Clock::Virtual { now_ms, step_ms, .. } = self {
+            *now_ms += *step_ms;
+        }
+    }
+
+    pub(crate) fn on_prefill(&mut self) {
+        if let Clock::Virtual { now_ms, prefill_ms, .. } = self {
+            *now_ms += *prefill_ms;
+        }
+    }
+
+    /// Idle jump: nothing is decoding and nothing has arrived yet.
+    pub(crate) fn jump_to(&mut self, t: f64) {
+        if let Clock::Virtual { now_ms, .. } = self {
+            *now_ms = now_ms.max(t);
+        }
+    }
+}
+
+/// Pending-arrival queue: request indices ordered by (arrival, index),
+/// with closed-loop successors gated at infinity until their
+/// predecessor's completion releases them. Requests popped here flow
+/// into the admission stage; this queue knows nothing about policies.
+pub(crate) struct ArrivalQueue {
+    arrivals: Vec<f64>,
+    release: Vec<Option<(usize, f64)>>,
+    /// Not-yet-admitted request indices, sorted by (arrival, index);
+    /// gated (infinite-arrival) entries sit at the tail.
+    waiting: Vec<usize>,
+}
+
+impl ArrivalQueue {
+    pub(crate) fn new(n: usize, schedule: Option<&Schedule>)
+                      -> ArrivalQueue {
+        let (arrivals, release) = match schedule {
+            Some(s) => (s.arrivals.clone(), s.release.clone()),
+            None => (vec![0.0; n], vec![None; n]),
+        };
+        let mut waiting: Vec<usize> = (0..n).collect();
+        // total_cmp, not partial_cmp().unwrap(): arrivals are
+        // validated finite-or-+inf before the loop runs, but the sort
+        // itself must never be the thing that panics on a NaN that
+        // slipped past a future caller (NaN orders after +inf, i.e.
+        // onto the gated tail, and the validation error still fires)
+        waiting.sort_by(|&a, &b| {
+            arrivals[a].total_cmp(&arrivals[b]).then(a.cmp(&b))
+        });
+        ArrivalQueue { arrivals, release, waiting }
+    }
+
+    pub(crate) fn arrival_of(&self, i: usize) -> f64 {
+        self.arrivals[i]
+    }
+
+    /// Head of the queue if it has arrived by `now`.
+    pub(crate) fn pop_ready(&mut self, now: f64) -> Option<usize> {
+        let ready = matches!(self.waiting.first(),
+                             Some(&i) if self.arrivals[i] <= now);
+        if ready {
+            Some(self.waiting.remove(0))
+        } else {
+            None
+        }
+    }
+
+    /// Earliest pending arrival, if any is finite (i.e. not gated).
+    pub(crate) fn next_arrival(&self) -> Option<f64> {
+        self.waiting.first()
+            .map(|&i| self.arrivals[i])
+            .filter(|a| a.is_finite())
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// Completion hook: release request `i`'s closed-loop successor.
+    /// Shed and expired requests release theirs too — the simulated
+    /// client issues its next request after a failure just the same
+    /// (`now` is then the failure instant: arrival for a shed,
+    /// arrival + deadline for an expiry).
+    pub(crate) fn on_complete(&mut self, i: usize, now: f64) {
+        if let Some((j, think)) = self.release[i] {
+            debug_assert!(self.arrivals[j] == f64::INFINITY,
+                          "successor released twice");
+            self.arrivals[j] = now + think;
+            // reposition j from the gated tail to its sorted slot
+            self.waiting.retain(|&w| w != j);
+            insert_by_arrival(&self.arrivals, &mut self.waiting, j);
+        }
+    }
+
+    /// [`insert_by_arrival`] against this queue's arrival times — the
+    /// serve loop's ready set shares the ordering invariant.
+    pub(crate) fn insert_ready(&self, list: &mut Vec<usize>,
+                               i: usize) {
+        insert_by_arrival(&self.arrivals, list, i);
+    }
+}
+
+/// Insert request index `i` into `list` keeping it sorted by
+/// (arrival, index) — the one definition of the FIFO-by-arrival
+/// ordering shared by [`ArrivalQueue::on_complete`] (repositioning a
+/// released successor) and the serve loop's ready set (where a
+/// back-dated release must queue ahead of later arrivals).
+pub(crate) fn insert_by_arrival(arrivals: &[f64],
+                                list: &mut Vec<usize>, i: usize) {
+    let ai = arrivals[i];
+    let at = list.iter()
+        .position(|&w| {
+            let aw = arrivals[w];
+            aw > ai || (aw == ai && w > i)
+        })
+        .unwrap_or(list.len());
+    list.insert(at, i);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_queue_pops_in_arrival_then_index_order() {
+        let s = Schedule::open(vec![5.0, 0.0, 5.0, 1.0], 1.0, 1.0);
+        let mut q = ArrivalQueue::new(4, Some(&s));
+        assert_eq!(q.pop_ready(10.0), Some(1));
+        assert_eq!(q.pop_ready(10.0), Some(3));
+        assert_eq!(q.pop_ready(10.0), Some(0)); // ties break by index
+        assert_eq!(q.pop_ready(10.0), Some(2));
+        assert_eq!(q.pop_ready(10.0), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn arrival_queue_gates_future_and_infinite_arrivals() {
+        let s = Schedule {
+            arrivals: vec![0.0, 4.0, f64::INFINITY],
+            release: vec![Some((2, 1.0)), None, None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        let mut q = ArrivalQueue::new(3, Some(&s));
+        assert_eq!(q.pop_ready(0.0), Some(0));
+        assert_eq!(q.pop_ready(0.0), None);
+        assert_eq!(q.next_arrival(), Some(4.0));
+        // releasing the gated successor schedules it at now + think
+        q.on_complete(0, 2.0);
+        assert_eq!(q.arrival_of(2), 3.0);
+        assert_eq!(q.pop_ready(3.5), Some(2));
+        assert_eq!(q.pop_ready(4.0), Some(1));
+    }
+
+    #[test]
+    fn arrival_sort_is_nan_safe() {
+        // regression (ISSUE 4 satellite): the arrival sort used
+        // partial_cmp().unwrap() and panicked on NaN before the
+        // validation error could fire. total_cmp must order NaN onto
+        // the gated tail without panicking; run_loop's validation
+        // still rejects the schedule (covered in core::tests).
+        let s = Schedule::open(vec![2.0, f64::NAN, 0.0], 1.0, 1.0);
+        let mut q = ArrivalQueue::new(3, Some(&s));
+        assert_eq!(q.pop_ready(5.0), Some(2));
+        assert_eq!(q.pop_ready(5.0), Some(0));
+        // the NaN entry never reads as "arrived"
+        assert_eq!(q.pop_ready(f64::MAX), None);
+        assert!(!q.is_empty());
+        assert_eq!(q.next_arrival(), None);
+    }
+
+    #[test]
+    fn insert_by_arrival_orders_by_arrival_then_index() {
+        let arrivals = [5.0, 1.0, 3.0, 3.0, 0.5];
+        let mut list = Vec::new();
+        for i in [0, 1, 3] {
+            insert_by_arrival(&arrivals, &mut list, i);
+        }
+        assert_eq!(list, vec![1, 3, 0]);
+        // same arrival as 3 but smaller index: queues ahead of it
+        insert_by_arrival(&arrivals, &mut list, 2);
+        assert_eq!(list, vec![1, 2, 3, 0]);
+        // earliest arrival goes to the front
+        insert_by_arrival(&arrivals, &mut list, 4);
+        assert_eq!(list, vec![4, 1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn schedule_validate_rejects_nan_and_negative_arrivals() {
+        let s = Schedule::open(vec![0.0, f64::NAN], 1.0, 1.0);
+        assert!(s.validate(2).is_err());
+        let s = Schedule::open(vec![0.0, -1.0], 1.0, 1.0);
+        assert!(s.validate(2).is_err());
+        let s = Schedule::open(vec![0.0, 1.0], 1.0, 1.0);
+        assert!(s.validate(2).is_ok());
+    }
+
+    #[test]
+    fn virtual_clock_accumulates_and_jumps() {
+        let s = Schedule::open(vec![0.0], 2.0, 3.0);
+        let mut c = Clock::new(Some(&s));
+        let t0 = Instant::now();
+        assert_eq!(c.now_ms(&t0), 0.0);
+        c.on_step();
+        c.on_prefill();
+        assert_eq!(c.now_ms(&t0), 5.0);
+        c.jump_to(10.0);
+        assert_eq!(c.now_ms(&t0), 10.0);
+        c.jump_to(4.0); // never rewinds
+        assert_eq!(c.now_ms(&t0), 10.0);
+    }
+}

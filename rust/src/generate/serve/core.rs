@@ -1,0 +1,1241 @@
+//! The backend-agnostic slot-refill state machine.
+//!
+//! The `logits_last` artifact is compiled for a fixed
+//! `(decode_batch, ctx_len)` shape, but serving traffic is an arbitrary
+//! stream of prompts with wildly different generation lengths. Static
+//! chunking (decode `B` prompts, wait for the *slowest*, repeat) burns
+//! batch slots as padding the moment one slot finishes early. Here a
+//! request queue feeds the batch instead: the moment a slot's request
+//! finishes (EOS / length cap), the slot is rewritten with the next
+//! queued prompt **mid-flight** — the model step never idles a slot
+//! while work is waiting. Causal attention plus the explicit `pos`
+//! input make each row independent, so a slot's output is bit-identical
+//! to decoding its prompt alone (`tests/integration_runtime.rs` checks
+//! this).
+//!
+//! One state machine, parameterized on three axes:
+//!  * **backend** — the per-step logits producer is a
+//!    [`LogitsBackend`]: the literal-resident engine path (full
+//!    context recompute), the KV-resident incremental path (session
+//!    state + per-slot prefill on refill), or a deterministic
+//!    in-process mock (so every queueing/clock/policy edge is
+//!    unit-testable without compiled artifacts);
+//!  * **time** — wall clock, or a deterministic virtual clock under a
+//!    [`Schedule`] (the `loadgen` workload driver): requests become
+//!    visible as their arrival times pass, every model invocation
+//!    advances the clock by a fixed cost, and per-request queue-wait /
+//!    TTFT / end-to-end latencies are read off the virtual clock;
+//!  * **policy** — a [`Scheduler`] picks which ready request fills a
+//!    freed slot and an [`AdmissionPolicy`] decides enqueue / shed /
+//!    expire ([`super::policy`], [`super::admission`]). The defaults
+//!    (FIFO, unbounded) reproduce the pre-split `batching` behavior
+//!    bit-for-bit; policies change *which* request waits or fails,
+//!    never *what* an admitted request decodes.
+//!
+//! Entry points: [`serve`] / [`serve_kv`] (whole stream present at
+//! entry, wall-clock latencies), [`serve_timed`] (arrival-gated on the
+//! virtual clock), and [`serve_with`] (everything explicit via
+//! [`ServeConfig`]).
+
+use std::time::Instant;
+
+use crate::generate::engine::DecodeEngine;
+use crate::generate::{topk, DecodeParams};
+use crate::runtime::SessionState;
+use crate::tokenizer::EOS;
+
+use super::admission::{AdmissionPolicy, Unbounded};
+use super::clock::{ArrivalQueue, Clock, Schedule};
+use super::policy::{Fifo, Scheduler};
+use super::telemetry::{RequestOutcome, RequestResult, ServeReport,
+                       ServeStats};
+use super::DecodeRequest;
+
+/// The per-step logits producer behind the slot-refill state machine:
+/// the literal-resident engine path, the KV-resident path, and
+/// deterministic test mocks (so queueing/clock behavior is testable
+/// without compiled artifacts).
+pub(crate) trait LogitsBackend {
+    /// `(decode_batch, ctx_len, vocab)`.
+    fn dims(&self) -> (usize, usize, usize);
+    /// true → the serve loop maintains per-slot refill marks and calls
+    /// [`Self::prefill`] before a step whenever any slot was
+    /// (re)written.
+    fn needs_prefill(&self) -> bool {
+        false
+    }
+    /// (Re)populate cache rows with `refill[s] > 0` from the token
+    /// buffer; other rows pass through untouched.
+    fn prefill(&mut self, _tokens: &[i32], _pos: &[i32],
+               _refill: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+    /// Logits for every row read at its `pos` (flat `B * vocab`).
+    fn step(&mut self, tokens: &[i32], pos: &[i32])
+            -> anyhow::Result<Vec<f32>>;
+}
+
+/// Literal-resident backend: full-context recompute per step.
+struct LiteralBackend<'e, 'a> {
+    engine: &'e DecodeEngine<'a>,
+}
+
+impl LogitsBackend for LiteralBackend<'_, '_> {
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.engine.decode_batch(), self.engine.ctx_len(),
+         self.engine.vocab())
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32])
+            -> anyhow::Result<Vec<f32>> {
+        self.engine.step_logits(tokens, pos)
+    }
+}
+
+/// KV-resident backend: per-layer caches as session-state literals,
+/// advanced by the incremental `decode_step` artifact. Each row steps
+/// by its token at `pos` (for a freshly prefilled row that re-derives
+/// the prompt tail's K/V — same values — and yields the same logits
+/// the prefill already read; uniformity keeps every emitted logit on
+/// the incremental program).
+struct KvBackend<'e, 'a> {
+    engine: &'e DecodeEngine<'a>,
+    state: SessionState,
+    next_tok: Vec<i32>,
+}
+
+impl LogitsBackend for KvBackend<'_, '_> {
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.engine.decode_batch(), self.engine.ctx_len(),
+         self.engine.vocab())
+    }
+
+    fn needs_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill(&mut self, tokens: &[i32], pos: &[i32], refill: &[f32])
+               -> anyhow::Result<()> {
+        self.engine.kv_prefill(&mut self.state, tokens, pos, refill)?;
+        Ok(())
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32])
+            -> anyhow::Result<Vec<f32>> {
+        let t = self.engine.ctx_len();
+        for (s, nt) in self.next_tok.iter_mut().enumerate() {
+            *nt = tokens[s * t + pos[s] as usize];
+        }
+        self.engine.kv_step(&mut self.state, &self.next_tok, pos)
+    }
+}
+
+/// A batch slot currently decoding one request. The slot's cursor
+/// lives only in the shared `pos` buffer fed to the backend — a
+/// slot-local copy would have to be advanced in lockstep and has
+/// already caused one logits-read-at-stale-position bug.
+struct Slot {
+    req: usize, // index into `requests`
+    out: Vec<u32>,
+    entered_step: u64,
+    /// Clock reading at slot entry.
+    admit_ms: f64,
+    /// Clock reading when the first token was emitted.
+    first_tok_ms: Option<f64>,
+}
+
+/// Write a request's prompt into row `slot` of the token buffer,
+/// clearing stale tokens from the previous occupant first (junk
+/// *before* `pos` would leak into the new request's context).
+/// `serve` validates up front that the prompt is non-empty and fits
+/// the row (`len < t`).
+fn fill_slot(
+    tokens: &mut [i32],
+    pos: &mut [i32],
+    t: usize,
+    slot: usize,
+    prompt: &[u32],
+) {
+    debug_assert!(!prompt.is_empty() && prompt.len() < t,
+                  "serve() validates prompt lengths up front");
+    let row = &mut tokens[slot * t..(slot + 1) * t];
+    row.fill(0);
+    for (j, &tok) in prompt.iter().enumerate() {
+        row[j] = tok as i32;
+    }
+    pos[slot] = prompt.len() as i32 - 1;
+}
+
+/// Everything a serve call can vary: engine path, arrival timing, and
+/// the two policies. [`ServeConfig::new`] gives the defaults (untimed,
+/// FIFO, unbounded) that reproduce the pre-split behavior.
+pub struct ServeConfig<'a> {
+    /// Decode on the KV-resident incremental path instead of the
+    /// literal-resident full-recompute path.
+    pub use_kv: bool,
+    /// Arrival-gate requests on this virtual-clock schedule (None =
+    /// whole stream present at entry, wall-clock telemetry).
+    pub schedule: Option<&'a Schedule>,
+    /// Which ready request fills a freed slot.
+    pub scheduler: &'a dyn Scheduler,
+    /// Enqueue / shed / expire decisions.
+    pub admission: &'a dyn AdmissionPolicy,
+}
+
+impl<'a> ServeConfig<'a> {
+    pub fn new(use_kv: bool) -> ServeConfig<'a> {
+        ServeConfig {
+            use_kv,
+            schedule: None,
+            scheduler: &Fifo,
+            admission: &Unbounded,
+        }
+    }
+
+    /// Defaults plus a virtual-clock schedule.
+    pub fn timed(use_kv: bool, schedule: &'a Schedule)
+                 -> ServeConfig<'a> {
+        ServeConfig { schedule: Some(schedule),
+                      ..ServeConfig::new(use_kv) }
+    }
+}
+
+/// Run a request stream to completion through the engine's
+/// literal-resident path (`logits_last`: full-context recompute per
+/// step) with FIFO scheduling and unbounded admission. Requests enter
+/// slots in order; each finished slot is refilled from the queue
+/// before the next model step. `dp` supplies the sampling knobs
+/// (`no_repeat_ngram`); generation budgets come from each request's
+/// `max_new_tokens`, not `dp.max_new_tokens`.
+pub fn serve(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+) -> anyhow::Result<ServeReport> {
+    serve_with(engine, requests, dp, &ServeConfig::new(false))
+}
+
+/// [`serve`] over the KV-resident incremental path: a slot's cache is
+/// populated once per (re)fill by the `prefill` artifact, then every
+/// step runs `decode_step` — only `(B,)` token/pos vectors cross the
+/// host boundary and per-token model work is O(1) in the context
+/// length. Greedy output is bit-identical to [`serve`] and to
+/// [`crate::generate::reference::greedy`] (integration-tested,
+/// including across slot refills). Errors if the KV artifacts were not
+/// compiled.
+pub fn serve_kv(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+) -> anyhow::Result<ServeReport> {
+    serve_with(engine, requests, dp, &ServeConfig::new(true))
+}
+
+/// Arrival-gated serving on the virtual clock — the `loadgen`
+/// simulation driver — with FIFO scheduling and unbounded admission.
+/// Decoded tokens are exactly what [`serve`] / [`serve_kv`] produce
+/// for the same prompts; only admission timing and the reported
+/// `*_ms` telemetry differ. Deterministic for a given request list +
+/// schedule.
+pub fn serve_timed(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    use_kv: bool,
+    schedule: &Schedule,
+) -> anyhow::Result<ServeReport> {
+    serve_with(engine, requests, dp,
+               &ServeConfig::timed(use_kv, schedule))
+}
+
+/// One backend-construction site for every public entry point; the
+/// fully explicit form (engine path + schedule + policies).
+pub fn serve_with(
+    engine: &DecodeEngine,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    cfg: &ServeConfig,
+) -> anyhow::Result<ServeReport> {
+    if cfg.use_kv {
+        let mut backend = KvBackend {
+            engine,
+            state: engine.kv_state()?,
+            next_tok: vec![0i32; engine.decode_batch()],
+        };
+        run_loop_with(&mut backend, requests, dp, cfg.schedule,
+                      cfg.scheduler, cfg.admission)
+    } else {
+        let mut backend = LiteralBackend { engine };
+        run_loop_with(&mut backend, requests, dp, cfg.schedule,
+                      cfg.scheduler, cfg.admission)
+    }
+}
+
+/// [`run_loop_with`] under the default policies (FIFO, unbounded) —
+/// the pre-split entry point, kept for the mock-backed unit tests.
+#[cfg(test)]
+pub(crate) fn run_loop(
+    backend: &mut dyn LogitsBackend,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    schedule: Option<&Schedule>,
+) -> anyhow::Result<ServeReport> {
+    run_loop_with(backend, requests, dp, schedule, &Fifo, &Unbounded)
+}
+
+/// One slot-refill state machine for every decode path. The host-side
+/// bookkeeping (token buffer, positions, EOS/length-cap edges, refill
+/// order, admission, telemetry) is identical across backends; the
+/// paths differ only in how a step's logits are produced, so any
+/// divergence between them is a model-side bug by construction.
+///
+/// Per iteration: (1) arrivals up to `now` are admitted into the ready
+/// set or shed, and queued requests past the admission deadline
+/// expire — shed/expired requests still release their closed-loop
+/// successors; (2) every free slot is filled with the scheduler's pick
+/// from the ready set (zero-budget requests complete the moment they
+/// are picked and never occupy a slot); (3) one model step advances
+/// every occupied slot, and finished requests leave with
+/// [`RequestOutcome::Completed`].
+pub(crate) fn run_loop_with(
+    backend: &mut dyn LogitsBackend,
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    schedule: Option<&Schedule>,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> anyhow::Result<ServeReport> {
+    let (b, t, vocab) = backend.dims();
+    anyhow::ensure!(requests.iter().all(|r| !r.prompt.is_empty()),
+                    "empty prompt in decode request stream");
+    anyhow::ensure!(
+        requests.iter().all(|r| r.prompt.len() < t),
+        "prompt longer than ctx_len - 1 ({}) in decode request \
+         stream — pre-truncate (keeping the tail) with \
+         coordinator::prompt_tokens",
+        t - 1
+    );
+    if let Some(s) = schedule {
+        s.validate(requests.len())?;
+    }
+    let deadline = admission.deadline_ms();
+    if let Some(d) = deadline {
+        anyhow::ensure!(d.is_finite() && d > 0.0,
+                        "queue deadline must be positive and finite \
+                         (got {d})");
+    }
+
+    let t0 = Instant::now();
+    let mut clock = Clock::new(schedule);
+    let mut pending = ArrivalQueue::new(requests.len(), schedule);
+    // Admitted requests awaiting a slot, ordered by (arrival, index) —
+    // the scheduler picks from this set.
+    let mut ready: Vec<usize> = Vec::new();
+    let mut tokens = vec![0i32; b * t];
+    let mut pos = vec![0i32; b];
+    let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+    let mut results: Vec<RequestResult> =
+        Vec::with_capacity(requests.len());
+    let mut engine_steps = 0u64;
+    let mut slot_steps = 0u64;
+    let mut prefill_steps = 0u64;
+
+    // KV path: `refill` marks rows whose cache must be (re)populated
+    // from the token buffer before the next step.
+    let needs_prefill = backend.needs_prefill();
+    let mut refill = vec![0f32; b];
+    let mut any_refill = false;
+
+    loop {
+        let now = clock.now_ms(&t0);
+
+        // Admission: arrivals up to `now` are enqueued or shed;
+        // queued requests past the deadline expire. Loop to a
+        // fixpoint — shedding/expiring a closed-loop predecessor can
+        // release a successor that is itself already due.
+        loop {
+            let mut moved = false;
+            let free = slots.iter().filter(|s| s.is_none()).count();
+            while let Some(i) = pending.pop_ready(now) {
+                moved = true;
+                let arrival = pending.arrival_of(i);
+                // a request that will seat immediately never consults
+                // the policy — only genuine waiters can be shed
+                if ready.len() < free
+                    || admission.admit(ready.len() - free)
+                {
+                    // keep the ready set sorted by (arrival, index):
+                    // pops arrive in that order already EXCEPT a
+                    // closed-loop successor released by a failure,
+                    // whose back-dated arrival can predate entries
+                    // admitted earlier in this fixpoint — it must
+                    // queue ahead of them, not behind
+                    pending.insert_ready(&mut ready, i);
+                } else {
+                    results.push(RequestResult {
+                        id: requests[i].id,
+                        tokens: Vec::new(),
+                        queue_steps: 0,
+                        decode_steps: 0,
+                        arrival_ms: arrival,
+                        queue_ms: 0.0,
+                        ttft_ms: 0.0,
+                        latency_ms: 0.0,
+                        outcome: RequestOutcome::Shed,
+                    });
+                    // rejection happens AT arrival (the telemetry
+                    // above says so); the closed-loop successor is
+                    // released from that instant, not from the lazy
+                    // step-boundary discovery — mirroring the
+                    // back-dated expiry release below
+                    pending.on_complete(i, arrival);
+                }
+            }
+            if let Some(d) = deadline {
+                let mut k = 0;
+                while k < ready.len() {
+                    let i = ready[k];
+                    let arrival = pending.arrival_of(i);
+                    if now - arrival > d {
+                        ready.remove(k);
+                        moved = true;
+                        // the caller gave up at arrival + d; lazy
+                        // discovery must not inflate the reported wait
+                        results.push(RequestResult {
+                            id: requests[i].id,
+                            tokens: Vec::new(),
+                            queue_steps: 0,
+                            decode_steps: 0,
+                            arrival_ms: arrival,
+                            queue_ms: d,
+                            ttft_ms: d,
+                            latency_ms: d,
+                            outcome: RequestOutcome::Expired,
+                        });
+                        pending.on_complete(i, arrival + d);
+                    } else {
+                        k += 1;
+                    }
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+
+        // Scheduling: fill every free slot with the policy's pick
+        // from the ready set. Zero-budget requests complete the
+        // moment they are picked (greedy with `max_new_tokens == 0`
+        // decodes nothing) and never occupy a slot.
+        for s in 0..b {
+            if slots[s].is_some() {
+                continue;
+            }
+            while !ready.is_empty() {
+                let k = scheduler.pick(&ready, requests);
+                anyhow::ensure!(k < ready.len(),
+                                "scheduler {} picked {k} from a ready \
+                                 set of {}", scheduler.name(),
+                                ready.len());
+                let i = ready.remove(k);
+                let arrival = pending.arrival_of(i);
+                if requests[i].max_new_tokens == 0 {
+                    results.push(RequestResult {
+                        id: requests[i].id,
+                        tokens: Vec::new(),
+                        queue_steps: engine_steps,
+                        decode_steps: 0,
+                        arrival_ms: arrival,
+                        queue_ms: now - arrival,
+                        ttft_ms: now - arrival,
+                        latency_ms: now - arrival,
+                        outcome: RequestOutcome::Completed,
+                    });
+                    pending.on_complete(i, now);
+                    continue;
+                }
+                fill_slot(&mut tokens, &mut pos, t, s,
+                          &requests[i].prompt);
+                if needs_prefill {
+                    refill[s] = 1.0;
+                    any_refill = true;
+                }
+                slots[s] = Some(Slot {
+                    req: i,
+                    out: Vec::new(),
+                    entered_step: engine_steps,
+                    admit_ms: now,
+                    first_tok_ms: None,
+                });
+                break;
+            }
+        }
+
+        if slots.iter().all(|s| s.is_none()) {
+            // the fill stage drains `ready` whenever a slot is free,
+            // so only future or gated arrivals can remain
+            if pending.is_empty() {
+                break;
+            }
+            match pending.next_arrival() {
+                // idle: nothing decoding, next arrival in the future
+                Some(next) => {
+                    clock.jump_to(next);
+                    continue;
+                }
+                None => anyhow::bail!(
+                    "request queue deadlocked: gated requests remain \
+                     but nothing will release them"
+                ),
+            }
+        }
+
+        let occupied = slots.iter().filter(|s| s.is_some()).count();
+        if needs_prefill && any_refill {
+            // populate the marked rows' caches (positions up to and
+            // including `pos`) from their prompt rows; other rows
+            // pass through untouched
+            backend.prefill(&tokens, &pos, &refill)?;
+            prefill_steps += 1;
+            refill.fill(0.0);
+            any_refill = false;
+            clock.on_prefill();
+        }
+        let lv = backend.step(&tokens, &pos)?;
+        engine_steps += 1;
+        slot_steps += occupied as u64;
+        clock.on_step();
+        let now = clock.now_ms(&t0);
+
+        for s in 0..b {
+            let finished = {
+                let Some(slot) = slots[s].as_mut() else { continue };
+                let max_new = requests[slot.req].max_new_tokens;
+                let row = &lv[s * vocab..(s + 1) * vocab];
+                let cur = pos[s] as usize;
+                let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
+                    (0..=cur).map(|j| tokens[s * t + j] as u32)
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let next = topk::pick_next(row, &ctx,
+                                           dp.no_repeat_ngram);
+                let new_pos = cur + 1;
+                let done = if next == EOS || new_pos >= t - 1 {
+                    if next != EOS && new_pos < t {
+                        slot.out.push(next);
+                    }
+                    true
+                } else {
+                    tokens[s * t + new_pos] = next as i32;
+                    pos[s] = new_pos as i32;
+                    slot.out.push(next);
+                    slot.out.len() >= max_new
+                };
+                if slot.first_tok_ms.is_none() && !slot.out.is_empty() {
+                    slot.first_tok_ms = Some(now);
+                }
+                done
+            };
+            if finished {
+                let slot = slots[s].take().unwrap();
+                let arrival = pending.arrival_of(slot.req);
+                results.push(RequestResult {
+                    id: requests[slot.req].id,
+                    queue_steps: slot.entered_step,
+                    decode_steps: engine_steps - slot.entered_step,
+                    arrival_ms: arrival,
+                    queue_ms: slot.admit_ms - arrival,
+                    ttft_ms: slot.first_tok_ms.unwrap_or(now)
+                        - arrival,
+                    latency_ms: now - arrival,
+                    tokens: slot.out,
+                    outcome: RequestOutcome::Completed,
+                });
+                pending.on_complete(slot.req, now);
+                // the freed slot refills from the queue at the top of
+                // the next iteration, before the next model step
+            }
+        }
+    }
+
+    results.sort_by_key(|r| r.id);
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let sim_ms = clock.now_ms(&t0);
+    let stats = ServeStats::from_results(
+        &results, requests.len(), b, engine_steps, prefill_steps,
+        slot_steps, wall_secs, sim_ms);
+    Ok(ServeReport { results, stats })
+}
+
+#[cfg(test)]
+pub(crate) mod mock {
+    //! Deterministic artifact-free backends for queueing/clock/policy
+    //! tests (also used by `generate::loadgen` unit tests).
+
+    use super::LogitsBackend;
+
+    /// Emits logits whose argmax is always `tok` (never EOS), so
+    /// generation length is exactly each request's budget; counts
+    /// prefill passes when `kv` is set.
+    pub struct MockBackend {
+        pub b: usize,
+        pub t: usize,
+        pub vocab: usize,
+        pub tok: usize,
+        pub kv: bool,
+        pub prefills: u64,
+    }
+
+    impl MockBackend {
+        pub fn new(b: usize, t: usize, kv: bool) -> MockBackend {
+            MockBackend { b, t, vocab: 16, tok: 5, kv, prefills: 0 }
+        }
+    }
+
+    impl LogitsBackend for MockBackend {
+        fn dims(&self) -> (usize, usize, usize) {
+            (self.b, self.t, self.vocab)
+        }
+
+        fn needs_prefill(&self) -> bool {
+            self.kv
+        }
+
+        fn prefill(&mut self, _tokens: &[i32], _pos: &[i32],
+                   _refill: &[f32]) -> anyhow::Result<()> {
+            self.prefills += 1;
+            Ok(())
+        }
+
+        fn step(&mut self, _tokens: &[i32], _pos: &[i32])
+                -> anyhow::Result<Vec<f32>> {
+            let mut lv = vec![0.0f32; self.b * self.vocab];
+            for s in 0..self.b {
+                lv[s * self.vocab + self.tok] = 1.0;
+            }
+            Ok(lv)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::admission::{self, Bounded, MaxQueueDepth,
+                                  QueueDeadline};
+    use super::super::policy::{self, PriorityClass,
+                               ShortestPromptFirst,
+                               SmallestBudgetFirst};
+    use super::mock::MockBackend;
+    use super::*;
+
+    fn reqs(budgets: &[usize]) -> Vec<DecodeRequest> {
+        budgets.iter().enumerate()
+            .map(|(i, &m)| DecodeRequest::new(i as u64, vec![1, 9, 3],
+                                              m))
+            .collect()
+    }
+
+    fn sched(arrivals: &[f64], step_ms: f64) -> Schedule {
+        Schedule::open(arrivals.to_vec(), step_ms, step_ms)
+    }
+
+    fn run_policies(
+        requests: &[DecodeRequest],
+        s: &Schedule,
+        scheduler: &dyn Scheduler,
+        adm: &dyn AdmissionPolicy,
+    ) -> ServeReport {
+        let mut be = MockBackend::new(1, 16, false);
+        run_loop_with(&mut be, requests, &DecodeParams::default(),
+                      Some(s), scheduler, adm)
+            .unwrap()
+    }
+
+    #[test]
+    fn fill_slot_clears_previous_occupant() {
+        let t = 8;
+        let mut tokens = vec![7i32; 2 * t];
+        let mut pos = vec![5i32; 2];
+        fill_slot(&mut tokens, &mut pos, t, 1, &[9, 10]);
+        assert_eq!(pos[1], 1);
+        assert_eq!(&tokens[t..], &[9, 10, 0, 0, 0, 0, 0, 0]);
+        // row 0 untouched
+        assert!(tokens[..t].iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn fill_slot_max_length_prompt_fits() {
+        // longest prompt serve() admits: t - 1 tokens, pos on the last
+        let t = 4;
+        let mut tokens = vec![0i32; t];
+        let mut pos = vec![0i32; 1];
+        fill_slot(&mut tokens, &mut pos, t, 0, &[1, 2, 3]);
+        assert_eq!(pos[0], 2);
+        assert_eq!(tokens, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn untimed_mock_serve_fifo_and_occupancy() {
+        // 5 requests through 2 slots: FIFO assignment, full stats
+        let mut be = MockBackend::new(2, 16, false);
+        let requests = reqs(&[3, 3, 2, 2, 1]);
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), None).unwrap();
+        assert_eq!(report.results.len(), 5);
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), requests[i].max_new_tokens);
+            assert!(r.tokens.iter().all(|&t| t == 5));
+            assert!(r.outcome.is_completed());
+        }
+        let st = &report.stats;
+        // steps: slots run [3,3] then [2,2] then [1] → 6 engine steps,
+        // slot_steps = 3+3+2+2+1 = 11
+        assert_eq!(st.engine_steps, 6);
+        assert_eq!(st.slot_steps, 11);
+        assert_eq!(st.generated_tokens, 11);
+        assert!((st.occupancy - 11.0 / 12.0).abs() < 1e-12);
+        // later requests queued
+        assert_eq!(report.results[4].queue_steps, 5);
+        // unbounded FIFO never sheds
+        assert_eq!((st.completed, st.shed, st.expired), (5, 0, 0));
+        assert_eq!(st.shed_rate, 0.0);
+        assert_eq!(st.tokens_per_sec, st.goodput_tokens_per_sec);
+    }
+
+    #[test]
+    fn timed_serve_waits_for_arrivals_and_jumps_idle_gaps() {
+        let mut be = MockBackend::new(2, 16, false);
+        let requests = reqs(&[3, 3, 3, 3]);
+        let s = sched(&[0.0, 0.0, 10.0, 10.0], 1.0);
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), Some(&s))
+            .unwrap();
+        let r = &report.results;
+        // first wave: admit at 0, one token per 1ms step, done at 3
+        assert_eq!(r[0].queue_ms, 0.0);
+        assert_eq!(r[0].ttft_ms, 1.0);
+        assert_eq!(r[0].latency_ms, 3.0);
+        // second wave: clock jumps the idle gap to t=10
+        assert_eq!(r[2].arrival_ms, 10.0);
+        assert_eq!(r[2].queue_ms, 0.0);
+        assert_eq!(r[2].latency_ms, 3.0);
+        assert_eq!(report.stats.engine_steps, 6);
+        assert_eq!(report.stats.sim_ms, 13.0);
+        // no slot idled while work was pending
+        assert!((report.stats.occupancy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_serve_records_queue_wait_under_saturation() {
+        // one slot, three simultaneous arrivals: head-of-line blocking
+        let mut be = MockBackend::new(1, 16, false);
+        let requests = reqs(&[2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), Some(&s))
+            .unwrap();
+        let r = &report.results;
+        assert_eq!(
+            r.iter().map(|x| x.queue_ms).collect::<Vec<_>>(),
+            vec![0.0, 2.0, 4.0]
+        );
+        assert_eq!(
+            r.iter().map(|x| x.latency_ms).collect::<Vec<_>>(),
+            vec![2.0, 4.0, 6.0]
+        );
+        assert_eq!(
+            r.iter().map(|x| x.queue_steps).collect::<Vec<_>>(),
+            vec![0, 2, 4]
+        );
+        assert_eq!(report.stats.latency_ms.p50, 4.0);
+    }
+
+    #[test]
+    fn timed_serve_closed_loop_releases_successor() {
+        let mut be = MockBackend::new(1, 16, false);
+        let requests = reqs(&[1, 1]);
+        let s = Schedule {
+            arrivals: vec![0.0, f64::INFINITY],
+            release: vec![Some((1, 5.0)), None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), Some(&s))
+            .unwrap();
+        let r = &report.results;
+        // request 0 completes at t=1; successor arrives at 1 + 5
+        assert_eq!(r[1].arrival_ms, 6.0);
+        assert_eq!(r[1].queue_ms, 0.0);
+        assert_eq!(r[1].latency_ms, 1.0);
+        assert_eq!(report.stats.sim_ms, 7.0);
+    }
+
+    #[test]
+    fn timed_serve_zero_budget_completes_at_arrival() {
+        let mut be = MockBackend::new(1, 16, false);
+        let requests = reqs(&[2, 0]);
+        let s = sched(&[0.0, 5.0], 1.0);
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), Some(&s))
+            .unwrap();
+        let r = &report.results;
+        assert_eq!(r[0].latency_ms, 2.0);
+        assert!(r[1].tokens.is_empty());
+        assert_eq!(r[1].arrival_ms, 5.0);
+        assert_eq!(r[1].latency_ms, 0.0);
+        assert_eq!(r[1].decode_steps, 0);
+        assert!(r[1].outcome.is_completed());
+    }
+
+    #[test]
+    fn timed_serve_kv_prefill_costs_virtual_time() {
+        let mut be = MockBackend::new(2, 16, true);
+        let requests = reqs(&[2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), Some(&s))
+            .unwrap();
+        // initial fill: one prefill; request 2's refill: another
+        assert_eq!(be.prefills, 2);
+        assert_eq!(report.stats.prefill_steps, 2);
+        let r = &report.results;
+        // wave 1: prefill(1) + step(2) + step(3) → done at 3
+        assert_eq!(r[0].latency_ms, 3.0);
+        // request 2 admitted at 3, prefill(4) + step(5) + step(6)
+        assert_eq!(r[2].queue_ms, 3.0);
+        assert_eq!(r[2].latency_ms, 6.0);
+    }
+
+    #[test]
+    fn timed_serve_is_deterministic() {
+        let requests = reqs(&[3, 1, 4, 2, 2, 3, 1]);
+        let s = sched(&[0.0, 0.5, 0.5, 2.0, 2.25, 7.0, 7.0], 0.75);
+        let run = || {
+            let mut be = MockBackend::new(2, 16, false);
+            run_loop(&mut be, &requests, &DecodeParams::default(),
+                     Some(&s)).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(
+                (x.arrival_ms, x.queue_ms, x.ttft_ms, x.latency_ms),
+                (y.arrival_ms, y.queue_ms, y.ttft_ms, y.latency_ms)
+            );
+        }
+        assert_eq!(a.stats.engine_steps, b.stats.engine_steps);
+        assert_eq!(a.stats.sim_ms, b.stats.sim_ms);
+        assert_eq!(a.stats.latency_ms, b.stats.latency_ms);
+    }
+
+    #[test]
+    fn schedule_validation_rejects_bad_shapes() {
+        let requests = reqs(&[1, 1]);
+        let mut be = MockBackend::new(1, 16, false);
+        // wrong arrival count
+        let s = Schedule::open(vec![0.0], 1.0, 1.0);
+        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
+                         Some(&s)).is_err());
+        // gated request that nothing releases
+        let s = Schedule {
+            arrivals: vec![0.0, f64::INFINITY],
+            release: vec![None, None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
+                         Some(&s)).is_err());
+        // double release
+        let s = Schedule {
+            arrivals: vec![0.0, 0.0, f64::INFINITY],
+            release: vec![Some((2, 0.0)), Some((2, 0.0)), None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        assert!(run_loop(&mut be, &reqs(&[1, 1, 1]),
+                         &DecodeParams::default(), Some(&s)).is_err());
+        // -inf arrival: would be admitted immediately AND re-queued
+        // by its release (decoded twice) — must be rejected
+        let s = Schedule {
+            arrivals: vec![0.0, f64::NEG_INFINITY],
+            release: vec![Some((1, 5.0)), None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
+                         Some(&s)).is_err());
+        // NaN arrival rejected too (the sort itself is total_cmp and
+        // cannot panic first — see clock::tests::arrival_sort_is_nan_safe)
+        let s = Schedule::open(vec![0.0, f64::NAN], 1.0, 1.0);
+        assert!(run_loop(&mut be, &requests, &DecodeParams::default(),
+                         Some(&s)).is_err());
+    }
+
+    #[test]
+    fn bad_deadline_rejected_up_front() {
+        let mut be = MockBackend::new(1, 16, false);
+        let requests = reqs(&[1]);
+        for d in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let adm = QueueDeadline(d);
+            assert!(run_loop_with(&mut be, &requests,
+                                  &DecodeParams::default(), None,
+                                  &Fifo, &adm)
+                        .is_err(),
+                    "deadline {d} should be rejected");
+        }
+    }
+
+    #[test]
+    fn shortest_prompt_first_reorders_queue() {
+        // one slot, simultaneous arrivals with prompt lengths 5/3/4:
+        // service order must be 1, 2, 0 (FIFO would be 0, 1, 2)
+        let requests = vec![
+            DecodeRequest::new(0, vec![1, 2, 3, 4, 5], 2),
+            DecodeRequest::new(1, vec![1, 2, 3], 2),
+            DecodeRequest::new(2, vec![1, 2, 3, 4], 2),
+        ];
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &ShortestPromptFirst,
+                                  &admission::Unbounded);
+        let lat: Vec<f64> =
+            report.results.iter().map(|r| r.latency_ms).collect();
+        assert_eq!(lat, vec![6.0, 2.0, 4.0]);
+        // reordering changes who waits, never what anyone decodes
+        for r in &report.results {
+            assert_eq!(r.tokens, vec![5, 5]);
+        }
+    }
+
+    #[test]
+    fn smallest_budget_first_reorders_queue() {
+        // budgets 5/1/2 through one slot: service order 1, 2, 0
+        let requests = reqs(&[5, 1, 2]);
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &SmallestBudgetFirst,
+                                  &admission::Unbounded);
+        let lat: Vec<f64> =
+            report.results.iter().map(|r| r.latency_ms).collect();
+        assert_eq!(lat, vec![8.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn smallest_budget_first_completes_zero_budget_first() {
+        let requests = vec![
+            DecodeRequest::new(0, vec![1, 2], 3),
+            DecodeRequest::new(1, vec![1, 2], 0),
+        ];
+        let s = sched(&[0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &SmallestBudgetFirst,
+                                  &admission::Unbounded);
+        assert_eq!(report.results[1].latency_ms, 0.0);
+        assert!(report.results[1].outcome.is_completed());
+        assert_eq!(report.results[0].latency_ms, 3.0);
+    }
+
+    #[test]
+    fn priority_class_jumps_the_queue() {
+        // priorities 0/0/7 through one slot: request 2 is served
+        // first, then FIFO among the zeros
+        let requests: Vec<DecodeRequest> = reqs(&[2, 2, 2])
+            .into_iter()
+            .map(|r| {
+                let p = if r.id == 2 { 7 } else { 0 };
+                r.with_priority(p)
+            })
+            .collect();
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &PriorityClass,
+                                  &admission::Unbounded);
+        let lat: Vec<f64> =
+            report.results.iter().map(|r| r.latency_ms).collect();
+        assert_eq!(lat, vec![4.0, 6.0, 2.0]);
+    }
+
+    #[test]
+    fn max_queue_sheds_on_arrival_with_pinned_telemetry() {
+        // one slot, depth cap 1: request 0 seats, request 1 waits,
+        // request 2 is shed the instant it arrives
+        let requests = reqs(&[2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &MaxQueueDepth(1));
+        let r = &report.results;
+        assert_eq!(r[0].latency_ms, 2.0);
+        assert!(r[0].outcome.is_completed());
+        assert_eq!(r[1].queue_ms, 2.0);
+        assert_eq!(r[1].latency_ms, 4.0);
+        assert_eq!(r[2].outcome, RequestOutcome::Shed);
+        assert!(r[2].tokens.is_empty());
+        assert_eq!(r[2].latency_ms, 0.0);
+        assert_eq!(r[2].decode_steps, 0);
+        let st = &report.stats;
+        assert_eq!((st.completed, st.shed, st.expired), (2, 1, 0));
+        assert!((st.shed_rate - 1.0 / 3.0).abs() < 1e-12);
+        // percentiles cover completed requests only
+        assert_eq!(st.latency_ms.n, 2);
+        assert_eq!(st.latency_ms.min, 2.0);
+        assert_eq!(st.sim_ms, 4.0);
+    }
+
+    #[test]
+    fn depth_zero_sheds_all_waiters_but_seats_free_slots() {
+        // a cold server with a free slot must never shed the request
+        // that would seat immediately
+        let requests = reqs(&[2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &MaxQueueDepth(0));
+        let st = &report.stats;
+        assert_eq!((st.completed, st.shed), (1, 2));
+        assert!(report.results[0].outcome.is_completed());
+    }
+
+    #[test]
+    fn queue_deadline_expires_waiters_at_their_deadline() {
+        // one slot, 3ms deadline: request 2 would wait 4ms, so it
+        // expires — reported at the instant the caller gave up
+        // (arrival + 3ms), not at lazy-discovery time
+        let requests = reqs(&[2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &QueueDeadline(3.0));
+        let r = &report.results;
+        assert_eq!(r[0].latency_ms, 2.0);
+        // request 1 seats at exactly its 2ms wait (< deadline)
+        assert_eq!(r[1].queue_ms, 2.0);
+        assert_eq!(r[1].latency_ms, 4.0);
+        assert_eq!(r[2].outcome, RequestOutcome::Expired);
+        assert_eq!(r[2].queue_ms, 3.0);
+        assert_eq!(r[2].latency_ms, 3.0);
+        assert!(r[2].tokens.is_empty());
+        let st = &report.stats;
+        assert_eq!((st.completed, st.shed, st.expired), (2, 0, 1));
+        assert_eq!(st.sim_ms, 4.0);
+    }
+
+    #[test]
+    fn deadline_exactly_met_still_seats() {
+        // expiry is strict (> deadline): a request picked at exactly
+        // its deadline wait still decodes
+        let requests = reqs(&[2, 2]);
+        let s = sched(&[0.0, 0.0], 1.0);
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &QueueDeadline(2.0));
+        assert!(report.results[1].outcome.is_completed());
+        assert_eq!(report.results[1].queue_ms, 2.0);
+    }
+
+    #[test]
+    fn backdated_release_keeps_arrival_order() {
+        // an expiry discovered late releases its successor with a
+        // back-dated arrival (predecessor arrival + deadline +
+        // think); the successor must queue AHEAD of ready requests
+        // that arrived after that instant, preserving FIFO-by-arrival
+        let requests = reqs(&[5, 1, 1, 1]);
+        let s = Schedule {
+            arrivals: vec![0.0, 0.0, f64::INFINITY, 3.5],
+            release: vec![None, Some((2, 0.0)), None, None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &QueueDeadline(3.0));
+        let r = &report.results;
+        assert!(r[0].outcome.is_completed());
+        assert_eq!(r[0].latency_ms, 5.0);
+        // request 1 waited past the 3ms deadline (slot busy to t=5)
+        assert_eq!(r[1].outcome, RequestOutcome::Expired);
+        assert_eq!(r[1].queue_ms, 3.0);
+        // successor released at 0 + 3 + 0 = 3, BEFORE request 3's
+        // 3.5ms arrival — despite being discovered after request 3
+        // was already admitted, it is served first
+        assert_eq!(r[2].arrival_ms, 3.0);
+        assert!(r[2].outcome.is_completed());
+        assert_eq!(r[2].queue_ms, 2.0);
+        assert_eq!(r[2].latency_ms, 3.0);
+        assert_eq!(r[3].queue_ms, 2.5);
+        assert_eq!(r[3].latency_ms, 3.5);
+        assert_eq!(report.stats.sim_ms, 7.0);
+    }
+
+    #[test]
+    fn shed_and_expired_release_closed_loop_successors() {
+        // depth 0 on one slot: request 1 is shed at t=0, yet its
+        // closed-loop successor (request 2) must still be released —
+        // the simulated client retries after a failure
+        let requests = reqs(&[2, 2, 2]);
+        let s = Schedule {
+            arrivals: vec![0.0, 0.0, f64::INFINITY],
+            release: vec![None, Some((2, 1.0)), None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &MaxQueueDepth(0));
+        let r = &report.results;
+        assert!(r[0].outcome.is_completed());
+        assert_eq!(r[1].outcome, RequestOutcome::Shed);
+        // released at shed(0) + think(1) = 1, slot busy until 2 →
+        // request 2 is itself shed on arrival (depth 0, no free slot)
+        assert_eq!(r[2].arrival_ms, 1.0);
+        assert_eq!(r[2].outcome, RequestOutcome::Shed);
+        // no deadlock: all three requests accounted for
+        assert_eq!(report.stats.requests, 3);
+        assert_eq!(report.stats.completed + report.stats.shed, 3);
+    }
+
+    #[test]
+    fn shed_release_is_backdated_to_the_arrival_instant() {
+        // a request arriving between step boundaries is shed AT its
+        // arrival (its telemetry says latency 0); its closed-loop
+        // successor is released from that instant too, not from the
+        // step-boundary where the loop discovered the arrival
+        let requests = reqs(&[3, 1, 1]);
+        let s = Schedule {
+            arrivals: vec![0.0, 0.5, f64::INFINITY],
+            release: vec![None, Some((2, 0.0)), None],
+            step_ms: 1.0,
+            prefill_ms: 1.0,
+        };
+        let report = run_policies(&requests, &s, &Fifo,
+                                  &MaxQueueDepth(0));
+        let r = &report.results;
+        assert_eq!(r[1].outcome, RequestOutcome::Shed);
+        assert_eq!(r[1].arrival_ms, 0.5);
+        // released at 0.5 + 0 think — not at the 1.0 discovery step
+        assert_eq!(r[2].arrival_ms, 0.5);
+        assert_eq!(r[2].outcome, RequestOutcome::Shed);
+    }
+
+    #[test]
+    fn bounded_queue_caps_p95_under_overload() {
+        // the acceptance shape: past saturation, bounding the queue
+        // trades a nonzero shed rate for a bounded tail latency
+        let requests = reqs(&[3, 3, 3, 3, 3, 3]);
+        let s = sched(&[0.0; 6], 1.0);
+        let unbounded = run_policies(&requests, &s, &Fifo,
+                                     &admission::Unbounded);
+        let bounded = run_policies(&requests, &s, &Fifo,
+                                   &MaxQueueDepth(1));
+        assert_eq!(unbounded.stats.shed_rate, 0.0);
+        assert!(bounded.stats.shed_rate > 0.0);
+        assert!(bounded.stats.latency_ms.p95
+                    < unbounded.stats.latency_ms.p95,
+                "bounded p95 {} !< unbounded p95 {}",
+                bounded.stats.latency_ms.p95,
+                unbounded.stats.latency_ms.p95);
+        // pinned: completed latencies 3, 6 vs 3, 6, 9, 12, 15, 18
+        assert_eq!(bounded.stats.completed, 2);
+        assert_eq!(bounded.stats.latency_ms.max, 6.0);
+        assert_eq!(unbounded.stats.latency_ms.max, 18.0);
+    }
+
+    #[test]
+    fn every_scheduler_and_admission_combination_is_sound() {
+        // 4 schedulers x 4 admission policies over an oversubscribed
+        // timed trace: every combination must terminate, account for
+        // every request exactly once, produce only budget-shaped
+        // outputs, and be deterministic run-to-run
+        let requests: Vec<DecodeRequest> = (0..10)
+            .map(|i| {
+                DecodeRequest::new(
+                    i as u64,
+                    vec![1; 2 + (i % 4)],
+                    1 + (i % 4),
+                )
+                .with_priority((i % 3) as u8)
+            })
+            .collect();
+        let s = sched(&[0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 9.0,
+                        9.0], 1.0);
+        let schedulers: Vec<Box<dyn Scheduler>> =
+            vec![Box::new(Fifo), Box::new(ShortestPromptFirst),
+                 Box::new(SmallestBudgetFirst),
+                 Box::new(PriorityClass)];
+        let admissions: Vec<Box<dyn AdmissionPolicy>> =
+            vec![Box::new(admission::Unbounded),
+                 Box::new(MaxQueueDepth(2)),
+                 Box::new(QueueDeadline(2.5)),
+                 Box::new(Bounded { max_queue: 2,
+                                    deadline_ms: 2.5 })];
+        for sch in &schedulers {
+            for adm in &admissions {
+                let run = || {
+                    let mut be = MockBackend::new(2, 16, false);
+                    run_loop_with(&mut be, &requests,
+                                  &DecodeParams::default(), Some(&s),
+                                  sch.as_ref(), adm.as_ref())
+                        .unwrap()
+                };
+                let label =
+                    format!("{}/{}", sch.name(), adm.name());
+                let (a, b) = (run(), run());
+                let st = &a.stats;
+                assert_eq!(a.results.len(), 10, "{label}");
+                assert_eq!(st.completed + st.shed + st.expired, 10,
+                           "{label}");
+                for (i, r) in a.results.iter().enumerate() {
+                    assert_eq!(r.id, i as u64, "{label}");
+                    match r.outcome {
+                        RequestOutcome::Completed => assert_eq!(
+                            r.tokens.len(),
+                            requests[i].max_new_tokens, "{label}"),
+                        _ => assert!(r.tokens.is_empty(), "{label}"),
+                    }
+                }
+                if adm.name() == "unbounded" {
+                    assert_eq!(st.shed_rate, 0.0, "{label}");
+                    assert_eq!(st.completed, 10, "{label}");
+                }
+                // determinism across runs, policies included
+                assert_eq!(a.results.len(), b.results.len());
+                for (x, y) in a.results.iter().zip(&b.results) {
+                    assert_eq!(x.tokens, y.tokens, "{label}");
+                    assert_eq!(
+                        (x.queue_ms, x.latency_ms, x.outcome),
+                        (y.queue_ms, y.latency_ms, y.outcome),
+                        "{label}"
+                    );
+                }
+                assert_eq!(a.stats.sim_ms, b.stats.sim_ms, "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_fifo_unbounded_is_bit_identical_to_default() {
+        // the tentpole invariant at the mock level: threading the
+        // default policies through run_loop_with changes nothing
+        let requests = reqs(&[3, 1, 4, 2, 2, 3, 1]);
+        let s = sched(&[0.0, 0.5, 0.5, 2.0, 2.25, 7.0, 7.0], 0.75);
+        let mut be_a = MockBackend::new(2, 16, false);
+        let a = run_loop(&mut be_a, &requests,
+                         &DecodeParams::default(), Some(&s)).unwrap();
+        let mut be_b = MockBackend::new(2, 16, false);
+        let b = run_loop_with(&mut be_b, &requests,
+                              &DecodeParams::default(), Some(&s),
+                              &policy::Fifo, &admission::Unbounded)
+            .unwrap();
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(
+                (x.arrival_ms, x.queue_ms, x.ttft_ms, x.latency_ms,
+                 x.queue_steps, x.decode_steps),
+                (y.arrival_ms, y.queue_ms, y.ttft_ms, y.latency_ms,
+                 y.queue_steps, y.decode_steps)
+            );
+        }
+        assert_eq!(a.stats.engine_steps, b.stats.engine_steps);
+        assert_eq!(a.stats.slot_steps, b.stats.slot_steps);
+        assert_eq!(a.stats.sim_ms, b.stats.sim_ms);
+        assert_eq!(a.stats.latency_ms, b.stats.latency_ms);
+        assert_eq!(a.stats.queue_ms, b.stats.queue_ms);
+        assert_eq!(a.stats.ttft_ms, b.stats.ttft_ms);
+    }
+}

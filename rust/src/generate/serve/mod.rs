@@ -1,0 +1,92 @@
+//! The scheduler-driven serving core: continuous slot-refill batching
+//! over the fixed decode geometry, with pluggable queue policies and
+//! admission control.
+//!
+//! This tree is the split of the old `generate::batching` monolith
+//! (which remains as a re-export shim). The two decisions that used to
+//! be hard-coded into the loop are now traits:
+//!
+//!  * [`self::core`] — the backend-agnostic slot-refill state machine
+//!    (`run_loop_with`) plus the public entry points ([`serve`],
+//!    [`serve_kv`], [`serve_timed`], [`serve_with`]). The model
+//!    behind the loop is a
+//!    `LogitsBackend`: the literal-resident engine path, the
+//!    KV-resident incremental path, or a deterministic test mock.
+//!  * [`policy`] — the [`policy::Scheduler`] trait: which queued
+//!    request fills a freed slot. FIFO (the old behavior, the
+//!    default), shortest-prompt-first, smallest-budget-first, and a
+//!    priority-class policy fed by [`DecodeRequest::priority`].
+//!  * [`admission`] — the [`admission::AdmissionPolicy`] trait:
+//!    whether an arriving request is enqueued, shed at arrival
+//!    (bounded queue depth), or expired after waiting too long on the
+//!    (virtual) clock. Unbounded admission — the old behavior — is
+//!    the default.
+//!  * [`clock`] — the loop's notion of time ([`clock::Schedule`],
+//!    the virtual/wall `Clock`, the arrival queue).
+//!  * [`telemetry`] — per-request results with a
+//!    [`telemetry::RequestOutcome`] (completed / shed / expired),
+//!    aggregate [`telemetry::ServeStats`] including shed-rate and
+//!    goodput, and their JSON emitters (on the shared
+//!    `util::json::push_num` helpers).
+//!
+//! Invariant: FIFO scheduling + unbounded admission reproduces the
+//! pre-split `batching` behavior bit-for-bit — token streams and
+//! telemetry alike — on both engine paths (pinned by the unit tests in
+//! [`self::core`] and the integration suite).
+
+pub mod admission;
+pub mod clock;
+pub mod core;
+pub mod policy;
+pub mod telemetry;
+
+pub use self::admission::AdmissionPolicy;
+pub use self::clock::Schedule;
+pub use self::core::{serve, serve_kv, serve_timed, serve_with,
+                     ServeConfig};
+pub use self::policy::Scheduler;
+pub use self::telemetry::{RequestOutcome, RequestResult, ServeReport,
+                          ServeStats};
+
+/// One queued decode request.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    /// Caller-chosen id, echoed in the result (results are returned
+    /// sorted by id).
+    pub id: u64,
+    /// Prompt token ids (unpadded, non-empty).
+    pub prompt: Vec<u32>,
+    /// Per-request generation budget.
+    pub max_new_tokens: usize,
+    /// Priority class for [`policy::PriorityClass`] scheduling:
+    /// higher values are served first, FIFO within a class. Ignored
+    /// by every other scheduler; 0 by default.
+    pub priority: u8,
+}
+
+impl DecodeRequest {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize)
+               -> DecodeRequest {
+        DecodeRequest { id, prompt, max_new_tokens, priority: 0 }
+    }
+
+    /// Builder-style priority-class assignment.
+    pub fn with_priority(mut self, priority: u8) -> DecodeRequest {
+        self.priority = priority;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_priority_defaults_to_zero() {
+        let r = DecodeRequest::new(3, vec![1, 2], 8);
+        assert_eq!(r.priority, 0);
+        let r = r.with_priority(5);
+        assert_eq!(r.priority, 5);
+        assert_eq!((r.id, r.max_new_tokens), (3, 8));
+    }
+}

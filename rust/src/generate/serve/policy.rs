@@ -1,0 +1,177 @@
+//! Scheduling policy: which queued request fills a freed batch slot.
+//!
+//! The serve loop hands the scheduler the **ready set** — the indices
+//! of admitted requests that have arrived and are waiting — ordered by
+//! (arrival, request index). The scheduler picks one; everything else
+//! about the loop (slot rewriting, EOS edges, telemetry) is identical
+//! across policies, so policy choice can change *which* request waits
+//! but never *what* any request decodes (integration-tested).
+//!
+//! [`Fifo`] is the default and reproduces the pre-split behavior
+//! bit-for-bit. [`ShortestPromptFirst`] / [`SmallestBudgetFirst`] are
+//! the classic shortest-job heuristics for the two cost axes a decode
+//! request has (prefill cost ∝ prompt length, slot occupancy ∝
+//! budget). [`PriorityClass`] serves higher
+//! [`super::DecodeRequest::priority`] classes first, FIFO within a
+//! class.
+
+use super::DecodeRequest;
+
+/// Pick which ready request fills the next free slot.
+pub trait Scheduler {
+    /// Flag/report name ("fifo", "shortest-prompt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Index *within `ready`* of the request to seat next. `ready` is
+    /// non-empty and ordered by (arrival, request index); entries are
+    /// indices into `requests`. Must return a value `< ready.len()`.
+    fn pick(&self, ready: &[usize], requests: &[DecodeRequest])
+            -> usize;
+}
+
+/// First come, first served — the pre-split behavior.
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&self, _ready: &[usize], _requests: &[DecodeRequest])
+            -> usize {
+        0
+    }
+}
+
+/// Seat the shortest prompt first (cheapest prefill; FIFO ties).
+pub struct ShortestPromptFirst;
+
+impl Scheduler for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "shortest-prompt"
+    }
+
+    fn pick(&self, ready: &[usize], requests: &[DecodeRequest])
+            -> usize {
+        argbest(ready, |i| requests[i].prompt.len() as u64)
+    }
+}
+
+/// Seat the smallest generation budget first (frees its slot soonest;
+/// FIFO ties).
+pub struct SmallestBudgetFirst;
+
+impl Scheduler for SmallestBudgetFirst {
+    fn name(&self) -> &'static str {
+        "smallest-budget"
+    }
+
+    fn pick(&self, ready: &[usize], requests: &[DecodeRequest])
+            -> usize {
+        argbest(ready, |i| requests[i].max_new_tokens as u64)
+    }
+}
+
+/// Serve the highest [`DecodeRequest::priority`] class first, FIFO
+/// within a class (priority 255 beats 0; requests default to 0).
+pub struct PriorityClass;
+
+impl Scheduler for PriorityClass {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn pick(&self, ready: &[usize], requests: &[DecodeRequest])
+            -> usize {
+        // minimize the inverted priority → stable argmin keeps FIFO
+        // order within a class
+        argbest(ready, |i| u64::from(u8::MAX - requests[i].priority))
+    }
+}
+
+/// Stable argmin of `key` over the ready set: the first (i.e. FIFO-
+/// earliest) entry with the smallest key.
+fn argbest(ready: &[usize], key: impl Fn(usize) -> u64) -> usize {
+    let mut best = 0;
+    let mut best_key = key(ready[0]);
+    for (k, &i) in ready.iter().enumerate().skip(1) {
+        let ki = key(i);
+        if ki < best_key {
+            best = k;
+            best_key = ki;
+        }
+    }
+    best
+}
+
+/// Parse the `--policy` flag.
+pub fn parse(name: &str) -> anyhow::Result<Box<dyn Scheduler>> {
+    match name {
+        "fifo" => Ok(Box::new(Fifo)),
+        "shortest-prompt" => Ok(Box::new(ShortestPromptFirst)),
+        "smallest-budget" => Ok(Box::new(SmallestBudgetFirst)),
+        "priority" => Ok(Box::new(PriorityClass)),
+        other => anyhow::bail!(
+            "unknown --policy {other} (want fifo | shortest-prompt | \
+             smallest-budget | priority)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs() -> Vec<DecodeRequest> {
+        vec![
+            DecodeRequest::new(0, vec![1, 2, 3, 4], 8),
+            DecodeRequest::new(1, vec![1, 2], 16).with_priority(1),
+            DecodeRequest::new(2, vec![1, 2, 3], 4).with_priority(3),
+            DecodeRequest::new(3, vec![1, 2], 4).with_priority(3),
+        ]
+    }
+
+    #[test]
+    fn fifo_always_picks_the_head() {
+        let r = reqs();
+        assert_eq!(Fifo.pick(&[2, 0, 1], &r), 0);
+        assert_eq!(Fifo.name(), "fifo");
+    }
+
+    #[test]
+    fn shortest_prompt_picks_min_len_with_fifo_ties() {
+        let r = reqs();
+        // prompts: 0→4 tokens, 1→2, 2→3, 3→2
+        assert_eq!(ShortestPromptFirst.pick(&[0, 2, 1], &r), 2);
+        // tie between 1 and 3 (both len 2): earlier position wins
+        assert_eq!(ShortestPromptFirst.pick(&[3, 1, 0], &r), 0);
+        assert_eq!(ShortestPromptFirst.pick(&[0], &r), 0);
+    }
+
+    #[test]
+    fn smallest_budget_picks_min_budget_with_fifo_ties() {
+        let r = reqs();
+        // budgets: 0→8, 1→16, 2→4, 3→4
+        assert_eq!(SmallestBudgetFirst.pick(&[1, 0, 2], &r), 2);
+        assert_eq!(SmallestBudgetFirst.pick(&[2, 3], &r), 0);
+    }
+
+    #[test]
+    fn priority_picks_highest_class_with_fifo_ties() {
+        let r = reqs();
+        // priorities: 0→0, 1→1, 2→3, 3→3
+        assert_eq!(PriorityClass.pick(&[0, 1, 2], &r), 2);
+        // 2 and 3 tie at priority 3: earlier position wins
+        assert_eq!(PriorityClass.pick(&[3, 2, 1], &r), 0);
+        assert_eq!(PriorityClass.pick(&[0, 1], &r), 1);
+    }
+
+    #[test]
+    fn parse_resolves_names_and_rejects_unknown() {
+        for name in ["fifo", "shortest-prompt", "smallest-budget",
+                     "priority"] {
+            assert_eq!(parse(name).unwrap().name(), name);
+        }
+        assert!(parse("lifo").is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! Per-request and aggregate serving telemetry, with one JSON style
+//! (the shared `util::json::push_num` helpers) across
+//! [`RequestResult`], [`ServeStats`] and `util::stats::Summary`.
+
+use crate::util::json::Json;
+use crate::util::stats::{summarize, Summary};
+
+/// How a request left the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Decoded to completion (EOS / budget / context cap).
+    Completed,
+    /// Rejected at arrival by the admission policy (bounded queue).
+    Shed,
+    /// Admitted but abandoned after waiting past the queue deadline.
+    Expired,
+}
+
+impl RequestOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestOutcome::Completed => "completed",
+            RequestOutcome::Shed => "shed",
+            RequestOutcome::Expired => "expired",
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self, RequestOutcome::Completed)
+    }
+}
+
+/// The decoded continuation plus per-request serving telemetry. All
+/// `*_ms` fields are wall-clock on the untimed `serve`/`serve_kv` path
+/// and virtual-clock under a `serve_timed` schedule.
+///
+/// Shed requests carry no tokens and zero `queue_ms`/`latency_ms`
+/// (they are rejected at arrival); expired requests report the queue
+/// deadline as their wait — the instant the caller gave up.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    /// Generated tokens (without the prompt, without EOS).
+    pub tokens: Vec<u32>,
+    /// Engine steps spent queued before a slot freed up.
+    pub queue_steps: u64,
+    /// Engine steps the request occupied a slot.
+    pub decode_steps: u64,
+    /// When the request became visible to the server (0.0 when the
+    /// whole stream is present at entry).
+    pub arrival_ms: f64,
+    /// Arrival → slot entry (queue wait).
+    pub queue_ms: f64,
+    /// Arrival → first generated token; equals `latency_ms` for
+    /// requests that produce none (zero budget / immediate EOS).
+    pub ttft_ms: f64,
+    /// Arrival → completion — what a caller would observe.
+    pub latency_ms: f64,
+    /// Completed / shed / expired.
+    pub outcome: RequestOutcome,
+}
+
+impl RequestResult {
+    /// JSON form (per-request dumps and tests).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push_num("id", self.id)
+            .push_num("tokens", self.tokens.len())
+            .push_num("queue_steps", self.queue_steps)
+            .push_num("decode_steps", self.decode_steps)
+            .push_num("arrival_ms", self.arrival_ms)
+            .push_num("queue_ms", self.queue_ms)
+            .push_num("ttft_ms", self.ttft_ms)
+            .push_num("latency_ms", self.latency_ms)
+            .push_str("outcome", self.outcome.as_str());
+        j
+    }
+}
+
+/// Aggregate serving statistics for one serve call. The latency
+/// summaries (`queue_ms` / `ttft_ms` / `latency_ms`) cover **completed
+/// requests only** — shed and expired requests would otherwise drag
+/// the percentiles toward their failure constants; they are counted in
+/// `shed` / `expired` / `shed_rate` instead.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    /// Requests decoded to completion.
+    pub completed: usize,
+    /// Requests rejected at arrival by the admission policy.
+    pub shed: usize,
+    /// Requests that waited past the queue deadline.
+    pub expired: usize,
+    /// `(shed + expired) / requests` — 0.0 under unbounded admission.
+    pub shed_rate: f64,
+    pub decode_batch: usize,
+    /// Model steps executed.
+    pub engine_steps: u64,
+    /// KV cache-population runs (0 on the literal-resident path). A
+    /// prefill fires once per engine step in which at least one slot
+    /// was (re)filled, not per request.
+    pub prefill_steps: u64,
+    /// Occupied slot-steps (out of `engine_steps * decode_batch`).
+    pub slot_steps: u64,
+    /// `slot_steps / (engine_steps * decode_batch)` — 1.0 means no
+    /// slot ever idled.
+    pub occupancy: f64,
+    pub generated_tokens: u64,
+    /// Real host time spent, always wall-clock (the virtual schedule
+    /// does not change how long the model actually runs).
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    /// Tokens delivered to **completed** requests per wall second.
+    /// Today this always equals `tokens_per_sec`: shed/expired
+    /// requests fail before ever occupying a slot, so every generated
+    /// token belongs to a completed request. It is kept as a distinct
+    /// named datapoint (and gate) so the contract survives a future
+    /// where partially decoded work can be cancelled mid-slot.
+    pub goodput_tokens_per_sec: f64,
+    pub mean_step_ms: f64,
+    /// Clock reading when the last request completed: wall ms on the
+    /// untimed path, virtual ms under a `Schedule`.
+    pub sim_ms: f64,
+    /// Per-request queue wait (arrival → slot entry), completed only.
+    pub queue_ms: Summary,
+    /// Per-request time-to-first-token, completed only.
+    pub ttft_ms: Summary,
+    /// Per-request end-to-end latency (p50/p95/p99), completed only.
+    pub latency_ms: Summary,
+}
+
+impl ServeStats {
+    /// Fold a finished result set into the aggregate block. `results`
+    /// need not be sorted; `requests` is the offered count (every
+    /// request lands in exactly one outcome bucket).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_results(
+        results: &[RequestResult],
+        requests: usize,
+        decode_batch: usize,
+        engine_steps: u64,
+        prefill_steps: u64,
+        slot_steps: u64,
+        wall_secs: f64,
+        sim_ms: f64,
+    ) -> ServeStats {
+        let completed =
+            results.iter().filter(|r| r.outcome.is_completed()).count();
+        let shed = results.iter()
+            .filter(|r| r.outcome == RequestOutcome::Shed).count();
+        let expired = results.iter()
+            .filter(|r| r.outcome == RequestOutcome::Expired).count();
+        let generated_tokens: u64 =
+            results.iter().map(|r| r.tokens.len() as u64).sum();
+        // failures never reach a slot, so completed-request tokens ==
+        // generated tokens (debug-checked); goodput derives from the
+        // same sum rather than a vacuous re-filter
+        debug_assert_eq!(
+            generated_tokens,
+            results.iter()
+                .filter(|r| r.outcome.is_completed())
+                .map(|r| r.tokens.len() as u64)
+                .sum::<u64>()
+        );
+        let collect = |f: fn(&RequestResult) -> f64| -> Summary {
+            summarize(&results.iter()
+                .filter(|r| r.outcome.is_completed())
+                .map(f)
+                .collect::<Vec<f64>>())
+        };
+        let per_sec = |tokens: u64| {
+            if wall_secs > 0.0 {
+                tokens as f64 / wall_secs
+            } else {
+                0.0
+            }
+        };
+        ServeStats {
+            requests,
+            completed,
+            shed,
+            expired,
+            shed_rate: if requests == 0 {
+                0.0
+            } else {
+                (shed + expired) as f64 / requests as f64
+            },
+            decode_batch,
+            engine_steps,
+            prefill_steps,
+            slot_steps,
+            occupancy: if engine_steps == 0 {
+                0.0
+            } else {
+                slot_steps as f64
+                    / (engine_steps * decode_batch as u64) as f64
+            },
+            generated_tokens,
+            wall_secs,
+            tokens_per_sec: per_sec(generated_tokens),
+            goodput_tokens_per_sec: per_sec(generated_tokens),
+            mean_step_ms: if engine_steps == 0 {
+                0.0
+            } else {
+                wall_secs * 1e3 / engine_steps as f64
+            },
+            sim_ms,
+            queue_ms: collect(|r| r.queue_ms),
+            ttft_ms: collect(|r| r.ttft_ms),
+            latency_ms: collect(|r| r.latency_ms),
+        }
+    }
+
+    /// JSON form for `BENCH_decode.json`, `BENCH_serve_load.json` and
+    /// `spdf serve --stats-json`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.push_num("requests", self.requests)
+            .push_num("completed", self.completed)
+            .push_num("shed", self.shed)
+            .push_num("expired", self.expired)
+            .push_num("shed_rate", self.shed_rate)
+            .push_num("decode_batch", self.decode_batch)
+            .push_num("engine_steps", self.engine_steps)
+            .push_num("prefill_steps", self.prefill_steps)
+            .push_num("slot_steps", self.slot_steps)
+            .push_num("occupancy", self.occupancy)
+            .push_num("generated_tokens", self.generated_tokens)
+            .push_num("wall_secs", self.wall_secs)
+            .push_num("tokens_per_sec", self.tokens_per_sec)
+            .push_num("goodput_tokens_per_sec",
+                      self.goodput_tokens_per_sec)
+            .push_num("mean_step_ms", self.mean_step_ms)
+            .push_num("sim_ms", self.sim_ms)
+            .push("queue_ms", self.queue_ms.to_json())
+            .push("ttft_ms", self.ttft_ms.to_json())
+            .push("latency_ms", self.latency_ms.to_json());
+        j
+    }
+}
+
+/// Results (sorted by request id) + aggregate stats.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub results: Vec<RequestResult>,
+    pub stats: ServeStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(id: u64, tokens: usize, latency: f64,
+              outcome: RequestOutcome) -> RequestResult {
+        RequestResult {
+            id,
+            tokens: vec![5; tokens],
+            queue_steps: 0,
+            decode_steps: tokens as u64,
+            arrival_ms: 0.0,
+            queue_ms: 0.0,
+            ttft_ms: latency,
+            latency_ms: latency,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn from_results_buckets_outcomes_and_skips_failed_latencies() {
+        let results = vec![
+            result(0, 4, 10.0, RequestOutcome::Completed),
+            result(1, 4, 30.0, RequestOutcome::Completed),
+            result(2, 0, 0.0, RequestOutcome::Shed),
+            result(3, 0, 5.0, RequestOutcome::Expired),
+        ];
+        let st = ServeStats::from_results(&results, 4, 2, 8, 0, 14,
+                                          0.5, 40.0);
+        assert_eq!((st.completed, st.shed, st.expired), (2, 1, 1));
+        assert_eq!(st.shed_rate, 0.5);
+        assert_eq!(st.generated_tokens, 8);
+        assert_eq!(st.tokens_per_sec, 16.0);
+        assert_eq!(st.goodput_tokens_per_sec, 16.0);
+        // percentiles over the two completed requests only: the shed
+        // request's 0.0 and the expired request's 5.0 must not appear
+        assert_eq!(st.latency_ms.n, 2);
+        assert_eq!(st.latency_ms.min, 10.0);
+        assert_eq!(st.latency_ms.p50, 20.0);
+        assert!((st.occupancy - 14.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_results_all_completed_matches_unbounded_invariants() {
+        let results = vec![
+            result(0, 3, 3.0, RequestOutcome::Completed),
+            result(1, 2, 5.0, RequestOutcome::Completed),
+        ];
+        let st = ServeStats::from_results(&results, 2, 2, 5, 0, 5,
+                                          0.25, 5.0);
+        assert_eq!(st.shed_rate, 0.0);
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.tokens_per_sec, st.goodput_tokens_per_sec);
+        assert_eq!(st.latency_ms.n, 2);
+    }
+
+    #[test]
+    fn stats_json_has_core_and_shed_fields() {
+        let results = vec![
+            result(0, 5, 200.0, RequestOutcome::Completed),
+            result(1, 5, 300.0, RequestOutcome::Completed),
+            result(2, 5, 450.0, RequestOutcome::Completed),
+            result(3, 0, 0.0, RequestOutcome::Shed),
+        ];
+        let st = ServeStats::from_results(&results, 4, 2, 10, 2, 17,
+                                          0.5, 500.0);
+        let j = st.to_json();
+        assert_eq!(j.get("tokens_per_sec").unwrap().as_f64(),
+                   Some(30.0));
+        assert_eq!(j.get("goodput_tokens_per_sec").unwrap().as_f64(),
+                   Some(30.0));
+        assert_eq!(j.get("engine_steps").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("prefill_steps").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("expired").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("shed_rate").unwrap().as_f64(), Some(0.25));
+        let lat = j.get("latency_ms").unwrap();
+        assert_eq!(lat.get("p50").unwrap().as_f64(), Some(300.0));
+    }
+
+    #[test]
+    fn request_result_json_carries_outcome() {
+        let r = result(7, 2, 12.5, RequestOutcome::Expired);
+        let j = r.to_json();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("outcome").unwrap().as_str(), Some("expired"));
+        assert_eq!(j.get("latency_ms").unwrap().as_f64(), Some(12.5));
+        assert_eq!(RequestOutcome::Completed.as_str(), "completed");
+        assert_eq!(RequestOutcome::Shed.as_str(), "shed");
+    }
+}

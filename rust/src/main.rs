@@ -21,7 +21,9 @@ use spdf::coordinator::{self, report, World, WorldConfig};
 use spdf::data::Task;
 use spdf::flops;
 use spdf::generate::loadgen::{self, Pattern, StepCosts};
-use spdf::generate::DecodeParams;
+use spdf::generate::serve::{admission, policy, AdmissionPolicy,
+                            Scheduler};
+use spdf::generate::{DecodeParams, ServeConfig};
 use spdf::runtime::Engine;
 use spdf::util::json::Json;
 use spdf::sparsity::MaskScheme;
@@ -438,8 +440,32 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         .flag("engine", "auto",
               "decode path: auto | kv | literal (auto = kv when the \
                manifest carries the incremental artifacts)")
+        .flag("policy", "fifo",
+              "queue scheduling: fifo | shortest-prompt | \
+               smallest-budget | priority")
+        .flag("priority-classes", "1",
+              "priority classes assigned round-robin over the request \
+               stream (for --policy priority; 1 = single class)")
+        .flag("max-queue", "0",
+              "shed arrivals beyond this queue depth (0 = unbounded)")
+        .flag("queue-deadline-ms", "0",
+              "expire requests queued longer than this many ms \
+               (0 = never)")
         .flag("stats-json", "", "write serving stats JSON to this path");
     let a = cli.parse(raw)?;
+    let scheduler = policy::parse(a.get("policy"))?;
+    let priority_classes = a.get_usize("priority-classes")?;
+    anyhow::ensure!((1..=255).contains(&priority_classes),
+                    "--priority-classes must be in 1..=255");
+    // the priority scheduler needs per-request classes; a serve
+    // stream has no natural source, so refuse the silent-FIFO no-op
+    anyhow::ensure!(
+        a.get("policy") != "priority" || priority_classes > 1,
+        "--policy priority needs --priority-classes > 1 (every \
+         request defaults to class 0, which degenerates to fifo)"
+    );
+    let admit = admission::from_flags(a.get_usize("max-queue")?,
+                                      a.get_f64("queue-deadline-ms")?)?;
     let engine_flag = a.get("engine");
     anyhow::ensure!(
         matches!(engine_flag, "auto" | "kv" | "literal"),
@@ -465,7 +491,10 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
             coordinator::prompt_tokens(
                 &world.tokenizer, &examples[i % examples.len()].input,
                 t),
-            max_new))
+            max_new)
+            // deterministic round-robin classes (higher = more
+            // urgent) so --policy priority has a feed on this path
+            .with_priority((i % priority_classes) as u8))
         .collect();
 
     let dp = DecodeParams {
@@ -478,13 +507,15 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         _ => decode.kv_available(),
     };
     let total = Timer::start();
-    let report = if use_kv {
-        decode.serve_kv(&requests, &dp)?
-    } else {
-        decode.serve(&requests, &dp)?
-    };
-    eprintln!("[spdf] served {} requests in {:.1}s ({} path)", n,
-              total.secs(), if use_kv { "kv" } else { "literal" });
+    let report = decode.serve_with(&requests, &dp, &ServeConfig {
+        use_kv,
+        schedule: None,
+        scheduler: scheduler.as_ref(),
+        admission: admit.as_ref(),
+    })?;
+    eprintln!("[spdf] served {} requests in {:.1}s ({} path, {}/{})",
+              n, total.secs(), if use_kv { "kv" } else { "literal" },
+              scheduler.name(), admit.name());
     println!("{}", report::serve_table(&report.stats,
                                        &report.results));
     match a.get("stats-json") {
@@ -516,6 +547,17 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                {0.25,0.5,0.75,0.9,1.1} x capacity)")
         .flag("prompt-lens", "4,12", "prompt body length range lo,hi")
         .flag("budgets", "8,32", "max-new-tokens range lo,hi")
+        .flag("priority-classes", "1",
+              "priority classes drawn per request (for --policy \
+               priority; 1 = single class)")
+        .flag("policy", "fifo",
+              "queue scheduling: fifo | shortest-prompt | \
+               smallest-budget | priority")
+        .flag("max-queue", "0",
+              "shed arrivals beyond this queue depth (0 = unbounded)")
+        .flag("queue-deadline-ms", "0",
+              "expire requests queued longer than this many virtual \
+               ms (0 = never)")
         .flag("engine", "auto",
               "decode path: auto (= both when the manifest carries \
                the KV artifacts) | both | kv | literal")
@@ -548,6 +590,19 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
     };
     let prompt_lens = range("prompt-lens")?;
     let budgets = range("budgets")?;
+    let priority_classes = a.get_usize("priority-classes")?;
+    anyhow::ensure!((1..=255).contains(&priority_classes),
+                    "--priority-classes must be in 1..=255");
+    let scheduler = policy::parse(a.get("policy"))?;
+    // refuse the silent no-op: with a single class every request is
+    // priority 0 and the priority scheduler degenerates to fifo
+    anyhow::ensure!(
+        a.get("policy") != "priority" || priority_classes > 1,
+        "--policy priority needs --priority-classes > 1 (every \
+         request defaults to class 0, which degenerates to fifo)"
+    );
+    let admit = admission::from_flags(a.get_usize("max-queue")?,
+                                      a.get_f64("queue-deadline-ms")?)?;
 
     let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
     let (runtime, params) = decode_runtime_and_params(
@@ -633,18 +688,21 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
         prompt_lens,
         budgets,
         vocab: mm.config.vocab_size,
+        priority_classes: priority_classes as u8,
     };
     let dp = DecodeParams::default();
     let total = Timer::start();
-    let points = loadgen::sweep(&decode, &base, &rates, &engines,
-                                &dp)?;
-    eprintln!("[spdf] swept {} load points in {:.1}s ({})",
+    let points = loadgen::sweep_with(&decode, &base, &rates, &engines,
+                                     &dp, scheduler.as_ref(),
+                                     admit.as_ref())?;
+    eprintln!("[spdf] swept {} load points in {:.1}s ({}, {}/{})",
               points.len(), total.secs(),
               if calibrated {
                   "calibrated ms"
               } else {
                   "pinned virtual step costs"
-              });
+              },
+              scheduler.name(), admit.name());
     println!("{}", report::load_table(&points));
 
     match a.get("out") {
@@ -658,6 +716,8 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                 .push("pattern", Json::Str(pattern.name().into()))
                 .push("requests", Json::Num(base.requests as f64))
                 .push("calibrated", Json::Bool(calibrated))
+                .push_str("scheduler", scheduler.name())
+                .push_str("admission", &admit.name())
                 .push("points", loadgen::points_json(&points));
             std::fs::write(path, j.to_string_pretty())?;
             eprintln!("[spdf] sweep written to {path}");

@@ -28,6 +28,31 @@ pub struct JsonError {
     pub msg: String,
 }
 
+/// Number-like values accepted by [`Json::push_num`]. JSON numbers are
+/// f64, so every integer type funnels through one lossy-above-2^53
+/// cast — the same cast the emitters previously wrote by hand.
+pub trait JsonNum {
+    fn json_f64(&self) -> f64;
+}
+
+impl JsonNum for f64 {
+    fn json_f64(&self) -> f64 {
+        *self
+    }
+}
+
+macro_rules! impl_json_num {
+    ($($t:ty),*) => {$(
+        impl JsonNum for $t {
+            fn json_f64(&self) -> f64 {
+                *self as f64
+            }
+        }
+    )*};
+}
+
+impl_json_num!(f32, usize, u64, u32, u8, i64, i32);
+
 impl Json {
     // ---- constructors -------------------------------------------------
     pub fn obj() -> Json {
@@ -45,6 +70,24 @@ impl Json {
 
     pub fn from_f64_slice(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    /// `push` a numeric field. One helper for every stats/telemetry
+    /// emitter (`Summary`, `ServeStats`, `RequestResult`, `LoadPoint`)
+    /// so the `Json::Num(x as f64)` boilerplate lives in one place.
+    pub fn push_num(&mut self, key: &str, value: impl JsonNum)
+                    -> &mut Self {
+        self.push(key, Json::Num(value.json_f64()))
+    }
+
+    /// `push` a string field.
+    pub fn push_str(&mut self, key: &str, value: &str) -> &mut Self {
+        self.push(key, Json::Str(value.to_string()))
+    }
+
+    /// `push` a boolean field.
+    pub fn push_bool(&mut self, key: &str, value: bool) -> &mut Self {
+        self.push(key, Json::Bool(value))
     }
 
     // ---- accessors -----------------------------------------------------
@@ -513,6 +556,21 @@ mod tests {
         let src = "{\n \"a\": [\n  1,\n  2\n ],\n \"b\": 1e-08\n}";
         let v = Json::parse(src).unwrap();
         assert_eq!(v.get("b").unwrap().as_f64().unwrap(), 1e-8);
+    }
+
+    #[test]
+    fn push_helpers_build_objects() {
+        let mut j = Json::obj();
+        j.push_num("a", 3usize)
+            .push_num("b", 0.5f64)
+            .push_num("c", 7u64)
+            .push_str("s", "x")
+            .push_bool("ok", true);
+        assert_eq!(j.get("a").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("b").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("c").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("s").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
     }
 
     #[test]

@@ -38,13 +38,13 @@ impl Summary {
     /// (`BENCH_decode.json`, `BENCH_serve_load.json`).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
-        j.push("n", Json::Num(self.n as f64))
-            .push("mean", Json::Num(self.mean))
-            .push("min", Json::Num(self.min))
-            .push("max", Json::Num(self.max))
-            .push("p50", Json::Num(self.p50))
-            .push("p95", Json::Num(self.p95))
-            .push("p99", Json::Num(self.p99));
+        j.push_num("n", self.n)
+            .push_num("mean", self.mean)
+            .push_num("min", self.min)
+            .push_num("max", self.max)
+            .push_num("p50", self.p50)
+            .push_num("p95", self.p95)
+            .push_num("p99", self.p99);
         j
     }
 }

@@ -475,6 +475,7 @@ fn loadgen_timed_serve_deterministic_and_decode_exact() {
         prompt_lens: (3, 6),
         budgets: (2, 6),
         vocab: mm.config.vocab_size,
+        priority_classes: 1,
     };
     let trace = loadgen::generate_trace(&cfg).unwrap();
     let dp = DecodeParams::default();
@@ -531,6 +532,7 @@ fn loadgen_kv_and_literal_decode_same_trace_identically() {
         prompt_lens: (3, 5),
         budgets: (2, 5),
         vocab: mm.config.vocab_size,
+        priority_classes: 1,
     };
     let trace = loadgen::generate_trace(&cfg).unwrap();
     let dp = DecodeParams::default();
@@ -550,6 +552,169 @@ fn loadgen_kv_and_literal_decode_same_trace_identically() {
     assert!(rk.stats.prefill_steps >= 2,
             "timed KV serve should have refilled slots \
              (prefill_steps = {})", rk.stats.prefill_steps);
+}
+
+#[test]
+fn serve_policies_fifo_unbounded_bit_identical_to_default() {
+    // tentpole acceptance: threading the explicit FIFO + unbounded
+    // policies through the refactored serve core must reproduce the
+    // default `serve_timed` path bit-for-bit on a real trace — token
+    // streams AND telemetry — on both engine paths
+    use spdf::generate::serve::admission::Unbounded;
+    use spdf::generate::serve::policy::Fifo;
+    use spdf::generate::ServeConfig;
+
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(31));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    let cfg = TraceConfig {
+        seed: 13,
+        requests: mm.decode_batch + 5,
+        rate_rps: 400.0,
+        pattern: Pattern::Poisson,
+        prompt_lens: (3, 6),
+        budgets: (2, 6),
+        vocab: mm.config.vocab_size,
+        priority_classes: 1,
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    let sched = trace.schedule(&StepCosts::default());
+    let dp = DecodeParams::default();
+    for kv in [false, true] {
+        let default_report = spdf::generate::serve::core::serve_timed(
+            &decode, &trace.requests, &dp, kv, &sched).unwrap();
+        let explicit_report = decode.serve_with(
+            &trace.requests, &dp,
+            &ServeConfig {
+                use_kv: kv,
+                schedule: Some(&sched),
+                scheduler: &Fifo,
+                admission: &Unbounded,
+            }).unwrap();
+        assert_eq!(default_report.results.len(),
+                   explicit_report.results.len(), "kv={kv}");
+        for (x, y) in default_report.results.iter()
+            .zip(&explicit_report.results)
+        {
+            assert_eq!(x.tokens, y.tokens, "kv={kv} req {}", x.id);
+            assert_eq!(
+                (x.arrival_ms, x.queue_ms, x.ttft_ms, x.latency_ms,
+                 x.queue_steps, x.decode_steps),
+                (y.arrival_ms, y.queue_ms, y.ttft_ms, y.latency_ms,
+                 y.queue_steps, y.decode_steps),
+                "kv={kv} req {}", x.id
+            );
+            assert!(x.outcome.is_completed(), "kv={kv}");
+        }
+        let (ds, es) = (&default_report.stats,
+                        &explicit_report.stats);
+        assert_eq!(ds.engine_steps, es.engine_steps, "kv={kv}");
+        assert_eq!(ds.prefill_steps, es.prefill_steps, "kv={kv}");
+        assert_eq!(ds.slot_steps, es.slot_steps, "kv={kv}");
+        assert_eq!(ds.sim_ms, es.sim_ms, "kv={kv}");
+        assert_eq!(ds.latency_ms, es.latency_ms, "kv={kv}");
+        assert_eq!(ds.queue_ms, es.queue_ms, "kv={kv}");
+        assert_eq!(ds.ttft_ms, es.ttft_ms, "kv={kv}");
+        // unbounded admission: the pre-refactor invariants hold
+        assert_eq!(es.completed, trace.requests.len(), "kv={kv}");
+        assert_eq!((es.shed, es.expired), (0, 0), "kv={kv}");
+        assert_eq!(es.shed_rate, 0.0, "kv={kv}");
+        // and every completed request still decodes exactly as alone
+        for (res, req) in explicit_report.results.iter()
+            .zip(&trace.requests)
+        {
+            let solo = reference::greedy(
+                &runtime, &params,
+                std::slice::from_ref(&req.prompt),
+                &DecodeParams { max_new_tokens: req.max_new_tokens,
+                                ..Default::default() })
+                .unwrap();
+            assert_eq!(res.tokens, solo[0], "kv={kv} req {}", res.id);
+        }
+    }
+}
+
+#[test]
+fn serve_with_shedding_policies_decodes_survivors_exactly() {
+    // scheduling + admission on the real engine: a reordered, bounded
+    // queue changes WHO is served, never WHAT a survivor decodes —
+    // and bounding the queue past the knee caps the completed p95
+    use spdf::generate::serve::admission::MaxQueueDepth;
+    use spdf::generate::serve::policy::SmallestBudgetFirst;
+    use spdf::generate::RequestOutcome;
+
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(32));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+
+    // everything arrives in one burst: with B slots free and a
+    // depth-2 queue, exactly B + 2 requests survive, deterministically
+    let n = 2 * mm.decode_batch + 4;
+    let cfg = TraceConfig {
+        seed: 17,
+        requests: n,
+        rate_rps: 900.0,
+        pattern: Pattern::Bursty { burst: n },
+        prompt_lens: (3, 6),
+        budgets: (2, 6),
+        vocab: mm.config.vocab_size,
+        priority_classes: 1,
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    let costs = StepCosts::default();
+    let dp = DecodeParams::default();
+    let (unb_pt, _) =
+        loadgen::run_trace(&decode, &trace, &dp, false, &costs)
+            .unwrap();
+    let (pt, report) = loadgen::run_trace_with(
+        &decode, &trace, &dp, false, &costs, &SmallestBudgetFirst,
+        &MaxQueueDepth(2)).unwrap();
+    assert_eq!(pt.completed, mm.decode_batch + 2);
+    assert_eq!(pt.shed, n - mm.decode_batch - 2);
+    assert_eq!(pt.expired, 0);
+    assert!(pt.shed_rate > 0.0);
+    assert_eq!(pt.scheduler, "smallest-budget");
+    assert_eq!(pt.admission, "max-queue(2)");
+    // bounded queue keeps the completed tail at or below unbounded
+    assert!(pt.latency_ms.p95 <= unb_pt.latency_ms.p95,
+            "bounded p95 {} > unbounded p95 {}",
+            pt.latency_ms.p95, unb_pt.latency_ms.p95);
+    assert_eq!(unb_pt.shed_rate, 0.0);
+    // survivors decode bit-identically to solo reference decodes
+    for res in &report.results {
+        match res.outcome {
+            RequestOutcome::Completed => {
+                let req = &trace.requests[res.id as usize];
+                let solo = reference::greedy(
+                    &runtime, &params,
+                    std::slice::from_ref(&req.prompt),
+                    &DecodeParams {
+                        max_new_tokens: req.max_new_tokens,
+                        ..Default::default()
+                    })
+                    .unwrap();
+                assert_eq!(res.tokens, solo[0], "req {}", res.id);
+            }
+            _ => assert!(res.tokens.is_empty(), "req {}", res.id),
+        }
+    }
+    // determinism of the full policy pipeline
+    let (pt2, report2) = loadgen::run_trace_with(
+        &decode, &trace, &dp, false, &costs, &SmallestBudgetFirst,
+        &MaxQueueDepth(2)).unwrap();
+    assert_eq!(pt.shed_rate, pt2.shed_rate);
+    assert_eq!(pt.latency_ms.p95, pt2.latency_ms.p95);
+    for (x, y) in report.results.iter().zip(&report2.results) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.outcome, y.outcome);
+    }
 }
 
 #[test]

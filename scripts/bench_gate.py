@@ -9,9 +9,17 @@ regresses by more than the tolerance:
   BENCH_decode.json      tokens/sec legs (higher is better) and the
                          serve latency p95 (lower is better)
   BENCH_serve_load.json  per-point latency/TTFT p95 (lower is better)
-                         plus the absolute invariant that the KV
-                         path's p95 is no worse than the literal
-                         path's at budgets >= 32 (kv_p95_vs_literal)
+                         and goodput_tokens_per_sec (higher is
+                         better), plus the absolute invariants that
+                         the KV path's p95 is no worse than the
+                         literal path's at budgets >= 32
+                         (kv_p95_vs_literal), that shedding past the
+                         knee keeps p95 at or below the unbounded run
+                         (shed.p95_vs_unbounded), and that points
+                         under unbounded admission report a zero
+                         shed_rate. Every fresh point must carry the
+                         shed_rate/goodput datapoints — the smoke is
+                         required to produce them.
 
 Usage:
     python3 scripts/bench_gate.py [ROOT]
@@ -47,6 +55,8 @@ RELATIVE_SPECS = {
     ],
     "BENCH_serve_load.json": [
         ("kv_p95_vs_literal", "lower"),
+        ("shed.p95_vs_unbounded", "lower"),
+        ("shed.goodput_tokens_per_sec", "higher"),
     ],
 }
 
@@ -55,14 +65,22 @@ RELATIVE_SPECS = {
 ABSOLUTE_SPECS = {
     "BENCH_serve_load.json": [
         ("kv_p95_vs_literal", 1.0),
+        ("shed.p95_vs_unbounded", 1.0),
     ],
 }
 
-# serve-load points: per-point percentile metrics (lower is better)
+# serve-load points: per-point gated metrics
 POINT_METRICS = [
-    ("latency_ms", "p95"),
-    ("ttft_ms", "p95"),
+    ("latency_ms.p95", "lower"),
+    ("ttft_ms.p95", "lower"),
+    ("goodput_tokens_per_sec", "higher"),
 ]
+
+# keys every fresh serve-load point must carry (the smoke must
+# produce the scheduling/shedding datapoints; old baselines may lack
+# them and are skipped by the relative gates)
+POINT_REQUIRED_KEYS = ["admission", "shed_rate",
+                       "goodput_tokens_per_sec"]
 
 
 def get_path(obj, dotted):
@@ -95,7 +113,9 @@ def compare_metric(label, current, baseline, direction, tol):
 
 
 def check_absolute(name, current, tol):
-    """Baseline-independent invariants (e.g. KV p95 <= literal p95)."""
+    """Baseline-independent invariants (e.g. KV p95 <= literal p95,
+    zero shed rate under unbounded admission, required shed/goodput
+    datapoints on every fresh point)."""
     failures = []
     for dotted, cap in ABSOLUTE_SPECS.get(name, []):
         value = get_path(current, dotted)
@@ -104,6 +124,44 @@ def check_absolute(name, current, tol):
         if value > cap * (1.0 + tol):
             failures.append(f"{name}:{dotted}: {value:.3f} exceeds "
                             f"{cap} + {tol:.0%}")
+    if name == "BENCH_serve_load.json":
+        failures.extend(check_shed_datapoints(name, current))
+    return failures
+
+
+SHED_REQUIRED_KEYS = ["shed_rate", "p95_vs_unbounded",
+                      "goodput_tokens_per_sec"]
+
+
+def check_shed_datapoints(name, current):
+    """Structural + invariant checks on the fresh serve-load file:
+    the past-the-knee shed leg must be present (otherwise a stale
+    bench could silently drop it — and a refresh would bake the gap
+    into the baseline, disabling the shed gates forever), every point
+    must carry the scheduling/shedding datapoints, and a point
+    measured under unbounded admission must report a zero shed rate
+    (shedding with nothing to shed means the loop miscounted)."""
+    failures = []
+    shed = current.get("shed")
+    if not isinstance(shed, dict):
+        failures.append(f"{name}:shed: block missing — the smoke did "
+                        "not run the past-the-knee shed leg")
+    else:
+        missing = [k for k in SHED_REQUIRED_KEYS if k not in shed]
+        if missing:
+            failures.append(f"{name}:shed: missing "
+                            f"{','.join(missing)}")
+    for i, p in enumerate(current.get("points") or []):
+        missing = [k for k in POINT_REQUIRED_KEYS if k not in p]
+        if missing:
+            failures.append(
+                f"{name}:points[{i}]: missing {','.join(missing)} — "
+                "the smoke did not carry the shed/goodput datapoints")
+            continue
+        if p["admission"] == "unbounded" and p["shed_rate"] != 0:
+            failures.append(
+                f"{name}:points[{i}]: shed_rate {p['shed_rate']} "
+                "under unbounded admission (must be 0)")
     return failures
 
 
@@ -126,13 +184,13 @@ def check_points(name, current, baseline, tol):
             notes.append(f"{name}: point {i} identity changed, "
                          "skipping — refresh baselines")
             continue
-        for block, pct in POINT_METRICS:
+        for dotted, direction in POINT_METRICS:
             label = (f"{name}:points[{i}]"
-                     f"({c.get('engine')}).{block}.{pct}")
+                     f"({c.get('engine')}).{dotted}")
             fail = compare_metric(label,
-                                  get_path(c, f"{block}.{pct}"),
-                                  get_path(b, f"{block}.{pct}"),
-                                  "lower", tol)
+                                  get_path(c, dotted),
+                                  get_path(b, dotted),
+                                  direction, tol)
             if fail:
                 failures.append(fail)
     return failures, notes

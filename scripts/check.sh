@@ -67,6 +67,30 @@ for f in "${BENCH_FILES[@]}"; do
     fi
 done
 
+# the serve-load smoke must carry the scheduling/shedding datapoints
+# (goodput + shed rate per point, plus the past-the-knee shed leg) —
+# bench_gate.py gates on them, so their absence should fail loudly
+# here with a better message than a missing-metric skip
+python3 - "$ROOT/BENCH_serve_load.json" <<'EOF'
+import json, sys
+
+j = json.load(open(sys.argv[1]))
+pts = j.get("points") or []
+assert pts, "serve-load smoke wrote no sweep points"
+missing = [i for i, p in enumerate(pts)
+           if "shed_rate" not in p
+           or "goodput_tokens_per_sec" not in p
+           or "admission" not in p]
+assert not missing, f"points {missing} lack shed/goodput datapoints"
+shed = j.get("shed") or {}
+for key in ("shed_rate", "p95_vs_unbounded",
+            "goodput_tokens_per_sec"):
+    assert key in shed, f"shed leg lacks {key}"
+print(f"check.sh: serve-load smoke carries goodput/shed datapoints "
+      f"({len(pts)} points + shed leg, shed rate "
+      f"{shed['shed_rate']:.0%})")
+EOF
+
 echo "== perf-regression gate (scripts/bench_gate.py) =="
 python3 "$ROOT/scripts/bench_gate.py" "$ROOT"
 
