@@ -46,6 +46,30 @@ def point(engine, p95, ttft, admission="unbounded", shed_rate=0.0,
     }
 
 
+def model_point(model, requests, completed, goodput, p95=80.0):
+    return {
+        "model": model,
+        "engine": "literal",
+        "requests": requests,
+        "completed": completed,
+        "shed_rate": 0.0,
+        "goodput_tokens_per_sec": goodput,
+        "latency_ms": {"p95": p95},
+    }
+
+
+def multi_model_json(goodput=400.0, p95=80.0):
+    return {
+        "models": ["m0", "m1"],
+        "offered_rps": 100.0,
+        "aggregate": model_point("", 64, 64, goodput, p95),
+        "per_model": [
+            model_point("m0", 34, 34, goodput * 0.55, p95),
+            model_point("m1", 30, 30, goodput * 0.45, p95 * 1.1),
+        ],
+    }
+
+
 def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
                     goodput=500.0):
     return {
@@ -56,6 +80,7 @@ def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
             "p95_vs_unbounded": shed_ratio,
             "goodput_tokens_per_sec": goodput * 0.7,
         },
+        "multi_model": multi_model_json(),
         "points": [
             point("literal", p95, p95 / 2, goodput=goodput),
             point("kv", p95 * 0.8, p95 / 3, goodput=goodput * 1.2),
@@ -224,6 +249,101 @@ class TestServeLoadGates:
         fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
                                    0.25)
         assert fails == []
+
+
+class TestMultiModelGates:
+    def test_missing_multi_model_leg_fails(self):
+        # the smoke must run the registry leg — with no baseline at
+        # all its absence is already a hard failure
+        cur = serve_load_json()
+        del cur["multi_model"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("multi_model: block missing" in f for f in fails)
+
+    def test_truncated_multi_model_leg_fails(self):
+        # fewer than 2 per-model points means nothing was multiplexed
+        cur = serve_load_json()
+        cur["multi_model"]["per_model"] = \
+            cur["multi_model"]["per_model"][:1]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any(">= 2 per-model points" in f for f in fails)
+        # missing aggregate block is caught too
+        cur = serve_load_json()
+        del cur["multi_model"]["aggregate"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("multi_model.aggregate" in f for f in fails)
+        # per-model points must carry the gated datapoints
+        cur = serve_load_json()
+        del cur["multi_model"]["per_model"][1]["goodput_tokens_per_sec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("per_model[1]: missing" in f for f in fails)
+        # ... and so must the aggregate block, whose goodput/p95 feed
+        # two relative gates that would otherwise silently skip
+        cur = serve_load_json()
+        del cur["multi_model"]["aggregate"]["goodput_tokens_per_sec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("aggregate: missing goodput_tokens_per_sec" in f
+                   for f in fails)
+
+    def test_per_model_sums_must_match_aggregate(self):
+        # conservation in the gate: a registry loop that loses or
+        # double-counts a request must not pass green
+        cur = serve_load_json()
+        cur["multi_model"]["per_model"][0]["completed"] -= 2
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("sum" in f and "aggregate" in f for f in fails)
+
+    def test_per_model_goodput_regression_fails(self):
+        base = serve_load_json()
+        cur = serve_load_json()
+        cur["multi_model"]["per_model"][1] \
+            ["goodput_tokens_per_sec"] *= 0.5
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert any("per_model(m1).goodput_tokens_per_sec" in f
+                   for f in fails)
+        # the untouched model stays green
+        assert not any("per_model(m0)" in f for f in fails)
+
+    def test_dropping_a_baseline_model_fails(self):
+        # a model gated in the baseline must not vanish silently from
+        # the fresh leg — that would disable its gates forever
+        base = serve_load_json()
+        base["multi_model"]["per_model"].append(
+            model_point("m2", 0, 0, 10.0))
+        fails, _ = gate.check_file("BENCH_serve_load.json",
+                                   serve_load_json(), base, 0.25)
+        assert any("m2 in baseline but missing" in f for f in fails)
+
+    def test_baseline_without_multi_model_skips_with_note(self):
+        cur = serve_load_json()
+        base = serve_load_json()
+        del base["multi_model"]
+        fails, notes = gate.check_file("BENCH_serve_load.json", cur,
+                                       base, 0.25)
+        assert fails == []
+        assert any("predates the multi-model leg" in n for n in notes)
+
+    def test_refresh_refuses_truncated_multi_model_leg(self, tmp_path,
+                                                       monkeypatch):
+        # REFRESH must not bake a multi-model-less file into the
+        # committed baseline (which would disable the gates forever)
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        noleg = serve_load_json()
+        del noleg["multi_model"]
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(noleg))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
 
 
 class TestBootstrapAndRefresh:

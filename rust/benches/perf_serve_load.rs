@@ -24,7 +24,14 @@
 //!    while holding completed-request p95 at or below the unbounded
 //!    run's (recorded as `shed.p95_vs_unbounded` + `shed.shed_rate`,
 //!    gated alongside the per-point
-//!    `goodput_tokens_per_sec`/`shed_rate` datapoints).
+//!    `goodput_tokens_per_sec`/`shed_rate` datapoints);
+//!  * multi-model leg — the same artifacts registered twice in a
+//!    `ModelRegistry` (standing in for the SPDF dense/s50/s75
+//!    checkpoint sweep), a 50/50 model-mix trace multiplexed through
+//!    one serve loop at 0.9x capacity: hard-asserts outcome
+//!    conservation and per-model-sums-to-aggregate, and records the
+//!    per-model goodput datapoints `bench_gate.py` gates
+//!    (`multi_model.aggregate` + `multi_model.per_model`).
 //!
 //! Run: `cargo bench --bench perf_serve_load`
 //! Writes `BENCH_serve_load.json` (override with SPDF_BENCH_OUT; set
@@ -32,9 +39,9 @@
 
 use spdf::coordinator::report;
 use spdf::generate::loadgen::{self, Pattern, StepCosts, TraceConfig};
-use spdf::generate::serve::admission::MaxQueueDepth;
+use spdf::generate::serve::admission::{MaxQueueDepth, Unbounded};
 use spdf::generate::serve::policy::Fifo;
-use spdf::generate::{DecodeEngine, DecodeParams};
+use spdf::generate::{DecodeEngine, DecodeParams, ModelRegistry};
 use spdf::runtime::Engine;
 use spdf::train::TrainState;
 use spdf::util::json::Json;
@@ -75,6 +82,7 @@ fn main() -> anyhow::Result<()> {
         budgets: (4, 8),
         vocab: mm.config.vocab_size,
         priority_classes: 1,
+        model_mix: Vec::new(),
     };
     let det_trace = loadgen::generate_trace(&det_cfg)?;
     let pinned = StepCosts::default();
@@ -130,6 +138,7 @@ fn main() -> anyhow::Result<()> {
         budgets,
         vocab: mm.config.vocab_size,
         priority_classes: 1,
+        model_mix: Vec::new(),
     };
     let points = loadgen::sweep(&decode, &base, &rates, &engines,
                                 &dp)?;
@@ -211,6 +220,51 @@ fn main() -> anyhow::Result<()> {
              shed_pt.latency_ms.p95, unb_pt.latency_ms.p95,
              p95_vs_unbounded, shed_pt.goodput_tokens_per_sec);
 
+    // --- multi-model leg: one stream across the registry ---
+    // The same artifacts registered under two names stand in for the
+    // SPDF checkpoint sweep (dense / s50 / s75): a 50/50 model-mix
+    // trace at 0.9x capacity is multiplexed through one serve loop.
+    // Hard invariants: outcome conservation, and per-model stats
+    // summing to the aggregate — the per-model goodput datapoints are
+    // gated by scripts/bench_gate.py.
+    let mut registry = ModelRegistry::new("m0", &decode)?;
+    registry.register("m1", &decode)?;
+    let mix_cfg = TraceConfig {
+        rate_rps: 0.9 * cap,
+        // enough draws that a 50/50 mix deterministically reaches
+        // both models even in the smoke variant
+        requests: requests.max(16),
+        model_mix: vec![("m0".into(), 0.5), ("m1".into(), 0.5)],
+        ..base.clone()
+    };
+    let mix_trace = loadgen::generate_trace(&mix_cfg)?;
+    let (mm_agg, mm_models, _) = loadgen::run_trace_registry(
+        &registry, &mix_trace, &dp, false, &lit, &Fifo, &Unbounded)?;
+    anyhow::ensure!(
+        mm_agg.completed + mm_agg.shed + mm_agg.expired
+            == mm_agg.requests,
+        "multi-model leg lost requests: {}+{}+{} != {}",
+        mm_agg.completed, mm_agg.shed, mm_agg.expired,
+        mm_agg.requests
+    );
+    anyhow::ensure!(
+        mm_models.iter().map(|p| p.requests).sum::<usize>()
+            == mm_agg.requests
+            && mm_models.iter().map(|p| p.completed).sum::<usize>()
+                == mm_agg.completed
+            && mm_models.iter().map(|p| p.generated_tokens).sum::<u64>()
+                == mm_agg.generated_tokens,
+        "per-model stats do not sum to the multi-model aggregate"
+    );
+    anyhow::ensure!(
+        mm_models.iter().all(|p| p.completed > 0),
+        "a 50/50 mix left a model with no completed requests"
+    );
+    let mut mm_points = vec![mm_agg.clone()];
+    mm_points.extend(mm_models.iter().cloned());
+    println!("\nmulti-model leg (m0/m1 50/50 mix @ 0.9x capacity):\n");
+    println!("{}", report::load_table(&mm_points));
+
     let costs_json = |c: &StepCosts| {
         let mut o = Json::obj();
         o.push("step_ms", Json::Num(c.step_ms))
@@ -249,6 +303,13 @@ fn main() -> anyhow::Result<()> {
         .push_num("goodput_tokens_per_sec",
                   shed_pt.goodput_tokens_per_sec);
     j.push("shed", shed);
+    let mut multi = Json::obj();
+    multi.push("models", Json::Arr(vec![
+            Json::Str("m0".into()), Json::Str("m1".into())]))
+        .push_num("offered_rps", mix_cfg.rate_rps)
+        .push("aggregate", mm_agg.to_json())
+        .push("per_model", loadgen::points_json(&mm_models));
+    j.push("multi_model", multi);
     j.push("points", loadgen::points_json(&points));
 
     let out_path = std::env::var("SPDF_BENCH_OUT")

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 use crate::bench_support::Table;
 use crate::coordinator::experiments::RunResult;
 use crate::generate::loadgen::LoadPoint;
-use crate::generate::{RequestResult, ServeStats};
+use crate::generate::{RequestResult, ServeReport, ServeStats};
 use crate::util::stats::{pm, summarize, Summary};
 
 /// Key for grouping seeds of the same cell.
@@ -206,6 +206,37 @@ fn fmt_percentiles(s: &Summary) -> String {
     format!("{:.1} / {:.1} / {:.1} ms", s.p50, s.p95, s.p99)
 }
 
+/// [`serve_table`] plus, for multi-model registry runs, one
+/// per-model breakdown table (requests / outcome split / throughput /
+/// latency tail per registered model — the countable columns sum to
+/// the aggregate table above them). Single-model reports render
+/// exactly as [`serve_table`].
+pub fn serve_report_table(report: &ServeReport) -> String {
+    let mut out = serve_table(&report.stats, &report.results);
+    if report.per_model.len() > 1 {
+        let mut t = Table::new(&["model", "requests",
+                                 "completed/shed/expired", "tokens",
+                                 "tok/s", "occ",
+                                 "e2e p50/p95/p99"]);
+        for m in &report.per_model {
+            let st = &m.stats;
+            t.row(&[
+                m.model.clone(),
+                st.requests.to_string(),
+                format!("{}/{}/{}", st.completed, st.shed,
+                        st.expired),
+                st.generated_tokens.to_string(),
+                format!("{:.1}", st.tokens_per_sec),
+                format!("{:.0}%", st.occupancy * 100.0),
+                fmt_percentiles(&st.latency_ms),
+            ]);
+        }
+        out.push_str("\nper-model breakdown:\n");
+        out.push_str(&t.render());
+    }
+    out
+}
+
 /// Latency-under-load table from a `loadgen` sweep: one row per
 /// (engine, offered load), percentiles on the virtual clock. Reading
 /// it: occupancy → how saturated the batch was; queue/TTFT → how long
@@ -219,7 +250,7 @@ fn fmt_percentiles(s: &Summary) -> String {
 /// percentiles at low load and a sharp knee as the offered rate
 /// crosses capacity.
 pub fn load_table(points: &[LoadPoint]) -> String {
-    let mut t = Table::new(&["engine", "pattern", "policy",
+    let mut t = Table::new(&["model", "engine", "pattern", "policy",
                              "offered rps", "achieved rps", "occ",
                              "goodput", "shed%", "queue p95",
                              "TTFT p50/p95/p99", "e2e p50/p95/p99"]);
@@ -228,6 +259,10 @@ pub fn load_table(points: &[LoadPoint]) -> String {
             format!("{:.1}/{:.1}/{:.1}", s.p50, s.p95, s.p99)
         };
         t.row(&[
+            // "" = whole-stream aggregate (single-model sweeps and
+            // the aggregate row of a registry sweep)
+            if p.model.is_empty() { "-".into() }
+            else { p.model.clone() },
             p.engine.clone(),
             p.pattern.clone(),
             format!("{}/{}", p.scheduler, p.admission),
@@ -359,6 +394,7 @@ mod tests {
     #[test]
     fn load_table_renders_sweep_points() {
         let mk = |engine: &str, rps: f64, p95: f64| LoadPoint {
+            model: String::new(),
             engine: engine.into(),
             pattern: "poisson".into(),
             scheduler: "fifo".into(),
@@ -387,10 +423,13 @@ mod tests {
         shedding.completed = 48;
         shedding.shed = 16;
         shedding.shed_rate = 0.25;
+        let mut per_model = mk("literal", 30.0, 40.0);
+        per_model.model = "s75".into();
         let t = load_table(&[mk("literal", 50.0, 120.0),
                              mk("kv", 50.0, 90.0),
                              mk("kv", 0.0, 70.0),
-                             shedding]);
+                             shedding,
+                             per_model]);
         assert!(t.contains("literal"), "{t}");
         assert!(t.contains("50.0"), "{t}");
         assert!(t.contains("80%"), "{t}");
@@ -401,6 +440,40 @@ mod tests {
         assert!(t.contains("fifo/max-queue(4)"), "{t}");
         assert!(t.contains("25.0%"), "{t}");
         assert!(t.contains("0.0%"), "{t}");
+        // model column: aggregate rows render "-", registry rows the
+        // model name
+        assert!(t.contains("| -"), "{t}");
+        assert!(t.contains("s75"), "{t}");
+    }
+
+    #[test]
+    fn serve_report_table_adds_per_model_rows_for_registries() {
+        use crate::generate::{ModelStats, ServeReport};
+        let report = ServeReport {
+            results: Vec::new(),
+            stats: serve_stats(0, 0),
+            per_model: vec![
+                ModelStats { model: "dense".into(),
+                             stats: serve_stats(0, 0) },
+                ModelStats { model: "s75".into(),
+                             stats: serve_stats(2, 1) },
+            ],
+        };
+        let t = serve_report_table(&report);
+        assert!(t.contains("per-model breakdown"), "{t}");
+        assert!(t.contains("dense"), "{t}");
+        assert!(t.contains("s75"), "{t}");
+        assert!(t.contains("9/2/1"), "{t}");
+        // a single-model report renders without the breakdown
+        let solo = ServeReport {
+            results: Vec::new(),
+            stats: serve_stats(0, 0),
+            per_model: vec![ModelStats { model: "default".into(),
+                                         stats: serve_stats(0, 0) }],
+        };
+        let t = serve_report_table(&solo);
+        assert!(!t.contains("per-model breakdown"), "{t}");
+        assert_eq!(t, serve_table(&solo.stats, &solo.results));
     }
 
     #[test]

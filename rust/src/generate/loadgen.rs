@@ -41,7 +41,8 @@ use super::serve::admission::{AdmissionPolicy, Unbounded};
 use super::serve::core as serve_core;
 use super::serve::core::ServeConfig;
 use super::serve::policy::{Fifo, Scheduler};
-use super::serve::{Schedule, ServeReport};
+use super::serve::registry::ModelRegistry;
+use super::serve::{Schedule, ServeReport, ServeStats};
 use super::{DecodeEngine, DecodeParams, DecodeRequest};
 
 /// Seed salt for the priority-class phase: priorities come from their
@@ -49,6 +50,13 @@ use super::{DecodeEngine, DecodeParams, DecodeRequest};
 /// arrivals (and `priority_classes: 1` traces are bit-identical to
 /// traces generated before priorities existed).
 const PRIORITY_SALT: u64 = 0x7072_696f;
+
+/// Seed salt for the model-mix phase: model tags come from their own
+/// stream (like priorities) so enabling a mix never perturbs prompts,
+/// budgets, priorities or arrivals — an empty `model_mix` leaves the
+/// trace bit-identical to traces generated before the registry
+/// existed.
+const MODEL_SALT: u64 = 0x6d6f_6465;
 
 /// Arrival process shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -121,6 +129,13 @@ pub struct TraceConfig {
     /// `serve::policy::PriorityClass`). 1 = everything priority 0,
     /// bit-identical to pre-priority traces.
     pub priority_classes: u8,
+    /// Weighted model mix for `serve::registry::ModelRegistry`
+    /// routing (`spdf loadgen --model-mix dense=0.5,s75=0.5`): each
+    /// request's [`DecodeRequest::model`] tag is drawn from this
+    /// distribution on its own salted stream. Weights need not sum to
+    /// 1 (they are normalized); empty = untagged requests (all routed
+    /// to the default model), bit-identical to pre-registry traces.
+    pub model_mix: Vec<(String, f64)>,
 }
 
 /// A generated workload: requests plus their (virtual-ms) arrival
@@ -162,6 +177,18 @@ pub fn generate_trace(cfg: &TraceConfig) -> anyhow::Result<Trace> {
                     "vocab {} leaves no non-special tokens", cfg.vocab);
     anyhow::ensure!(cfg.priority_classes >= 1,
                     "need at least 1 priority class");
+    for (name, w) in &cfg.model_mix {
+        anyhow::ensure!(!name.is_empty(),
+                        "model-mix entries need a model name");
+        anyhow::ensure!(w.is_finite() && *w > 0.0,
+                        "model-mix weight for {name} must be a \
+                         positive finite number (got {w})");
+        anyhow::ensure!(
+            cfg.model_mix.iter().filter(|(n, _)| n == name).count()
+                == 1,
+            "model {name} appears twice in the model mix"
+        );
+    }
     match cfg.pattern {
         Pattern::Closed { clients, .. } => {
             anyhow::ensure!(clients >= 1,
@@ -203,6 +230,19 @@ pub fn generate_trace(cfg: &TraceConfig) -> anyhow::Result<Trace> {
         for r in requests.iter_mut() {
             r.priority =
                 prng.below(cfg.priority_classes as usize) as u8;
+        }
+    }
+
+    // phase 1c: model tags, again from their own salted stream — a
+    // weighted draw over the normalized mix, so adding/removing a mix
+    // never shifts prompts, budgets, priorities or arrivals
+    if !cfg.model_mix.is_empty() {
+        let weights: Vec<f64> =
+            cfg.model_mix.iter().map(|(_, w)| *w).collect();
+        let mut mrng = Rng::new(cfg.seed ^ MODEL_SALT);
+        for r in requests.iter_mut() {
+            let pick = mrng.weighted(&weights);
+            r.model = Some(cfg.model_mix[pick].0.clone());
         }
     }
 
@@ -343,6 +383,9 @@ pub fn capacity_rps(decode_batch: usize, step_ms: f64,
 /// One measured point on the latency-under-load curve.
 #[derive(Debug, Clone)]
 pub struct LoadPoint {
+    /// Registry model this point covers, or "" for a whole-stream
+    /// aggregate point (every point predating the registry).
+    pub model: String,
     /// "literal" | "kv".
     pub engine: String,
     pub pattern: String,
@@ -386,7 +429,8 @@ pub struct LoadPoint {
 impl LoadPoint {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
-        j.push_str("engine", &self.engine)
+        j.push_str("model", &self.model)
+            .push_str("engine", &self.engine)
             .push_str("pattern", &self.pattern)
             .push_str("scheduler", &self.scheduler)
             .push_str("admission", &self.admission)
@@ -444,15 +488,35 @@ pub fn run_trace_with(
             scheduler,
             admission,
         })?;
-    let st = &report.stats;
+    let point = point_from_stats("", &report.stats, trace.rate_rps,
+                                 trace, use_kv, costs, scheduler,
+                                 admission);
+    Ok((point, report))
+}
+
+/// Fold one [`ServeStats`] block (aggregate or per-model) into a
+/// [`LoadPoint`]. `offered_rps` is the share of the trace's offered
+/// rate this block covers.
+#[allow(clippy::too_many_arguments)]
+fn point_from_stats(
+    model: &str,
+    st: &ServeStats,
+    offered_rps: f64,
+    trace: &Trace,
+    use_kv: bool,
+    costs: &StepCosts,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> LoadPoint {
     let sim_secs = (st.sim_ms / 1e3).max(1e-9);
-    let point = LoadPoint {
+    LoadPoint {
+        model: model.into(),
         engine: if use_kv { "kv" } else { "literal" }.into(),
         pattern: trace.pattern.name().into(),
         scheduler: scheduler.name().into(),
         admission: admission.name(),
-        offered_rps: trace.rate_rps,
-        requests: trace.requests.len(),
+        offered_rps,
+        requests: st.requests,
         completed: st.completed,
         shed: st.shed,
         expired: st.expired,
@@ -472,8 +536,51 @@ pub fn run_trace_with(
         ttft_ms: st.ttft_ms.clone(),
         latency_ms: st.latency_ms.clone(),
         wall_secs: st.wall_secs,
-    };
-    Ok((point, report))
+    }
+}
+
+/// [`run_trace_with`] across a [`ModelRegistry`]: the trace's
+/// model-mix tags route each request to its registered engine, and
+/// the returned points are the whole-stream aggregate followed by one
+/// per-model point per registered model (the per-model `LoadPoint`
+/// counters sum to the aggregate's; the shared virtual clock is the
+/// common denominator). Deterministic for a given trace + costs.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_registry(
+    registry: &ModelRegistry,
+    trace: &Trace,
+    dp: &DecodeParams,
+    use_kv: bool,
+    costs: &StepCosts,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> anyhow::Result<(LoadPoint, Vec<LoadPoint>, ServeReport)> {
+    let schedule = trace.schedule(costs);
+    let report = registry.serve_with(
+        &trace.requests, dp,
+        &ServeConfig {
+            use_kv,
+            schedule: Some(&schedule),
+            scheduler,
+            admission,
+        })?;
+    let total = trace.requests.len().max(1);
+    let aggregate = point_from_stats("", &report.stats,
+                                     trace.rate_rps, trace, use_kv,
+                                     costs, scheduler, admission);
+    let per_model: Vec<LoadPoint> = report
+        .per_model
+        .iter()
+        .map(|m| {
+            // the model's share of the offered load (closed-loop
+            // traces report 0.0 overall, hence 0.0 per model too)
+            let offered = trace.rate_rps * m.stats.requests as f64
+                / total as f64;
+            point_from_stats(&m.model, &m.stats, offered, trace,
+                             use_kv, costs, scheduler, admission)
+        })
+        .collect();
+    Ok((aggregate, per_model, report))
 }
 
 /// Offered-load sweep: one point per (rate, engine path), all points
@@ -511,6 +618,35 @@ pub fn sweep_with(
     Ok(points)
 }
 
+/// [`sweep_with`] across a [`ModelRegistry`]: per (rate, engine
+/// path), the aggregate point followed by the per-model points (see
+/// [`run_trace_registry`]). All points at one rate share the exact
+/// same trace, mix tags included.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_registry(
+    registry: &ModelRegistry,
+    base: &TraceConfig,
+    rates: &[f64],
+    engines: &[(bool, StepCosts)],
+    dp: &DecodeParams,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> anyhow::Result<Vec<LoadPoint>> {
+    let mut points = Vec::new();
+    for &rate in rates {
+        let cfg = TraceConfig { rate_rps: rate, ..base.clone() };
+        let trace = generate_trace(&cfg)?;
+        for (use_kv, costs) in engines {
+            let (aggregate, per_model, _) = run_trace_registry(
+                registry, &trace, dp, *use_kv, costs, scheduler,
+                admission)?;
+            points.push(aggregate);
+            points.extend(per_model);
+        }
+    }
+    Ok(points)
+}
+
 /// JSON array of sweep points (`BENCH_serve_load.json` / `--out`).
 pub fn points_json(points: &[LoadPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
@@ -532,6 +668,7 @@ mod tests {
             budgets: (2, 5),
             vocab: 16,
             priority_classes: 1,
+            model_mix: Vec::new(),
         }
     }
 
@@ -698,6 +835,7 @@ mod tests {
     #[test]
     fn load_point_json_round_trips_percentiles() {
         let p = LoadPoint {
+            model: "s75".into(),
             engine: "kv".into(),
             pattern: "poisson".into(),
             scheduler: "fifo".into(),
@@ -723,6 +861,7 @@ mod tests {
             wall_secs: 1.25,
         };
         let j = p.to_json();
+        assert_eq!(j.get("model").unwrap().as_str(), Some("s75"));
         assert_eq!(j.get("engine").unwrap().as_str(), Some("kv"));
         assert_eq!(j.get("scheduler").unwrap().as_str(), Some("fifo"));
         assert_eq!(j.get("admission").unwrap().as_str(),
@@ -766,6 +905,78 @@ mod tests {
         assert!(generate_trace(&TraceConfig {
             priority_classes: 0, ..base
         }).is_err());
+    }
+
+    #[test]
+    fn model_mix_is_deterministic_and_isolated() {
+        // model tags come from their own salted stream: enabling a
+        // mix must not perturb prompts, budgets, priorities or
+        // arrivals, and an empty mix leaves requests untagged
+        let base = cfg(Pattern::Poisson, 50.0);
+        let plain = generate_trace(&base).unwrap();
+        assert!(plain.requests.iter().all(|r| r.model.is_none()));
+        let mixed = TraceConfig {
+            model_mix: vec![("dense".into(), 0.5),
+                            ("s75".into(), 0.5)],
+            priority_classes: 3,
+            ..base.clone()
+        };
+        let (a, b) = (generate_trace(&mixed).unwrap(),
+                      generate_trace(&mixed).unwrap());
+        for ((x, y), z) in a.requests.iter().zip(&b.requests)
+            .zip(&plain.requests)
+        {
+            assert_eq!(x.model, y.model);
+            assert!(matches!(x.model.as_deref(),
+                             Some("dense") | Some("s75")));
+            assert_eq!(x.prompt, z.prompt);
+            assert_eq!(x.max_new_tokens, z.max_new_tokens);
+        }
+        assert_eq!(a.arrivals, plain.arrivals);
+        // both models actually drawn at 50/50 over 40 requests
+        assert!(a.requests.iter()
+                    .any(|r| r.model.as_deref() == Some("dense")));
+        assert!(a.requests.iter()
+                    .any(|r| r.model.as_deref() == Some("s75")));
+        // priorities drawn independently of the mix
+        let prio_only = TraceConfig { priority_classes: 3,
+                                      ..base.clone() };
+        let p = generate_trace(&prio_only).unwrap();
+        for (x, y) in a.requests.iter().zip(&p.requests) {
+            assert_eq!(x.priority, y.priority);
+        }
+    }
+
+    #[test]
+    fn model_mix_weights_skew_the_draw() {
+        let c = TraceConfig {
+            requests: 400,
+            model_mix: vec![("heavy".into(), 9.0),
+                            ("light".into(), 1.0)],
+            ..cfg(Pattern::Poisson, 50.0)
+        };
+        let t = generate_trace(&c).unwrap();
+        let heavy = t.requests.iter()
+            .filter(|r| r.model.as_deref() == Some("heavy"))
+            .count();
+        // 90% expected; demand a loose majority band
+        assert!(heavy > 300 && heavy < 400, "heavy drew {heavy}/400");
+    }
+
+    #[test]
+    fn model_mix_rejects_bad_entries() {
+        let base = cfg(Pattern::Poisson, 10.0);
+        for mix in [
+            vec![(String::new(), 1.0)],
+            vec![("m".into(), 0.0)],
+            vec![("m".into(), -1.0)],
+            vec![("m".into(), f64::NAN)],
+            vec![("m".into(), 1.0), ("m".into(), 2.0)],
+        ] {
+            assert!(generate_trace(&TraceConfig {
+                model_mix: mix.clone(), ..base.clone()
+            }).is_err(), "mix {mix:?} should be rejected");
+        }
     }
 
     #[test]

@@ -51,8 +51,9 @@ pub mod serve;
 pub mod topk;
 
 pub use engine::DecodeEngine;
-pub use serve::{DecodeRequest, RequestOutcome, RequestResult,
-                Schedule, ServeConfig, ServeReport, ServeStats};
+pub use serve::{DecodeRequest, ModelRegistry, ModelStats,
+                RequestOutcome, RequestResult, Schedule, ServeConfig,
+                ServeReport, ServeStats};
 
 use crate::runtime::{HostTensor, ModelRuntime};
 

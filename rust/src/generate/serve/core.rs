@@ -47,15 +47,17 @@ use crate::tokenizer::EOS;
 use super::admission::{AdmissionPolicy, Unbounded};
 use super::clock::{ArrivalQueue, Clock, Schedule};
 use super::policy::{Fifo, Scheduler};
-use super::telemetry::{RequestOutcome, RequestResult, ServeReport,
-                       ServeStats};
+use super::telemetry::{ModelStats, RequestOutcome, RequestResult,
+                       ServeReport, ServeStats};
 use super::DecodeRequest;
 
 /// The per-step logits producer behind the slot-refill state machine:
 /// the literal-resident engine path, the KV-resident path, and
 /// deterministic test mocks (so queueing/clock behavior is testable
-/// without compiled artifacts).
-pub(crate) trait LogitsBackend {
+/// without compiled artifacts — see [`mock`]). Public so the
+/// property-test harness in `rust/tests/` can drive [`run_lanes_with`]
+/// over artifact-free backends.
+pub trait LogitsBackend {
     /// `(decode_batch, ctx_len, vocab)`.
     fn dims(&self) -> (usize, usize, usize);
     /// true → the serve loop maintains per-slot refill marks and calls
@@ -256,18 +258,29 @@ pub fn serve_with(
     dp: &DecodeParams,
     cfg: &ServeConfig,
 ) -> anyhow::Result<ServeReport> {
-    if cfg.use_kv {
-        let mut backend = KvBackend {
+    let mut backend = backend_for(engine, cfg.use_kv)?;
+    run_loop_with(backend.as_mut(), requests, dp, cfg.schedule,
+                  cfg.scheduler, cfg.admission)
+}
+
+/// Build the per-engine backend for one serve lane: the
+/// literal-resident full-recompute path, or the KV-resident
+/// incremental path over a fresh [`SessionState`] (errors if the KV
+/// artifacts were not compiled). Shared by [`serve_with`] and
+/// [`super::registry::ModelRegistry`], which builds one backend per
+/// registered model.
+pub(crate) fn backend_for<'e>(
+    engine: &'e DecodeEngine<'_>,
+    use_kv: bool,
+) -> anyhow::Result<Box<dyn LogitsBackend + 'e>> {
+    if use_kv {
+        Ok(Box::new(KvBackend {
             engine,
             state: engine.kv_state()?,
             next_tok: vec![0i32; engine.decode_batch()],
-        };
-        run_loop_with(&mut backend, requests, dp, cfg.schedule,
-                      cfg.scheduler, cfg.admission)
+        }))
     } else {
-        let mut backend = LiteralBackend { engine };
-        run_loop_with(&mut backend, requests, dp, cfg.schedule,
-                      cfg.scheduler, cfg.admission)
+        Ok(Box::new(LiteralBackend { engine }))
     }
 }
 
@@ -283,20 +296,11 @@ pub(crate) fn run_loop(
     run_loop_with(backend, requests, dp, schedule, &Fifo, &Unbounded)
 }
 
-/// One slot-refill state machine for every decode path. The host-side
-/// bookkeeping (token buffer, positions, EOS/length-cap edges, refill
-/// order, admission, telemetry) is identical across backends; the
-/// paths differ only in how a step's logits are produced, so any
-/// divergence between them is a model-side bug by construction.
-///
-/// Per iteration: (1) arrivals up to `now` are admitted into the ready
-/// set or shed, and queued requests past the admission deadline
-/// expire — shed/expired requests still release their closed-loop
-/// successors; (2) every free slot is filled with the scheduler's pick
-/// from the ready set (zero-budget requests complete the moment they
-/// are picked and never occupy a slot); (3) one model step advances
-/// every occupied slot, and finished requests leave with
-/// [`RequestOutcome::Completed`].
+/// [`run_lanes_with`] specialized to one anonymous lane — the
+/// single-engine state machine behind [`serve`] / [`serve_kv`] /
+/// [`serve_timed`] / [`serve_with`]. `DecodeRequest::model` is not
+/// consulted here: the one engine serves every request (model routing
+/// is [`super::registry::ModelRegistry`]'s job).
 pub(crate) fn run_loop_with(
     backend: &mut dyn LogitsBackend,
     requests: &[DecodeRequest],
@@ -305,16 +309,114 @@ pub(crate) fn run_loop_with(
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
 ) -> anyhow::Result<ServeReport> {
-    let (b, t, vocab) = backend.dims();
-    anyhow::ensure!(requests.iter().all(|r| !r.prompt.is_empty()),
-                    "empty prompt in decode request stream");
-    anyhow::ensure!(
-        requests.iter().all(|r| r.prompt.len() < t),
-        "prompt longer than ctx_len - 1 ({}) in decode request \
-         stream — pre-truncate (keeping the tail) with \
-         coordinator::prompt_tokens",
-        t - 1
-    );
+    let names = [String::from("default")];
+    let lane_of = vec![0usize; requests.len()];
+    run_lanes_with(&mut [backend], &names, &lane_of, requests, dp,
+                   schedule, scheduler, admission)
+}
+
+/// Per-lane serving state: one model's fixed decode geometry, its
+/// token/pos buffers, batch slots and step counters. The registry's
+/// "(model, slot)" pairs are exactly (lane index, slot index) here.
+struct Lane {
+    b: usize,
+    t: usize,
+    vocab: usize,
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    slots: Vec<Option<Slot>>,
+    /// Admitted requests for this lane awaiting one of its slots,
+    /// ordered by (arrival, index) — the scheduler picks from here.
+    ready: Vec<usize>,
+    needs_prefill: bool,
+    refill: Vec<f32>,
+    any_refill: bool,
+    engine_steps: u64,
+    slot_steps: u64,
+    prefill_steps: u64,
+}
+
+/// One slot-refill state machine for every decode path — and, since
+/// the registry refactor, for any number of models at once: lane `l`
+/// wraps `backends[l]` (its own geometry, slots and KV state), and
+/// `lane_of[i]` routes request `i` to its model's lane. The host-side
+/// bookkeeping (token buffers, positions, EOS/length-cap edges,
+/// refill order, admission, telemetry) is identical across backends
+/// and lanes; the paths differ only in how a step's logits are
+/// produced, so any divergence between them is a model-side bug by
+/// construction. With a single lane this is bit-for-bit the
+/// pre-registry loop (pinned by the unit tests below and the
+/// integration suite).
+///
+/// Per iteration: (1) arrivals up to `now` are admitted into their
+/// lane's ready set or shed — admission decisions are model-aware
+/// (the waiting count a policy sees is the request's own lane's
+/// queue) — and queued requests past the admission deadline expire;
+/// shed/expired requests still release their closed-loop successors;
+/// (2) every free slot of every lane is filled with the scheduler's
+/// pick from **that lane's** ready set (a freed `s75` slot only seats
+/// `s75`-ready requests; zero-budget requests complete the moment
+/// they are picked and never occupy a slot); (3) each lane with
+/// occupied slots runs one model step — steps execute lane-by-lane on
+/// the shared clock, modeling one accelerator multiplexing N resident
+/// models — and finished requests leave with
+/// [`RequestOutcome::Completed`].
+///
+/// Public (with [`mock`]) so the serve-invariant property suite in
+/// `rust/tests/` can drive random traces × policies × lane counts
+/// without compiled artifacts.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lanes_with(
+    backends: &mut [&mut dyn LogitsBackend],
+    names: &[String],
+    lane_of: &[usize],
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    schedule: Option<&Schedule>,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+) -> anyhow::Result<ServeReport> {
+    let n_lanes = backends.len();
+    anyhow::ensure!(n_lanes > 0, "serve loop needs at least one lane");
+    anyhow::ensure!(names.len() == n_lanes,
+                    "{} lane names for {} lanes", names.len(), n_lanes);
+    anyhow::ensure!(lane_of.len() == requests.len(),
+                    "{} lane assignments for {} requests",
+                    lane_of.len(), requests.len());
+    let mut lanes: Vec<Lane> = backends
+        .iter()
+        .map(|be| {
+            let (b, t, vocab) = be.dims();
+            Lane {
+                b,
+                t,
+                vocab,
+                tokens: vec![0i32; b * t],
+                pos: vec![0i32; b],
+                slots: (0..b).map(|_| None).collect(),
+                ready: Vec::new(),
+                needs_prefill: be.needs_prefill(),
+                refill: vec![0f32; b],
+                any_refill: false,
+                engine_steps: 0,
+                slot_steps: 0,
+                prefill_steps: 0,
+            }
+        })
+        .collect();
+    for (i, (r, &l)) in requests.iter().zip(lane_of).enumerate() {
+        anyhow::ensure!(l < n_lanes,
+                        "request {i} routed to lane {l} of {n_lanes}");
+        anyhow::ensure!(!r.prompt.is_empty(),
+                        "empty prompt in decode request stream");
+        anyhow::ensure!(
+            r.prompt.len() < lanes[l].t,
+            "prompt longer than ctx_len - 1 ({}) for model {} in \
+             decode request stream — pre-truncate (keeping the tail) \
+             with coordinator::prompt_tokens",
+            lanes[l].t - 1, names[l]
+        );
+    }
     if let Some(s) = schedule {
         s.validate(requests.len())?;
     }
@@ -328,23 +430,10 @@ pub(crate) fn run_loop_with(
     let t0 = Instant::now();
     let mut clock = Clock::new(schedule);
     let mut pending = ArrivalQueue::new(requests.len(), schedule);
-    // Admitted requests awaiting a slot, ordered by (arrival, index) —
-    // the scheduler picks from this set.
-    let mut ready: Vec<usize> = Vec::new();
-    let mut tokens = vec![0i32; b * t];
-    let mut pos = vec![0i32; b];
-    let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
-    let mut results: Vec<RequestResult> =
+    // (lane, result) pairs — the lane tag feeds the per-model stats
+    // split after the loop and never reaches the caller.
+    let mut results: Vec<(usize, RequestResult)> =
         Vec::with_capacity(requests.len());
-    let mut engine_steps = 0u64;
-    let mut slot_steps = 0u64;
-    let mut prefill_steps = 0u64;
-
-    // KV path: `refill` marks rows whose cache must be (re)populated
-    // from the token buffer before the next step.
-    let needs_prefill = backend.needs_prefill();
-    let mut refill = vec![0f32; b];
-    let mut any_refill = false;
 
     loop {
         let now = clock.now_ms(&t0);
@@ -355,24 +444,30 @@ pub(crate) fn run_loop_with(
         // release a successor that is itself already due.
         loop {
             let mut moved = false;
-            let free = slots.iter().filter(|s| s.is_none()).count();
+            let free: Vec<usize> = lanes
+                .iter()
+                .map(|ln| ln.slots.iter().filter(|s| s.is_none())
+                    .count())
+                .collect();
             while let Some(i) = pending.pop_ready(now) {
                 moved = true;
+                let l = lane_of[i];
                 let arrival = pending.arrival_of(i);
                 // a request that will seat immediately never consults
-                // the policy — only genuine waiters can be shed
-                if ready.len() < free
-                    || admission.admit(ready.len() - free)
+                // the policy — only genuine waiters can be shed; the
+                // waiting count is the request's OWN lane's queue
+                if lanes[l].ready.len() < free[l]
+                    || admission.admit(lanes[l].ready.len() - free[l])
                 {
-                    // keep the ready set sorted by (arrival, index):
+                    // keep each ready set sorted by (arrival, index):
                     // pops arrive in that order already EXCEPT a
                     // closed-loop successor released by a failure,
                     // whose back-dated arrival can predate entries
                     // admitted earlier in this fixpoint — it must
                     // queue ahead of them, not behind
-                    pending.insert_ready(&mut ready, i);
+                    pending.insert_ready(&mut lanes[l].ready, i);
                 } else {
-                    results.push(RequestResult {
+                    results.push((l, RequestResult {
                         id: requests[i].id,
                         tokens: Vec::new(),
                         queue_steps: 0,
@@ -382,7 +477,7 @@ pub(crate) fn run_loop_with(
                         ttft_ms: 0.0,
                         latency_ms: 0.0,
                         outcome: RequestOutcome::Shed,
-                    });
+                    }));
                     // rejection happens AT arrival (the telemetry
                     // above says so); the closed-loop successor is
                     // released from that instant, not from the lazy
@@ -392,29 +487,32 @@ pub(crate) fn run_loop_with(
                 }
             }
             if let Some(d) = deadline {
-                let mut k = 0;
-                while k < ready.len() {
-                    let i = ready[k];
-                    let arrival = pending.arrival_of(i);
-                    if now - arrival > d {
-                        ready.remove(k);
-                        moved = true;
-                        // the caller gave up at arrival + d; lazy
-                        // discovery must not inflate the reported wait
-                        results.push(RequestResult {
-                            id: requests[i].id,
-                            tokens: Vec::new(),
-                            queue_steps: 0,
-                            decode_steps: 0,
-                            arrival_ms: arrival,
-                            queue_ms: d,
-                            ttft_ms: d,
-                            latency_ms: d,
-                            outcome: RequestOutcome::Expired,
-                        });
-                        pending.on_complete(i, arrival + d);
-                    } else {
-                        k += 1;
+                for (l, lane) in lanes.iter_mut().enumerate() {
+                    let mut k = 0;
+                    while k < lane.ready.len() {
+                        let i = lane.ready[k];
+                        let arrival = pending.arrival_of(i);
+                        if now - arrival > d {
+                            lane.ready.remove(k);
+                            moved = true;
+                            // the caller gave up at arrival + d; lazy
+                            // discovery must not inflate the reported
+                            // wait
+                            results.push((l, RequestResult {
+                                id: requests[i].id,
+                                tokens: Vec::new(),
+                                queue_steps: 0,
+                                decode_steps: 0,
+                                arrival_ms: arrival,
+                                queue_ms: d,
+                                ttft_ms: d,
+                                latency_ms: d,
+                                outcome: RequestOutcome::Expired,
+                            }));
+                            pending.on_complete(i, arrival + d);
+                        } else {
+                            k += 1;
+                        }
                     }
                 }
             }
@@ -423,57 +521,62 @@ pub(crate) fn run_loop_with(
             }
         }
 
-        // Scheduling: fill every free slot with the policy's pick
-        // from the ready set. Zero-budget requests complete the
-        // moment they are picked (greedy with `max_new_tokens == 0`
-        // decodes nothing) and never occupy a slot.
-        for s in 0..b {
-            if slots[s].is_some() {
-                continue;
-            }
-            while !ready.is_empty() {
-                let k = scheduler.pick(&ready, requests);
-                anyhow::ensure!(k < ready.len(),
-                                "scheduler {} picked {k} from a ready \
-                                 set of {}", scheduler.name(),
-                                ready.len());
-                let i = ready.remove(k);
-                let arrival = pending.arrival_of(i);
-                if requests[i].max_new_tokens == 0 {
-                    results.push(RequestResult {
-                        id: requests[i].id,
-                        tokens: Vec::new(),
-                        queue_steps: engine_steps,
-                        decode_steps: 0,
-                        arrival_ms: arrival,
-                        queue_ms: now - arrival,
-                        ttft_ms: now - arrival,
-                        latency_ms: now - arrival,
-                        outcome: RequestOutcome::Completed,
-                    });
-                    pending.on_complete(i, now);
+        // Scheduling: fill every free slot of every lane with the
+        // policy's pick from that lane's ready set. Zero-budget
+        // requests complete the moment they are picked (greedy with
+        // `max_new_tokens == 0` decodes nothing) and never occupy a
+        // slot.
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            for s in 0..lane.b {
+                if lane.slots[s].is_some() {
                     continue;
                 }
-                fill_slot(&mut tokens, &mut pos, t, s,
-                          &requests[i].prompt);
-                if needs_prefill {
-                    refill[s] = 1.0;
-                    any_refill = true;
+                while !lane.ready.is_empty() {
+                    let k = scheduler.pick(&lane.ready, requests);
+                    anyhow::ensure!(k < lane.ready.len(),
+                                    "scheduler {} picked {k} from a \
+                                     ready set of {}", scheduler.name(),
+                                    lane.ready.len());
+                    let i = lane.ready.remove(k);
+                    let arrival = pending.arrival_of(i);
+                    if requests[i].max_new_tokens == 0 {
+                        results.push((l, RequestResult {
+                            id: requests[i].id,
+                            tokens: Vec::new(),
+                            queue_steps: lane.engine_steps,
+                            decode_steps: 0,
+                            arrival_ms: arrival,
+                            queue_ms: now - arrival,
+                            ttft_ms: now - arrival,
+                            latency_ms: now - arrival,
+                            outcome: RequestOutcome::Completed,
+                        }));
+                        pending.on_complete(i, now);
+                        continue;
+                    }
+                    fill_slot(&mut lane.tokens, &mut lane.pos, lane.t,
+                              s, &requests[i].prompt);
+                    if lane.needs_prefill {
+                        lane.refill[s] = 1.0;
+                        lane.any_refill = true;
+                    }
+                    lane.slots[s] = Some(Slot {
+                        req: i,
+                        out: Vec::new(),
+                        entered_step: lane.engine_steps,
+                        admit_ms: now,
+                        first_tok_ms: None,
+                    });
+                    break;
                 }
-                slots[s] = Some(Slot {
-                    req: i,
-                    out: Vec::new(),
-                    entered_step: engine_steps,
-                    admit_ms: now,
-                    first_tok_ms: None,
-                });
-                break;
             }
         }
 
-        if slots.iter().all(|s| s.is_none()) {
-            // the fill stage drains `ready` whenever a slot is free,
-            // so only future or gated arrivals can remain
+        if lanes.iter()
+            .all(|ln| ln.slots.iter().all(|s| s.is_none()))
+        {
+            // the fill stage drains every ready set whenever a slot
+            // is free, so only future or gated arrivals can remain
             if pending.is_empty() {
                 break;
             }
@@ -490,89 +593,167 @@ pub(crate) fn run_loop_with(
             }
         }
 
-        let occupied = slots.iter().filter(|s| s.is_some()).count();
-        if needs_prefill && any_refill {
-            // populate the marked rows' caches (positions up to and
-            // including `pos`) from their prompt rows; other rows
-            // pass through untouched
-            backend.prefill(&tokens, &pos, &refill)?;
-            prefill_steps += 1;
-            refill.fill(0.0);
-            any_refill = false;
-            clock.on_prefill();
-        }
-        let lv = backend.step(&tokens, &pos)?;
-        engine_steps += 1;
-        slot_steps += occupied as u64;
-        clock.on_step();
-        let now = clock.now_ms(&t0);
+        // One model step per lane with work, in lane order on the
+        // shared clock — each lane's invocation advances the virtual
+        // clock, so an N-model registry pays N step costs per round
+        // (one accelerator, N resident models served in turn).
+        for (lane, backend) in lanes.iter_mut().zip(backends.iter_mut())
+        {
+            let occupied =
+                lane.slots.iter().filter(|s| s.is_some()).count();
+            if occupied == 0 {
+                continue;
+            }
+            if lane.needs_prefill && lane.any_refill {
+                // populate the marked rows' caches (positions up to
+                // and including `pos`) from their prompt rows; other
+                // rows pass through untouched
+                backend.prefill(&lane.tokens, &lane.pos,
+                                &lane.refill)?;
+                lane.prefill_steps += 1;
+                lane.refill.fill(0.0);
+                lane.any_refill = false;
+                clock.on_prefill();
+            }
+            let lv = backend.step(&lane.tokens, &lane.pos)?;
+            lane.engine_steps += 1;
+            lane.slot_steps += occupied as u64;
+            clock.on_step();
+            let now = clock.now_ms(&t0);
 
-        for s in 0..b {
-            let finished = {
-                let Some(slot) = slots[s].as_mut() else { continue };
-                let max_new = requests[slot.req].max_new_tokens;
-                let row = &lv[s * vocab..(s + 1) * vocab];
-                let cur = pos[s] as usize;
-                let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
-                    (0..=cur).map(|j| tokens[s * t + j] as u32)
-                        .collect()
-                } else {
-                    Vec::new()
-                };
-                let next = topk::pick_next(row, &ctx,
-                                           dp.no_repeat_ngram);
-                let new_pos = cur + 1;
-                let done = if next == EOS || new_pos >= t - 1 {
-                    if next != EOS && new_pos < t {
+            let (t, vocab) = (lane.t, lane.vocab);
+            for s in 0..lane.b {
+                let finished = {
+                    let Some(slot) = lane.slots[s].as_mut() else {
+                        continue;
+                    };
+                    let max_new = requests[slot.req].max_new_tokens;
+                    let row = &lv[s * vocab..(s + 1) * vocab];
+                    let cur = lane.pos[s] as usize;
+                    let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
+                        (0..=cur).map(|j| lane.tokens[s * t + j] as u32)
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let next = topk::pick_next(row, &ctx,
+                                               dp.no_repeat_ngram);
+                    let new_pos = cur + 1;
+                    let done = if next == EOS || new_pos >= t - 1 {
+                        if next != EOS && new_pos < t {
+                            slot.out.push(next);
+                        }
+                        true
+                    } else {
+                        lane.tokens[s * t + new_pos] = next as i32;
+                        lane.pos[s] = new_pos as i32;
                         slot.out.push(next);
+                        slot.out.len() >= max_new
+                    };
+                    if slot.first_tok_ms.is_none()
+                        && !slot.out.is_empty()
+                    {
+                        slot.first_tok_ms = Some(now);
                     }
-                    true
-                } else {
-                    tokens[s * t + new_pos] = next as i32;
-                    pos[s] = new_pos as i32;
-                    slot.out.push(next);
-                    slot.out.len() >= max_new
+                    done
                 };
-                if slot.first_tok_ms.is_none() && !slot.out.is_empty() {
-                    slot.first_tok_ms = Some(now);
+                if finished {
+                    let slot = lane.slots[s].take().unwrap();
+                    let arrival = pending.arrival_of(slot.req);
+                    let lane_idx = lane_of[slot.req];
+                    results.push((lane_idx, RequestResult {
+                        id: requests[slot.req].id,
+                        queue_steps: slot.entered_step,
+                        decode_steps: lane.engine_steps
+                            - slot.entered_step,
+                        arrival_ms: arrival,
+                        queue_ms: slot.admit_ms - arrival,
+                        ttft_ms: slot.first_tok_ms.unwrap_or(now)
+                            - arrival,
+                        latency_ms: now - arrival,
+                        tokens: slot.out,
+                        outcome: RequestOutcome::Completed,
+                    }));
+                    pending.on_complete(slot.req, now);
+                    // the freed slot refills from its lane's queue at
+                    // the top of the next iteration, before the next
+                    // model step
                 }
-                done
-            };
-            if finished {
-                let slot = slots[s].take().unwrap();
-                let arrival = pending.arrival_of(slot.req);
-                results.push(RequestResult {
-                    id: requests[slot.req].id,
-                    queue_steps: slot.entered_step,
-                    decode_steps: engine_steps - slot.entered_step,
-                    arrival_ms: arrival,
-                    queue_ms: slot.admit_ms - arrival,
-                    ttft_ms: slot.first_tok_ms.unwrap_or(now)
-                        - arrival,
-                    latency_ms: now - arrival,
-                    tokens: slot.out,
-                    outcome: RequestOutcome::Completed,
-                });
-                pending.on_complete(slot.req, now);
-                // the freed slot refills from the queue at the top of
-                // the next iteration, before the next model step
             }
         }
     }
 
-    results.sort_by_key(|r| r.id);
+    results.sort_by_key(|(_, r)| r.id);
     let wall_secs = t0.elapsed().as_secs_f64();
     let sim_ms = clock.now_ms(&t0);
-    let stats = ServeStats::from_results(
-        &results, requests.len(), b, engine_steps, prefill_steps,
-        slot_steps, wall_secs, sim_ms);
-    Ok(ServeReport { results, stats })
+
+    let total_batch: usize = lanes.iter().map(|ln| ln.b).sum();
+    let engine_steps: u64 =
+        lanes.iter().map(|ln| ln.engine_steps).sum();
+    let prefill_steps: u64 =
+        lanes.iter().map(|ln| ln.prefill_steps).sum();
+    let slot_steps: u64 = lanes.iter().map(|ln| ln.slot_steps).sum();
+    // capacity in slot-steps: each lane only offers its own batch
+    // during its own steps, so heterogeneous lanes cannot use the
+    // aggregate `engine_steps * decode_batch` product (for one lane
+    // the two are the same expression)
+    let capacity: u64 =
+        lanes.iter().map(|ln| ln.engine_steps * ln.b as u64).sum();
+
+    let all_refs: Vec<&RequestResult> =
+        results.iter().map(|(_, r)| r).collect();
+    let mut stats = ServeStats::from_results(
+        &all_refs, requests.len(), total_batch, engine_steps,
+        prefill_steps, slot_steps, wall_secs, sim_ms);
+    stats.occupancy = if capacity == 0 {
+        0.0
+    } else {
+        slot_steps as f64 / capacity as f64
+    };
+
+    // a single lane's block is just the aggregate; the multi-lane
+    // split aggregates through references — decoded token buffers are
+    // never copied for telemetry
+    let per_model: Vec<ModelStats> = if n_lanes == 1 {
+        vec![ModelStats { model: names[0].clone(),
+                          stats: stats.clone() }]
+    } else {
+        names
+            .iter()
+            .enumerate()
+            .map(|(l, name)| {
+                let lane_refs: Vec<&RequestResult> = results
+                    .iter()
+                    .filter(|(rl, _)| *rl == l)
+                    .map(|(_, r)| r)
+                    .collect();
+                let offered =
+                    lane_of.iter().filter(|&&x| x == l).count();
+                let ln = &lanes[l];
+                let mut st = ServeStats::from_results(
+                    &lane_refs, offered, ln.b, ln.engine_steps,
+                    ln.prefill_steps, ln.slot_steps, wall_secs,
+                    sim_ms);
+                // wall time is shared by every lane, so dividing it
+                // by one lane's steps would inflate the per-step cost
+                // ~N x; report the call-wide mean instead
+                st.mean_step_ms = stats.mean_step_ms;
+                ModelStats { model: name.clone(), stats: st }
+            })
+            .collect()
+    };
+
+    let results: Vec<RequestResult> =
+        results.into_iter().map(|(_, r)| r).collect();
+    Ok(ServeReport { results, stats, per_model })
 }
 
-#[cfg(test)]
-pub(crate) mod mock {
+pub mod mock {
     //! Deterministic artifact-free backends for queueing/clock/policy
-    //! tests (also used by `generate::loadgen` unit tests).
+    //! tests (also used by `generate::loadgen` unit tests and the
+    //! serve-invariant property suite in `rust/tests/`, which is why
+    //! this module is compiled unconditionally — it has no runtime
+    //! dependencies and is never on a hot path).
 
     use super::LogitsBackend;
 
@@ -1205,6 +1386,128 @@ mod tests {
                 assert_eq!(a.stats.sim_ms, b.stats.sim_ms, "{label}");
             }
         }
+    }
+
+    #[test]
+    fn single_lane_per_model_block_mirrors_aggregate() {
+        // the legacy single-engine entry points report one "default"
+        // per-model block that is exactly the aggregate stats
+        let requests = reqs(&[3, 1, 4, 2]);
+        let s = sched(&[0.0, 0.5, 2.0, 2.0], 1.0);
+        let mut be = MockBackend::new(2, 16, false);
+        let report = run_loop(&mut be, &requests,
+                              &DecodeParams::default(), Some(&s))
+            .unwrap();
+        assert_eq!(report.per_model.len(), 1);
+        let m = &report.per_model[0];
+        assert_eq!(m.model, "default");
+        assert_eq!(m.stats.to_json().to_string(),
+                   report.stats.to_json().to_string());
+    }
+
+    #[test]
+    fn multi_lane_routes_requests_and_sums_to_aggregate() {
+        // two models with one slot each, two requests per model, all
+        // arriving at t=0 with budget 2: lanes step in order on the
+        // shared clock, each lane serves only its own queue, and the
+        // per-model blocks partition the aggregate
+        let requests = reqs(&[2, 2, 2, 2]);
+        let lane_of = [0usize, 0, 1, 1];
+        let names = [String::from("a"), String::from("b")];
+        let s = sched(&[0.0; 4], 1.0);
+        let mut a = MockBackend::new(1, 16, false);
+        let mut b = MockBackend::new(1, 16, false);
+        let mut lanes: [&mut dyn LogitsBackend; 2] =
+            [&mut a, &mut b];
+        let report = run_lanes_with(
+            &mut lanes, &names, &lane_of, &requests,
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded)
+            .unwrap();
+        let r = &report.results;
+        // lane a steps before lane b each round: a's requests finish
+        // at odd instants, b's one step later
+        assert_eq!(
+            r.iter().map(|x| x.latency_ms).collect::<Vec<_>>(),
+            vec![3.0, 7.0, 4.0, 8.0]
+        );
+        assert_eq!(r[1].queue_ms, 4.0);
+        assert_eq!(r[3].queue_ms, 4.0);
+        for x in r {
+            assert_eq!(x.tokens, vec![5, 5]);
+            assert!(x.outcome.is_completed());
+        }
+        let st = &report.stats;
+        assert_eq!(st.sim_ms, 8.0);
+        assert_eq!(st.engine_steps, 8);
+        assert_eq!(st.slot_steps, 8);
+        assert_eq!(st.decode_batch, 2);
+        assert!((st.occupancy - 1.0).abs() < 1e-12);
+        // per-model partition: counts sum to the aggregate
+        assert_eq!(report.per_model.len(), 2);
+        let (ma, mb) = (&report.per_model[0].stats,
+                        &report.per_model[1].stats);
+        assert_eq!(report.per_model[0].model, "a");
+        assert_eq!((ma.requests, ma.completed), (2, 2));
+        assert_eq!((mb.requests, mb.completed), (2, 2));
+        assert_eq!(ma.engine_steps + mb.engine_steps,
+                   st.engine_steps);
+        assert_eq!(ma.generated_tokens + mb.generated_tokens,
+                   st.generated_tokens);
+        assert_eq!(ma.slot_steps + mb.slot_steps, st.slot_steps);
+        // each lane fully occupied during its own steps
+        assert!((ma.occupancy - 1.0).abs() < 1e-12);
+        // per-request steps are denominated in the lane's own model
+        // steps (4 per lane), not the 8 aggregate steps
+        assert_eq!(r[1].queue_steps, 2);
+        assert_eq!(r[1].decode_steps, 2);
+    }
+
+    #[test]
+    fn multi_lane_admission_sees_per_model_queues() {
+        // depth-0 admission with two one-slot lanes: each lane's
+        // first request seats (a free slot never sheds), each lane's
+        // second is shed against ITS OWN queue — lane b's free slot
+        // must not save lane a's waiter or vice versa
+        let requests = reqs(&[2, 2, 2]);
+        let lane_of = [0usize, 0, 1];
+        let names = [String::from("a"), String::from("b")];
+        let s = sched(&[0.0; 3], 1.0);
+        let mut a = MockBackend::new(1, 16, false);
+        let mut b = MockBackend::new(1, 16, false);
+        let mut lanes: [&mut dyn LogitsBackend; 2] =
+            [&mut a, &mut b];
+        let report = run_lanes_with(
+            &mut lanes, &names, &lane_of, &requests,
+            &DecodeParams::default(), Some(&s), &Fifo,
+            &MaxQueueDepth(0))
+            .unwrap();
+        let r = &report.results;
+        assert!(r[0].outcome.is_completed());
+        assert_eq!(r[1].outcome, RequestOutcome::Shed);
+        assert!(r[2].outcome.is_completed());
+        assert_eq!(report.per_model[0].stats.shed, 1);
+        assert_eq!(report.per_model[1].stats.shed, 0);
+    }
+
+    #[test]
+    fn multi_lane_rejects_bad_routing_and_oversize_prompts() {
+        let names = [String::from("a"), String::from("b")];
+        let run = |lane: usize, requests: &[DecodeRequest]| {
+            let mut a = MockBackend::new(1, 16, false);
+            let mut b = MockBackend::new(1, 8, false);
+            let mut lanes: [&mut dyn LogitsBackend; 2] =
+                [&mut a, &mut b];
+            run_lanes_with(&mut lanes, &names, &[lane], requests,
+                           &DecodeParams::default(), None, &Fifo,
+                           &Unbounded)
+        };
+        // lane index out of range
+        assert!(run(2, &reqs(&[1])).is_err());
+        // prompt fits lane a (t=16) but not lane b (t=8)
+        let long = vec![DecodeRequest::new(0, vec![1; 10], 2)];
+        assert!(run(0, &long).is_ok());
+        let err = run(1, &long).unwrap_err();
+        assert!(err.to_string().contains("model b"), "{err}");
     }
 
     #[test]

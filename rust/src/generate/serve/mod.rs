@@ -23,6 +23,12 @@
 //!    the default.
 //!  * [`clock`] — the loop's notion of time ([`clock::Schedule`],
 //!    the virtual/wall `Clock`, the arrival queue).
+//!  * [`registry`] — the multi-model serving registry:
+//!    [`registry::ModelRegistry`] owns N named engines (the SPDF
+//!    checkpoint sweep: dense / s50 / s75) and routes one request
+//!    stream across them by [`DecodeRequest::model`]; slots are
+//!    (model, slot) pairs with per-model `decode_batch` budgets and
+//!    the scheduling/admission decisions stay model-aware.
 //!  * [`telemetry`] — per-request results with a
 //!    [`telemetry::RequestOutcome`] (completed / shed / expired),
 //!    aggregate [`telemetry::ServeStats`] including shed-rate and
@@ -38,6 +44,7 @@ pub mod admission;
 pub mod clock;
 pub mod core;
 pub mod policy;
+pub mod registry;
 pub mod telemetry;
 
 pub use self::admission::AdmissionPolicy;
@@ -45,8 +52,9 @@ pub use self::clock::Schedule;
 pub use self::core::{serve, serve_kv, serve_timed, serve_with,
                      ServeConfig};
 pub use self::policy::Scheduler;
-pub use self::telemetry::{RequestOutcome, RequestResult, ServeReport,
-                          ServeStats};
+pub use self::registry::ModelRegistry;
+pub use self::telemetry::{ModelStats, RequestOutcome, RequestResult,
+                          ServeReport, ServeStats};
 
 /// One queued decode request.
 #[derive(Debug, Clone)]
@@ -62,17 +70,31 @@ pub struct DecodeRequest {
     /// higher values are served first, FIFO within a class. Ignored
     /// by every other scheduler; 0 by default.
     pub priority: u8,
+    /// Target model for [`registry::ModelRegistry`] routing: `None`
+    /// (the default) routes to the registry's default model; `Some`
+    /// must name a registered model. The single-engine entry points
+    /// ([`serve`], [`serve_kv`], [`serve_timed`], [`serve_with`])
+    /// serve every request on their one engine and never consult it.
+    pub model: Option<String>,
 }
 
 impl DecodeRequest {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize)
                -> DecodeRequest {
-        DecodeRequest { id, prompt, max_new_tokens, priority: 0 }
+        DecodeRequest { id, prompt, max_new_tokens, priority: 0,
+                        model: None }
     }
 
     /// Builder-style priority-class assignment.
     pub fn with_priority(mut self, priority: u8) -> DecodeRequest {
         self.priority = priority;
+        self
+    }
+
+    /// Builder-style model routing tag (see [`Self::model`]).
+    pub fn with_model(mut self, model: impl Into<String>)
+                      -> DecodeRequest {
+        self.model = Some(model.into());
         self
     }
 }
@@ -88,5 +110,14 @@ mod tests {
         let r = r.with_priority(5);
         assert_eq!(r.priority, 5);
         assert_eq!((r.id, r.max_new_tokens), (3, 8));
+    }
+
+    #[test]
+    fn request_model_defaults_to_none() {
+        let r = DecodeRequest::new(1, vec![1], 4);
+        assert_eq!(r.model, None);
+        let r = r.with_model("s75");
+        assert_eq!(r.model.as_deref(), Some("s75"));
+        assert_eq!(r.priority, 0);
     }
 }

@@ -1,0 +1,180 @@
+//! Multi-model serving registry: one serve loop, N resident models.
+//!
+//! SPDF's training recipe yields a *family* of checkpoints — the dense
+//! baseline plus the sparse-pre-trained/dense-fine-tuned variants at
+//! 50%/75% sparsity — and a real deployment serves several of them at
+//! once from one process. [`ModelRegistry`] holds N named
+//! [`DecodeEngine`]s (each with its own literal-resident parameter
+//! cache and, on the KV path, its own session state, typically loaded
+//! from separate artifact dirs such as `dense/`, `s50/`, `s75/`) and
+//! routes a single request stream across them through the
+//! scheduler-driven core: [`DecodeRequest::model`] names the target
+//! model (`None` → the default, the first registered entry), slots
+//! become (model, slot) pairs with per-model `decode_batch` budgets,
+//! and the `Scheduler`/`AdmissionPolicy` decisions stay model-aware —
+//! a freed `s75` slot only seats `s75`-ready requests, and the queue
+//! depth an admission policy sees is the request's own model's queue.
+//!
+//! The registry adds routing, never semantics: a registry holding a
+//! single model reproduces the plain [`core::serve_timed`] output
+//! bit-for-bit on both engine paths (pinned by the integration
+//! suite), and per-model [`super::telemetry::ModelStats`] blocks sum
+//! to the aggregate [`super::telemetry::ServeStats`]
+//! (property-tested in `rust/tests/`).
+
+use crate::generate::engine::DecodeEngine;
+use crate::generate::DecodeParams;
+
+use super::clock::Schedule;
+use super::core::{self, LogitsBackend, ServeConfig};
+use super::telemetry::ServeReport;
+use super::DecodeRequest;
+
+/// N named decode engines behind one serve loop. The first registered
+/// entry is the **default model** — the target of requests whose
+/// [`DecodeRequest::model`] is `None`.
+pub struct ModelRegistry<'e, 'a> {
+    entries: Vec<(String, &'e DecodeEngine<'a>)>,
+}
+
+impl<'e, 'a> ModelRegistry<'e, 'a> {
+    /// Registry with its default model. More models join via
+    /// [`Self::register`].
+    pub fn new(default_name: impl Into<String>,
+               engine: &'e DecodeEngine<'a>)
+               -> anyhow::Result<ModelRegistry<'e, 'a>> {
+        let mut r = ModelRegistry { entries: Vec::new() };
+        r.register(default_name, engine)?;
+        Ok(r)
+    }
+
+    /// Add a named model. Names must be unique and non-empty; the
+    /// same engine may be registered under several names (useful for
+    /// A/B routing and for the cross-engine golden tests).
+    pub fn register(&mut self, name: impl Into<String>,
+                    engine: &'e DecodeEngine<'a>)
+                    -> anyhow::Result<()> {
+        let name = name.into();
+        anyhow::ensure!(!name.is_empty(),
+                        "registry model name must be non-empty");
+        anyhow::ensure!(
+            self.entries.iter().all(|(n, _)| *n != name),
+            "model {name} already registered"
+        );
+        self.entries.push((name, engine));
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Never true — [`Self::new`] always registers the default entry
+    /// (kept alongside [`Self::len`] for the usual pairing).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered model names, registration order (default first).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The default model's name (the first registered entry).
+    pub fn default_model(&self) -> &str {
+        &self.entries[0].0
+    }
+
+    /// Is the KV-resident path available on **every** registered
+    /// engine? (The serve loop runs all lanes on one path.)
+    pub fn kv_available(&self) -> bool {
+        self.entries.iter().all(|(_, e)| e.kv_available())
+    }
+
+    /// Lane index for one request's model tag: `None` routes to the
+    /// default (index 0), `Some(name)` must match a registered model
+    /// exactly.
+    pub fn resolve(&self, model: Option<&str>)
+                   -> anyhow::Result<usize> {
+        match model {
+            None => Ok(0),
+            Some(m) => self
+                .entries
+                .iter()
+                .position(|(n, _)| n == m)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "model {m} not in registry (have: {})",
+                    self.names().join(", "))),
+        }
+    }
+
+    /// Per-request lane assignment for a stream — the routing table
+    /// the serve loop runs on. Unknown model names error up front,
+    /// before any model work.
+    pub fn lane_of(&self, requests: &[DecodeRequest])
+                   -> anyhow::Result<Vec<usize>> {
+        requests
+            .iter()
+            .map(|r| self.resolve(r.model.as_deref()))
+            .collect()
+    }
+
+    /// [`core::serve`] across the registry: whole stream present at
+    /// entry, literal-resident path, FIFO + unbounded.
+    pub fn serve(&self, requests: &[DecodeRequest], dp: &DecodeParams)
+                 -> anyhow::Result<ServeReport> {
+        self.serve_with(requests, dp, &ServeConfig::new(false))
+    }
+
+    /// [`Self::serve`] over the KV-resident incremental path (every
+    /// lane gets its own fresh session state).
+    pub fn serve_kv(&self, requests: &[DecodeRequest],
+                    dp: &DecodeParams) -> anyhow::Result<ServeReport> {
+        self.serve_with(requests, dp, &ServeConfig::new(true))
+    }
+
+    /// Arrival-gated serving on the virtual clock — one
+    /// [`Schedule`]'s stream multiplexed across every registered
+    /// model. With a single registered model this is bit-for-bit
+    /// [`core::serve_timed`].
+    pub fn serve_timed(&self, requests: &[DecodeRequest],
+                       dp: &DecodeParams, use_kv: bool,
+                       schedule: &Schedule)
+                       -> anyhow::Result<ServeReport> {
+        self.serve_with(requests, dp,
+                        &ServeConfig::timed(use_kv, schedule))
+    }
+
+    /// The fully explicit form: engine path + schedule + policies,
+    /// routed per-request by [`DecodeRequest::model`].
+    pub fn serve_with(&self, requests: &[DecodeRequest],
+                      dp: &DecodeParams, cfg: &ServeConfig)
+                      -> anyhow::Result<ServeReport> {
+        let lane_of = self.lane_of(requests)?;
+        let names: Vec<String> =
+            self.entries.iter().map(|(n, _)| n.clone()).collect();
+        let mut backends: Vec<Box<dyn LogitsBackend + 'e>> = self
+            .entries
+            .iter()
+            .map(|(name, engine)| {
+                // *engine copies the full-'e reference out of the
+                // entry (a deref-coerced reborrow would be too short
+                // for the Box<dyn + 'e> annotation)
+                core::backend_for(*engine, cfg.use_kv).map_err(|e| {
+                    e.context(format!("building {} backend for \
+                                       model {name}",
+                                      if cfg.use_kv {
+                                          "kv"
+                                      } else {
+                                          "literal"
+                                      }))
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut refs: Vec<&mut dyn LogitsBackend> =
+            backends.iter_mut().map(|b| b.as_mut()).collect();
+        core::run_lanes_with(&mut refs, &names, &lane_of, requests,
+                             dp, cfg.schedule, cfg.scheduler,
+                             cfg.admission)
+    }
+}

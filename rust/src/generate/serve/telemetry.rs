@@ -130,12 +130,14 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// Fold a finished result set into the aggregate block. `results`
-    /// need not be sorted; `requests` is the offered count (every
-    /// request lands in exactly one outcome bucket).
+    /// Fold a finished result set into a stats block. Takes
+    /// references so the serve loop's per-model split never copies
+    /// decoded token buffers just to aggregate. `results` need not be
+    /// sorted; `requests` is the offered count (every request lands
+    /// in exactly one outcome bucket).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_results(
-        results: &[RequestResult],
+        results: &[&RequestResult],
         requests: usize,
         decode_batch: usize,
         engine_steps: u64,
@@ -165,7 +167,7 @@ impl ServeStats {
         let collect = |f: fn(&RequestResult) -> f64| -> Summary {
             summarize(&results.iter()
                 .filter(|r| r.outcome.is_completed())
-                .map(f)
+                .map(|r| f(r))
                 .collect::<Vec<f64>>())
         };
         let per_sec = |tokens: u64| {
@@ -239,16 +241,58 @@ impl ServeStats {
     }
 }
 
-/// Results (sorted by request id) + aggregate stats.
+/// One model's share of a (possibly multi-model) serve call.
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    /// Registry name of the model ("default" for the single-model
+    /// entry points that never name one).
+    pub model: String,
+    /// The same [`ServeStats`] block, restricted to this model's
+    /// requests and engine lane. The countable fields (requests,
+    /// completed/shed/expired, generated_tokens, engine/prefill/slot
+    /// steps) sum to the aggregate block across models; rate fields
+    /// share the aggregate's wall/sim denominators so they sum too.
+    /// `mean_step_ms` is the exception: wall time is shared across
+    /// lanes, so every block reports the call-wide mean step cost
+    /// rather than a (meaningless) per-lane division.
+    pub stats: ServeStats,
+}
+
+/// Results (sorted by request id) + aggregate stats, plus the
+/// per-model breakdown (one entry per registry lane; a single entry
+/// mirroring the aggregate on the single-model paths).
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub results: Vec<RequestResult>,
     pub stats: ServeStats,
+    pub per_model: Vec<ModelStats>,
+}
+
+impl ServeReport {
+    /// Aggregate stats JSON, with a `"models"` object of per-model
+    /// [`ServeStats`] blocks appended when the serve call actually
+    /// multiplexed more than one model (the single-model shape stays
+    /// byte-identical to the pre-registry emitter).
+    pub fn stats_json(&self) -> Json {
+        let mut j = self.stats.to_json();
+        if self.per_model.len() > 1 {
+            let mut models = Json::obj();
+            for m in &self.per_model {
+                models.push(&m.model, m.stats.to_json());
+            }
+            j.push("models", models);
+        }
+        j
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn refs(results: &[RequestResult]) -> Vec<&RequestResult> {
+        results.iter().collect()
+    }
 
     fn result(id: u64, tokens: usize, latency: f64,
               outcome: RequestOutcome) -> RequestResult {
@@ -273,8 +317,8 @@ mod tests {
             result(2, 0, 0.0, RequestOutcome::Shed),
             result(3, 0, 5.0, RequestOutcome::Expired),
         ];
-        let st = ServeStats::from_results(&results, 4, 2, 8, 0, 14,
-                                          0.5, 40.0);
+        let st = ServeStats::from_results(&refs(&results), 4, 2, 8, 0,
+                                          14, 0.5, 40.0);
         assert_eq!((st.completed, st.shed, st.expired), (2, 1, 1));
         assert_eq!(st.shed_rate, 0.5);
         assert_eq!(st.generated_tokens, 8);
@@ -294,8 +338,8 @@ mod tests {
             result(0, 3, 3.0, RequestOutcome::Completed),
             result(1, 2, 5.0, RequestOutcome::Completed),
         ];
-        let st = ServeStats::from_results(&results, 2, 2, 5, 0, 5,
-                                          0.25, 5.0);
+        let st = ServeStats::from_results(&refs(&results), 2, 2, 5, 0,
+                                          5, 0.25, 5.0);
         assert_eq!(st.shed_rate, 0.0);
         assert_eq!(st.completed, 2);
         assert_eq!(st.tokens_per_sec, st.goodput_tokens_per_sec);
@@ -310,8 +354,8 @@ mod tests {
             result(2, 5, 450.0, RequestOutcome::Completed),
             result(3, 0, 0.0, RequestOutcome::Shed),
         ];
-        let st = ServeStats::from_results(&results, 4, 2, 10, 2, 17,
-                                          0.5, 500.0);
+        let st = ServeStats::from_results(&refs(&results), 4, 2, 10,
+                                          2, 17, 0.5, 500.0);
         let j = st.to_json();
         assert_eq!(j.get("tokens_per_sec").unwrap().as_f64(),
                    Some(30.0));
@@ -325,6 +369,40 @@ mod tests {
         assert_eq!(j.get("shed_rate").unwrap().as_f64(), Some(0.25));
         let lat = j.get("latency_ms").unwrap();
         assert_eq!(lat.get("p50").unwrap().as_f64(), Some(300.0));
+    }
+
+    #[test]
+    fn report_stats_json_nests_per_model_blocks_only_for_registries() {
+        let results = vec![
+            result(0, 3, 4.0, RequestOutcome::Completed),
+            result(1, 2, 6.0, RequestOutcome::Completed),
+        ];
+        let stats = ServeStats::from_results(&refs(&results), 2, 2, 5,
+                                             0, 5, 0.5, 6.0);
+        let solo = ServeReport {
+            results: results.clone(),
+            stats: stats.clone(),
+            per_model: vec![ModelStats { model: "default".into(),
+                                         stats: stats.clone() }],
+        };
+        // single-model shape is byte-identical to the plain emitter
+        assert_eq!(solo.stats_json().to_string(),
+                   stats.to_json().to_string());
+        let multi = ServeReport {
+            results,
+            stats: stats.clone(),
+            per_model: vec![
+                ModelStats { model: "dense".into(),
+                             stats: stats.clone() },
+                ModelStats { model: "s75".into(), stats },
+            ],
+        };
+        let j = multi.stats_json();
+        let models = j.get("models").unwrap();
+        assert!(models.get("dense").is_some());
+        assert_eq!(models.get("s75").unwrap().get("completed")
+                       .unwrap().as_usize(),
+                   Some(2));
     }
 
     #[test]

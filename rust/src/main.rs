@@ -397,43 +397,200 @@ fn cmd_report_inner(run_dir: &PathBuf) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Decode-only serving setup shared by `serve` and `loadgen`: compile
-/// just the decode artifacts (skipping train/eval — and the KV pair
-/// too when `--engine literal` was asked for or the manifest predates
-/// it), then load checkpoint params or a seeded random init.
-fn decode_runtime_and_params(
-    engine: &Engine,
-    model: &str,
+/// One `--model` registry entry: `name` (a model in the default
+/// artifact dir), `name=dir` (the single model of `dir`'s manifest,
+/// served under registry name `name`) or `name=dir:inner` (model
+/// `inner` of `dir`'s manifest). The first entry is the registry's
+/// default model.
+struct ModelSpec {
+    name: String,
+    dir: PathBuf,
+    inner: Option<String>,
+}
+
+fn parse_model_specs(raw: &str) -> anyhow::Result<Vec<ModelSpec>> {
+    let default_dir = spdf::runtime::default_artifact_dir();
+    let mut specs: Vec<ModelSpec> = Vec::new();
+    for item in raw.split(',').filter(|s| !s.is_empty()) {
+        let item = item.trim();
+        let spec = match item.split_once('=') {
+            None => ModelSpec {
+                name: item.to_string(),
+                dir: default_dir.clone(),
+                inner: Some(item.to_string()),
+            },
+            Some((name, rest)) => {
+                anyhow::ensure!(!name.is_empty() && !rest.is_empty(),
+                                "bad --model entry {item} (want name, \
+                                 name=dir or name=dir:inner)");
+                let (dir, inner) = match rest.split_once(':') {
+                    Some((d, m)) => (d, Some(m.to_string())),
+                    None => (rest, None),
+                };
+                ModelSpec {
+                    name: name.to_string(),
+                    dir: PathBuf::from(dir),
+                    inner,
+                }
+            }
+        };
+        anyhow::ensure!(
+            specs.iter().all(|s| s.name != spec.name),
+            "registry name {} used twice in --model", spec.name
+        );
+        specs.push(spec);
+    }
+    anyhow::ensure!(!specs.is_empty(), "--model names no models");
+    Ok(specs)
+}
+
+/// Parse `--ckpt` into per-registry-name checkpoint paths: ""
+/// (random init everywhere), a bare path (single-entry registries
+/// only) or `name=path,...` pairs. Every name must match a `--model`
+/// entry exactly once — a typo'd or duplicated name would otherwise
+/// silently leave its model on random init.
+fn parse_ckpt_map(ckpt_flag: &str, specs: &[ModelSpec])
+                  -> anyhow::Result<Vec<(String, String)>> {
+    if ckpt_flag.is_empty() {
+        return Ok(Vec::new());
+    }
+    if !ckpt_flag.contains('=') {
+        anyhow::ensure!(specs.len() == 1,
+                        "--ckpt with a bare path needs a single-model \
+                         registry; use --ckpt name=path,... for {} \
+                         models", specs.len());
+        return Ok(vec![(specs[0].name.clone(),
+                        ckpt_flag.to_string())]);
+    }
+    let mut map: Vec<(String, String)> = Vec::new();
+    for item in ckpt_flag.split(',').filter(|s| !s.is_empty()) {
+        let (n, p) = item.trim().split_once('=').ok_or_else(
+            || anyhow::anyhow!("bad --ckpt entry {item} (want \
+                                name=path)"))?;
+        anyhow::ensure!(
+            specs.iter().any(|s| s.name == n),
+            "--ckpt names model {n}, which is not in --model (have: \
+             {})",
+            specs.iter().map(|s| s.name.as_str())
+                .collect::<Vec<_>>().join(", ")
+        );
+        anyhow::ensure!(map.iter().all(|(m, _)| m != n),
+                        "--ckpt names model {n} twice");
+        map.push((n.to_string(), p.to_string()));
+    }
+    Ok(map)
+}
+
+/// One loaded registry entry (runtime + host params). The `Engine`s
+/// (PJRT clients, one per distinct artifact dir) ride along so they
+/// outlive the compiled executables.
+struct LoadedModel {
+    name: String,
+    runtime: spdf::runtime::ModelRuntime,
+    params: Vec<spdf::runtime::HostTensor>,
+}
+
+/// Decode-only serving setup shared by `serve` and `loadgen`: for
+/// every `--model` entry, compile just the decode artifacts from its
+/// artifact dir (skipping train/eval — and the KV pair too when
+/// `--engine literal` was asked for or the manifest predates it),
+/// then load checkpoint params or a seeded random init.
+fn load_registry_models(
+    model_flag: &str,
     engine_flag: &str,
-    ckpt: &str,
+    ckpt_flag: &str,
     seed: u64,
-) -> anyhow::Result<(spdf::runtime::ModelRuntime,
-                     Vec<spdf::runtime::HostTensor>)> {
-    let mm0 = engine.manifest.models.get(model).ok_or_else(
-        || anyhow::anyhow!("model {model} not in manifest"))?;
-    let decode_artifacts = if engine_flag == "literal" {
-        vec!["logits_last"]
-    } else {
-        mm0.decode_artifact_names()
-    };
-    let runtime = engine.load_model_artifacts(model,
-                                              &decode_artifacts)?;
-    let state = match ckpt {
-        "" => spdf::train::TrainState::init(&runtime.manifest,
-                                            &mut Rng::new(seed)),
-        path => checkpoint::load(&PathBuf::from(path))?,
-    };
-    let params = state.param_tensors(&runtime.manifest);
-    Ok((runtime, params))
+) -> anyhow::Result<(Vec<Engine>, Vec<LoadedModel>)> {
+    let specs = parse_model_specs(model_flag)?;
+    let ckpts = parse_ckpt_map(ckpt_flag, &specs)?;
+    // one PJRT client per distinct artifact dir
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    for s in &specs {
+        if !dirs.contains(&s.dir) {
+            dirs.push(s.dir.clone());
+        }
+    }
+    let engines: Vec<Engine> = dirs
+        .iter()
+        .map(|d| {
+            Engine::cpu(d).map_err(|e| e.context(format!(
+                "loading artifact dir {}", d.display())))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let mut loaded = Vec::new();
+    for spec in &specs {
+        let engine = &engines[dirs.iter()
+            .position(|d| *d == spec.dir).unwrap()];
+        let inner = match &spec.inner {
+            Some(m) => m.clone(),
+            None => {
+                // `name=dir` with no inner model: the dir's manifest
+                // must be unambiguous
+                let names: Vec<&String> =
+                    engine.manifest.models.keys().collect();
+                anyhow::ensure!(
+                    names.len() == 1,
+                    "artifact dir {} holds {} models ({}) — pick one \
+                     with {}=<dir>:<model>",
+                    spec.dir.display(), names.len(),
+                    names.iter().map(|s| s.as_str())
+                        .collect::<Vec<_>>().join(", "),
+                    spec.name
+                );
+                names[0].clone()
+            }
+        };
+        let mm0 = engine.manifest.models.get(&inner).ok_or_else(
+            || anyhow::anyhow!("model {inner} not in manifest of {}",
+                               spec.dir.display()))?;
+        let decode_artifacts = if engine_flag == "literal" {
+            vec!["logits_last"]
+        } else {
+            mm0.decode_artifact_names()
+        };
+        let runtime = engine.load_model_artifacts(&inner,
+                                                  &decode_artifacts)?;
+        let state = match ckpts.iter()
+            .find(|(n, _)| *n == spec.name)
+        {
+            None => spdf::train::TrainState::init(&runtime.manifest,
+                                                  &mut Rng::new(seed)),
+            Some((_, path)) => checkpoint::load(
+                &PathBuf::from(path))?,
+        };
+        let params = state.param_tensors(&runtime.manifest);
+        loaded.push(LoadedModel { name: spec.name.clone(), runtime,
+                                  params });
+    }
+    Ok((engines, loaded))
+}
+
+/// Build the registry over freshly constructed engines (borrowed from
+/// `decodes`, one per loaded model, registration order preserved).
+fn build_registry<'e, 'a>(
+    loaded: &[LoadedModel],
+    decodes: &'e [spdf::generate::DecodeEngine<'a>],
+) -> anyhow::Result<spdf::generate::ModelRegistry<'e, 'a>> {
+    let mut registry = spdf::generate::ModelRegistry::new(
+        loaded[0].name.clone(), &decodes[0])?;
+    for (m, d) in loaded.iter().zip(decodes).skip(1) {
+        registry.register(m.name.clone(), d)?;
+    }
+    Ok(registry)
 }
 
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let cli = world_flags(
         Cli::new("spdf serve",
                  "decode a request stream with continuous slot-refill \
-                  batching"))
-        .flag("model", "gpt-nano", "model name")
-        .flag("ckpt", "", "checkpoint path (empty = random init)")
+                  batching (multi-model: comma-separated --model \
+                  entries routed round-robin)"))
+        .flag("model", "gpt-nano",
+              "registry entries: name | name=dir | name=dir:inner \
+               (comma-separated; first = default model)")
+        .flag("ckpt", "",
+              "checkpoint path, or name=path,... per registry entry \
+               (empty = random init)")
         .flag("task", "e2e", "task supplying the prompts")
         .flag("requests", "32", "number of requests to serve")
         .flag("max-new-tokens", "48", "generation budget per request")
@@ -472,29 +629,45 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         "unknown --engine {engine_flag} (want auto | kv | literal)"
     );
     let world = build_world(&a)?;
-    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
-    let (runtime, params) = decode_runtime_and_params(
-        &engine, a.get("model"), engine_flag, a.get("ckpt"),
+    let (_engines, loaded) = load_registry_models(
+        a.get("model"), engine_flag, a.get("ckpt"),
         a.get_u64("seed")?)?;
-    let mm = &runtime.manifest;
-    let decode = spdf::generate::DecodeEngine::new(&runtime, &params)?;
+    let decodes: Vec<spdf::generate::DecodeEngine> = loaded
+        .iter()
+        .map(|m| spdf::generate::DecodeEngine::new(&m.runtime,
+                                                   &m.params))
+        .collect::<anyhow::Result<_>>()?;
+    let registry = build_registry(&loaded, &decodes)?;
+    let n_models = registry.len();
 
     let task = Task::parse(a.get("task"))?;
     let examples = &world.task(task).test;
     anyhow::ensure!(!examples.is_empty(), "task has no test examples");
     let n = a.get_usize("requests")?;
     let max_new = a.get_usize("max-new-tokens")?;
-    let t = mm.config.ctx_len;
     let requests: Vec<spdf::generate::DecodeRequest> = (0..n)
-        .map(|i| spdf::generate::DecodeRequest::new(
-            i as u64,
-            coordinator::prompt_tokens(
-                &world.tokenizer, &examples[i % examples.len()].input,
-                t),
-            max_new)
-            // deterministic round-robin classes (higher = more
-            // urgent) so --policy priority has a feed on this path
-            .with_priority((i % priority_classes) as u8))
+        .map(|i| {
+            // deterministic round-robin model routing (single-model
+            // registries leave the tag unset — today's behavior)
+            let model = loaded[i % n_models].name.clone();
+            // prompts are truncated to the TARGET model's context
+            let t = loaded[i % n_models].runtime.manifest.config
+                .ctx_len;
+            let r = spdf::generate::DecodeRequest::new(
+                i as u64,
+                coordinator::prompt_tokens(
+                    &world.tokenizer,
+                    &examples[i % examples.len()].input, t),
+                max_new)
+                // deterministic round-robin classes (higher = more
+                // urgent) so --policy priority has a feed here
+                .with_priority((i % priority_classes) as u8);
+            if n_models > 1 {
+                r.with_model(model)
+            } else {
+                r
+            }
+        })
         .collect();
 
     let dp = DecodeParams {
@@ -504,25 +677,26 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let use_kv = match engine_flag {
         "kv" => true, // serve_kv errors helpfully if not compiled
         "literal" => false,
-        _ => decode.kv_available(),
+        _ => registry.kv_available(),
     };
     let total = Timer::start();
-    let report = decode.serve_with(&requests, &dp, &ServeConfig {
+    let report = registry.serve_with(&requests, &dp, &ServeConfig {
         use_kv,
         schedule: None,
         scheduler: scheduler.as_ref(),
         admission: admit.as_ref(),
     })?;
-    eprintln!("[spdf] served {} requests in {:.1}s ({} path, {}/{})",
-              n, total.secs(), if use_kv { "kv" } else { "literal" },
+    eprintln!("[spdf] served {} requests over {} model(s) in {:.1}s \
+               ({} path, {}/{})",
+              n, n_models, total.secs(),
+              if use_kv { "kv" } else { "literal" },
               scheduler.name(), admit.name());
-    println!("{}", report::serve_table(&report.stats,
-                                       &report.results));
+    println!("{}", report::serve_report_table(&report));
     match a.get("stats-json") {
         "" => {}
         path => {
             std::fs::write(path,
-                           report.stats.to_json().to_string_pretty())?;
+                           report.stats_json().to_string_pretty())?;
             eprintln!("[spdf] stats written to {path}");
         }
     }
@@ -534,8 +708,18 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
         "spdf loadgen",
         "seeded arrival-time load generator: sweep offered load over \
          the serve loop and report latency-under-load percentiles")
-        .flag("model", "gpt-nano", "model name")
-        .flag("ckpt", "", "checkpoint path (empty = random init)")
+        .flag("model", "gpt-nano",
+              "registry entries: name | name=dir | name=dir:inner \
+               (comma-separated; first = default model)")
+        .flag("ckpt", "",
+              "checkpoint path, or name=path,... per registry entry \
+               (empty = random init)")
+        .flag("model-mix", "",
+              "weighted request mix over registry entries, e.g. \
+               dense=0.5,s75=0.5 (empty = uniform over a multi-model \
+               registry, untagged for a single model); drawn from a \
+               salted side stream so the rest of the trace is \
+               mix-independent")
         .flag("seed", "0", "trace seed (same seed = same trace)")
         .flag("requests", "64", "requests per load point")
         .flag("pattern", "poisson", "poisson | bursty | closed")
@@ -604,44 +788,98 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
     let admit = admission::from_flags(a.get_usize("max-queue")?,
                                       a.get_f64("queue-deadline-ms")?)?;
 
-    let engine = Engine::cpu(spdf::runtime::default_artifact_dir())?;
-    let (runtime, params) = decode_runtime_and_params(
-        &engine, a.get("model"), engine_flag, a.get("ckpt"),
+    let (_engines, loaded) = load_registry_models(
+        a.get("model"), engine_flag, a.get("ckpt"),
         a.get_u64("seed")?)?;
-    let mm = &runtime.manifest;
+    let decodes: Vec<spdf::generate::DecodeEngine> = loaded
+        .iter()
+        .map(|m| spdf::generate::DecodeEngine::new(&m.runtime,
+                                                   &m.params))
+        .collect::<anyhow::Result<_>>()?;
+    let registry = build_registry(&loaded, &decodes)?;
+    let n_models = registry.len();
+    let mm = &loaded[0].runtime.manifest;
+    // the trace draws one prompt/vocab stream for the whole mix, so
+    // every registered model must accept it
+    let min_ctx = loaded.iter()
+        .map(|m| m.runtime.manifest.config.ctx_len)
+        .min()
+        .unwrap();
+    for m in &loaded[1..] {
+        anyhow::ensure!(
+            m.runtime.manifest.config.vocab_size
+                == mm.config.vocab_size,
+            "registry models disagree on vocab_size ({} vs {} for \
+             {}) — loadgen draws one token stream for the whole mix",
+            mm.config.vocab_size,
+            m.runtime.manifest.config.vocab_size, m.name
+        );
+    }
     anyhow::ensure!(
-        prompt_lens.1 + 2 <= mm.config.ctx_len - 1,
+        prompt_lens.1 + 2 <= min_ctx - 1,
         "--prompt-lens hi {} does not fit ctx_len {} (BOS + body + \
-         SEP must leave one slot)",
-        prompt_lens.1, mm.config.ctx_len
+         SEP must leave one slot on every registered model)",
+        prompt_lens.1, min_ctx
     );
-    let decode = spdf::generate::DecodeEngine::new(&runtime, &params)?;
 
+    // request mix over the registry (only meaningful with >1 model)
+    let model_mix: Vec<(String, f64)> = match a.get("model-mix") {
+        "" if n_models > 1 => registry
+            .names()
+            .iter()
+            .map(|n| (n.to_string(), 1.0))
+            .collect(),
+        "" => Vec::new(),
+        raw => {
+            anyhow::ensure!(n_models > 1,
+                            "--model-mix needs a multi-model --model \
+                             registry");
+            let mut mix = Vec::new();
+            for item in raw.split(',').filter(|s| !s.is_empty()) {
+                let (name, w) = item.trim().split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "bad --model-mix entry {item} (want \
+                         name=weight)"))?;
+                let w: f64 = w.parse().map_err(
+                    |_| anyhow::anyhow!("bad --model-mix weight in \
+                                         {item}"))?;
+                registry.resolve(Some(name))?; // must be registered
+                mix.push((name.to_string(), w));
+            }
+            mix
+        }
+    };
+
+    let kv_ok = registry.kv_available();
     let paths: Vec<bool> = match engine_flag {
         "literal" => vec![false],
         "kv" => {
-            anyhow::ensure!(decode.kv_available(),
-                            "--engine kv but the manifest carries no \
-                             KV artifacts — run `make artifacts`");
+            anyhow::ensure!(kv_ok,
+                            "--engine kv but a registered manifest \
+                             carries no KV artifacts — run `make \
+                             artifacts`");
             vec![true]
         }
         _ => {
-            if decode.kv_available() {
+            if kv_ok {
                 vec![false, true]
             } else {
                 vec![false]
             }
         }
     };
+    let decode = &decodes[0];
 
     let calibrated = a.is_set("calibrate");
     let mut engines: Vec<(bool, StepCosts)> = Vec::new();
     if calibrated {
+        // costs are calibrated on the default model's engine — the
+        // virtual clock charges every lane the same step price
         eprintln!("[spdf] calibrating per-path step costs...");
-        let lit = loadgen::calibrate(&decode, false, None)?;
+        let lit = loadgen::calibrate(decode, false, None)?;
         for &kv in &paths {
             let costs = if kv {
-                loadgen::calibrate(&decode, true, Some(lit.step_ms))?
+                loadgen::calibrate(decode, true, Some(lit.step_ms))?
             } else {
                 lit
             };
@@ -668,9 +906,17 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
     let rates: Vec<f64> = if matches!(pattern, Pattern::Closed { .. }) {
         vec![0.0] // rate is an outcome of the client loop
     } else if a.get("rates") == "auto" {
-        let cap = loadgen::capacity_rps(mm.decode_batch,
+        // an N-model registry serializes N lane steps per round, so
+        // its effective batch per step is the mean lane batch —
+        // computed in f64 (integer division would floor heterogeneous
+        // batches and undershoot the knee the sweep probes)
+        let total_b: usize = loaded.iter()
+            .map(|m| m.runtime.manifest.decode_batch)
+            .sum();
+        let cap = loadgen::capacity_rps(total_b,
                                         engines[0].1.step_ms,
-                                        mean_budget);
+                                        mean_budget)
+            / n_models as f64;
         [0.25, 0.5, 0.75, 0.9, 1.1].iter().map(|u| u * cap).collect()
     } else {
         a.get_list("rates")
@@ -689,14 +935,24 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
         budgets,
         vocab: mm.config.vocab_size,
         priority_classes: priority_classes as u8,
+        model_mix: model_mix.clone(),
     };
     let dp = DecodeParams::default();
     let total = Timer::start();
-    let points = loadgen::sweep_with(&decode, &base, &rates, &engines,
-                                     &dp, scheduler.as_ref(),
-                                     admit.as_ref())?;
-    eprintln!("[spdf] swept {} load points in {:.1}s ({}, {}/{})",
-              points.len(), total.secs(),
+    // single-model registries stay on the pre-registry sweep (bit-
+    // identical output); a real mix routes through the registry and
+    // appends per-model points after each aggregate
+    let points = if n_models > 1 {
+        loadgen::sweep_registry(&registry, &base, &rates, &engines,
+                                &dp, scheduler.as_ref(),
+                                admit.as_ref())?
+    } else {
+        loadgen::sweep_with(decode, &base, &rates, &engines, &dp,
+                            scheduler.as_ref(), admit.as_ref())?
+    };
+    eprintln!("[spdf] swept {} load points over {} model(s) in \
+               {:.1}s ({}, {}/{})",
+              points.len(), n_models, total.secs(),
               if calibrated {
                   "calibrated ms"
               } else {
@@ -717,8 +973,19 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                 .push("requests", Json::Num(base.requests as f64))
                 .push("calibrated", Json::Bool(calibrated))
                 .push_str("scheduler", scheduler.name())
-                .push_str("admission", &admit.name())
-                .push("points", loadgen::points_json(&points));
+                .push_str("admission", &admit.name());
+            if n_models > 1 {
+                j.push("models", Json::Arr(
+                    registry.names().iter()
+                        .map(|n| Json::Str(n.to_string()))
+                        .collect()));
+                let mut mix = Json::obj();
+                for (name, w) in &model_mix {
+                    mix.push_num(name, *w);
+                }
+                j.push("model_mix", mix);
+            }
+            j.push("points", loadgen::points_json(&points));
             std::fs::write(path, j.to_string_pretty())?;
             eprintln!("[spdf] sweep written to {path}");
         }

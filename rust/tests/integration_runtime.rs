@@ -476,6 +476,7 @@ fn loadgen_timed_serve_deterministic_and_decode_exact() {
         budgets: (2, 6),
         vocab: mm.config.vocab_size,
         priority_classes: 1,
+        model_mix: Vec::new(),
     };
     let trace = loadgen::generate_trace(&cfg).unwrap();
     let dp = DecodeParams::default();
@@ -533,6 +534,7 @@ fn loadgen_kv_and_literal_decode_same_trace_identically() {
         budgets: (2, 5),
         vocab: mm.config.vocab_size,
         priority_classes: 1,
+        model_mix: Vec::new(),
     };
     let trace = loadgen::generate_trace(&cfg).unwrap();
     let dp = DecodeParams::default();
@@ -580,6 +582,7 @@ fn serve_policies_fifo_unbounded_bit_identical_to_default() {
         budgets: (2, 6),
         vocab: mm.config.vocab_size,
         priority_classes: 1,
+        model_mix: Vec::new(),
     };
     let trace = loadgen::generate_trace(&cfg).unwrap();
     let sched = trace.schedule(&StepCosts::default());
@@ -666,6 +669,7 @@ fn serve_with_shedding_policies_decodes_survivors_exactly() {
         budgets: (2, 6),
         vocab: mm.config.vocab_size,
         priority_classes: 1,
+        model_mix: Vec::new(),
     };
     let trace = loadgen::generate_trace(&cfg).unwrap();
     let costs = StepCosts::default();
@@ -714,6 +718,172 @@ fn serve_with_shedding_policies_decodes_survivors_exactly() {
     for (x, y) in report.results.iter().zip(&report2.results) {
         assert_eq!(x.tokens, y.tokens);
         assert_eq!(x.outcome, y.outcome);
+    }
+}
+
+#[test]
+fn registry_single_model_is_bit_identical_to_serve_timed() {
+    // acceptance (ISSUE 5): a registry holding only the default model
+    // must reproduce today's serve_timed output bit-for-bit — token
+    // streams AND telemetry — on both engine paths
+    use spdf::generate::ModelRegistry;
+
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(41));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+    let registry = ModelRegistry::new("gpt-nano", &decode).unwrap();
+
+    let cfg = TraceConfig {
+        seed: 23,
+        requests: mm.decode_batch + 4,
+        rate_rps: 350.0,
+        pattern: Pattern::Poisson,
+        prompt_lens: (3, 6),
+        budgets: (2, 6),
+        vocab: mm.config.vocab_size,
+        priority_classes: 1,
+        model_mix: Vec::new(),
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    let sched = trace.schedule(&StepCosts::default());
+    let dp = DecodeParams::default();
+    for kv in [false, true] {
+        let plain = spdf::generate::serve::core::serve_timed(
+            &decode, &trace.requests, &dp, kv, &sched).unwrap();
+        let routed = registry
+            .serve_timed(&trace.requests, &dp, kv, &sched)
+            .unwrap();
+        assert_eq!(plain.results.len(), routed.results.len(),
+                   "kv={kv}");
+        for (x, y) in plain.results.iter().zip(&routed.results) {
+            assert_eq!(x.tokens, y.tokens, "kv={kv} req {}", x.id);
+            assert_eq!(
+                (x.arrival_ms, x.queue_ms, x.ttft_ms, x.latency_ms,
+                 x.queue_steps, x.decode_steps),
+                (y.arrival_ms, y.queue_ms, y.ttft_ms, y.latency_ms,
+                 y.queue_steps, y.decode_steps),
+                "kv={kv} req {}", x.id
+            );
+        }
+        // telemetry bit-identical too (wall-clock fields excluded:
+        // they measure host time, not loop behavior)
+        let (ps, rs) = (&plain.stats, &routed.stats);
+        assert_eq!(ps.engine_steps, rs.engine_steps, "kv={kv}");
+        assert_eq!(ps.prefill_steps, rs.prefill_steps, "kv={kv}");
+        assert_eq!(ps.slot_steps, rs.slot_steps, "kv={kv}");
+        assert_eq!(ps.occupancy, rs.occupancy, "kv={kv}");
+        assert_eq!(ps.sim_ms, rs.sim_ms, "kv={kv}");
+        assert_eq!(ps.latency_ms, rs.latency_ms, "kv={kv}");
+        assert_eq!(ps.queue_ms, rs.queue_ms, "kv={kv}");
+        assert_eq!(ps.ttft_ms, rs.ttft_ms, "kv={kv}");
+        // the registry's one per-model block mirrors the aggregate
+        assert_eq!(routed.per_model.len(), 1, "kv={kv}");
+        assert_eq!(routed.per_model[0].model, "gpt-nano");
+        assert_eq!(routed.per_model[0].stats.generated_tokens,
+                   rs.generated_tokens, "kv={kv}");
+    }
+}
+
+#[test]
+fn registry_cross_engine_golden_mixed_trace() {
+    // cross-engine golden (ISSUE 5 satellite): the SAME artifacts
+    // registered under two model names, a mixed trace routed across
+    // them — each model's survivors must decode bit-identical to the
+    // solo reference oracle, on both the literal and the KV path, and
+    // the per-model telemetry must partition the aggregate
+    use spdf::generate::ModelRegistry;
+
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(43));
+    let params = state.param_tensors(mm);
+    let decode = DecodeEngine::new(&runtime, &params).unwrap();
+    let mut registry = ModelRegistry::new("dense", &decode).unwrap();
+    registry.register("s75", &decode).unwrap();
+    assert_eq!(registry.names(), vec!["dense", "s75"]);
+    assert_eq!(registry.default_model(), "dense");
+    assert!(registry.register("s75", &decode).is_err(),
+            "duplicate registration must fail");
+    // routing resolution: None → default, names exact, unknown errors
+    assert_eq!(registry.resolve(None).unwrap(), 0);
+    assert_eq!(registry.resolve(Some("s75")).unwrap(), 1);
+    let err = registry.resolve(Some("s99")).unwrap_err();
+    assert!(err.to_string().contains("s99"), "{err}");
+    assert!(err.to_string().contains("dense"), "{err}");
+
+    let cfg = TraceConfig {
+        seed: 29,
+        requests: 2 * mm.decode_batch + 3,
+        rate_rps: 500.0,
+        pattern: Pattern::Bursty { burst: 4 },
+        prompt_lens: (3, 6),
+        budgets: (2, 6),
+        vocab: mm.config.vocab_size,
+        priority_classes: 1,
+        model_mix: vec![("dense".into(), 0.5), ("s75".into(), 0.5)],
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    assert!(trace.requests.iter().any(
+        |r| r.model.as_deref() == Some("dense")));
+    assert!(trace.requests.iter().any(
+        |r| r.model.as_deref() == Some("s75")));
+    let sched = trace.schedule(&StepCosts::default());
+    let dp = DecodeParams::default();
+    for kv in [false, true] {
+        let report = registry
+            .serve_timed(&trace.requests, &dp, kv, &sched)
+            .unwrap();
+        assert_eq!(report.results.len(), trace.requests.len(),
+                   "kv={kv}");
+        for res in &report.results {
+            assert!(res.outcome.is_completed(), "kv={kv}");
+            let req = &trace.requests[res.id as usize];
+            let solo = reference::greedy(
+                &runtime, &params, std::slice::from_ref(&req.prompt),
+                &DecodeParams { max_new_tokens: req.max_new_tokens,
+                                ..Default::default() })
+                .unwrap();
+            assert_eq!(res.tokens, solo[0],
+                       "kv={kv} model {:?} req {} diverged from solo \
+                        reference", req.model, res.id);
+        }
+        // per-model blocks partition the aggregate
+        let st = &report.stats;
+        assert_eq!(report.per_model.len(), 2, "kv={kv}");
+        let sum_req: usize = report.per_model.iter()
+            .map(|m| m.stats.requests).sum();
+        let sum_tok: u64 = report.per_model.iter()
+            .map(|m| m.stats.generated_tokens).sum();
+        let sum_steps: u64 = report.per_model.iter()
+            .map(|m| m.stats.engine_steps).sum();
+        assert_eq!(sum_req, st.requests, "kv={kv}");
+        assert_eq!(sum_tok, st.generated_tokens, "kv={kv}");
+        assert_eq!(sum_steps, st.engine_steps, "kv={kv}");
+        for m in &report.per_model {
+            assert!(m.stats.requests > 0,
+                    "kv={kv}: model {} got no requests from a 50/50 \
+                     mix", m.model);
+            assert_eq!(m.stats.completed, m.stats.requests,
+                       "kv={kv}");
+        }
+        if kv {
+            // each lane owns its own session state and prefills it
+            assert!(st.prefill_steps >= 2,
+                    "both KV lanes should have prefilled \
+                     (prefill_steps = {})", st.prefill_steps);
+        }
+        // routing an unknown model errors up front
+        let bad = vec![spdf::generate::DecodeRequest::new(
+            0, vec![BOS, 40, SEP], 2).with_model("s99")];
+        assert!(registry.serve_timed(
+            &bad, &dp, kv,
+            &loadgen::generate_trace(&TraceConfig {
+                requests: 1, ..cfg.clone()
+            }).unwrap().schedule(&StepCosts::default())).is_err());
     }
 }
 

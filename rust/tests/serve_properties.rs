@@ -1,0 +1,237 @@
+//! Property-based serve-invariant suite (ISSUE 5 satellite).
+//!
+//! The serve loop's contracts are now richer than pinned examples can
+//! cover: outcome conservation, completed-only latency percentiles,
+//! per-model-sums-to-aggregate, run-to-run bit-determinism, and
+//! shed-requests-never-hold-a-slot must hold for *every* trace ×
+//! scheduler × admission × lane-count combination. This suite drives
+//! `util::proptest::check` over random scenarios through
+//! `serve::core::run_lanes_with` with deterministic mock backends —
+//! no compiled artifacts needed, so it runs under plain
+//! `cargo test -q` (tier 1).
+
+use spdf::generate::serve::admission::{AdmissionPolicy, Bounded,
+                                       MaxQueueDepth, QueueDeadline,
+                                       Unbounded};
+use spdf::generate::serve::core::mock::MockBackend;
+use spdf::generate::serve::core::{run_lanes_with, LogitsBackend};
+use spdf::generate::serve::policy::{Fifo, PriorityClass, Scheduler,
+                                    ShortestPromptFirst,
+                                    SmallestBudgetFirst};
+use spdf::generate::serve::Schedule;
+use spdf::generate::{DecodeParams, DecodeRequest, RequestOutcome,
+                     ServeReport};
+use spdf::util::proptest::check;
+use spdf::util::rng::Rng;
+
+const CTX: usize = 16;
+
+/// One random serving scenario: a trace (prompts, budgets,
+/// priorities, arrivals), a lane layout, and a policy/admission pair
+/// (encoded as indices so the scenario stays `Debug`-printable on
+/// shrink).
+#[derive(Debug, Clone)]
+struct Scenario {
+    lane_b: Vec<usize>,
+    lane_of: Vec<usize>,
+    requests: Vec<DecodeRequest>,
+    arrivals: Vec<f64>,
+    kv: bool,
+    scheduler: usize,
+    admission: usize,
+}
+
+fn scheduler_of(i: usize) -> Box<dyn Scheduler> {
+    match i % 4 {
+        0 => Box::new(Fifo),
+        1 => Box::new(ShortestPromptFirst),
+        2 => Box::new(SmallestBudgetFirst),
+        _ => Box::new(PriorityClass),
+    }
+}
+
+fn admission_of(i: usize) -> Box<dyn AdmissionPolicy> {
+    match i % 4 {
+        0 => Box::new(Unbounded),
+        1 => Box::new(MaxQueueDepth(i % 3)),
+        2 => Box::new(QueueDeadline(2.5)),
+        _ => Box::new(Bounded { max_queue: 1, deadline_ms: 3.5 }),
+    }
+}
+
+fn gen_scenario(rng: &mut Rng, size: usize) -> Scenario {
+    let lanes = 1 + rng.below(3);
+    let lane_b: Vec<usize> =
+        (0..lanes).map(|_| 1 + rng.below(3)).collect();
+    let n = 1 + rng.below(size.min(14));
+    let mut requests = Vec::with_capacity(n);
+    let mut lane_of = Vec::with_capacity(n);
+    let mut arrivals = Vec::with_capacity(n);
+    for i in 0..n {
+        let plen = 1 + rng.below(6);
+        let prompt: Vec<u32> =
+            (0..plen).map(|_| 1 + rng.below(9) as u32).collect();
+        // budgets include 0 (never occupies a slot) on purpose
+        let budget = rng.below(5);
+        requests.push(
+            DecodeRequest::new(i as u64, prompt, budget)
+                .with_priority(rng.below(3) as u8));
+        lane_of.push(rng.below(lanes));
+        // arrivals in a tight window so queues actually form
+        arrivals.push((rng.below(80) as f64) / 10.0);
+    }
+    Scenario {
+        lane_b,
+        lane_of,
+        requests,
+        arrivals,
+        kv: rng.below(2) == 1,
+        scheduler: rng.below(4),
+        admission: rng.below(4),
+    }
+}
+
+fn run(sc: &Scenario) -> ServeReport {
+    let mut backends: Vec<MockBackend> = sc
+        .lane_b
+        .iter()
+        .map(|&b| MockBackend::new(b, CTX, sc.kv))
+        .collect();
+    let mut refs: Vec<&mut dyn LogitsBackend> = backends
+        .iter_mut()
+        .map(|b| b as &mut dyn LogitsBackend)
+        .collect();
+    let names: Vec<String> = (0..sc.lane_b.len())
+        .map(|l| format!("m{l}"))
+        .collect();
+    let schedule = Schedule::open(sc.arrivals.clone(), 1.0, 1.0);
+    run_lanes_with(&mut refs, &names, &sc.lane_of, &sc.requests,
+                   &DecodeParams::default(), Some(&schedule),
+                   scheduler_of(sc.scheduler).as_ref(),
+                   admission_of(sc.admission).as_ref())
+        .expect("serve loop errored on a valid scenario")
+}
+
+/// completed + shed + expired == submitted, in the results, the
+/// aggregate stats, and every per-model block.
+#[test]
+fn prop_outcome_conservation() {
+    check(11, 80, 14, gen_scenario, |sc: &Scenario| {
+        let report = run(sc);
+        let n = sc.requests.len();
+        let st = &report.stats;
+        report.results.len() == n
+            && st.requests == n
+            && st.completed + st.shed + st.expired == n
+            && report.per_model.iter().all(|m| {
+                m.stats.completed + m.stats.shed + m.stats.expired
+                    == m.stats.requests
+            })
+    });
+}
+
+/// Latency percentiles are computed over completed requests only —
+/// the summary's sample count must equal the completed count, never
+/// the offered count.
+#[test]
+fn prop_latency_percentiles_cover_completed_only() {
+    check(13, 80, 14, gen_scenario, |sc: &Scenario| {
+        let report = run(sc);
+        let st = &report.stats;
+        st.latency_ms.n == st.completed
+            && st.ttft_ms.n == st.completed
+            && st.queue_ms.n == st.completed
+            && report.per_model.iter().all(|m| {
+                m.stats.latency_ms.n == m.stats.completed
+            })
+    });
+}
+
+/// Per-model stats partition the aggregate: every countable field
+/// sums across models to the aggregate block.
+#[test]
+fn prop_per_model_stats_sum_to_aggregate() {
+    check(17, 80, 14, gen_scenario, |sc: &Scenario| {
+        let report = run(sc);
+        let st = &report.stats;
+        let sum = |f: &dyn Fn(&spdf::generate::ServeStats) -> u64| {
+            report.per_model.iter().map(|m| f(&m.stats)).sum::<u64>()
+        };
+        report.per_model.len() == sc.lane_b.len()
+            && sum(&|s| s.requests as u64) == st.requests as u64
+            && sum(&|s| s.completed as u64) == st.completed as u64
+            && sum(&|s| s.shed as u64) == st.shed as u64
+            && sum(&|s| s.expired as u64) == st.expired as u64
+            && sum(&|s| s.generated_tokens) == st.generated_tokens
+            && sum(&|s| s.engine_steps) == st.engine_steps
+            && sum(&|s| s.prefill_steps) == st.prefill_steps
+            && sum(&|s| s.slot_steps) == st.slot_steps
+    });
+}
+
+/// Same seed ⇒ byte-identical telemetry: two runs of the same
+/// scenario serialize to exactly the same ServeStats JSON (aggregate
+/// and per-model), and identical per-request outcomes/latencies.
+#[test]
+fn prop_same_seed_is_byte_identical() {
+    check(19, 60, 14, gen_scenario, |sc: &Scenario| {
+        let (a, b) = (run(sc), run(sc));
+        a.stats_json().to_string() == b.stats_json().to_string()
+            && a.stats.to_json().to_string()
+                == b.stats.to_json().to_string()
+            && a.results.len() == b.results.len()
+            && a.results.iter().zip(&b.results).all(|(x, y)| {
+                x.tokens == y.tokens
+                    && x.outcome == y.outcome
+                    && x.latency_ms == y.latency_ms
+                    && x.ttft_ms == y.ttft_ms
+                    && x.queue_ms == y.queue_ms
+            })
+    });
+}
+
+/// Shed requests are rejected at arrival and never hold a slot:
+/// no tokens, no decode steps, zero reported wait. Expired requests
+/// decode nothing either and report exactly the deadline as their
+/// wait.
+#[test]
+fn prop_failed_requests_never_hold_a_slot() {
+    check(23, 80, 14, gen_scenario, |sc: &Scenario| {
+        let report = run(sc);
+        report.results.iter().all(|r| match r.outcome {
+            RequestOutcome::Completed => true,
+            RequestOutcome::Shed => {
+                r.tokens.is_empty()
+                    && r.decode_steps == 0
+                    && r.queue_ms == 0.0
+                    && r.latency_ms == 0.0
+            }
+            RequestOutcome::Expired => {
+                r.tokens.is_empty() && r.decode_steps == 0
+            }
+        })
+    });
+}
+
+/// Unbounded admission completes everything: the policy matrix's
+/// degenerate corner stays exact under every scheduler and lane
+/// layout.
+#[test]
+fn prop_unbounded_admission_never_sheds() {
+    check(29, 60, 14, |rng: &mut Rng, size: usize| {
+        let mut sc = gen_scenario(rng, size);
+        sc.admission = 0; // Unbounded
+        sc
+    }, |sc: &Scenario| {
+        let report = run(sc);
+        report.stats.shed == 0
+            && report.stats.expired == 0
+            && report.stats.shed_rate == 0.0
+            && report.stats.completed == sc.requests.len()
+            && report.results.iter().all(|r| {
+                r.outcome.is_completed()
+                    && r.tokens.len() == sc.requests[r.id as usize]
+                        .max_new_tokens
+            })
+    });
+}

@@ -19,7 +19,14 @@ regresses by more than the tolerance:
                          under unbounded admission report a zero
                          shed_rate. Every fresh point must carry the
                          shed_rate/goodput datapoints — the smoke is
-                         required to produce them.
+                         required to produce them. The multi-model
+                         leg (multi_model.*) is required too: its
+                         per-model goodput is gated per model name,
+                         its aggregate goodput relatively, and the
+                         per-model requests/completed counts must sum
+                         to the aggregate (a mismatch means the
+                         registry loop lost or double-counted a
+                         request).
 
 Usage:
     python3 scripts/bench_gate.py [ROOT]
@@ -57,6 +64,8 @@ RELATIVE_SPECS = {
         ("kv_p95_vs_literal", "lower"),
         ("shed.p95_vs_unbounded", "lower"),
         ("shed.goodput_tokens_per_sec", "higher"),
+        ("multi_model.aggregate.goodput_tokens_per_sec", "higher"),
+        ("multi_model.aggregate.latency_ms.p95", "lower"),
     ],
 }
 
@@ -126,6 +135,7 @@ def check_absolute(name, current, tol):
                             f"{cap} + {tol:.0%}")
     if name == "BENCH_serve_load.json":
         failures.extend(check_shed_datapoints(name, current))
+        failures.extend(check_multi_model_datapoints(name, current))
     return failures
 
 
@@ -163,6 +173,109 @@ def check_shed_datapoints(name, current):
                 f"{name}:points[{i}]: shed_rate {p['shed_rate']} "
                 "under unbounded admission (must be 0)")
     return failures
+
+
+# latency_ms is included because latency_ms.p95 is relative-gated per
+# model — a fresh leg missing it would silently disable that gate
+MULTI_MODEL_POINT_KEYS = ["model", "requests", "completed",
+                          "shed_rate", "goodput_tokens_per_sec",
+                          "latency_ms"]
+
+
+def check_multi_model_datapoints(name, current):
+    """Structural + invariant checks on the fresh multi-model leg:
+    the block must be present and untruncated (otherwise a stale
+    bench could silently drop it — and a refresh would bake the gap
+    into the baseline, disabling the multi-model gates forever),
+    every per-model point must carry the gated datapoints, and the
+    per-model requests/completed counts must sum to the aggregate —
+    a mismatch means the registry loop lost or double-counted a
+    request."""
+    failures = []
+    multi = current.get("multi_model")
+    if not isinstance(multi, dict):
+        failures.append(f"{name}:multi_model: block missing — the "
+                        "smoke did not run the multi-model leg")
+        return failures
+    agg = multi.get("aggregate")
+    per_model = multi.get("per_model")
+    if not isinstance(agg, dict):
+        failures.append(f"{name}:multi_model.aggregate: missing")
+    else:
+        # the aggregate block feeds two RELATIVE_SPECS gates; a
+        # keyless aggregate would silently skip them (and REFRESH
+        # would bake the gap into the baseline)
+        missing = [k for k in ("requests", "completed",
+                               "goodput_tokens_per_sec", "latency_ms")
+                   if k not in agg]
+        if missing:
+            failures.append(f"{name}:multi_model.aggregate: missing "
+                            f"{','.join(missing)}")
+    if not isinstance(per_model, list) or len(per_model) < 2:
+        failures.append(
+            f"{name}:multi_model.per_model: want >= 2 per-model "
+            "points (the leg must actually multiplex models)")
+        return failures
+    for i, p in enumerate(per_model):
+        missing = [k for k in MULTI_MODEL_POINT_KEYS if k not in p]
+        if missing:
+            failures.append(
+                f"{name}:multi_model.per_model[{i}]: missing "
+                f"{','.join(missing)}")
+    if failures or not isinstance(agg, dict):
+        return failures
+    for key in ("requests", "completed"):
+        total = sum(p[key] for p in per_model)
+        if total != agg.get(key):
+            failures.append(
+                f"{name}:multi_model: per-model {key} sum {total} != "
+                f"aggregate {agg.get(key)} (registry loop lost or "
+                "double-counted requests)")
+    return failures
+
+
+def check_multi_model_relative(name, current, baseline, tol):
+    """Relative per-model gates: goodput (higher is better) and e2e
+    p95 (lower is better), paired by model name. Baselines predating
+    the multi-model leg skip with a notice."""
+    failures, notes = [], []
+    cur = (current.get("multi_model") or {}).get("per_model") or []
+    base = (baseline.get("multi_model") or {}).get("per_model") or []
+    if not base:
+        if cur:
+            notes.append(f"{name}: baseline predates the multi-model "
+                         "leg — refresh baselines to gate it")
+        return failures, notes
+    base_by_model = {p.get("model"): p for p in base}
+    # a model present in the baseline but absent from the fresh leg
+    # would silently stop being gated — fail instead (an intentional
+    # registry change goes through BENCH_GATE_REFRESH)
+    cur_models = {p.get("model") for p in cur}
+    for dropped in sorted(m for m in base_by_model
+                          if m not in cur_models):
+        failures.append(
+            f"{name}:multi_model: model {dropped} in baseline but "
+            "missing from the fresh leg — its gates would be "
+            "silently disabled (intentional? refresh baselines)")
+    for p in cur:
+        b = base_by_model.get(p.get("model"))
+        if b is None:
+            notes.append(f"{name}: model {p.get('model')} not in "
+                         "baseline multi-model leg, skipping — "
+                         "refresh baselines")
+            continue
+        for dotted, direction in [
+            ("goodput_tokens_per_sec", "higher"),
+            ("latency_ms.p95", "lower"),
+        ]:
+            label = (f"{name}:multi_model.per_model"
+                     f"({p.get('model')}).{dotted}")
+            fail = compare_metric(label, get_path(p, dotted),
+                                  get_path(b, dotted), direction,
+                                  tol)
+            if fail:
+                failures.append(fail)
+    return failures, notes
 
 
 def check_points(name, current, baseline, tol):
@@ -217,6 +330,10 @@ def check_file(name, current, baseline, tol):
         pf, pn = check_points(name, current, baseline, tol)
         failures.extend(pf)
         notes.extend(pn)
+        mf, mn = check_multi_model_relative(name, current, baseline,
+                                            tol)
+        failures.extend(mf)
+        notes.extend(mn)
     return failures, notes
 
 

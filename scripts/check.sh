@@ -68,9 +68,10 @@ for f in "${BENCH_FILES[@]}"; do
 done
 
 # the serve-load smoke must carry the scheduling/shedding datapoints
-# (goodput + shed rate per point, plus the past-the-knee shed leg) —
-# bench_gate.py gates on them, so their absence should fail loudly
-# here with a better message than a missing-metric skip
+# (goodput + shed rate per point, plus the past-the-knee shed leg and
+# the multi-model registry leg) — bench_gate.py gates on them, so
+# their absence should fail loudly here with a better message than a
+# missing-metric skip
 python3 - "$ROOT/BENCH_serve_load.json" <<'EOF'
 import json, sys
 
@@ -86,9 +87,18 @@ shed = j.get("shed") or {}
 for key in ("shed_rate", "p95_vs_unbounded",
             "goodput_tokens_per_sec"):
     assert key in shed, f"shed leg lacks {key}"
-print(f"check.sh: serve-load smoke carries goodput/shed datapoints "
-      f"({len(pts)} points + shed leg, shed rate "
-      f"{shed['shed_rate']:.0%})")
+multi = j.get("multi_model") or {}
+assert "aggregate" in multi, "multi-model leg lacks its aggregate"
+per_model = multi.get("per_model") or []
+assert len(per_model) >= 2, \
+    "multi-model leg must cover >= 2 models"
+for p in per_model:
+    for key in ("model", "requests", "completed", "shed_rate",
+                "goodput_tokens_per_sec", "latency_ms"):
+        assert key in p, f"multi-model point lacks {key}"
+print(f"check.sh: serve-load smoke carries goodput/shed/multi-model "
+      f"datapoints ({len(pts)} points + shed leg, shed rate "
+      f"{shed['shed_rate']:.0%}, {len(per_model)} registry models)")
 EOF
 
 echo "== perf-regression gate (scripts/bench_gate.py) =="
