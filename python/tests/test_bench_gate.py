@@ -70,6 +70,49 @@ def multi_model_json(goodput=400.0, p95=80.0):
     }
 
 
+def fault_variant(requests=32, failed=0, retries=0, degraded=0,
+                  goodput=400.0):
+    return {
+        "requests": requests,
+        "completed": requests - failed,
+        "shed": 0,
+        "expired": 0,
+        "failed": failed,
+        "retries": retries,
+        "degraded": degraded,
+        "goodput_tokens_per_sec": goodput,
+    }
+
+
+def fault_rate_row(rate, no_goodput=200.0, fo_goodput=390.0):
+    if rate == 0:
+        return {
+            "fault_rate": 0.0,
+            "no_failover": fault_variant(goodput=no_goodput),
+            "failover": fault_variant(goodput=fo_goodput),
+        }
+    return {
+        "fault_rate": rate,
+        "no_failover": fault_variant(failed=12, retries=3,
+                                     goodput=no_goodput),
+        "failover": fault_variant(retries=3, degraded=12,
+                                  goodput=fo_goodput),
+    }
+
+
+def fault_json():
+    return {
+        "models": ["m0", "m1"],
+        "offered_rps": 30.0,
+        "kill_step": 4,
+        "retry_max": 5,
+        "rates": [
+            fault_rate_row(0.0, no_goodput=400.0, fo_goodput=400.0),
+            fault_rate_row(0.1),
+        ],
+    }
+
+
 def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
                     goodput=500.0):
     return {
@@ -81,6 +124,7 @@ def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
             "goodput_tokens_per_sec": goodput * 0.7,
         },
         "multi_model": multi_model_json(),
+        "fault": fault_json(),
         "points": [
             point("literal", p95, p95 / 2, goodput=goodput),
             point("kv", p95 * 0.8, p95 / 3, goodput=goodput * 1.2),
@@ -344,6 +388,97 @@ class TestMultiModelGates:
         assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
         assert not (tmp_path / "bench_baselines"
                     / "BENCH_serve_load.json").exists()
+
+
+class TestFaultGates:
+    def test_missing_fault_leg_fails(self):
+        # the smoke must run the fault-injection leg — with no
+        # baseline at all its absence is already a hard failure
+        cur = serve_load_json()
+        del cur["fault"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("fault: block missing" in f for f in fails)
+
+    def test_truncated_fault_leg_fails(self):
+        # an empty rate sweep means the leg never ran
+        cur = serve_load_json()
+        cur["fault"]["rates"] = []
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("fault.rates: missing or empty" in f
+                   for f in fails)
+        # a sweep of only zero rates never injected anything
+        cur = serve_load_json()
+        cur["fault"]["rates"] = [fault_rate_row(0.0)]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("no nonzero fault rate" in f for f in fails)
+        # a rate row must carry both variants
+        cur = serve_load_json()
+        del cur["fault"]["rates"][1]["failover"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("missing failover datapoint" in f for f in fails)
+        # ... and each variant the gated outcome counters
+        cur = serve_load_json()
+        del cur["fault"]["rates"][1]["no_failover"]["failed"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("rates[1].no_failover: missing failed" in f
+                   for f in fails)
+
+    def test_fault_outcome_conservation(self):
+        # completed + shed + expired + failed must equal requests in
+        # every variant — a mismatch means the loop lost a request
+        cur = serve_load_json()
+        cur["fault"]["rates"][1]["no_failover"]["completed"] -= 1
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("lost or double-counted" in f for f in fails)
+
+    def test_failover_goodput_below_no_failover_fails(self):
+        # the recovery invariant: at every nonzero fault rate the
+        # failover run must be at least as good — enforced without a
+        # baseline
+        cur = serve_load_json()
+        cur["fault"]["rates"][1]["failover"] \
+            ["goodput_tokens_per_sec"] = 50.0
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("failover goodput" in f for f in fails)
+        # at a zero fault rate the pair is unconstrained
+        cur = serve_load_json()
+        cur["fault"]["rates"][0]["failover"] \
+            ["goodput_tokens_per_sec"] = 50.0
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert fails == []
+
+    def test_refresh_refuses_missing_fault_leg(self, tmp_path,
+                                               monkeypatch):
+        # REFRESH must not bake a fault-leg-less file into the
+        # committed baseline (which would disable the gates forever)
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        noleg = serve_load_json()
+        del noleg["fault"]
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(noleg))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_baseline_without_fault_leg_is_tolerated(self):
+        # old committed baselines predate the fault leg: the checks
+        # are fresh-side only, so a healthy fresh file stays green
+        cur = serve_load_json()
+        base = serve_load_json()
+        del base["fault"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert fails == []
 
 
 class TestBootstrapAndRefresh:

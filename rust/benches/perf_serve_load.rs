@@ -31,7 +31,15 @@
 //!    one serve loop at 0.9x capacity: hard-asserts outcome
 //!    conservation and per-model-sums-to-aggregate, and records the
 //!    per-model goodput datapoints `bench_gate.py` gates
-//!    (`multi_model.aggregate` + `multi_model.per_model`).
+//!    (`multi_model.aggregate` + `multi_model.per_model`);
+//!  * fault leg — the same registry under a deterministic
+//!    `FaultPlan`: m0 takes transient step failures, latency spikes
+//!    and a permanent lane death, m1 only the transient rate. Each
+//!    nonzero fault rate is served with and without m0→m1 failover;
+//!    hard-asserts conservation (incl. `failed`), failover goodput ≥
+//!    no-failover goodput, and byte-identical telemetry on rerun;
+//!    records the `fault.rates` datapoint pairs `bench_gate.py`
+//!    gates.
 //!
 //! Run: `cargo bench --bench perf_serve_load`
 //! Writes `BENCH_serve_load.json` (override with SPDF_BENCH_OUT; set
@@ -41,7 +49,9 @@ use spdf::coordinator::report;
 use spdf::generate::loadgen::{self, Pattern, StepCosts, TraceConfig};
 use spdf::generate::serve::admission::{MaxQueueDepth, Unbounded};
 use spdf::generate::serve::policy::Fifo;
-use spdf::generate::{DecodeEngine, DecodeParams, ModelRegistry};
+use spdf::generate::{ChaosConfig, DecodeEngine, DecodeParams,
+                     FaultPlan, FaultSpec, ModelRegistry,
+                     RetryPolicy};
 use spdf::runtime::Engine;
 use spdf::train::TrainState;
 use spdf::util::json::Json;
@@ -192,7 +202,7 @@ fn main() -> anyhow::Result<()> {
         loadgen::run_trace(&decode, &shed_trace, &dp, false, &lit)?;
     let (shed_pt, _) = loadgen::run_trace_with(
         &decode, &shed_trace, &dp, false, &lit, &Fifo,
-        &MaxQueueDepth(1))?;
+        &MaxQueueDepth(1), &ChaosConfig::default())?;
     anyhow::ensure!(
         unb_pt.shed_rate == 0.0,
         "unbounded admission shed {} requests", unb_pt.shed
@@ -239,7 +249,8 @@ fn main() -> anyhow::Result<()> {
     };
     let mix_trace = loadgen::generate_trace(&mix_cfg)?;
     let (mm_agg, mm_models, _) = loadgen::run_trace_registry(
-        &registry, &mix_trace, &dp, false, &lit, &Fifo, &Unbounded)?;
+        &registry, &mix_trace, &dp, false, &lit, &Fifo, &Unbounded,
+        &ChaosConfig::default())?;
     anyhow::ensure!(
         mm_agg.completed + mm_agg.shed + mm_agg.expired
             == mm_agg.requests,
@@ -264,6 +275,129 @@ fn main() -> anyhow::Result<()> {
     mm_points.extend(mm_models.iter().cloned());
     println!("\nmulti-model leg (m0/m1 50/50 mix @ 0.9x capacity):\n");
     println!("{}", report::load_table(&mm_points));
+
+    // --- fault leg: goodput vs fault rate, failover vs no-failover --
+    // The same m0/m1 registry under a deterministic fault plan: m0
+    // takes transient step failures + latency spikes and dies
+    // permanently a few attempts in; m1 takes the same transient
+    // rate but stays alive. At each nonzero fault rate the stream is
+    // served twice — without failover (m0's requests are lost) and
+    // with the m0→m1 fallback route (they complete on m1, tagged
+    // degraded). The trace runs well under capacity so the virtual
+    // horizon is arrival-dominated and the failover run's recovered
+    // completions show up as strictly higher goodput — the datapoint
+    // pair `bench_gate.py` gates.
+    let fault_rates: &[f64] =
+        if smoke { &[0.0, 0.1] } else { &[0.0, 0.05, 0.15] };
+    let kill_step = 4u64;
+    // deep enough that transient faults never exhaust the budget
+    // (only the permanent lane death produces failures), so the
+    // failover-vs-no-failover comparison is seed-robust
+    let retry_max = 5u32;
+    let fault_cfg = TraceConfig {
+        rate_rps: 0.3 * cap,
+        requests: requests.max(16),
+        model_mix: vec![("m0".into(), 0.5), ("m1".into(), 0.5)],
+        ..base.clone()
+    };
+    let fault_trace = loadgen::generate_trace(&fault_cfg)?;
+    let chaos_for = |rate: f64, failover: bool| -> ChaosConfig {
+        let mut chaos = ChaosConfig::default();
+        chaos.recovery.retry = RetryPolicy {
+            max_retries: retry_max,
+            base_ms: 1.0,
+            multiplier: 2.0,
+            cap_ms: 8.0,
+        };
+        if rate > 0.0 {
+            let mut p0 = FaultPlan::new(5);
+            p0.step_fail_p = rate;
+            p0.spike_p = rate;
+            p0.spike_ms = 2.0;
+            p0.die_at_step = Some(kill_step);
+            let mut p1 = FaultPlan::new(5);
+            p1.step_fail_p = rate;
+            p1.spike_p = rate;
+            p1.spike_ms = 2.0;
+            chaos.faults.push(FaultSpec { model: Some("m0".into()),
+                                          plan: p0 });
+            chaos.faults.push(FaultSpec { model: Some("m1".into()),
+                                          plan: p1 });
+            if failover {
+                chaos.fallback = Some(("m0".into(), "m1".into()));
+            }
+        }
+        chaos
+    };
+    println!("\nfault leg (m0 dies at attempt {kill_step}, retry max \
+              {retry_max}, m0→m1 failover @ 0.3x capacity):");
+    let mut fault_rows: Vec<Json> = Vec::new();
+    for &rate in fault_rates {
+        let (no_pt, _, _) = loadgen::run_trace_registry(
+            &registry, &fault_trace, &dp, false, &lit, &Fifo,
+            &Unbounded, &chaos_for(rate, false))?;
+        let (fo_pt, _, _) = loadgen::run_trace_registry(
+            &registry, &fault_trace, &dp, false, &lit, &Fifo,
+            &Unbounded, &chaos_for(rate, true))?;
+        for pt in [&no_pt, &fo_pt] {
+            anyhow::ensure!(
+                pt.completed + pt.shed + pt.expired + pt.failed
+                    == pt.requests,
+                "fault leg lost requests at rate {rate}: \
+                 {}+{}+{}+{} != {}",
+                pt.completed, pt.shed, pt.expired, pt.failed,
+                pt.requests
+            );
+        }
+        if rate > 0.0 {
+            anyhow::ensure!(
+                no_pt.failed > 0,
+                "lane death without failover failed nothing at rate \
+                 {rate}"
+            );
+            anyhow::ensure!(
+                fo_pt.degraded > 0,
+                "failover rerouted nothing at rate {rate}"
+            );
+            anyhow::ensure!(
+                fo_pt.failed < no_pt.failed,
+                "failover did not reduce failures at rate {rate} \
+                 ({} vs {})", fo_pt.failed, no_pt.failed
+            );
+            anyhow::ensure!(
+                fo_pt.goodput_tokens_per_sec
+                    >= no_pt.goodput_tokens_per_sec,
+                "failover goodput {} below no-failover {} at fault \
+                 rate {rate}",
+                fo_pt.goodput_tokens_per_sec,
+                no_pt.goodput_tokens_per_sec
+            );
+        }
+        println!("  rate {:.2}: no-failover goodput {:.0} tok/vs \
+                  ({} failed), failover {:.0} tok/vs ({} failed, {} \
+                  degraded, {} retries)",
+                 rate, no_pt.goodput_tokens_per_sec, no_pt.failed,
+                 fo_pt.goodput_tokens_per_sec, fo_pt.failed,
+                 fo_pt.degraded, fo_pt.retries);
+        let mut row = Json::obj();
+        row.push_num("fault_rate", rate)
+            .push("no_failover", no_pt.to_json())
+            .push("failover", fo_pt.to_json());
+        fault_rows.push(row);
+    }
+    // chaos determinism: the same seed + fault plan must reproduce
+    // byte-identical telemetry
+    let chaos = chaos_for(*fault_rates.last().unwrap(), true);
+    let (da, _, _) = loadgen::run_trace_registry(
+        &registry, &fault_trace, &dp, false, &lit, &Fifo, &Unbounded,
+        &chaos)?;
+    let (db, _, _) = loadgen::run_trace_registry(
+        &registry, &fault_trace, &dp, false, &lit, &Fifo, &Unbounded,
+        &chaos)?;
+    anyhow::ensure!(
+        da.to_json().to_string() == db.to_json().to_string(),
+        "chaos run is not deterministic under a pinned fault plan"
+    );
 
     let costs_json = |c: &StepCosts| {
         let mut o = Json::obj();
@@ -310,6 +444,14 @@ fn main() -> anyhow::Result<()> {
         .push("aggregate", mm_agg.to_json())
         .push("per_model", loadgen::points_json(&mm_models));
     j.push("multi_model", multi);
+    let mut fault = Json::obj();
+    fault.push("models", Json::Arr(vec![
+            Json::Str("m0".into()), Json::Str("m1".into())]))
+        .push_num("offered_rps", fault_cfg.rate_rps)
+        .push_num("kill_step", kill_step)
+        .push_num("retry_max", retry_max)
+        .push("rates", Json::Arr(fault_rows));
+    j.push("fault", fault);
     j.push("points", loadgen::points_json(&points));
 
     let out_path = std::env::var("SPDF_BENCH_OUT")

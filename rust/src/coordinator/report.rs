@@ -179,6 +179,18 @@ pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
                 format!("{:.1} tok/s",
                         stats.goodput_tokens_per_sec)]);
     }
+    if stats.failed > 0 {
+        // fault injection / real step errors: requests lost after
+        // retries ran out (or a lane died without failover)
+        t.row(&["failed (faults)".into(), stats.failed.to_string()]);
+    }
+    if stats.retries > 0 {
+        t.row(&["step retries".into(), stats.retries.to_string()]);
+    }
+    if stats.degraded > 0 {
+        t.row(&["degraded (failover)".into(),
+                stats.degraded.to_string()]);
+    }
     t.row(&["throughput".into(),
             format!("{:.1} tok/s", stats.tokens_per_sec)]);
     t.row(&["mean step".into(),
@@ -340,7 +352,10 @@ mod tests {
             completed: requests - shed - expired,
             shed,
             expired,
+            failed: 0,
             shed_rate: (shed + expired) as f64 / requests as f64,
+            retries: 0,
+            degraded: 0,
             decode_batch: 4,
             engine_steps: 40,
             prefill_steps: 3,
@@ -371,6 +386,7 @@ mod tests {
             ttft_ms: 200.0,
             latency_ms: 700.0,
             outcome: crate::generate::RequestOutcome::Completed,
+            degraded: false,
         }];
         let t = serve_table(&stats, &results);
         assert!(t.contains("90.0%"), "{t}");
@@ -381,6 +397,24 @@ mod tests {
         assert!(t.contains("TTFT"), "{t}");
         // no admission control engaged: no shed rows
         assert!(!t.contains("shed rate"), "{t}");
+        // no faults engaged: no recovery rows
+        assert!(!t.contains("failed (faults)"), "{t}");
+        assert!(!t.contains("step retries"), "{t}");
+        assert!(!t.contains("degraded (failover)"), "{t}");
+    }
+
+    #[test]
+    fn serve_table_renders_fault_rows_when_faults_engaged() {
+        let mut stats = serve_stats(0, 0);
+        stats.completed = 9;
+        stats.failed = 3;
+        stats.retries = 17;
+        stats.degraded = 2;
+        let t = serve_table(&stats, &[]);
+        assert!(t.contains("failed (faults)"), "{t}");
+        assert!(t.contains("step retries"), "{t}");
+        assert!(t.contains("17"), "{t}");
+        assert!(t.contains("degraded (failover)"), "{t}");
     }
 
     #[test]
@@ -404,7 +438,10 @@ mod tests {
             completed: 64,
             shed: 0,
             expired: 0,
+            failed: 0,
             shed_rate: 0.0,
+            retries: 0,
+            degraded: 0,
             generated_tokens: 1000,
             step_ms: 1.0,
             prefill_ms: 1.0,

@@ -42,7 +42,7 @@ use super::serve::core as serve_core;
 use super::serve::core::ServeConfig;
 use super::serve::policy::{Fifo, Scheduler};
 use super::serve::registry::ModelRegistry;
-use super::serve::{Schedule, ServeReport, ServeStats};
+use super::serve::{ChaosConfig, Schedule, ServeReport, ServeStats};
 use super::{DecodeEngine, DecodeParams, DecodeRequest};
 
 /// Seed salt for the priority-class phase: priorities come from their
@@ -397,12 +397,21 @@ pub struct LoadPoint {
     /// outcome).
     pub offered_rps: f64,
     pub requests: usize,
-    /// Outcome buckets (completed + shed + expired == requests).
+    /// Outcome buckets
+    /// (completed + shed + expired + failed == requests).
     pub completed: usize,
     pub shed: usize,
     pub expired: usize,
+    /// Requests lost to injected faults (retry budget exhausted or
+    /// lane death with no failover) — 0 without a fault plan.
+    pub failed: usize,
     /// `(shed + expired) / requests` — 0.0 under unbounded admission.
+    /// Fault losses are counted by `failed`, not here.
     pub shed_rate: f64,
+    /// Failed step attempts recovered by retry/backoff.
+    pub retries: u64,
+    /// Completions that were failed over to another model.
+    pub degraded: usize,
     pub generated_tokens: u64,
     pub step_ms: f64,
     pub prefill_ms: f64,
@@ -439,7 +448,10 @@ impl LoadPoint {
             .push_num("completed", self.completed)
             .push_num("shed", self.shed)
             .push_num("expired", self.expired)
+            .push_num("failed", self.failed)
             .push_num("shed_rate", self.shed_rate)
+            .push_num("retries", self.retries)
+            .push_num("degraded", self.degraded)
             .push_num("generated_tokens", self.generated_tokens)
             .push_num("step_ms", self.step_ms)
             .push_num("prefill_ms", self.prefill_ms)
@@ -465,11 +477,14 @@ pub fn run_trace(engine: &DecodeEngine, trace: &Trace,
                  dp: &DecodeParams, use_kv: bool, costs: &StepCosts)
                  -> anyhow::Result<(LoadPoint, ServeReport)> {
     run_trace_with(engine, trace, dp, use_kv, costs, &Fifo,
-                   &Unbounded)
+                   &Unbounded, &ChaosConfig::default())
 }
 
-/// [`run_trace`] under explicit scheduling + admission policies —
-/// the shedding/goodput measurement driver.
+/// [`run_trace`] under explicit scheduling + admission policies and
+/// an optional fault/recovery plan — the shedding/goodput measurement
+/// driver (`chaos` = `ChaosConfig::default()` injects nothing and is
+/// bit-identical to the pre-fault loop).
+#[allow(clippy::too_many_arguments)]
 pub fn run_trace_with(
     engine: &DecodeEngine,
     trace: &Trace,
@@ -478,6 +493,7 @@ pub fn run_trace_with(
     costs: &StepCosts,
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
+    chaos: &ChaosConfig,
 ) -> anyhow::Result<(LoadPoint, ServeReport)> {
     let schedule = trace.schedule(costs);
     let report = serve_core::serve_with(
@@ -487,6 +503,9 @@ pub fn run_trace_with(
             schedule: Some(&schedule),
             scheduler,
             admission,
+            recovery: chaos.recovery.clone(),
+            faults: chaos.faults.clone(),
+            fallback: chaos.fallback.clone(),
         })?;
     let point = point_from_stats("", &report.stats, trace.rate_rps,
                                  trace, use_kv, costs, scheduler,
@@ -520,16 +539,20 @@ fn point_from_stats(
         completed: st.completed,
         shed: st.shed,
         expired: st.expired,
+        failed: st.failed,
         shed_rate: st.shed_rate,
+        retries: st.retries,
+        degraded: st.degraded,
         generated_tokens: st.generated_tokens,
         step_ms: costs.step_ms,
         prefill_ms: costs.prefill_ms,
         sim_ms: st.sim_ms,
         achieved_rps: st.completed as f64 / sim_secs,
         tokens_per_vsec: st.generated_tokens as f64 / sim_secs,
-        // failures never decode, so generated tokens all belong to
-        // completed requests (see ServeStats::from_results); the
-        // named goodput datapoint survives future mid-slot cancels
+        // failed requests deliver no partial output, so generated
+        // tokens all belong to completed requests (see
+        // ServeStats::from_results); the named goodput datapoint
+        // survives future mid-slot cancels
         goodput_tokens_per_sec: st.generated_tokens as f64 / sim_secs,
         occupancy: st.occupancy,
         queue_ms: st.queue_ms.clone(),
@@ -554,6 +577,7 @@ pub fn run_trace_registry(
     costs: &StepCosts,
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
+    chaos: &ChaosConfig,
 ) -> anyhow::Result<(LoadPoint, Vec<LoadPoint>, ServeReport)> {
     let schedule = trace.schedule(costs);
     let report = registry.serve_with(
@@ -563,6 +587,9 @@ pub fn run_trace_registry(
             schedule: Some(&schedule),
             scheduler,
             admission,
+            recovery: chaos.recovery.clone(),
+            faults: chaos.faults.clone(),
+            fallback: chaos.fallback.clone(),
         })?;
     let total = trace.requests.len().max(1);
     let aggregate = point_from_stats("", &report.stats,
@@ -589,11 +616,13 @@ pub fn run_trace_registry(
 pub fn sweep(engine: &DecodeEngine, base: &TraceConfig,
              rates: &[f64], engines: &[(bool, StepCosts)],
              dp: &DecodeParams) -> anyhow::Result<Vec<LoadPoint>> {
-    sweep_with(engine, base, rates, engines, dp, &Fifo, &Unbounded)
+    sweep_with(engine, base, rates, engines, dp, &Fifo, &Unbounded,
+               &ChaosConfig::default())
 }
 
-/// [`sweep`] under explicit scheduling + admission policies (`spdf
-/// loadgen --policy/--max-queue/--queue-deadline-ms`).
+/// [`sweep`] under explicit scheduling + admission policies and an
+/// optional fault/recovery plan (`spdf loadgen
+/// --policy/--max-queue/--queue-deadline-ms/--fault-*`).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_with(
     engine: &DecodeEngine,
@@ -603,6 +632,7 @@ pub fn sweep_with(
     dp: &DecodeParams,
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
+    chaos: &ChaosConfig,
 ) -> anyhow::Result<Vec<LoadPoint>> {
     let mut points = Vec::new();
     for &rate in rates {
@@ -611,7 +641,7 @@ pub fn sweep_with(
         for (use_kv, costs) in engines {
             let (point, _) = run_trace_with(engine, &trace, dp,
                                             *use_kv, costs, scheduler,
-                                            admission)?;
+                                            admission, chaos)?;
             points.push(point);
         }
     }
@@ -631,6 +661,7 @@ pub fn sweep_registry(
     dp: &DecodeParams,
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
+    chaos: &ChaosConfig,
 ) -> anyhow::Result<Vec<LoadPoint>> {
     let mut points = Vec::new();
     for &rate in rates {
@@ -639,7 +670,7 @@ pub fn sweep_registry(
         for (use_kv, costs) in engines {
             let (aggregate, per_model, _) = run_trace_registry(
                 registry, &trace, dp, *use_kv, costs, scheduler,
-                admission)?;
+                admission, chaos)?;
             points.push(aggregate);
             points.extend(per_model);
         }
@@ -842,10 +873,13 @@ mod tests {
             admission: "max-queue(8)".into(),
             offered_rps: 120.0,
             requests: 64,
-            completed: 60,
+            completed: 58,
             shed: 3,
             expired: 1,
+            failed: 2,
             shed_rate: 4.0 / 64.0,
+            retries: 7,
+            degraded: 5,
             generated_tokens: 900,
             step_ms: 0.8,
             prefill_ms: 2.0,
@@ -868,11 +902,14 @@ mod tests {
                    Some("max-queue(8)"));
         assert_eq!(j.get("offered_rps").unwrap().as_f64(),
                    Some(120.0));
-        assert_eq!(j.get("completed").unwrap().as_usize(), Some(60));
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(58));
         assert_eq!(j.get("shed").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("expired").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("failed").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("shed_rate").unwrap().as_f64(),
                    Some(4.0 / 64.0));
+        assert_eq!(j.get("retries").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("degraded").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("goodput_tokens_per_sec").unwrap().as_f64(),
                    Some(1285.7));
         assert_eq!(j.get("latency_ms").unwrap().get("p50")

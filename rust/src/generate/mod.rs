@@ -51,9 +51,10 @@ pub mod serve;
 pub mod topk;
 
 pub use engine::DecodeEngine;
-pub use serve::{DecodeRequest, ModelRegistry, ModelStats,
-                RequestOutcome, RequestResult, Schedule, ServeConfig,
-                ServeReport, ServeStats};
+pub use serve::{ChaosConfig, DecodeRequest, FaultPlan, FaultSpec,
+                ModelRegistry, ModelStats, RecoveryConfig,
+                RequestOutcome, RequestResult, RetryPolicy, Schedule,
+                ServeConfig, ServeReport, ServeStats};
 
 use crate::runtime::{HostTensor, ModelRuntime};
 

@@ -123,6 +123,32 @@ impl Clock {
             *now_ms = now_ms.max(t);
         }
     }
+
+    /// Extra elapsed time beyond the fixed step cost — an injected
+    /// latency spike, attributed after the step that carried it. Wall
+    /// clock ignores it (real time already passed, or didn't).
+    pub(crate) fn advance(&mut self, ms: f64) {
+        if let Clock::Virtual { now_ms, .. } = self {
+            *now_ms += ms;
+        }
+    }
+
+    /// Block until `t`: every lane with work is waiting out a retry
+    /// backoff or breaker cooldown, so time must pass without a model
+    /// step. Virtual → jump; Wall → sleep off the remainder.
+    pub(crate) fn wait_until(&mut self, t: f64, t0: &Instant) {
+        match self {
+            Clock::Virtual { .. } => self.jump_to(t),
+            Clock::Wall => {
+                let now = t0.elapsed().as_secs_f64() * 1e3;
+                if t > now {
+                    std::thread::sleep(
+                        std::time::Duration::from_secs_f64(
+                            (t - now) / 1e3));
+                }
+            }
+        }
+    }
 }
 
 /// Pending-arrival queue: request indices ordered by (arrival, index),
@@ -314,5 +340,13 @@ mod tests {
         assert_eq!(c.now_ms(&t0), 10.0);
         c.jump_to(4.0); // never rewinds
         assert_eq!(c.now_ms(&t0), 10.0);
+        // spikes add on top of wherever the clock is
+        c.advance(2.5);
+        assert_eq!(c.now_ms(&t0), 12.5);
+        // wait_until is a jump on the virtual clock, max-only
+        c.wait_until(20.0, &t0);
+        assert_eq!(c.now_ms(&t0), 20.0);
+        c.wait_until(1.0, &t0);
+        assert_eq!(c.now_ms(&t0), 20.0);
     }
 }

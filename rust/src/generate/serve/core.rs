@@ -46,6 +46,7 @@ use crate::tokenizer::EOS;
 
 use super::admission::{AdmissionPolicy, Unbounded};
 use super::clock::{ArrivalQueue, Clock, Schedule};
+use super::fault::{plans_for_lanes, FaultyBackend, RecoveryConfig};
 use super::policy::{Fifo, Scheduler};
 use super::telemetry::{ModelStats, RequestOutcome, RequestResult,
                        ServeReport, ServeStats};
@@ -75,6 +76,50 @@ pub trait LogitsBackend {
     /// Logits for every row read at its `pos` (flat `B * vocab`).
     fn step(&mut self, tokens: &[i32], pos: &[i32])
             -> anyhow::Result<Vec<f32>>;
+    /// false → the backend has failed permanently: the serve loop
+    /// drains the lane (failover or `Failed`) and never steps it
+    /// again. A plain `step` error with `healthy()` still true is
+    /// transient and retried per the `RetryPolicy`.
+    fn healthy(&self) -> bool {
+        true
+    }
+    /// Drain any extra latency the last step carried beyond the fixed
+    /// step cost (injected spikes). The serve loop charges it to the
+    /// virtual clock after the step; 0.0 for real backends.
+    fn take_spike_ms(&mut self) -> f64 {
+        0.0
+    }
+}
+
+/// Boxed backends forward the whole trait — needed so the fault
+/// wrapper can wrap the registry's `Box<dyn LogitsBackend>` lanes
+/// without re-boxing or downcasting.
+impl<B: LogitsBackend + ?Sized> LogitsBackend for Box<B> {
+    fn dims(&self) -> (usize, usize, usize) {
+        (**self).dims()
+    }
+
+    fn needs_prefill(&self) -> bool {
+        (**self).needs_prefill()
+    }
+
+    fn prefill(&mut self, tokens: &[i32], pos: &[i32],
+               refill: &[f32]) -> anyhow::Result<()> {
+        (**self).prefill(tokens, pos, refill)
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32])
+            -> anyhow::Result<Vec<f32>> {
+        (**self).step(tokens, pos)
+    }
+
+    fn healthy(&self) -> bool {
+        (**self).healthy()
+    }
+
+    fn take_spike_ms(&mut self) -> f64 {
+        (**self).take_spike_ms()
+    }
 }
 
 /// Literal-resident backend: full-context recompute per step.
@@ -182,6 +227,20 @@ pub struct ServeConfig<'a> {
     pub scheduler: &'a dyn Scheduler,
     /// Enqueue / shed / expire decisions.
     pub admission: &'a dyn AdmissionPolicy,
+    /// Retry/backoff, circuit-breaker and failover knobs for the
+    /// recovery layer (the default retries transient faults and never
+    /// opens a breaker — inert unless a backend actually fails).
+    pub recovery: RecoveryConfig,
+    /// Deterministic fault plans to inject, by registry model name
+    /// (`None` targets every lane; the single-model entry points
+    /// accept `None` or `Some("default")`). Empty = no injection and
+    /// bit-identical behavior to the pre-fault loop.
+    pub faults: Vec<super::fault::FaultSpec>,
+    /// Opt-in cross-model failover route `(from_model, to_model)`,
+    /// resolved against the registry — requests bound for a dead or
+    /// breaker-open `from` lane reroute to `to` and complete tagged
+    /// degraded. Registry serving only.
+    pub fallback: Option<(String, String)>,
 }
 
 impl<'a> ServeConfig<'a> {
@@ -191,6 +250,9 @@ impl<'a> ServeConfig<'a> {
             schedule: None,
             scheduler: &Fifo,
             admission: &Unbounded,
+            recovery: RecoveryConfig::default(),
+            faults: Vec::new(),
+            fallback: None,
         }
     }
 
@@ -258,9 +320,27 @@ pub fn serve_with(
     dp: &DecodeParams,
     cfg: &ServeConfig,
 ) -> anyhow::Result<ServeReport> {
+    anyhow::ensure!(
+        cfg.fallback.is_none(),
+        "cross-model failover needs a multi-model registry (this \
+         entry point serves a single lane)"
+    );
+    let names = [String::from("default")];
+    let plans = plans_for_lanes(&cfg.faults, &names)?;
+    let lane_of = vec![0usize; requests.len()];
     let mut backend = backend_for(engine, cfg.use_kv)?;
-    run_loop_with(backend.as_mut(), requests, dp, cfg.schedule,
-                  cfg.scheduler, cfg.admission)
+    match &plans[0] {
+        Some(plan) => {
+            let mut faulty = FaultyBackend::new(backend, plan, 0)?;
+            run_lanes_with(&mut [&mut faulty], &names, &lane_of,
+                           requests, dp, cfg.schedule, cfg.scheduler,
+                           cfg.admission, &cfg.recovery)
+        }
+        None => run_lanes_with(&mut [backend.as_mut()], &names,
+                               &lane_of, requests, dp, cfg.schedule,
+                               cfg.scheduler, cfg.admission,
+                               &cfg.recovery),
+    }
 }
 
 /// Build the per-engine backend for one serve lane: the
@@ -296,11 +376,13 @@ pub(crate) fn run_loop(
     run_loop_with(backend, requests, dp, schedule, &Fifo, &Unbounded)
 }
 
-/// [`run_lanes_with`] specialized to one anonymous lane — the
-/// single-engine state machine behind [`serve`] / [`serve_kv`] /
-/// [`serve_timed`] / [`serve_with`]. `DecodeRequest::model` is not
-/// consulted here: the one engine serves every request (model routing
-/// is [`super::registry::ModelRegistry`]'s job).
+/// [`run_lanes_with`] specialized to one anonymous lane under the
+/// default recovery config — the single-engine state machine behind
+/// the mock-backed unit tests (the public entry points go through
+/// [`serve_with`], which also wires fault injection).
+/// `DecodeRequest::model` is not consulted here: the one engine
+/// serves every request (model routing is
+/// [`super::registry::ModelRegistry`]'s job).
 pub(crate) fn run_loop_with(
     backend: &mut dyn LogitsBackend,
     requests: &[DecodeRequest],
@@ -312,7 +394,8 @@ pub(crate) fn run_loop_with(
     let names = [String::from("default")];
     let lane_of = vec![0usize; requests.len()];
     run_lanes_with(&mut [backend], &names, &lane_of, requests, dp,
-                   schedule, scheduler, admission)
+                   schedule, scheduler, admission,
+                   &RecoveryConfig::default())
 }
 
 /// Per-lane serving state: one model's fixed decode geometry, its
@@ -334,6 +417,20 @@ struct Lane {
     engine_steps: u64,
     slot_steps: u64,
     prefill_steps: u64,
+    /// Recovery state: the lane is skipped while `now` is before
+    /// `retry_at` (backoff after a transient failure) or `open_until`
+    /// (circuit-breaker cooldown; +inf once the lane is `dead`).
+    retry_at: f64,
+    /// Consecutive failed attempts on the *current* in-flight work —
+    /// reset on success and when the retry budget fails the slots.
+    attempt: u32,
+    /// Consecutive failed attempts feeding the circuit breaker —
+    /// reset on success and when the breaker opens.
+    consec_fail: u32,
+    open_until: f64,
+    dead: bool,
+    /// Retries scheduled on this lane (ends up in `ServeStats`).
+    retries: u64,
 }
 
 /// One slot-refill state machine for every decode path — and, since
@@ -362,6 +459,17 @@ struct Lane {
 /// models — and finished requests leave with
 /// [`RequestOutcome::Completed`].
 ///
+/// Step errors are contained to their lane by the `recovery` layer: a
+/// transient failure schedules a retry with capped backoff (occupied
+/// rows re-prefill from tokens-so-far, so resumed decodes stay
+/// bitwise identical), an exhausted retry budget fails only the
+/// lane's in-flight slots ([`RequestOutcome::Failed`]), a permanently
+/// dead backend drains its lane through the failover route (requests
+/// restart on the fallback lane tagged degraded) or as `Failed`, and
+/// N consecutive failed attempts open a per-lane circuit breaker for
+/// a cooldown. A fault-free run is bit-identical to the pre-recovery
+/// loop under every config.
+///
 /// Public (with [`mock`]) so the serve-invariant property suite in
 /// `rust/tests/` can drive random traces × policies × lane counts
 /// without compiled artifacts.
@@ -375,6 +483,7 @@ pub fn run_lanes_with(
     schedule: Option<&Schedule>,
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
+    recovery: &RecoveryConfig,
 ) -> anyhow::Result<ServeReport> {
     let n_lanes = backends.len();
     anyhow::ensure!(n_lanes > 0, "serve loop needs at least one lane");
@@ -401,6 +510,12 @@ pub fn run_lanes_with(
                 engine_steps: 0,
                 slot_steps: 0,
                 prefill_steps: 0,
+                retry_at: 0.0,
+                attempt: 0,
+                consec_fail: 0,
+                open_until: 0.0,
+                dead: false,
+                retries: 0,
             }
         })
         .collect();
@@ -420,6 +535,7 @@ pub fn run_lanes_with(
     if let Some(s) = schedule {
         s.validate(requests.len())?;
     }
+    recovery.validate(n_lanes)?;
     let deadline = admission.deadline_ms();
     if let Some(d) = deadline {
         anyhow::ensure!(d.is_finite() && d > 0.0,
@@ -434,6 +550,12 @@ pub fn run_lanes_with(
     // split after the loop and never reaches the caller.
     let mut results: Vec<(usize, RequestResult)> =
         Vec::with_capacity(requests.len());
+    // Live routing table: starts as the caller's lane_of and diverges
+    // only when the recovery layer fails a request over. Per-model
+    // offered counts and result lane tags both follow `route`, so a
+    // model's block describes the traffic it actually served.
+    let mut route: Vec<usize> = lane_of.to_vec();
+    let mut degraded: Vec<bool> = vec![false; requests.len()];
 
     loop {
         let now = clock.now_ms(&t0);
@@ -451,8 +573,43 @@ pub fn run_lanes_with(
                 .collect();
             while let Some(i) = pending.pop_ready(now) {
                 moved = true;
-                let l = lane_of[i];
+                let mut l = route[i];
                 let arrival = pending.arrival_of(i);
+                // recovery routing: an arrival bound for a dead or
+                // breaker-open lane fails over when a usable fallback
+                // is configured; without one, dead-lane arrivals fail
+                // at arrival (mirroring shed telemetry) and open-lane
+                // arrivals queue out the cooldown
+                if lanes[l].dead || now < lanes[l].open_until {
+                    let fb = recovery.fallback.get(l).copied()
+                        .flatten()
+                        .filter(|&f| !lanes[f].dead
+                            && requests[i].prompt.len() < lanes[f].t);
+                    match fb {
+                        Some(f) => {
+                            route[i] = f;
+                            degraded[i] = true;
+                            l = f;
+                        }
+                        None if lanes[l].dead => {
+                            results.push((l, RequestResult {
+                                id: requests[i].id,
+                                tokens: Vec::new(),
+                                queue_steps: 0,
+                                decode_steps: 0,
+                                arrival_ms: arrival,
+                                queue_ms: 0.0,
+                                ttft_ms: 0.0,
+                                latency_ms: 0.0,
+                                outcome: RequestOutcome::Failed,
+                                degraded: false,
+                            }));
+                            pending.on_complete(i, arrival);
+                            continue;
+                        }
+                        None => {}
+                    }
+                }
                 // a request that will seat immediately never consults
                 // the policy — only genuine waiters can be shed; the
                 // waiting count is the request's OWN lane's queue
@@ -477,6 +634,7 @@ pub fn run_lanes_with(
                         ttft_ms: 0.0,
                         latency_ms: 0.0,
                         outcome: RequestOutcome::Shed,
+                        degraded: degraded[i],
                     }));
                     // rejection happens AT arrival (the telemetry
                     // above says so); the closed-loop successor is
@@ -508,6 +666,7 @@ pub fn run_lanes_with(
                                 ttft_ms: d,
                                 latency_ms: d,
                                 outcome: RequestOutcome::Expired,
+                                degraded: degraded[i],
                             }));
                             pending.on_complete(i, arrival + d);
                         } else {
@@ -527,6 +686,11 @@ pub fn run_lanes_with(
         // `max_new_tokens == 0` decodes nothing) and never occupy a
         // slot.
         for (l, lane) in lanes.iter_mut().enumerate() {
+            // a dead lane's queue was drained at death; an open
+            // breaker holds seating until the cooldown passes
+            if lane.dead || now < lane.open_until {
+                continue;
+            }
             for s in 0..lane.b {
                 if lane.slots[s].is_some() {
                     continue;
@@ -550,6 +714,7 @@ pub fn run_lanes_with(
                             ttft_ms: now - arrival,
                             latency_ms: now - arrival,
                             outcome: RequestOutcome::Completed,
+                            degraded: degraded[i],
                         }));
                         pending.on_complete(i, now);
                         continue;
@@ -574,9 +739,12 @@ pub fn run_lanes_with(
 
         if lanes.iter()
             .all(|ln| ln.slots.iter().all(|s| s.is_none()))
+            && lanes.iter().all(|ln| ln.ready.is_empty())
         {
-            // the fill stage drains every ready set whenever a slot
-            // is free, so only future or gated arrivals can remain
+            // the fill stage drains every live lane's ready set
+            // whenever a slot is free (a breaker-open lane keeps its
+            // queue and is handled by the wake computation below), so
+            // only future or gated arrivals can remain here
             if pending.is_empty() {
                 break;
             }
@@ -596,29 +764,198 @@ pub fn run_lanes_with(
         // One model step per lane with work, in lane order on the
         // shared clock — each lane's invocation advances the virtual
         // clock, so an N-model registry pays N step costs per round
-        // (one accelerator, N resident models served in turn).
-        for (lane, backend) in lanes.iter_mut().zip(backends.iter_mut())
+        // (one accelerator, N resident models served in turn). A
+        // failed attempt is contained to its lane: the error never
+        // propagates out of the loop (regression-tested — a transient
+        // mid-run fault used to abort the whole run).
+        let mut stepped = false;
+        // (request, fallback lane, failure instant) — applied after
+        // the lane loop, since rerouting pushes into *another* lane's
+        // ready set while this loop holds all lanes mutably.
+        let mut reroutes: Vec<(usize, usize, f64)> = Vec::new();
+        for (l, (lane, backend)) in
+            lanes.iter_mut().zip(backends.iter_mut()).enumerate()
         {
             let occupied =
                 lane.slots.iter().filter(|s| s.is_some()).count();
-            if occupied == 0 {
+            if occupied == 0 || lane.dead {
                 continue;
             }
+            let lane_now = clock.now_ms(&t0);
+            if lane_now < lane.retry_at || lane_now < lane.open_until {
+                // backing off after a transient failure, or cooling
+                // down an open breaker
+                continue;
+            }
+            // run the attempt (prefill if pending, then one step)
+            // with the error contained instead of propagated
+            let mut attempt_err = None;
             if lane.needs_prefill && lane.any_refill {
                 // populate the marked rows' caches (positions up to
                 // and including `pos`) from their prompt rows; other
                 // rows pass through untouched
-                backend.prefill(&lane.tokens, &lane.pos,
-                                &lane.refill)?;
-                lane.prefill_steps += 1;
-                lane.refill.fill(0.0);
-                lane.any_refill = false;
-                clock.on_prefill();
+                match backend.prefill(&lane.tokens, &lane.pos,
+                                      &lane.refill) {
+                    Ok(()) => {
+                        lane.prefill_steps += 1;
+                        lane.refill.fill(0.0);
+                        lane.any_refill = false;
+                        clock.on_prefill();
+                    }
+                    Err(e) => attempt_err = Some(e),
+                }
             }
-            let lv = backend.step(&lane.tokens, &lane.pos)?;
+            let mut lv = Vec::new();
+            if attempt_err.is_none() {
+                match backend.step(&lane.tokens, &lane.pos) {
+                    Ok(v) => lv = v,
+                    Err(e) => attempt_err = Some(e),
+                }
+            }
+            stepped = true;
+            // a failed attempt burns a step's worth of time too —
+            // containment must not make failure cheaper than success
+            clock.on_step();
+
+            if attempt_err.is_some() {
+                let now = clock.now_ms(&t0);
+                lane.consec_fail = lane.consec_fail.saturating_add(1);
+                let fb = recovery.fallback.get(l).copied().flatten();
+                if !backend.healthy() {
+                    // permanent lane death: drain the in-flight slots
+                    // and queue (failover when configured, Failed
+                    // otherwise) and never step this lane again
+                    lane.dead = true;
+                    lane.open_until = f64::INFINITY;
+                    lane.refill.fill(0.0);
+                    lane.any_refill = false;
+                    for s in 0..lane.b {
+                        let Some(slot) = lane.slots[s].take() else {
+                            continue;
+                        };
+                        match fb {
+                            Some(f) => {
+                                reroutes.push((slot.req, f, now));
+                            }
+                            None => {
+                                let arrival =
+                                    pending.arrival_of(slot.req);
+                                results.push((l, RequestResult {
+                                    id: requests[slot.req].id,
+                                    tokens: Vec::new(),
+                                    queue_steps: slot.entered_step,
+                                    decode_steps: lane.engine_steps
+                                        - slot.entered_step,
+                                    arrival_ms: arrival,
+                                    queue_ms: slot.admit_ms - arrival,
+                                    ttft_ms: now - arrival,
+                                    latency_ms: now - arrival,
+                                    outcome: RequestOutcome::Failed,
+                                    degraded: degraded[slot.req],
+                                }));
+                                pending.on_complete(slot.req, now);
+                            }
+                        }
+                    }
+                    for i in lane.ready.drain(..) {
+                        match fb {
+                            Some(f) => reroutes.push((i, f, now)),
+                            None => {
+                                let arrival = pending.arrival_of(i);
+                                results.push((l, RequestResult {
+                                    id: requests[i].id,
+                                    tokens: Vec::new(),
+                                    queue_steps: 0,
+                                    decode_steps: 0,
+                                    arrival_ms: arrival,
+                                    queue_ms: now - arrival,
+                                    ttft_ms: now - arrival,
+                                    latency_ms: now - arrival,
+                                    outcome: RequestOutcome::Failed,
+                                    degraded: degraded[i],
+                                }));
+                                pending.on_complete(i, now);
+                            }
+                        }
+                    }
+                } else if lane.attempt < recovery.retry.max_retries {
+                    // transient: schedule a retry with capped
+                    // exponential backoff and mark the occupied rows
+                    // for re-prefill — each row's token buffer already
+                    // holds prompt + generated-so-far, so the existing
+                    // per-slot prefill path rebuilds the KV rows and
+                    // the resumed decode stays bitwise identical to an
+                    // uninterrupted one
+                    lane.attempt += 1;
+                    lane.retries += 1;
+                    lane.retry_at = now
+                        + recovery.retry.backoff_ms(lane.attempt);
+                    if lane.needs_prefill {
+                        for s in 0..lane.b {
+                            if lane.slots[s].is_some() {
+                                lane.refill[s] = 1.0;
+                                lane.any_refill = true;
+                            }
+                        }
+                    }
+                } else {
+                    // retry budget exhausted: the in-flight slots fail
+                    // (empty token streams — partial output is
+                    // dropped, not delivered); the lane itself stays
+                    // in service for later seatings
+                    lane.attempt = 0;
+                    for s in 0..lane.b {
+                        let Some(slot) = lane.slots[s].take() else {
+                            continue;
+                        };
+                        let arrival = pending.arrival_of(slot.req);
+                        results.push((l, RequestResult {
+                            id: requests[slot.req].id,
+                            tokens: Vec::new(),
+                            queue_steps: slot.entered_step,
+                            decode_steps: lane.engine_steps
+                                - slot.entered_step,
+                            arrival_ms: arrival,
+                            queue_ms: slot.admit_ms - arrival,
+                            ttft_ms: now - arrival,
+                            latency_ms: now - arrival,
+                            outcome: RequestOutcome::Failed,
+                            degraded: degraded[slot.req],
+                        }));
+                        pending.on_complete(slot.req, now);
+                    }
+                    lane.refill.fill(0.0);
+                    lane.any_refill = false;
+                }
+                // circuit breaker: N consecutive failed attempts open
+                // the lane for a cooldown; with failover configured,
+                // its waiting requests reroute instead of sitting the
+                // cooldown out
+                if !lane.dead
+                    && recovery.breaker_threshold > 0
+                    && lane.consec_fail >= recovery.breaker_threshold
+                {
+                    lane.open_until =
+                        now + recovery.breaker_cooldown_ms;
+                    lane.consec_fail = 0;
+                    if let Some(f) = fb {
+                        for i in lane.ready.drain(..) {
+                            reroutes.push((i, f, now));
+                        }
+                    }
+                }
+                continue;
+            }
+            lane.attempt = 0;
+            lane.consec_fail = 0;
             lane.engine_steps += 1;
             lane.slot_steps += occupied as u64;
-            clock.on_step();
+            // injected latency spikes ride on top of the fixed step
+            // cost (tokens are unaffected; only the clock moves)
+            let spike = backend.take_spike_ms();
+            if spike > 0.0 {
+                clock.advance(spike);
+            }
             let now = clock.now_ms(&t0);
 
             let (t, vocab) = (lane.t, lane.vocab);
@@ -658,9 +995,14 @@ pub fn run_lanes_with(
                     done
                 };
                 if finished {
-                    let slot = lane.slots[s].take().unwrap();
+                    let slot = lane.slots[s].take().expect(
+                        "slot emptied between the finished-edge check \
+                         and result emission — the recovery drains \
+                         only run on failed attempts, never after a \
+                         successful step",
+                    );
                     let arrival = pending.arrival_of(slot.req);
-                    let lane_idx = lane_of[slot.req];
+                    let lane_idx = route[slot.req];
                     results.push((lane_idx, RequestResult {
                         id: requests[slot.req].id,
                         queue_steps: slot.entered_step,
@@ -673,6 +1015,7 @@ pub fn run_lanes_with(
                         latency_ms: now - arrival,
                         tokens: slot.out,
                         outcome: RequestOutcome::Completed,
+                        degraded: degraded[slot.req],
                     }));
                     pending.on_complete(slot.req, now);
                     // the freed slot refills from its lane's queue at
@@ -680,6 +1023,64 @@ pub fn run_lanes_with(
                     // model step
                 }
             }
+        }
+
+        // Apply deferred failovers: restart each affected request
+        // from scratch on its fallback lane (generated-so-far is
+        // dropped — the fallback model would decode a different
+        // continuation anyway), queued by original arrival. If the
+        // fallback itself is unusable by now, the request fails at
+        // the instant its own lane did.
+        for (i, f, t_fail) in reroutes {
+            if lanes[f].dead || requests[i].prompt.len() >= lanes[f].t
+            {
+                let arrival = pending.arrival_of(i);
+                results.push((route[i], RequestResult {
+                    id: requests[i].id,
+                    tokens: Vec::new(),
+                    queue_steps: 0,
+                    decode_steps: 0,
+                    arrival_ms: arrival,
+                    queue_ms: t_fail - arrival,
+                    ttft_ms: t_fail - arrival,
+                    latency_ms: t_fail - arrival,
+                    outcome: RequestOutcome::Failed,
+                    degraded: degraded[i],
+                }));
+                pending.on_complete(i, t_fail);
+            } else {
+                route[i] = f;
+                degraded[i] = true;
+                pending.insert_ready(&mut lanes[f].ready, i);
+            }
+        }
+
+        if !stepped {
+            // nothing could step: every lane with work is waiting out
+            // a retry backoff or breaker cooldown. Advance to the
+            // earliest wake-up (or next arrival) instead of spinning
+            // — on the virtual clock this loop would otherwise never
+            // move time forward again.
+            let mut wake = f64::INFINITY;
+            for lane in &lanes {
+                if lane.dead {
+                    continue;
+                }
+                if lane.slots.iter().any(|s| s.is_some())
+                    || !lane.ready.is_empty()
+                {
+                    wake = wake.min(lane.retry_at.max(lane.open_until));
+                }
+            }
+            if let Some(next) = pending.next_arrival() {
+                wake = wake.min(next);
+            }
+            anyhow::ensure!(
+                wake.is_finite(),
+                "request queue deadlocked: requests remain but every \
+                 lane able to serve them is dead"
+            );
+            clock.wait_until(wake, &t0);
         }
     }
 
@@ -700,11 +1101,13 @@ pub fn run_lanes_with(
     let capacity: u64 =
         lanes.iter().map(|ln| ln.engine_steps * ln.b as u64).sum();
 
+    let retries: u64 = lanes.iter().map(|ln| ln.retries).sum();
+
     let all_refs: Vec<&RequestResult> =
         results.iter().map(|(_, r)| r).collect();
     let mut stats = ServeStats::from_results(
         &all_refs, requests.len(), total_batch, engine_steps,
-        prefill_steps, slot_steps, wall_secs, sim_ms);
+        prefill_steps, slot_steps, wall_secs, sim_ms, retries);
     stats.occupancy = if capacity == 0 {
         0.0
     } else {
@@ -727,13 +1130,17 @@ pub fn run_lanes_with(
                     .filter(|(rl, _)| *rl == l)
                     .map(|(_, r)| r)
                     .collect();
+                // offered follows the live route: a failed-over
+                // request counts against the lane that served (or
+                // finally failed) it, keeping each block's outcome
+                // buckets conserved against its own offered count
                 let offered =
-                    lane_of.iter().filter(|&&x| x == l).count();
+                    route.iter().filter(|&&x| x == l).count();
                 let ln = &lanes[l];
                 let mut st = ServeStats::from_results(
                     &lane_refs, offered, ln.b, ln.engine_steps,
                     ln.prefill_steps, ln.slot_steps, wall_secs,
-                    sim_ms);
+                    sim_ms, ln.retries);
                 // wall time is shared by every lane, so dividing it
                 // by one lane's steps would inflate the per-step cost
                 // ~N x; report the call-wide mean instead
@@ -1421,7 +1828,8 @@ mod tests {
             [&mut a, &mut b];
         let report = run_lanes_with(
             &mut lanes, &names, &lane_of, &requests,
-            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded)
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+            &RecoveryConfig::default())
             .unwrap();
         let r = &report.results;
         // lane a steps before lane b each round: a's requests finish
@@ -1479,7 +1887,7 @@ mod tests {
         let report = run_lanes_with(
             &mut lanes, &names, &lane_of, &requests,
             &DecodeParams::default(), Some(&s), &Fifo,
-            &MaxQueueDepth(0))
+            &MaxQueueDepth(0), &RecoveryConfig::default())
             .unwrap();
         let r = &report.results;
         assert!(r[0].outcome.is_completed());
@@ -1499,7 +1907,7 @@ mod tests {
                 [&mut a, &mut b];
             run_lanes_with(&mut lanes, &names, &[lane], requests,
                            &DecodeParams::default(), None, &Fifo,
-                           &Unbounded)
+                           &Unbounded, &RecoveryConfig::default())
         };
         // lane index out of range
         assert!(run(2, &reqs(&[1])).is_err());
@@ -1540,5 +1948,324 @@ mod tests {
         assert_eq!(a.stats.latency_ms, b.stats.latency_ms);
         assert_eq!(a.stats.queue_ms, b.stats.queue_ms);
         assert_eq!(a.stats.ttft_ms, b.stats.ttft_ms);
+    }
+
+    // ---- recovery-layer tests (fault containment, retry/backoff,
+    // circuit breaker, failover) -------------------------------------
+
+    use super::super::fault::{FaultPlan, RetryPolicy};
+
+    /// Mock failing scripted step-attempt indices (and optionally
+    /// dying permanently at one), for pinned recovery-path timing.
+    struct ScriptedBackend {
+        inner: MockBackend,
+        fail: Vec<u64>,
+        die_at: Option<u64>,
+        attempts: u64,
+    }
+
+    impl ScriptedBackend {
+        fn new(inner: MockBackend, fail: &[u64], die_at: Option<u64>)
+               -> ScriptedBackend {
+            ScriptedBackend { inner, fail: fail.to_vec(), die_at,
+                              attempts: 0 }
+        }
+    }
+
+    impl LogitsBackend for ScriptedBackend {
+        fn dims(&self) -> (usize, usize, usize) {
+            self.inner.dims()
+        }
+
+        fn needs_prefill(&self) -> bool {
+            self.inner.needs_prefill()
+        }
+
+        fn prefill(&mut self, tokens: &[i32], pos: &[i32],
+                   refill: &[f32]) -> anyhow::Result<()> {
+            self.inner.prefill(tokens, pos, refill)
+        }
+
+        fn step(&mut self, tokens: &[i32], pos: &[i32])
+                -> anyhow::Result<Vec<f32>> {
+            let a = self.attempts;
+            self.attempts += 1;
+            if self.die_at.is_some_and(|k| a >= k) {
+                anyhow::bail!("scripted permanent death at attempt \
+                               {a}");
+            }
+            if self.fail.contains(&a) {
+                anyhow::bail!("scripted transient failure at attempt \
+                               {a}");
+            }
+            self.inner.step(tokens, pos)
+        }
+
+        fn healthy(&self) -> bool {
+            !self.die_at.is_some_and(|k| self.attempts > k)
+        }
+    }
+
+    fn recovery_with(retry: RetryPolicy) -> RecoveryConfig {
+        RecoveryConfig { retry, ..RecoveryConfig::default() }
+    }
+
+    fn run_recovery(
+        backend: &mut dyn LogitsBackend,
+        requests: &[DecodeRequest],
+        s: &Schedule,
+        recovery: &RecoveryConfig,
+    ) -> anyhow::Result<ServeReport> {
+        let names = [String::from("default")];
+        let lane_of = vec![0usize; requests.len()];
+        run_lanes_with(&mut [backend], &names, &lane_of, requests,
+                       &DecodeParams::default(), Some(s), &Fifo,
+                       &Unbounded, recovery)
+    }
+
+    #[test]
+    fn transient_mid_run_failure_no_longer_aborts_the_run() {
+        // regression on the PR 5 behavior: a single failed step used
+        // to propagate out of run_lanes_with and kill every in-flight
+        // request on every lane. Now the lane retries with backoff
+        // (default policy: 1ms base, doubling) and the request
+        // completes with its token stream intact.
+        let requests = reqs(&[3]);
+        let s = sched(&[0.0], 1.0);
+        let mut be =
+            ScriptedBackend::new(MockBackend::new(1, 16, false),
+                                 &[1], None);
+        let report = run_recovery(&mut be, &requests, &s,
+                                  &RecoveryConfig::default())
+            .expect("transient fault must not abort the run");
+        let r = &report.results[0];
+        assert!(r.outcome.is_completed());
+        assert!(!r.degraded);
+        assert_eq!(r.tokens, vec![5, 5, 5], "tokens survive bitwise");
+        // t=1: token 1; t=2: failed attempt; backoff to t=3; tokens
+        // at t=4 and t=5
+        assert_eq!(r.ttft_ms, 1.0);
+        assert_eq!(r.latency_ms, 5.0);
+        assert_eq!(report.stats.retries, 1);
+        assert_eq!(report.stats.engine_steps, 3,
+                   "failed attempts are not engine steps");
+        assert_eq!(report.stats.sim_ms, 5.0);
+        assert_eq!(report.stats.failed, 0);
+    }
+
+    #[test]
+    fn retry_recovery_reprefills_from_tokens_so_far_on_kv() {
+        // on the KV path a retried lane re-marks its occupied rows:
+        // the row buffer already holds prompt + generated-so-far, so
+        // the existing prefill path rebuilds the cache and decode
+        // resumes bitwise — observable here as exactly one extra
+        // prefill pass
+        let requests = reqs(&[3]);
+        let s = sched(&[0.0], 1.0);
+        let mut be =
+            ScriptedBackend::new(MockBackend::new(1, 16, true),
+                                 &[1], None);
+        let report = run_recovery(&mut be, &requests, &s,
+                                  &RecoveryConfig::default())
+            .unwrap();
+        let r = &report.results[0];
+        assert_eq!(r.tokens, vec![5, 5, 5]);
+        assert_eq!(be.inner.prefills, 2,
+                   "seat prefill + recovery re-prefill");
+        assert_eq!(report.stats.prefill_steps, 2);
+        assert_eq!(report.stats.retries, 1);
+        // seat prefill t=1, first token t=2, fail t=3, backoff to
+        // t=4, re-prefill t=5, tokens t=6 and t=7
+        assert_eq!(r.latency_ms, 7.0);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_fails_only_inflight_slots() {
+        // a lane that fails every attempt burns its retry budget and
+        // fails the seated request — but the run keeps going and the
+        // next request gets its own fresh budget
+        let requests = reqs(&[2, 2]);
+        let s = sched(&[0.0, 0.0], 1.0);
+        let mut be =
+            ScriptedBackend::new(MockBackend::new(1, 16, false),
+                                 &(0..64).collect::<Vec<u64>>(),
+                                 None);
+        let recovery = recovery_with(RetryPolicy {
+            max_retries: 1,
+            base_ms: 1.0,
+            multiplier: 2.0,
+            cap_ms: 32.0,
+        });
+        let report =
+            run_recovery(&mut be, &requests, &s, &recovery).unwrap();
+        assert_eq!(report.results.len(), 2);
+        for r in &report.results {
+            assert_eq!(r.outcome, RequestOutcome::Failed);
+            assert!(r.tokens.is_empty(),
+                    "failed requests deliver no partial output");
+        }
+        let st = &report.stats;
+        assert_eq!((st.completed, st.failed), (0, 2));
+        assert_eq!(st.completed + st.shed + st.expired + st.failed,
+                   st.requests, "conservation includes failed");
+        assert_eq!(st.engine_steps, 0);
+        assert_eq!(st.generated_tokens, 0);
+        // each request: first attempt + 1 retry
+        assert_eq!(st.retries, 2);
+    }
+
+    #[test]
+    fn lane_death_without_fallback_drains_slots_and_queue() {
+        // permanent death fails the in-flight slot and the lane's
+        // queue at the failure instant, and later arrivals for the
+        // dead lane fail at arrival — no slot leaks, the loop exits
+        let requests = reqs(&[2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 5.0], 1.0);
+        let mut be =
+            ScriptedBackend::new(MockBackend::new(1, 16, false),
+                                 &[], Some(0));
+        let report = run_recovery(&mut be, &requests, &s,
+                                  &RecoveryConfig::default())
+            .unwrap();
+        let r = &report.results;
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|x| {
+            x.outcome == RequestOutcome::Failed && x.tokens.is_empty()
+        }));
+        // seated + queued fail when the lane dies (t=1); the late
+        // arrival fails at its arrival (t=5, latency 0)
+        assert_eq!(r[0].latency_ms, 1.0);
+        assert_eq!(r[1].latency_ms, 1.0);
+        assert_eq!((r[2].arrival_ms, r[2].latency_ms), (5.0, 0.0));
+        assert_eq!(report.stats.failed, 3);
+        assert_eq!(report.stats.engine_steps, 0);
+    }
+
+    #[test]
+    fn lane_death_with_fallback_rerouted_and_tagged_degraded() {
+        // lane a dies on its first attempt; its requests restart from
+        // scratch on lane b and complete tagged degraded, while lane
+        // b's own traffic is unaffected
+        let requests = reqs(&[2, 2, 2]);
+        let lane_of = [0usize, 0, 1];
+        let names = [String::from("a"), String::from("b")];
+        let s = sched(&[0.0; 3], 1.0);
+        let mut a =
+            ScriptedBackend::new(MockBackend::new(1, 16, false),
+                                 &[], Some(0));
+        let mut b = MockBackend::new(1, 16, false);
+        let mut lanes: [&mut dyn LogitsBackend; 2] = [&mut a, &mut b];
+        let recovery = RecoveryConfig {
+            fallback: vec![Some(1), None],
+            ..RecoveryConfig::default()
+        };
+        let report = run_lanes_with(
+            &mut lanes, &names, &lane_of, &requests,
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+            &recovery)
+            .unwrap();
+        let r = &report.results;
+        assert!(r.iter().all(|x| x.outcome.is_completed()));
+        assert!(r.iter().all(|x| x.tokens == vec![5, 5]));
+        assert!(r[0].degraded && r[1].degraded,
+                "failed-over requests are tagged degraded");
+        assert!(!r[2].degraded, "lane b's own request is not");
+        // lane a dies at t=1; lane b serves its own request first
+        // (done t=3), then the failovers queued by original arrival
+        assert_eq!(r[2].latency_ms, 3.0);
+        assert_eq!(r[0].latency_ms, 5.0);
+        assert_eq!(r[1].latency_ms, 7.0);
+        let st = &report.stats;
+        assert_eq!((st.completed, st.failed, st.degraded), (3, 0, 2));
+        // offered counts follow the live route: every request ends up
+        // served by lane b, and each block conserves its own outcomes
+        assert_eq!(report.per_model[0].stats.requests, 0);
+        assert_eq!(report.per_model[1].stats.requests, 3);
+        assert_eq!(report.per_model[1].stats.degraded, 2);
+        assert_eq!(report.per_model[0].stats.engine_steps, 0);
+        assert_eq!(report.per_model[1].stats.engine_steps, 6);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_lane_recovers() {
+        // two consecutive failed attempts open the breaker (threshold
+        // 2); the lane sits out the 10ms cooldown, then the retry
+        // succeeds and the request completes with its tokens intact
+        let requests = reqs(&[2]);
+        let s = sched(&[0.0], 1.0);
+        let mut be =
+            ScriptedBackend::new(MockBackend::new(1, 16, false),
+                                 &[0, 1], None);
+        let recovery = RecoveryConfig {
+            retry: RetryPolicy {
+                max_retries: 5,
+                base_ms: 1.0,
+                multiplier: 2.0,
+                cap_ms: 32.0,
+            },
+            breaker_threshold: 2,
+            breaker_cooldown_ms: 10.0,
+            fallback: Vec::new(),
+        };
+        let report =
+            run_recovery(&mut be, &requests, &s, &recovery).unwrap();
+        let r = &report.results[0];
+        assert!(r.outcome.is_completed());
+        assert_eq!(r.tokens, vec![5, 5]);
+        // fails at t=1 (backoff to 2) and t=3 (breaker opens until
+        // 13); success at t=14 and t=15
+        assert_eq!(r.latency_ms, 15.0);
+        assert_eq!(report.stats.retries, 2);
+        assert_eq!(report.stats.engine_steps, 2);
+    }
+
+    #[test]
+    fn injected_spikes_move_the_clock_but_not_the_tokens() {
+        // FaultyBackend spikes stretch latency deterministically and
+        // leave the decoded stream untouched
+        let requests = reqs(&[2]);
+        let s = sched(&[0.0], 1.0);
+        let mut plan = FaultPlan::new(3);
+        plan.spike_p = 1.0;
+        plan.spike_ms = 2.0;
+        let mut be =
+            FaultyBackend::new(MockBackend::new(1, 16, false), &plan,
+                               0)
+                .unwrap();
+        let report = run_recovery(&mut be, &requests, &s,
+                                  &RecoveryConfig::default())
+            .unwrap();
+        let r = &report.results[0];
+        assert!(r.outcome.is_completed());
+        assert_eq!(r.tokens, vec![5, 5]);
+        // each step costs 1ms + a 2ms spike
+        assert_eq!(r.latency_ms, 6.0);
+        assert_eq!(report.stats.sim_ms, 6.0);
+        assert_eq!(report.stats.retries, 0);
+        assert_eq!(report.stats.failed, 0);
+    }
+
+    #[test]
+    fn noop_fault_config_is_bit_identical_to_plain_run() {
+        // chaos plumbing engaged but injecting nothing: stats and
+        // results serialize byte-identically to the plain loop
+        let requests = reqs(&[3, 1, 4, 2]);
+        let s = sched(&[0.0, 0.5, 2.0, 2.0], 1.0);
+        let mut plain = MockBackend::new(2, 16, false);
+        let a = run_loop(&mut plain, &requests,
+                         &DecodeParams::default(), Some(&s)).unwrap();
+        let mut faulty =
+            FaultyBackend::new(MockBackend::new(2, 16, false),
+                               &FaultPlan::new(7), 0)
+                .unwrap();
+        let b = run_recovery(&mut faulty, &requests, &s,
+                             &RecoveryConfig::default())
+            .unwrap();
+        assert_eq!(a.stats_json().to_string(),
+                   b.stats_json().to_string());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.to_json().to_string(),
+                       y.to_json().to_string());
+        }
     }
 }

@@ -1,0 +1,536 @@
+//! Deterministic fault injection and the recovery policy knobs.
+//!
+//! Chaos testing a serving loop is only useful if a failing run can be
+//! replayed bit-for-bit. [`FaultPlan`] therefore drives every injected
+//! fault from its own salted seed stream ([`FAULT_SALT`]), exactly the
+//! way `loadgen` salts its priority/model-mix draws: a
+//! [`FaultyBackend`] wrapping lane `l` draws from
+//! `Rng::new(seed ^ FAULT_SALT).fork(l)`, two draws per step attempt
+//! (fail? spike?), so the fault sequence depends only on
+//! `(seed, lane, attempt index)` — never on timing, policies or the
+//! other lanes. Enabling faults on one lane cannot perturb another
+//! lane's stream, and a fault-free plan leaves the serve loop
+//! bit-identical to a run without the wrapper.
+//!
+//! Three fault classes, mirroring what a real accelerator lane does:
+//!  * **transient step errors** (`step_fail_p`) — the step returns
+//!    `Err` but the lane stays healthy; the loop's [`RetryPolicy`]
+//!    backs off and re-prefills the affected slots from
+//!    tokens-so-far, so survivors stay bitwise identical to the
+//!    fault-free decode;
+//!  * **permanent lane death** (`die_at_step`) — every step attempt
+//!    from that index on fails and [`LogitsBackend::healthy`] turns
+//!    false; the loop drains the lane (failover or
+//!    `RequestOutcome::Failed`), never steps it again;
+//!  * **latency spikes** (`spike_p` / `spike_ms`) — the step succeeds
+//!    but reports extra virtual milliseconds through
+//!    [`LogitsBackend::take_spike_ms`]; tokens are unaffected, only
+//!    the clock (and thus latency telemetry) moves.
+//!
+//! [`RecoveryConfig`] bundles the loop-side half: the retry/backoff
+//! policy, the per-lane circuit breaker (N consecutive failed
+//! attempts open the lane for a cooldown) and the lane-indexed
+//! failover route resolved by `ModelRegistry` from `--fallback`.
+
+use crate::util::rng::Rng;
+
+use super::core::LogitsBackend;
+
+/// Seed salt for the fault-injection stream: faults come from their
+/// own stream (like `loadgen`'s PRIORITY_SALT / MODEL_SALT) so
+/// enabling them never perturbs prompts, budgets, priorities, model
+/// tags or arrivals drawn from the same base seed.
+pub const FAULT_SALT: u64 = 0x6661_756c; // "faul"
+
+/// A deterministic, seeded fault schedule for one lane (or every
+/// lane — each lane forks its own stream, so one plan shared across
+/// lanes still yields independent per-lane fault sequences).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Base seed; the injection stream is
+    /// `Rng::new(seed ^ FAULT_SALT).fork(lane)`.
+    pub seed: u64,
+    /// Probability that a step attempt fails transiently.
+    pub step_fail_p: f64,
+    /// Step-attempt index at which the lane dies permanently
+    /// (`healthy()` turns false; every later attempt errors).
+    pub die_at_step: Option<u64>,
+    /// Probability that a successful step also carries a latency
+    /// spike of `spike_ms` virtual milliseconds.
+    pub spike_p: f64,
+    pub spike_ms: f64,
+}
+
+impl FaultPlan {
+    /// The no-fault plan for `seed` — fields are public, switch the
+    /// knobs on individually.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            step_fail_p: 0.0,
+            die_at_step: None,
+            spike_p: 0.0,
+            spike_ms: 0.0,
+        }
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_noop(&self) -> bool {
+        self.step_fail_p == 0.0
+            && self.die_at_step.is_none()
+            && (self.spike_p == 0.0 || self.spike_ms == 0.0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, p) in [("fault rate", self.step_fail_p),
+                          ("spike rate", self.spike_p)] {
+            anyhow::ensure!((0.0..=1.0).contains(&p) && p.is_finite(),
+                            "{name} must be a probability in [0, 1] \
+                             (got {p})");
+        }
+        anyhow::ensure!(self.spike_ms.is_finite() && self.spike_ms >= 0.0,
+                        "spike duration must be finite and \
+                         non-negative (got {} ms)", self.spike_ms);
+        Ok(())
+    }
+}
+
+/// A fault plan bound to a registry model (`None` = every lane) —
+/// the `--fault-*` CLI flags resolve to one of these per target.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub model: Option<String>,
+    pub plan: FaultPlan,
+}
+
+/// Resolve fault specs against the lane name table: one optional plan
+/// per lane, `model: None` applying to every lane. A spec naming an
+/// unknown model, or two specs landing on one lane, is an error.
+pub(crate) fn plans_for_lanes(
+    faults: &[FaultSpec],
+    names: &[String],
+) -> anyhow::Result<Vec<Option<FaultPlan>>> {
+    let mut plans: Vec<Option<FaultPlan>> = vec![None; names.len()];
+    for spec in faults {
+        spec.plan.validate()?;
+        let lanes: Vec<usize> = match &spec.model {
+            None => (0..names.len()).collect(),
+            Some(m) => vec![names
+                .iter()
+                .position(|n| n == m)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "fault plan targets model {m}, which is not \
+                     registered (have: {})", names.join(", ")))?],
+        };
+        for l in lanes {
+            anyhow::ensure!(plans[l].is_none(),
+                            "two fault plans target model {}",
+                            names[l]);
+            plans[l] = Some(spec.plan.clone());
+        }
+    }
+    Ok(plans)
+}
+
+/// Capped exponential backoff for transient step failures, on the
+/// serve clock (virtual ms under a schedule, wall ms otherwise).
+/// `max_retries == u32::MAX` means retry forever — with any transient
+/// failure probability below 1 the lane eventually recovers, which is
+/// what the chaos-invariant property suite runs under.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Failed attempts to retry before the affected slots fail
+    /// (0 = fail the slots on the first error).
+    pub max_retries: u32,
+    /// Backoff before retry `k` (1-based):
+    /// `min(base_ms * multiplier^(k-1), cap_ms)`.
+    pub base_ms: f64,
+    pub multiplier: f64,
+    pub cap_ms: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base_ms: 1.0,
+            multiplier: 2.0,
+            cap_ms: 32.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: the first step error fails the affected slots.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_retries: 0, ..RetryPolicy::default() }
+    }
+
+    /// Retry forever (transient faults only delay, never fail, a
+    /// request — the chaos-invariant configuration).
+    pub fn unlimited() -> RetryPolicy {
+        RetryPolicy { max_retries: u32::MAX, ..RetryPolicy::default() }
+    }
+
+    /// Backoff before 1-based retry attempt `k`, capped.
+    pub fn backoff_ms(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(62);
+        (self.base_ms * self.multiplier.powi(exp as i32))
+            .min(self.cap_ms)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.base_ms.is_finite() && self.base_ms >= 0.0
+                && self.cap_ms.is_finite() && self.cap_ms >= 0.0,
+            "retry backoff times must be finite and non-negative"
+        );
+        anyhow::ensure!(self.multiplier.is_finite()
+                            && self.multiplier >= 1.0,
+                        "retry backoff multiplier must be >= 1 \
+                         (got {})", self.multiplier);
+        Ok(())
+    }
+}
+
+/// The serve loop's recovery knobs: retry/backoff for transient step
+/// failures, the per-lane circuit breaker, and the failover routing
+/// table. The default is containment-with-retries and no failover —
+/// a fault-free run under the default config is bit-identical to the
+/// pre-recovery loop (no draws, no extra clock movement).
+#[derive(Debug, Clone)]
+pub struct RecoveryConfig {
+    pub retry: RetryPolicy,
+    /// Consecutive failed step attempts that open a lane's circuit
+    /// breaker (0 disables the breaker).
+    pub breaker_threshold: u32,
+    /// How long an opened breaker keeps the lane out of service, ms
+    /// on the serve clock.
+    pub breaker_cooldown_ms: f64,
+    /// Lane-indexed failover route: requests bound for lane `l` with
+    /// `fallback[l] = Some(f)` reroute to lane `f` when `l` is dead
+    /// or its breaker is open, and complete tagged `degraded`. Empty
+    /// = no failover anywhere (requests on a dead lane fail; a
+    /// breaker-open lane's requests wait out the cooldown).
+    pub fallback: Vec<Option<usize>>,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> RecoveryConfig {
+        RecoveryConfig {
+            retry: RetryPolicy::default(),
+            breaker_threshold: 0,
+            breaker_cooldown_ms: 50.0,
+            fallback: Vec::new(),
+        }
+    }
+}
+
+impl RecoveryConfig {
+    pub(crate) fn validate(&self, n_lanes: usize)
+                           -> anyhow::Result<()> {
+        self.retry.validate()?;
+        anyhow::ensure!(
+            self.breaker_cooldown_ms.is_finite()
+                && self.breaker_cooldown_ms >= 0.0,
+            "breaker cooldown must be finite and non-negative"
+        );
+        if !self.fallback.is_empty() {
+            anyhow::ensure!(self.fallback.len() == n_lanes,
+                            "{} fallback entries for {} lanes",
+                            self.fallback.len(), n_lanes);
+            for (l, f) in self.fallback.iter().enumerate() {
+                if let Some(f) = f {
+                    anyhow::ensure!(*f < n_lanes,
+                                    "lane {l} falls back to lane {f} \
+                                     of {n_lanes}");
+                    anyhow::ensure!(*f != l,
+                                    "lane {l} falls back to itself");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything the CLI / loadgen layers need to thread chaos through
+/// a serve call: fault plans (by model name), the recovery knobs,
+/// and the failover route (from-model, to-model) resolved to lane
+/// indices by the registry.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosConfig {
+    pub faults: Vec<FaultSpec>,
+    pub recovery: RecoveryConfig,
+    pub fallback: Option<(String, String)>,
+}
+
+impl ChaosConfig {
+    /// Does this config change anything over the fault-free default?
+    pub fn is_noop(&self) -> bool {
+        self.faults.iter().all(|s| s.plan.is_noop())
+            && self.fallback.is_none()
+    }
+}
+
+/// [`LogitsBackend`] wrapper injecting a [`FaultPlan`]'s faults in
+/// front of the wrapped backend. Transient failures and deaths are
+/// decided *before* the inner backend runs, so the inner state is
+/// never half-mutated by an injected fault — which is exactly the
+/// contract the recovery path's re-prefill restores for real faults.
+///
+/// Draw discipline: every step attempt consumes exactly two draws
+/// (fail?, spike?) from the lane's forked stream, regardless of
+/// outcome, so the fault sequence is a pure function of
+/// `(seed, lane, attempt index)`.
+pub struct FaultyBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    rng: Rng,
+    /// Step attempts observed (indexes `die_at_step`).
+    attempts: u64,
+    dead: bool,
+    spike_ms_pending: f64,
+}
+
+impl<B: LogitsBackend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: &FaultPlan, lane: usize)
+               -> anyhow::Result<FaultyBackend<B>> {
+        plan.validate()?;
+        let mut base = Rng::new(plan.seed ^ FAULT_SALT);
+        let rng = base.fork(lane as u64);
+        Ok(FaultyBackend {
+            inner,
+            plan: plan.clone(),
+            rng,
+            attempts: 0,
+            dead: false,
+            spike_ms_pending: 0.0,
+        })
+    }
+
+    /// Step attempts seen so far (tests pin fault sequences on this).
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+}
+
+impl<B: LogitsBackend> LogitsBackend for FaultyBackend<B> {
+    fn dims(&self) -> (usize, usize, usize) {
+        self.inner.dims()
+    }
+
+    fn needs_prefill(&self) -> bool {
+        self.inner.needs_prefill()
+    }
+
+    fn prefill(&mut self, tokens: &[i32], pos: &[i32],
+               refill: &[f32]) -> anyhow::Result<()> {
+        // faults are injected per step attempt (which covers the
+        // prefill+step round); a dead lane still refuses prefills
+        anyhow::ensure!(!self.dead,
+                        "injected fault: lane is permanently dead");
+        self.inner.prefill(tokens, pos, refill)
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32])
+            -> anyhow::Result<Vec<f32>> {
+        let attempt = self.attempts;
+        self.attempts += 1;
+        // fixed draw count per attempt keeps the stream aligned
+        let fail = self.rng.bernoulli(self.plan.step_fail_p);
+        let spike = self.rng.bernoulli(self.plan.spike_p);
+        if self.dead
+            || self.plan.die_at_step.is_some_and(|k| attempt >= k)
+        {
+            self.dead = true;
+            anyhow::bail!(
+                "injected fault: lane died permanently at step \
+                 attempt {attempt}"
+            );
+        }
+        if fail {
+            anyhow::bail!(
+                "injected fault: transient step failure at attempt \
+                 {attempt}"
+            );
+        }
+        if spike {
+            self.spike_ms_pending += self.plan.spike_ms;
+        }
+        self.inner.step(tokens, pos)
+    }
+
+    fn healthy(&self) -> bool {
+        !self.dead
+    }
+
+    fn take_spike_ms(&mut self) -> f64 {
+        std::mem::take(&mut self.spike_ms_pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::core::mock::MockBackend;
+    use super::*;
+
+    fn attempt_outcomes(plan: &FaultPlan, lane: usize, n: usize)
+                        -> Vec<bool> {
+        let mut be =
+            FaultyBackend::new(MockBackend::new(1, 8, false), plan,
+                               lane)
+                .unwrap();
+        let (tokens, pos) = (vec![0i32; 8], vec![0i32; 1]);
+        (0..n).map(|_| be.step(&tokens, &pos).is_ok()).collect()
+    }
+
+    #[test]
+    fn fault_stream_is_seeded_and_lane_forked() {
+        let mut plan = FaultPlan::new(7);
+        plan.step_fail_p = 0.5;
+        let a = attempt_outcomes(&plan, 0, 64);
+        let b = attempt_outcomes(&plan, 0, 64);
+        assert_eq!(a, b, "same (seed, lane) must replay identically");
+        assert!(a.iter().any(|ok| *ok) && a.iter().any(|ok| !ok),
+                "p=0.5 over 64 attempts should mix outcomes");
+        let c = attempt_outcomes(&plan, 1, 64);
+        assert_ne!(a, c, "lanes fork independent streams");
+        let mut other = plan.clone();
+        other.seed = 8;
+        assert_ne!(a, attempt_outcomes(&other, 0, 64),
+                   "seed changes the stream");
+    }
+
+    #[test]
+    fn noop_plan_passes_steps_through() {
+        let plan = FaultPlan::new(3);
+        assert!(plan.is_noop());
+        let outcomes = attempt_outcomes(&plan, 0, 32);
+        assert!(outcomes.iter().all(|ok| *ok));
+    }
+
+    #[test]
+    fn die_at_step_is_permanent_and_reported_unhealthy() {
+        let mut plan = FaultPlan::new(11);
+        plan.die_at_step = Some(3);
+        let mut be =
+            FaultyBackend::new(MockBackend::new(1, 8, false), &plan, 0)
+                .unwrap();
+        let (tokens, pos) = (vec![0i32; 8], vec![0i32; 1]);
+        for _ in 0..3 {
+            assert!(be.step(&tokens, &pos).is_ok());
+            assert!(be.healthy());
+        }
+        for _ in 0..4 {
+            assert!(be.step(&tokens, &pos).is_err());
+            assert!(!be.healthy());
+        }
+        assert!(be.prefill(&tokens, &pos, &[0.0]).is_err(),
+                "a dead lane refuses prefills too");
+    }
+
+    #[test]
+    fn spikes_accumulate_and_drain_on_take() {
+        let mut plan = FaultPlan::new(5);
+        plan.spike_p = 1.0;
+        plan.spike_ms = 4.0;
+        let mut be =
+            FaultyBackend::new(MockBackend::new(1, 8, false), &plan, 0)
+                .unwrap();
+        let (tokens, pos) = (vec![0i32; 8], vec![0i32; 1]);
+        be.step(&tokens, &pos).unwrap();
+        be.step(&tokens, &pos).unwrap();
+        assert_eq!(be.take_spike_ms(), 8.0);
+        assert_eq!(be.take_spike_ms(), 0.0, "take drains the spike");
+        be.step(&tokens, &pos).unwrap();
+        assert_eq!(be.take_spike_ms(), 4.0);
+    }
+
+    #[test]
+    fn plan_validation_rejects_bad_knobs() {
+        for bad in [
+            FaultPlan { step_fail_p: -0.1, ..FaultPlan::new(0) },
+            FaultPlan { step_fail_p: 1.5, ..FaultPlan::new(0) },
+            FaultPlan { spike_p: f64::NAN, ..FaultPlan::new(0) },
+            FaultPlan { spike_ms: -1.0, ..FaultPlan::new(0) },
+            FaultPlan { spike_ms: f64::INFINITY,
+                        ..FaultPlan::new(0) },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+            assert!(
+                FaultyBackend::new(MockBackend::new(1, 8, false),
+                                   &bad, 0)
+                    .is_err(),
+                "wrapper construction must validate the plan"
+            );
+        }
+        assert!(FaultPlan::new(1).validate().is_ok());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let r = RetryPolicy {
+            max_retries: 5,
+            base_ms: 1.0,
+            multiplier: 2.0,
+            cap_ms: 6.0,
+        };
+        assert_eq!(r.backoff_ms(1), 1.0);
+        assert_eq!(r.backoff_ms(2), 2.0);
+        assert_eq!(r.backoff_ms(3), 4.0);
+        assert_eq!(r.backoff_ms(4), 6.0, "capped");
+        assert_eq!(r.backoff_ms(200), 6.0, "no overflow at depth");
+        assert!(r.validate().is_ok());
+        let bad = RetryPolicy { multiplier: 0.5, ..r.clone() };
+        assert!(bad.validate().is_err());
+        let bad = RetryPolicy { base_ms: f64::NAN, ..r };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn recovery_config_validates_fallback_table() {
+        let mut rc = RecoveryConfig::default();
+        assert!(rc.validate(2).is_ok());
+        rc.fallback = vec![Some(1), None];
+        assert!(rc.validate(2).is_ok());
+        assert!(rc.validate(3).is_err(), "length must match lanes");
+        rc.fallback = vec![Some(0), None];
+        assert!(rc.validate(2).is_err(), "self-fallback rejected");
+        rc.fallback = vec![Some(5), None];
+        assert!(rc.validate(2).is_err(), "out-of-range rejected");
+    }
+
+    #[test]
+    fn plans_for_lanes_resolves_models() {
+        let names: Vec<String> =
+            vec!["dense".into(), "s75".into()];
+        let mut plan = FaultPlan::new(1);
+        plan.step_fail_p = 0.1;
+        let plans = plans_for_lanes(
+            &[FaultSpec { model: Some("s75".into()),
+                          plan: plan.clone() }],
+            &names).unwrap();
+        assert!(plans[0].is_none());
+        assert!(plans[1].is_some());
+        // None targets every lane
+        let all = plans_for_lanes(
+            &[FaultSpec { model: None, plan: plan.clone() }],
+            &names).unwrap();
+        assert!(all.iter().all(|p| p.is_some()));
+        // unknown model is an error, mentioning the registry
+        let err = plans_for_lanes(
+            &[FaultSpec { model: Some("nope".into()),
+                          plan: plan.clone() }],
+            &names).unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("dense"), "{err}");
+        // double assignment is an error
+        assert!(plans_for_lanes(
+            &[FaultSpec { model: None, plan: plan.clone() },
+              FaultSpec { model: Some("dense".into()), plan }],
+            &names).is_err());
+    }
+}

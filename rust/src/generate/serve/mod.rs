@@ -23,6 +23,14 @@
 //!    the default.
 //!  * [`clock`] — the loop's notion of time ([`clock::Schedule`],
 //!    the virtual/wall `Clock`, the arrival queue).
+//!  * [`fault`] — deterministic fault injection and recovery:
+//!    [`fault::FaultPlan`]-driven [`fault::FaultyBackend`] wrappers
+//!    (seeded transient step errors, permanent lane death, latency
+//!    spikes), the [`fault::RetryPolicy`]/[`fault::RecoveryConfig`]
+//!    retry-backoff + circuit-breaker knobs, and the cross-model
+//!    failover route. A failed step is contained to its lane; with
+//!    retries enabled and no lane death, survivors stay bitwise
+//!    identical to the fault-free decode.
 //!  * [`registry`] — the multi-model serving registry:
 //!    [`registry::ModelRegistry`] owns N named engines (the SPDF
 //!    checkpoint sweep: dense / s50 / s75) and routes one request
@@ -43,6 +51,7 @@
 pub mod admission;
 pub mod clock;
 pub mod core;
+pub mod fault;
 pub mod policy;
 pub mod registry;
 pub mod telemetry;
@@ -51,6 +60,9 @@ pub use self::admission::AdmissionPolicy;
 pub use self::clock::Schedule;
 pub use self::core::{serve, serve_kv, serve_timed, serve_with,
                      ServeConfig};
+pub use self::fault::{ChaosConfig, FaultPlan, FaultSpec,
+                      FaultyBackend, RecoveryConfig, RetryPolicy,
+                      FAULT_SALT};
 pub use self::policy::Scheduler;
 pub use self::registry::ModelRegistry;
 pub use self::telemetry::{ModelStats, RequestOutcome, RequestResult,

@@ -27,6 +27,7 @@ use crate::generate::DecodeParams;
 
 use super::clock::Schedule;
 use super::core::{self, LogitsBackend, ServeConfig};
+use super::fault::{plans_for_lanes, FaultyBackend, RecoveryConfig};
 use super::telemetry::ServeReport;
 use super::DecodeRequest;
 
@@ -145,36 +146,68 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
                         &ServeConfig::timed(use_kv, schedule))
     }
 
-    /// The fully explicit form: engine path + schedule + policies,
-    /// routed per-request by [`DecodeRequest::model`].
+    /// The fully explicit form: engine path + schedule + policies +
+    /// fault/recovery config, routed per-request by
+    /// [`DecodeRequest::model`]. Fault plans in `cfg.faults` wrap the
+    /// named lanes' backends in deterministic injectors, and
+    /// `cfg.fallback` resolves `(from, to)` model names into the
+    /// recovery layer's failover route.
     pub fn serve_with(&self, requests: &[DecodeRequest],
                       dp: &DecodeParams, cfg: &ServeConfig)
                       -> anyhow::Result<ServeReport> {
         let lane_of = self.lane_of(requests)?;
         let names: Vec<String> =
             self.entries.iter().map(|(n, _)| n.clone()).collect();
+        let plans = plans_for_lanes(&cfg.faults, &names)?;
+        let mut recovery: RecoveryConfig = cfg.recovery.clone();
+        if let Some((from, to)) = &cfg.fallback {
+            anyhow::ensure!(
+                recovery.fallback.is_empty(),
+                "give the failover route either as model names \
+                 (fallback) or as resolved lanes (recovery.fallback), \
+                 not both"
+            );
+            let from = self.resolve(Some(from))?;
+            let to = self.resolve(Some(to))?;
+            anyhow::ensure!(
+                from != to,
+                "failover route must name two different models \
+                 (got {} twice)", names[from]
+            );
+            let mut table = vec![None; names.len()];
+            table[from] = Some(to);
+            recovery.fallback = table;
+        }
         let mut backends: Vec<Box<dyn LogitsBackend + 'e>> = self
             .entries
             .iter()
-            .map(|(name, engine)| {
+            .enumerate()
+            .map(|(l, (name, engine))| {
                 // *engine copies the full-'e reference out of the
                 // entry (a deref-coerced reborrow would be too short
                 // for the Box<dyn + 'e> annotation)
-                core::backend_for(*engine, cfg.use_kv).map_err(|e| {
-                    e.context(format!("building {} backend for \
-                                       model {name}",
-                                      if cfg.use_kv {
-                                          "kv"
-                                      } else {
-                                          "literal"
-                                      }))
-                })
+                let backend = core::backend_for(*engine, cfg.use_kv)
+                    .map_err(|e| {
+                        e.context(format!("building {} backend for \
+                                           model {name}",
+                                          if cfg.use_kv {
+                                              "kv"
+                                          } else {
+                                              "literal"
+                                          }))
+                    })?;
+                match &plans[l] {
+                    Some(plan) => Ok(Box::new(FaultyBackend::new(
+                        backend, plan, l)?)
+                        as Box<dyn LogitsBackend + 'e>),
+                    None => Ok(backend),
+                }
             })
             .collect::<anyhow::Result<_>>()?;
         let mut refs: Vec<&mut dyn LogitsBackend> =
             backends.iter_mut().map(|b| b.as_mut()).collect();
         core::run_lanes_with(&mut refs, &names, &lane_of, requests,
                              dp, cfg.schedule, cfg.scheduler,
-                             cfg.admission)
+                             cfg.admission, &recovery)
     }
 }

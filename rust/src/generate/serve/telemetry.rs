@@ -14,6 +14,10 @@ pub enum RequestOutcome {
     Shed,
     /// Admitted but abandoned after waiting past the queue deadline.
     Expired,
+    /// Lost to a lane fault after admission: the lane died (with no
+    /// live fallback) or transient step failures exhausted the retry
+    /// budget. Failed results carry no tokens.
+    Failed,
 }
 
 impl RequestOutcome {
@@ -22,6 +26,7 @@ impl RequestOutcome {
             RequestOutcome::Completed => "completed",
             RequestOutcome::Shed => "shed",
             RequestOutcome::Expired => "expired",
+            RequestOutcome::Failed => "failed",
         }
     }
 
@@ -56,8 +61,13 @@ pub struct RequestResult {
     pub ttft_ms: f64,
     /// Arrival → completion — what a caller would observe.
     pub latency_ms: f64,
-    /// Completed / shed / expired.
+    /// Completed / shed / expired / failed.
     pub outcome: RequestOutcome,
+    /// The request was rerouted to a fallback model by the recovery
+    /// layer (its lane died or its breaker opened) — the caller got an
+    /// answer, but from the degraded-mode substitute, not the model it
+    /// asked for.
+    pub degraded: bool,
 }
 
 impl RequestResult {
@@ -72,7 +82,8 @@ impl RequestResult {
             .push_num("queue_ms", self.queue_ms)
             .push_num("ttft_ms", self.ttft_ms)
             .push_num("latency_ms", self.latency_ms)
-            .push_str("outcome", self.outcome.as_str());
+            .push_str("outcome", self.outcome.as_str())
+            .push_bool("degraded", self.degraded);
         j
     }
 }
@@ -91,8 +102,21 @@ pub struct ServeStats {
     pub shed: usize,
     /// Requests that waited past the queue deadline.
     pub expired: usize,
+    /// Requests lost to lane faults after admission (dead lane with no
+    /// fallback, or retry budget exhausted).
+    pub failed: usize,
     /// `(shed + expired) / requests` — 0.0 under unbounded admission.
+    /// Fault losses are deliberately excluded: shed/expired measure
+    /// the *admission* policy's pressure response, `failed` measures
+    /// the *recovery* layer's losses, and the two knobs are tuned
+    /// independently.
     pub shed_rate: f64,
+    /// Step attempts re-scheduled by the retry policy after a
+    /// transient lane failure (each backoff period counts once).
+    pub retries: u64,
+    /// Completed/expired requests that ran degraded — rerouted to a
+    /// fallback model by the recovery layer.
+    pub degraded: usize,
     pub decode_batch: usize,
     /// Model steps executed.
     pub engine_steps: u64,
@@ -145,6 +169,7 @@ impl ServeStats {
         slot_steps: u64,
         wall_secs: f64,
         sim_ms: f64,
+        retries: u64,
     ) -> ServeStats {
         let completed =
             results.iter().filter(|r| r.outcome.is_completed()).count();
@@ -152,11 +177,17 @@ impl ServeStats {
             .filter(|r| r.outcome == RequestOutcome::Shed).count();
         let expired = results.iter()
             .filter(|r| r.outcome == RequestOutcome::Expired).count();
+        let failed = results.iter()
+            .filter(|r| r.outcome == RequestOutcome::Failed).count();
+        let degraded =
+            results.iter().filter(|r| r.degraded).count();
         let generated_tokens: u64 =
             results.iter().map(|r| r.tokens.len() as u64).sum();
-        // failures never reach a slot, so completed-request tokens ==
-        // generated tokens (debug-checked); goodput derives from the
-        // same sum rather than a vacuous re-filter
+        // failures never keep decoded tokens (shed/expired never reach
+        // a slot; fault-failed slots drop their partial output), so
+        // completed-request tokens == generated tokens (debug-checked);
+        // goodput derives from the same sum rather than a vacuous
+        // re-filter
         debug_assert_eq!(
             generated_tokens,
             results.iter()
@@ -182,11 +213,14 @@ impl ServeStats {
             completed,
             shed,
             expired,
+            failed,
             shed_rate: if requests == 0 {
                 0.0
             } else {
                 (shed + expired) as f64 / requests as f64
             },
+            retries,
+            degraded,
             decode_batch,
             engine_steps,
             prefill_steps,
@@ -221,7 +255,10 @@ impl ServeStats {
             .push_num("completed", self.completed)
             .push_num("shed", self.shed)
             .push_num("expired", self.expired)
+            .push_num("failed", self.failed)
             .push_num("shed_rate", self.shed_rate)
+            .push_num("retries", self.retries)
+            .push_num("degraded", self.degraded)
             .push_num("decode_batch", self.decode_batch)
             .push_num("engine_steps", self.engine_steps)
             .push_num("prefill_steps", self.prefill_steps)
@@ -306,6 +343,7 @@ mod tests {
             ttft_ms: latency,
             latency_ms: latency,
             outcome,
+            degraded: false,
         }
     }
 
@@ -318,8 +356,9 @@ mod tests {
             result(3, 0, 5.0, RequestOutcome::Expired),
         ];
         let st = ServeStats::from_results(&refs(&results), 4, 2, 8, 0,
-                                          14, 0.5, 40.0);
+                                          14, 0.5, 40.0, 0);
         assert_eq!((st.completed, st.shed, st.expired), (2, 1, 1));
+        assert_eq!((st.failed, st.retries, st.degraded), (0, 0, 0));
         assert_eq!(st.shed_rate, 0.5);
         assert_eq!(st.generated_tokens, 8);
         assert_eq!(st.tokens_per_sec, 16.0);
@@ -339,7 +378,7 @@ mod tests {
             result(1, 2, 5.0, RequestOutcome::Completed),
         ];
         let st = ServeStats::from_results(&refs(&results), 2, 2, 5, 0,
-                                          5, 0.25, 5.0);
+                                          5, 0.25, 5.0, 0);
         assert_eq!(st.shed_rate, 0.0);
         assert_eq!(st.completed, 2);
         assert_eq!(st.tokens_per_sec, st.goodput_tokens_per_sec);
@@ -355,7 +394,7 @@ mod tests {
             result(3, 0, 0.0, RequestOutcome::Shed),
         ];
         let st = ServeStats::from_results(&refs(&results), 4, 2, 10,
-                                          2, 17, 0.5, 500.0);
+                                          2, 17, 0.5, 500.0, 0);
         let j = st.to_json();
         assert_eq!(j.get("tokens_per_sec").unwrap().as_f64(),
                    Some(30.0));
@@ -378,7 +417,7 @@ mod tests {
             result(1, 2, 6.0, RequestOutcome::Completed),
         ];
         let stats = ServeStats::from_results(&refs(&results), 2, 2, 5,
-                                             0, 5, 0.5, 6.0);
+                                             0, 5, 0.5, 6.0, 0);
         let solo = ServeReport {
             results: results.clone(),
             stats: stats.clone(),
@@ -412,7 +451,38 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
         assert_eq!(j.get("outcome").unwrap().as_str(), Some("expired"));
         assert_eq!(j.get("latency_ms").unwrap().as_f64(), Some(12.5));
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(false));
         assert_eq!(RequestOutcome::Completed.as_str(), "completed");
         assert_eq!(RequestOutcome::Shed.as_str(), "shed");
+        assert_eq!(RequestOutcome::Failed.as_str(), "failed");
+    }
+
+    #[test]
+    fn fault_counters_bucket_failed_and_degraded() {
+        let mut rerouted = result(1, 3, 9.0, RequestOutcome::Completed);
+        rerouted.degraded = true;
+        let results = vec![
+            result(0, 4, 10.0, RequestOutcome::Completed),
+            rerouted,
+            result(2, 0, 6.0, RequestOutcome::Failed),
+            result(3, 0, 0.0, RequestOutcome::Shed),
+        ];
+        let st = ServeStats::from_results(&refs(&results), 4, 2, 9, 0,
+                                          15, 0.5, 12.0, 5);
+        assert_eq!((st.completed, st.shed, st.expired, st.failed),
+                   (2, 1, 0, 1));
+        assert_eq!(st.completed + st.shed + st.expired + st.failed,
+                   st.requests, "conservation includes failed");
+        assert_eq!(st.retries, 5);
+        assert_eq!(st.degraded, 1);
+        // shed_rate keeps its admission-policy meaning; fault losses
+        // are reported separately
+        assert_eq!(st.shed_rate, 0.25);
+        // latency percentiles still cover completed only
+        assert_eq!(st.latency_ms.n, 2);
+        let j = st.to_json();
+        assert_eq!(j.get("failed").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("retries").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("degraded").unwrap().as_usize(), Some(1));
     }
 }

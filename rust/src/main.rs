@@ -23,7 +23,8 @@ use spdf::flops;
 use spdf::generate::loadgen::{self, Pattern, StepCosts};
 use spdf::generate::serve::{admission, policy, AdmissionPolicy,
                             Scheduler};
-use spdf::generate::{DecodeParams, ServeConfig};
+use spdf::generate::{ChaosConfig, DecodeParams, FaultPlan, FaultSpec,
+                     RetryPolicy, ServeConfig};
 use spdf::runtime::Engine;
 use spdf::util::json::Json;
 use spdf::sparsity::MaskScheme;
@@ -520,7 +521,9 @@ fn load_registry_models(
     let mut loaded = Vec::new();
     for spec in &specs {
         let engine = &engines[dirs.iter()
-            .position(|d| *d == spec.dir).unwrap()];
+            .position(|d| *d == spec.dir)
+            .expect("dirs was collected from these same specs, so \
+                     every spec.dir has an engine")];
         let inner = match &spec.inner {
             Some(m) => m.clone(),
             None => {
@@ -579,6 +582,105 @@ fn build_registry<'e, 'a>(
     Ok(registry)
 }
 
+/// Fault-injection / recovery flags shared by `serve` and `loadgen`.
+fn chaos_flags(cli: Cli) -> Cli {
+    cli.flag("fault-rate", "0",
+             "probability a lane's step attempt fails transiently \
+              (seeded, deterministic; 0 = no injection)")
+        .flag("fault-spike-rate", "0",
+              "probability a successful step carries a latency spike")
+        .flag("fault-spike-ms", "5",
+              "virtual ms added per injected latency spike")
+        .flag("fault-kill-step", "",
+              "kill the faulted lane permanently at this step-attempt \
+               index (empty = never)")
+        .flag("fault-model", "",
+              "registry model the fault plan targets (empty = every \
+               lane)")
+        .flag("fault-seed", "0",
+              "fault-plan seed (salted side stream; independent of \
+               the trace seed)")
+        .flag("retry-max", "3",
+              "failed-step retries per lane before the in-flight \
+               requests fail (0 = fail immediately)")
+        .flag("retry-base-ms", "1",
+              "first retry backoff in virtual ms (doubles per \
+               attempt)")
+        .flag("retry-cap-ms", "32", "backoff ceiling in virtual ms")
+        .flag("breaker-threshold", "0",
+              "consecutive failed attempts that open a lane's circuit \
+               breaker (0 = disabled)")
+        .flag("breaker-cooldown-ms", "50",
+              "how long an open breaker holds its lane out, virtual \
+               ms")
+        .flag("fallback", "",
+              "cross-model failover route FROM=TO: requests stranded \
+               on FROM's dead/open lane reroute to TO, tagged \
+               degraded (empty = no failover)")
+}
+
+/// Parse the [`chaos_flags`] into a [`ChaosConfig`], validating every
+/// knob up front.
+fn chaos_from_flags(a: &spdf::util::cli::Args)
+                    -> anyhow::Result<ChaosConfig> {
+    let mut chaos = ChaosConfig::default();
+    let mut plan = FaultPlan::new(a.get_u64("fault-seed")?);
+    plan.step_fail_p = a.get_f64("fault-rate")?;
+    plan.spike_p = a.get_f64("fault-spike-rate")?;
+    plan.spike_ms = a.get_f64("fault-spike-ms")?;
+    plan.die_at_step = match a.get("fault-kill-step") {
+        "" => None,
+        s => Some(s.parse::<u64>().map_err(|_| anyhow::anyhow!(
+            "bad --fault-kill-step {s} (want a non-negative step \
+             index, or empty for never)"))?),
+    };
+    plan.validate()?;
+    if !plan.is_noop() {
+        let model = match a.get("fault-model") {
+            "" => None,
+            m => Some(m.to_string()),
+        };
+        chaos.faults.push(FaultSpec { model, plan });
+    } else {
+        anyhow::ensure!(
+            a.get("fault-model").is_empty(),
+            "--fault-model without any fault knob set — add \
+             --fault-rate / --fault-spike-rate / --fault-kill-step"
+        );
+    }
+    chaos.recovery.retry = RetryPolicy {
+        max_retries: u32::try_from(a.get_usize("retry-max")?)
+            .map_err(|_| anyhow::anyhow!(
+                "--retry-max does not fit u32"))?,
+        base_ms: a.get_f64("retry-base-ms")?,
+        multiplier: 2.0,
+        cap_ms: a.get_f64("retry-cap-ms")?,
+    };
+    chaos.recovery.retry.validate()?;
+    chaos.recovery.breaker_threshold =
+        u32::try_from(a.get_usize("breaker-threshold")?).map_err(
+            |_| anyhow::anyhow!("--breaker-threshold does not fit \
+                                 u32"))?;
+    let cooldown = a.get_f64("breaker-cooldown-ms")?;
+    anyhow::ensure!(cooldown.is_finite() && cooldown >= 0.0,
+                    "--breaker-cooldown-ms must be a non-negative \
+                     finite number (got {cooldown})");
+    chaos.recovery.breaker_cooldown_ms = cooldown;
+    match a.get("fallback") {
+        "" => {}
+        s => {
+            let (from, to) = s.split_once('=').ok_or_else(
+                || anyhow::anyhow!("bad --fallback {s} (want \
+                                    FROM=TO model names)"))?;
+            anyhow::ensure!(!from.is_empty() && !to.is_empty(),
+                            "bad --fallback {s} (want FROM=TO model \
+                             names)");
+            chaos.fallback = Some((from.to_string(), to.to_string()));
+        }
+    }
+    Ok(chaos)
+}
+
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let cli = world_flags(
         Cli::new("spdf serve",
@@ -609,7 +711,9 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
               "expire requests queued longer than this many ms \
                (0 = never)")
         .flag("stats-json", "", "write serving stats JSON to this path");
+    let cli = chaos_flags(cli);
     let a = cli.parse(raw)?;
+    let chaos = chaos_from_flags(&a)?;
     let scheduler = policy::parse(a.get("policy"))?;
     let priority_classes = a.get_usize("priority-classes")?;
     anyhow::ensure!((1..=255).contains(&priority_classes),
@@ -685,12 +789,16 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         schedule: None,
         scheduler: scheduler.as_ref(),
         admission: admit.as_ref(),
+        recovery: chaos.recovery.clone(),
+        faults: chaos.faults.clone(),
+        fallback: chaos.fallback.clone(),
     })?;
     eprintln!("[spdf] served {} requests over {} model(s) in {:.1}s \
-               ({} path, {}/{})",
+               ({} path, {}/{}{})",
               n, n_models, total.secs(),
               if use_kv { "kv" } else { "literal" },
-              scheduler.name(), admit.name());
+              scheduler.name(), admit.name(),
+              if chaos.is_noop() { "" } else { ", faults injected" });
     println!("{}", report::serve_report_table(&report));
     match a.get("stats-json") {
         "" => {}
@@ -756,7 +864,9 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                  pinned --step-ms (honest-ms curves; the trace itself \
                  stays seed-deterministic)")
         .flag("out", "", "write the sweep JSON to this path");
+    let cli = chaos_flags(cli);
     let a = cli.parse(raw)?;
+    let chaos = chaos_from_flags(&a)?;
     let engine_flag = a.get("engine");
     anyhow::ensure!(
         matches!(engine_flag, "auto" | "both" | "kv" | "literal"),
@@ -804,7 +914,8 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
     let min_ctx = loaded.iter()
         .map(|m| m.runtime.manifest.config.ctx_len)
         .min()
-        .unwrap();
+        .expect("parse_model_specs rejects an empty --model, so at \
+                 least one model is loaded");
     for m in &loaded[1..] {
         anyhow::ensure!(
             m.runtime.manifest.config.vocab_size
@@ -834,7 +945,7 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
             anyhow::ensure!(n_models > 1,
                             "--model-mix needs a multi-model --model \
                              registry");
-            let mut mix = Vec::new();
+            let mut mix: Vec<(String, f64)> = Vec::new();
             for item in raw.split(',').filter(|s| !s.is_empty()) {
                 let (name, w) = item.trim().split_once('=')
                     .ok_or_else(|| anyhow::anyhow!(
@@ -843,7 +954,17 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                 let w: f64 = w.parse().map_err(
                     |_| anyhow::anyhow!("bad --model-mix weight in \
                                          {item}"))?;
+                anyhow::ensure!(
+                    w.is_finite() && w > 0.0,
+                    "--model-mix weight for {name} must be a \
+                     positive finite number (got {w}); drop the \
+                     entry instead of zeroing it"
+                );
                 registry.resolve(Some(name))?; // must be registered
+                anyhow::ensure!(
+                    mix.iter().all(|(n, _)| n != name),
+                    "--model-mix names model {name} twice"
+                );
                 mix.push((name.to_string(), w));
             }
             mix
@@ -945,20 +1066,22 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
     let points = if n_models > 1 {
         loadgen::sweep_registry(&registry, &base, &rates, &engines,
                                 &dp, scheduler.as_ref(),
-                                admit.as_ref())?
+                                admit.as_ref(), &chaos)?
     } else {
         loadgen::sweep_with(decode, &base, &rates, &engines, &dp,
-                            scheduler.as_ref(), admit.as_ref())?
+                            scheduler.as_ref(), admit.as_ref(),
+                            &chaos)?
     };
     eprintln!("[spdf] swept {} load points over {} model(s) in \
-               {:.1}s ({}, {}/{})",
+               {:.1}s ({}, {}/{}{})",
               points.len(), n_models, total.secs(),
               if calibrated {
                   "calibrated ms"
               } else {
                   "pinned virtual step costs"
               },
-              scheduler.name(), admit.name());
+              scheduler.name(), admit.name(),
+              if chaos.is_noop() { "" } else { ", faults injected" });
     println!("{}", report::load_table(&points));
 
     match a.get("out") {
@@ -984,6 +1107,29 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                     mix.push_num(name, *w);
                 }
                 j.push("model_mix", mix);
+            }
+            if !chaos.is_noop() {
+                let mut f = Json::obj();
+                if let Some(spec) = chaos.faults.first() {
+                    f.push_str("model",
+                               spec.model.as_deref().unwrap_or(""))
+                        .push_num("seed", spec.plan.seed)
+                        .push_num("rate", spec.plan.step_fail_p)
+                        .push_num("spike_rate", spec.plan.spike_p)
+                        .push_num("spike_ms", spec.plan.spike_ms);
+                    if let Some(k) = spec.plan.die_at_step {
+                        f.push_num("kill_step", k);
+                    }
+                }
+                f.push_num("retry_max",
+                           chaos.recovery.retry.max_retries)
+                    .push_num("breaker_threshold",
+                              chaos.recovery.breaker_threshold);
+                if let Some((from, to)) = &chaos.fallback {
+                    f.push_str("fallback_from", from)
+                        .push_str("fallback_to", to);
+                }
+                j.push("fault", f);
             }
             j.push("points", loadgen::points_json(&points));
             std::fs::write(path, j.to_string_pretty())?;

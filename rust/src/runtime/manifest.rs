@@ -212,10 +212,23 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("params not an array"))?
             .iter()
             .map(|p| -> anyhow::Result<ParamSpec> {
-                let name = p.req("name")?.as_str().unwrap().to_string();
-                let shape = p.req("shape")?.as_arr().unwrap()
-                    .iter().map(|x| x.as_usize().unwrap()).collect();
-                let init = match p.req("init")?.as_str().unwrap() {
+                let name = p.req("name")?.as_str()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "param name not a string"))?
+                    .to_string();
+                let shape = p.req("shape")?.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "param {name}: shape not an array"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "param {name}: shape entry not an integer")
+                    }))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                let init = match p.req("init")?.as_str()
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "param {name}: init not a string"))?
+                {
                     "zeros" => InitKind::Zeros,
                     "ones" => InitKind::Ones,
                     "normal" => InitKind::Normal,
@@ -246,7 +259,9 @@ impl Manifest {
         for (aname, aj) in j.req("artifacts")?.as_obj()
             .ok_or_else(|| anyhow::anyhow!("artifacts not an object"))?
         {
-            let file = dir.join(aj.req("file")?.as_str().unwrap());
+            let file = dir.join(aj.req("file")?.as_str()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "artifact {aname}: file not a string"))?);
             let tensors = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
                 aj.req(key)?.as_arr()
                     .ok_or_else(|| anyhow::anyhow!("{key} not array"))?
@@ -362,6 +377,55 @@ mod tests {
         let order = m.models["m"].param_flatten_order();
         assert_eq!(order, vec!["h0.mlp.wi".to_string(),
                                "wte".to_string()]);
+    }
+
+    // A hand-edited or truncated manifest must come back as a clean
+    // Err from the loader — never a panic — so `spdf` commands can
+    // print the actionable message and exit.
+
+    fn expect_err(mutate: impl Fn(&str) -> String, want: &str) {
+        let text = mutate(&tiny_manifest_json().to_string_pretty());
+        let err = match Json::parse(&text) {
+            Ok(j) => Manifest::from_json(PathBuf::from("/tmp"), &j)
+                .expect_err("malformed manifest parsed cleanly")
+                .to_string(),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains(want),
+                "error {err:?} does not mention {want:?}");
+    }
+
+    #[test]
+    fn malformed_manifests_err_cleanly() {
+        // truncated file: a JSON parse error, not a panic
+        expect_err(|t| t[..t.len() / 2].to_string(), "");
+        // wrong-typed fields deep in the model block
+        expect_err(|t| t.replace("\"normal\"", "17"),
+                   "init not a string");
+        expect_err(|t| t.replace("[16, 8]", "[16, \"x\"]"),
+                   "shape entry not an integer");
+        expect_err(|t| t.replace("\"name\": \"wte\"",
+                                 "\"name\": 3"),
+                   "param name not a string");
+        expect_err(|t| t.replace("\"init\": \"normal\"",
+                                 "\"init\": \"spiral\""),
+                   "unknown init kind");
+        expect_err(|t| t.replace("\"m.eval_loss.hlo.txt\"", "42"),
+                   "file not a string");
+        expect_err(|t| t.replace("\"dtype\": \"int32\"",
+                                 "\"dtype\": \"f16\""),
+                   "unsupported dtype");
+        // a missing required block names the key
+        expect_err(|t| t.replace("\"optimizer\"", "\"optimiser\""),
+                   "optimizer");
+    }
+
+    #[test]
+    fn missing_manifest_file_errs_with_hint() {
+        let err = Manifest::load("/nonexistent/spdf-artifacts")
+            .expect_err("loaded a manifest from a missing dir")
+            .to_string();
+        assert!(err.contains("make artifacts"), "unhelpful: {err}");
     }
 
     #[test]

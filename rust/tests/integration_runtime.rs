@@ -597,6 +597,9 @@ fn serve_policies_fifo_unbounded_bit_identical_to_default() {
                 schedule: Some(&sched),
                 scheduler: &Fifo,
                 admission: &Unbounded,
+                recovery: spdf::generate::RecoveryConfig::default(),
+                faults: Vec::new(),
+                fallback: None,
             }).unwrap();
         assert_eq!(default_report.results.len(),
                    explicit_report.results.len(), "kv={kv}");
@@ -679,7 +682,8 @@ fn serve_with_shedding_policies_decodes_survivors_exactly() {
             .unwrap();
     let (pt, report) = loadgen::run_trace_with(
         &decode, &trace, &dp, false, &costs, &SmallestBudgetFirst,
-        &MaxQueueDepth(2)).unwrap();
+        &MaxQueueDepth(2),
+        &spdf::generate::ChaosConfig::default()).unwrap();
     assert_eq!(pt.completed, mm.decode_batch + 2);
     assert_eq!(pt.shed, n - mm.decode_batch - 2);
     assert_eq!(pt.expired, 0);
@@ -712,7 +716,8 @@ fn serve_with_shedding_policies_decodes_survivors_exactly() {
     // determinism of the full policy pipeline
     let (pt2, report2) = loadgen::run_trace_with(
         &decode, &trace, &dp, false, &costs, &SmallestBudgetFirst,
-        &MaxQueueDepth(2)).unwrap();
+        &MaxQueueDepth(2),
+        &spdf::generate::ChaosConfig::default()).unwrap();
     assert_eq!(pt.shed_rate, pt2.shed_rate);
     assert_eq!(pt.latency_ms.p95, pt2.latency_ms.p95);
     for (x, y) in report.results.iter().zip(&report2.results) {
@@ -959,6 +964,118 @@ fn run_and_run_raw_decompose_outputs_identically() {
     assert_eq!(via_run.len(), via_raw.len());
     assert_eq!(via_run[0].as_f32().unwrap(),
                &via_raw[0].to_vec::<f32>().unwrap()[..]);
+}
+
+#[test]
+fn run_rejects_malformed_inputs_and_stays_usable() {
+    // error containment at the runtime layer: a malformed call must
+    // come back as a contextful Err — never a panic — and the
+    // executable must keep serving valid calls afterwards (the serve
+    // loop's retry path depends on that)
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let state = TrainState::init(mm, &mut Rng::new(14));
+    let params = state.param_tensors(mm);
+    let b = mm.decode_batch;
+    let t = mm.config.ctx_len;
+    let exe = runtime.artifact("logits_last").unwrap();
+
+    // too few inputs: the arity error names the counts
+    let err = exe.run(&params).unwrap_err().to_string();
+    assert!(err.contains("inputs, expected"), "unhelpful: {err}");
+
+    // right arity, truncated tokens tensor: the slot error names the
+    // offending input and both shapes
+    let mut bad = params.clone();
+    bad.push(HostTensor::from_i32(&[b, t - 1], vec![0; b * (t - 1)]));
+    bad.push(HostTensor::from_i32(&[b], vec![0; b]));
+    let err = exe.run(&bad).unwrap_err().to_string();
+    assert!(err.contains("does not match manifest"),
+            "unhelpful: {err}");
+
+    // right arity and shape, wrong dtype
+    let mut bad = params.clone();
+    bad.push(HostTensor::zeros_f32(&[b, t]));
+    bad.push(HostTensor::from_i32(&[b], vec![0; b]));
+    assert!(exe.run(&bad).is_err());
+
+    // run_raw skips spec validation but an arity mismatch must still
+    // surface as a clean Err from the execute layer
+    let lone = HostTensor::from_i32(&[b], vec![0; b])
+        .to_literal()
+        .unwrap();
+    assert!(exe.run_raw(&[&lone]).is_err());
+
+    // none of the failed calls poisoned the executable
+    let mut good = params.clone();
+    good.push(HostTensor::from_i32(&[b, t], vec![0; b * t]));
+    good.push(HostTensor::from_i32(&[b], vec![0; b]));
+    exe.run(&good).unwrap();
+}
+
+#[test]
+fn compile_rejects_missing_and_truncated_artifacts() {
+    // a deleted or half-written HLO artifact must fail compilation
+    // with a clean Err that names the file
+    let engine = engine();
+    let mm = engine.manifest.models.get("gpt-nano").unwrap();
+    let spec = mm.artifacts.get("logits_last").unwrap();
+
+    let mut missing = spec.clone();
+    missing.file = std::path::PathBuf::from(
+        "/nonexistent/spdf/gone.hlo.txt");
+    let err = spdf::runtime::Executable::compile(&engine.client,
+                                                 &missing)
+        .expect_err("compiled a nonexistent artifact")
+        .to_string();
+    assert!(err.contains("gone.hlo.txt"), "unhelpful: {err}");
+
+    let text = std::fs::read_to_string(&spec.file).unwrap();
+    let dir = std::env::temp_dir().join("spdf_truncated_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("truncated.hlo.txt");
+    std::fs::write(&path, &text[..text.len() / 3]).unwrap();
+    let mut broken = spec.clone();
+    broken.file = path;
+    assert!(
+        spdf::runtime::Executable::compile(&engine.client, &broken)
+            .is_err(),
+        "a truncated HLO artifact compiled cleanly"
+    );
+}
+
+#[test]
+fn literal_cache_and_session_state_validate_specs() {
+    use spdf::runtime::{Dtype, LiteralCache, SessionState,
+                        TensorSpec};
+    let specs = vec![
+        TensorSpec { name: "kv.k".into(), shape: vec![2, 3],
+                     dtype: Dtype::F32 },
+        TensorSpec { name: "pos".into(), shape: vec![2],
+                     dtype: Dtype::I32 },
+    ];
+    // zero state matches the specs and round-trips to host tensors
+    let st = SessionState::zeros(&specs).unwrap();
+    assert_eq!(st.len(), 2);
+    let ts = st.to_tensors().unwrap();
+    assert_eq!(ts[0].shape(), &[2, 3]);
+    assert_eq!(ts[1].dtype(), Dtype::I32);
+
+    // tensor/spec count mismatch is rejected up front
+    let err = LiteralCache::upload_validated(
+        &[HostTensor::zeros_f32(&[2, 3])], &specs)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("spec slots"), "unhelpful: {err}");
+
+    // a mismatched slot is rejected by name
+    let bad = vec![HostTensor::zeros_f32(&[2, 3]),
+                   HostTensor::zeros_f32(&[2])];
+    let err = LiteralCache::upload_validated(&bad, &specs)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("pos"), "unhelpful: {err}");
 }
 
 #[test]

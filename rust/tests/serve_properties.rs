@@ -1,14 +1,19 @@
-//! Property-based serve-invariant suite (ISSUE 5 satellite).
+//! Property-based serve-invariant suite (ISSUE 5 satellite; chaos
+//! properties from ISSUE 6).
 //!
 //! The serve loop's contracts are now richer than pinned examples can
 //! cover: outcome conservation, completed-only latency percentiles,
 //! per-model-sums-to-aggregate, run-to-run bit-determinism, and
 //! shed-requests-never-hold-a-slot must hold for *every* trace ×
-//! scheduler × admission × lane-count combination. This suite drives
-//! `util::proptest::check` over random scenarios through
-//! `serve::core::run_lanes_with` with deterministic mock backends —
-//! no compiled artifacts needed, so it runs under plain
-//! `cargo test -q` (tier 1).
+//! scheduler × admission × lane-count combination — and, since the
+//! recovery layer landed, under every seeded fault plan too:
+//! conservation still closes with the `failed` bucket, lane death
+//! leaks no slot, survivors of transient faults stay bitwise equal to
+//! the fault-free decode, and same-seed chaos runs serialize
+//! byte-identically. This suite drives `util::proptest::check` over
+//! random scenarios through `serve::core::run_lanes_with` with
+//! deterministic mock backends — no compiled artifacts needed, so it
+//! runs under plain `cargo test -q` (tier 1).
 
 use spdf::generate::serve::admission::{AdmissionPolicy, Bounded,
                                        MaxQueueDepth, QueueDeadline,
@@ -18,9 +23,9 @@ use spdf::generate::serve::core::{run_lanes_with, LogitsBackend};
 use spdf::generate::serve::policy::{Fifo, PriorityClass, Scheduler,
                                     ShortestPromptFirst,
                                     SmallestBudgetFirst};
-use spdf::generate::serve::Schedule;
-use spdf::generate::{DecodeParams, DecodeRequest, RequestOutcome,
-                     ServeReport};
+use spdf::generate::serve::{FaultPlan, FaultyBackend, Schedule};
+use spdf::generate::{DecodeParams, DecodeRequest, RecoveryConfig,
+                     RequestOutcome, RetryPolicy, ServeReport};
 use spdf::util::proptest::check;
 use spdf::util::rng::Rng;
 
@@ -108,12 +113,71 @@ fn run(sc: &Scenario) -> ServeReport {
     run_lanes_with(&mut refs, &names, &sc.lane_of, &sc.requests,
                    &DecodeParams::default(), Some(&schedule),
                    scheduler_of(sc.scheduler).as_ref(),
-                   admission_of(sc.admission).as_ref())
+                   admission_of(sc.admission).as_ref(),
+                   &RecoveryConfig::default())
         .expect("serve loop errored on a valid scenario")
 }
 
-/// completed + shed + expired == submitted, in the results, the
-/// aggregate stats, and every per-model block.
+/// A [`Scenario`] plus a seeded fault plan. Chaos scenarios pin
+/// admission to Unbounded so the set of admitted requests cannot
+/// depend on fault-injected timing — only outcomes and latencies may.
+#[derive(Debug, Clone)]
+struct ChaosScenario {
+    sc: Scenario,
+    seed: u64,
+    fail_p: f64,
+    spike_p: f64,
+    spike_ms: f64,
+}
+
+fn gen_chaos(rng: &mut Rng, size: usize) -> ChaosScenario {
+    let mut sc = gen_scenario(rng, size);
+    sc.admission = 0; // Unbounded
+    ChaosScenario {
+        sc,
+        seed: rng.below(1 << 16) as u64,
+        // strictly < 1.0 so retry loops terminate
+        fail_p: (rng.below(5) as f64) / 10.0,
+        spike_p: (rng.below(6) as f64) / 10.0,
+        spike_ms: (rng.below(40) as f64) / 10.0,
+    }
+}
+
+fn run_chaos(cs: &ChaosScenario, die_at: Option<u64>,
+             recovery: &RecoveryConfig) -> ServeReport {
+    let sc = &cs.sc;
+    let mut backends: Vec<FaultyBackend<MockBackend>> = sc
+        .lane_b
+        .iter()
+        .enumerate()
+        .map(|(l, &b)| {
+            let mut plan = FaultPlan::new(cs.seed);
+            plan.step_fail_p = cs.fail_p;
+            plan.spike_p = cs.spike_p;
+            plan.spike_ms = cs.spike_ms;
+            plan.die_at_step = die_at;
+            FaultyBackend::new(MockBackend::new(b, CTX, sc.kv),
+                               &plan, l)
+                .expect("generated fault plan is valid")
+        })
+        .collect();
+    let mut refs: Vec<&mut dyn LogitsBackend> = backends
+        .iter_mut()
+        .map(|b| b as &mut dyn LogitsBackend)
+        .collect();
+    let names: Vec<String> = (0..sc.lane_b.len())
+        .map(|l| format!("m{l}"))
+        .collect();
+    let schedule = Schedule::open(sc.arrivals.clone(), 1.0, 1.0);
+    run_lanes_with(&mut refs, &names, &sc.lane_of, &sc.requests,
+                   &DecodeParams::default(), Some(&schedule),
+                   scheduler_of(sc.scheduler).as_ref(), &Unbounded,
+                   recovery)
+        .expect("serve loop errored on a chaos scenario")
+}
+
+/// completed + shed + expired + failed == submitted, in the results,
+/// the aggregate stats, and every per-model block.
 #[test]
 fn prop_outcome_conservation() {
     check(11, 80, 14, gen_scenario, |sc: &Scenario| {
@@ -122,9 +186,10 @@ fn prop_outcome_conservation() {
         let st = &report.stats;
         report.results.len() == n
             && st.requests == n
-            && st.completed + st.shed + st.expired == n
+            && st.completed + st.shed + st.expired + st.failed == n
             && report.per_model.iter().all(|m| {
                 m.stats.completed + m.stats.shed + m.stats.expired
+                    + m.stats.failed
                     == m.stats.requests
             })
     });
@@ -162,6 +227,9 @@ fn prop_per_model_stats_sum_to_aggregate() {
             && sum(&|s| s.completed as u64) == st.completed as u64
             && sum(&|s| s.shed as u64) == st.shed as u64
             && sum(&|s| s.expired as u64) == st.expired as u64
+            && sum(&|s| s.failed as u64) == st.failed as u64
+            && sum(&|s| s.degraded as u64) == st.degraded as u64
+            && sum(&|s| s.retries) == st.retries
             && sum(&|s| s.generated_tokens) == st.generated_tokens
             && sum(&|s| s.engine_steps) == st.engine_steps
             && sum(&|s| s.prefill_steps) == st.prefill_steps
@@ -209,6 +277,9 @@ fn prop_failed_requests_never_hold_a_slot() {
             RequestOutcome::Expired => {
                 r.tokens.is_empty() && r.decode_steps == 0
             }
+            // failed requests may have briefly held a slot, but they
+            // never deliver partial output
+            RequestOutcome::Failed => r.tokens.is_empty(),
         })
     });
 }
@@ -232,6 +303,98 @@ fn prop_unbounded_admission_never_sheds() {
                 r.outcome.is_completed()
                     && r.tokens.len() == sc.requests[r.id as usize]
                         .max_new_tokens
+            })
+    });
+}
+
+/// Chaos conservation: under seeded transient faults + spikes with a
+/// finite retry budget, every request still lands in exactly one
+/// outcome bucket — aggregate and per-model — and failed requests
+/// never deliver partial output.
+#[test]
+fn prop_chaos_outcome_conservation() {
+    check(31, 60, 14, gen_chaos, |cs: &ChaosScenario| {
+        let report = run_chaos(cs, None, &RecoveryConfig::default());
+        let n = cs.sc.requests.len();
+        let st = &report.stats;
+        report.results.len() == n
+            && st.completed + st.shed + st.expired + st.failed == n
+            && report.per_model.iter().all(|m| {
+                m.stats.completed + m.stats.shed + m.stats.expired
+                    + m.stats.failed
+                    == m.stats.requests
+            })
+            && report.results.iter().all(|r| {
+                r.outcome != RequestOutcome::Failed
+                    || r.tokens.is_empty()
+            })
+    });
+}
+
+/// Permanent lane death leaks nothing: every lane dies on its k-th
+/// step attempt, the loop still terminates cleanly, every request is
+/// accounted for, and whatever completed before the deaths kept its
+/// full token stream.
+#[test]
+fn prop_no_slot_leaked_on_lane_death() {
+    check(37, 60, 14, gen_chaos, |cs: &ChaosScenario| {
+        let die_at = Some((cs.seed % 7) as u64);
+        let report =
+            run_chaos(cs, die_at, &RecoveryConfig::default());
+        let n = cs.sc.requests.len();
+        let st = &report.stats;
+        report.results.len() == n
+            && st.completed + st.shed + st.expired + st.failed == n
+            && report.results.iter().all(|r| match r.outcome {
+                RequestOutcome::Completed => {
+                    r.tokens.len()
+                        == cs.sc.requests[r.id as usize]
+                            .max_new_tokens
+                }
+                RequestOutcome::Failed => r.tokens.is_empty(),
+                _ => false, // Unbounded admission never sheds
+            })
+    });
+}
+
+/// The headline chaos invariant: transient faults + unlimited retries
+/// + no permanent death ⇒ every admitted request completes, and every
+/// token stream is bitwise identical to the fault-free run of the
+/// same scenario.
+#[test]
+fn prop_chaos_survivors_bitwise_equal_fault_free() {
+    check(41, 60, 14, gen_chaos, |cs: &ChaosScenario| {
+        let recovery = RecoveryConfig {
+            retry: RetryPolicy::unlimited(),
+            ..RecoveryConfig::default()
+        };
+        let chaos = run_chaos(cs, None, &recovery);
+        let clean = run(&cs.sc);
+        chaos.stats.completed == cs.sc.requests.len()
+            && chaos.stats.failed == 0
+            && chaos.results.len() == clean.results.len()
+            && chaos.results.iter().zip(&clean.results).all(
+                |(a, b)| {
+                    a.id == b.id
+                        && a.outcome.is_completed()
+                        && a.tokens == b.tokens
+                })
+    });
+}
+
+/// Same seed + same fault plan ⇒ byte-identical stats JSON, retry and
+/// degraded counters included.
+#[test]
+fn prop_chaos_same_seed_byte_identical() {
+    check(43, 40, 14, gen_chaos, |cs: &ChaosScenario| {
+        let recovery = RecoveryConfig::default();
+        let a = run_chaos(cs, None, &recovery);
+        let b = run_chaos(cs, None, &recovery);
+        a.stats_json().to_string() == b.stats_json().to_string()
+            && a.stats.to_json().to_string()
+                == b.stats.to_json().to_string()
+            && a.results.iter().zip(&b.results).all(|(x, y)| {
+                x.to_json().to_string() == y.to_json().to_string()
             })
     });
 }

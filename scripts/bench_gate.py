@@ -26,7 +26,15 @@ regresses by more than the tolerance:
                          per-model requests/completed counts must sum
                          to the aggregate (a mismatch means the
                          registry loop lost or double-counted a
-                         request).
+                         request). The fault leg (fault.rates) is
+                         required as well: every rate row must carry
+                         the no-failover/failover datapoint pair,
+                         each pair must conserve outcomes (completed
+                         + shed + expired + failed == requests), and
+                         at every nonzero fault rate the failover
+                         goodput must be at least the no-failover
+                         goodput — failover that does not help is a
+                         recovery regression, not noise.
 
 Usage:
     python3 scripts/bench_gate.py [ROOT]
@@ -136,6 +144,7 @@ def check_absolute(name, current, tol):
     if name == "BENCH_serve_load.json":
         failures.extend(check_shed_datapoints(name, current))
         failures.extend(check_multi_model_datapoints(name, current))
+        failures.extend(check_fault_datapoints(name, current))
     return failures
 
 
@@ -231,6 +240,82 @@ def check_multi_model_datapoints(name, current):
                 f"{name}:multi_model: per-model {key} sum {total} != "
                 f"aggregate {agg.get(key)} (registry loop lost or "
                 "double-counted requests)")
+    return failures
+
+
+# every fault-leg variant must carry the outcome counters and the
+# gated goodput datapoint; a missing counter would silently disable
+# the conservation/failover checks
+FAULT_VARIANT_KEYS = ["requests", "completed", "shed", "expired",
+                      "failed", "retries", "degraded",
+                      "goodput_tokens_per_sec"]
+
+
+def check_fault_datapoints(name, current):
+    """Structural + invariant checks on the fresh fault leg: the
+    block must be present and untruncated (a stale bench could
+    silently drop it — and a refresh would bake the gap into the
+    baseline, disabling the fault gates forever), every rate row must
+    carry the no-failover/failover pair with the outcome counters,
+    each variant must conserve outcomes, and at every nonzero fault
+    rate the failover run's goodput must be at least the no-failover
+    run's — recovery that loses throughput is a regression."""
+    failures = []
+    fault = current.get("fault")
+    if not isinstance(fault, dict):
+        failures.append(f"{name}:fault: block missing — the smoke "
+                        "did not run the fault-injection leg")
+        return failures
+    rates = fault.get("rates")
+    if not isinstance(rates, list) or not rates:
+        failures.append(f"{name}:fault.rates: missing or empty — the "
+                        "leg must sweep at least one fault rate")
+        return failures
+    nonzero = 0
+    for i, row in enumerate(rates):
+        rate = row.get("fault_rate")
+        if not isinstance(rate, (int, float)):
+            failures.append(f"{name}:fault.rates[{i}]: missing "
+                            "fault_rate")
+            continue
+        variants = {}
+        for variant in ("no_failover", "failover"):
+            point = row.get(variant)
+            if not isinstance(point, dict):
+                failures.append(f"{name}:fault.rates[{i}]: missing "
+                                f"{variant} datapoint")
+                continue
+            missing = [k for k in FAULT_VARIANT_KEYS
+                       if k not in point]
+            if missing:
+                failures.append(
+                    f"{name}:fault.rates[{i}].{variant}: missing "
+                    f"{','.join(missing)}")
+                continue
+            lost = (point["completed"] + point["shed"]
+                    + point["expired"] + point["failed"])
+            if lost != point["requests"]:
+                failures.append(
+                    f"{name}:fault.rates[{i}].{variant}: outcomes "
+                    f"sum to {lost} != requests {point['requests']} "
+                    "(the fault loop lost or double-counted a "
+                    "request)")
+                continue
+            variants[variant] = point
+        if rate <= 0 or len(variants) != 2:
+            continue
+        nonzero += 1
+        no_gp = variants["no_failover"]["goodput_tokens_per_sec"]
+        fo_gp = variants["failover"]["goodput_tokens_per_sec"]
+        if fo_gp < no_gp:
+            failures.append(
+                f"{name}:fault.rates[{i}]: failover goodput "
+                f"{fo_gp:.3f} below no-failover {no_gp:.3f} at fault "
+                f"rate {rate} (cross-model failover must not lose "
+                "throughput)")
+    if nonzero == 0 and not failures:
+        failures.append(f"{name}:fault.rates: no nonzero fault rate "
+                        "— the leg never actually injected faults")
     return failures
 
 

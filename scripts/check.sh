@@ -68,10 +68,10 @@ for f in "${BENCH_FILES[@]}"; do
 done
 
 # the serve-load smoke must carry the scheduling/shedding datapoints
-# (goodput + shed rate per point, plus the past-the-knee shed leg and
-# the multi-model registry leg) — bench_gate.py gates on them, so
-# their absence should fail loudly here with a better message than a
-# missing-metric skip
+# (goodput + shed rate per point, plus the past-the-knee shed leg,
+# the multi-model registry leg and the fault-injection leg) —
+# bench_gate.py gates on them, so their absence should fail loudly
+# here with a better message than a missing-metric skip
 python3 - "$ROOT/BENCH_serve_load.json" <<'EOF'
 import json, sys
 
@@ -96,9 +96,22 @@ for p in per_model:
     for key in ("model", "requests", "completed", "shed_rate",
                 "goodput_tokens_per_sec", "latency_ms"):
         assert key in p, f"multi-model point lacks {key}"
-print(f"check.sh: serve-load smoke carries goodput/shed/multi-model "
-      f"datapoints ({len(pts)} points + shed leg, shed rate "
-      f"{shed['shed_rate']:.0%}, {len(per_model)} registry models)")
+fault = j.get("fault") or {}
+rates = fault.get("rates") or []
+assert rates, "fault leg missing or swept no rates"
+assert any((r.get("fault_rate") or 0) > 0 for r in rates), \
+    "fault leg never injected a nonzero fault rate"
+for i, r in enumerate(rates):
+    for variant in ("no_failover", "failover"):
+        p = r.get(variant) or {}
+        for key in ("requests", "completed", "failed", "retries",
+                    "degraded", "goodput_tokens_per_sec"):
+            assert key in p, \
+                f"fault rate row {i} {variant} lacks {key}"
+print(f"check.sh: serve-load smoke carries goodput/shed/multi-model/"
+      f"fault datapoints ({len(pts)} points + shed leg, shed rate "
+      f"{shed['shed_rate']:.0%}, {len(per_model)} registry models, "
+      f"{len(rates)} fault rates)")
 EOF
 
 echo "== perf-regression gate (scripts/bench_gate.py) =="
