@@ -1,0 +1,228 @@
+//! `spdf lint` — a determinism & panic-safety static-analysis pass
+//! over this source tree.
+//!
+//! Every pinned artifact in the repo (the reference-oracle traces, KV
+//! equivalence checks, chaos-schedule determinism, eval JSON) rests
+//! on conventions no compiler enforces: float comparators must not
+//! panic on NaN, map iteration feeding output must be ordered, the
+//! wall clock stays behind a small allowlist, hot-path panics carry a
+//! written invariant, and RNG side-streams derive through named
+//! salts. This module makes those conventions machine-checked: a
+//! comment/string-aware scanner ([`scanner`]), the rules themselves
+//! ([`rules`]), and here the tree walker plus human/JSON reporting.
+//! Wired into `scripts/check.sh` and CI; `spdf lint` exits nonzero on
+//! any finding.
+
+pub mod rules;
+pub mod scanner;
+
+pub use rules::{scan_source, Finding, LintConfig};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Result of linting a tree.
+pub struct LintReport {
+    /// All findings, ordered by file then line.
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Lint every `.rs` file under `root` (sorted walk, so output order
+/// is stable across machines).
+pub fn run(root: &Path, cfg: &LintConfig) -> anyhow::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut allow_live = vec![false; cfg.wall_clock_allow.len()];
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(path)?;
+        if let Some(k) =
+            cfg.wall_clock_allow.iter().position(|a| *a == rel)
+        {
+            allow_live[k] = reads_wall_clock(&text);
+        }
+        findings.extend(rules::scan_source(&rel, &text, cfg));
+    }
+
+    // an allowlist entry for a file that no longer exists (or no
+    // longer reads the clock) is a hole waiting to be abused
+    for (k, entry) in cfg.wall_clock_allow.iter().enumerate() {
+        if !allow_live[k] {
+            findings.push(Finding {
+                file: entry.to_string(),
+                line: 0,
+                rule: rules::RULE_STALE_ALLOWLIST,
+                message: "wall-clock allowlist entry is missing or \
+                          no longer reads the clock"
+                    .to_string(),
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+/// Does any non-test code line actually read the wall clock?
+fn reads_wall_clock(text: &str) -> bool {
+    scanner::scan(text).iter().any(|l| {
+        !l.in_test
+            && (l.code.contains("Instant::now")
+                || l.code.contains("SystemTime"))
+    })
+}
+
+fn collect_rs(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> anyhow::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Aligned human-readable table, one finding per row.
+    pub fn render(&self) -> String {
+        if self.findings.is_empty() {
+            return format!(
+                "lint: clean ({} files scanned)\n",
+                self.files_scanned
+            );
+        }
+        let locs: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| format!("{}:{}", f.file, f.line))
+            .collect();
+        let w_loc = locs.iter().map(|l| l.len()).max().unwrap_or(0);
+        let w_rule = self
+            .findings
+            .iter()
+            .map(|f| f.rule.len())
+            .max()
+            .unwrap_or(0);
+        let mut s = String::new();
+        for (loc, f) in locs.iter().zip(&self.findings) {
+            s.push_str(&format!(
+                "{loc:<w_loc$}  {rule:<w_rule$}  {msg}\n",
+                rule = f.rule,
+                msg = f.message,
+            ));
+        }
+        s.push_str(&format!(
+            "\nlint: {} finding(s) in {} files scanned\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        s
+    }
+
+    /// Machine-readable report for CI artifacts.
+    pub fn to_json(&self) -> Json {
+        let items: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.push_str("file", &f.file)
+                    .push_num("line", f.line)
+                    .push_str("rule", f.rule)
+                    .push_str("message", &f.message);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.push_num("files_scanned", self.files_scanned)
+            .push_num("findings", self.findings.len())
+            .push("violations", Json::Arr(items));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The gate itself: the shipped tree must be clean under the
+    /// shipped policy. If this fails, either fix the violation or
+    /// justify it where it lives — do not touch the policy first.
+    #[test]
+    fn shipped_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let rep = run(&root, &LintConfig::repo_default()).unwrap();
+        assert!(rep.is_clean(), "\n{}", rep.render());
+        assert!(rep.files_scanned > 30, "walker missed most of src/");
+    }
+
+    #[test]
+    fn stale_allowlist_entry_is_reported() {
+        let dir = std::env::temp_dir()
+            .join(format!("spdf_lint_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("a.rs"), "fn f() {}\n").unwrap();
+        let cfg = LintConfig {
+            ordered_modules: vec![],
+            panic_modules: vec![],
+            wall_clock_allow: vec!["gone.rs", "a.rs"],
+            rng_exempt: vec![],
+        };
+        let rep = run(&dir, &cfg).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+        let rules: Vec<&str> =
+            rep.findings.iter().map(|f| f.rule).collect();
+        assert_eq!(
+            rules,
+            vec![
+                rules::RULE_STALE_ALLOWLIST,
+                rules::RULE_STALE_ALLOWLIST
+            ],
+            "both the missing file and the clock-free file are stale"
+        );
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let rep = LintReport {
+            findings: vec![Finding {
+                file: "a.rs".to_string(),
+                line: 3,
+                rule: rules::RULE_WALL_CLOCK,
+                message: "m".to_string(),
+            }],
+            files_scanned: 1,
+        };
+        let table = rep.render();
+        assert!(table.contains("a.rs:3"));
+        assert!(table.contains("1 finding(s)"));
+        let j = rep.to_json().to_string_pretty();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("findings").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+    }
+}

@@ -1,0 +1,573 @@
+//! The five determinism & panic-safety rules, applied to one scanned
+//! source file at a time.
+//!
+//! Every rule reads the blanked `code` channel (so literals and
+//! comments can't trigger it) and every rule can be silenced at a
+//! specific site with a justified marker comment on the same line or
+//! up to [`MARKER_WINDOW`] lines above:
+//!
+//! ```text
+//! // lint:allow(<rule>) <reason>
+//! ```
+//!
+//! where `<rule>` is one of [`RULES`]. Rule 4 additionally accepts an
+//! adjacent `invariant:` comment, the repo's convention for "this
+//! panic is a contract, not a bug". Markers that never match a
+//! checked site are themselves findings (`stale-allow`) so silenced
+//! sites can't outlive the code they excused.
+
+use super::scanner::{self, Line};
+
+/// A marker excuses a site on its own line or up to this many lines
+/// below it (justification blocks span a few lines above their code).
+pub const MARKER_WINDOW: usize = 5;
+
+pub const RULE_FLOAT_SORT: &str = "float-sort";
+pub const RULE_UNORDERED: &str = "unordered";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_PANIC_SAFETY: &str = "panic-safety";
+pub const RULE_RNG: &str = "rng-discipline";
+pub const RULE_STALE_ALLOW: &str = "stale-allow";
+pub const RULE_STALE_ALLOWLIST: &str = "stale-allowlist";
+
+/// The site-checkable rules (the two `stale-*` rules are meta-checks
+/// and cannot be allowed).
+pub const RULES: [&str; 5] = [
+    RULE_FLOAT_SORT,
+    RULE_UNORDERED,
+    RULE_WALL_CLOCK,
+    RULE_PANIC_SAFETY,
+    RULE_RNG,
+];
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based source line; 0 for file-level findings.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Where each rule applies. Module entries are path prefixes relative
+/// to the scan root; file entries are exact relative paths.
+pub struct LintConfig {
+    /// Rule 2: modules whose map iteration feeds pinned output — no
+    /// `HashMap`/`HashSet` without a justification marker.
+    pub ordered_modules: Vec<&'static str>,
+    /// Rule 4: hot-path modules where `.unwrap()`/`.expect(` needs an
+    /// adjacent `invariant:` comment.
+    pub panic_modules: Vec<&'static str>,
+    /// Rule 3: the only files allowed to read the wall clock.
+    pub wall_clock_allow: Vec<&'static str>,
+    /// Rule 5: files exempt from seed-derivation discipline (the rng
+    /// implementation itself).
+    pub rng_exempt: Vec<&'static str>,
+}
+
+impl LintConfig {
+    /// The shipped tree's policy.
+    pub fn repo_default() -> LintConfig {
+        LintConfig {
+            ordered_modules: vec![
+                "generate/",
+                "eval/",
+                "tokenizer/",
+                "coordinator/",
+            ],
+            panic_modules: vec!["generate/", "runtime/"],
+            wall_clock_allow: vec![
+                "bench_support/mod.rs",
+                "util/mod.rs",
+                "runtime/engine.rs",
+                "train/session.rs",
+                "generate/serve/clock.rs",
+            ],
+            rng_exempt: vec!["util/rng.rs"],
+        }
+    }
+}
+
+/// Run all rules over one file's text. `file` is the root-relative
+/// path the config's module prefixes are matched against.
+pub fn scan_source(
+    file: &str,
+    text: &str,
+    cfg: &LintConfig,
+) -> Vec<Finding> {
+    let lines = scanner::scan(text);
+    let present = present_markers(&lines);
+    let mut used = vec![false; present.len()];
+    let mut out: Vec<Finding> = Vec::new();
+
+    let ordered = in_module(file, &cfg.ordered_modules);
+    let panic_mod = in_module(file, &cfg.panic_modules);
+    let wall_ok = cfg.wall_clock_allow.iter().any(|a| *a == file);
+    let rng_ok = cfg.rng_exempt.iter().any(|a| *a == file);
+
+    // ---- line-local rules (2, 3, 4) ---------------------------------
+    for (i, l) in lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        if ordered {
+            for pat in ["HashMap", "HashSet"] {
+                if l.code.contains(pat) {
+                    if !allow(i, RULE_UNORDERED, &present, &mut used) {
+                        out.push(finding(
+                            file,
+                            i,
+                            RULE_UNORDERED,
+                            format!(
+                                "{pat} in an order-sensitive module; \
+                                 use BTreeMap/BTreeSet or justify"
+                            ),
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+        if !wall_ok {
+            for pat in ["Instant::now", "SystemTime"] {
+                if l.code.contains(pat) {
+                    if !allow(i, RULE_WALL_CLOCK, &present, &mut used) {
+                        out.push(finding(
+                            file,
+                            i,
+                            RULE_WALL_CLOCK,
+                            format!(
+                                "{pat} outside the wall-clock \
+                                 allowlist"
+                            ),
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+        if panic_mod
+            && (l.code.contains(".unwrap()")
+                || l.code.contains(".expect("))
+            && !has_invariant(&lines, i)
+            && !allow(i, RULE_PANIC_SAFETY, &present, &mut used)
+        {
+            out.push(finding(
+                file,
+                i,
+                RULE_PANIC_SAFETY,
+                "hot-path unwrap/expect without an adjacent \
+                 invariant: justification"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // ---- expression rules over joined code (1, 5) -------------------
+    let joined = lines
+        .iter()
+        .map(|l| l.code.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let mut starts = vec![0usize];
+    for l in &lines {
+        let last = *starts.last().unwrap_or(&0);
+        starts.push(last + l.code.len() + 1);
+    }
+    let line_of =
+        |off: usize| starts.partition_point(|&s| s <= off) - 1;
+
+    // rule 1: float comparators must not panic on NaN
+    let needle = "partial_cmp";
+    let mut pos = 0usize;
+    while let Some(rel) = joined[pos..].find(needle) {
+        let at = pos + rel;
+        pos = at + needle.len();
+        let li = line_of(at);
+        if lines[li].in_test {
+            continue;
+        }
+        if let Some((_, rest)) = split_call(&joined[at + needle.len()..])
+        {
+            let t = rest.trim_start();
+            if (t.starts_with(".unwrap()") || t.starts_with(".expect("))
+                && !allow(li, RULE_FLOAT_SORT, &present, &mut used)
+            {
+                out.push(finding(
+                    file,
+                    li,
+                    RULE_FLOAT_SORT,
+                    "partial_cmp().unwrap()/.expect() comparator \
+                     panics on NaN; use total_cmp"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    // rule 5: seed derivations outside util/rng must go through a
+    // named *_SALT constant or fork, so side-streams are auditable
+    let needle = "Rng::new";
+    let mut pos = 0usize;
+    while let Some(rel) = joined[pos..].find(needle) {
+        let at = pos + rel;
+        pos = at + needle.len();
+        let li = line_of(at);
+        if lines[li].in_test || rng_ok {
+            continue;
+        }
+        if let Some((arg, _)) = split_call(&joined[at + needle.len()..])
+        {
+            if arg.contains('^')
+                && !arg.contains("_SALT")
+                && !arg.contains("fork")
+                && !allow(li, RULE_RNG, &present, &mut used)
+            {
+                out.push(finding(
+                    file,
+                    li,
+                    RULE_RNG,
+                    "seed derivation without a named *_SALT \
+                     constant"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    // ---- stale markers ----------------------------------------------
+    for (k, (m, r)) in present.iter().enumerate() {
+        if !used[k] {
+            out.push(finding(
+                file,
+                *m,
+                RULE_STALE_ALLOW,
+                format!("allow marker for `{r}` never matched a \
+                         checked site"),
+            ));
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn finding(
+    file: &str,
+    line_idx: usize,
+    rule: &'static str,
+    message: String,
+) -> Finding {
+    Finding { file: file.to_string(), line: line_idx + 1, rule, message }
+}
+
+fn in_module(file: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| file.starts_with(p))
+}
+
+/// All allow markers in non-test comments: (line index, rule). The
+/// rule name between the parens must match [`RULES`] exactly —
+/// anything else (prose, placeholders) is ignored.
+fn present_markers(lines: &[Line]) -> Vec<(usize, &'static str)> {
+    let opener = "lint:allow(";
+    let mut v = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        let mut c = l.comment.as_str();
+        while let Some(p) = c.find(opener) {
+            let rest = &c[p + opener.len()..];
+            let Some(end) = rest.find(')') else { break };
+            if let Some(r) = RULES.iter().find(|r| **r == rest[..end]) {
+                v.push((i, *r));
+            }
+            c = &rest[end + 1..];
+        }
+    }
+    v
+}
+
+/// Is a marker for `rule` in scope at line `idx`? Marks every marker
+/// it consumes as used.
+fn allow(
+    idx: usize,
+    rule: &'static str,
+    present: &[(usize, &'static str)],
+    used: &mut [bool],
+) -> bool {
+    let lo = idx.saturating_sub(MARKER_WINDOW);
+    let mut hit = false;
+    for (k, (m, r)) in present.iter().enumerate() {
+        if *r == rule && *m >= lo && *m <= idx {
+            used[k] = true;
+            hit = true;
+        }
+    }
+    hit
+}
+
+fn has_invariant(lines: &[Line], idx: usize) -> bool {
+    let lo = idx.saturating_sub(MARKER_WINDOW);
+    lines[lo..=idx]
+        .iter()
+        .any(|l| l.comment.contains("invariant:"))
+}
+
+/// Split text that (after whitespace) starts with `(` into the
+/// balanced argument text and the remainder after the close paren.
+fn split_call(s: &str) -> Option<(&str, &str)> {
+    let s = s.trim_start();
+    if !s.starts_with('(') {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => {
+                depth += 1;
+                if depth == 1 {
+                    start = i + 1;
+                }
+            }
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((&s[start..i], &s[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bare() -> LintConfig {
+        LintConfig {
+            ordered_modules: vec![],
+            panic_modules: vec![],
+            wall_clock_allow: vec![],
+            rng_exempt: vec![],
+        }
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- rule 1: float-sort -----------------------------------------
+
+    #[test]
+    fn float_sort_flags_unwrapped_partial_cmp() {
+        let src = "fn f(xs: &mut Vec<f64>) {\n\
+                   xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let fs = scan_source("serve/x.rs", src, &bare());
+        assert_eq!(rules_of(&fs), vec![RULE_FLOAT_SORT]);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn float_sort_flags_multiline_expect_chain() {
+        let src = "fn f(a: f32, b: f32) -> std::cmp::Ordering {\n\
+                   a.partial_cmp(&b)\n\
+                   .expect(\"nan\")\n}\n";
+        let fs = scan_source("serve/x.rs", src, &bare());
+        assert_eq!(rules_of(&fs), vec![RULE_FLOAT_SORT]);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn float_sort_ignores_total_cmp_and_unwrap_or() {
+        let src = "fn f(xs: &mut Vec<f64>) {\n\
+                   xs.sort_by(|a, b| a.total_cmp(b));\n\
+                   let o = (1.0f64).partial_cmp(&2.0)\
+                   .unwrap_or(std::cmp::Ordering::Equal);\n}\n";
+        assert!(scan_source("serve/x.rs", src, &bare()).is_empty());
+    }
+
+    #[test]
+    fn float_sort_ignores_comments_and_strings() {
+        let src = "// a.partial_cmp(b).unwrap() was here\n\
+                   fn f() -> &'static str {\n\
+                   \"a.partial_cmp(b).unwrap()\"\n}\n";
+        assert!(scan_source("serve/x.rs", src, &bare()).is_empty());
+    }
+
+    #[test]
+    fn float_sort_allow_marker_is_honored_and_used() {
+        let src = "fn f(xs: &mut Vec<f32>) {\n\
+                   // lint:allow(float-sort) frozen comparator\n\
+                   xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        assert!(scan_source("serve/x.rs", src, &bare()).is_empty());
+    }
+
+    // ---- rule 2: unordered ------------------------------------------
+
+    #[test]
+    fn unordered_flags_hashmap_in_ordered_module_only() {
+        let cfg = LintConfig {
+            ordered_modules: vec!["eval/"],
+            ..bare()
+        };
+        let src = "use std::collections::HashMap;\n";
+        let fs = scan_source("eval/x.rs", src, &cfg);
+        assert_eq!(rules_of(&fs), vec![RULE_UNORDERED]);
+        assert!(scan_source("serve/x.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn unordered_allow_marker_is_honored() {
+        let cfg = LintConfig {
+            ordered_modules: vec!["eval/"],
+            ..bare()
+        };
+        let src = "// lint:allow(unordered) lookup-only map\n\
+                   use std::collections::HashMap;\n";
+        assert!(scan_source("eval/x.rs", src, &cfg).is_empty());
+    }
+
+    // ---- rule 3: wall-clock -----------------------------------------
+
+    #[test]
+    fn wall_clock_flags_instant_now_outside_allowlist() {
+        let cfg = LintConfig {
+            wall_clock_allow: vec!["util/timer.rs"],
+            ..bare()
+        };
+        let src = "fn t() { let t0 = Instant::now(); }\n";
+        let fs = scan_source("serve/x.rs", src, &cfg);
+        assert_eq!(rules_of(&fs), vec![RULE_WALL_CLOCK]);
+        assert!(scan_source("util/timer.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_ignores_commented_out_code() {
+        let src = "// let t0 = Instant::now();\nfn t() {}\n";
+        assert!(scan_source("serve/x.rs", src, &bare()).is_empty());
+    }
+
+    // ---- rule 4: panic-safety ---------------------------------------
+
+    #[test]
+    fn panic_safety_requires_invariant_in_hot_modules() {
+        let cfg = LintConfig {
+            panic_modules: vec!["serve/"],
+            ..bare()
+        };
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let fs = scan_source("serve/x.rs", src, &cfg);
+        assert_eq!(rules_of(&fs), vec![RULE_PANIC_SAFETY]);
+        assert!(scan_source("other/x.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn panic_safety_accepts_adjacent_invariant_comment() {
+        let cfg = LintConfig {
+            panic_modules: vec!["serve/"],
+            ..bare()
+        };
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // invariant: caller checked is_some\n\
+                   x.unwrap()\n}\n";
+        assert!(scan_source("serve/x.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn panic_safety_ignores_unwrap_or_variants() {
+        let cfg = LintConfig {
+            panic_modules: vec!["serve/"],
+            ..bare()
+        };
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   x.unwrap_or_default()\n}\n";
+        assert!(scan_source("serve/x.rs", src, &cfg).is_empty());
+    }
+
+    // ---- rule 5: rng-discipline -------------------------------------
+
+    #[test]
+    fn rng_flags_unsalted_xor_derivation() {
+        let src = "fn f(seed: u64) -> Rng {\n\
+                   Rng::new(seed ^ 0x1234)\n}\n";
+        let fs = scan_source("serve/x.rs", src, &bare());
+        assert_eq!(rules_of(&fs), vec![RULE_RNG]);
+    }
+
+    #[test]
+    fn rng_accepts_salt_fork_and_plain_seed() {
+        let src = "fn f(seed: u64, r: &mut Rng) {\n\
+                   let a = Rng::new(seed ^ FAULT_SALT);\n\
+                   let b = Rng::new(seed);\n\
+                   let c = Rng::new(seed ^ r.fork());\n}\n";
+        assert!(scan_source("serve/x.rs", src, &bare()).is_empty());
+    }
+
+    #[test]
+    fn rng_exempt_file_is_skipped() {
+        let cfg = LintConfig {
+            rng_exempt: vec!["util/rng.rs"],
+            ..bare()
+        };
+        let src = "fn f(seed: u64) -> Rng { Rng::new(seed ^ 1) }\n";
+        assert!(scan_source("util/rng.rs", src, &cfg).is_empty());
+    }
+
+    // ---- cfg(test) and markers --------------------------------------
+
+    #[test]
+    fn cfg_test_code_is_exempt_from_every_rule() {
+        let cfg = LintConfig {
+            ordered_modules: vec!["eval/"],
+            panic_modules: vec!["eval/"],
+            ..bare()
+        };
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   use std::collections::HashMap;\n\
+                   fn t(x: Option<f64>, y: f64) {\n\
+                   let t0 = Instant::now();\n\
+                   let r = Rng::new(1u64 ^ 2);\n\
+                   let o = x.unwrap().partial_cmp(&y).unwrap();\n\
+                   }\n}\n";
+        assert!(scan_source("eval/x.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn stale_allow_marker_is_reported() {
+        let src = "// lint:allow(float-sort) nothing here anymore\n\
+                   fn f() {}\n";
+        let fs = scan_source("serve/x.rs", src, &bare());
+        assert_eq!(rules_of(&fs), vec![RULE_STALE_ALLOW]);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn marker_with_unknown_rule_name_is_ignored() {
+        let src = "// lint:allow(<rule>) doc placeholder\nfn f() {}\n";
+        assert!(scan_source("serve/x.rs", src, &bare()).is_empty());
+    }
+
+    #[test]
+    fn marker_outside_window_does_not_excuse() {
+        let mut src = String::from(
+            "// lint:allow(wall-clock) too far away\n",
+        );
+        for _ in 0..MARKER_WINDOW + 1 {
+            src.push_str("fn pad() {}\n");
+        }
+        src.push_str("fn t() { let t0 = Instant::now(); }\n");
+        let fs = scan_source("serve/x.rs", &src, &bare());
+        assert_eq!(
+            rules_of(&fs),
+            vec![RULE_STALE_ALLOW, RULE_WALL_CLOCK]
+        );
+    }
+}

@@ -1,0 +1,348 @@
+//! Comment/string-aware Rust source scanner — the lexical substrate
+//! the lint rules run on.
+//!
+//! This is deliberately *not* a Rust parser. Rules match substrings,
+//! so all the scanner must guarantee is that (1) text inside
+//! comments, string/char literals never looks like code, (2) comment
+//! text is preserved separately so `lint:allow(...)`-style markers
+//! and `invariant:` justifications can be found, and (3) items under
+//! `#[cfg(test)]` are labeled, because every rule applies to shipped
+//! code only. The same no-deps, hand-rolled idiom as `util::json`.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Code with comment text and literal *contents* blanked to
+    /// spaces (delimiters kept), so byte offsets match the original.
+    pub code: String,
+    /// Comment text on this line (line, block and doc comments).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item — rules skip these lines.
+    pub in_test: bool,
+}
+
+#[derive(PartialEq)]
+enum State {
+    Normal,
+    LineComment,
+    /// Nested block comments: the u32 is the nesting depth.
+    BlockComment(u32),
+    Str,
+    /// Raw string with `n` hashes: closes on `"` + n `#`s.
+    RawStr(u32),
+    CharLit,
+}
+
+/// Scan source text into labeled lines.
+pub fn scan(text: &str) -> Vec<Line> {
+    let mut lines = Vec::new();
+    let mut state = State::Normal;
+
+    // #[cfg(test)] region tracking, over the code channel only
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    let mut test_close_depth: Option<i64> = None;
+
+    for raw in text.lines() {
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let was_test = test_close_depth.is_some();
+
+        let b: Vec<char> = raw.chars().collect();
+        let mut i = 0;
+        while i < b.len() {
+            let c = b[i];
+            let next = b.get(i + 1).copied();
+            match state {
+                State::Normal => match c {
+                    '/' if next == Some('/') => {
+                        comment.push_str(&raw[raw
+                            .char_indices()
+                            .nth(i)
+                            .map(|(o, _)| o)
+                            .unwrap_or(raw.len())..]);
+                        for _ in i..b.len() {
+                            code.push(' ');
+                        }
+                        state = State::LineComment;
+                        i = b.len();
+                        continue;
+                    }
+                    '/' if next == Some('*') => {
+                        code.push_str("  ");
+                        state = State::BlockComment(1);
+                        i += 2;
+                        continue;
+                    }
+                    '"' => {
+                        // raw-string prefix? look back over r / br
+                        let hashes = raw_hashes_before(&b, i);
+                        match hashes {
+                            Some(n) => state = State::RawStr(n),
+                            None => state = State::Str,
+                        }
+                        code.push('"');
+                    }
+                    '\'' => {
+                        // char literal vs lifetime: 'x' or '\...'
+                        let is_char = next == Some('\\')
+                            || (b.get(i + 2).copied() == Some('\'')
+                                && next != Some('\''));
+                        if is_char {
+                            code.push('\'');
+                            state = State::CharLit;
+                        } else {
+                            code.push('\'');
+                        }
+                    }
+                    _ => code.push(c),
+                },
+                State::LineComment => unreachable!("line-scoped"),
+                State::BlockComment(d) => {
+                    if c == '*' && next == Some('/') {
+                        code.push_str("  ");
+                        i += 2;
+                        state = if d > 1 {
+                            State::BlockComment(d - 1)
+                        } else {
+                            State::Normal
+                        };
+                        continue;
+                    } else if c == '/' && next == Some('*') {
+                        code.push_str("  ");
+                        comment.push_str("  ");
+                        i += 2;
+                        state = State::BlockComment(d + 1);
+                        continue;
+                    } else {
+                        code.push(' ');
+                        comment.push(c);
+                    }
+                }
+                State::Str => match c {
+                    '\\' => {
+                        code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    '"' => {
+                        code.push('"');
+                        state = State::Normal;
+                    }
+                    _ => code.push(' '),
+                },
+                State::RawStr(n) => {
+                    if c == '"' && closes_raw(&b, i, n) {
+                        code.push('"');
+                        for _ in 0..n {
+                            code.push('#');
+                        }
+                        i += 1 + n as usize;
+                        state = State::Normal;
+                        continue;
+                    }
+                    code.push(' ');
+                }
+                State::CharLit => match c {
+                    '\\' => {
+                        code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    '\'' => {
+                        code.push('\'');
+                        state = State::Normal;
+                    }
+                    _ => code.push(' '),
+                },
+            }
+            i += 1;
+        }
+
+        // line comments end at EOL, and a char literal never spans
+        // lines (so an open one here is a misread lifetime — recover);
+        // strings (plain with \-continuations, raw) and block
+        // comments carry over
+        match state {
+            State::LineComment | State::CharLit => {
+                state = State::Normal;
+            }
+            _ => {}
+        }
+
+        // second pass over the blanked code: brace depth and
+        // #[cfg(test)] region tracking (must run on `code`, not the
+        // raw line, so braces inside literals/comments don't count)
+        let attr_pos = code.find("#[cfg(test)]");
+        let mut armed = pending_attr;
+        for (ci, c) in code.char_indices() {
+            if attr_pos == Some(ci) {
+                armed = true;
+            }
+            match c {
+                '{' => {
+                    depth += 1;
+                    if armed && test_close_depth.is_none() {
+                        test_close_depth = Some(depth - 1);
+                    }
+                    armed = false;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_close_depth == Some(depth) {
+                        test_close_depth = None;
+                    }
+                }
+                // an attribute consumed by a braceless item
+                ';' => armed = false,
+                _ => {}
+            }
+        }
+        pending_attr = armed;
+
+        let in_test =
+            was_test || test_close_depth.is_some() || pending_attr;
+        lines.push(Line { code, comment, in_test });
+    }
+    lines
+}
+
+/// Is the `"` at `i` preceded by `r`/`br` + exactly the hashes of a
+/// raw-string opener? Returns the hash count if so.
+fn raw_hashes_before(b: &[char], i: usize) -> Option<u32> {
+    let mut j = i;
+    let mut hashes = 0u32;
+    while j > 0 && b[j - 1] == '#' {
+        j -= 1;
+        hashes += 1;
+    }
+    if j == 0 {
+        return None;
+    }
+    let p = b[j - 1];
+    let is_raw = p == 'r'
+        && (j < 2 || !b[j - 2].is_alphanumeric() || b[j - 2] == 'b');
+    if is_raw {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string with `n` hashes?
+fn closes_raw(b: &[char], i: usize, n: u32) -> bool {
+    (1..=n as usize).all(|k| b.get(i + k).copied() == Some('#'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        scan(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_blanked_but_kept_as_comment() {
+        let ls = scan("let x = 1; // HashMap here\nlet y = 2;");
+        assert!(!ls[0].code.contains("HashMap"));
+        assert!(ls[0].comment.contains("HashMap"));
+        assert!(ls[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn string_literals_are_blanked() {
+        let ls = code_of(r#"let s = "Instant::now() inside";"#);
+        assert!(!ls[0].contains("Instant::now"));
+        assert!(ls[0].starts_with("let s = \""));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let ls = code_of(r#"let s = "a \" HashMap b"; let h = 1;"#);
+        assert!(!ls[0].contains("HashMap"));
+        assert!(ls[0].contains("let h = 1;"));
+    }
+
+    #[test]
+    fn plain_strings_span_lines_via_continuation() {
+        // a `\`-continued string: its later lines are still literal
+        // text, and braces inside must not move the scope depth
+        let src = "fn f() -> &'static str {\n\
+                   \"fixture {\\\n\
+                   Rng::new(1 ^ 2) }\\\n\
+                   done\"\n}\nfn g() {}";
+        let ls = scan(src);
+        assert!(!ls[2].code.contains("Rng::new"));
+        assert!(ls[4].code.contains('}'));
+        assert!(ls[5].code.contains("fn g() {}"));
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let src = "let s = r#\"line one HashMap\nline two \
+                   SystemTime\"#;\nlet x = 3;";
+        let ls = code_of(src);
+        assert!(!ls[0].contains("HashMap"));
+        assert!(!ls[1].contains("SystemTime"));
+        assert!(ls[2].contains("let x = 3;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a(); /* outer /* inner HashMap */ still out \
+                   */\nb(); /* open\nSystemTime\n*/ c();";
+        let ls = scan(src);
+        assert!(!ls[0].code.contains("HashMap"));
+        assert!(ls[0].code.contains("a();"));
+        assert!(!ls[2].code.contains("SystemTime"));
+        assert!(ls[2].comment.contains("SystemTime"));
+        assert!(ls[3].code.contains("c();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let ls = code_of(
+            "let q = '\"'; let s = \"HashMap\"; fn f<'a>(x: &'a u8) {}",
+        );
+        // the char literal's quote must not open a string
+        assert!(!ls[0].contains("HashMap"));
+        assert!(ls[0].contains("fn f<'a>(x: &'a u8) {}"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_labeled() {
+        let src = "fn live() { a(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { b(); }\n\
+                   }\n\
+                   fn live2() { c(); }";
+        let ls = scan(src);
+        assert!(!ls[0].in_test);
+        assert!(ls[1].in_test);
+        assert!(ls[2].in_test);
+        assert!(ls[3].in_test);
+        assert!(ls[4].in_test);
+        assert!(!ls[5].in_test);
+    }
+
+    #[test]
+    fn cfg_test_on_single_fn() {
+        let src = "#[cfg(test)]\n\
+                   pub(crate) fn helper(x: usize) -> usize {\n\
+                       x + 1\n\
+                   }\n\
+                   fn live() {}";
+        let ls = scan(src);
+        assert!(ls[1].in_test && ls[2].in_test && ls[3].in_test);
+        assert!(!ls[4].in_test);
+    }
+
+    #[test]
+    fn cfg_test_attr_consumed_by_braceless_item() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { x(); }";
+        let ls = scan(src);
+        assert!(!ls[2].in_test);
+    }
+}

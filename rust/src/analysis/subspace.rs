@@ -1,0 +1,146 @@
+//! Parameter-subspace analysis (paper §3.4, Figures 3–4): the angular
+//! (cosine) distance between pre-trained and fine-tuned weights, per
+//! module type per layer.
+
+use std::collections::BTreeMap;
+
+use crate::train::ParamMap;
+
+/// The six module types the paper inspects.
+pub const MODULES: [&str; 6] = ["wq", "wk", "wv", "wd", "wi", "wo"];
+
+/// Cosine distance 1 - cos(a, b) in [0, 2].
+pub fn cosine_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += (x as f64) * (x as f64);
+        nb += (y as f64) * (y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 0.0 } else { 1.0 };
+    }
+    1.0 - dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Map a parameter name like "h3.attn.wq" / "h0.mlp.wi" to (layer,
+/// module) if it is one of the six tracked matrices.
+pub fn parse_module(name: &str) -> Option<(usize, &'static str)> {
+    let rest = name.strip_prefix('h')?;
+    let (layer_s, tail) = rest.split_once('.')?;
+    let layer: usize = layer_s.parse().ok()?;
+    let module = match tail {
+        "attn.wq" => "wq",
+        "attn.wk" => "wk",
+        "attn.wv" => "wv",
+        "attn.wd" => "wd",
+        "mlp.wi" => "wi",
+        "mlp.wo" => "wo",
+        _ => return None,
+    };
+    Some((layer, module))
+}
+
+/// Figures 3–4 data: module -> per-layer cosine distances between the
+/// pre-trained and fine-tuned parameter sets.
+pub fn subspace_distances(
+    pretrained: &ParamMap,
+    finetuned: &ParamMap,
+) -> BTreeMap<&'static str, Vec<f64>> {
+    let mut layers_by_module: BTreeMap<&'static str, Vec<(usize, f64)>> =
+        BTreeMap::new();
+    for (name, pre) in pretrained {
+        if let Some((layer, module)) = parse_module(name) {
+            let fine = match finetuned.get(name) {
+                Some(f) => f,
+                None => continue,
+            };
+            layers_by_module
+                .entry(module)
+                .or_default()
+                .push((layer, cosine_distance(pre, fine)));
+        }
+    }
+    layers_by_module
+        .into_iter()
+        .map(|(m, mut v)| {
+            v.sort_by_key(|(l, _)| *l);
+            (m, v.into_iter().map(|(_, d)| d).collect())
+        })
+        .collect()
+}
+
+/// Mean distance across all tracked modules (scalar summary used by the
+/// H3 comparison: larger models should move less).
+pub fn mean_distance(pretrained: &ParamMap, finetuned: &ParamMap) -> f64 {
+    let d = subspace_distances(pretrained, finetuned);
+    let all: Vec<f64> = d.values().flatten().copied().collect();
+    if all.is_empty() {
+        return 0.0;
+    }
+    all.iter().sum::<f64>() / all.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_identical_is_zero() {
+        let a = vec![1.0, 2.0, 3.0];
+        assert!(cosine_distance(&a, &a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_orthogonal_is_one() {
+        let a = vec![1.0, 0.0];
+        let b = vec![0.0, 1.0];
+        assert!((cosine_distance(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_opposite_is_two() {
+        let a = vec![1.0, -2.0];
+        let b = vec![-1.0, 2.0];
+        assert!((cosine_distance(&a, &b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_scale_invariant() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![2.0, 4.0, 6.0];
+        assert!(cosine_distance(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_module_names() {
+        assert_eq!(parse_module("h0.attn.wq"), Some((0, "wq")));
+        assert_eq!(parse_module("h11.mlp.wo"), Some((11, "wo")));
+        assert_eq!(parse_module("h2.attn.bq"), None);
+        assert_eq!(parse_module("wte"), None);
+        assert_eq!(parse_module("h0.ln1.g"), None);
+    }
+
+    #[test]
+    fn subspace_collects_per_layer_in_order() {
+        let mut pre = ParamMap::new();
+        let mut fin = ParamMap::new();
+        for l in 0..3 {
+            pre.insert(format!("h{l}.attn.wq"), vec![1.0, 0.0]);
+            // layer l rotated progressively further
+            let theta = 0.3 * l as f32;
+            fin.insert(format!("h{l}.attn.wq"),
+                       vec![theta.cos(), theta.sin()]);
+        }
+        pre.insert("wte".into(), vec![1.0]);
+        fin.insert("wte".into(), vec![-1.0]);
+        let d = subspace_distances(&pre, &fin);
+        let wq = &d["wq"];
+        assert_eq!(wq.len(), 3);
+        assert!(wq[0] < wq[1] && wq[1] < wq[2]);
+        assert!(!d.contains_key("wk"));
+    }
+}

@@ -42,9 +42,15 @@ impl Default for WorldConfig {
     }
 }
 
+/// Salt for the world-build RNG side-stream: corpus/task synthesis
+/// draws stay decoupled from the run streams seeded directly with
+/// `cfg.seed`. Same literal the seed used unnamed, so every pinned
+/// world is unchanged.
+pub const WORLD_SALT: u64 = 0x5bd1_e995;
+
 impl World {
     pub fn build(cfg: &WorldConfig) -> World {
-        let mut rng = Rng::new(cfg.seed ^ 0x5bd1e995);
+        let mut rng = Rng::new(cfg.seed ^ WORLD_SALT);
         let corpus = data::synthpile::corpus(&mut rng, cfg.corpus_words);
         // train the tokenizer on the corpus + downstream lexicon so
         // fine-tuning text stays in-vocabulary

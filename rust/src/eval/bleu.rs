@@ -2,7 +2,7 @@
 //! standard smoothing-free corpus aggregation the official e2e-metrics
 //! script uses (mteval-v13a semantics on pre-tokenized input).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::tokenize::{ngram_counts, tokenize};
 
@@ -32,7 +32,7 @@ pub fn corpus_bleu(pairs: &[(String, Vec<String>)]) -> f64 {
         for n in 1..=MAX_N {
             let hc = ngram_counts(&h, n);
             // clipped counts against the max over references
-            let mut max_ref: HashMap<String, usize> = HashMap::new();
+            let mut max_ref: BTreeMap<String, usize> = BTreeMap::new();
             for r in &rs {
                 for (g, c) in ngram_counts(r, n) {
                     let e = max_ref.entry(g).or_insert(0);

@@ -3,7 +3,7 @@
 //! (CIDEr-D's length-gaussian omitted — the E2E script reports plain
 //! CIDEr).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::tokenize::{ngram_counts, tokenize};
 
@@ -17,11 +17,14 @@ pub fn corpus_cider(pairs: &[(String, Vec<String>)]) -> f64 {
         return 0.0;
     }
     // document frequency per n-gram, over reference *sets* (a gram
-    // counts once per image/instance regardless of which ref has it)
-    let mut df: Vec<HashMap<String, f64>> = vec![HashMap::new(); MAX_N + 1];
+    // counts once per image/instance regardless of which ref has it).
+    // BTreeMap: tf-idf norms and dot products below are f64 sums over
+    // these maps, so iteration order must be deterministic.
+    let mut df: Vec<BTreeMap<String, f64>> =
+        vec![BTreeMap::new(); MAX_N + 1];
     for (_, refs) in pairs {
         for n in 1..=MAX_N {
-            let mut seen: HashMap<String, bool> = HashMap::new();
+            let mut seen: BTreeMap<String, bool> = BTreeMap::new();
             for r in refs {
                 for g in ngram_counts(&tokenize(r), n).into_keys() {
                     seen.insert(g, true);
@@ -34,7 +37,7 @@ pub fn corpus_cider(pairs: &[(String, Vec<String>)]) -> f64 {
     }
     let log_total = (pairs.len() as f64).ln();
 
-    let tfidf = |toks: &[String], n: usize| -> HashMap<String, f64> {
+    let tfidf = |toks: &[String], n: usize| -> BTreeMap<String, f64> {
         let counts = ngram_counts(toks, n);
         let norm: f64 = counts.values().map(|&c| c as f64).sum();
         counts

@@ -10,3 +10,61 @@ pub mod rouge;
 pub mod ter;
 pub mod tokenize;
 pub use tokenize::tokenize;
+
+#[cfg(test)]
+mod determinism {
+    //! Byte-identical eval output (ISSUE 7): NIST/CIDEr accumulate
+    //! f64 sums while iterating n-gram maps, and float addition is
+    //! not associative — when those maps were HashMaps, two
+    //! evaluations of the same corpus could disagree in the last
+    //! bits (std's RandomState draws fresh hash keys per map, so
+    //! even one process sees different orders). The maps are
+    //! BTreeMaps now; this pins the bit-for-bit guarantee.
+
+    use crate::util::json::Json;
+
+    /// A tie-heavy synthetic corpus: many repeated n-grams spread
+    /// over enough distinct keys that any order-sensitive sum would
+    /// wobble in the low bits.
+    fn corpus() -> Vec<(String, Vec<String>)> {
+        let words = ["the", "cat", "sat", "mat", "dog", "log", "on",
+                     "a", "near", "ran"];
+        (0..24)
+            .map(|i| {
+                let w = |k: usize| words[(i * 3 + k * 7) % words.len()];
+                let hyp = format!("{} {} {} {} {} {}",
+                                  w(0), w(1), w(2), w(0), w(3), w(4));
+                let r1 = format!("{} {} {} {} {} {}",
+                                 w(0), w(1), w(2), w(5), w(3), w(4));
+                let r2 = format!("{} {} {} {}", w(2), w(1), w(0), w(4));
+                (hyp, vec![r1, r2])
+            })
+            .collect()
+    }
+
+    fn eval_json(pairs: &[(String, Vec<String>)]) -> String {
+        let mut j = Json::obj();
+        j.push_num("bleu", super::bleu::corpus_bleu(pairs))
+            .push_num("nist", super::nist::corpus_nist(pairs))
+            .push_num("meteor", super::meteor::corpus_meteor(pairs))
+            .push_num("rouge_l", super::rouge::corpus_rouge_l(pairs))
+            .push_num("cider", super::cider::corpus_cider(pairs))
+            .push_num("ter", super::ter::corpus_ter(pairs));
+        j.to_string_pretty()
+    }
+
+    #[test]
+    fn eval_json_is_byte_identical_across_runs() {
+        let pairs = corpus();
+        let first = eval_json(&pairs);
+        for _ in 0..3 {
+            assert_eq!(eval_json(&pairs), first,
+                       "eval JSON must be byte-identical run to run");
+        }
+        // and the raw scores bit-for-bit, not just display-rounded
+        assert_eq!(super::nist::corpus_nist(&pairs).to_bits(),
+                   super::nist::corpus_nist(&pairs).to_bits());
+        assert_eq!(super::cider::corpus_cider(&pairs).to_bits(),
+                   super::cider::corpus_cider(&pairs).to_bits());
+    }
+}

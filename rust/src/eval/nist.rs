@@ -6,7 +6,7 @@
 //! corpus; scores are summed per n (1..=5), divided by hypothesis
 //! n-gram counts, and summed over n with the NIST brevity penalty.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::tokenize::{ngram_counts, tokenize};
 
@@ -16,8 +16,10 @@ const BETA_LN: f64 = -4.3218010520282677; // ln(0.5)/ln(1.5)^2 per mteval
 /// Corpus NIST over (hypothesis, references) pairs.
 pub fn corpus_nist(pairs: &[(String, Vec<String>)]) -> f64 {
     // 1) reference-corpus n-gram statistics for information weights
-    let mut ref_counts: Vec<HashMap<String, usize>> =
-        vec![HashMap::new(); MAX_N + 1];
+    // (BTreeMap: info_sum below is an order-sensitive f64 accumulation
+    // over these maps, so iteration order must be deterministic)
+    let mut ref_counts: Vec<BTreeMap<String, usize>> =
+        vec![BTreeMap::new(); MAX_N + 1];
     let mut total_ref_words = 0usize;
     for (_, refs) in pairs {
         for r in refs {
@@ -67,7 +69,7 @@ pub fn corpus_nist(pairs: &[(String, Vec<String>)]) -> f64 {
         ref_len_acc += avg_ref.round() as usize;
         for n in 1..=MAX_N {
             let hc = ngram_counts(&h, n);
-            let mut max_ref: HashMap<String, usize> = HashMap::new();
+            let mut max_ref: BTreeMap<String, usize> = BTreeMap::new();
             for r in &rs {
                 for (g, c) in ngram_counts(r, n) {
                     let e = max_ref.entry(g).or_insert(0);

@@ -34,10 +34,14 @@ pub fn ngrams(tokens: &[String], n: usize) -> Vec<String> {
     tokens.windows(n).map(|w| w.join(" ")).collect()
 }
 
-/// Count map of n-grams.
+/// Count map of n-grams. Ordered (`BTreeMap`) on purpose: every
+/// metric iterates these counts into f64 accumulations, and float
+/// addition is not associative — hash-order iteration made NIST/CIDEr
+/// scores differ across processes. Ordered iteration keeps eval JSON
+/// byte-identical run to run.
 pub fn ngram_counts(tokens: &[String], n: usize)
-                    -> std::collections::HashMap<String, usize> {
-    let mut map = std::collections::HashMap::new();
+                    -> std::collections::BTreeMap<String, usize> {
+    let mut map = std::collections::BTreeMap::new();
     for g in ngrams(tokens, n) {
         *map.entry(g).or_insert(0) += 1;
     }

@@ -417,9 +417,12 @@ impl<'a> DecodeEngine<'a> {
                     }
                 }
             }
-            candidates.sort_by(|a, c| {
-                c.logp.partial_cmp(&a.logp).unwrap()
-            });
+            // total_cmp: ordering is identical to the oracle's
+            // partial_cmp sort on real (finite) logps — ties keep
+            // insertion order under both, so beam selection stays
+            // bitwise equal to generate::reference — but a NaN logp
+            // accumulation can no longer panic the serve path
+            candidates.sort_by(|a, c| c.logp.total_cmp(&a.logp));
             candidates.truncate(k);
             beams = candidates;
             if finished.len() >= 2 * k {
@@ -437,7 +440,7 @@ impl<'a> DecodeEngine<'a> {
                 let lc = c.logp
                     / ((c.seq.len() - plen).max(1) as f64)
                         .powf(dp.length_penalty);
-                la.partial_cmp(&lc).unwrap()
+                la.total_cmp(&lc)
             })
             .map(|bm| bm.seq[plen..].to_vec())
             .unwrap_or_default();
@@ -468,5 +471,81 @@ impl<'a> DecodeEngine<'a> {
                       cfg: &super::serve::ServeConfig)
                       -> anyhow::Result<super::ServeReport> {
         super::serve::core::serve_with(self, requests, dp, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! The beam comparators' NaN-safety regressions (ISSUE 7). The
+    //! full engine-vs-reference bitwise pin lives in
+    //! `tests/integration_runtime.rs`; these cover the comparator
+    //! semantics the pin relies on, artifact-free.
+
+    use crate::util::rng::Rng;
+
+    /// The frozen oracle comparator (`generate::reference`): stable
+    /// descending sort via `partial_cmp().unwrap()`.
+    fn oracle_desc(xs: &[f64]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        order.sort_by(|&a, &c| xs[c].partial_cmp(&xs[a]).unwrap());
+        order
+    }
+
+    fn total_desc(xs: &[f64]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        order.sort_by(|&a, &c| xs[c].total_cmp(&xs[a]));
+        order
+    }
+
+    #[test]
+    fn beam_sort_matches_oracle_on_finite_logps() {
+        // real beam logps: finite, negative, tie-heavy when snapped —
+        // the stable descending orders must agree index-for-index
+        crate::util::proptest::check(
+            13, 80, 48,
+            |rng: &mut Rng, size: usize| {
+                let n = 1 + rng.below(size);
+                let snap = rng.below(2) == 0;
+                (0..n)
+                    .map(|_| {
+                        let x = -(rng.uniform() * 20.0 + 1e-3);
+                        if snap { (x * 4.0).round() / 4.0 } else { x }
+                    })
+                    .collect::<Vec<f64>>()
+            },
+            |xs| total_desc(xs) == oracle_desc(xs),
+        );
+    }
+
+    #[test]
+    fn beam_sort_no_longer_panics_on_nan() {
+        // pre-ISSUE-7 this was the partial_cmp().unwrap() panic; now
+        // the NaN orders deterministically and finite beams keep
+        // their relative oracle order
+        let xs = [-1.0, f64::NAN, -0.5, -1.0];
+        let order = total_desc(&xs);
+        let finite: Vec<usize> =
+            order.iter().copied().filter(|&i| i != 1).collect();
+        assert_eq!(finite, vec![2, 0, 3]);
+    }
+
+    #[test]
+    fn length_penalty_selection_matches_oracle_max() {
+        // max_by(total_cmp) equals max_by(partial_cmp().unwrap()) on
+        // finite penalized scores (the selection at the end of beam())
+        let scores = [-2.5, -0.25, -7.0, -0.25, -3.0];
+        let oracle = scores
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, c)| a.partial_cmp(c).unwrap())
+            .map(|(i, _)| i);
+        let total = scores
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, c)| a.total_cmp(c))
+            .map(|(i, _)| i);
+        assert_eq!(total, oracle);
+        // ties: max_by keeps the *last* maximal element under both
+        assert_eq!(total, Some(3));
     }
 }

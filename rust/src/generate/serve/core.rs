@@ -37,8 +37,6 @@
 //! virtual clock), and [`serve_with`] (everything explicit via
 //! [`ServeConfig`]).
 
-use std::time::Instant;
-
 use crate::generate::engine::DecodeEngine;
 use crate::generate::{topk, DecodeParams};
 use crate::runtime::SessionState;
@@ -543,7 +541,6 @@ pub fn run_lanes_with(
                          (got {d})");
     }
 
-    let t0 = Instant::now();
     let mut clock = Clock::new(schedule);
     let mut pending = ArrivalQueue::new(requests.len(), schedule);
     // (lane, result) pairs — the lane tag feeds the per-model stats
@@ -558,7 +555,7 @@ pub fn run_lanes_with(
     let mut degraded: Vec<bool> = vec![false; requests.len()];
 
     loop {
-        let now = clock.now_ms(&t0);
+        let now = clock.now_ms();
 
         // Admission: arrivals up to `now` are enqueued or shed;
         // queued requests past the deadline expire. Loop to a
@@ -781,7 +778,7 @@ pub fn run_lanes_with(
             if occupied == 0 || lane.dead {
                 continue;
             }
-            let lane_now = clock.now_ms(&t0);
+            let lane_now = clock.now_ms();
             if lane_now < lane.retry_at || lane_now < lane.open_until {
                 // backing off after a transient failure, or cooling
                 // down an open breaker
@@ -818,7 +815,7 @@ pub fn run_lanes_with(
             clock.on_step();
 
             if attempt_err.is_some() {
-                let now = clock.now_ms(&t0);
+                let now = clock.now_ms();
                 lane.consec_fail = lane.consec_fail.saturating_add(1);
                 let fb = recovery.fallback.get(l).copied().flatten();
                 if !backend.healthy() {
@@ -956,7 +953,7 @@ pub fn run_lanes_with(
             if spike > 0.0 {
                 clock.advance(spike);
             }
-            let now = clock.now_ms(&t0);
+            let now = clock.now_ms();
 
             let (t, vocab) = (lane.t, lane.vocab);
             for s in 0..lane.b {
@@ -995,11 +992,12 @@ pub fn run_lanes_with(
                     done
                 };
                 if finished {
+                    // invariant: recovery drains only run on failed
+                    // attempts, never after the successful step that
+                    // set `finished`, so the slot is still occupied.
                     let slot = lane.slots[s].take().expect(
                         "slot emptied between the finished-edge check \
-                         and result emission — the recovery drains \
-                         only run on failed attempts, never after a \
-                         successful step",
+                         and result emission",
                     );
                     let arrival = pending.arrival_of(slot.req);
                     let lane_idx = route[slot.req];
@@ -1080,13 +1078,13 @@ pub fn run_lanes_with(
                 "request queue deadlocked: requests remain but every \
                  lane able to serve them is dead"
             );
-            clock.wait_until(wake, &t0);
+            clock.wait_until(wake);
         }
     }
 
     results.sort_by_key(|(_, r)| r.id);
-    let wall_secs = t0.elapsed().as_secs_f64();
-    let sim_ms = clock.now_ms(&t0);
+    let wall_secs = clock.wall_secs();
+    let sim_ms = clock.now_ms();
 
     let total_batch: usize = lanes.iter().map(|ln| ln.b).sum();
     let engine_steps: u64 =

@@ -20,6 +20,9 @@ use std::cmp::Ordering;
 /// exactly like the old `partial_cmp(..).unwrap()` sort did.
 #[inline]
 fn cmp_desc(row: &[f32], a: u32, b: u32) -> Ordering {
+    // lint:allow(float-sort) must keep the frozen oracle's exact tie
+    // semantics (±0.0 compare Equal, index breaks the tie); invariant:
+    // logits are finite by construction, NaN panics by contract
     row[b as usize]
         .partial_cmp(&row[a as usize])
         .expect("NaN logit in decode")
@@ -49,6 +52,8 @@ pub fn argmax(row: &[f32]) -> u32 {
     debug_assert!(!row.is_empty());
     let mut best = 0u32;
     for (i, &x) in row.iter().enumerate().skip(1) {
+        // lint:allow(float-sort) same tie/panic contract as cmp_desc;
+        // invariant: logits are finite by construction
         if x.partial_cmp(&row[best as usize])
             .expect("NaN logit in decode")
             == Ordering::Greater

@@ -10,6 +10,7 @@
 //!   serve       continuous-batching decode over a request stream
 //!   loadgen     arrival-time load generator: latency-under-load sweep
 //!   subspace    Figures 3–4 cosine-distance analysis
+//!   lint        determinism & panic-safety static analysis
 //!   gen-data    dump synthetic task examples (inspection/demo)
 
 use std::path::PathBuf;
@@ -47,6 +48,7 @@ fn main() {
         "serve" => cmd_serve(rest),
         "loadgen" => cmd_loadgen(rest),
         "subspace" => cmd_subspace(rest),
+        "lint" => cmd_lint(rest),
         "gen-data" => cmd_gen_data(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -79,6 +81,7 @@ fn print_help() {
            loadgen     arrival-time load generator \
            (latency-under-load sweep)\n\
            subspace    Figures 3-4 cosine-distance analysis\n\
+           lint        determinism & panic-safety static analysis\n\
            gen-data    dump synthetic task examples\n\n\
          run `spdf <command> --help` for flags"
     );
@@ -1183,6 +1186,35 @@ fn cmd_subspace(raw: &[String]) -> anyhow::Result<()> {
     println!("mean distance: {:.4}",
              spdf::analysis::mean_distance(&pre_params,
                                            &ft.state.params));
+    Ok(())
+}
+
+fn cmd_lint(raw: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "spdf lint",
+        "determinism & panic-safety static analysis over the source \
+         tree (float-sort, unordered, wall-clock, panic-safety, \
+         rng-discipline)")
+        .flag("root", "",
+              "source root to scan (default: this crate's src/)")
+        .flag("json", "",
+              "also write the machine-readable report to this path");
+    let a = cli.parse(raw)?;
+    let root = if a.get("root").is_empty() {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+    } else {
+        PathBuf::from(a.get("root"))
+    };
+    let cfg = spdf::analysis::lint::LintConfig::repo_default();
+    let rep = spdf::analysis::lint::run(&root, &cfg)?;
+    print!("{}", rep.render());
+    if !a.get("json").is_empty() {
+        std::fs::write(a.get("json"),
+                       rep.to_json().to_string_pretty())?;
+        eprintln!("[spdf] lint report written to {}", a.get("json"));
+    }
+    anyhow::ensure!(rep.is_clean(),
+                    "{} lint finding(s)", rep.findings.len());
     Ok(())
 }
 

@@ -89,9 +89,10 @@ impl MaskSet {
             let n = w.len();
             let n_zero = (sparsity * n as f64).round() as usize;
             let mut idx: Vec<usize> = (0..n).collect();
-            idx.sort_by(|&a, &b| {
-                w[a].abs().partial_cmp(&w[b].abs()).unwrap()
-            });
+            // total_cmp: a NaN weight (diverged init) must not panic
+            // the pruner; |NaN| sorts above every finite |w|, so it is
+            // kept, not silently pruned
+            idx.sort_by(|&a, &b| w[a].abs().total_cmp(&w[b].abs()));
             let mut mask = vec![1.0f32; n];
             for &i in idx.iter().take(n_zero) {
                 mask[i] = 0.0;
@@ -317,6 +318,26 @@ mod tests {
         assert!(mask[n / 2..].iter().all(|&x| x == 1.0));
         ms.apply(&mut params);
         ms.check_holes_zero(&params).unwrap();
+    }
+
+    #[test]
+    fn magnitude_nan_weight_does_not_panic() {
+        // regression (ISSUE 7): the |w| sort used
+        // partial_cmp().unwrap() and panicked on a NaN weight;
+        // total_cmp keeps it (|NaN| sorts above every finite |w|)
+        let m = tiny_manifest();
+        let mut params: BTreeMap<String, Vec<f32>> = m
+            .params
+            .iter()
+            .map(|p| (p.name.clone(),
+                      (0..p.elems()).map(|i| i as f32).collect()))
+            .collect();
+        params.get_mut("h0.attn.wq").unwrap()[0] = f32::NAN;
+        let ms = MaskSet::magnitude(&m, 0.5, &params);
+        let mask = &ms.masks["h0.attn.wq"];
+        // the NaN weight is kept, not silently pruned
+        assert_eq!(mask[0], 1.0);
+        assert!((ms.realized_sparsity() - 0.5).abs() < 0.01);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! simulation vocab (512). Words are whitespace-delimited with a leading
 //! space marker byte, like GPT-2's 'Ġ'.
 
+// lint:allow(unordered) both HashMap uses below are order-blind:
+// merge_map is lookup-only, pair counts resolve by a total tie-break
 use std::collections::{BTreeMap, HashMap};
 
 use crate::util::json::Json;
@@ -25,6 +27,8 @@ pub struct Tokenizer {
     /// merge rules in training order: (left, right) -> new id
     merges: Vec<(u32, u32)>,
     /// lookup: pair -> (rank, merged id)
+    // lint:allow(unordered) lookup-only: never iterated, so its order
+    // cannot reach encode output
     merge_map: HashMap<(u32, u32), (usize, u32)>,
 }
 
@@ -54,6 +58,9 @@ impl Tokenizer {
         let mut next_id = BYTE_BASE + 256;
         while (next_id as usize) < vocab_size {
             // count all adjacent pairs
+            // lint:allow(unordered) iterated only via the max_by_key
+            // below, whose (count, pair-id) key is a total order — the
+            // argmax is the same under any iteration order
             let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
             for (toks, f) in &words {
                 for win in toks.windows(2) {

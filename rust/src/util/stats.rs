@@ -64,7 +64,9 @@ pub fn summarize(xs: &[f64]) -> Summary {
         0.0
     };
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a 0/0 rate from an empty bucket)
+    // sorts to the tail instead of panicking mid-report
+    sorted.sort_by(|a, b| a.total_cmp(b));
     Summary {
         n,
         mean,
@@ -121,7 +123,7 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -238,6 +240,27 @@ mod tests {
         let xs = [1.0, 1.0, 2.0];
         let r = ranks(&xs);
         assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn summarize_nan_does_not_panic() {
+        // regression (ISSUE 7): the percentile sort used
+        // partial_cmp().unwrap() and panicked on a NaN sample (a 0/0
+        // rate from an empty bucket); total_cmp orders NaN to the tail
+        let s = summarize(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn ranks_nan_does_not_panic() {
+        // same regression for the Spearman rank sort: NaN ranks last
+        let r = ranks(&[3.0, f64::NAN, 1.0]);
+        assert_eq!(r[2], 1.0);
+        assert_eq!(r[0], 2.0);
+        assert_eq!(r[1], 3.0);
     }
 
     #[test]

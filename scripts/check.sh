@@ -4,6 +4,8 @@
 #   scripts/check.sh                 full gate
 #   SKIP_CLIPPY=1 scripts/check.sh   when clippy is unavailable
 #   SKIP_FMT=1 scripts/check.sh      when rustfmt is unavailable
+#   SKIP_LINT=1 scripts/check.sh     skip the spdf lint pass (only
+#                                    while bisecting — CI runs it)
 #   BENCH_GATE_REFRESH=1 ...         refresh bench_baselines/ after an
 #                                    intentional perf change (commit
 #                                    the result)
@@ -41,8 +43,13 @@ if [ "${SKIP_FMT:-0}" != "1" ]; then
 fi
 
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
-    echo "== cargo clippy -- -D warnings =="
-    cargo clippy -- -D warnings
+    echo "== cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+fi
+
+if [ "${SKIP_LINT:-0}" != "1" ]; then
+    echo "== spdf lint (determinism & panic-safety) =="
+    cargo run --release --quiet -- lint
 fi
 
 for f in "${BENCH_FILES[@]}"; do
