@@ -1,10 +1,12 @@
 """L1 Pallas kernels for the SPDF stack (build-time only).
 
 Exports:
-  masked_matmul    -- x @ (mask * w) as a tiled Pallas kernel w/ custom VJP
-  pallas_matmul    -- plain tiled Pallas matmul (used by the VJP)
-  causal_attention -- fused causal attention Pallas kernel (inference path)
-  kernel_stats     -- analytic VMEM / MXU-utilization estimates for a tiling
+  masked_matmul       -- x @ (mask * w) as a tiled Pallas kernel w/ custom VJP
+  pallas_matmul       -- plain tiled Pallas matmul (used by the VJP)
+  sparse_pallas_matmul-- CSR-fed block-skipping matmul, bitwise == dense
+  causal_attention    -- fused causal attention Pallas kernel (inference path)
+  kernel_stats        -- analytic VMEM / MXU-utilization estimates for a tiling
+  sparse_kernel_stats -- kernel_stats + block-skip FLOPs and CSR byte savings
 """
 
 from .masked_matmul import (
@@ -13,6 +15,14 @@ from .masked_matmul import (
     pick_blocks,
     kernel_stats,
 )
+from .sparse_matmul import (
+    Csr,
+    csr_from_dense,
+    csr_to_dense,
+    sparse_pallas_matmul,
+    sparse_kernel_stats,
+    block_nonzero_map,
+)
 from .attention import causal_attention
 
 __all__ = [
@@ -20,5 +30,11 @@ __all__ = [
     "pallas_matmul",
     "pick_blocks",
     "kernel_stats",
+    "Csr",
+    "csr_from_dense",
+    "csr_to_dense",
+    "sparse_pallas_matmul",
+    "sparse_kernel_stats",
+    "block_nonzero_map",
     "causal_attention",
 ]

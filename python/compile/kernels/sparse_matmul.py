@@ -1,0 +1,228 @@
+"""CSR-fed block-sparse matmul as a Pallas kernel, bitwise-pinned to dense.
+
+The serving side (rust `runtime::LiteralCache`) holds sparse-pre-trained
+checkpoints as CSR and the decode step computes ``y = x @ W`` where most
+of ``W`` is zero.  This kernel is the compute mirror of that storage
+decision: the weight matrix is tiled exactly like ``pallas_matmul`` and
+an int32 **block-nonzero map** (one count per ``(bk, bn)`` weight tile,
+derived from the CSR structure) lets the kernel skip the dot-accumulate
+for tiles that hold no nonzeros.
+
+The skip is *bitwise* invisible, not approximately so.  The output tile
+is a float32 accumulator initialized to +0.0, and in IEEE-754
+round-to-nearest arithmetic adding a product of an all-zero weight tile
+can only add ``+0.0`` or ``-0.0`` to each accumulator element:
+
+* ``acc + (+-0.0) == acc`` bit-for-bit whenever ``acc`` is nonzero, and
+* the accumulator can never itself be ``-0.0`` (it starts at ``+0.0``
+  and a float32 sum only produces ``-0.0`` when *both* addends are
+  ``-0.0``), so ``+0.0 + (-0.0) == +0.0`` covers the zero case.
+
+Dropping an all-zero tile therefore changes time, never bits — the same
+argument by which rust's ``Csr::spmm`` skips stored zeros yet stays
+bit-identical to ``dense_matmul``.  The one caveat: the products are
+only ±0 for *finite* activations.  A NaN/Inf activation lined up
+against an all-zero weight tile would be manufactured into NaN by the
+dense path (``NaN * 0 = NaN``); the sparse path's skip is the
+semantically correct behaviour there, and the tests pin both the
+identical NaN propagation through *nonzero* tiles and the divergence on
+skipped ones.  The pin enforced by the tests is
+
+    sparse_pallas_matmul(x, csr) == pallas_matmul(x, csr_to_dense(csr))
+
+with NumPy bit-pattern equality (``float32.view(uint32)``), for every
+checkpoint sparsity in the SPDF sweep.  (Note the pin is against the
+*same tiling*: the blocked accumulation order differs from the k-major
+order of ``spmm_ref`` below, so those two references are each bitwise
+against their own dense mirror, not against each other.)
+
+Like every kernel in this package the Pallas call is lowered with
+``interpret=True`` so the HLO runs on any PJRT backend, including the
+rust CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .masked_matmul import kernel_stats, pick_blocks
+
+
+# ---------------------------------------------------------------------------
+# CSR host format (mirror of rust `sparse_compute::Csr`)
+# ---------------------------------------------------------------------------
+
+class Csr:
+    """Row-major CSR with the exact semantics of rust ``Csr::from_dense``:
+    stored entries are the values ``v != 0.0`` — which drops ``-0.0`` too,
+    since ``-0.0 != 0.0`` is false — so ``to_dense`` is an exact inverse.
+    """
+
+    def __init__(self, rows, cols, row_ptr, col_idx, values):
+        self.rows = int(rows)
+        self.cols = int(cols)
+        self.row_ptr = np.asarray(row_ptr, dtype=np.int64)
+        self.col_idx = np.asarray(col_idx, dtype=np.int32)
+        self.values = np.asarray(values, dtype=np.float32)
+
+    @property
+    def nnz(self):
+        return int(self.values.size)
+
+    def density(self):
+        total = self.rows * self.cols
+        return self.nnz / total if total else 0.0
+
+
+def csr_from_dense(w):
+    """Compress a dense (k, n) float32 matrix, dropping exact zeros."""
+    w = np.asarray(w, dtype=np.float32)
+    assert w.ndim == 2, f"expected a matrix, got shape {w.shape}"
+    rows, cols = w.shape
+    # `w != 0.0` is the rust keep-predicate verbatim (False for -0.0).
+    keep = w != 0.0
+    row_ptr = np.zeros(rows + 1, dtype=np.int64)
+    np.cumsum(keep.sum(axis=1), out=row_ptr[1:])
+    col_idx = np.nonzero(keep)[1].astype(np.int32)
+    return Csr(rows, cols, row_ptr, col_idx, w[keep])
+
+
+def csr_to_dense(csr):
+    """Exact inverse of :func:`csr_from_dense` (bit-for-bit)."""
+    out = np.zeros((csr.rows, csr.cols), dtype=np.float32)
+    for r in range(csr.rows):
+        lo, hi = csr.row_ptr[r], csr.row_ptr[r + 1]
+        out[r, csr.col_idx[lo:hi]] = csr.values[lo:hi]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Elementwise references (ports of rust spmm / dense_matmul)
+# ---------------------------------------------------------------------------
+
+def spmm_ref(csr, b):
+    """Port of rust ``Csr::spmm``: ``csr.to_dense() @ b`` walking stored
+    entries in k-major order per output row (f32 mul then add, no FMA)."""
+    b = np.asarray(b, dtype=np.float32)
+    assert b.shape[0] == csr.cols
+    out = np.zeros((csr.rows, b.shape[1]), dtype=np.float32)
+    for r in range(csr.rows):
+        for e in range(csr.row_ptr[r], csr.row_ptr[r + 1]):
+            out[r] += csr.values[e] * b[csr.col_idx[e]]
+    return out
+
+
+def dense_matmul_ref(a, b):
+    """Port of rust ``dense_matmul``: same k-major loop over *all* of
+    ``a``, skipping ``av == 0.0`` (true for -0.0 as well) — the dense
+    mirror that :func:`spmm_ref` must match bitwise."""
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    out = np.zeros((a.shape[0], b.shape[1]), dtype=np.float32)
+    for r in range(a.shape[0]):
+        for k in range(a.shape[1]):
+            av = a[r, k]
+            if av == 0.0:
+                continue
+            out[r] += av * b[k]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse Pallas kernel
+# ---------------------------------------------------------------------------
+
+def block_nonzero_map(csr, bk, bn):
+    """Per-tile stored-entry counts, shape ``(k // bk, n // bn)`` int32.
+
+    Built from the CSR structure directly (row_ptr/col_idx), not from a
+    densified copy — the map is the kernel-facing summary of what the
+    storage layer already knows.
+    """
+    k, n = csr.rows, csr.cols
+    assert k % bk == 0 and n % bn == 0, \
+        f"blocks ({bk},{bn}) must divide weight dims ({k},{n})"
+    nz = np.zeros((k // bk, n // bn), dtype=np.int32)
+    for r in range(k):
+        lo, hi = csr.row_ptr[r], csr.row_ptr[r + 1]
+        tiles, counts = np.unique(csr.col_idx[lo:hi] // bn,
+                                  return_counts=True)
+        nz[r // bk, tiles] += counts.astype(np.int32)
+    return nz
+
+
+def _sparse_mm_kernel(x_ref, w_ref, nz_ref, o_ref, *, nk):
+    """Tiled matmul that skips all-zero weight tiles.
+
+    Identical to ``_mm_kernel`` except the dot-accumulate is predicated
+    on the tile's nonzero count — bitwise-safe by the +0-accumulator
+    argument in the module docstring."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(nz_ref[0, 0] > 0)
+    def _accumulate():
+        o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                              preferred_element_type=jnp.float32)
+
+
+def sparse_pallas_matmul(x, csr, blocks=None):
+    """``x @ csr.to_dense()`` via the block-skipping Pallas kernel.
+
+    Bitwise-equal to ``pallas_matmul(x, csr_to_dense(csr))`` at the same
+    ``blocks`` — the dense-equivalence pin (see module docstring)."""
+    m, k = x.shape
+    assert k == csr.rows, f"inner dims mismatch: {k} vs {csr.rows}"
+    n = csr.cols
+    if blocks is None:
+        blocks = pick_blocks(m, n, k, n_operands=2)
+    bm, bn, bk = blocks
+    grid = (m // bm, n // bn, k // bk)
+    w = jnp.asarray(csr_to_dense(csr))
+    nz = jnp.asarray(block_nonzero_map(csr, bk, bn))
+    return pl.pallas_call(
+        functools.partial(_sparse_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, nz)
+
+
+def sparse_kernel_stats(m, csr, blocks=None):
+    """:func:`kernel_stats` for the sparse decode step, extended with
+    what the block skip and the CSR residency actually buy.
+
+    Adds to the dense-kernel dict:
+      ``nonzero_tiles`` / ``total_tiles`` — block-map occupancy,
+      ``flops``          — rescaled by the visited-tile fraction,
+      ``dense_flops``    — the unskipped count, for the ratio,
+      ``csr_bytes`` / ``dense_bytes`` — host residency cost (CSR layout
+      as in rust ``SlotResidency::host_bytes``: 8 bytes per stored
+      entry + 8 per row-pointer vs 4 per dense element).
+    """
+    k, n = csr.rows, csr.cols
+    stats = kernel_stats(m, n, k, blocks=blocks, masked=False)
+    bm, bn, bk = stats["blocks"]
+    nz = block_nonzero_map(csr, bk, bn)
+    total_tiles = int(nz.size)
+    nonzero_tiles = int(np.count_nonzero(nz))
+    visited = nonzero_tiles / total_tiles if total_tiles else 0.0
+    stats["nonzero_tiles"] = nonzero_tiles
+    stats["total_tiles"] = total_tiles
+    stats["dense_flops"] = stats["flops"]
+    stats["flops"] = int(stats["dense_flops"] * visited)
+    stats["csr_bytes"] = 8 * csr.nnz + 8 * (csr.rows + 1)
+    stats["dense_bytes"] = 4 * csr.rows * csr.cols
+    return stats

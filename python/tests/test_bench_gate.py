@@ -113,6 +113,34 @@ def fault_json():
     }
 
 
+def sparse_variant(requests=32, tokens=1024, tpv=100.0):
+    return {
+        "model": "s75",
+        "engine": "literal",
+        "requests": requests,
+        "completed": requests,
+        "generated_tokens": tokens,
+        "tokens_per_vsec": tpv,
+    }
+
+
+def sparse_json(measured=4.0, required=2.0):
+    return {
+        "sparsity": 0.75,
+        "sparse_slots": 12,
+        "step_scale": 0.25,
+        "csr_host_bytes": 100_000,
+        "dense_equiv_bytes": 160_000,
+        "flops_speedup": 4.0,
+        "required_speedup": required,
+        "measured_speedup": measured,
+        "dense_tokens_per_vsec": 100.0,
+        "s75_tokens_per_vsec": 100.0 * measured,
+        "dense": sparse_variant(tpv=100.0),
+        "s75": sparse_variant(tpv=100.0 * measured),
+    }
+
+
 def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
                     goodput=500.0):
     return {
@@ -125,6 +153,7 @@ def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
         },
         "multi_model": multi_model_json(),
         "fault": fault_json(),
+        "sparse": sparse_json(),
         "points": [
             point("literal", p95, p95 / 2, goodput=goodput),
             point("kv", p95 * 0.8, p95 / 3, goodput=goodput * 1.2),
@@ -476,6 +505,101 @@ class TestFaultGates:
         cur = serve_load_json()
         base = serve_load_json()
         del base["fault"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert fails == []
+
+
+class TestSparseGates:
+    def test_missing_sparse_leg_fails(self):
+        # the smoke must run the CSR-resident sparse leg — with no
+        # baseline at all its absence is already a hard failure
+        cur = serve_load_json()
+        del cur["sparse"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("sparse: block missing" in f for f in fails)
+
+    def test_truncated_sparse_leg_fails(self):
+        # a keyless block would silently disable the speedup gate
+        cur = serve_load_json()
+        del cur["sparse"]["measured_speedup"]
+        del cur["sparse"]["required_speedup"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("sparse: missing" in f for f in fails)
+        # both routed runs must be present with their counters
+        cur = serve_load_json()
+        del cur["sparse"]["s75"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("missing s75 datapoint" in f for f in fails)
+        cur = serve_load_json()
+        del cur["sparse"]["dense"]["tokens_per_vsec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("sparse.dense: missing tokens_per_vsec" in f
+                   for f in fails)
+
+    def test_speedup_below_required_fails_absolutely(self):
+        # the acceptance gate: s75 tokens/vs over dense tokens/vs must
+        # be at least sqrt of the FLOPs ratio — with no baseline at all
+        cur = serve_load_json()
+        cur["sparse"] = sparse_json(measured=1.5, required=2.0)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("measured speedup" in f for f in fails)
+
+    def test_incomplete_routed_run_fails(self):
+        # the leg serves an unbounded queue: a dropped request means
+        # the registry loop lost it, not that load was shed
+        cur = serve_load_json()
+        cur["sparse"]["s75"]["completed"] -= 1
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("sparse.s75" in f and "must" in f for f in fails)
+
+    def test_csr_residency_must_save_bytes(self):
+        # holding the checkpoint CSR-resident must actually beat the
+        # dense byte cost at the sweep's sparsity
+        cur = serve_load_json()
+        cur["sparse"]["csr_host_bytes"] = \
+            cur["sparse"]["dense_equiv_bytes"] + 1
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("residency" in f for f in fails)
+
+    def test_measured_speedup_relative_regression_fails(self):
+        # beyond the absolute floor, a big drop vs the committed
+        # baseline is still a regression (e.g. a clock calibration
+        # change that halves the sparse advantage)
+        base = serve_load_json()
+        base["sparse"] = sparse_json(measured=8.0)
+        fails, _ = gate.check_file("BENCH_serve_load.json",
+                                   serve_load_json(), base, 0.25)
+        assert any("sparse.measured_speedup" in f for f in fails)
+
+    def test_refresh_refuses_missing_sparse_leg(self, tmp_path,
+                                                monkeypatch):
+        # REFRESH must not bake a sparse-leg-less file into the
+        # committed baseline (which would disable the gates forever)
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        noleg = serve_load_json()
+        del noleg["sparse"]
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(noleg))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_baseline_without_sparse_leg_is_tolerated(self):
+        # old committed baselines predate the sparse leg: the checks
+        # are fresh-side only and the relative speedup gate skips
+        cur = serve_load_json()
+        base = serve_load_json()
+        del base["sparse"]
         fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
                                    0.25)
         assert fails == []

@@ -8,12 +8,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # Minimal environments (no hypothesis) still run every deterministic
+    # test; the property sweeps skip. CI installs requirements.txt, so
+    # the sweeps always run there.
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(**_kw):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    class _SampledStrategies:
+        @staticmethod
+        def sampled_from(xs):
+            return xs
+
+        @staticmethod
+        def integers(lo, hi):
+            return (lo, hi)
+
+    st = _SampledStrategies()
 
 from compile.kernels import (masked_matmul, pallas_matmul, causal_attention,
-                             pick_blocks, kernel_stats)
+                             pick_blocks, kernel_stats, csr_from_dense,
+                             csr_to_dense, sparse_pallas_matmul,
+                             sparse_kernel_stats, block_nonzero_map)
 from compile.kernels import ref
 from compile.kernels.masked_matmul import _masked_matmul_impl, _tile_bytes
+from compile.kernels.sparse_matmul import spmm_ref, dense_matmul_ref
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -132,6 +158,185 @@ class TestPallasMatmul:
 # ---------------------------------------------------------------------------
 # causal attention
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# sparse (CSR-fed) matmul: the serving decode kernel
+# ---------------------------------------------------------------------------
+
+def _assert_bitwise(a, b):
+    """f32 bit-pattern equality — the dense-equivalence pin is *exact*,
+    not assert_allclose."""
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    assert a.shape == b.shape, f"{a.shape} vs {b.shape}"
+    np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+def _sparse_weights(key, shape, sparsity):
+    """Dense f32 weights with exact zeros at ``sparsity`` fraction —
+    the masked shape a sparse-pre-trained checkpoint actually has."""
+    w = np.asarray(_rand(key, shape))
+    return w * np.asarray(_mask(key + 1, shape, sparsity))
+
+
+class TestSparseMatmul:
+    def test_csr_round_trip_is_bitwise_exact(self):
+        """Canonical (+0.0-zeroed) weights round-trip bit-for-bit."""
+        w = _sparse_weights(0, (48, 40), 0.75)
+        w = np.where(w != 0.0, w, np.float32(0.0))
+        _assert_bitwise(csr_to_dense(csr_from_dense(w)), w)
+
+    def test_csr_round_trip_canonicalizes_masked_zeros(self):
+        """``w * mask`` sparsification writes -0.0 where the weight was
+        negative; the round trip restores every stored value exactly
+        and canonicalizes those holes to +0.0 (the rust upload pin)."""
+        w = _sparse_weights(0, (48, 40), 0.75)
+        assert np.signbit(w[w == 0.0]).any()  # -0.0 holes are real
+        back = csr_to_dense(csr_from_dense(w))
+        keep = w != 0.0
+        _assert_bitwise(back[keep], w[keep])
+        assert not np.signbit(back[~keep]).any()
+        assert (back[~keep] == 0.0).all()
+
+    def test_csr_drops_negative_zero_like_rust(self):
+        """rust from_dense keeps ``v != 0.0`` — false for -0.0, so the
+        round trip canonicalizes -0.0 to +0.0 (dense_matmul skips it
+        identically, keeping the spmm pin intact)."""
+        w = np.array([[1.0, -0.0], [0.0, 2.0]], dtype=np.float32)
+        csr = csr_from_dense(w)
+        assert csr.nnz == 2
+        back = csr_to_dense(csr)
+        assert np.signbit(back).sum() == 0
+
+    def test_spmm_ref_matches_dense_matmul_ref_bitwise(self):
+        """Python port of the rust elementwise pin: identical k-major
+        loops, zeros skipped on both sides."""
+        a = _sparse_weights(3, (24, 32), 0.75)
+        b = np.asarray(_rand(5, (32, 16)))
+        _assert_bitwise(spmm_ref(csr_from_dense(a), b),
+                        dense_matmul_ref(a, b))
+
+    def test_kernel_matches_dense_pallas_bitwise_basic(self):
+        x = _rand(0, (64, 32))
+        w = _sparse_weights(1, (32, 48), 0.75)
+        _assert_bitwise(sparse_pallas_matmul(x, csr_from_dense(w)),
+                        pallas_matmul(x, jnp.asarray(w)))
+
+    def test_kernel_edge_shapes_bitwise(self):
+        """1-row activations, 1-column weights, fully-dense weights."""
+        for (m, k, n), sparsity in [((1, 16, 8), 0.75),
+                                    ((16, 16, 1), 0.75),
+                                    ((1, 8, 1), 0.5),
+                                    ((8, 8, 8), 0.0)]:
+            x = _rand(m * 7 + n, (m, k))
+            w = _sparse_weights(k + n, (k, n), sparsity)
+            _assert_bitwise(sparse_pallas_matmul(x, csr_from_dense(w)),
+                            pallas_matmul(x, jnp.asarray(w)))
+
+    def test_kernel_empty_weight_rows_bitwise(self):
+        """Rows of W with no nonzeros (whole k-slices dead) — the case
+        CSR row_ptr represents with equal consecutive entries."""
+        w = _sparse_weights(9, (32, 32), 0.5)
+        w[8:16] = 0.0
+        csr = csr_from_dense(w)
+        assert (csr.row_ptr[9:17] == csr.row_ptr[9]).all()
+        x = _rand(2, (16, 32))
+        _assert_bitwise(sparse_pallas_matmul(x, csr),
+                        pallas_matmul(x, jnp.asarray(w)))
+
+    def test_kernel_multiblock_grid_skips_tiles_bitwise(self):
+        """A real multi-tile grid where some (bk, bn) weight tiles are
+        all-zero and actually get skipped."""
+        blocks = (8, 16, 16)
+        w = _sparse_weights(11, (32, 32), 0.5)
+        w[16:] = 0.0  # k-tiles 1 are all-zero for every n-tile
+        csr = csr_from_dense(w)
+        nz = block_nonzero_map(csr, 16, 16)
+        assert nz.shape == (2, 2)
+        assert (nz[1] == 0).all() and (nz[0] > 0).all()
+        x = _rand(4, (16, 32))
+        _assert_bitwise(sparse_pallas_matmul(x, csr, blocks=blocks),
+                        pallas_matmul(x, jnp.asarray(w), blocks=blocks))
+
+    def test_nan_propagates_identically_through_nonzero_tiles(self):
+        """NaN activations against *stored* weight regions must poison
+        both paths with bit-identical NaNs."""
+        w = _sparse_weights(13, (16, 16), 0.75)
+        assert csr_from_dense(w).nnz > 0
+        x = np.array(_rand(4, (8, 16)))
+        x[3, 2] = np.nan
+        sp = np.asarray(sparse_pallas_matmul(jnp.asarray(x),
+                                             csr_from_dense(w)))
+        dn = np.asarray(pallas_matmul(jnp.asarray(x), jnp.asarray(w)))
+        assert np.isnan(sp[3]).all()
+        _assert_bitwise(sp, dn)
+
+    def test_nan_against_skipped_tile_is_not_manufactured(self):
+        """The documented caveat: a NaN activation aligned with an
+        all-zero (skipped) weight tile must NOT leak into the output —
+        the sparse result equals the same kernel run with the dead
+        k-range cut away, while the dense path manufactures NaN."""
+        blocks = (8, 16, 16)
+        w = _sparse_weights(17, (32, 16), 0.5)
+        w[16:] = 0.0
+        x = np.array(_rand(6, (8, 32)))
+        x[0, 20] = np.nan  # k index 20 lives in the dead tile
+        sp = np.asarray(sparse_pallas_matmul(jnp.asarray(x),
+                                             csr_from_dense(w),
+                                             blocks=blocks))
+        truncated = pallas_matmul(jnp.asarray(x[:, :16]),
+                                  jnp.asarray(w[:16]),
+                                  blocks=blocks)
+        _assert_bitwise(sp, truncated)
+        dn = np.asarray(pallas_matmul(jnp.asarray(x), jnp.asarray(w),
+                                      blocks=blocks))
+        assert np.isnan(dn[0]).all()
+
+    def test_checkpoint_sweep_layer_weights_bitwise(self):
+        """The SPDF sweep pin at kernel granularity: for each sparsity
+        level of the checkpoint family, every sparsifiable gpt-nano
+        layer matrix routed through the CSR kernel must reproduce the
+        dense-path logits contribution bit-for-bit."""
+        from compile.model import SIM_CONFIGS, init_params, \
+            masked_param_names
+        cfg = SIM_CONFIGS["gpt-nano"]
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        for sweep_ix, sparsity in enumerate([0.0, 0.5, 0.75]):
+            for name_ix, name in enumerate(masked_param_names(cfg)):
+                w = np.asarray(params[name])
+                wm = w * np.asarray(_mask(31 * sweep_ix + name_ix,
+                                          w.shape, sparsity))
+                x = _rand(sweep_ix + name_ix, (4, wm.shape[0]))
+                _assert_bitwise(
+                    sparse_pallas_matmul(x, csr_from_dense(wm)),
+                    pallas_matmul(x, jnp.asarray(wm)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([1, 8, 32, 60]),
+        k=st.sampled_from([8, 32, 48]),
+        n=st.sampled_from([8, 16, 56]),
+        sparsity=st.sampled_from([0.0, 0.5, 0.75, 0.95]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_bitwise_pin(self, m, k, n, sparsity, seed):
+        x = _rand(seed, (m, k))
+        w = _sparse_weights(seed + 1, (k, n), sparsity)
+        _assert_bitwise(sparse_pallas_matmul(x, csr_from_dense(w)),
+                        pallas_matmul(x, jnp.asarray(w)))
+
+    def test_sparse_kernel_stats(self):
+        w = _sparse_weights(23, (32, 32), 0.5)
+        w[16:] = 0.0
+        csr = csr_from_dense(w)
+        stats = sparse_kernel_stats(8, csr, blocks=(8, 16, 16))
+        assert stats["total_tiles"] == 4
+        assert stats["nonzero_tiles"] == 2
+        assert stats["flops"] == stats["dense_flops"] // 2
+        assert stats["csr_bytes"] == 8 * csr.nnz + 8 * 33
+        assert stats["dense_bytes"] == 4 * 32 * 32
+        assert stats["csr_bytes"] < stats["dense_bytes"]
+
 
 class TestCausalAttention:
     @settings(max_examples=15, deadline=None)

@@ -39,7 +39,18 @@
 //!    hard-asserts conservation (incl. `failed`), failover goodput ≥
 //!    no-failover goodput, and byte-identical telemetry on rerun;
 //!    records the `fault.rates` datapoint pairs `bench_gate.py`
-//!    gates.
+//!    gates;
+//!  * sparse leg — an s75 checkpoint (75% random masks, `w *= m`
+//!    sparsified) loaded through the CSR-residency path next to the
+//!    dense baseline in one registry. The engine's realized sparsity
+//!    calibrates its lane's step cost on the shared clock
+//!    (`LaneCost::from_sparsity` via
+//!    `sparse_compute::theoretical_speedup`), and the same burst
+//!    trace is served twice — all requests routed dense, then all
+//!    routed s75. Hard-asserts sparse-slot detection on exactly the
+//!    masked params and records the `sparse` datapoint pair; the
+//!    gate requires s75 tokens/vs ÷ dense tokens/vs ≥
+//!    sqrt(theoretical FLOPs speedup).
 //!
 //! Run: `cargo bench --bench perf_serve_load`
 //! Writes `BENCH_serve_load.json` (override with SPDF_BENCH_OUT; set
@@ -53,6 +64,8 @@ use spdf::generate::{ChaosConfig, DecodeEngine, DecodeParams,
                      FaultPlan, FaultSpec, ModelRegistry,
                      RetryPolicy};
 use spdf::runtime::Engine;
+use spdf::sparse_compute::theoretical_speedup;
+use spdf::sparsity::{MaskScheme, MaskSet};
 use spdf::train::TrainState;
 use spdf::util::json::Json;
 use spdf::util::rng::Rng;
@@ -399,6 +412,90 @@ fn main() -> anyhow::Result<()> {
         "chaos run is not deterministic under a pinned fault plan"
     );
 
+    // --- sparse leg: CSR-resident s75 lane on the calibrated clock --
+    // The SPDF s75 checkpoint (75% random masks on the six linear
+    // weights per block, `w *= m` sparsified) loads through the
+    // default engine path, which detects the masked params and holds
+    // them CSR-resident; the realized sparsity prices its serve lane
+    // at 1/theoretical_speedup of a dense step. The same burst trace
+    // runs twice through one dense+s75 registry — all requests routed
+    // dense, then all routed s75 — so the virtual-throughput ratio
+    // isolates exactly the step-cost calibration.
+    let mut s75_state = state.clone();
+    s75_state.sparsify(MaskSet::random(mm, 0.75, MaskScheme::Uniform,
+                                       &mut Rng::new(75)));
+    let s75_params = s75_state.param_tensors(mm);
+    let s75 = DecodeEngine::new(&runtime, &s75_params)?;
+    anyhow::ensure!(
+        decode.sparse_slots() == 0,
+        "dense checkpoint was detected sparse ({} slots)",
+        decode.sparse_slots()
+    );
+    anyhow::ensure!(
+        s75.sparse_slots() == mm.masked_params.len(),
+        "s75 engine holds {} CSR slots, want every masked param ({})",
+        s75.sparse_slots(), mm.masked_params.len()
+    );
+    let s75_sparsity = s75.sparsity().expect("sparse slots detected");
+    anyhow::ensure!(
+        (s75_sparsity - 0.75).abs() < 0.01,
+        "realized s75 sparsity {s75_sparsity:.4} far from target"
+    );
+    let s75_cost = s75.lane_cost();
+    let (csr_bytes, dense_bytes) = s75.sparse_host_bytes();
+    let mut sparse_reg = ModelRegistry::new("dense", &decode)?;
+    sparse_reg.register("s75", &s75)?;
+    let sparse_cfg = TraceConfig {
+        seed: 23,
+        // far past the knee so the makespan is service-dominated and
+        // the throughput ratio reflects step costs, not arrival gaps
+        rate_rps: 10.0 * cap,
+        pattern: Pattern::Bursty { burst: requests.max(16) },
+        requests: requests.max(16),
+        ..base.clone()
+    };
+    let sparse_trace = loadgen::generate_trace(&sparse_cfg)?;
+    let route_all = |name: &str| {
+        let mut t = sparse_trace.clone();
+        for r in t.requests.iter_mut() {
+            r.model = Some(name.into());
+        }
+        t
+    };
+    let (dense_pt, _, _) = loadgen::run_trace_registry(
+        &sparse_reg, &route_all("dense"), &dp, false, &lit, &Fifo,
+        &Unbounded, &ChaosConfig::default())?;
+    let (s75_pt, _, _) = loadgen::run_trace_registry(
+        &sparse_reg, &route_all("s75"), &dp, false, &lit, &Fifo,
+        &Unbounded, &ChaosConfig::default())?;
+    for pt in [&dense_pt, &s75_pt] {
+        anyhow::ensure!(
+            pt.completed == pt.requests,
+            "sparse leg dropped requests ({} of {} completed)",
+            pt.completed, pt.requests
+        );
+    }
+    let flops_speedup = theoretical_speedup(s75_sparsity);
+    let required_speedup = flops_speedup.sqrt();
+    let measured_speedup = if dense_pt.tokens_per_vsec > 0.0 {
+        s75_pt.tokens_per_vsec / dense_pt.tokens_per_vsec
+    } else {
+        0.0
+    };
+    anyhow::ensure!(
+        measured_speedup >= required_speedup,
+        "s75 lane tokens/vs only {:.2}x dense (want >= {:.2}x = \
+         sqrt of the {:.1}x FLOPs ratio)",
+        measured_speedup, required_speedup, flops_speedup
+    );
+    println!("\nsparse leg (s75 CSR-resident, {} slots, step scale \
+              {:.3}): {:.0} tok/vs vs dense {:.0} tok/vs = {:.2}x \
+              (gate >= {:.2}x), csr {} B vs dense {} B",
+             s75.sparse_slots(), s75_cost.step_scale,
+             s75_pt.tokens_per_vsec, dense_pt.tokens_per_vsec,
+             measured_speedup, required_speedup, csr_bytes,
+             dense_bytes);
+
     let costs_json = |c: &StepCosts| {
         let mut o = Json::obj();
         o.push("step_ms", Json::Num(c.step_ms))
@@ -452,6 +549,20 @@ fn main() -> anyhow::Result<()> {
         .push_num("retry_max", retry_max)
         .push("rates", Json::Arr(fault_rows));
     j.push("fault", fault);
+    let mut sparse = Json::obj();
+    sparse.push_num("sparsity", s75_sparsity)
+        .push_num("sparse_slots", s75.sparse_slots())
+        .push_num("step_scale", s75_cost.step_scale)
+        .push_num("csr_host_bytes", csr_bytes)
+        .push_num("dense_equiv_bytes", dense_bytes)
+        .push_num("flops_speedup", flops_speedup)
+        .push_num("required_speedup", required_speedup)
+        .push_num("measured_speedup", measured_speedup)
+        .push_num("dense_tokens_per_vsec", dense_pt.tokens_per_vsec)
+        .push_num("s75_tokens_per_vsec", s75_pt.tokens_per_vsec)
+        .push("dense", dense_pt.to_json())
+        .push("s75", s75_pt.to_json());
+    j.push("sparse", sparse);
     j.push("points", loadgen::points_json(&points));
 
     let out_path = std::env::var("SPDF_BENCH_OUT")

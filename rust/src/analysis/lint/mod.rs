@@ -6,8 +6,10 @@
 //! on conventions no compiler enforces: float comparators must not
 //! panic on NaN, map iteration feeding output must be ordered, the
 //! wall clock stays behind a small allowlist, hot-path panics carry a
-//! written invariant, and RNG side-streams derive through named
-//! salts. This module makes those conventions machine-checked: a
+//! written invariant, RNG side-streams derive through named salts,
+//! and the documented API surface (`generate/serve`,
+//! `sparse_compute`) keeps a doc comment on every `pub fn` /
+//! `pub struct`. This module makes those conventions machine-checked: a
 //! comment/string-aware scanner ([`scanner`]), the rules themselves
 //! ([`rules`]), and here the tree walker plus human/JSON reporting.
 //! Wired into `scripts/check.sh` and CI; `spdf lint` exits nonzero on
@@ -189,6 +191,7 @@ mod tests {
             panic_modules: vec![],
             wall_clock_allow: vec!["gone.rs", "a.rs"],
             rng_exempt: vec![],
+            doc_modules: vec![],
         };
         let rep = run(&dir, &cfg).unwrap();
         fs::remove_dir_all(&dir).unwrap();

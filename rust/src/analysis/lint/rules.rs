@@ -1,5 +1,5 @@
-//! The five determinism & panic-safety rules, applied to one scanned
-//! source file at a time.
+//! The six determinism & panic-safety & doc-coverage rules, applied
+//! to one scanned source file at a time.
 //!
 //! Every rule reads the blanked `code` channel (so literals and
 //! comments can't trigger it) and every rule can be silenced at a
@@ -27,17 +27,19 @@ pub const RULE_UNORDERED: &str = "unordered";
 pub const RULE_WALL_CLOCK: &str = "wall-clock";
 pub const RULE_PANIC_SAFETY: &str = "panic-safety";
 pub const RULE_RNG: &str = "rng-discipline";
+pub const RULE_DOC_COVERAGE: &str = "doc-coverage";
 pub const RULE_STALE_ALLOW: &str = "stale-allow";
 pub const RULE_STALE_ALLOWLIST: &str = "stale-allowlist";
 
 /// The site-checkable rules (the two `stale-*` rules are meta-checks
 /// and cannot be allowed).
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 6] = [
     RULE_FLOAT_SORT,
     RULE_UNORDERED,
     RULE_WALL_CLOCK,
     RULE_PANIC_SAFETY,
     RULE_RNG,
+    RULE_DOC_COVERAGE,
 ];
 
 /// One lint violation.
@@ -65,6 +67,11 @@ pub struct LintConfig {
     /// Rule 5: files exempt from seed-derivation discipline (the rng
     /// implementation itself).
     pub rng_exempt: Vec<&'static str>,
+    /// Rule 6: public-surface modules where every `pub fn` /
+    /// `pub struct` must carry a doc comment (the serving stack and
+    /// the sparse-compute kernels are the documented API
+    /// `docs/ARCHITECTURE.md` routes readers into).
+    pub doc_modules: Vec<&'static str>,
 }
 
 impl LintConfig {
@@ -86,6 +93,7 @@ impl LintConfig {
                 "generate/serve/clock.rs",
             ],
             rng_exempt: vec!["util/rng.rs"],
+            doc_modules: vec!["generate/serve/", "sparse_compute/"],
         }
     }
 }
@@ -106,6 +114,7 @@ pub fn scan_source(
     let panic_mod = in_module(file, &cfg.panic_modules);
     let wall_ok = cfg.wall_clock_allow.iter().any(|a| *a == file);
     let rng_ok = cfg.rng_exempt.iter().any(|a| *a == file);
+    let doc_mod = in_module(file, &cfg.doc_modules);
 
     // ---- line-local rules (2, 3, 4) ---------------------------------
     for (i, l) in lines.iter().enumerate() {
@@ -162,6 +171,23 @@ pub fn scan_source(
                  invariant: justification"
                     .to_string(),
             ));
+        }
+        if doc_mod {
+            if let Some(kind) = pub_item(&l.code) {
+                if !has_doc(&lines, i)
+                    && !allow(i, RULE_DOC_COVERAGE, &present, &mut used)
+                {
+                    out.push(finding(
+                        file,
+                        i,
+                        RULE_DOC_COVERAGE,
+                        format!(
+                            "pub {kind} in a documented-API module \
+                             without a doc comment"
+                        ),
+                    ));
+                }
+            }
         }
     }
 
@@ -316,6 +342,49 @@ fn has_invariant(lines: &[Line], idx: usize) -> bool {
         .any(|l| l.comment.contains("invariant:"))
 }
 
+/// Does the blanked code line declare a public item rule 6 covers?
+/// Returns the item kind (`fn` / `struct`) for the finding message.
+/// `pub(crate)`/`pub(super)` items are not public API and are skipped.
+fn pub_item(code: &str) -> Option<&'static str> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("pub ")?;
+    // qualifiers that may sit between `pub` and the item keyword
+    let rest = ["const ", "unsafe ", "async ", "extern "]
+        .iter()
+        .fold(rest, |r, q| r.strip_prefix(q).unwrap_or(r));
+    if rest.starts_with("fn ") {
+        Some("fn")
+    } else if rest.starts_with("struct ") {
+        Some("struct")
+    } else {
+        None
+    }
+}
+
+/// Is the `pub` item at `idx` documented? Walks upward through
+/// attribute lines (`#[...]`, including multi-line ones, whose
+/// continuation lines end in `)]`) and comment-only lines, looking
+/// for a `///` doc comment; the first other code line ends the walk.
+/// A `//!` module header does not document an item.
+fn has_doc(lines: &[Line], idx: usize) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        let comment = l.comment.trim_start();
+        if comment.starts_with("///") {
+            return true;
+        }
+        let attr_line = code.starts_with("#[") || code.ends_with(")]");
+        let comment_only = code.is_empty() && !comment.is_empty();
+        if !(attr_line || comment_only) {
+            return false;
+        }
+    }
+    false
+}
+
 /// Split text that (after whitespace) starts with `(` into the
 /// balanced argument text and the remainder after the close paren.
 fn split_call(s: &str) -> Option<(&str, &str)> {
@@ -355,6 +424,7 @@ mod tests {
             panic_modules: vec![],
             wall_clock_allow: vec![],
             rng_exempt: vec![],
+            doc_modules: vec![],
         }
     }
 
@@ -517,6 +587,67 @@ mod tests {
         };
         let src = "fn f(seed: u64) -> Rng { Rng::new(seed ^ 1) }\n";
         assert!(scan_source("util/rng.rs", src, &cfg).is_empty());
+    }
+
+    // ---- rule 6: doc-coverage ---------------------------------------
+
+    fn doc_cfg() -> LintConfig {
+        LintConfig { doc_modules: vec!["serve/"], ..bare() }
+    }
+
+    #[test]
+    fn doc_coverage_flags_undocumented_pub_items() {
+        let src = "pub fn f() {}\npub struct S;\n";
+        let fs = scan_source("serve/x.rs", src, &doc_cfg());
+        assert_eq!(
+            rules_of(&fs),
+            vec![RULE_DOC_COVERAGE, RULE_DOC_COVERAGE]
+        );
+        assert_eq!(fs[0].line, 1);
+        // the rule only applies inside the configured modules
+        assert!(scan_source("other/x.rs", src, &doc_cfg()).is_empty());
+    }
+
+    #[test]
+    fn doc_coverage_accepts_doc_comments_through_attributes() {
+        let src = "/// Documented.\n\
+                   pub fn f() {}\n\
+                   /// Also documented, behind attributes.\n\
+                   #[derive(Debug, Clone)]\n\
+                   #[allow(dead_code)]\n\
+                   pub struct S;\n";
+        assert!(scan_source("serve/x.rs", src, &doc_cfg()).is_empty());
+    }
+
+    #[test]
+    fn doc_coverage_skips_crate_private_and_qualified_items() {
+        // pub(crate)/pub(super) are not public API; qualified pub
+        // items (const/unsafe/async) are still checked
+        let src = "pub(crate) fn hidden() {}\n\
+                   pub(super) struct Inner;\n\
+                   pub const fn k() {}\n";
+        let fs = scan_source("serve/x.rs", src, &doc_cfg());
+        assert_eq!(rules_of(&fs), vec![RULE_DOC_COVERAGE]);
+        assert_eq!(fs[0].line, 3);
+    }
+
+    #[test]
+    fn doc_coverage_module_header_does_not_document_items() {
+        // a `//!` header documents the module, not the first item
+        let src = "//! Module header.\npub fn f() {}\n";
+        let fs = scan_source("serve/x.rs", src, &doc_cfg());
+        assert_eq!(rules_of(&fs), vec![RULE_DOC_COVERAGE]);
+    }
+
+    #[test]
+    fn doc_coverage_allow_marker_and_tests_are_exempt() {
+        let src = "// lint:allow(doc-coverage) generated shim\n\
+                   pub fn raw() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   pub fn helper() {}\n\
+                   }\n";
+        assert!(scan_source("serve/x.rs", src, &doc_cfg()).is_empty());
     }
 
     // ---- cfg(test) and markers --------------------------------------

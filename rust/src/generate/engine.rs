@@ -12,12 +12,20 @@
 //! [`super::reference`] carry the *fixed* fallback semantics (the old
 //! code could emit a blocked token — see ISSUE 1).
 
+use crate::generate::serve::LaneCost;
 use crate::runtime::{Dtype, Executable, HostTensor, LiteralCache,
                      ModelRuntime, SessionState};
 use crate::tokenizer::EOS;
 
 use super::topk;
 use super::DecodeParams;
+
+/// Density at or below which a 2-D f32 parameter slot is held
+/// CSR-resident by [`DecodeEngine::new`]. Half density is the break-
+/// even point where CSR bytes (8 per nnz) stop beating dense bytes
+/// (4 per element) — dense and lightly-pruned checkpoints detect zero
+/// sparse slots and load exactly as before.
+pub const SPARSE_RESIDENCY_MAX_DENSITY: f64 = 0.5;
 
 /// The compiled KV serving pair (present when the manifest carries the
 /// incremental artifacts).
@@ -26,6 +34,12 @@ struct KvExes<'a> {
     prefill: &'a Executable,
 }
 
+/// The literal-resident decode session over one compiled model:
+/// params validated and uploaded once, then every step re-marshals
+/// only the small token/pos buffers. Sparse checkpoints are detected
+/// at load and held CSR-resident (see [`DecodeEngine::new`]); serving
+/// entry points hang off this type ([`DecodeEngine::serve`],
+/// [`DecodeEngine::greedy`], [`DecodeEngine::beam`]).
 pub struct DecodeEngine<'a> {
     exe: &'a Executable,
     kv: Option<KvExes<'a>>,
@@ -44,8 +58,33 @@ impl<'a> DecodeEngine<'a> {
     /// `decode_step`/`prefill` pair, the KV-resident path
     /// ([`Self::serve_kv`], [`Self::greedy_kv`]) is validated and made
     /// available too.
+    ///
+    /// Sparse residency: 2-D f32 params at or under
+    /// [`SPARSE_RESIDENCY_MAX_DENSITY`] are detected here and kept as
+    /// host-side `sparse_compute::Csr`, while their literals are
+    /// built from the source bytes exactly as a dense upload would —
+    /// the XLA programs see bit-identical inputs, so decoded tokens
+    /// cannot change (pinned against [`Self::new_dense`] in the
+    /// integration suite). The realized sparsity over the detected
+    /// slots calibrates [`Self::lane_cost`].
     pub fn new(runtime: &'a ModelRuntime, params: &[HostTensor])
                -> anyhow::Result<DecodeEngine<'a>> {
+        Self::build(runtime, params,
+                    Some(SPARSE_RESIDENCY_MAX_DENSITY))
+    }
+
+    /// [`Self::new`] with sparse-residency detection disabled: every
+    /// param uploads dense, [`Self::sparsity`] is `None`, and
+    /// [`Self::lane_cost`] is unit — the pre-sparsity load path, kept
+    /// for A/B pins and callers that want uniform lane costs.
+    pub fn new_dense(runtime: &'a ModelRuntime, params: &[HostTensor])
+                     -> anyhow::Result<DecodeEngine<'a>> {
+        Self::build(runtime, params, None)
+    }
+
+    fn build(runtime: &'a ModelRuntime, params: &[HostTensor],
+             sparse_max_density: Option<f64>)
+             -> anyhow::Result<DecodeEngine<'a>> {
         let mm = &runtime.manifest;
         let exe = runtime.artifact("logits_last")?;
         let spec = &exe.spec;
@@ -85,8 +124,12 @@ impl<'a> DecodeEngine<'a> {
             _ => None,
         };
 
-        let params = LiteralCache::upload_validated(
-            params, &spec.inputs[..n_params])?;
+        let params = match sparse_max_density {
+            Some(d) => LiteralCache::upload_sparse_validated(
+                params, &spec.inputs[..n_params], d)?,
+            None => LiteralCache::upload_validated(
+                params, &spec.inputs[..n_params])?,
+        };
         Ok(DecodeEngine {
             exe,
             kv,
@@ -178,16 +221,61 @@ impl<'a> DecodeEngine<'a> {
         Ok(())
     }
 
+    /// Batch rows per model step (the manifest's `decode_batch`).
     pub fn decode_batch(&self) -> usize {
         self.b
     }
 
+    /// Context length the decode artifacts were compiled for.
     pub fn ctx_len(&self) -> usize {
         self.t
     }
 
+    /// Vocabulary size of the logits rows.
     pub fn vocab(&self) -> usize {
         self.vocab
+    }
+
+    /// How many parameter slots loaded CSR-resident (0 for dense
+    /// checkpoints and for [`Self::new_dense`] engines).
+    pub fn sparse_slots(&self) -> usize {
+        self.params.sparse_slots()
+    }
+
+    /// Realized weight sparsity over the CSR-resident slots only, or
+    /// `None` when nothing loaded sparse. Embeddings and other
+    /// dense-held params are excluded on purpose: they cost the same
+    /// on every lane, so including them would understate the FLOPs
+    /// savings of the masked matmuls this number calibrates.
+    pub fn sparsity(&self) -> Option<f64> {
+        self.params.sparse_sparsity()
+    }
+
+    /// Extra host bytes the CSR-resident copies occupy, next to the
+    /// dense bytes those slots would have cost as host copies —
+    /// `(csr_bytes, dense_bytes_of_sparse_slots)` for telemetry.
+    pub fn sparse_host_bytes(&self) -> (usize, usize) {
+        let mut csr = 0usize;
+        let mut dense = 0usize;
+        for r in self.params.residency() {
+            if let crate::runtime::SlotResidency::Sparse(c) = r {
+                csr += r.host_bytes();
+                dense += c.rows * c.cols * 4;
+            }
+        }
+        (csr, dense)
+    }
+
+    /// Virtual step-cost multiplier for a serve lane on this engine:
+    /// `LaneCost::from_sparsity` of the realized sparsity (unit for
+    /// dense-loaded engines), so an s75 lane advances the shared
+    /// clock at a quarter of the dense step cost — the calibration
+    /// `ModelRegistry::serve_with` feeds `run_lanes_with_costs`.
+    pub fn lane_cost(&self) -> LaneCost {
+        match self.sparsity() {
+            Some(s) => LaneCost::from_sparsity(s),
+            None => LaneCost::unit(),
+        }
     }
 
     /// Is the KV-resident incremental path available (manifest carried

@@ -20,6 +20,18 @@
 //! bit-for-bit (nothing is ever shed or expired).
 
 /// Decide the fate of arriving and waiting requests.
+///
+/// ```
+/// use spdf::generate::serve::admission::{AdmissionPolicy,
+///                                        MaxQueueDepth, Unbounded};
+///
+/// assert!(Unbounded.admit(1_000_000));
+/// assert_eq!(Unbounded.deadline_ms(), None);
+///
+/// let bounded = MaxQueueDepth(2);
+/// assert!(bounded.admit(1)); // queue has room
+/// assert!(!bounded.admit(2)); // full — this arrival is shed
+/// ```
 pub trait AdmissionPolicy {
     /// Flag/report name ("unbounded", "max-queue(8)", ...).
     fn name(&self) -> String;

@@ -1,8 +1,78 @@
 //! The serve loop's notion of time: the wall/virtual [`Clock`], the
-//! timed-arrival [`Schedule`], and the [`ArrivalQueue`] that feeds
-//! requests to the admission stage as their arrival times pass.
+//! timed-arrival [`Schedule`], per-lane step-cost multipliers
+//! ([`LaneCost`]), and the [`ArrivalQueue`] that feeds requests to the
+//! admission stage as their arrival times pass.
+//!
+//! A [`Schedule`] carries the *dense* per-step virtual cost; sparse
+//! lanes scale it down through their [`LaneCost`] (calibrated from
+//! realized weight sparsity via `sparse_compute::theoretical_speedup`),
+//! which is how the sparsity→capacity win of the SPDF checkpoint sweep
+//! becomes visible on the virtual clock.
 
 use std::time::Instant;
+
+/// Per-lane multiplier on the [`Schedule`]'s virtual step costs: a
+/// lane serving a sparse checkpoint advances the clock by
+/// `step_scale × Schedule::step_ms` per engine step instead of the
+/// full dense cost.
+///
+/// Scales are calibrated from realized weight sparsity `S` as
+/// `1 / theoretical_speedup(S) = 1 − S` (the paper's FLOPs model: an
+/// s75 lane steps at a quarter of the dense cost). Scales only shape
+/// the virtual timeline — token streams are computed by the same
+/// engines either way, so survivors stay bitwise identical to a run
+/// at unit costs.
+///
+/// ```
+/// use spdf::generate::serve::LaneCost;
+///
+/// let dense = LaneCost::unit();
+/// let s75 = LaneCost::from_sparsity(0.75);
+/// assert_eq!(dense.step_scale, 1.0);
+/// assert_eq!(s75.step_scale, 0.25);
+/// assert_eq!(s75.prefill_scale, 0.25);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneCost {
+    /// Multiplier on `Schedule::step_ms` for one engine step.
+    pub step_scale: f64,
+    /// Multiplier on `Schedule::prefill_ms` for one KV prefill pass.
+    pub prefill_scale: f64,
+}
+
+impl LaneCost {
+    /// Dense-lane cost: the schedule's step costs unscaled. This is
+    /// the behavior of every serve path before lanes had
+    /// heterogeneous costs, and the delegation default of
+    /// `run_lanes_with`.
+    pub fn unit() -> LaneCost {
+        LaneCost { step_scale: 1.0, prefill_scale: 1.0 }
+    }
+
+    /// Calibrate from realized weight sparsity: scale =
+    /// `1 / sparse_compute::theoretical_speedup(S)` = `1 − S`, the
+    /// dense-FLOPs fraction a sparse step actually executes. Sparsity
+    /// is clamped to `[0, 1)` so a (degenerate) all-zero checkpoint
+    /// still costs a sliver of virtual time rather than zero.
+    pub fn from_sparsity(sparsity: f64) -> LaneCost {
+        let s = if sparsity.is_finite() { sparsity } else { 0.0 };
+        let s = s.clamp(0.0, 1.0 - 1e-6);
+        let scale = 1.0 / crate::sparse_compute::theoretical_speedup(s);
+        LaneCost { step_scale: scale, prefill_scale: scale }
+    }
+
+    pub(crate) fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.step_scale.is_finite() && self.step_scale > 0.0
+                && self.prefill_scale.is_finite()
+                && self.prefill_scale > 0.0,
+            "lane cost scales must be finite and positive \
+             (step {}, prefill {})",
+            self.step_scale, self.prefill_scale
+        );
+        Ok(())
+    }
+}
 
 /// Timed-arrival schedule for `serve_timed`: the virtual clock and
 /// when each request joins the queue. Built by `generate::loadgen`.
@@ -125,16 +195,19 @@ impl Clock {
         self.t0.elapsed().as_secs_f64()
     }
 
-    pub(crate) fn on_step(&mut self) {
+    /// One engine step elapsed on a lane whose [`LaneCost`] step
+    /// multiplier is `scale` (1.0 for a dense lane).
+    pub(crate) fn on_step(&mut self, scale: f64) {
         if let Mode::Virtual { now_ms, step_ms, .. } = &mut self.mode {
-            *now_ms += *step_ms;
+            *now_ms += *step_ms * scale;
         }
     }
 
-    pub(crate) fn on_prefill(&mut self) {
+    /// One KV prefill pass elapsed, scaled like [`Clock::on_step`].
+    pub(crate) fn on_prefill(&mut self, scale: f64) {
         if let Mode::Virtual { now_ms, prefill_ms, .. } = &mut self.mode
         {
-            *now_ms += *prefill_ms;
+            *now_ms += *prefill_ms * scale;
         }
     }
 
@@ -353,8 +426,8 @@ mod tests {
         let s = Schedule::open(vec![0.0], 2.0, 3.0);
         let mut c = Clock::new(Some(&s));
         assert_eq!(c.now_ms(), 0.0);
-        c.on_step();
-        c.on_prefill();
+        c.on_step(1.0);
+        c.on_prefill(1.0);
         assert_eq!(c.now_ms(), 5.0);
         c.jump_to(10.0);
         assert_eq!(c.now_ms(), 10.0);
@@ -371,5 +444,36 @@ mod tests {
         // the virtual timeline is decoupled from the wall epoch, but
         // wall_secs still reports (tiny) real elapsed compute time
         assert!(c.wall_secs() >= 0.0 && c.wall_secs() < 60.0);
+    }
+
+    #[test]
+    fn lane_cost_scales_virtual_step_costs() {
+        let s = Schedule::open(vec![0.0], 4.0, 8.0);
+        let mut c = Clock::new(Some(&s));
+        // an s75 lane steps at a quarter of the dense cost
+        let s75 = LaneCost::from_sparsity(0.75);
+        assert_eq!(s75.step_scale, 0.25);
+        c.on_step(s75.step_scale);
+        assert_eq!(c.now_ms(), 1.0);
+        c.on_prefill(s75.prefill_scale);
+        assert_eq!(c.now_ms(), 3.0);
+        // a dense lane on the same clock pays full price
+        c.on_step(LaneCost::unit().step_scale);
+        assert_eq!(c.now_ms(), 7.0);
+    }
+
+    #[test]
+    fn lane_cost_calibration_and_validation() {
+        assert_eq!(LaneCost::unit(), LaneCost::from_sparsity(0.0));
+        assert_eq!(LaneCost::from_sparsity(0.5).step_scale, 0.5);
+        // degenerate inputs clamp instead of producing zero/negative
+        // or non-finite scales
+        assert!(LaneCost::from_sparsity(1.0).validate().is_ok());
+        assert!(LaneCost::from_sparsity(-3.0).step_scale == 1.0);
+        assert!(LaneCost::from_sparsity(f64::NAN).validate().is_ok());
+        let bad = LaneCost { step_scale: 0.0, prefill_scale: 1.0 };
+        assert!(bad.validate().is_err());
+        let bad = LaneCost { step_scale: 1.0, prefill_scale: f64::NAN };
+        assert!(bad.validate().is_err());
     }
 }

@@ -43,7 +43,7 @@ use crate::runtime::SessionState;
 use crate::tokenizer::EOS;
 
 use super::admission::{AdmissionPolicy, Unbounded};
-use super::clock::{ArrivalQueue, Clock, Schedule};
+use super::clock::{ArrivalQueue, Clock, LaneCost, Schedule};
 use super::fault::{plans_for_lanes, FaultyBackend, RecoveryConfig};
 use super::policy::{Fifo, Scheduler};
 use super::telemetry::{ModelStats, RequestOutcome, RequestResult,
@@ -242,6 +242,8 @@ pub struct ServeConfig<'a> {
 }
 
 impl<'a> ServeConfig<'a> {
+    /// Defaults: FIFO scheduling, unbounded admission, calibrated
+    /// step costs, no chaos, no fallback.
     pub fn new(use_kv: bool) -> ServeConfig<'a> {
         ServeConfig {
             use_kv,
@@ -471,6 +473,10 @@ struct Lane {
 /// Public (with [`mock`]) so the serve-invariant property suite in
 /// `rust/tests/` can drive random traces × policies × lane counts
 /// without compiled artifacts.
+///
+/// Every lane pays the [`Schedule`]'s full (dense) step cost here;
+/// [`run_lanes_with_costs`] is the same machine with heterogeneous
+/// per-lane [`LaneCost`] multipliers.
 #[allow(clippy::too_many_arguments)]
 pub fn run_lanes_with(
     backends: &mut [&mut dyn LogitsBackend],
@@ -483,7 +489,46 @@ pub fn run_lanes_with(
     admission: &dyn AdmissionPolicy,
     recovery: &RecoveryConfig,
 ) -> anyhow::Result<ServeReport> {
+    let costs = vec![LaneCost::unit(); backends.len()];
+    run_lanes_with_costs(backends, names, lane_of, requests, dp,
+                         schedule, scheduler, admission, recovery,
+                         &costs)
+}
+
+/// [`run_lanes_with`] with heterogeneous per-lane step costs: lane
+/// `l`'s model invocations advance the virtual clock by
+/// `lane_costs[l].step_scale × Schedule::step_ms` (and likewise for
+/// prefill), so a lane serving a sparse checkpoint steps cheaper than
+/// a dense one in proportion to its realized density — the
+/// sparsity→capacity win on the virtual timeline. Costs shape *time
+/// only*: admitted requests decode exactly the same tokens under any
+/// cost vector (what changes is which requests are concurrently
+/// in-flight when admission or deadlines bite, and the reported
+/// `*_ms` telemetry). At unit costs this is bit-for-bit
+/// [`run_lanes_with`]. `lane_costs` must supply one finite positive
+/// scale pair per lane.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lanes_with_costs(
+    backends: &mut [&mut dyn LogitsBackend],
+    names: &[String],
+    lane_of: &[usize],
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    schedule: Option<&Schedule>,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+    recovery: &RecoveryConfig,
+    lane_costs: &[LaneCost],
+) -> anyhow::Result<ServeReport> {
     let n_lanes = backends.len();
+    anyhow::ensure!(lane_costs.len() == n_lanes,
+                    "{} lane costs for {} lanes", lane_costs.len(),
+                    n_lanes);
+    for (l, c) in lane_costs.iter().enumerate() {
+        c.validate().map_err(|e| e.context(format!(
+            "lane {l} ({})", names.get(l).map(|s| s.as_str())
+                .unwrap_or("?"))))?;
+    }
     anyhow::ensure!(n_lanes > 0, "serve loop needs at least one lane");
     anyhow::ensure!(names.len() == n_lanes,
                     "{} lane names for {} lanes", names.len(), n_lanes);
@@ -797,7 +842,7 @@ pub fn run_lanes_with(
                         lane.prefill_steps += 1;
                         lane.refill.fill(0.0);
                         lane.any_refill = false;
-                        clock.on_prefill();
+                        clock.on_prefill(lane_costs[l].prefill_scale);
                     }
                     Err(e) => attempt_err = Some(e),
                 }
@@ -812,7 +857,7 @@ pub fn run_lanes_with(
             stepped = true;
             // a failed attempt burns a step's worth of time too —
             // containment must not make failure cheaper than success
-            clock.on_step();
+            clock.on_step(lane_costs[l].step_scale);
 
             if attempt_err.is_some() {
                 let now = clock.now_ms();
@@ -1175,6 +1220,7 @@ pub mod mock {
     }
 
     impl MockBackend {
+        /// A `b`-slot, `t`-context mock emitting token 5 every step.
         pub fn new(b: usize, t: usize, kv: bool) -> MockBackend {
             MockBackend { b, t, vocab: 16, tok: 5, kv, prefills: 0 }
         }
@@ -2265,5 +2311,113 @@ mod tests {
             assert_eq!(x.to_json().to_string(),
                        y.to_json().to_string());
         }
+    }
+
+    #[test]
+    fn unit_lane_costs_are_bit_identical_to_run_lanes_with() {
+        // run_lanes_with delegates at unit costs; an explicit unit
+        // vector through run_lanes_with_costs must serialize
+        // byte-identically — the costs layer is inert until a lane
+        // actually scales
+        let requests: Vec<DecodeRequest> = (0..4)
+            .map(|i| DecodeRequest::new(i, vec![1, 9, 3],
+                                        2 + (i as usize % 2)))
+            .collect();
+        let s = sched(&[0.0, 0.0, 1.0, 1.0], 1.0);
+        let names = [String::from("a"), String::from("b")];
+        let lane_of = vec![0, 1, 0, 1];
+        let mut a0 = MockBackend::new(1, 16, false);
+        let mut a1 = MockBackend::new(1, 16, false);
+        let a = run_lanes_with(
+            &mut [&mut a0, &mut a1], &names, &lane_of, &requests,
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+            &RecoveryConfig::default()).unwrap();
+        let mut b0 = MockBackend::new(1, 16, false);
+        let mut b1 = MockBackend::new(1, 16, false);
+        let b = run_lanes_with_costs(
+            &mut [&mut b0, &mut b1], &names, &lane_of, &requests,
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+            &RecoveryConfig::default(),
+            &[LaneCost::unit(), LaneCost::unit()]).unwrap();
+        assert_eq!(a.stats_json().to_string(),
+                   b.stats_json().to_string());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.to_json().to_string(),
+                       y.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn hetero_lane_costs_change_time_but_not_tokens() {
+        // two busy lanes on the shared clock: the s75 lane's steps
+        // cost a quarter of dense, so the virtual makespan shrinks
+        // while every decoded stream stays bitwise identical
+        let requests: Vec<DecodeRequest> = (0..4)
+            .map(|i| DecodeRequest::new(i, vec![1, 9, 3], 3))
+            .collect();
+        let s = sched(&[0.0, 0.0, 0.0, 0.0], 1.0);
+        let names = [String::from("dense"), String::from("s75")];
+        let lane_of = vec![0, 0, 1, 1];
+        let run = |costs: &[LaneCost]| {
+            let mut b0 = MockBackend::new(1, 16, false);
+            let mut b1 = MockBackend::new(1, 16, false);
+            run_lanes_with_costs(
+                &mut [&mut b0, &mut b1], &names, &lane_of, &requests,
+                &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+                &RecoveryConfig::default(), costs).unwrap()
+        };
+        let unit = run(&[LaneCost::unit(), LaneCost::unit()]);
+        let hetero =
+            run(&[LaneCost::unit(), LaneCost::from_sparsity(0.75)]);
+        for (x, y) in unit.results.iter().zip(&hetero.results) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens);
+            assert!(x.outcome.is_completed()
+                    && y.outcome.is_completed());
+        }
+        // each round both lanes step: 2.0ms at unit costs,
+        // 1.0 + 0.25 = 1.25ms with the calibrated s75 lane. Six
+        // rounds drain the queues: 12ms vs 7.5ms makespan.
+        assert_eq!(unit.stats.sim_ms, 12.0);
+        assert_eq!(hetero.stats.sim_ms, 7.5);
+        assert_eq!(unit.stats.generated_tokens,
+                   hetero.stats.generated_tokens);
+    }
+
+    #[test]
+    fn cheaper_lane_clears_deadlined_queue_with_fewer_expiries() {
+        // cross-lane golden at the mock level: the same stream routed
+        // to a dense-cost lane vs an s75-cost lane under a queue
+        // deadline. Survivors decode bitwise-identical streams, and
+        // the cheaper lane completes at least as many requests.
+        let requests = reqs(&[2, 2, 2, 2]);
+        let s = sched(&[0.0, 0.0, 0.0, 0.0], 1.0);
+        let names = [String::from("m")];
+        let lane_of = vec![0, 0, 0, 0];
+        let run = |cost: LaneCost| {
+            let mut be = MockBackend::new(1, 16, false);
+            run_lanes_with_costs(
+                &mut [&mut be], &names, &lane_of, &requests,
+                &DecodeParams::default(), Some(&s), &Fifo,
+                &QueueDeadline(4.5), &RecoveryConfig::default(),
+                &[cost]).unwrap()
+        };
+        let dense = run(LaneCost::unit());
+        let s75 = run(LaneCost::from_sparsity(0.75));
+        // dense: completions at t=2/4/6 — the last request expires at
+        // 4.5ms of queue wait. s75: steps cost 0.25ms, the whole
+        // queue drains by t=2.0 and nothing expires.
+        assert_eq!((dense.stats.completed, dense.stats.expired),
+                   (3, 1));
+        assert_eq!((s75.stats.completed, s75.stats.expired), (4, 0));
+        assert!(s75.stats.completed >= dense.stats.completed);
+        // survivors of the dense run decode the same streams bitwise
+        for d in dense.results.iter()
+            .filter(|r| r.outcome.is_completed())
+        {
+            let v = s75.results.iter().find(|r| r.id == d.id).unwrap();
+            assert_eq!(d.tokens, v.tokens);
+        }
+        assert!(s75.stats.sim_ms < dense.stats.sim_ms);
     }
 }

@@ -81,6 +81,8 @@ impl FaultPlan {
             && (self.spike_p == 0.0 || self.spike_ms == 0.0)
     }
 
+    /// Reject non-probability rates and non-finite spike durations
+    /// before a plan reaches a serve loop.
     pub fn validate(&self) -> anyhow::Result<()> {
         for (name, p) in [("fault rate", self.step_fail_p),
                           ("spike rate", self.spike_p)] {
@@ -179,6 +181,8 @@ impl RetryPolicy {
             .min(self.cap_ms)
     }
 
+    /// Reject non-finite or shrinking backoff schedules before a
+    /// policy reaches a serve loop.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.base_ms.is_finite() && self.base_ms >= 0.0
@@ -293,6 +297,9 @@ pub struct FaultyBackend<B> {
 }
 
 impl<B: LogitsBackend> FaultyBackend<B> {
+    /// Wrap `inner` with the plan's fault stream for one lane; each
+    /// lane forks its own RNG stream so fault schedules stay
+    /// deterministic under any lane interleaving.
     pub fn new(inner: B, plan: &FaultPlan, lane: usize)
                -> anyhow::Result<FaultyBackend<B>> {
         plan.validate()?;
@@ -313,6 +320,7 @@ impl<B: LogitsBackend> FaultyBackend<B> {
         self.attempts
     }
 
+    /// Unwrap the inner backend (tests inspect it after a run).
     pub fn into_inner(self) -> B {
         self.inner
     }

@@ -22,7 +22,9 @@
 //!    (virtual) clock. Unbounded admission — the old behavior — is
 //!    the default.
 //!  * [`clock`] — the loop's notion of time ([`clock::Schedule`],
-//!    the virtual/wall `Clock`, the arrival queue).
+//!    the virtual/wall `Clock`, the arrival queue) and the per-lane
+//!    step-cost multipliers ([`clock::LaneCost`]) that make a sparse
+//!    lane step cheaper than a dense one on the virtual clock.
 //!  * [`fault`] — deterministic fault injection and recovery:
 //!    [`fault::FaultPlan`]-driven [`fault::FaultyBackend`] wrappers
 //!    (seeded transient step errors, permanent lane death, latency
@@ -57,7 +59,7 @@ pub mod registry;
 pub mod telemetry;
 
 pub use self::admission::AdmissionPolicy;
-pub use self::clock::Schedule;
+pub use self::clock::{LaneCost, Schedule};
 pub use self::core::{serve, serve_kv, serve_timed, serve_with,
                      ServeConfig};
 pub use self::fault::{ChaosConfig, FaultPlan, FaultSpec,
@@ -91,6 +93,7 @@ pub struct DecodeRequest {
 }
 
 impl DecodeRequest {
+    /// A default-priority request with no model preference.
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize)
                -> DecodeRequest {
         DecodeRequest { id, prompt, max_new_tokens, priority: 0,

@@ -18,6 +18,21 @@
 use super::DecodeRequest;
 
 /// Pick which ready request fills the next free slot.
+///
+/// ```
+/// use spdf::generate::serve::policy::{Fifo, Scheduler,
+///                                     SmallestBudgetFirst};
+/// use spdf::generate::DecodeRequest;
+///
+/// let requests = vec![
+///     DecodeRequest::new(0, vec![1, 2, 3], 32),
+///     DecodeRequest::new(1, vec![4], 4),
+/// ];
+/// let ready = vec![0, 1]; // both waiting, arrival order
+/// assert_eq!(Fifo.pick(&ready, &requests), 0);
+/// // request 1 has the smaller budget, so it frees its slot soonest
+/// assert_eq!(SmallestBudgetFirst.pick(&ready, &requests), 1);
+/// ```
 pub trait Scheduler {
     /// Flag/report name ("fifo", "shortest-prompt", ...).
     fn name(&self) -> &'static str;

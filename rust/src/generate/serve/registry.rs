@@ -34,6 +34,26 @@ use super::DecodeRequest;
 /// N named decode engines behind one serve loop. The first registered
 /// entry is the **default model** — the target of requests whose
 /// [`DecodeRequest::model`] is `None`.
+///
+/// ```no_run
+/// use spdf::generate::{DecodeParams, DecodeRequest};
+/// use spdf::generate::engine::DecodeEngine;
+/// use spdf::generate::serve::ModelRegistry;
+///
+/// fn sweep(dense: &DecodeEngine, s75: &DecodeEngine)
+///          -> anyhow::Result<()> {
+///     let mut reg = ModelRegistry::new("dense", dense)?;
+///     reg.register("s75", s75)?;
+///     let reqs = vec![
+///         // no tag → the default model ("dense")
+///         DecodeRequest::new(0, vec![1, 2, 3], 8),
+///         DecodeRequest::new(1, vec![4, 5], 8).with_model("s75"),
+///     ];
+///     let report = reg.serve(&reqs, &DecodeParams::default())?;
+///     assert_eq!(report.stats.completed, 2);
+///     Ok(())
+/// }
+/// ```
 pub struct ModelRegistry<'e, 'a> {
     entries: Vec<(String, &'e DecodeEngine<'a>)>,
 }
@@ -66,6 +86,7 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
         Ok(())
     }
 
+    /// Number of registered models, the default entry included.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -206,8 +227,21 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
             .collect::<anyhow::Result<_>>()?;
         let mut refs: Vec<&mut dyn LogitsBackend> =
             backends.iter_mut().map(|b| b.as_mut()).collect();
-        core::run_lanes_with(&mut refs, &names, &lane_of, requests,
-                             dp, cfg.schedule, cfg.scheduler,
-                             cfg.admission, &recovery)
+        // heterogeneous step costs: each lane's virtual step is scaled
+        // by its engine's realized density (unit for dense engines),
+        // so the s75 lane of a checkpoint-sweep registry steps ~4x
+        // cheaper than dense on the shared clock
+        let costs = self.lane_costs();
+        core::run_lanes_with_costs(&mut refs, &names, &lane_of,
+                                   requests, dp, cfg.schedule,
+                                   cfg.scheduler, cfg.admission,
+                                   &recovery, &costs)
+    }
+
+    /// Per-lane virtual step-cost multipliers, registration order:
+    /// each engine's [`DecodeEngine::lane_cost`] (unit for dense and
+    /// dense-loaded engines, density-scaled for CSR-resident ones).
+    pub fn lane_costs(&self) -> Vec<super::clock::LaneCost> {
+        self.entries.iter().map(|(_, e)| e.lane_cost()).collect()
     }
 }

@@ -21,6 +21,7 @@ pub enum RequestOutcome {
 }
 
 impl RequestOutcome {
+    /// Stable lowercase name, as written into telemetry JSON.
     pub fn as_str(&self) -> &'static str {
         match self {
             RequestOutcome::Completed => "completed",
@@ -30,6 +31,8 @@ impl RequestOutcome {
         }
     }
 
+    /// True only for [`RequestOutcome::Completed`] — the goodput
+    /// predicate.
     pub fn is_completed(&self) -> bool {
         matches!(self, RequestOutcome::Completed)
     }

@@ -10,7 +10,7 @@
 //!   serve       continuous-batching decode over a request stream
 //!   loadgen     arrival-time load generator: latency-under-load sweep
 //!   subspace    Figures 3–4 cosine-distance analysis
-//!   lint        determinism & panic-safety static analysis
+//!   lint        determinism & panic-safety & doc-coverage lints
 //!   gen-data    dump synthetic task examples (inspection/demo)
 
 use std::path::PathBuf;
@@ -81,7 +81,7 @@ fn print_help() {
            loadgen     arrival-time load generator \
            (latency-under-load sweep)\n\
            subspace    Figures 3-4 cosine-distance analysis\n\
-           lint        determinism & panic-safety static analysis\n\
+           lint        determinism & panic-safety & doc lints\n\
            gen-data    dump synthetic task examples\n\n\
          run `spdf <command> --help` for flags"
     );
@@ -1192,9 +1192,9 @@ fn cmd_subspace(raw: &[String]) -> anyhow::Result<()> {
 fn cmd_lint(raw: &[String]) -> anyhow::Result<()> {
     let cli = Cli::new(
         "spdf lint",
-        "determinism & panic-safety static analysis over the source \
-         tree (float-sort, unordered, wall-clock, panic-safety, \
-         rng-discipline)")
+        "determinism & panic-safety & doc-coverage static analysis \
+         over the source tree (float-sort, unordered, wall-clock, \
+         panic-safety, rng-discipline, doc-coverage)")
         .flag("root", "",
               "source root to scan (default: this crate's src/)")
         .flag("json", "",

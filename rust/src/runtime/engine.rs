@@ -12,6 +12,43 @@ use std::path::Path;
 use super::manifest::{ArtifactSpec, Dtype, Manifest, ModelManifest,
                       TensorSpec};
 use super::tensor::HostTensor;
+use crate::sparse_compute::Csr;
+
+/// Host-side residency of one [`LiteralCache`] slot.
+///
+/// Dense slots live only in their XLA literal. Sparse slots keep a
+/// [`Csr`] as the host-side authority for everything downstream of
+/// storage — step-cost calibration, spmm-backed analysis, residency
+/// accounting — pinned at upload to reproduce the literal's bytes up
+/// to `-0.0 → +0.0` canonicalization (`from_dense` keeps exactly the
+/// values `v != 0.0`, which drops the `-0.0`s a `w *= mask` sparsify
+/// writes; `spmm`/`dense_matmul` skip those identically, so the
+/// canonicalization is invisible to the compute pin). The host pays
+/// CSR bytes instead of dense bytes for the authoritative copy.
+pub enum SlotResidency {
+    /// The XLA literal is the only copy of this slot.
+    Dense,
+    /// Host authority is this CSR; the literal equals its
+    /// `to_dense()` up to zero canonicalization.
+    Sparse(Csr),
+}
+
+impl SlotResidency {
+    /// Bytes of the extra host-side authoritative copy this slot
+    /// keeps: the CSR arrays (values + col indices + row pointers)
+    /// for sparse slots, zero for dense slots (their literal is the
+    /// only copy). Compare against `elems × 4` to see the compression
+    /// a dense host copy would have cost instead.
+    pub fn host_bytes(&self) -> usize {
+        match self {
+            SlotResidency::Dense => 0,
+            SlotResidency::Sparse(c) => {
+                c.nnz() * (4 + 4)
+                    + (c.rows + 1) * std::mem::size_of::<usize>()
+            }
+        }
+    }
+}
 
 /// Host tensors uploaded to XLA literals **once** and reused across
 /// many `run_raw` calls — the pattern `train/session.rs` proved for the
@@ -19,8 +56,17 @@ use super::tensor::HostTensor;
 /// parameters, fixed masks, …). Validate against the artifact's spec at
 /// construction via [`LiteralCache::upload_validated`], then the hot
 /// loop pays neither validation nor re-upload.
+///
+/// Sparse-pretrained checkpoints can opt into CSR residency via
+/// [`LiteralCache::upload_sparse_validated`]: 2-D f32 slots at or
+/// under a density threshold are detected at upload and kept as
+/// [`Csr`] on the host, while their literals are built from the
+/// source bytes exactly as a dense upload would — same literals,
+/// compressed host authority (see [`SlotResidency`]).
 pub struct LiteralCache {
     lits: Vec<xla::Literal>,
+    /// Per-slot host residency, aligned with `lits`.
+    residency: Vec<SlotResidency>,
 }
 
 impl LiteralCache {
@@ -30,7 +76,9 @@ impl LiteralCache {
             .iter()
             .map(|t| t.to_literal())
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(LiteralCache { lits })
+        let residency =
+            tensors.iter().map(|_| SlotResidency::Dense).collect();
+        Ok(LiteralCache { lits, residency })
     }
 
     /// Upload after checking every tensor against the matching spec
@@ -38,6 +86,75 @@ impl LiteralCache {
     /// per-call validation.
     pub fn upload_validated(tensors: &[HostTensor], specs: &[TensorSpec])
                             -> anyhow::Result<LiteralCache> {
+        Self::validate_slots(tensors, specs)?;
+        Self::upload(tensors)
+    }
+
+    /// [`LiteralCache::upload_validated`] with sparse-residency
+    /// detection: any 2-D f32 slot whose density (nnz / elems) is at
+    /// most `max_density` is additionally held as a host-side
+    /// [`Csr`]. The uploaded literal is **always** built from the
+    /// source tensor's exact bytes — residency never changes what the
+    /// artifact computes, so a sparse-resident engine is bit-for-bit
+    /// a dense-loaded one by construction. The CSR is pinned against
+    /// the source up to zero canonicalization: `to_dense()` must
+    /// reproduce every stored value bit-for-bit, and dropped slots
+    /// must be `±0.0` (sparsified checkpoints hold `-0.0` where
+    /// `w *= mask` zeroed a negative weight — the same values rust's
+    /// `spmm`/`dense_matmul` pair skips on both sides). Slots above
+    /// the threshold (embeddings, layernorm gains, dense checkpoints)
+    /// stay dense-only.
+    pub fn upload_sparse_validated(
+        tensors: &[HostTensor],
+        specs: &[TensorSpec],
+        max_density: f64,
+    ) -> anyhow::Result<LiteralCache> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&max_density),
+            "sparse residency threshold must be in [0, 1] \
+             (got {max_density})"
+        );
+        Self::validate_slots(tensors, specs)?;
+        let mut lits = Vec::with_capacity(tensors.len());
+        let mut residency = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            lits.push(t.to_literal()?);
+            let sparse = match (t.dtype(), t.shape()) {
+                (Dtype::F32, [r, c]) => {
+                    let data = t.as_f32()?;
+                    let nnz =
+                        data.iter().filter(|&&v| v != 0.0).count();
+                    let density = nnz as f64 / data.len().max(1) as f64;
+                    if density <= max_density {
+                        Some(Csr::from_dense(data, *r, *c))
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            match sparse {
+                Some(csr) => {
+                    // the pin the whole sparse path hangs off:
+                    // to_dense() restores the source exactly, except
+                    // that dropped ±0.0 slots come back as +0.0
+                    anyhow::ensure!(
+                        csr.to_dense().iter().zip(t.as_f32()?).all(
+                            |(a, b)| a.to_bits() == b.to_bits()
+                                || (*a == 0.0 && *b == 0.0)),
+                        "CSR round-trip diverged from source tensor"
+                    );
+                    residency.push(SlotResidency::Sparse(csr));
+                }
+                None => residency.push(SlotResidency::Dense),
+            }
+        }
+        Ok(LiteralCache { lits, residency })
+    }
+
+    /// Shared spec check for the validated upload paths.
+    fn validate_slots(tensors: &[HostTensor], specs: &[TensorSpec])
+                      -> anyhow::Result<()> {
         anyhow::ensure!(
             tensors.len() == specs.len(),
             "literal cache: got {} tensors for {} spec slots",
@@ -51,13 +168,15 @@ impl LiteralCache {
                 s.name, t.shape(), t.dtype(), s.shape, s.dtype
             );
         }
-        Self::upload(tensors)
+        Ok(())
     }
 
+    /// Number of cached slots.
     pub fn len(&self) -> usize {
         self.lits.len()
     }
 
+    /// True when no slots are cached.
     pub fn is_empty(&self) -> bool {
         self.lits.is_empty()
     }
@@ -66,6 +185,41 @@ impl LiteralCache {
     /// input list.
     pub fn refs(&self) -> impl Iterator<Item = &xla::Literal> {
         self.lits.iter()
+    }
+
+    /// Per-slot host residency, aligned with [`LiteralCache::refs`]
+    /// order.
+    pub fn residency(&self) -> &[SlotResidency] {
+        &self.residency
+    }
+
+    /// How many slots are CSR-resident.
+    pub fn sparse_slots(&self) -> usize {
+        self.residency
+            .iter()
+            .filter(|r| matches!(r, SlotResidency::Sparse(_)))
+            .count()
+    }
+
+    /// Realized weight sparsity over the CSR-resident slots only
+    /// (`None` when no slot was detected sparse): `1 − Σnnz / Σelems`.
+    /// This — not sparsity over *all* params — is what calibrates a
+    /// lane's step cost: dense-held slots (embeddings, biases) do the
+    /// same work on every lane, while the masked matmul slots are
+    /// where the FLOPs savings live.
+    pub fn sparse_sparsity(&self) -> Option<f64> {
+        let (mut nnz, mut elems) = (0usize, 0usize);
+        for r in &self.residency {
+            if let SlotResidency::Sparse(c) = r {
+                nnz += c.nnz();
+                elems += c.rows * c.cols;
+            }
+        }
+        if elems == 0 {
+            None
+        } else {
+            Some(1.0 - nnz as f64 / elems as f64)
+        }
     }
 }
 

@@ -11,6 +11,28 @@ use crate::util::rng::Rng;
 use crate::util::threads;
 
 /// Compressed Sparse Row matrix (f32).
+///
+/// `from_dense` drops only exact zeros, so `to_dense()` is an exact
+/// round-trip — and [`Csr::spmm`] matches [`dense_matmul`] **bitwise**
+/// (not approximately): both accumulate k-major in the same order, and
+/// the dense kernel explicitly skips zero operands the same way the
+/// sparse one structurally does. That bitwise pin is what lets the
+/// serve path hold sparse checkpoints CSR-resident without perturbing
+/// a single logit.
+///
+/// ```
+/// use spdf::sparse_compute::Csr;
+///
+/// let dense = vec![1.0, 0.0, 2.0,
+///                  0.0, 0.0, 3.0];
+/// let csr = Csr::from_dense(&dense, 2, 3);
+/// assert_eq!(csr.nnz(), 3);
+/// assert_eq!(csr.to_dense(), dense);          // exact round-trip
+/// assert_eq!(csr.density(), 0.5);
+/// // multiply by a dense (cols × n) B, here n = 1
+/// let b = vec![10.0, 20.0, 30.0];
+/// assert_eq!(csr.spmm(&b, 1), vec![70.0, 90.0]);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Csr {
     pub rows: usize,
@@ -68,14 +90,18 @@ impl Csr {
         Csr { rows, cols, row_ptr, col_idx, values }
     }
 
+    /// Stored (nonzero) element count.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
 
+    /// Fraction of elements stored: `nnz / (rows × cols)`.
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
+    /// Materialize the dense row-major matrix. Exact inverse of
+    /// [`Csr::from_dense`] (zeros dropped there come back as `+0.0`).
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.rows * self.cols];
         for r in 0..self.rows {
@@ -238,6 +264,113 @@ mod tests {
         assert_eq!(theoretical_speedup(0.5), 2.0);
         assert_eq!(theoretical_speedup(0.75), 4.0);
         assert!((theoretical_speedup(0.9983) - 588.0).abs() < 10.0);
+    }
+
+    /// Bitwise equality — the serve-path pin, not a tolerance check.
+    fn bitwise(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b)
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul_bitwise_at_edge_shapes() {
+        // the decode path feeds spmm shapes the tolerance tests above
+        // never exercised: single-row A, n=1 activations, empty rows,
+        // and a fully-dense matrix. The pin is exact: spmm(csr, x)
+        // must equal dense_matmul(to_dense(csr), x) bit for bit,
+        // because both accumulate k-major per row and the dense
+        // kernel's zero-skip mirrors the CSR structure.
+        let mut rng = Rng::new(11);
+        let shapes: [(usize, usize, usize, f64); 6] = [
+            (1, 16, 8, 0.75),  // 1-row A
+            (16, 16, 1, 0.75), // 1-column activations
+            (1, 8, 1, 0.5),    // both degenerate
+            (12, 12, 6, 0.97), // near-empty rows
+            (8, 8, 8, 0.0),    // fully-dense input
+            (64, 48, 17, 0.75),
+        ];
+        for (m, k, n, s) in shapes {
+            let csr = Csr::random(m, k, s, &mut rng);
+            let dense = csr.to_dense();
+            let b: Vec<f32> = (0..k * n)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            assert!(
+                bitwise(&csr.spmm(&b, n),
+                        &dense_matmul(&dense, &b, m, k, n)),
+                "bitwise divergence at {m}x{k}x{n} s={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul_bitwise_with_empty_rows() {
+        // rows 1 and 3 are structurally empty: spmm never touches
+        // them, dense_matmul skips every (zero) operand — both must
+        // leave exact +0.0 outputs
+        let dense = vec![
+            1.5, 0.0, -2.0, 0.0, //
+            0.0, 0.0, 0.0, 0.0, //
+            0.0, 3.0, 0.0, -0.5, //
+            0.0, 0.0, 0.0, 0.0,
+        ];
+        let csr = Csr::from_dense(&dense, 4, 4);
+        assert_eq!(csr.row_ptr, vec![0, 2, 2, 4, 4]);
+        let b: Vec<f32> = (0..4 * 3)
+            .map(|i| (i as f32) * 0.37 - 1.1)
+            .collect();
+        let got = csr.spmm(&b, 3);
+        assert!(bitwise(&got, &dense_matmul(&dense, &b, 4, 4, 3)));
+        for j in 0..3 {
+            assert_eq!(got[3 + j].to_bits(), 0.0f32.to_bits());
+            assert_eq!(got[9 + j].to_bits(), 0.0f32.to_bits());
+        }
+    }
+
+    #[test]
+    fn spmm_nan_input_regression() {
+        // NaN in the dense activations: both kernels skip it where
+        // A's entry is (structurally) zero and propagate it where A
+        // is nonzero — identically. Before the dense kernel mirrored
+        // the zero-skip, 0·NaN would have poisoned the dense baseline
+        // while spmm stayed finite.
+        let dense = vec![
+            2.0, 0.0, //
+            0.0, 1.0,
+        ];
+        let csr = Csr::from_dense(&dense, 2, 2);
+        // B row 1 is all-NaN: row 0 of A never reads it
+        let b = vec![3.0, 4.0, f32::NAN, f32::NAN];
+        let sp = csr.spmm(&b, 2);
+        let dn = dense_matmul(&dense, &b, 2, 2, 2);
+        assert!(bitwise(&sp, &dn));
+        assert_eq!(&sp[..2], &[6.0, 8.0]); // NaN skipped, not spread
+        assert!(sp[2].is_nan() && sp[3].is_nan());
+    }
+
+    #[test]
+    fn property_spmm_equals_dense_matmul_bitwise() {
+        crate::util::proptest::check(
+            29, 10, 40,
+            |rng: &mut Rng, size: usize| {
+                let m = 1 + rng.below(size.max(2));
+                let k = 1 + rng.below(size.max(2));
+                let n = 1 + rng.below(12);
+                let s = [0.0, 0.5, 0.75, 0.95][rng.below(4)];
+                (m, k, n, s, rng.next_u64())
+            },
+            |&(m, k, n, s, seed)| {
+                let mut rng = Rng::new(seed);
+                let csr = Csr::random(m, k, s, &mut rng);
+                let dense = csr.to_dense();
+                let b: Vec<f32> = (0..k * n)
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect();
+                bitwise(&csr.spmm(&b, n),
+                        &dense_matmul(&dense, &b, m, k, n))
+            },
+        );
     }
 
     #[test]

@@ -893,6 +893,122 @@ fn registry_cross_engine_golden_mixed_trace() {
 }
 
 #[test]
+fn sparse_residency_artifact_golden() {
+    // tentpole acceptance (ISSUE 8): CSR residency never changes
+    // compute. An s75 checkpoint loaded through the auto-detecting
+    // path (held CSR-resident) must decode bit-identically to its
+    // dense-loaded twin and to the reference oracle; registering the
+    // CSR lane next to a dense lane must not perturb the dense lane's
+    // streams; and on the calibrated clock the sparse lane's cheaper
+    // steps must finish the same trace no later than the dense lane.
+    use spdf::generate::serve::admission::Unbounded;
+    use spdf::generate::serve::policy::Fifo;
+    use spdf::generate::{ChaosConfig, ModelRegistry};
+
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let mut rng = Rng::new(57);
+    let mut state = TrainState::init(mm, &mut rng);
+    state.sparsify(MaskSet::random(
+        mm, 0.75, MaskScheme::Uniform, &mut rng));
+    let s75_params = state.param_tensors(mm);
+
+    let auto = DecodeEngine::new(&runtime, &s75_params).unwrap();
+    let dense_loaded =
+        DecodeEngine::new_dense(&runtime, &s75_params).unwrap();
+    assert_eq!(auto.sparse_slots(), mm.masked_params.len(),
+               "auto-detect must hold every masked param CSR");
+    assert_eq!(dense_loaded.sparse_slots(), 0);
+    let s = auto.sparsity().expect("sparse slots detected");
+    assert!((s - 0.75).abs() < 0.01, "realized sparsity {s}");
+    let (csr_bytes, dense_bytes) = auto.sparse_host_bytes();
+    assert!(csr_bytes < dense_bytes,
+            "CSR residency must save host bytes ({csr_bytes} vs \
+             {dense_bytes})");
+    let scale = auto.lane_cost().step_scale;
+    assert!((scale - (1.0 - s)).abs() < 1e-12,
+            "lane cost must calibrate from realized sparsity");
+    assert!((dense_loaded.lane_cost().step_scale - 1.0).abs() == 0.0);
+
+    // greedy: CSR-resident == dense-loaded == reference oracle,
+    // token-for-token
+    let prompts: Vec<Vec<u32>> = (0..mm.decode_batch)
+        .map(|i| vec![BOS, 7 + i as u32, SEP])
+        .collect();
+    let dp = DecodeParams { max_new_tokens: 8, ..Default::default() };
+    let a = auto.greedy(&prompts, &dp).unwrap();
+    let d = dense_loaded.greedy(&prompts, &dp).unwrap();
+    let r = reference::greedy(&runtime, &s75_params, &prompts, &dp)
+        .unwrap();
+    assert_eq!(a, d, "CSR residency changed greedy decode");
+    assert_eq!(a, r, "engine diverged from the reference oracle");
+
+    // cross-lane golden: the same default-routed trace through a
+    // dense-only registry and a dense+s75 registry — adding the CSR
+    // lane must leave every survivor's stream bit-identical
+    let reg_a = ModelRegistry::new("dense", &dense_loaded).unwrap();
+    let mut reg_b = ModelRegistry::new("dense", &dense_loaded).unwrap();
+    reg_b.register("s75", &auto).unwrap();
+    let cfg = TraceConfig {
+        seed: 31,
+        requests: mm.decode_batch + 3,
+        rate_rps: 400.0,
+        pattern: Pattern::Bursty { burst: mm.decode_batch + 3 },
+        prompt_lens: (3, 6),
+        budgets: (2, 6),
+        vocab: mm.config.vocab_size,
+        priority_classes: 1,
+        model_mix: Vec::new(),
+    };
+    let trace = loadgen::generate_trace(&cfg).unwrap();
+    let dp = DecodeParams::default();
+    let costs = StepCosts::default();
+    let run = |reg: &ModelRegistry, t: &loadgen::Trace| {
+        loadgen::run_trace_registry(
+            reg, t, &dp, false, &costs, &Fifo, &Unbounded,
+            &ChaosConfig::default())
+            .unwrap()
+    };
+    let (_, _, rep_a) = run(&reg_a, &trace);
+    let (_, _, rep_b) = run(&reg_b, &trace);
+    assert_eq!(rep_a.results.len(), rep_b.results.len());
+    for (x, y) in rep_a.results.iter().zip(&rep_b.results) {
+        assert_eq!(x.tokens, y.tokens,
+                   "registering a CSR lane perturbed the dense lane \
+                    (req {})", x.id);
+    }
+
+    // calibrated clock: route the whole trace to each lane in turn.
+    // Same weights on both lanes, so the streams stay bitwise equal —
+    // only the virtual makespan may differ, and the sparse lane's
+    // cheaper steps must never finish later
+    let route_all = |name: &str| {
+        let mut t = trace.clone();
+        for r in t.requests.iter_mut() {
+            r.model = Some(name.into());
+        }
+        t
+    };
+    let (dense_pt, _, rep_d) = run(&reg_b, &route_all("dense"));
+    let (s75_pt, _, rep_s) = run(&reg_b, &route_all("s75"));
+    for pt in [&dense_pt, &s75_pt] {
+        assert_eq!(pt.completed, pt.requests,
+                   "unbounded admission must complete every request");
+    }
+    for (x, y) in rep_d.results.iter().zip(&rep_s.results) {
+        assert_eq!(x.tokens, y.tokens,
+                   "dense-routed and s75-routed streams diverged \
+                    (req {})", x.id);
+    }
+    assert!(s75_pt.sim_ms < dense_pt.sim_ms,
+            "s75 lane (step scale {scale:.2}) should beat the dense \
+             lane on the virtual clock ({} vs {} ms)",
+            s75_pt.sim_ms, dense_pt.sim_ms);
+    assert!(s75_pt.tokens_per_vsec > dense_pt.tokens_per_vsec);
+}
+
+#[test]
 fn beam_capacity_boundary_emits_scored_token() {
     // regression (ISSUE 2): a beam finished by the capacity check used
     // to accumulate the candidate's log-prob but drop the token — the

@@ -34,7 +34,18 @@ regresses by more than the tolerance:
                          at every nonzero fault rate the failover
                          goodput must be at least the no-failover
                          goodput — failover that does not help is a
-                         recovery regression, not noise.
+                         recovery regression, not noise. The sparse
+                         leg (sparse.*) is required too: the
+                         CSR-resident s75 run and its dense twin must
+                         both complete every request, the CSR
+                         residency must actually cost fewer host
+                         bytes than the dense equivalent, and the
+                         measured virtual-time speedup must be at
+                         least the required floor (sqrt of the
+                         theoretical FLOPs ratio) — all enforced
+                         fresh-side, so a BENCH_GATE_REFRESH can
+                         never bake a truncated or violating sparse
+                         leg into the baseline.
 
 Usage:
     python3 scripts/bench_gate.py [ROOT]
@@ -74,6 +85,7 @@ RELATIVE_SPECS = {
         ("shed.goodput_tokens_per_sec", "higher"),
         ("multi_model.aggregate.goodput_tokens_per_sec", "higher"),
         ("multi_model.aggregate.latency_ms.p95", "lower"),
+        ("sparse.measured_speedup", "higher"),
     ],
 }
 
@@ -145,6 +157,7 @@ def check_absolute(name, current, tol):
         failures.extend(check_shed_datapoints(name, current))
         failures.extend(check_multi_model_datapoints(name, current))
         failures.extend(check_fault_datapoints(name, current))
+        failures.extend(check_sparse_datapoints(name, current))
     return failures
 
 
@@ -316,6 +329,80 @@ def check_fault_datapoints(name, current):
     if nonzero == 0 and not failures:
         failures.append(f"{name}:fault.rates: no nonzero fault rate "
                         "— the leg never actually injected faults")
+    return failures
+
+
+# the sparse block's scalar datapoints; a missing one would silently
+# disable the speedup/residency checks below
+SPARSE_REQUIRED_KEYS = ["sparsity", "sparse_slots", "step_scale",
+                        "csr_host_bytes", "dense_equiv_bytes",
+                        "flops_speedup", "required_speedup",
+                        "measured_speedup"]
+
+# each routed run (all-dense / all-s75) must carry the counters the
+# completion check reads plus the virtual-time throughput the speedup
+# is computed from
+SPARSE_VARIANT_KEYS = ["requests", "completed", "generated_tokens",
+                       "tokens_per_vsec"]
+
+
+def check_sparse_datapoints(name, current):
+    """Structural + invariant checks on the fresh sparse leg: the
+    block must be present and untruncated (a stale bench could
+    silently drop it — and a refresh would bake the gap into the
+    baseline, disabling the sparsity gates forever), both routed runs
+    must complete every request (the leg serves an unbounded queue),
+    the CSR residency must actually cost fewer host bytes than the
+    dense equivalent, and the measured virtual-time speedup of the
+    s75 lane over the dense lane must be at least the required floor
+    (sqrt of the theoretical FLOPs ratio) — the heterogeneous step
+    costs must show up on the clock, not just in the config."""
+    failures = []
+    sparse = current.get("sparse")
+    if not isinstance(sparse, dict):
+        failures.append(f"{name}:sparse: block missing — the smoke "
+                        "did not run the CSR-resident sparse leg")
+        return failures
+    missing = [k for k in SPARSE_REQUIRED_KEYS if k not in sparse]
+    if missing:
+        failures.append(f"{name}:sparse: missing "
+                        f"{','.join(missing)}")
+    for variant in ("dense", "s75"):
+        point = sparse.get(variant)
+        if not isinstance(point, dict):
+            failures.append(f"{name}:sparse: missing {variant} "
+                            "datapoint")
+            continue
+        absent = [k for k in SPARSE_VARIANT_KEYS if k not in point]
+        if absent:
+            failures.append(f"{name}:sparse.{variant}: missing "
+                            f"{','.join(absent)}")
+            continue
+        if point["completed"] != point["requests"]:
+            failures.append(
+                f"{name}:sparse.{variant}: {point['completed']} of "
+                f"{point['requests']} requests completed (the leg "
+                "serves an unbounded queue — every request must "
+                "finish)")
+    if missing:
+        return failures
+    csr = get_path(sparse, "csr_host_bytes")
+    dense = get_path(sparse, "dense_equiv_bytes")
+    if csr is not None and dense is not None and csr >= dense:
+        failures.append(
+            f"{name}:sparse: CSR residency costs {csr} host bytes, "
+            f"no better than the {dense}-byte dense equivalent — "
+            "sparse storage that saves nothing is a residency "
+            "regression")
+    measured = get_path(sparse, "measured_speedup")
+    required = get_path(sparse, "required_speedup")
+    if measured is not None and required is not None \
+            and measured < required:
+        failures.append(
+            f"{name}:sparse: measured speedup {measured:.3f} below "
+            f"required {required:.3f} (the s75 lane's virtual-time "
+            "throughput must beat dense by at least the sqrt of the "
+            "FLOPs ratio)")
     return failures
 
 

@@ -4,6 +4,7 @@
 #   scripts/check.sh                 full gate
 #   SKIP_CLIPPY=1 scripts/check.sh   when clippy is unavailable
 #   SKIP_FMT=1 scripts/check.sh      when rustfmt is unavailable
+#   SKIP_DOC=1 scripts/check.sh      when rustdoc is unavailable
 #   SKIP_LINT=1 scripts/check.sh     skip the spdf lint pass (only
 #                                    while bisecting — CI runs it)
 #   BENCH_GATE_REFRESH=1 ...         refresh bench_baselines/ after an
@@ -47,8 +48,16 @@ if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     cargo clippy --all-targets -- -D warnings
 fi
 
+if [ "${SKIP_DOC:-0}" != "1" ]; then
+    # rustdoc warnings (broken intra-doc links, bad code fences) are
+    # hard failures: docs/ARCHITECTURE.md routes readers into the
+    # rendered API docs, so they must build clean
+    echo '== RUSTDOCFLAGS="-D warnings" cargo doc --no-deps =='
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+fi
+
 if [ "${SKIP_LINT:-0}" != "1" ]; then
-    echo "== spdf lint (determinism & panic-safety) =="
+    echo "== spdf lint (determinism & panic-safety & doc coverage) =="
     cargo run --release --quiet -- lint
 fi
 
@@ -76,9 +85,10 @@ done
 
 # the serve-load smoke must carry the scheduling/shedding datapoints
 # (goodput + shed rate per point, plus the past-the-knee shed leg,
-# the multi-model registry leg and the fault-injection leg) —
-# bench_gate.py gates on them, so their absence should fail loudly
-# here with a better message than a missing-metric skip
+# the multi-model registry leg, the fault-injection leg and the
+# CSR-resident sparse leg) — bench_gate.py gates on them, so their
+# absence should fail loudly here with a better message than a
+# missing-metric skip
 python3 - "$ROOT/BENCH_serve_load.json" <<'EOF'
 import json, sys
 
@@ -115,10 +125,21 @@ for i, r in enumerate(rates):
                     "degraded", "goodput_tokens_per_sec"):
             assert key in p, \
                 f"fault rate row {i} {variant} lacks {key}"
+sparse = j.get("sparse") or {}
+for key in ("sparsity", "sparse_slots", "step_scale",
+            "csr_host_bytes", "dense_equiv_bytes", "flops_speedup",
+            "required_speedup", "measured_speedup"):
+    assert key in sparse, f"sparse leg lacks {key}"
+for variant in ("dense", "s75"):
+    p = sparse.get(variant) or {}
+    for key in ("requests", "completed", "generated_tokens",
+                "tokens_per_vsec"):
+        assert key in p, f"sparse leg {variant} run lacks {key}"
 print(f"check.sh: serve-load smoke carries goodput/shed/multi-model/"
-      f"fault datapoints ({len(pts)} points + shed leg, shed rate "
-      f"{shed['shed_rate']:.0%}, {len(per_model)} registry models, "
-      f"{len(rates)} fault rates)")
+      f"fault/sparse datapoints ({len(pts)} points + shed leg, shed "
+      f"rate {shed['shed_rate']:.0%}, {len(per_model)} registry "
+      f"models, {len(rates)} fault rates, sparse speedup "
+      f"{sparse['measured_speedup']:.2f}x)")
 EOF
 
 echo "== perf-regression gate (scripts/bench_gate.py) =="
