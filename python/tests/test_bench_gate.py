@@ -141,6 +141,46 @@ def sparse_json(measured=4.0, required=2.0):
     }
 
 
+def spec_variant(requests=10, tokens=320, tpv=100.0):
+    return {
+        "model": "dense",
+        "engine": "literal",
+        "requests": requests,
+        "completed": requests,
+        "generated_tokens": tokens,
+        "tokens_per_vsec": tpv,
+    }
+
+
+def speculative_json(mean_acceptance=3.0, floor=1.0, speedup=2.0,
+                     bitwise=True, tokens=320):
+    verifies = 100
+    accepted = int(mean_acceptance * verifies)
+    return {
+        "draft": "s75",
+        "verifier": "dense",
+        "k": 4,
+        "draft_step_scale": 0.25,
+        "acceptance_floor": floor,
+        "mean_acceptance": mean_acceptance,
+        "acceptance_rate": accepted / 400.0,
+        "tokens_per_verify": tokens / verifies,
+        "drafted": 400,
+        "accepted": accepted,
+        # conservation by construction: every emitted token is either
+        # an accepted draft or a verifier correction
+        "corrections": tokens - accepted,
+        "verifies": verifies,
+        "wasted_drafts": 400 - accepted,
+        "bitwise_equal": bitwise,
+        "dense_tokens_per_vsec": 100.0,
+        "spec_tokens_per_vsec": 100.0 * speedup,
+        "measured_speedup": speedup,
+        "dense": spec_variant(tpv=100.0, tokens=tokens),
+        "spec": spec_variant(tpv=100.0 * speedup, tokens=tokens),
+    }
+
+
 def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
                     goodput=500.0):
     return {
@@ -154,6 +194,7 @@ def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
         "multi_model": multi_model_json(),
         "fault": fault_json(),
         "sparse": sparse_json(),
+        "speculative": speculative_json(),
         "points": [
             point("literal", p95, p95 / 2, goodput=goodput),
             point("kv", p95 * 0.8, p95 / 3, goodput=goodput * 1.2),
@@ -600,6 +641,164 @@ class TestSparseGates:
         cur = serve_load_json()
         base = serve_load_json()
         del base["sparse"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert fails == []
+
+
+class TestSpeculativeGates:
+    def test_missing_speculative_leg_fails(self):
+        # the smoke must run the speculative leg — with no baseline
+        # at all its absence is already a hard failure
+        cur = serve_load_json()
+        del cur["speculative"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("speculative: block missing" in f for f in fails)
+
+    def test_truncated_speculative_leg_fails(self):
+        # a keyless block would silently disable the bitwise and
+        # break-even gates
+        cur = serve_load_json()
+        del cur["speculative"]["bitwise_equal"]
+        del cur["speculative"]["measured_speedup"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("speculative: missing" in f for f in fails)
+        # both routed runs must be present with their counters
+        cur = serve_load_json()
+        del cur["speculative"]["spec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("missing spec datapoint" in f for f in fails)
+        cur = serve_load_json()
+        del cur["speculative"]["dense"]["tokens_per_vsec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("speculative.dense: missing tokens_per_vsec" in f
+                   for f in fails)
+
+    def test_bitwise_mismatch_fails_absolutely(self):
+        # THE speculation invariant: spec output must be bit-identical
+        # to the plain dense stream — enforced with no baseline at all
+        cur = serve_load_json()
+        cur["speculative"] = speculative_json(bitwise=False)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("bit-identical" in f for f in fails)
+
+    def test_verify_without_progress_fails(self):
+        # every verify commits the agreeing prefix plus a correction;
+        # only the terminal EOS verify emits nothing, so verifies is
+        # bounded by emitted tokens + one per completed request —
+        # here 400 > 320 tokens + 10 completions
+        cur = serve_load_json()
+        cur["speculative"]["verifies"] = 400
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("committed no progress" in f for f in fails)
+
+    def test_eos_heavy_verify_count_passes(self):
+        # tokens_per_verify below 1.0 is legitimate when streams end
+        # on an EOS verify: 325 verifies vs 320 tokens + 10 requests
+        cur = serve_load_json()
+        cur["speculative"]["verifies"] = 325
+        cur["speculative"]["tokens_per_verify"] = 320 / 325
+        cur["speculative"]["mean_acceptance"] = \
+            cur["speculative"]["accepted"] / 325
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert fails == []
+
+    def test_bookkeeping_must_conserve_tokens(self):
+        # accepted + corrections must equal the spec run's emitted
+        # tokens — a mismatch means a counter drifted from the stream
+        cur = serve_load_json()
+        cur["speculative"]["accepted"] += 3
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("lost or invented a token" in f for f in fails)
+
+    def test_never_engaged_leg_fails(self):
+        cur = serve_load_json()
+        cur["speculative"]["drafted"] = 0
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("never engaged" in f for f in fails)
+
+    def test_acceptance_threshold_gate(self):
+        # acceptance above the k(1-s) floor with no throughput win is
+        # a regression — enforced without a baseline
+        cur = serve_load_json()
+        cur["speculative"] = speculative_json(mean_acceptance=3.0,
+                                              floor=1.0, speedup=0.8)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("break-even floor" in f for f in fails)
+        # below the floor speculation is allowed to lose: the drafts
+        # were too wrong to pay for themselves
+        cur = serve_load_json()
+        cur["speculative"] = speculative_json(mean_acceptance=0.8,
+                                              floor=1.0, speedup=0.8)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert fails == []
+
+    def test_incomplete_routed_run_fails(self):
+        # the leg serves an unbounded queue: speculating must never
+        # drop a request (draft-lane loss degrades to plain dense)
+        cur = serve_load_json()
+        cur["speculative"]["spec"]["completed"] -= 1
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("speculative.spec" in f and "must" in f
+                   for f in fails)
+
+    def test_measured_speedup_relative_regression_fails(self):
+        # beyond the absolute gates, a big drop vs the committed
+        # baseline is still a regression (e.g. an acceptance collapse
+        # after a drafting change)
+        base = serve_load_json()
+        base["speculative"] = speculative_json(speedup=8.0)
+        fails, _ = gate.check_file("BENCH_serve_load.json",
+                                   serve_load_json(), base, 0.25)
+        assert any("speculative.measured_speedup" in f for f in fails)
+
+    def test_refresh_refuses_missing_speculative_leg(self, tmp_path,
+                                                     monkeypatch):
+        # REFRESH must not bake a speculative-leg-less file into the
+        # committed baseline (which would disable the gates forever)
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        noleg = serve_load_json()
+        del noleg["speculative"]
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(noleg))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_refresh_refuses_bitwise_mismatch(self, tmp_path,
+                                              monkeypatch):
+        # nor may a bitwise-diverging run ever become the norm
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        bad = serve_load_json()
+        bad["speculative"] = speculative_json(bitwise=False)
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(bad))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_baseline_without_speculative_leg_is_tolerated(self):
+        # old committed baselines predate the speculative leg: the
+        # checks are fresh-side only and the relative gates skip
+        cur = serve_load_json()
+        base = serve_load_json()
+        del base["speculative"]
         fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
                                    0.25)
         assert fails == []

@@ -50,7 +50,17 @@
 //!    routed s75. Hard-asserts sparse-slot detection on exactly the
 //!    masked params and records the `sparse` datapoint pair; the
 //!    gate requires s75 tokens/vs ÷ dense tokens/vs ≥
-//!    sqrt(theoretical FLOPs speedup).
+//!    sqrt(theoretical FLOPs speedup);
+//!  * speculative leg — the same dense+s75 registry serving a
+//!    one-client closed loop twice: plain dense vs `s75=dense:k`
+//!    draft-then-verify. Hard-asserts the spec run's token streams
+//!    are bitwise identical to plain dense, every verify commits ≥ 1
+//!    pick (only a terminal EOS pick emits no token, so verifies ≤
+//!    emitted + completed), and the acceptance bookkeeping conserves
+//!    emitted
+//!    tokens; records the `speculative` datapoint block, and the
+//!    spec-vs-dense virtual-throughput gate arms whenever mean
+//!    acceptance clears the `k·(1−s)` break-even floor.
 //!
 //! Run: `cargo bench --bench perf_serve_load`
 //! Writes `BENCH_serve_load.json` (override with SPDF_BENCH_OUT; set
@@ -263,7 +273,7 @@ fn main() -> anyhow::Result<()> {
     let mix_trace = loadgen::generate_trace(&mix_cfg)?;
     let (mm_agg, mm_models, _) = loadgen::run_trace_registry(
         &registry, &mix_trace, &dp, false, &lit, &Fifo, &Unbounded,
-        &ChaosConfig::default())?;
+        &ChaosConfig::default(), None)?;
     anyhow::ensure!(
         mm_agg.completed + mm_agg.shed + mm_agg.expired
             == mm_agg.requests,
@@ -348,10 +358,10 @@ fn main() -> anyhow::Result<()> {
     for &rate in fault_rates {
         let (no_pt, _, _) = loadgen::run_trace_registry(
             &registry, &fault_trace, &dp, false, &lit, &Fifo,
-            &Unbounded, &chaos_for(rate, false))?;
+            &Unbounded, &chaos_for(rate, false), None)?;
         let (fo_pt, _, _) = loadgen::run_trace_registry(
             &registry, &fault_trace, &dp, false, &lit, &Fifo,
-            &Unbounded, &chaos_for(rate, true))?;
+            &Unbounded, &chaos_for(rate, true), None)?;
         for pt in [&no_pt, &fo_pt] {
             anyhow::ensure!(
                 pt.completed + pt.shed + pt.expired + pt.failed
@@ -403,10 +413,10 @@ fn main() -> anyhow::Result<()> {
     let chaos = chaos_for(*fault_rates.last().unwrap(), true);
     let (da, _, _) = loadgen::run_trace_registry(
         &registry, &fault_trace, &dp, false, &lit, &Fifo, &Unbounded,
-        &chaos)?;
+        &chaos, None)?;
     let (db, _, _) = loadgen::run_trace_registry(
         &registry, &fault_trace, &dp, false, &lit, &Fifo, &Unbounded,
-        &chaos)?;
+        &chaos, None)?;
     anyhow::ensure!(
         da.to_json().to_string() == db.to_json().to_string(),
         "chaos run is not deterministic under a pinned fault plan"
@@ -464,10 +474,10 @@ fn main() -> anyhow::Result<()> {
     };
     let (dense_pt, _, _) = loadgen::run_trace_registry(
         &sparse_reg, &route_all("dense"), &dp, false, &lit, &Fifo,
-        &Unbounded, &ChaosConfig::default())?;
+        &Unbounded, &ChaosConfig::default(), None)?;
     let (s75_pt, _, _) = loadgen::run_trace_registry(
         &sparse_reg, &route_all("s75"), &dp, false, &lit, &Fifo,
-        &Unbounded, &ChaosConfig::default())?;
+        &Unbounded, &ChaosConfig::default(), None)?;
     for pt in [&dense_pt, &s75_pt] {
         anyhow::ensure!(
             pt.completed == pt.requests,
@@ -495,6 +505,112 @@ fn main() -> anyhow::Result<()> {
              s75_pt.tokens_per_vsec, dense_pt.tokens_per_vsec,
              measured_speedup, required_speedup, csr_bytes,
              dense_bytes);
+
+    // --- speculative leg: s75 drafts, dense verifies ---
+    // The same dense+s75 registry serves a low-concurrency stream
+    // (closed loop, one client — speculation trades free batch rows
+    // for latency, so the win lives where slots sit idle) twice: all
+    // requests routed dense plain, then the same routing under
+    // `--speculate s75=dense:k`. Hard invariants: the spec run's
+    // token streams are bitwise identical to the plain dense run's
+    // (which the integration suite pins against generate::reference),
+    // every verify commits >= 1 pick (only a terminal EOS pick emits
+    // no token), and the emitted tokens
+    // conserve against the acceptance bookkeeping. Whenever the mean
+    // acceptance clears the break-even floor k·(1−s), spec-routed
+    // tokens/virtual-sec must beat dense-routed — the conditional
+    // `bench_gate.py` arms.
+    let spec_k = 4usize;
+    let spec_cfg = TraceConfig {
+        seed: 29,
+        rate_rps: 0.0,
+        pattern: Pattern::Closed { clients: 1, think_ms: 0.0 },
+        requests: if smoke { 6 } else { 10 },
+        ..base.clone()
+    };
+    let spec_trace = {
+        let mut t = loadgen::generate_trace(&spec_cfg)?;
+        for r in t.requests.iter_mut() {
+            r.model = Some("dense".into());
+        }
+        t
+    };
+    let (plain_pt, _, plain_rep) = loadgen::run_trace_registry(
+        &sparse_reg, &spec_trace, &dp, false, &lit, &Fifo,
+        &Unbounded, &ChaosConfig::default(), None)?;
+    let spec_conf = spdf::generate::serve::SpecConfig::new(
+        "s75", "dense", spec_k)?;
+    let (spec_pt, _, spec_rep) = loadgen::run_trace_registry(
+        &sparse_reg, &spec_trace, &dp, false, &lit, &Fifo,
+        &Unbounded, &ChaosConfig::default(), Some(&spec_conf))?;
+    for pt in [&plain_pt, &spec_pt] {
+        anyhow::ensure!(
+            pt.completed == pt.requests,
+            "speculative leg dropped requests ({} of {} completed)",
+            pt.completed, pt.requests
+        );
+    }
+    anyhow::ensure!(
+        plain_rep.results.len() == spec_rep.results.len(),
+        "speculative run changed the result count"
+    );
+    for (p, s) in plain_rep.results.iter().zip(&spec_rep.results) {
+        anyhow::ensure!(
+            p.id == s.id && p.tokens == s.tokens,
+            "speculative decode diverged from plain dense on request \
+             {} — the bitwise-dense invariant is broken", p.id
+        );
+    }
+    let spec_stats = &spec_rep.stats;
+    anyhow::ensure!(
+        spec_stats.spec.verifies > 0 && spec_stats.spec.drafted > 0,
+        "speculative run never drafted/verified (drafted {}, \
+         verifies {})", spec_stats.spec.drafted,
+        spec_stats.spec.verifies
+    );
+    // every verify commits the longest agreeing prefix plus a
+    // correction; the only verify that emits nothing is the terminal
+    // EOS one, so verifies is bounded by emitted + one per request
+    anyhow::ensure!(
+        spec_stats.spec.verifies
+            <= spec_stats.spec.accepted + spec_stats.spec.corrections
+                + spec_pt.completed as u64,
+        "a verify committed no progress (verifies {} > accepted {} + \
+         corrections {} + completed {})", spec_stats.spec.verifies,
+        spec_stats.spec.accepted, spec_stats.spec.corrections,
+        spec_pt.completed
+    );
+    anyhow::ensure!(
+        spec_stats.spec.accepted + spec_stats.spec.corrections
+            == spec_stats.generated_tokens,
+        "acceptance bookkeeping does not conserve tokens: {} + {} != \
+         {}", spec_stats.spec.accepted, spec_stats.spec.corrections,
+        spec_stats.generated_tokens
+    );
+    let acceptance_floor = spec_k as f64 * s75_cost.step_scale;
+    let mean_acceptance = spec_stats.spec.accepted as f64
+        / spec_stats.spec.verifies as f64;
+    let spec_speedup = if plain_pt.tokens_per_vsec > 0.0 {
+        spec_pt.tokens_per_vsec / plain_pt.tokens_per_vsec
+    } else {
+        0.0
+    };
+    if mean_acceptance > acceptance_floor {
+        anyhow::ensure!(
+            spec_speedup >= 1.0,
+            "mean acceptance {:.2} clears the k(1-s) floor {:.2} but \
+             speculative tokens/vs only {:.2}x dense",
+            mean_acceptance, acceptance_floor, spec_speedup
+        );
+    }
+    println!("\nspeculative leg (s75=dense:{spec_k}, closed loop x1): \
+              acceptance {:.1}% ({:.2}/verify, floor {:.2}), {:.2} \
+              tok/verify, {} wasted, {:.0} tok/vs vs dense {:.0} \
+              tok/vs = {:.2}x, output bitwise dense",
+             spec_stats.acceptance_rate * 100.0, mean_acceptance,
+             acceptance_floor, spec_stats.tokens_per_verify,
+             spec_stats.wasted_drafts, spec_pt.tokens_per_vsec,
+             plain_pt.tokens_per_vsec, spec_speedup);
 
     let costs_json = |c: &StepCosts| {
         let mut o = Json::obj();
@@ -563,6 +679,27 @@ fn main() -> anyhow::Result<()> {
         .push("dense", dense_pt.to_json())
         .push("s75", s75_pt.to_json());
     j.push("sparse", sparse);
+    let mut spec = Json::obj();
+    spec.push("draft", Json::Str("s75".into()))
+        .push("verifier", Json::Str("dense".into()))
+        .push_num("k", spec_k)
+        .push_num("draft_step_scale", s75_cost.step_scale)
+        .push_num("acceptance_floor", acceptance_floor)
+        .push_num("mean_acceptance", mean_acceptance)
+        .push_num("acceptance_rate", spec_stats.acceptance_rate)
+        .push_num("tokens_per_verify", spec_stats.tokens_per_verify)
+        .push_num("drafted", spec_stats.spec.drafted)
+        .push_num("accepted", spec_stats.spec.accepted)
+        .push_num("corrections", spec_stats.spec.corrections)
+        .push_num("verifies", spec_stats.spec.verifies)
+        .push_num("wasted_drafts", spec_stats.wasted_drafts)
+        .push("bitwise_equal", Json::Bool(true))
+        .push_num("dense_tokens_per_vsec", plain_pt.tokens_per_vsec)
+        .push_num("spec_tokens_per_vsec", spec_pt.tokens_per_vsec)
+        .push_num("measured_speedup", spec_speedup)
+        .push("dense", plain_pt.to_json())
+        .push("spec", spec_pt.to_json());
+    j.push("speculative", spec);
     j.push("points", loadgen::points_json(&points));
 
     let out_path = std::env::var("SPDF_BENCH_OUT")

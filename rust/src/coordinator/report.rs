@@ -163,8 +163,7 @@ pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
         t.row(&["prefill steps".into(),
                 stats.prefill_steps.to_string()]);
     }
-    t.row(&["batch occupancy".into(),
-            format!("{:.1}%", stats.occupancy * 100.0)]);
+    t.row(&["batch occupancy".into(), pct(stats.occupancy, 1)]);
     t.row(&["generated tokens".into(),
             stats.generated_tokens.to_string()]);
     if stats.shed + stats.expired > 0 {
@@ -173,11 +172,19 @@ pub fn serve_table(stats: &ServeStats, results: &[RequestResult])
         t.row(&["completed / shed / expired".into(),
                 format!("{} / {} / {}", stats.completed, stats.shed,
                         stats.expired)]);
-        t.row(&["shed rate".into(),
-                format!("{:.1}%", stats.shed_rate * 100.0)]);
+        t.row(&["shed rate".into(), pct(stats.shed_rate, 1)]);
         t.row(&["goodput".into(),
                 format!("{:.1} tok/s",
                         stats.goodput_tokens_per_sec)]);
+    }
+    if stats.spec.verifies > 0 {
+        // speculative decoding engaged: the acceptance rate of the
+        // draft-then-verify loop plus the committed-per-verify yield
+        t.row(&["spec acceptance".into(),
+                format!("{} ({:.2} tok/verify, {} wasted)",
+                        pct(stats.acceptance_rate, 1),
+                        stats.tokens_per_verify,
+                        stats.wasted_drafts)]);
     }
     if stats.failed > 0 {
         // fault injection / real step errors: requests lost after
@@ -218,6 +225,13 @@ fn fmt_percentiles(s: &Summary) -> String {
     format!("{:.1} / {:.1} / {:.1} ms", s.p50, s.p95, s.p99)
 }
 
+/// The one ratio→percent formatter behind every occupancy / shed% /
+/// acceptance cell: a 0..=1 ratio rendered with `decimals` fractional
+/// digits, so the serving tables can't drift apart on rounding.
+fn pct(ratio: f64, decimals: usize) -> String {
+    format!("{:.decimals$}%", ratio * 100.0)
+}
+
 /// [`serve_table`] plus, for multi-model registry runs, one
 /// per-model breakdown table (requests / outcome split / throughput /
 /// latency tail per registered model — the countable columns sum to
@@ -228,7 +242,7 @@ pub fn serve_report_table(report: &ServeReport) -> String {
     if report.per_model.len() > 1 {
         let mut t = Table::new(&["model", "requests",
                                  "completed/shed/expired", "tokens",
-                                 "tok/s", "occ",
+                                 "tok/s", "occ", "accept%",
                                  "e2e p50/p95/p99"]);
         for m in &report.per_model {
             let st = &m.stats;
@@ -239,7 +253,14 @@ pub fn serve_report_table(report: &ServeReport) -> String {
                         st.expired),
                 st.generated_tokens.to_string(),
                 format!("{:.1}", st.tokens_per_sec),
-                format!("{:.0}%", st.occupancy * 100.0),
+                pct(st.occupancy, 0),
+                // "-" outside speculative runs: an all-zero
+                // acceptance column would read as a dead draft lane
+                if st.spec.verifies > 0 {
+                    pct(st.acceptance_rate, 0)
+                } else {
+                    "-".into()
+                },
                 fmt_percentiles(&st.latency_ms),
             ]);
         }
@@ -258,14 +279,16 @@ pub fn serve_report_table(report: &ServeReport) -> String {
 /// second and `shed%` the fraction of requests shed or expired by the
 /// admission policy: under unbounded admission shed% is 0 and goodput
 /// equals raw throughput; past the knee a bounded queue trades a
-/// nonzero shed% for a bounded p95. A healthy engine shows flat
-/// percentiles at low load and a sharp knee as the offered rate
-/// crosses capacity.
+/// nonzero shed% for a bounded p95. `accept%` is the draft-acceptance
+/// rate of a speculative run ("-" when speculation was off). A
+/// healthy engine shows flat percentiles at low load and a sharp knee
+/// as the offered rate crosses capacity.
 pub fn load_table(points: &[LoadPoint]) -> String {
     let mut t = Table::new(&["model", "engine", "pattern", "policy",
                              "offered rps", "achieved rps", "occ",
-                             "goodput", "shed%", "queue p95",
-                             "TTFT p50/p95/p99", "e2e p50/p95/p99"]);
+                             "goodput", "shed%", "accept%",
+                             "queue p95", "TTFT p50/p95/p99",
+                             "e2e p50/p95/p99"]);
     for p in points {
         let tri = |s: &Summary| {
             format!("{:.1}/{:.1}/{:.1}", s.p50, s.p95, s.p99)
@@ -284,9 +307,14 @@ pub fn load_table(points: &[LoadPoint]) -> String {
                 "closed".into()
             },
             format!("{:.1}", p.achieved_rps),
-            format!("{:.0}%", p.occupancy * 100.0),
+            pct(p.occupancy, 0),
             format!("{:.0}", p.goodput_tokens_per_sec),
-            format!("{:.1}%", p.shed_rate * 100.0),
+            pct(p.shed_rate, 1),
+            if p.acceptance_rate > 0.0 {
+                pct(p.acceptance_rate, 0)
+            } else {
+                "-".into()
+            },
             format!("{:.1}", p.queue_ms.p95),
             tri(&p.ttft_ms),
             tri(&p.latency_ms),
@@ -370,6 +398,10 @@ mod tests {
             queue_ms: summarize(&[0.0, 120.0]),
             ttft_ms: summarize(&[60.0, 200.0]),
             latency_ms: summarize(&[700.0, 800.0, 1900.0]),
+            spec: Default::default(),
+            acceptance_rate: 0.0,
+            tokens_per_verify: 0.0,
+            wasted_drafts: 0,
         }
     }
 
@@ -387,6 +419,7 @@ mod tests {
             latency_ms: 700.0,
             outcome: crate::generate::RequestOutcome::Completed,
             degraded: false,
+            spec: Default::default(),
         }];
         let t = serve_table(&stats, &results);
         assert!(t.contains("90.0%"), "{t}");
@@ -401,6 +434,25 @@ mod tests {
         assert!(!t.contains("failed (faults)"), "{t}");
         assert!(!t.contains("step retries"), "{t}");
         assert!(!t.contains("degraded (failover)"), "{t}");
+        // no speculation engaged: no acceptance row
+        assert!(!t.contains("spec acceptance"), "{t}");
+    }
+
+    #[test]
+    fn serve_table_renders_acceptance_when_speculating() {
+        use crate::generate::SpecCounters;
+        let mut stats = serve_stats(0, 0);
+        stats.spec = SpecCounters { drafted: 40, accepted: 30,
+                                    corrections: 10, verifies: 20 };
+        stats.acceptance_rate = 0.75;
+        stats.tokens_per_verify = 2.0;
+        stats.wasted_drafts = 10;
+        let t = serve_table(&stats, &[]);
+        assert!(t.contains("spec acceptance"), "{t}");
+        // the shared pct helper renders the ratio, one decimal
+        assert!(t.contains("75.0%"), "{t}");
+        assert!(t.contains("2.00 tok/verify"), "{t}");
+        assert!(t.contains("10 wasted"), "{t}");
     }
 
     #[test]
@@ -449,6 +501,7 @@ mod tests {
             achieved_rps: rps * 0.97,
             tokens_per_vsec: 250.0,
             goodput_tokens_per_sec: 250.0,
+            acceptance_rate: 0.0,
             occupancy: 0.8,
             queue_ms: summarize(&[1.0, 5.0]),
             ttft_ms: summarize(&[4.0, 9.0]),
@@ -462,11 +515,14 @@ mod tests {
         shedding.shed_rate = 0.25;
         let mut per_model = mk("literal", 30.0, 40.0);
         per_model.model = "s75".into();
+        let mut speculating = mk("literal", 20.0, 35.0);
+        speculating.acceptance_rate = 0.6;
         let t = load_table(&[mk("literal", 50.0, 120.0),
                              mk("kv", 50.0, 90.0),
                              mk("kv", 0.0, 70.0),
                              shedding,
-                             per_model]);
+                             per_model,
+                             speculating]);
         assert!(t.contains("literal"), "{t}");
         assert!(t.contains("50.0"), "{t}");
         assert!(t.contains("80%"), "{t}");
@@ -481,6 +537,10 @@ mod tests {
         // model name
         assert!(t.contains("| -"), "{t}");
         assert!(t.contains("s75"), "{t}");
+        // acceptance column: "-" without speculation, the shared pct
+        // rendering with it
+        assert!(t.contains("accept%"), "{t}");
+        assert!(t.contains("60%"), "{t}");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use super::serve::core as serve_core;
 use super::serve::core::ServeConfig;
 use super::serve::policy::{Fifo, Scheduler};
 use super::serve::registry::ModelRegistry;
+use super::serve::speculative::SpecConfig;
 use super::serve::{ChaosConfig, Schedule, ServeReport, ServeStats};
 use super::{DecodeEngine, DecodeParams, DecodeRequest};
 
@@ -427,6 +428,10 @@ pub struct LoadPoint {
     /// distinct datapoint so the gate contract survives future
     /// mid-slot cancellation.
     pub goodput_tokens_per_sec: f64,
+    /// Accepted drafts / drafted tokens across the point's verifier
+    /// traffic — 0.0 outside speculative runs (see
+    /// [`crate::generate::ServeStats::acceptance_rate`]).
+    pub acceptance_rate: f64,
     pub occupancy: f64,
     pub queue_ms: Summary,
     pub ttft_ms: Summary,
@@ -460,6 +465,7 @@ impl LoadPoint {
             .push_num("tokens_per_vsec", self.tokens_per_vsec)
             .push_num("goodput_tokens_per_sec",
                       self.goodput_tokens_per_sec)
+            .push_num("acceptance_rate", self.acceptance_rate)
             .push_num("occupancy", self.occupancy)
             .push("queue_ms", self.queue_ms.to_json())
             .push("ttft_ms", self.ttft_ms.to_json())
@@ -506,6 +512,7 @@ pub fn run_trace_with(
             recovery: chaos.recovery.clone(),
             faults: chaos.faults.clone(),
             fallback: chaos.fallback.clone(),
+            speculate: None,
         })?;
     let point = point_from_stats("", &report.stats, trace.rate_rps,
                                  trace, use_kv, costs, scheduler,
@@ -554,6 +561,7 @@ fn point_from_stats(
         // ServeStats::from_results); the named goodput datapoint
         // survives future mid-slot cancels
         goodput_tokens_per_sec: st.generated_tokens as f64 / sim_secs,
+        acceptance_rate: st.acceptance_rate,
         occupancy: st.occupancy,
         queue_ms: st.queue_ms.clone(),
         ttft_ms: st.ttft_ms.clone(),
@@ -567,7 +575,10 @@ fn point_from_stats(
 /// the returned points are the whole-stream aggregate followed by one
 /// per-model point per registered model (the per-model `LoadPoint`
 /// counters sum to the aggregate's; the shared virtual clock is the
-/// common denominator). Deterministic for a given trace + costs.
+/// common denominator). `speculate` serves the verifier model's
+/// requests draft-then-verify (`spdf loadgen --speculate
+/// DRAFT=VERIFIER:k`); `None` is plain registry serving.
+/// Deterministic for a given trace + costs.
 #[allow(clippy::too_many_arguments)]
 pub fn run_trace_registry(
     registry: &ModelRegistry,
@@ -578,6 +589,7 @@ pub fn run_trace_registry(
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
     chaos: &ChaosConfig,
+    speculate: Option<&SpecConfig>,
 ) -> anyhow::Result<(LoadPoint, Vec<LoadPoint>, ServeReport)> {
     let schedule = trace.schedule(costs);
     let report = registry.serve_with(
@@ -590,6 +602,7 @@ pub fn run_trace_registry(
             recovery: chaos.recovery.clone(),
             faults: chaos.faults.clone(),
             fallback: chaos.fallback.clone(),
+            speculate: speculate.cloned(),
         })?;
     let total = trace.requests.len().max(1);
     let aggregate = point_from_stats("", &report.stats,
@@ -651,7 +664,7 @@ pub fn sweep_with(
 /// [`sweep_with`] across a [`ModelRegistry`]: per (rate, engine
 /// path), the aggregate point followed by the per-model points (see
 /// [`run_trace_registry`]). All points at one rate share the exact
-/// same trace, mix tags included.
+/// same trace, mix tags included. `speculate` applies to every point.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_registry(
     registry: &ModelRegistry,
@@ -662,6 +675,7 @@ pub fn sweep_registry(
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
     chaos: &ChaosConfig,
+    speculate: Option<&SpecConfig>,
 ) -> anyhow::Result<Vec<LoadPoint>> {
     let mut points = Vec::new();
     for &rate in rates {
@@ -670,7 +684,7 @@ pub fn sweep_registry(
         for (use_kv, costs) in engines {
             let (aggregate, per_model, _) = run_trace_registry(
                 registry, &trace, dp, *use_kv, costs, scheduler,
-                admission, chaos)?;
+                admission, chaos, speculate)?;
             points.push(aggregate);
             points.extend(per_model);
         }
@@ -887,6 +901,7 @@ mod tests {
             achieved_rps: 91.4,
             tokens_per_vsec: 1285.7,
             goodput_tokens_per_sec: 1285.7,
+            acceptance_rate: 0.75,
             occupancy: 0.93,
             queue_ms: Summary::zero(),
             ttft_ms: Summary::zero(),
@@ -912,6 +927,8 @@ mod tests {
         assert_eq!(j.get("degraded").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("goodput_tokens_per_sec").unwrap().as_f64(),
                    Some(1285.7));
+        assert_eq!(j.get("acceptance_rate").unwrap().as_f64(),
+                   Some(0.75));
         assert_eq!(j.get("latency_ms").unwrap().get("p50")
                        .unwrap().as_f64(),
                    Some(20.0));

@@ -54,7 +54,8 @@ pub use engine::DecodeEngine;
 pub use serve::{ChaosConfig, DecodeRequest, FaultPlan, FaultSpec,
                 ModelRegistry, ModelStats, RecoveryConfig,
                 RequestOutcome, RequestResult, RetryPolicy, Schedule,
-                ServeConfig, ServeReport, ServeStats};
+                ServeConfig, ServeReport, ServeStats, SpecConfig,
+                SpecCounters, SpecPlan};
 
 use crate::runtime::{HostTensor, ModelRuntime};
 

@@ -61,6 +61,28 @@ impl LaneCost {
         LaneCost { step_scale: scale, prefill_scale: scale }
     }
 
+    /// Virtual cost of one full speculative round, in units of the
+    /// schedule's dense `step_ms`: `k` draft microsteps at the draft
+    /// lane's scale plus one batched verify at the verifier's scale —
+    /// `k·(1−s) + 1` for an s-sparse draft against a unit-cost dense
+    /// verifier. The measurable per-round speedup is
+    /// `committed_len / spec_round_scale`, so speculation wins
+    /// whenever mean acceptance exceeds `k·(1−s)` (commit `a+1` ≥
+    /// round cost). The `perf_serve_load` speculative leg gates on
+    /// exactly this threshold.
+    ///
+    /// ```
+    /// use spdf::generate::serve::LaneCost;
+    /// let draft = LaneCost::from_sparsity(0.75); // step_scale 0.25
+    /// let dense = LaneCost::unit();
+    /// assert!((draft.spec_round_scale(&dense, 4) - 2.0).abs()
+    ///         < 1e-12);
+    /// ```
+    pub fn spec_round_scale(&self, verifier: &LaneCost, k: usize)
+                            -> f64 {
+        k as f64 * self.step_scale + verifier.step_scale
+    }
+
     pub(crate) fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.step_scale.is_finite() && self.step_scale > 0.0

@@ -46,8 +46,9 @@ use super::admission::{AdmissionPolicy, Unbounded};
 use super::clock::{ArrivalQueue, Clock, LaneCost, Schedule};
 use super::fault::{plans_for_lanes, FaultyBackend, RecoveryConfig};
 use super::policy::{Fifo, Scheduler};
+use super::speculative::{SpecConfig, SpecPlan};
 use super::telemetry::{ModelStats, RequestOutcome, RequestResult,
-                       ServeReport, ServeStats};
+                       ServeReport, ServeStats, SpecCounters};
 use super::DecodeRequest;
 
 /// The per-step logits producer behind the slot-refill state machine:
@@ -187,6 +188,13 @@ struct Slot {
     admit_ms: f64,
     /// Clock reading when the first token was emitted.
     first_tok_ms: Option<f64>,
+    /// Speculative bookkeeping (drafted / accepted / corrections /
+    /// verifies), copied into the result at completion.
+    spec: SpecCounters,
+    /// Draft tokens proposed for this slot and not yet consumed by a
+    /// verify step. Non-empty only on the verifier lane of an active
+    /// [`SpecPlan`].
+    spec_pending: Vec<u32>,
 }
 
 /// Write a request's prompt into row `slot` of the token buffer,
@@ -209,6 +217,309 @@ fn fill_slot(
         row[j] = tok as i32;
     }
     pos[slot] = prompt.len() as i32 - 1;
+}
+
+/// Apply one greedy-picked token to slot `s` exactly as the
+/// sequential dense loop always has: EOS terminates without emitting,
+/// the context cap emits-then-terminates, the budget cap terminates
+/// after emitting. Returns true when the request finished. Shared by
+/// the plain per-step commit and the speculative multi-token commit —
+/// one edge implementation, so speculative output cannot drift from
+/// dense output on the termination edges.
+fn commit_next(tokens: &mut [i32], pos: &mut [i32], t: usize,
+               s: usize, slot: &mut Slot, max_new: usize, next: u32,
+               now: f64) -> bool {
+    let cur = pos[s] as usize;
+    let new_pos = cur + 1;
+    let done = if next == EOS || new_pos >= t - 1 {
+        if next != EOS && new_pos < t {
+            slot.out.push(next);
+        }
+        true
+    } else {
+        tokens[s * t + new_pos] = next as i32;
+        pos[s] = new_pos as i32;
+        slot.out.push(next);
+        slot.out.len() >= max_new
+    };
+    if slot.first_tok_ms.is_none() && !slot.out.is_empty() {
+        slot.first_tok_ms = Some(now);
+    }
+    done
+}
+
+/// Commit one step's output for slot `s`. In plain mode (`leased`
+/// empty, no pending drafts) that is a single greedy pick from the
+/// slot's own row — the pre-speculative behavior, bit-for-bit. On the
+/// verifier lane of an active [`SpecPlan`] the slot's pending drafts
+/// are checked against the picks of the leased replica rows: the
+/// longest agreeing prefix plus the verifier's next pick (first
+/// correction, or the bonus token when everything matched) commit
+/// sequentially through [`commit_next`], so every verify commits ≥ 1
+/// pick (an EOS pick terminates without emitting) and the committed
+/// stream is the dense greedy stream. Returns
+/// true when the request finished.
+fn commit_slot(lane: &mut Lane, s: usize, leased: &[usize],
+               lv: &[f32], dp: &DecodeParams,
+               requests: &[DecodeRequest], now: f64, spec_on: bool)
+               -> bool {
+    let (t, vocab) = (lane.t, lane.vocab);
+    let max_new;
+    let mut pending;
+    {
+        // invariant: commit_slot is only called on occupied slots
+        let slot = lane.slots[s].as_mut()
+            .expect("commit_slot on an empty slot");
+        max_new = requests[slot.req].max_new_tokens;
+        pending = std::mem::take(&mut slot.spec_pending);
+        if spec_on {
+            slot.spec.verifies += 1;
+        }
+    }
+    // verifier picks v_0..v_u: the slot's own row reads the last
+    // committed position, leased row i reads it at draft offset i —
+    // each pick's ngram context is its row's tokens up to the read
+    // position (committed prefix + the drafts staged before it)
+    let mut picks: Vec<u32> = Vec::with_capacity(leased.len() + 1);
+    for j in 0..=leased.len() {
+        let row_idx = if j == 0 { s } else { leased[j - 1] };
+        let row = &lv[row_idx * vocab..(row_idx + 1) * vocab];
+        let cur = lane.pos[row_idx] as usize;
+        let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
+            (0..=cur).map(|i| lane.tokens[row_idx * t + i] as u32)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        picks.push(topk::pick_next(row, &ctx, dp.no_repeat_ngram));
+    }
+    let avail = picks.len();
+    let checked = pending.len().min(avail);
+    let a = super::speculative::accept_len(&pending[..checked],
+                                           &picks[..checked]);
+    // tokens to commit: the agreeing prefix, then the verifier's next
+    // pick — a correction after a rejection, the bonus pick when every
+    // checked draft matched and a spare output exists. Only when the
+    // outputs ran out with every draft so far accepted is the
+    // unchecked tail retained for the next verify (lease starvation
+    // still makes progress).
+    let commit_n = if a < checked {
+        a + 1
+    } else if checked < avail {
+        checked + 1
+    } else {
+        a
+    };
+    let mut finished = false;
+    let mut committed = 0usize;
+    {
+        let (tokens, pos, slots) =
+            (&mut lane.tokens, &mut lane.pos, &mut lane.slots);
+        // invariant: same occupied slot the scope above borrowed
+        let slot = slots[s].as_mut()
+            .expect("occupancy checked at commit_slot entry");
+        for (j, &next) in picks.iter().take(commit_n).enumerate() {
+            let emitted_before = slot.out.len();
+            finished = commit_next(tokens, pos, t, s, slot, max_new,
+                                   next, now);
+            committed += 1;
+            // count only tokens actually emitted (an EOS pick
+            // terminates without emitting), so a completed request
+            // conserves tokens.len() == accepted + corrections
+            if spec_on && slot.out.len() > emitted_before {
+                if j < a {
+                    slot.spec.accepted += 1;
+                } else {
+                    slot.spec.corrections += 1;
+                }
+            }
+            if finished {
+                break;
+            }
+        }
+        if !finished && a == checked && checked == avail {
+            pending.drain(..a);
+            slot.spec_pending = pending;
+        }
+    }
+    // a multi-token commit advances `pos` past what the verify step's
+    // cache append covered; re-prefill the row from its committed
+    // tokens before the next step (single-token commits keep the
+    // plain-loop invariant and need nothing)
+    if !finished && committed >= 2 && lane.needs_prefill {
+        lane.refill[s] = 1.0;
+        lane.any_refill = true;
+    }
+    finished
+}
+
+/// Emit the completed result for slot `s` and free it.
+#[allow(clippy::too_many_arguments)]
+fn finish_slot(lane: &mut Lane, s: usize, now: f64,
+               requests: &[DecodeRequest], route: &[usize],
+               degraded: &[bool], pending: &mut ArrivalQueue,
+               results: &mut Vec<(usize, RequestResult)>) {
+    // invariant: recovery drains only run on failed attempts, never
+    // after the successful step that set `finished`, so the slot is
+    // still occupied.
+    let slot = lane.slots[s].take().expect(
+        "slot emptied between the finished-edge check and result \
+         emission",
+    );
+    let arrival = pending.arrival_of(slot.req);
+    let lane_idx = route[slot.req];
+    results.push((lane_idx, RequestResult {
+        id: requests[slot.req].id,
+        queue_steps: slot.entered_step,
+        decode_steps: lane.engine_steps - slot.entered_step,
+        arrival_ms: arrival,
+        queue_ms: slot.admit_ms - arrival,
+        ttft_ms: slot.first_tok_ms.unwrap_or(now) - arrival,
+        latency_ms: now - arrival,
+        tokens: slot.out,
+        outcome: RequestOutcome::Completed,
+        degraded: degraded[slot.req],
+        spec: slot.spec,
+    }));
+    pending.on_complete(slot.req, now);
+}
+
+/// Contain one failed lane attempt (prefill or step): transient →
+/// schedule a retry with capped backoff and re-prefill marks;
+/// permanently unhealthy → lane death, draining slots and queue
+/// through the failover route or as `Failed`; exhausted retry budget
+/// → fail only the in-flight slots; plus the per-lane circuit
+/// breaker. Shared by the per-lane step loop and the speculative
+/// draft microstep loop, so failure semantics are identical wherever
+/// a backend is invoked.
+#[allow(clippy::too_many_arguments)]
+fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
+                       now: f64, requests: &[DecodeRequest],
+                       recovery: &RecoveryConfig, degraded: &[bool],
+                       pending: &mut ArrivalQueue,
+                       results: &mut Vec<(usize, RequestResult)>,
+                       reroutes: &mut Vec<(usize, usize, f64)>) {
+    lane.consec_fail = lane.consec_fail.saturating_add(1);
+    let fb = recovery.fallback.get(l).copied().flatten();
+    if !healthy {
+        // permanent lane death: drain the in-flight slots and queue
+        // (failover when configured, Failed otherwise) and never step
+        // this lane again
+        lane.dead = true;
+        lane.open_until = f64::INFINITY;
+        lane.refill.fill(0.0);
+        lane.any_refill = false;
+        for s in 0..lane.b {
+            let Some(slot) = lane.slots[s].take() else {
+                continue;
+            };
+            match fb {
+                Some(f) => {
+                    reroutes.push((slot.req, f, now));
+                }
+                None => {
+                    let arrival = pending.arrival_of(slot.req);
+                    results.push((l, RequestResult {
+                        id: requests[slot.req].id,
+                        tokens: Vec::new(),
+                        queue_steps: slot.entered_step,
+                        decode_steps: lane.engine_steps
+                            - slot.entered_step,
+                        arrival_ms: arrival,
+                        queue_ms: slot.admit_ms - arrival,
+                        ttft_ms: now - arrival,
+                        latency_ms: now - arrival,
+                        outcome: RequestOutcome::Failed,
+                        degraded: degraded[slot.req],
+                        spec: SpecCounters::default(),
+                    }));
+                    pending.on_complete(slot.req, now);
+                }
+            }
+        }
+        for i in lane.ready.drain(..) {
+            match fb {
+                Some(f) => reroutes.push((i, f, now)),
+                None => {
+                    let arrival = pending.arrival_of(i);
+                    results.push((l, RequestResult {
+                        id: requests[i].id,
+                        tokens: Vec::new(),
+                        queue_steps: 0,
+                        decode_steps: 0,
+                        arrival_ms: arrival,
+                        queue_ms: now - arrival,
+                        ttft_ms: now - arrival,
+                        latency_ms: now - arrival,
+                        outcome: RequestOutcome::Failed,
+                        degraded: degraded[i],
+                        spec: SpecCounters::default(),
+                    }));
+                    pending.on_complete(i, now);
+                }
+            }
+        }
+    } else if lane.attempt < recovery.retry.max_retries {
+        // transient: schedule a retry with capped exponential backoff
+        // and mark the occupied rows for re-prefill — each row's token
+        // buffer already holds prompt + generated-so-far, so the
+        // existing per-slot prefill path rebuilds the KV rows and the
+        // resumed decode stays bitwise identical to an uninterrupted
+        // one
+        lane.attempt += 1;
+        lane.retries += 1;
+        lane.retry_at = now + recovery.retry.backoff_ms(lane.attempt);
+        if lane.needs_prefill {
+            for s in 0..lane.b {
+                if lane.slots[s].is_some() {
+                    lane.refill[s] = 1.0;
+                    lane.any_refill = true;
+                }
+            }
+        }
+    } else {
+        // retry budget exhausted: the in-flight slots fail (empty
+        // token streams — partial output is dropped, not delivered);
+        // the lane itself stays in service for later seatings
+        lane.attempt = 0;
+        for s in 0..lane.b {
+            let Some(slot) = lane.slots[s].take() else {
+                continue;
+            };
+            let arrival = pending.arrival_of(slot.req);
+            results.push((l, RequestResult {
+                id: requests[slot.req].id,
+                tokens: Vec::new(),
+                queue_steps: slot.entered_step,
+                decode_steps: lane.engine_steps - slot.entered_step,
+                arrival_ms: arrival,
+                queue_ms: slot.admit_ms - arrival,
+                ttft_ms: now - arrival,
+                latency_ms: now - arrival,
+                outcome: RequestOutcome::Failed,
+                degraded: degraded[slot.req],
+                spec: SpecCounters::default(),
+            }));
+            pending.on_complete(slot.req, now);
+        }
+        lane.refill.fill(0.0);
+        lane.any_refill = false;
+    }
+    // circuit breaker: N consecutive failed attempts open the lane
+    // for a cooldown; with failover configured, its waiting requests
+    // reroute instead of sitting the cooldown out
+    if !lane.dead
+        && recovery.breaker_threshold > 0
+        && lane.consec_fail >= recovery.breaker_threshold
+    {
+        lane.open_until = now + recovery.breaker_cooldown_ms;
+        lane.consec_fail = 0;
+        if let Some(f) = fb {
+            for i in lane.ready.drain(..) {
+                reroutes.push((i, f, now));
+            }
+        }
+    }
 }
 
 /// Everything a serve call can vary: engine path, arrival timing, and
@@ -239,6 +550,12 @@ pub struct ServeConfig<'a> {
     /// breaker-open `from` lane reroute to `to` and complete tagged
     /// degraded. Registry serving only.
     pub fallback: Option<(String, String)>,
+    /// Opt-in speculative decoding `DRAFT=VERIFIER:k` (model names,
+    /// resolved against the registry): requests routed to the
+    /// verifier model are served draft-then-verify with output
+    /// bitwise identical to plain verifier-only decode. Registry
+    /// serving only.
+    pub speculate: Option<SpecConfig>,
 }
 
 impl<'a> ServeConfig<'a> {
@@ -253,6 +570,7 @@ impl<'a> ServeConfig<'a> {
             recovery: RecoveryConfig::default(),
             faults: Vec::new(),
             fallback: None,
+            speculate: None,
         }
     }
 
@@ -323,6 +641,11 @@ pub fn serve_with(
     anyhow::ensure!(
         cfg.fallback.is_none(),
         "cross-model failover needs a multi-model registry (this \
+         entry point serves a single lane)"
+    );
+    anyhow::ensure!(
+        cfg.speculate.is_none(),
+        "speculative decoding needs a multi-model registry (this \
          entry point serves a single lane)"
     );
     let names = [String::from("default")];
@@ -520,6 +843,53 @@ pub fn run_lanes_with_costs(
     recovery: &RecoveryConfig,
     lane_costs: &[LaneCost],
 ) -> anyhow::Result<ServeReport> {
+    run_lanes_spec(backends, names, lane_of, requests, dp, schedule,
+                   scheduler, admission, recovery, lane_costs, None)
+}
+
+/// [`run_lanes_with_costs`] plus an optional speculative-decoding
+/// plan. With `spec = Some(plan)`, every request seated on
+/// `plan.verifier_lane` is served draft-then-verify:
+///
+///  * **draft** — before the per-lane step round, each verifier slot
+///    with no pending drafts leases a *free* row on the draft lane
+///    (re-prefilled from its committed tokens) and the draft lane
+///    runs up to `k` greedy microsteps, each at the draft lane's
+///    [`LaneCost`]; the draft lane's own residents keep decoding
+///    normally through those microsteps (their tokens are unaffected
+///    — rows are independent).
+///  * **verify** — the verifier lane's one step scores every pending
+///    draft at once: the slot's own row reads the last committed
+///    position and each leased free verifier row replicates the row's
+///    tokens at one draft offset, so row `i` yields the dense pick
+///    for committed position `m + i`. Costs one verifier-scale step.
+///  * **commit** — the longest agreeing draft prefix plus the
+///    verifier's next pick (first correction, or the bonus token when
+///    everything matched) commit through the same sequential
+///    EOS/ctx/budget edges as plain decode, so every verify commits
+///    ≥ 1 pick and output is bitwise the dense greedy stream. With
+///    fewer free rows than drafts the unchecked tail is retained for
+///    the next verify (progress never deadlocks on lease starvation).
+///
+/// Degradation is built in: when the draft lane is dead, backing off,
+/// breaker-open, or out of free rows, verifier slots simply step as
+/// plain dense decode that round — a draft-lane fault can never fail
+/// (or even stall) a verifier-lane request. With `spec = None` this
+/// is bit-for-bit [`run_lanes_with_costs`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_lanes_spec(
+    backends: &mut [&mut dyn LogitsBackend],
+    names: &[String],
+    lane_of: &[usize],
+    requests: &[DecodeRequest],
+    dp: &DecodeParams,
+    schedule: Option<&Schedule>,
+    scheduler: &dyn Scheduler,
+    admission: &dyn AdmissionPolicy,
+    recovery: &RecoveryConfig,
+    lane_costs: &[LaneCost],
+    spec: Option<&SpecPlan>,
+) -> anyhow::Result<ServeReport> {
     let n_lanes = backends.len();
     anyhow::ensure!(lane_costs.len() == n_lanes,
                     "{} lane costs for {} lanes", lane_costs.len(),
@@ -579,6 +949,9 @@ pub fn run_lanes_with_costs(
         s.validate(requests.len())?;
     }
     recovery.validate(n_lanes)?;
+    if let Some(plan) = spec {
+        plan.validate(n_lanes)?;
+    }
     let deadline = admission.deadline_ms();
     if let Some(d) = deadline {
         anyhow::ensure!(d.is_finite() && d > 0.0,
@@ -645,6 +1018,7 @@ pub fn run_lanes_with_costs(
                                 latency_ms: 0.0,
                                 outcome: RequestOutcome::Failed,
                                 degraded: false,
+                                spec: SpecCounters::default(),
                             }));
                             pending.on_complete(i, arrival);
                             continue;
@@ -677,6 +1051,7 @@ pub fn run_lanes_with_costs(
                         latency_ms: 0.0,
                         outcome: RequestOutcome::Shed,
                         degraded: degraded[i],
+                        spec: SpecCounters::default(),
                     }));
                     // rejection happens AT arrival (the telemetry
                     // above says so); the closed-loop successor is
@@ -709,6 +1084,7 @@ pub fn run_lanes_with_costs(
                                 latency_ms: d,
                                 outcome: RequestOutcome::Expired,
                                 degraded: degraded[i],
+                                spec: SpecCounters::default(),
                             }));
                             pending.on_complete(i, arrival + d);
                         } else {
@@ -757,6 +1133,7 @@ pub fn run_lanes_with_costs(
                             latency_ms: now - arrival,
                             outcome: RequestOutcome::Completed,
                             degraded: degraded[i],
+                            spec: SpecCounters::default(),
                         }));
                         pending.on_complete(i, now);
                         continue;
@@ -773,6 +1150,8 @@ pub fn run_lanes_with_costs(
                         entered_step: lane.engine_steps,
                         admit_ms: now,
                         first_tok_ms: None,
+                        spec: SpecCounters::default(),
+                        spec_pending: Vec::new(),
                     });
                     break;
                 }
@@ -815,9 +1194,213 @@ pub fn run_lanes_with_costs(
         // the lane loop, since rerouting pushes into *another* lane's
         // ready set while this loop holds all lanes mutably.
         let mut reroutes: Vec<(usize, usize, f64)> = Vec::new();
+
+        // Speculative draft phase: before the per-lane step round,
+        // each verifier slot with no pending drafts leases a free
+        // draft-lane row (seeded with its committed tokens, KV
+        // re-prefilled) and the draft lane runs up to k greedy
+        // microsteps ahead, each at the draft lane's cost. Skipped —
+        // degrading those slots to plain dense decode this round —
+        // when the draft lane is dead, backing off, cooling a
+        // breaker, or out of free rows.
+        let mut drafted_lane: Option<usize> = None;
+        if let Some(plan) = spec {
+            let (d, v) = (plan.draft_lane, plan.verifier_lane);
+            let now = clock.now_ms();
+            let draft_usable = !lanes[d].dead
+                && now >= lanes[d].retry_at
+                && now >= lanes[d].open_until;
+            let verifier_live =
+                !lanes[v].dead && now >= lanes[v].open_until;
+            // (verifier slot, committed tokens, m, draft depth)
+            let mut jobs: Vec<(usize, Vec<i32>, usize, usize)> =
+                Vec::new();
+            if draft_usable && verifier_live {
+                let t_d = lanes[d].t;
+                let vl = &lanes[v];
+                for s in 0..vl.b {
+                    let Some(slot) = vl.slots[s].as_ref() else {
+                        continue;
+                    };
+                    if !slot.spec_pending.is_empty() {
+                        // still holding proposals for the next verify
+                        continue;
+                    }
+                    let m = vl.pos[s] as usize + 1;
+                    let budget = requests[slot.req].max_new_tokens
+                        .saturating_sub(slot.out.len());
+                    // depth capped by the remaining budget, the draft
+                    // row's context (committed tokens seat at 0..m-1;
+                    // microstep i writes position m-1+i) and the
+                    // verifier's committable positions (m..t-1)
+                    let want = plan.k.min(budget)
+                        .min(t_d.saturating_sub(m))
+                        .min((vl.t - 1).saturating_sub(m));
+                    if want == 0 {
+                        continue; // degrade: plain dense this round
+                    }
+                    jobs.push((s,
+                               vl.tokens[s * vl.t..s * vl.t + m]
+                                   .to_vec(),
+                               m, want));
+                }
+            }
+            if !jobs.is_empty() {
+                let lane = &mut lanes[d];
+                let backend = &mut backends[d];
+                let t_d = lane.t;
+                // lease free draft rows, lowest index first, to
+                // verifier slots in slot order; starved jobs degrade
+                let free: Vec<usize> = (0..lane.b)
+                    .filter(|&r| lane.slots[r].is_none())
+                    .collect();
+                // (verifier slot, draft row, depth, proposals, live)
+                let mut leases: Vec<(usize, usize, usize, Vec<u32>,
+                                     bool)> = Vec::new();
+                for ((vslot, prefix, m, want), &r) in
+                    jobs.into_iter().zip(free.iter())
+                {
+                    let row =
+                        &mut lane.tokens[r * t_d..(r + 1) * t_d];
+                    row.fill(0);
+                    row[..prefix.len()].copy_from_slice(&prefix);
+                    lane.pos[r] = m as i32 - 1;
+                    if lane.needs_prefill {
+                        lane.refill[r] = 1.0;
+                        lane.any_refill = true;
+                    }
+                    leases.push((vslot, r, want, Vec::new(), true));
+                }
+                let rounds = leases.iter()
+                    .map(|&(_, _, want, _, _)| want)
+                    .max().unwrap_or(0);
+                let occupied = lane.slots.iter()
+                    .filter(|s| s.is_some()).count();
+                for _ in 0..rounds {
+                    if !leases.iter().any(|&(.., live)| live) {
+                        break;
+                    }
+                    let mut attempt_err = None;
+                    if lane.needs_prefill && lane.any_refill {
+                        match backend.prefill(&lane.tokens, &lane.pos,
+                                              &lane.refill) {
+                            Ok(()) => {
+                                lane.prefill_steps += 1;
+                                lane.refill.fill(0.0);
+                                lane.any_refill = false;
+                                clock.on_prefill(
+                                    lane_costs[d].prefill_scale);
+                            }
+                            Err(e) => attempt_err = Some(e),
+                        }
+                    }
+                    let mut lv = Vec::new();
+                    if attempt_err.is_none() {
+                        match backend.step(&lane.tokens, &lane.pos) {
+                            Ok(x) => lv = x,
+                            Err(e) => attempt_err = Some(e),
+                        }
+                    }
+                    stepped = true;
+                    drafted_lane = Some(d);
+                    clock.on_step(lane_costs[d].step_scale);
+                    if attempt_err.is_some() {
+                        // the draft lane fails like any lane (its own
+                        // residents retry / reroute / fail);
+                        // proposals so far stay valid and are handed
+                        // to the verifier below — a draft fault never
+                        // touches a verifier-lane request
+                        let now = clock.now_ms();
+                        handle_step_failure(d, lane,
+                                            backend.healthy(), now,
+                                            requests, recovery,
+                                            &degraded, &mut pending,
+                                            &mut results,
+                                            &mut reroutes);
+                        break;
+                    }
+                    lane.attempt = 0;
+                    lane.consec_fail = 0;
+                    lane.engine_steps += 1;
+                    let live = leases.iter()
+                        .filter(|&&(.., l)| l).count();
+                    lane.slot_steps += (occupied + live) as u64;
+                    let spike = backend.take_spike_ms();
+                    if spike > 0.0 {
+                        clock.advance(spike);
+                    }
+                    let now = clock.now_ms();
+                    // the draft lane's own residents advance one
+                    // token per microstep, exactly as a plain round
+                    for s in 0..lane.b {
+                        if lane.slots[s].is_none() {
+                            continue;
+                        }
+                        if commit_slot(lane, s, &[], &lv, dp,
+                                       requests, now, false)
+                        {
+                            finish_slot(lane, s, now, requests,
+                                        &route, &degraded,
+                                        &mut pending, &mut results);
+                        }
+                    }
+                    // extend each live lease by one greedy proposal
+                    for (_, r, want, got, live) in leases.iter_mut() {
+                        if !*live {
+                            continue;
+                        }
+                        let row = &lv[*r * lane.vocab
+                                      ..(*r + 1) * lane.vocab];
+                        let cur = lane.pos[*r] as usize;
+                        let ctx: Vec<u32> = if dp.no_repeat_ngram > 0
+                        {
+                            (0..=cur)
+                                .map(|j| lane.tokens[*r * t_d + j]
+                                     as u32)
+                                .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        let next = topk::pick_next(
+                            row, &ctx, dp.no_repeat_ngram);
+                        got.push(next);
+                        let new_pos = cur + 1;
+                        if next == EOS || new_pos >= t_d {
+                            // can't extend past EOS (or the row);
+                            // the verifier decides what commits
+                            *live = false;
+                        } else {
+                            lane.tokens[*r * t_d + new_pos] =
+                                next as i32;
+                            lane.pos[*r] = new_pos as i32;
+                        }
+                        if got.len() >= *want {
+                            *live = false;
+                        }
+                    }
+                }
+                // hand the proposals to their verifier slots
+                for (vslot, _, _, got, _) in leases {
+                    if got.is_empty() {
+                        continue;
+                    }
+                    if let Some(slot) = lanes[v].slots[vslot].as_mut()
+                    {
+                        slot.spec.drafted += got.len() as u64;
+                        slot.spec_pending = got;
+                    }
+                }
+            }
+        }
+
         for (l, (lane, backend)) in
             lanes.iter_mut().zip(backends.iter_mut()).enumerate()
         {
+            if drafted_lane == Some(l) {
+                // the draft lane already ran its microsteps (and its
+                // residents their commits) this iteration
+                continue;
+            }
             let occupied =
                 lane.slots.iter().filter(|s| s.is_some()).count();
             if occupied == 0 || lane.dead {
@@ -828,6 +1411,61 @@ pub fn run_lanes_with_costs(
                 // backing off after a transient failure, or cooling
                 // down an open breaker
                 continue;
+            }
+            // Speculative verify staging: write each slot's pending
+            // drafts into its own row past the committed position
+            // (junk beyond `pos` is harmless to every backend) and
+            // lease free rows — one replica per checkable draft
+            // offset, shared pool in slot order — so this one step
+            // scores every proposed position at once. Leased rows
+            // re-prefill from their replicated tokens on the KV path.
+            let spec_on =
+                spec.map_or(false, |p| p.verifier_lane == l);
+            let mut slot_leases: Vec<Vec<usize>> = Vec::new();
+            let mut lease_count = 0usize;
+            if spec_on {
+                slot_leases = vec![Vec::new(); lane.b];
+                let free: Vec<usize> = (0..lane.b)
+                    .filter(|&r| lane.slots[r].is_none())
+                    .collect();
+                let mut free_rows = free.into_iter();
+                let t = lane.t;
+                for s in 0..lane.b {
+                    let pending_toks = match lane.slots[s].as_ref() {
+                        Some(slot) if !slot.spec_pending.is_empty() =>
+                            slot.spec_pending.clone(),
+                        _ => continue,
+                    };
+                    let m = lane.pos[s] as usize + 1;
+                    // positions m..t-1 are the only committable ones
+                    // (committing t-1 terminates), and the own row
+                    // already covers position m — so at most t-1-m
+                    // drafts are worth staging, and no leased row
+                    // ever steps at a position plain decode wouldn't
+                    let n_stage = pending_toks.len()
+                        .min((t - 1).saturating_sub(m));
+                    for (i, &d) in
+                        pending_toks.iter().take(n_stage).enumerate()
+                    {
+                        lane.tokens[s * t + m + i] = d as i32;
+                    }
+                    let row: Vec<i32> =
+                        lane.tokens[s * t..(s + 1) * t].to_vec();
+                    for i in 1..=n_stage {
+                        let Some(r) = free_rows.next() else {
+                            break;
+                        };
+                        lane.tokens[r * t..(r + 1) * t]
+                            .copy_from_slice(&row);
+                        lane.pos[r] = (m - 1 + i) as i32;
+                        if lane.needs_prefill {
+                            lane.refill[r] = 1.0;
+                            lane.any_refill = true;
+                        }
+                        slot_leases[s].push(r);
+                        lease_count += 1;
+                    }
+                }
             }
             // run the attempt (prefill if pending, then one step)
             // with the error contained instead of propagated
@@ -860,138 +1498,22 @@ pub fn run_lanes_with_costs(
             clock.on_step(lane_costs[l].step_scale);
 
             if attempt_err.is_some() {
+                // pending drafts survive a failed verify attempt —
+                // the committed prefix is unchanged, so they stay
+                // valid proposals for the retried step
                 let now = clock.now_ms();
-                lane.consec_fail = lane.consec_fail.saturating_add(1);
-                let fb = recovery.fallback.get(l).copied().flatten();
-                if !backend.healthy() {
-                    // permanent lane death: drain the in-flight slots
-                    // and queue (failover when configured, Failed
-                    // otherwise) and never step this lane again
-                    lane.dead = true;
-                    lane.open_until = f64::INFINITY;
-                    lane.refill.fill(0.0);
-                    lane.any_refill = false;
-                    for s in 0..lane.b {
-                        let Some(slot) = lane.slots[s].take() else {
-                            continue;
-                        };
-                        match fb {
-                            Some(f) => {
-                                reroutes.push((slot.req, f, now));
-                            }
-                            None => {
-                                let arrival =
-                                    pending.arrival_of(slot.req);
-                                results.push((l, RequestResult {
-                                    id: requests[slot.req].id,
-                                    tokens: Vec::new(),
-                                    queue_steps: slot.entered_step,
-                                    decode_steps: lane.engine_steps
-                                        - slot.entered_step,
-                                    arrival_ms: arrival,
-                                    queue_ms: slot.admit_ms - arrival,
-                                    ttft_ms: now - arrival,
-                                    latency_ms: now - arrival,
-                                    outcome: RequestOutcome::Failed,
-                                    degraded: degraded[slot.req],
-                                }));
-                                pending.on_complete(slot.req, now);
-                            }
-                        }
-                    }
-                    for i in lane.ready.drain(..) {
-                        match fb {
-                            Some(f) => reroutes.push((i, f, now)),
-                            None => {
-                                let arrival = pending.arrival_of(i);
-                                results.push((l, RequestResult {
-                                    id: requests[i].id,
-                                    tokens: Vec::new(),
-                                    queue_steps: 0,
-                                    decode_steps: 0,
-                                    arrival_ms: arrival,
-                                    queue_ms: now - arrival,
-                                    ttft_ms: now - arrival,
-                                    latency_ms: now - arrival,
-                                    outcome: RequestOutcome::Failed,
-                                    degraded: degraded[i],
-                                }));
-                                pending.on_complete(i, now);
-                            }
-                        }
-                    }
-                } else if lane.attempt < recovery.retry.max_retries {
-                    // transient: schedule a retry with capped
-                    // exponential backoff and mark the occupied rows
-                    // for re-prefill — each row's token buffer already
-                    // holds prompt + generated-so-far, so the existing
-                    // per-slot prefill path rebuilds the KV rows and
-                    // the resumed decode stays bitwise identical to an
-                    // uninterrupted one
-                    lane.attempt += 1;
-                    lane.retries += 1;
-                    lane.retry_at = now
-                        + recovery.retry.backoff_ms(lane.attempt);
-                    if lane.needs_prefill {
-                        for s in 0..lane.b {
-                            if lane.slots[s].is_some() {
-                                lane.refill[s] = 1.0;
-                                lane.any_refill = true;
-                            }
-                        }
-                    }
-                } else {
-                    // retry budget exhausted: the in-flight slots fail
-                    // (empty token streams — partial output is
-                    // dropped, not delivered); the lane itself stays
-                    // in service for later seatings
-                    lane.attempt = 0;
-                    for s in 0..lane.b {
-                        let Some(slot) = lane.slots[s].take() else {
-                            continue;
-                        };
-                        let arrival = pending.arrival_of(slot.req);
-                        results.push((l, RequestResult {
-                            id: requests[slot.req].id,
-                            tokens: Vec::new(),
-                            queue_steps: slot.entered_step,
-                            decode_steps: lane.engine_steps
-                                - slot.entered_step,
-                            arrival_ms: arrival,
-                            queue_ms: slot.admit_ms - arrival,
-                            ttft_ms: now - arrival,
-                            latency_ms: now - arrival,
-                            outcome: RequestOutcome::Failed,
-                            degraded: degraded[slot.req],
-                        }));
-                        pending.on_complete(slot.req, now);
-                    }
-                    lane.refill.fill(0.0);
-                    lane.any_refill = false;
-                }
-                // circuit breaker: N consecutive failed attempts open
-                // the lane for a cooldown; with failover configured,
-                // its waiting requests reroute instead of sitting the
-                // cooldown out
-                if !lane.dead
-                    && recovery.breaker_threshold > 0
-                    && lane.consec_fail >= recovery.breaker_threshold
-                {
-                    lane.open_until =
-                        now + recovery.breaker_cooldown_ms;
-                    lane.consec_fail = 0;
-                    if let Some(f) = fb {
-                        for i in lane.ready.drain(..) {
-                            reroutes.push((i, f, now));
-                        }
-                    }
-                }
+                handle_step_failure(l, lane, backend.healthy(), now,
+                                    requests, recovery, &degraded,
+                                    &mut pending, &mut results,
+                                    &mut reroutes);
                 continue;
             }
             lane.attempt = 0;
             lane.consec_fail = 0;
             lane.engine_steps += 1;
-            lane.slot_steps += occupied as u64;
+            // leased verify replicas occupy real batch rows for the
+            // step, so they count toward slot-steps and occupancy
+            lane.slot_steps += (occupied + lease_count) as u64;
             // injected latency spikes ride on top of the fixed step
             // cost (tokens are unaffected; only the clock moves)
             let spike = backend.take_spike_ms();
@@ -1000,67 +1522,21 @@ pub fn run_lanes_with_costs(
             }
             let now = clock.now_ms();
 
-            let (t, vocab) = (lane.t, lane.vocab);
             for s in 0..lane.b {
-                let finished = {
-                    let Some(slot) = lane.slots[s].as_mut() else {
-                        continue;
-                    };
-                    let max_new = requests[slot.req].max_new_tokens;
-                    let row = &lv[s * vocab..(s + 1) * vocab];
-                    let cur = lane.pos[s] as usize;
-                    let ctx: Vec<u32> = if dp.no_repeat_ngram > 0 {
-                        (0..=cur).map(|j| lane.tokens[s * t + j] as u32)
-                            .collect()
-                    } else {
-                        Vec::new()
-                    };
-                    let next = topk::pick_next(row, &ctx,
-                                               dp.no_repeat_ngram);
-                    let new_pos = cur + 1;
-                    let done = if next == EOS || new_pos >= t - 1 {
-                        if next != EOS && new_pos < t {
-                            slot.out.push(next);
-                        }
-                        true
-                    } else {
-                        lane.tokens[s * t + new_pos] = next as i32;
-                        lane.pos[s] = new_pos as i32;
-                        slot.out.push(next);
-                        slot.out.len() >= max_new
-                    };
-                    if slot.first_tok_ms.is_none()
-                        && !slot.out.is_empty()
-                    {
-                        slot.first_tok_ms = Some(now);
-                    }
-                    done
+                if lane.slots[s].is_none() {
+                    continue;
+                }
+                let leased: &[usize] = if spec_on {
+                    &slot_leases[s]
+                } else {
+                    &[]
                 };
-                if finished {
-                    // invariant: recovery drains only run on failed
-                    // attempts, never after the successful step that
-                    // set `finished`, so the slot is still occupied.
-                    let slot = lane.slots[s].take().expect(
-                        "slot emptied between the finished-edge check \
-                         and result emission",
-                    );
-                    let arrival = pending.arrival_of(slot.req);
-                    let lane_idx = route[slot.req];
-                    results.push((lane_idx, RequestResult {
-                        id: requests[slot.req].id,
-                        queue_steps: slot.entered_step,
-                        decode_steps: lane.engine_steps
-                            - slot.entered_step,
-                        arrival_ms: arrival,
-                        queue_ms: slot.admit_ms - arrival,
-                        ttft_ms: slot.first_tok_ms.unwrap_or(now)
-                            - arrival,
-                        latency_ms: now - arrival,
-                        tokens: slot.out,
-                        outcome: RequestOutcome::Completed,
-                        degraded: degraded[slot.req],
-                    }));
-                    pending.on_complete(slot.req, now);
+                if commit_slot(lane, s, leased, &lv, dp, requests,
+                               now, spec_on)
+                {
+                    finish_slot(lane, s, now, requests, &route,
+                                &degraded, &mut pending,
+                                &mut results);
                     // the freed slot refills from its lane's queue at
                     // the top of the next iteration, before the next
                     // model step
@@ -1089,6 +1565,7 @@ pub fn run_lanes_with_costs(
                     latency_ms: t_fail - arrival,
                     outcome: RequestOutcome::Failed,
                     degraded: degraded[i],
+                    spec: SpecCounters::default(),
                 }));
                 pending.on_complete(i, t_fail);
             } else {
@@ -2419,5 +2896,109 @@ mod tests {
             assert_eq!(d.tokens, v.tokens);
         }
         assert!(s75.stats.sim_ms < dense.stats.sim_ms);
+    }
+
+    fn run_spec_mock(draft_tok: usize, spec: Option<&SpecPlan>)
+                     -> ServeReport {
+        // two residents on a 2-slot verifier, a 2-row draft lane at
+        // s75 cost; MockBackend's fixed pick makes acceptance total
+        // (draft_tok == 5) or zero (anything else)
+        let requests = vec![
+            DecodeRequest::new(0, vec![1, 9, 3], 5),
+            DecodeRequest::new(1, vec![1, 9, 3], 3),
+        ];
+        let s = sched(&[0.0, 0.0], 1.0);
+        let names = [String::from("dense"), String::from("s75")];
+        let mut dense = MockBackend::new(2, 16, false);
+        let mut draft = MockBackend::new(2, 12, false);
+        draft.tok = draft_tok;
+        run_lanes_spec(
+            &mut [&mut dense, &mut draft], &names, &[0, 0], &requests,
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+            &RecoveryConfig::default(),
+            &[LaneCost::unit(), LaneCost::from_sparsity(0.75)],
+            spec).unwrap()
+    }
+
+    #[test]
+    fn speculative_mock_golden_full_acceptance() {
+        // pinned round trace with an agreeing draft (both mocks pick
+        // 5): with every verifier slot occupied the rounds interleave
+        // draft microsteps (0.25ms each) with single-lease-free
+        // verifies, and the makespan lands exactly on the plain run's
+        let plan = SpecPlan { draft_lane: 1, verifier_lane: 0, k: 2 };
+        let report = run_spec_mock(5, Some(&plan));
+        let plain = run_spec_mock(5, None);
+        let st = &report.stats;
+        assert_eq!((st.completed, st.generated_tokens), (2, 8));
+        for (r, p) in report.results.iter().zip(&plain.results) {
+            assert_eq!((r.id, &r.tokens), (p.id, &p.tokens));
+            assert!(r.tokens.iter().all(|&x| x == 5));
+        }
+        // r0: 4 drafts all accepted + the bonus pick that finishes
+        // the budget; r1 drains its 3 drafts one verify at a time
+        let (r0, r1) = (&report.results[0], &report.results[1]);
+        assert_eq!((r0.spec.drafted, r0.spec.accepted,
+                    r0.spec.corrections, r0.spec.verifies),
+                   (4, 4, 1, 4));
+        assert_eq!((r1.spec.drafted, r1.spec.accepted,
+                    r1.spec.corrections, r1.spec.verifies),
+                   (3, 3, 0, 3));
+        assert_eq!((st.spec.drafted, st.spec.accepted,
+                    st.spec.corrections, st.spec.verifies),
+                   (7, 7, 1, 7));
+        assert_eq!((st.acceptance_rate, st.wasted_drafts),
+                   (1.0, 0));
+        assert_eq!(st.tokens_per_verify, 8.0 / 7.0);
+        // 4 verifier steps + 4 draft microsteps; the draft lane's
+        // leases ride its slot_steps
+        assert_eq!((st.engine_steps, st.slot_steps), (8, 15));
+        assert_eq!(per_lane(&report, "dense").engine_steps, 4);
+        assert_eq!(per_lane(&report, "s75").engine_steps, 4);
+        assert_eq!(st.sim_ms, 5.0);
+        assert_eq!(plain.stats.sim_ms, 5.0);
+        // first token waits for one 0.5ms draft phase + the verify
+        assert_eq!(r0.ttft_ms, 1.5);
+        assert_eq!((r0.latency_ms, r1.latency_ms), (5.0, 4.0));
+    }
+
+    #[test]
+    fn speculative_mock_golden_full_rejection() {
+        // pinned worst case: the draft always proposes 6, the
+        // verifier always picks 5 — every verify commits exactly one
+        // correction, output stays the dense stream, and the wasted
+        // draft microsteps stretch the makespan past the plain run
+        let plan = SpecPlan { draft_lane: 1, verifier_lane: 0, k: 2 };
+        let report = run_spec_mock(6, Some(&plan));
+        let st = &report.stats;
+        assert_eq!((st.completed, st.generated_tokens), (2, 8));
+        for r in &report.results {
+            assert!(r.tokens.iter().all(|&x| x == 5));
+        }
+        let (r0, r1) = (&report.results[0], &report.results[1]);
+        assert_eq!((r0.spec.drafted, r0.spec.accepted,
+                    r0.spec.corrections, r0.spec.verifies),
+                   (9, 0, 5, 5));
+        assert_eq!((r1.spec.drafted, r1.spec.accepted,
+                    r1.spec.corrections, r1.spec.verifies),
+                   (5, 0, 3, 3));
+        assert_eq!((st.spec.drafted, st.spec.accepted,
+                    st.spec.corrections, st.spec.verifies),
+                   (14, 0, 8, 8));
+        assert_eq!((st.acceptance_rate, st.wasted_drafts),
+                   (0.0, 14));
+        // the provable floor: the correction keeps every verify at
+        // exactly one committed token even with zero acceptance
+        assert_eq!(st.tokens_per_verify, 1.0);
+        assert_eq!((st.engine_steps, st.slot_steps), (14, 24));
+        assert_eq!(st.sim_ms, 7.25);
+        assert_eq!((r0.latency_ms, r1.latency_ms), (7.25, 4.5));
+    }
+
+    fn per_lane<'a>(rep: &'a ServeReport, name: &str)
+                    -> &'a ServeStats {
+        &rep.per_model.iter().find(|m| m.model == name)
+            .expect("lane name registered in the report")
+            .stats
     }
 }

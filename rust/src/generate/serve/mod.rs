@@ -39,6 +39,14 @@
 //!    stream across them by [`DecodeRequest::model`]; slots are
 //!    (model, slot) pairs with per-model `decode_batch` budgets and
 //!    the scheduling/admission decisions stay model-aware.
+//!  * [`speculative`] — self-speculative decoding over the registry:
+//!    the cheap sparse lane drafts `k` greedy tokens ahead, the dense
+//!    lane verifies all of them in one batched step, and the engine
+//!    commits the longest agreeing prefix plus the verifier's first
+//!    correction — ≥ 1 pick per verify, output bitwise identical to
+//!    plain dense greedy decode ([`SpecConfig`], `--speculate
+//!    DRAFT=VERIFIER:k`). Draft-lane faults degrade to plain dense
+//!    decode, never to a failure.
 //!  * [`telemetry`] — per-request results with a
 //!    [`telemetry::RequestOutcome`] (completed / shed / expired),
 //!    aggregate [`telemetry::ServeStats`] including shed-rate and
@@ -56,6 +64,7 @@ pub mod core;
 pub mod fault;
 pub mod policy;
 pub mod registry;
+pub mod speculative;
 pub mod telemetry;
 
 pub use self::admission::AdmissionPolicy;
@@ -67,8 +76,9 @@ pub use self::fault::{ChaosConfig, FaultPlan, FaultSpec,
                       FAULT_SALT};
 pub use self::policy::Scheduler;
 pub use self::registry::ModelRegistry;
+pub use self::speculative::{SpecConfig, SpecPlan};
 pub use self::telemetry::{ModelStats, RequestOutcome, RequestResult,
-                          ServeReport, ServeStats};
+                          ServeReport, ServeStats, SpecCounters};
 
 /// One queued decode request.
 #[derive(Debug, Clone)]

@@ -28,6 +28,7 @@ use crate::generate::DecodeParams;
 use super::clock::Schedule;
 use super::core::{self, LogitsBackend, ServeConfig};
 use super::fault::{plans_for_lanes, FaultyBackend, RecoveryConfig};
+use super::speculative::SpecPlan;
 use super::telemetry::ServeReport;
 use super::DecodeRequest;
 
@@ -170,9 +171,11 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
     /// The fully explicit form: engine path + schedule + policies +
     /// fault/recovery config, routed per-request by
     /// [`DecodeRequest::model`]. Fault plans in `cfg.faults` wrap the
-    /// named lanes' backends in deterministic injectors, and
+    /// named lanes' backends in deterministic injectors,
     /// `cfg.fallback` resolves `(from, to)` model names into the
-    /// recovery layer's failover route.
+    /// recovery layer's failover route, and `cfg.speculate` resolves
+    /// `DRAFT=VERIFIER:k` model names into the self-speculative
+    /// [`SpecPlan`] (draft lane proposes, verifier lane commits).
     pub fn serve_with(&self, requests: &[DecodeRequest],
                       dp: &DecodeParams, cfg: &ServeConfig)
                       -> anyhow::Result<ServeReport> {
@@ -232,10 +235,21 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
         // so the s75 lane of a checkpoint-sweep registry steps ~4x
         // cheaper than dense on the shared clock
         let costs = self.lane_costs();
-        core::run_lanes_with_costs(&mut refs, &names, &lane_of,
-                                   requests, dp, cfg.schedule,
-                                   cfg.scheduler, cfg.admission,
-                                   &recovery, &costs)
+        let spec_plan: Option<SpecPlan> = match &cfg.speculate {
+            Some(sc) => {
+                sc.validate()?;
+                Some(SpecPlan {
+                    draft_lane: self.resolve(Some(&sc.draft))?,
+                    verifier_lane: self.resolve(Some(&sc.verifier))?,
+                    k: sc.k,
+                })
+            }
+            None => None,
+        };
+        core::run_lanes_spec(&mut refs, &names, &lane_of, requests,
+                             dp, cfg.schedule, cfg.scheduler,
+                             cfg.admission, &recovery, &costs,
+                             spec_plan.as_ref())
     }
 
     /// Per-lane virtual step-cost multipliers, registration order:

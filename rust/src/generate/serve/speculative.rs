@@ -1,0 +1,193 @@
+//! Self-speculative decoding: a cheap sparse checkpoint drafts, the
+//! dense checkpoint verifies, output stays bitwise dense.
+//!
+//! SPDF's sparse-pre-trained checkpoints compute a fraction of the
+//! dense FLOPs while staying close to the dense model's distribution —
+//! exactly the profile of a good *draft* model. In speculative mode a
+//! request routed to the verifier lane transiently holds rows on two
+//! lanes per round:
+//!
+//!  1. **draft** — a leased row on the draft lane (the s75 checkpoint,
+//!     ~4× cheaper per step under [`super::clock::LaneCost`]) is
+//!     re-prefilled from the committed tokens and runs up to `k`
+//!     greedy microsteps ahead, proposing `d_1..d_k`;
+//!  2. **verify** — the verifier lane scores all proposals in **one**
+//!     batched step: the request's own row reads the committed
+//!     position and each free verifier row is leased to replicate the
+//!     row at one draft offset, so a single step yields the dense
+//!     picks `v_0..v_u` for every proposed position at once;
+//!  3. **accept** — the engine commits the longest agreeing prefix
+//!     ([`accept_len`]) plus the verifier's first correction (or the
+//!     bonus token when every draft matched), so every verify step
+//!     commits ≥ 1 pick and the committed stream is provably the
+//!     dense greedy stream: each committed token is a dense pick made
+//!     from an already-validated dense context.
+//!
+//! Faults compose instead of cascading: a dead / backing-off /
+//! breaker-open draft lane (or simple lease starvation) degrades the
+//! request to plain dense decode for the round — never `Failed` — and
+//! a verifier-lane fault follows the ordinary recovery path with the
+//! pending drafts retained for the retried verify.
+//!
+//! The per-round virtual-time cost is `k · (1 − s) + 1` dense steps
+//! ([`super::clock::LaneCost::spec_round_scale`]), so the measurable
+//! speedup is `accepted_len / (k·(1−s) + 1)` — the acceptance-rate
+//! telemetry in [`super::telemetry::ServeStats`] makes the win (or its
+//! absence) a first-class datapoint.
+
+/// User-facing speculative-decoding knob: registry model **names**
+/// plus the draft depth, as given on the CLI
+/// (`--speculate DRAFT=VERIFIER:k`).
+///
+/// ```
+/// use spdf::generate::serve::SpecConfig;
+/// let c = SpecConfig::parse("s75=dense:4").unwrap();
+/// assert_eq!((c.draft.as_str(), c.verifier.as_str(), c.k),
+///            ("s75", "dense", 4));
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Model that drafts ahead (the cheap sparse checkpoint).
+    pub draft: String,
+    /// Model whose output the caller receives, bitwise (dense).
+    pub verifier: String,
+    /// Draft depth: greedy tokens proposed per round (≥ 1).
+    pub k: usize,
+}
+
+impl SpecConfig {
+    /// A validated config from its three parts.
+    pub fn new(draft: impl Into<String>, verifier: impl Into<String>,
+               k: usize) -> anyhow::Result<SpecConfig> {
+        let cfg = SpecConfig { draft: draft.into(),
+                               verifier: verifier.into(), k };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse the CLI form `DRAFT=VERIFIER:k` (mirroring
+    /// `--fallback FROM=TO`), e.g. `s75=dense:4`.
+    pub fn parse(spec: &str) -> anyhow::Result<SpecConfig> {
+        let (draft, rest) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!(
+                "--speculate wants DRAFT=VERIFIER:k (got {spec:?})")
+        })?;
+        let (verifier, k) = rest.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!(
+                "--speculate wants DRAFT=VERIFIER:k (got {spec:?})")
+        })?;
+        let k: usize = k.parse().map_err(|_| {
+            anyhow::anyhow!("--speculate draft depth must be an \
+                             integer (got {k:?})")
+        })?;
+        SpecConfig::new(draft, verifier, k)
+    }
+
+    /// Structural checks that need no registry: non-empty distinct
+    /// model names, draft depth ≥ 1.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.draft.is_empty()
+                            && !self.verifier.is_empty(),
+                        "speculative config needs non-empty draft and \
+                         verifier model names");
+        anyhow::ensure!(self.draft != self.verifier,
+                        "speculative draft and verifier must be \
+                         different models (got {} twice)", self.draft);
+        anyhow::ensure!(self.k >= 1,
+                        "speculative draft depth k must be >= 1");
+        Ok(())
+    }
+}
+
+/// [`SpecConfig`] resolved against a registry: lane indices instead of
+/// model names. Built by `ModelRegistry::serve_with`; the serve core
+/// takes it by reference and stays name-agnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecPlan {
+    /// Lane that drafts (leased rows only — its own residents keep
+    /// decoding normally, one token per draft microstep).
+    pub draft_lane: usize,
+    /// Lane whose residents are served speculatively.
+    pub verifier_lane: usize,
+    /// Draft depth per round.
+    pub k: usize,
+}
+
+impl SpecPlan {
+    /// Lane-level checks: distinct in-range lanes, depth ≥ 1.
+    pub fn validate(&self, n_lanes: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.draft_lane < n_lanes
+                            && self.verifier_lane < n_lanes,
+                        "speculative lanes ({}, {}) out of range for \
+                         {n_lanes} lanes",
+                        self.draft_lane, self.verifier_lane);
+        anyhow::ensure!(self.draft_lane != self.verifier_lane,
+                        "speculative draft and verifier must be \
+                         different lanes (got {} twice)",
+                        self.draft_lane);
+        anyhow::ensure!(self.k >= 1,
+                        "speculative draft depth k must be >= 1");
+        Ok(())
+    }
+}
+
+/// Longest agreeing prefix: how many leading draft tokens match the
+/// verifier's picks for the same positions. `drafts[i]` proposes the
+/// token for committed position `m + i`; `verified[i]` is the dense
+/// pick for that position given the prefix `drafts[..i]` — so the
+/// prefix of length `accept_len` is exactly the dense greedy stream.
+///
+/// ```
+/// use spdf::generate::serve::speculative::accept_len;
+/// assert_eq!(accept_len(&[7, 8, 9], &[7, 8, 2]), 2);
+/// assert_eq!(accept_len(&[7, 8, 9], &[7, 8, 9]), 3);
+/// assert_eq!(accept_len(&[1], &[2]), 0);
+/// ```
+pub fn accept_len(drafts: &[u32], verified: &[u32]) -> usize {
+    drafts
+        .iter()
+        .zip(verified)
+        .take_while(|(d, v)| d == v)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_cli_form() {
+        let c = SpecConfig::parse("s75=dense:3").unwrap();
+        assert_eq!(c, SpecConfig { draft: "s75".into(),
+                                   verifier: "dense".into(), k: 3 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["s75", "s75=dense", "s75:dense=3", "s75=dense:x",
+                    "s75=dense:0", "=dense:3", "s75=:3",
+                    "dense=dense:3"] {
+            assert!(SpecConfig::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn plan_validation_needs_two_distinct_lanes() {
+        let ok = SpecPlan { draft_lane: 1, verifier_lane: 0, k: 4 };
+        ok.validate(2).unwrap();
+        assert!(ok.validate(1).is_err(), "lane out of range");
+        let same = SpecPlan { draft_lane: 0, verifier_lane: 0, k: 4 };
+        assert!(same.validate(2).is_err(), "same lane twice");
+        let k0 = SpecPlan { draft_lane: 1, verifier_lane: 0, k: 0 };
+        assert!(k0.validate(2).is_err(), "k = 0");
+    }
+
+    #[test]
+    fn accept_len_is_the_longest_agreeing_prefix() {
+        assert_eq!(accept_len(&[], &[]), 0);
+        assert_eq!(accept_len(&[5], &[]), 0);
+        assert_eq!(accept_len(&[5, 6], &[5, 6, 7]), 2);
+        assert_eq!(accept_len(&[5, 9, 6], &[5, 6, 6]), 1);
+        assert_eq!(accept_len(&[3, 3, 3], &[3, 3, 3]), 3);
+    }
+}

@@ -38,6 +38,34 @@ impl RequestOutcome {
     }
 }
 
+/// Per-request speculative-decoding bookkeeping (all zero outside
+/// speculative mode, and for requests not served on the verifier
+/// lane). Conservation: a completed speculatively-served request has
+/// `tokens.len() == accepted + corrections` — every committed token
+/// was either an accepted draft or a verifier emission
+/// (property-tested in `rust/tests/serve_properties.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecCounters {
+    /// Draft tokens proposed for this request (accepted or not).
+    pub drafted: u64,
+    /// Draft tokens accepted by the verifier and committed.
+    pub accepted: u64,
+    /// Tokens the verifier emitted itself: rejections' corrections,
+    /// all-accepted bonus tokens, and plain dense steps while the
+    /// request was degraded (no draft lease that round).
+    pub corrections: u64,
+    /// Verifier steps this request participated in while served
+    /// speculatively (tokens-per-verify denominator).
+    pub verifies: u64,
+}
+
+impl SpecCounters {
+    /// Draft steps wasted: proposed but never committed.
+    pub fn wasted(&self) -> u64 {
+        self.drafted - self.accepted
+    }
+}
+
 /// The decoded continuation plus per-request serving telemetry. All
 /// `*_ms` fields are wall-clock on the untimed `serve`/`serve_kv` path
 /// and virtual-clock under a `serve_timed` schedule.
@@ -71,6 +99,9 @@ pub struct RequestResult {
     /// answer, but from the degraded-mode substitute, not the model it
     /// asked for.
     pub degraded: bool,
+    /// Speculative-decoding bookkeeping (zero outside speculative
+    /// mode; failed results drop their counters with their tokens).
+    pub spec: SpecCounters,
 }
 
 impl RequestResult {
@@ -86,7 +117,11 @@ impl RequestResult {
             .push_num("ttft_ms", self.ttft_ms)
             .push_num("latency_ms", self.latency_ms)
             .push_str("outcome", self.outcome.as_str())
-            .push_bool("degraded", self.degraded);
+            .push_bool("degraded", self.degraded)
+            .push_num("drafted", self.spec.drafted)
+            .push_num("accepted", self.spec.accepted)
+            .push_num("corrections", self.spec.corrections)
+            .push_num("verifies", self.spec.verifies);
         j
     }
 }
@@ -148,6 +183,18 @@ pub struct ServeStats {
     /// Clock reading when the last request completed: wall ms on the
     /// untimed path, virtual ms under a `Schedule`.
     pub sim_ms: f64,
+    /// Speculative-decoding sums over the result set (all zero
+    /// outside speculative mode — see [`SpecCounters`]).
+    pub spec: SpecCounters,
+    /// `accepted / drafted` — the draft model's hit rate against the
+    /// dense verifier; 0.0 when nothing was drafted.
+    pub acceptance_rate: f64,
+    /// Committed tokens per verifier step for speculatively-served
+    /// requests, `(accepted + corrections) / verifies` — the per-round
+    /// progress a verify buys; 0.0 when nothing was verified.
+    pub tokens_per_verify: f64,
+    /// Draft steps wasted: `drafted - accepted`.
+    pub wasted_drafts: u64,
     /// Per-request queue wait (arrival → slot entry), completed only.
     pub queue_ms: Summary,
     /// Per-request time-to-first-token, completed only.
@@ -204,6 +251,13 @@ impl ServeStats {
                 .map(|r| f(r))
                 .collect::<Vec<f64>>())
         };
+        let spec = results.iter().fold(
+            SpecCounters::default(), |acc, r| SpecCounters {
+                drafted: acc.drafted + r.spec.drafted,
+                accepted: acc.accepted + r.spec.accepted,
+                corrections: acc.corrections + r.spec.corrections,
+                verifies: acc.verifies + r.spec.verifies,
+            });
         let per_sec = |tokens: u64| {
             if wall_secs > 0.0 {
                 tokens as f64 / wall_secs
@@ -244,6 +298,19 @@ impl ServeStats {
                 wall_secs * 1e3 / engine_steps as f64
             },
             sim_ms,
+            spec,
+            acceptance_rate: if spec.drafted == 0 {
+                0.0
+            } else {
+                spec.accepted as f64 / spec.drafted as f64
+            },
+            tokens_per_verify: if spec.verifies == 0 {
+                0.0
+            } else {
+                (spec.accepted + spec.corrections) as f64
+                    / spec.verifies as f64
+            },
+            wasted_drafts: spec.wasted(),
             queue_ms: collect(|r| r.queue_ms),
             ttft_ms: collect(|r| r.ttft_ms),
             latency_ms: collect(|r| r.latency_ms),
@@ -274,6 +341,13 @@ impl ServeStats {
                       self.goodput_tokens_per_sec)
             .push_num("mean_step_ms", self.mean_step_ms)
             .push_num("sim_ms", self.sim_ms)
+            .push_num("drafted", self.spec.drafted)
+            .push_num("accepted", self.spec.accepted)
+            .push_num("corrections", self.spec.corrections)
+            .push_num("verifies", self.spec.verifies)
+            .push_num("acceptance_rate", self.acceptance_rate)
+            .push_num("tokens_per_verify", self.tokens_per_verify)
+            .push_num("wasted_drafts", self.wasted_drafts)
             .push("queue_ms", self.queue_ms.to_json())
             .push("ttft_ms", self.ttft_ms.to_json())
             .push("latency_ms", self.latency_ms.to_json());
@@ -347,6 +421,7 @@ mod tests {
             latency_ms: latency,
             outcome,
             degraded: false,
+            spec: SpecCounters::default(),
         }
     }
 
@@ -458,6 +533,40 @@ mod tests {
         assert_eq!(RequestOutcome::Completed.as_str(), "completed");
         assert_eq!(RequestOutcome::Shed.as_str(), "shed");
         assert_eq!(RequestOutcome::Failed.as_str(), "failed");
+    }
+
+    #[test]
+    fn spec_counters_aggregate_and_derive_rates() {
+        let mut a = result(0, 4, 3.0, RequestOutcome::Completed);
+        a.spec = SpecCounters { drafted: 6, accepted: 3,
+                                corrections: 1, verifies: 2 };
+        let mut b = result(1, 3, 5.0, RequestOutcome::Completed);
+        b.spec = SpecCounters { drafted: 2, accepted: 1,
+                                corrections: 2, verifies: 2 };
+        let results = vec![a, b];
+        let st = ServeStats::from_results(&refs(&results), 2, 2, 4, 0,
+                                          6, 0.5, 8.0, 0);
+        assert_eq!(st.spec.drafted, 8);
+        assert_eq!(st.spec.accepted, 4);
+        assert_eq!(st.spec.corrections, 3);
+        assert_eq!(st.spec.verifies, 4);
+        assert_eq!(st.acceptance_rate, 0.5);
+        assert_eq!(st.tokens_per_verify, 7.0 / 4.0);
+        assert_eq!(st.wasted_drafts, 4);
+        let j = st.to_json();
+        assert_eq!(j.get("drafted").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("acceptance_rate").unwrap().as_f64(),
+                   Some(0.5));
+        assert_eq!(j.get("tokens_per_verify").unwrap().as_f64(),
+                   Some(1.75));
+        assert_eq!(j.get("wasted_drafts").unwrap().as_usize(), Some(4));
+        // non-speculative runs report an all-zero block, not NaNs
+        let plain = vec![result(2, 3, 2.0, RequestOutcome::Completed)];
+        let st = ServeStats::from_results(&refs(&plain), 1, 1, 3, 0, 3,
+                                          0.1, 3.0, 0);
+        assert_eq!(st.spec, SpecCounters::default());
+        assert_eq!((st.acceptance_rate, st.tokens_per_verify), (0.0,
+                                                                0.0));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use spdf::data::Task;
 use spdf::flops;
 use spdf::generate::loadgen::{self, Pattern, StepCosts};
 use spdf::generate::serve::{admission, policy, AdmissionPolicy,
-                            Scheduler};
+                            Scheduler, SpecConfig};
 use spdf::generate::{ChaosConfig, DecodeParams, FaultPlan, FaultSpec,
                      RetryPolicy, ServeConfig};
 use spdf::runtime::Engine;
@@ -684,6 +684,16 @@ fn chaos_from_flags(a: &spdf::util::cli::Args)
     Ok(chaos)
 }
 
+/// Parse the `--speculate DRAFT=VERIFIER:k` flag shared by `spdf
+/// serve` and `spdf loadgen` (empty = plain decode).
+fn speculate_from_flag(a: &spdf::util::cli::Args)
+                       -> anyhow::Result<Option<SpecConfig>> {
+    match a.get("speculate") {
+        "" => Ok(None),
+        s => Ok(Some(SpecConfig::parse(s)?)),
+    }
+}
+
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let cli = world_flags(
         Cli::new("spdf serve",
@@ -713,10 +723,16 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         .flag("queue-deadline-ms", "0",
               "expire requests queued longer than this many ms \
                (0 = never)")
+        .flag("speculate", "",
+              "self-speculative decoding DRAFT=VERIFIER:k (model \
+               names): DRAFT proposes k greedy tokens per round, \
+               VERIFIER commits — output stays bitwise VERIFIER-only \
+               (empty = plain decode)")
         .flag("stats-json", "", "write serving stats JSON to this path");
     let cli = chaos_flags(cli);
     let a = cli.parse(raw)?;
     let chaos = chaos_from_flags(&a)?;
+    let speculate = speculate_from_flag(&a)?;
     let scheduler = policy::parse(a.get("policy"))?;
     let priority_classes = a.get_usize("priority-classes")?;
     anyhow::ensure!((1..=255).contains(&priority_classes),
@@ -795,6 +811,7 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         recovery: chaos.recovery.clone(),
         faults: chaos.faults.clone(),
         fallback: chaos.fallback.clone(),
+        speculate: speculate.clone(),
     })?;
     eprintln!("[spdf] served {} requests over {} model(s) in {:.1}s \
                ({} path, {}/{}{})",
@@ -866,10 +883,17 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                 "measure real per-path step costs instead of the \
                  pinned --step-ms (honest-ms curves; the trace itself \
                  stays seed-deterministic)")
+        .flag("speculate", "",
+              "self-speculative decoding DRAFT=VERIFIER:k (model \
+               names): DRAFT proposes k greedy tokens per round, \
+               VERIFIER commits — output stays bitwise VERIFIER-only \
+               (empty = plain decode; needs a multi-model --model \
+               registry)")
         .flag("out", "", "write the sweep JSON to this path");
     let cli = chaos_flags(cli);
     let a = cli.parse(raw)?;
     let chaos = chaos_from_flags(&a)?;
+    let speculate = speculate_from_flag(&a)?;
     let engine_flag = a.get("engine");
     anyhow::ensure!(
         matches!(engine_flag, "auto" | "both" | "kv" | "literal"),
@@ -1069,8 +1093,14 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
     let points = if n_models > 1 {
         loadgen::sweep_registry(&registry, &base, &rates, &engines,
                                 &dp, scheduler.as_ref(),
-                                admit.as_ref(), &chaos)?
+                                admit.as_ref(), &chaos,
+                                speculate.as_ref())?
     } else {
+        anyhow::ensure!(
+            speculate.is_none(),
+            "--speculate needs a multi-model --model registry (the \
+             draft and verifier are two registered models)"
+        );
         loadgen::sweep_with(decode, &base, &rates, &engines, &dp,
                             scheduler.as_ref(), admit.as_ref(),
                             &chaos)?

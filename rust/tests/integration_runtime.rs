@@ -600,6 +600,7 @@ fn serve_policies_fifo_unbounded_bit_identical_to_default() {
                 recovery: spdf::generate::RecoveryConfig::default(),
                 faults: Vec::new(),
                 fallback: None,
+                speculate: None,
             }).unwrap();
         assert_eq!(default_report.results.len(),
                    explicit_report.results.len(), "kv={kv}");
@@ -967,7 +968,7 @@ fn sparse_residency_artifact_golden() {
     let run = |reg: &ModelRegistry, t: &loadgen::Trace| {
         loadgen::run_trace_registry(
             reg, t, &dp, false, &costs, &Fifo, &Unbounded,
-            &ChaosConfig::default())
+            &ChaosConfig::default(), None)
             .unwrap()
     };
     let (_, _, rep_a) = run(&reg_a, &trace);
@@ -1006,6 +1007,113 @@ fn sparse_residency_artifact_golden() {
              lane on the virtual clock ({} vs {} ms)",
             s75_pt.sim_ms, dense_pt.sim_ms);
     assert!(s75_pt.tokens_per_vsec > dense_pt.tokens_per_vsec);
+}
+
+#[test]
+fn speculative_decode_bitwise_matches_dense_reference() {
+    // tentpole acceptance (ISSUE 9): self-speculative decoding over
+    // real artifacts. A genuinely different draft (the s75-sparsified
+    // checkpoint) proposing for the dense verifier must leave every
+    // greedy stream bitwise identical to the plain dense serve AND to
+    // the reference oracle — rejections only cost speed, never
+    // output — while the acceptance bookkeeping conserves every
+    // emitted token.
+    use spdf::generate::serve::admission::Unbounded;
+    use spdf::generate::serve::policy::Fifo;
+    use spdf::generate::{ChaosConfig, ModelRegistry, SpecConfig};
+
+    let engine = engine();
+    let runtime = decode_runtime(&engine);
+    let mm = &runtime.manifest;
+    let mut rng = Rng::new(61);
+    let mut state = TrainState::init(mm, &mut rng);
+    let dense_params = state.param_tensors(mm);
+    state.sparsify(MaskSet::random(
+        mm, 0.75, MaskScheme::Uniform, &mut rng));
+    let s75_params = state.param_tensors(mm);
+    let dense = DecodeEngine::new(&runtime, &dense_params).unwrap();
+    let s75 = DecodeEngine::new(&runtime, &s75_params).unwrap();
+    assert!(s75.sparse_slots() > 0, "draft lane must be the CSR twin");
+
+    let mut reg = ModelRegistry::new("dense", &dense).unwrap();
+    reg.register("s75", &s75).unwrap();
+
+    let cfg = TraceConfig {
+        seed: 43,
+        requests: mm.decode_batch + 2,
+        rate_rps: 400.0,
+        pattern: Pattern::Bursty { burst: mm.decode_batch + 2 },
+        prompt_lens: (3, 6),
+        budgets: (3, 8),
+        vocab: mm.config.vocab_size,
+        priority_classes: 1,
+        model_mix: Vec::new(),
+    };
+    let trace = {
+        let mut t = loadgen::generate_trace(&cfg).unwrap();
+        for r in t.requests.iter_mut() {
+            // everyone targets the verifier; the draft lane only leases
+            r.model = Some("dense".into());
+        }
+        t
+    };
+    let dp = DecodeParams::default();
+    let costs = StepCosts::default();
+    let spec = SpecConfig::new("s75", "dense", 4).unwrap();
+    let run = |speculate: Option<&SpecConfig>| {
+        loadgen::run_trace_registry(
+            &reg, &trace, &dp, false, &costs, &Fifo, &Unbounded,
+            &ChaosConfig::default(), speculate)
+            .unwrap()
+    };
+    let (_, _, plain) = run(None);
+    let (_, _, spec_rep) = run(Some(&spec));
+
+    // multi-token commits can reorder completion instants, so compare
+    // by request id, not by completion order
+    assert_eq!(plain.results.len(), spec_rep.results.len());
+    let by_id = |rep: &spdf::generate::ServeReport| {
+        let mut v: Vec<(u64, Vec<u32>)> = rep.results.iter()
+            .map(|r| (r.id, r.tokens.clone()))
+            .collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    assert_eq!(by_id(&plain), by_id(&spec_rep),
+               "speculation changed a greedy stream");
+    for s in &spec_rep.results {
+        // per-request conservation: every emitted token was either an
+        // accepted draft or a verifier correction
+        assert_eq!(s.tokens.len() as u64,
+                   s.spec.accepted + s.spec.corrections,
+                   "req {} emitted {} tokens but booked {} + {}",
+                   s.id, s.tokens.len(), s.spec.accepted,
+                   s.spec.corrections);
+    }
+    // the draft lane really ran, and verifies never lost ground
+    let sc = &spec_rep.stats.spec;
+    assert!(sc.verifies > 0 && sc.drafted > 0,
+            "speculation never engaged ({sc:?})");
+    // every verify advances its request; only the terminal EOS verify
+    // emits nothing, so verifies <= emitted + one per completed stream
+    assert!(sc.verifies <= sc.accepted + sc.corrections
+                + spec_rep.stats.completed as u64,
+            "a verify committed no progress ({sc:?}, completed {})",
+            spec_rep.stats.completed);
+    // and each spec stream is still the dense reference oracle's
+    for res in &spec_rep.results {
+        let req = trace.requests.iter().find(|q| q.id == res.id)
+            .expect("result id from the trace");
+        let solo = reference::greedy(
+            &runtime, &dense_params,
+            std::slice::from_ref(&req.prompt),
+            &DecodeParams { max_new_tokens: req.max_new_tokens,
+                            ..Default::default() })
+            .unwrap();
+        assert_eq!(res.tokens, solo[0],
+                   "spec decode diverged from the dense reference \
+                    (req {})", res.id);
+    }
 }
 
 #[test]

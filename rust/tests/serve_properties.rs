@@ -14,18 +14,31 @@
 //! random scenarios through `serve::core::run_lanes_with` with
 //! deterministic mock backends — no compiled artifacts needed, so it
 //! runs under plain `cargo test -q` (tier 1).
+//!
+//! The speculative properties (ISSUE 9) run the same machinery
+//! through `run_lanes_spec` with a content-dependent backend pair
+//! (the draft lane deliberately disagrees with the verifier so
+//! rejections actually occur): spec output must stay byte-identical
+//! to the dense-only run across seeds × schedulers, the acceptance
+//! bookkeeping must conserve every emitted token, and killing the
+//! draft lane must degrade to plain dense decode — never a `Failed`
+//! request.
 
 use spdf::generate::serve::admission::{AdmissionPolicy, Bounded,
                                        MaxQueueDepth, QueueDeadline,
                                        Unbounded};
 use spdf::generate::serve::core::mock::MockBackend;
-use spdf::generate::serve::core::{run_lanes_with, LogitsBackend};
+use spdf::generate::serve::core::{run_lanes_spec,
+                                  run_lanes_with_costs,
+                                  run_lanes_with, LogitsBackend};
 use spdf::generate::serve::policy::{Fifo, PriorityClass, Scheduler,
                                     ShortestPromptFirst,
                                     SmallestBudgetFirst};
-use spdf::generate::serve::{FaultPlan, FaultyBackend, Schedule};
+use spdf::generate::serve::{FaultPlan, FaultyBackend, LaneCost,
+                            Schedule, SpecPlan};
 use spdf::generate::{DecodeParams, DecodeRequest, RecoveryConfig,
                      RequestOutcome, RetryPolicy, ServeReport};
+use spdf::tokenizer::EOS;
 use spdf::util::proptest::check;
 use spdf::util::rng::Rng;
 
@@ -396,5 +409,236 @@ fn prop_chaos_same_seed_byte_identical() {
             && a.results.iter().zip(&b.results).all(|(x, y)| {
                 x.to_json().to_string() == y.to_json().to_string()
             })
+    });
+}
+
+// ---------- speculative decoding properties (ISSUE 9) ----------
+
+/// A content-dependent mock: each row's argmax is a deterministic
+/// hash of (token under the cursor, position, salt), occasionally
+/// EOS so the termination edge gets exercised. Crucially the logits
+/// depend only on the row *content*, never on which physical row or
+/// step served it — the uniformity a real (stateless-logits) model
+/// has and the speculative staging relies on. Two instances with
+/// different salts model a draft checkpoint that genuinely disagrees
+/// with its verifier.
+struct VaryingBackend {
+    b: usize,
+    t: usize,
+    vocab: usize,
+    salt: u64,
+}
+
+impl VaryingBackend {
+    fn new(b: usize, salt: u64) -> VaryingBackend {
+        VaryingBackend { b, t: CTX, vocab: 16, salt }
+    }
+}
+
+impl LogitsBackend for VaryingBackend {
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.b, self.t, self.vocab)
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32])
+            -> anyhow::Result<Vec<f32>> {
+        let mut lv = vec![0.0f32; self.b * self.vocab];
+        for s in 0..self.b {
+            let p = pos[s];
+            if p < 0 || p as usize >= self.t {
+                continue; // unoccupied row: logits are never read
+            }
+            let cur = tokens[s * self.t + p as usize] as u64;
+            let h = cur
+                .wrapping_mul(1_000_003)
+                .wrapping_add((p as u64).wrapping_mul(7919))
+                .wrapping_add(self.salt.wrapping_mul(104_729));
+            let tok = if h % 11 == 0 {
+                EOS as usize
+            } else {
+                4 + (h % (self.vocab as u64 - 4)) as usize
+            };
+            lv[s * self.vocab + tok] = 1.0;
+        }
+        Ok(lv)
+    }
+}
+
+/// A [`Scenario`] narrowed to the speculative layout: lane 0 is the
+/// dense verifier, lane 1 the (cheaper) draft, requests split across
+/// both, Unbounded admission so the admitted set is
+/// schedule-independent.
+#[derive(Debug, Clone)]
+struct SpecScenario {
+    sc: Scenario,
+    k: usize,
+    draft_salt: u64,
+}
+
+fn gen_spec(rng: &mut Rng, size: usize) -> SpecScenario {
+    let mut sc = gen_scenario(rng, size);
+    sc.kv = false; // VaryingBackend is literal-path
+    sc.admission = 0; // Unbounded
+    sc.lane_b = vec![1 + rng.below(3), 1 + rng.below(3)];
+    for l in sc.lane_of.iter_mut() {
+        // most requests target the verifier so speculation engages;
+        // some ride the draft lane to prove leasing never perturbs
+        // its resident decodes
+        *l = usize::from(rng.below(4) == 3);
+    }
+    SpecScenario {
+        sc,
+        k: 1 + rng.below(4),
+        // salt 0 = draft ≡ verifier (full acceptance); others
+        // disagree and force rejections + corrections
+        draft_salt: rng.below(3) as u64,
+    }
+}
+
+fn run_spec(ss: &SpecScenario, spec_on: bool,
+            draft_die_at: Option<u64>) -> ServeReport {
+    let sc = &ss.sc;
+    let verifier = VaryingBackend::new(sc.lane_b[0], 0);
+    let draft = VaryingBackend::new(sc.lane_b[1], ss.draft_salt);
+    let mut dead_draft = draft_die_at.map(|at| {
+        let mut plan = FaultPlan::new(7);
+        plan.die_at_step = Some(at);
+        FaultyBackend::new(VaryingBackend::new(sc.lane_b[1],
+                                               ss.draft_salt),
+                           &plan, 1)
+            .expect("die-only fault plan is valid")
+    });
+    let (mut v, mut d) = (verifier, draft);
+    let mut refs: Vec<&mut dyn LogitsBackend> = match &mut dead_draft {
+        Some(fd) => vec![&mut v, fd],
+        None => vec![&mut v, &mut d],
+    };
+    let names = vec!["dense".to_string(), "s75".to_string()];
+    let schedule = Schedule::open(sc.arrivals.clone(), 1.0, 1.0);
+    let costs = [LaneCost::unit(), LaneCost::from_sparsity(0.75)];
+    let plan = SpecPlan { draft_lane: 1, verifier_lane: 0, k: ss.k };
+    let spec = if spec_on { Some(&plan) } else { None };
+    run_lanes_spec(&mut refs, &names, &sc.lane_of, &sc.requests,
+                   &DecodeParams::default(), Some(&schedule),
+                   scheduler_of(sc.scheduler).as_ref(), &Unbounded,
+                   &RecoveryConfig::default(), &costs, spec)
+        .expect("spec serve loop errored on a valid scenario")
+}
+
+/// THE speculative invariant: for every seed × scheduler × k × draft
+/// divergence, the spec run's greedy streams are byte-identical to
+/// the dense-only run of the same scenario — on the verifier lane
+/// (accept/reject only reshuffles *when* tokens commit, never
+/// *which*) and on the draft lane (leasing free rows must not
+/// perturb resident decodes).
+#[test]
+fn prop_spec_output_bitwise_equals_dense() {
+    check(47, 60, 14, gen_spec, |ss: &SpecScenario| {
+        let spec = run_spec(ss, true, None);
+        let plain = run_spec(ss, false, None);
+        let key = |r: &ServeReport| {
+            let mut v: Vec<(u64, Vec<u32>)> = r.results.iter()
+                .map(|x| (x.id, x.tokens.clone()))
+                .collect();
+            v.sort_by_key(|(id, _)| *id);
+            v
+        };
+        spec.stats.completed == ss.sc.requests.len()
+            && key(&spec) == key(&plain)
+    });
+}
+
+/// Acceptance bookkeeping conserves tokens: on the verifier lane
+/// every emitted token is either an accepted draft or a verifier
+/// correction (per request and in the aggregate), every verify
+/// advances its request (only the terminal EOS verify emits nothing,
+/// so verifies ≤ emitted + 1 per stream), wasted = drafted −
+/// accepted, and draft-lane residents never carry spec counters.
+#[test]
+fn prop_spec_bookkeeping_conserves_tokens() {
+    check(53, 60, 14, gen_spec, |ss: &SpecScenario| {
+        let report = run_spec(ss, true, None);
+        let st = &report.stats;
+        let per_request = report.results.iter().all(|r| {
+            if ss.sc.lane_of[r.id as usize] == 0 {
+                r.tokens.len() as u64
+                    == r.spec.accepted + r.spec.corrections
+                    && r.spec.verifies <= r.tokens.len() as u64 + 1
+            } else {
+                r.spec == Default::default()
+            }
+        });
+        per_request
+            && st.spec.accepted + st.spec.corrections
+                == report.results.iter()
+                    .filter(|r| ss.sc.lane_of[r.id as usize] == 0)
+                    .map(|r| r.tokens.len() as u64)
+                    .sum::<u64>()
+            && st.spec.wasted() == st.spec.drafted - st.spec.accepted
+            && st.spec.accepted <= st.spec.drafted
+    });
+}
+
+/// Degrade-to-dense: killing the draft lane mid-run (on its k-th
+/// step attempt, k swept from 0) must never fail or stall a verifier
+/// request — every request still completes, and the streams stay
+/// byte-identical to the dense-only run. Draft-lane *residents* may
+/// legitimately fail (their lane died); they just never take a
+/// verifier request down with them.
+#[test]
+fn prop_spec_draft_death_degrades_to_dense() {
+    check(59, 60, 14, gen_spec, |ss: &SpecScenario| {
+        let die_at = (ss.draft_salt + ss.k as u64) % 5;
+        let spec = run_spec(ss, true, Some(die_at));
+        let plain = run_spec(ss, false, None);
+        let verifier_ids: Vec<u64> = ss.sc.requests.iter()
+            .filter(|r| ss.sc.lane_of[r.id as usize] == 0)
+            .map(|r| r.id)
+            .collect();
+        let stream = |rep: &ServeReport, id: u64| {
+            rep.results.iter().find(|r| r.id == id)
+                .map(|r| (r.outcome, r.tokens.clone()))
+        };
+        verifier_ids.iter().all(|&id| {
+            match (stream(&spec, id), stream(&plain, id)) {
+                (Some((o, toks)), Some((po, ptoks))) => {
+                    o == RequestOutcome::Completed
+                        && po == RequestOutcome::Completed
+                        && toks == ptoks
+                }
+                _ => false,
+            }
+        })
+    });
+}
+
+/// Speculation off ⇄ absent: `run_lanes_spec` with `spec: None` is
+/// byte-for-byte `run_lanes_with_costs` at the same cost vector
+/// (same stats JSON, same per-request telemetry) — the plumbing is
+/// provably inert without a plan.
+#[test]
+fn prop_spec_none_is_plain_run_lanes() {
+    check(61, 40, 14, gen_spec, |ss: &SpecScenario| {
+        let via_spec = run_spec(ss, false, None);
+        let sc = &ss.sc;
+        let mut v = VaryingBackend::new(sc.lane_b[0], 0);
+        let mut d = VaryingBackend::new(sc.lane_b[1], ss.draft_salt);
+        let mut refs: Vec<&mut dyn LogitsBackend> =
+            vec![&mut v, &mut d];
+        let names = vec!["dense".to_string(), "s75".to_string()];
+        let schedule = Schedule::open(sc.arrivals.clone(), 1.0, 1.0);
+        let costs = [LaneCost::unit(), LaneCost::from_sparsity(0.75)];
+        let plain = run_lanes_with_costs(
+            &mut refs, &names, &sc.lane_of, &sc.requests,
+            &DecodeParams::default(), Some(&schedule),
+            scheduler_of(sc.scheduler).as_ref(), &Unbounded,
+            &RecoveryConfig::default(), &costs)
+            .expect("plain serve loop errored on a valid scenario");
+        via_spec.stats.to_json().to_string()
+            == plain.stats.to_json().to_string()
+            && via_spec.results.iter().zip(&plain.results).all(
+                |(x, y)| {
+                    x.to_json().to_string() == y.to_json().to_string()
+                })
     });
 }

@@ -45,7 +45,19 @@ regresses by more than the tolerance:
                          theoretical FLOPs ratio) — all enforced
                          fresh-side, so a BENCH_GATE_REFRESH can
                          never bake a truncated or violating sparse
-                         leg into the baseline.
+                         leg into the baseline. The speculative leg
+                         (speculative.*) is required too: the spec
+                         run's output must be bitwise equal to the
+                         plain dense run, every verify must advance
+                         its request (verifies never exceed emitted
+                         tokens + completions), the acceptance
+                         bookkeeping must conserve the emitted
+                         tokens, and whenever the mean acceptance
+                         clears the k·(1−s) break-even floor the
+                         speculative virtual-time throughput must be
+                         at least the dense run's — again all
+                         fresh-side, so REFRESH can never bake a
+                         violating speculative leg into the baseline.
 
 Usage:
     python3 scripts/bench_gate.py [ROOT]
@@ -86,6 +98,8 @@ RELATIVE_SPECS = {
         ("multi_model.aggregate.goodput_tokens_per_sec", "higher"),
         ("multi_model.aggregate.latency_ms.p95", "lower"),
         ("sparse.measured_speedup", "higher"),
+        ("speculative.measured_speedup", "higher"),
+        ("speculative.tokens_per_verify", "higher"),
     ],
 }
 
@@ -158,6 +172,7 @@ def check_absolute(name, current, tol):
         failures.extend(check_multi_model_datapoints(name, current))
         failures.extend(check_fault_datapoints(name, current))
         failures.extend(check_sparse_datapoints(name, current))
+        failures.extend(check_speculative_datapoints(name, current))
     return failures
 
 
@@ -403,6 +418,115 @@ def check_sparse_datapoints(name, current):
             f"required {required:.3f} (the s75 lane's virtual-time "
             "throughput must beat dense by at least the sqrt of the "
             "FLOPs ratio)")
+    return failures
+
+
+# the speculative block's scalar datapoints; a missing one would
+# silently disable the bitwise/break-even checks below
+SPECULATIVE_REQUIRED_KEYS = ["draft", "verifier", "k",
+                             "draft_step_scale", "acceptance_floor",
+                             "mean_acceptance", "acceptance_rate",
+                             "tokens_per_verify", "drafted",
+                             "accepted", "corrections", "verifies",
+                             "wasted_drafts", "bitwise_equal",
+                             "measured_speedup"]
+
+# each routed run (plain dense / speculative) must carry the counters
+# the completion/conservation checks read plus the virtual-time
+# throughput the speedup is computed from
+SPECULATIVE_VARIANT_KEYS = ["requests", "completed",
+                            "generated_tokens", "tokens_per_vsec"]
+
+
+def check_speculative_datapoints(name, current):
+    """Structural + invariant checks on the fresh speculative leg:
+    the block must be present and untruncated (a stale bench could
+    silently drop it — and a refresh would bake the gap into the
+    baseline, disabling the speculation gates forever), the spec
+    run's output must be bitwise equal to the plain dense run, the
+    draft lane must actually have proposed tokens, every verify must
+    advance its request (the only verify that emits nothing is the
+    terminal EOS one, so verifies can exceed the emitted tokens by at
+    most one per completed request), the acceptance bookkeeping
+    must conserve the emitted tokens, both runs must complete every
+    request, and whenever the mean acceptance clears the k·(1−s)
+    break-even floor the speculative virtual-time throughput must be
+    at least the dense run's — speculation is free to lose only when
+    the draft is too wrong to pay for itself."""
+    failures = []
+    spec = current.get("speculative")
+    if not isinstance(spec, dict):
+        failures.append(f"{name}:speculative: block missing — the "
+                        "smoke did not run the speculative leg")
+        return failures
+    missing = [k for k in SPECULATIVE_REQUIRED_KEYS if k not in spec]
+    if missing:
+        failures.append(f"{name}:speculative: missing "
+                        f"{','.join(missing)}")
+    points = {}
+    for variant in ("dense", "spec"):
+        point = spec.get(variant)
+        if not isinstance(point, dict):
+            failures.append(f"{name}:speculative: missing {variant} "
+                            "datapoint")
+            continue
+        absent = [k for k in SPECULATIVE_VARIANT_KEYS
+                  if k not in point]
+        if absent:
+            failures.append(f"{name}:speculative.{variant}: missing "
+                            f"{','.join(absent)}")
+            continue
+        if point["completed"] != point["requests"]:
+            failures.append(
+                f"{name}:speculative.{variant}: {point['completed']} "
+                f"of {point['requests']} requests completed (the leg "
+                "serves an unbounded queue — every request must "
+                "finish, speculating or not)")
+            continue
+        points[variant] = point
+    if missing:
+        return failures
+    if spec.get("bitwise_equal") is not True:
+        failures.append(
+            f"{name}:speculative: bitwise_equal is "
+            f"{spec.get('bitwise_equal')!r} — speculative greedy "
+            "output MUST be bit-identical to the plain dense stream")
+    drafted = get_path(spec, "drafted")
+    verifies = get_path(spec, "verifies")
+    if drafted is not None and verifies is not None \
+            and (drafted <= 0 or verifies <= 0):
+        failures.append(
+            f"{name}:speculative: leg never engaged (drafted "
+            f"{drafted}, verifies {verifies})")
+    accepted = get_path(spec, "accepted")
+    corrections = get_path(spec, "corrections")
+    completed = get_path(points.get("spec", {}), "completed")
+    if None not in (verifies, accepted, corrections, completed) \
+            and verifies > accepted + corrections + completed:
+        failures.append(
+            f"{name}:speculative: verifies {verifies} > accepted "
+            f"{accepted} + corrections {corrections} + completed "
+            f"{completed} — a verify committed no progress (every "
+            "verify commits the longest agreeing prefix plus a "
+            "correction; only the terminal EOS verify emits nothing)")
+    emitted = get_path(points.get("spec", {}), "generated_tokens")
+    if None not in (accepted, corrections, emitted) \
+            and accepted + corrections != emitted:
+        failures.append(
+            f"{name}:speculative: accepted {accepted} + corrections "
+            f"{corrections} != generated_tokens {emitted} (the "
+            "acceptance bookkeeping lost or invented a token)")
+    mean = get_path(spec, "mean_acceptance")
+    floor = get_path(spec, "acceptance_floor")
+    speedup = get_path(spec, "measured_speedup")
+    if None not in (mean, floor, speedup) and mean > floor \
+            and speedup < 1.0:
+        failures.append(
+            f"{name}:speculative: mean acceptance {mean:.3f} clears "
+            f"the k(1-s) break-even floor {floor:.3f} but the "
+            f"speculative run is only {speedup:.3f}x dense on the "
+            "virtual clock — winning drafts must show up as "
+            "throughput")
     return failures
 
 

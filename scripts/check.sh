@@ -85,10 +85,10 @@ done
 
 # the serve-load smoke must carry the scheduling/shedding datapoints
 # (goodput + shed rate per point, plus the past-the-knee shed leg,
-# the multi-model registry leg, the fault-injection leg and the
-# CSR-resident sparse leg) — bench_gate.py gates on them, so their
-# absence should fail loudly here with a better message than a
-# missing-metric skip
+# the multi-model registry leg, the fault-injection leg, the
+# CSR-resident sparse leg and the draft-then-verify speculative leg)
+# — bench_gate.py gates on them, so their absence should fail loudly
+# here with a better message than a missing-metric skip
 python3 - "$ROOT/BENCH_serve_load.json" <<'EOF'
 import json, sys
 
@@ -135,11 +135,25 @@ for variant in ("dense", "s75"):
     for key in ("requests", "completed", "generated_tokens",
                 "tokens_per_vsec"):
         assert key in p, f"sparse leg {variant} run lacks {key}"
+spec = j.get("speculative") or {}
+for key in ("draft", "verifier", "k", "acceptance_floor",
+            "mean_acceptance", "tokens_per_verify", "bitwise_equal",
+            "measured_speedup"):
+    assert key in spec, f"speculative leg lacks {key}"
+assert spec["bitwise_equal"] is True, \
+    "speculative leg output diverged from plain dense"
+for variant in ("dense", "spec"):
+    p = spec.get(variant) or {}
+    for key in ("requests", "completed", "generated_tokens",
+                "tokens_per_vsec"):
+        assert key in p, f"speculative leg {variant} run lacks {key}"
 print(f"check.sh: serve-load smoke carries goodput/shed/multi-model/"
-      f"fault/sparse datapoints ({len(pts)} points + shed leg, shed "
-      f"rate {shed['shed_rate']:.0%}, {len(per_model)} registry "
-      f"models, {len(rates)} fault rates, sparse speedup "
-      f"{sparse['measured_speedup']:.2f}x)")
+      f"fault/sparse/speculative datapoints ({len(pts)} points + "
+      f"shed leg, shed rate {shed['shed_rate']:.0%}, "
+      f"{len(per_model)} registry models, {len(rates)} fault rates, "
+      f"sparse speedup {sparse['measured_speedup']:.2f}x, spec "
+      f"acceptance {spec['mean_acceptance']:.2f}/verify vs floor "
+      f"{spec['acceptance_floor']:.2f}, bitwise dense)")
 EOF
 
 echo "== perf-regression gate (scripts/bench_gate.py) =="
