@@ -81,6 +81,9 @@ def fault_variant(requests=32, failed=0, retries=0, degraded=0,
         "retries": retries,
         "degraded": degraded,
         "goodput_tokens_per_sec": goodput,
+        # raw throughput counts dropped work too, so it sits at or
+        # above goodput (strictly above when anything failed)
+        "tokens_per_vsec": goodput + (25.0 if failed else 0.0),
     }
 
 
@@ -181,6 +184,34 @@ def speculative_json(mean_acceptance=3.0, floor=1.0, speedup=2.0,
     }
 
 
+def paged_variant(requests=16, tokens=640, lost=0, tpv=100.0):
+    return {
+        "requests": requests,
+        "completed": requests,
+        "generated_tokens": tokens,
+        "lost_tokens": lost,
+        "tokens_per_vsec": tpv,
+        # goodput excludes the dropped work raw throughput includes
+        "goodput_tokens_per_sec": tpv * tokens / (tokens + lost),
+    }
+
+
+def paged_json(full_seats=1, paged_seats=6, leaked=0, bitwise=True):
+    return {
+        "page_size": 4,
+        "kv_pages": 32,
+        "requests": 16,
+        "full_peak_seated": full_seats,
+        "paged_peak_seated": paged_seats,
+        "leaked_pages": leaked,
+        "preemptions": 3,
+        "lost_tokens": 24,
+        "bitwise_equal": bitwise,
+        "full": paged_variant(),
+        "paged": paged_variant(lost=24),
+    }
+
+
 def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
                     goodput=500.0):
     return {
@@ -195,6 +226,7 @@ def serve_load_json(ratio=0.9, p95=100.0, shed_ratio=0.6,
         "fault": fault_json(),
         "sparse": sparse_json(),
         "speculative": speculative_json(),
+        "paged": paged_json(),
         "points": [
             point("literal", p95, p95 / 2, goodput=goodput),
             point("kv", p95 * 0.8, p95 / 3, goodput=goodput * 1.2),
@@ -525,6 +557,25 @@ class TestFaultGates:
                                    0.25)
         assert fails == []
 
+    def test_fault_goodput_above_raw_throughput_fails(self):
+        # completed-only tokens/sec can never beat the count that
+        # includes dropped work — a higher goodput means the telemetry
+        # is again counting failed requests' partial output as
+        # delivered (the pre-fix bug)
+        cur = serve_load_json()
+        v = cur["fault"]["rates"][1]["no_failover"]
+        v["goodput_tokens_per_sec"] = v["tokens_per_vsec"] * 1.5
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("cannot beat" in f for f in fails)
+        # a variant missing the raw-throughput datapoint is truncated
+        cur = serve_load_json()
+        del cur["fault"]["rates"][1]["failover"]["tokens_per_vsec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("rates[1].failover: missing tokens_per_vsec" in f
+                   for f in fails)
+
     def test_refresh_refuses_missing_fault_leg(self, tmp_path,
                                                monkeypatch):
         # REFRESH must not bake a fault-leg-less file into the
@@ -799,6 +850,126 @@ class TestSpeculativeGates:
         cur = serve_load_json()
         base = serve_load_json()
         del base["speculative"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
+                                   0.25)
+        assert fails == []
+
+
+class TestPagedGates:
+    def test_missing_paged_leg_fails(self):
+        # the smoke must run the paged-KV leg — with no baseline at
+        # all its absence is already a hard failure
+        cur = serve_load_json()
+        del cur["paged"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("paged: block missing" in f for f in fails)
+
+    def test_truncated_paged_leg_fails(self):
+        # a keyless block would silently disable the bitwise and
+        # concurrency gates
+        cur = serve_load_json()
+        del cur["paged"]["bitwise_equal"]
+        del cur["paged"]["leaked_pages"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("paged: missing" in f for f in fails)
+        # both reservation arms must be present with their counters
+        cur = serve_load_json()
+        del cur["paged"]["paged"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("missing paged datapoint" in f for f in fails)
+        cur = serve_load_json()
+        del cur["paged"]["full"]["tokens_per_vsec"]
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("paged.full: missing tokens_per_vsec" in f
+                   for f in fails)
+
+    def test_bitwise_mismatch_fails_absolutely(self):
+        # THE paging invariant: an unconstrained paged run must decode
+        # bit-identically to the monolithic loop — enforced with no
+        # baseline at all
+        cur = serve_load_json()
+        cur["paged"] = paged_json(bitwise=False)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("bit-identically" in f for f in fails)
+
+    def test_leaked_pages_fail_absolutely(self):
+        # a page unaccounted for at drain means the allocator lost it
+        cur = serve_load_json()
+        cur["paged"] = paged_json(leaked=2)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("pages leaked" in f for f in fails)
+
+    def test_paged_concurrency_must_beat_full_reservation(self):
+        # the headline claim: prompt-sized reservation seats strictly
+        # more concurrent requests than full-context reservation at
+        # the same page budget
+        cur = serve_load_json()
+        cur["paged"] = paged_json(full_seats=4, paged_seats=4)
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("buys no concurrency" in f for f in fails)
+
+    def test_incomplete_arm_fails(self):
+        # the leg serves an unbounded queue and preempted requests
+        # requeue: a dropped request means the loop lost it
+        cur = serve_load_json()
+        cur["paged"]["paged"]["completed"] -= 1
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("paged.paged" in f and "requeue" in f
+                   for f in fails)
+
+    def test_goodput_above_raw_throughput_fails(self):
+        # preemption rollbacks drop work: goodput counting only
+        # delivered tokens can never exceed the raw rate
+        cur = serve_load_json()
+        v = cur["paged"]["paged"]
+        v["goodput_tokens_per_sec"] = v["tokens_per_vsec"] * 2.0
+        fails, _ = gate.check_file("BENCH_serve_load.json", cur, None,
+                                   0.25)
+        assert any("paged.paged: goodput" in f for f in fails)
+
+    def test_refresh_refuses_missing_paged_leg(self, tmp_path,
+                                               monkeypatch):
+        # REFRESH must not bake a paged-leg-less file into the
+        # committed baseline (which would disable the gates forever)
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        noleg = serve_load_json()
+        del noleg["paged"]
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(noleg))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_refresh_refuses_leaked_pages(self, tmp_path,
+                                          monkeypatch):
+        # nor may a leaking allocator ever become the norm
+        (tmp_path / "BENCH_decode.json").write_text(
+            json.dumps(decode_json()))
+        bad = serve_load_json()
+        bad["paged"] = paged_json(leaked=1)
+        (tmp_path / "BENCH_serve_load.json").write_text(
+            json.dumps(bad))
+        monkeypatch.setenv("BENCH_GATE_REFRESH", "1")
+        assert gate.main(["bench_gate.py", str(tmp_path)]) == 1
+        assert not (tmp_path / "bench_baselines"
+                    / "BENCH_serve_load.json").exists()
+
+    def test_baseline_without_paged_leg_is_tolerated(self):
+        # old committed baselines predate the paged leg: the checks
+        # are fresh-side only, so a healthy fresh file stays green
+        cur = serve_load_json()
+        base = serve_load_json()
+        del base["paged"]
         fails, _ = gate.check_file("BENCH_serve_load.json", cur, base,
                                    0.25)
         assert fails == []

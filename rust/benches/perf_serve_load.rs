@@ -25,6 +25,15 @@
 //!    run's (recorded as `shed.p95_vs_unbounded` + `shed.shed_rate`,
 //!    gated alongside the per-point
 //!    `goodput_tokens_per_sec`/`shed_rate` datapoints);
+//!  * paged leg — the same burst served under paged KV
+//!    (`serve::pages`) at a fixed page budget: the monolithic
+//!    discipline (full-`ctx_len` reservation per seat) vs true paged
+//!    seating (prompt-sized reservation, on-demand growth). Hard-
+//!    asserts the unconstrained paged run is bitwise identical to the
+//!    monolithic loop, that prompt reservation seats strictly more
+//!    concurrent requests than full-context reservation at the same
+//!    budget, and that no page leaks from either arm — the `paged`
+//!    datapoint block `bench_gate.py` gates;
 //!  * multi-model leg — the same artifacts registered twice in a
 //!    `ModelRegistry` (standing in for the SPDF dense/s50/s75
 //!    checkpoint sweep), a 50/50 model-mix trace multiplexed through
@@ -70,9 +79,10 @@ use spdf::coordinator::report;
 use spdf::generate::loadgen::{self, Pattern, StepCosts, TraceConfig};
 use spdf::generate::serve::admission::{MaxQueueDepth, Unbounded};
 use spdf::generate::serve::policy::Fifo;
+use spdf::generate::serve::PageReserve;
 use spdf::generate::{ChaosConfig, DecodeEngine, DecodeParams,
                      FaultPlan, FaultSpec, ModelRegistry,
-                     RetryPolicy};
+                     PagedKvConfig, RetryPolicy};
 use spdf::runtime::Engine;
 use spdf::sparse_compute::theoretical_speedup;
 use spdf::sparsity::{MaskScheme, MaskSet};
@@ -225,7 +235,7 @@ fn main() -> anyhow::Result<()> {
         loadgen::run_trace(&decode, &shed_trace, &dp, false, &lit)?;
     let (shed_pt, _) = loadgen::run_trace_with(
         &decode, &shed_trace, &dp, false, &lit, &Fifo,
-        &MaxQueueDepth(1), &ChaosConfig::default())?;
+        &MaxQueueDepth(1), &ChaosConfig::default(), None)?;
     anyhow::ensure!(
         unb_pt.shed_rate == 0.0,
         "unbounded admission shed {} requests", unb_pt.shed
@@ -253,6 +263,95 @@ fn main() -> anyhow::Result<()> {
              shed_pt.latency_ms.p95, unb_pt.latency_ms.p95,
              p95_vs_unbounded, shed_pt.goodput_tokens_per_sec);
 
+    // --- paged leg: fixed page budget, monolithic vs paged seating --
+    // A short-budget burst (rows stay a handful of pages) so the leg
+    // isolates the seating discipline. With the page budget pinned at
+    // exactly one full-context row, full-context reservation — the
+    // monolithic allocation expressed in pages — serializes the burst
+    // one seat at a time, while prompt-sized reservation seats as
+    // many rows as have live pages: strictly more concurrency at the
+    // exact same memory. The unconstrained arm re-proves the tentpole
+    // invariant on real artifacts: paging with no budget is bitwise
+    // identical to the monolithic loop.
+    let page_size = 4usize;
+    let per_row = mm.config.ctx_len.div_ceil(page_size);
+    let paged_trace_cfg = TraceConfig {
+        seed: 37,
+        rate_rps: 10.0 * cap,
+        pattern: Pattern::Bursty { burst: requests.max(8) },
+        requests: requests.max(8),
+        budgets: (8, 12),
+        ..base.clone()
+    };
+    let paged_trace = loadgen::generate_trace(&paged_trace_cfg)?;
+    let (mono_pt, mono_rep) = loadgen::run_trace(
+        &decode, &paged_trace, &dp, false, &lit)?;
+    let unc_cfg = PagedKvConfig::new(page_size);
+    let (unc_pt, unc_rep) = loadgen::run_trace_with(
+        &decode, &paged_trace, &dp, false, &lit, &Fifo, &Unbounded,
+        &ChaosConfig::default(), Some(&unc_cfg))?;
+    anyhow::ensure!(
+        mono_rep.results.len() == unc_rep.results.len(),
+        "unconstrained paging changed the result count"
+    );
+    for (m, u) in mono_rep.results.iter().zip(&unc_rep.results) {
+        anyhow::ensure!(
+            m.to_json().to_string() == u.to_json().to_string(),
+            "unconstrained paging diverged from the monolithic loop \
+             on request {} — the bitwise-identity invariant is \
+             broken", m.id
+        );
+    }
+    anyhow::ensure!(
+        mono_pt.generated_tokens == unc_pt.generated_tokens
+            && mono_pt.sim_ms == unc_pt.sim_ms
+            && unc_pt.lost_tokens == 0,
+        "unconstrained paging perturbed aggregate telemetry"
+    );
+    let full_cfg = PagedKvConfig::new(page_size)
+        .with_total_pages(per_row)
+        .with_reserve(PageReserve::FullContext);
+    let (full_pt, full_rep) = loadgen::run_trace_with(
+        &decode, &paged_trace, &dp, false, &lit, &Fifo, &Unbounded,
+        &ChaosConfig::default(), Some(&full_cfg))?;
+    let prompt_cfg = PagedKvConfig::new(page_size)
+        .with_total_pages(per_row);
+    let (page_pt, page_rep) = loadgen::run_trace_with(
+        &decode, &paged_trace, &dp, false, &lit, &Fifo, &Unbounded,
+        &ChaosConfig::default(), Some(&prompt_cfg))?;
+    for (name, pt, rep) in [("full-context", &full_pt, &full_rep),
+                            ("prompt-reserve", &page_pt, &page_rep),
+                            ("unconstrained", &unc_pt, &unc_rep)] {
+        anyhow::ensure!(
+            rep.stats.pages.leaked_pages == 0,
+            "{name} arm leaked {} pages",
+            rep.stats.pages.leaked_pages
+        );
+        anyhow::ensure!(
+            pt.completed == pt.requests,
+            "{name} arm dropped requests under unbounded admission \
+             ({} of {})", pt.completed, pt.requests
+        );
+        anyhow::ensure!(
+            pt.goodput_tokens_per_sec <= pt.tokens_per_vsec + 1e-9,
+            "{name} arm goodput {} above raw throughput {}",
+            pt.goodput_tokens_per_sec, pt.tokens_per_vsec
+        );
+    }
+    let full_seats = full_rep.stats.pages.peak_seated;
+    let page_seats = page_rep.stats.pages.peak_seated;
+    anyhow::ensure!(
+        page_seats > full_seats,
+        "prompt reservation seated {page_seats} concurrent requests, \
+         not strictly more than full-context's {full_seats} at the \
+         same {per_row}-page budget"
+    );
+    println!("\npaged leg (page {page_size} tok, budget {per_row} \
+              pages): prompt-reserve seats {page_seats} vs \
+              full-context {full_seats}, {} preemptions, {} tokens \
+              dropped, unconstrained bitwise identical",
+             page_rep.stats.pages.preemptions, page_pt.lost_tokens);
+
     // --- multi-model leg: one stream across the registry ---
     // The same artifacts registered under two names stand in for the
     // SPDF checkpoint sweep (dense / s50 / s75): a 50/50 model-mix
@@ -273,7 +372,7 @@ fn main() -> anyhow::Result<()> {
     let mix_trace = loadgen::generate_trace(&mix_cfg)?;
     let (mm_agg, mm_models, _) = loadgen::run_trace_registry(
         &registry, &mix_trace, &dp, false, &lit, &Fifo, &Unbounded,
-        &ChaosConfig::default(), None)?;
+        &ChaosConfig::default(), None, None)?;
     anyhow::ensure!(
         mm_agg.completed + mm_agg.shed + mm_agg.expired
             == mm_agg.requests,
@@ -358,10 +457,10 @@ fn main() -> anyhow::Result<()> {
     for &rate in fault_rates {
         let (no_pt, _, _) = loadgen::run_trace_registry(
             &registry, &fault_trace, &dp, false, &lit, &Fifo,
-            &Unbounded, &chaos_for(rate, false), None)?;
+            &Unbounded, &chaos_for(rate, false), None, None)?;
         let (fo_pt, _, _) = loadgen::run_trace_registry(
             &registry, &fault_trace, &dp, false, &lit, &Fifo,
-            &Unbounded, &chaos_for(rate, true), None)?;
+            &Unbounded, &chaos_for(rate, true), None, None)?;
         for pt in [&no_pt, &fo_pt] {
             anyhow::ensure!(
                 pt.completed + pt.shed + pt.expired + pt.failed
@@ -370,6 +469,23 @@ fn main() -> anyhow::Result<()> {
                  {}+{}+{}+{} != {}",
                 pt.completed, pt.shed, pt.expired, pt.failed,
                 pt.requests
+            );
+            // goodput counts only delivered tokens; throughput also
+            // counts the partial output dropped by lane death — it
+            // can never be exceeded by goodput, and must be strictly
+            // above it whenever work was actually lost
+            anyhow::ensure!(
+                pt.goodput_tokens_per_sec
+                    <= pt.tokens_per_vsec + 1e-9,
+                "goodput {} above raw throughput {} at rate {rate}",
+                pt.goodput_tokens_per_sec, pt.tokens_per_vsec
+            );
+            anyhow::ensure!(
+                pt.lost_tokens == 0
+                    || pt.goodput_tokens_per_sec < pt.tokens_per_vsec,
+                "dropped {} tokens at rate {rate} but goodput still \
+                 equals throughput {}",
+                pt.lost_tokens, pt.tokens_per_vsec
             );
         }
         if rate > 0.0 {
@@ -413,10 +529,10 @@ fn main() -> anyhow::Result<()> {
     let chaos = chaos_for(*fault_rates.last().unwrap(), true);
     let (da, _, _) = loadgen::run_trace_registry(
         &registry, &fault_trace, &dp, false, &lit, &Fifo, &Unbounded,
-        &chaos, None)?;
+        &chaos, None, None)?;
     let (db, _, _) = loadgen::run_trace_registry(
         &registry, &fault_trace, &dp, false, &lit, &Fifo, &Unbounded,
-        &chaos, None)?;
+        &chaos, None, None)?;
     anyhow::ensure!(
         da.to_json().to_string() == db.to_json().to_string(),
         "chaos run is not deterministic under a pinned fault plan"
@@ -474,10 +590,10 @@ fn main() -> anyhow::Result<()> {
     };
     let (dense_pt, _, _) = loadgen::run_trace_registry(
         &sparse_reg, &route_all("dense"), &dp, false, &lit, &Fifo,
-        &Unbounded, &ChaosConfig::default(), None)?;
+        &Unbounded, &ChaosConfig::default(), None, None)?;
     let (s75_pt, _, _) = loadgen::run_trace_registry(
         &sparse_reg, &route_all("s75"), &dp, false, &lit, &Fifo,
-        &Unbounded, &ChaosConfig::default(), None)?;
+        &Unbounded, &ChaosConfig::default(), None, None)?;
     for pt in [&dense_pt, &s75_pt] {
         anyhow::ensure!(
             pt.completed == pt.requests,
@@ -537,12 +653,13 @@ fn main() -> anyhow::Result<()> {
     };
     let (plain_pt, _, plain_rep) = loadgen::run_trace_registry(
         &sparse_reg, &spec_trace, &dp, false, &lit, &Fifo,
-        &Unbounded, &ChaosConfig::default(), None)?;
+        &Unbounded, &ChaosConfig::default(), None, None)?;
     let spec_conf = spdf::generate::serve::SpecConfig::new(
         "s75", "dense", spec_k)?;
     let (spec_pt, _, spec_rep) = loadgen::run_trace_registry(
         &sparse_reg, &spec_trace, &dp, false, &lit, &Fifo,
-        &Unbounded, &ChaosConfig::default(), Some(&spec_conf))?;
+        &Unbounded, &ChaosConfig::default(), Some(&spec_conf),
+        None)?;
     for pt in [&plain_pt, &spec_pt] {
         anyhow::ensure!(
             pt.completed == pt.requests,
@@ -650,6 +767,19 @@ fn main() -> anyhow::Result<()> {
         .push_num("goodput_tokens_per_sec",
                   shed_pt.goodput_tokens_per_sec);
     j.push("shed", shed);
+    let mut paged = Json::obj();
+    paged.push_num("page_size", page_size)
+        .push_num("kv_pages", per_row)
+        .push_num("requests", paged_trace_cfg.requests)
+        .push_num("full_peak_seated", full_seats)
+        .push_num("paged_peak_seated", page_seats)
+        .push_num("leaked_pages", 0usize)
+        .push_num("preemptions", page_rep.stats.pages.preemptions)
+        .push_num("lost_tokens", page_pt.lost_tokens)
+        .push("bitwise_equal", Json::Bool(true))
+        .push("full", full_pt.to_json())
+        .push("paged", page_pt.to_json());
+    j.push("paged", paged);
     let mut multi = Json::obj();
     multi.push("models", Json::Arr(vec![
             Json::Str("m0".into()), Json::Str("m1".into())]))

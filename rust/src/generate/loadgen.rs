@@ -43,7 +43,8 @@ use super::serve::core::ServeConfig;
 use super::serve::policy::{Fifo, Scheduler};
 use super::serve::registry::ModelRegistry;
 use super::serve::speculative::SpecConfig;
-use super::serve::{ChaosConfig, Schedule, ServeReport, ServeStats};
+use super::serve::{ChaosConfig, PagedKvConfig, Schedule, ServeReport,
+                   ServeStats};
 use super::{DecodeEngine, DecodeParams, DecodeRequest};
 
 /// Seed salt for the priority-class phase: priorities come from their
@@ -414,19 +415,23 @@ pub struct LoadPoint {
     /// Completions that were failed over to another model.
     pub degraded: usize,
     pub generated_tokens: u64,
+    /// Tokens decoded into slots that were then dropped — a failed
+    /// request's partial output, or a paged preemption's rolled-back
+    /// decode. Work the engine did that no caller received.
+    pub lost_tokens: u64,
     pub step_ms: f64,
     pub prefill_ms: f64,
     /// Virtual duration of the simulation.
     pub sim_ms: f64,
     /// **Completions** per virtual second (sheds don't count).
     pub achieved_rps: f64,
-    /// Generated tokens per virtual second.
+    /// Raw engine throughput: every token decoded per virtual second,
+    /// dropped work included (`generated + lost`).
     pub tokens_per_vsec: f64,
     /// Tokens delivered to completed requests per virtual second —
-    /// the goodput a caller-facing SLO cares about. Currently always
-    /// equal to `tokens_per_vsec` (failures never reach a slot); a
-    /// distinct datapoint so the gate contract survives future
-    /// mid-slot cancellation.
+    /// the goodput a caller-facing SLO cares about. Strictly below
+    /// `tokens_per_vsec` whenever faults or preemptions drop partial
+    /// output.
     pub goodput_tokens_per_sec: f64,
     /// Accepted drafts / drafted tokens across the point's verifier
     /// traffic — 0.0 outside speculative runs (see
@@ -458,6 +463,7 @@ impl LoadPoint {
             .push_num("retries", self.retries)
             .push_num("degraded", self.degraded)
             .push_num("generated_tokens", self.generated_tokens)
+            .push_num("lost_tokens", self.lost_tokens)
             .push_num("step_ms", self.step_ms)
             .push_num("prefill_ms", self.prefill_ms)
             .push_num("sim_ms", self.sim_ms)
@@ -483,7 +489,7 @@ pub fn run_trace(engine: &DecodeEngine, trace: &Trace,
                  dp: &DecodeParams, use_kv: bool, costs: &StepCosts)
                  -> anyhow::Result<(LoadPoint, ServeReport)> {
     run_trace_with(engine, trace, dp, use_kv, costs, &Fifo,
-                   &Unbounded, &ChaosConfig::default())
+                   &Unbounded, &ChaosConfig::default(), None)
 }
 
 /// [`run_trace`] under explicit scheduling + admission policies and
@@ -500,6 +506,7 @@ pub fn run_trace_with(
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
     chaos: &ChaosConfig,
+    paged: Option<&PagedKvConfig>,
 ) -> anyhow::Result<(LoadPoint, ServeReport)> {
     let schedule = trace.schedule(costs);
     let report = serve_core::serve_with(
@@ -513,6 +520,7 @@ pub fn run_trace_with(
             faults: chaos.faults.clone(),
             fallback: chaos.fallback.clone(),
             speculate: None,
+            paged: paged.cloned(),
         })?;
     let point = point_from_stats("", &report.stats, trace.rate_rps,
                                  trace, use_kv, costs, scheduler,
@@ -551,15 +559,13 @@ fn point_from_stats(
         retries: st.retries,
         degraded: st.degraded,
         generated_tokens: st.generated_tokens,
+        lost_tokens: st.lost_tokens,
         step_ms: costs.step_ms,
         prefill_ms: costs.prefill_ms,
         sim_ms: st.sim_ms,
         achieved_rps: st.completed as f64 / sim_secs,
-        tokens_per_vsec: st.generated_tokens as f64 / sim_secs,
-        // failed requests deliver no partial output, so generated
-        // tokens all belong to completed requests (see
-        // ServeStats::from_results); the named goodput datapoint
-        // survives future mid-slot cancels
+        tokens_per_vsec: (st.generated_tokens + st.lost_tokens) as f64
+            / sim_secs,
         goodput_tokens_per_sec: st.generated_tokens as f64 / sim_secs,
         acceptance_rate: st.acceptance_rate,
         occupancy: st.occupancy,
@@ -590,6 +596,7 @@ pub fn run_trace_registry(
     admission: &dyn AdmissionPolicy,
     chaos: &ChaosConfig,
     speculate: Option<&SpecConfig>,
+    paged: Option<&PagedKvConfig>,
 ) -> anyhow::Result<(LoadPoint, Vec<LoadPoint>, ServeReport)> {
     let schedule = trace.schedule(costs);
     let report = registry.serve_with(
@@ -603,6 +610,7 @@ pub fn run_trace_registry(
             faults: chaos.faults.clone(),
             fallback: chaos.fallback.clone(),
             speculate: speculate.cloned(),
+            paged: paged.cloned(),
         })?;
     let total = trace.requests.len().max(1);
     let aggregate = point_from_stats("", &report.stats,
@@ -630,7 +638,7 @@ pub fn sweep(engine: &DecodeEngine, base: &TraceConfig,
              rates: &[f64], engines: &[(bool, StepCosts)],
              dp: &DecodeParams) -> anyhow::Result<Vec<LoadPoint>> {
     sweep_with(engine, base, rates, engines, dp, &Fifo, &Unbounded,
-               &ChaosConfig::default())
+               &ChaosConfig::default(), None)
 }
 
 /// [`sweep`] under explicit scheduling + admission policies and an
@@ -646,6 +654,7 @@ pub fn sweep_with(
     scheduler: &dyn Scheduler,
     admission: &dyn AdmissionPolicy,
     chaos: &ChaosConfig,
+    paged: Option<&PagedKvConfig>,
 ) -> anyhow::Result<Vec<LoadPoint>> {
     let mut points = Vec::new();
     for &rate in rates {
@@ -654,7 +663,8 @@ pub fn sweep_with(
         for (use_kv, costs) in engines {
             let (point, _) = run_trace_with(engine, &trace, dp,
                                             *use_kv, costs, scheduler,
-                                            admission, chaos)?;
+                                            admission, chaos,
+                                            paged)?;
             points.push(point);
         }
     }
@@ -676,6 +686,7 @@ pub fn sweep_registry(
     admission: &dyn AdmissionPolicy,
     chaos: &ChaosConfig,
     speculate: Option<&SpecConfig>,
+    paged: Option<&PagedKvConfig>,
 ) -> anyhow::Result<Vec<LoadPoint>> {
     let mut points = Vec::new();
     for &rate in rates {
@@ -684,7 +695,7 @@ pub fn sweep_registry(
         for (use_kv, costs) in engines {
             let (aggregate, per_model, _) = run_trace_registry(
                 registry, &trace, dp, *use_kv, costs, scheduler,
-                admission, chaos, speculate)?;
+                admission, chaos, speculate, paged)?;
             points.push(aggregate);
             points.extend(per_model);
         }
@@ -895,11 +906,12 @@ mod tests {
             retries: 7,
             degraded: 5,
             generated_tokens: 900,
+            lost_tokens: 25,
             step_ms: 0.8,
             prefill_ms: 2.0,
             sim_ms: 700.0,
             achieved_rps: 91.4,
-            tokens_per_vsec: 1285.7,
+            tokens_per_vsec: 1321.4,
             goodput_tokens_per_sec: 1285.7,
             acceptance_rate: 0.75,
             occupancy: 0.93,
@@ -925,6 +937,9 @@ mod tests {
                    Some(4.0 / 64.0));
         assert_eq!(j.get("retries").unwrap().as_usize(), Some(7));
         assert_eq!(j.get("degraded").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("lost_tokens").unwrap().as_usize(), Some(25));
+        assert_eq!(j.get("tokens_per_vsec").unwrap().as_f64(),
+                   Some(1321.4));
         assert_eq!(j.get("goodput_tokens_per_sec").unwrap().as_f64(),
                    Some(1285.7));
         assert_eq!(j.get("acceptance_rate").unwrap().as_f64(),

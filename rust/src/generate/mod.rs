@@ -52,10 +52,11 @@ pub mod topk;
 
 pub use engine::DecodeEngine;
 pub use serve::{ChaosConfig, DecodeRequest, FaultPlan, FaultSpec,
-                ModelRegistry, ModelStats, RecoveryConfig,
-                RequestOutcome, RequestResult, RetryPolicy, Schedule,
-                ServeConfig, ServeReport, ServeStats, SpecConfig,
-                SpecCounters, SpecPlan};
+                ModelRegistry, ModelStats, PageCounters,
+                PagedKvConfig, RecoveryConfig, RequestOutcome,
+                RequestResult, RetryPolicy, Schedule, ServeConfig,
+                ServeReport, ServeStats, SpecConfig, SpecCounters,
+                SpecPlan};
 
 use crate::runtime::{HostTensor, ModelRuntime};
 

@@ -4,12 +4,18 @@
 //! point (past saturation, an open-loop queue grows without bound; a
 //! bounded queue trades a nonzero shed rate for a bounded p95).
 //!
-//! The serve loop consults the policy at two points:
+//! The serve loop consults the policy at three points:
 //!
 //!  * **arrival** — [`AdmissionPolicy::admit`] sees how many requests
 //!    are already *waiting* (excluding those about to seat in a free
 //!    slot, so a cold server never sheds below its own batch size)
 //!    and decides enqueue vs [`shed`](super::RequestOutcome::Shed);
+//!  * **arrival, memory-aware** — under paged KV
+//!    ([`super::pages`]), [`AdmissionPolicy::admit_pages`] also sees
+//!    the pages the request's prompt needs against the pages free on
+//!    its lane's allocator. The default accepts (queue-depth and
+//!    deadline policies are memory-oblivious); [`PagePressure`] sheds
+//!    the request when its prompt's pages don't exist right now;
 //!  * **while queued** — a request whose wait exceeds
 //!    [`AdmissionPolicy::deadline_ms`] is
 //!    [`expired`](super::RequestOutcome::Expired) at
@@ -48,6 +54,19 @@ pub trait AdmissionPolicy {
     /// clock) ms. `None` = requests wait forever.
     fn deadline_ms(&self) -> Option<f64> {
         None
+    }
+
+    /// Memory-aware axis, consulted at arrival only by the paged
+    /// serving loop: may a request whose prompt needs `needed` pages
+    /// be admitted when `free` pages are free on its lane's
+    /// allocator? The default accepts — the request waits in the
+    /// queue for pages like it waits for a slot. [`PagePressure`]
+    /// declines (`needed > free` → shed), turning a page-budget
+    /// overload into bounded shedding instead of unbounded queueing.
+    /// Non-paged serving never calls this.
+    fn admit_pages(&self, needed: usize, free: usize) -> bool {
+        let _ = (needed, free);
+        true
     }
 }
 
@@ -108,6 +127,72 @@ impl AdmissionPolicy for Bounded {
     }
 }
 
+/// Memory-aware admission for paged KV serving: a request is
+/// admittable iff the pages its prompt needs are free on its lane's
+/// allocator *right now* — otherwise it is shed at arrival (counted
+/// as a page shed, [`super::pages::PageCounters::page_sheds`]).
+/// Wraps any inner policy, whose queue-depth/deadline decisions still
+/// apply; [`PagePressure::new`] wraps [`Unbounded`].
+///
+/// ```
+/// use spdf::generate::serve::admission::{AdmissionPolicy,
+///                                        MaxQueueDepth,
+///                                        PagePressure};
+///
+/// let p = PagePressure::new();
+/// assert!(p.admit_pages(2, 2)); // prompt's pages exist
+/// assert!(!p.admit_pages(3, 2)); // dry allocator — shed
+///
+/// let p = PagePressure::wrapping(Box::new(MaxQueueDepth(2)));
+/// assert!(!p.admit(2)); // inner queue bound still sheds
+/// assert_eq!(p.name(), "max-queue(2)+page-pressure");
+/// ```
+pub struct PagePressure {
+    inner: Box<dyn AdmissionPolicy>,
+}
+
+impl PagePressure {
+    /// Page pressure over unbounded queueing: only memory sheds.
+    pub fn new() -> PagePressure {
+        PagePressure { inner: Box::new(Unbounded) }
+    }
+
+    /// Page pressure stacked on `inner`'s queue-depth/deadline
+    /// decisions.
+    pub fn wrapping(inner: Box<dyn AdmissionPolicy>) -> PagePressure {
+        PagePressure { inner }
+    }
+}
+
+impl Default for PagePressure {
+    fn default() -> PagePressure {
+        PagePressure::new()
+    }
+}
+
+impl AdmissionPolicy for PagePressure {
+    fn name(&self) -> String {
+        let inner = self.inner.name();
+        if inner == "unbounded" {
+            "page-pressure".into()
+        } else {
+            format!("{inner}+page-pressure")
+        }
+    }
+
+    fn admit(&self, waiting: usize) -> bool {
+        self.inner.admit(waiting)
+    }
+
+    fn deadline_ms(&self) -> Option<f64> {
+        self.inner.deadline_ms()
+    }
+
+    fn admit_pages(&self, needed: usize, free: usize) -> bool {
+        needed <= free
+    }
+}
+
 /// Build the policy the CLI flags describe. `max_queue == 0` and
 /// `deadline_ms <= 0.0` each mean "unlimited" (the flag defaults), so
 /// plain `spdf serve`/`spdf loadgen` stay on [`Unbounded`].
@@ -123,6 +208,23 @@ pub fn from_flags(max_queue: usize, deadline_ms: f64)
         (n, Some(d)) => {
             Box::new(Bounded { max_queue: n, deadline_ms: d })
         }
+    })
+}
+
+/// [`from_flags`], wrapped in [`PagePressure`] when the operator set
+/// a finite page budget (`--kv-pages`): a fixed budget means
+/// "admittable iff the prompt's pages exist", which is the paged
+/// deployment contract. Without a budget the inner policy is
+/// returned unchanged (unconstrained paging admits like the
+/// monolithic loop — part of the bitwise-identity invariant).
+pub fn from_flags_paged(max_queue: usize, deadline_ms: f64,
+                        page_budget: bool)
+                        -> anyhow::Result<Box<dyn AdmissionPolicy>> {
+    let inner = from_flags(max_queue, deadline_ms)?;
+    Ok(if page_budget {
+        Box::new(PagePressure::wrapping(inner))
+    } else {
+        inner
     })
 }
 
@@ -165,6 +267,46 @@ mod tests {
         assert!(!p.admit(3));
         assert_eq!(p.deadline_ms(), Some(100.0));
         assert_eq!(p.name(), "max-queue(3)+deadline(100ms)");
+    }
+
+    #[test]
+    fn default_policies_are_memory_oblivious() {
+        // admit_pages defaults to true: a paged run under the stock
+        // policies queues on pressure instead of shedding, which is
+        // what keeps unconstrained paging bitwise identical
+        assert!(Unbounded.admit_pages(100, 0));
+        assert!(MaxQueueDepth(1).admit_pages(100, 0));
+        assert!(QueueDeadline(5.0).admit_pages(100, 0));
+    }
+
+    #[test]
+    fn page_pressure_sheds_on_dry_allocator_only() {
+        let p = PagePressure::new();
+        assert!(p.admit_pages(0, 0));
+        assert!(p.admit_pages(2, 2));
+        assert!(!p.admit_pages(3, 2));
+        assert!(p.admit(usize::MAX)); // queueing still unbounded
+        assert_eq!(p.deadline_ms(), None);
+        assert_eq!(p.name(), "page-pressure");
+        let p = PagePressure::wrapping(
+            Box::new(Bounded { max_queue: 2, deadline_ms: 9.0 }));
+        assert!(!p.admit(2));
+        assert_eq!(p.deadline_ms(), Some(9.0));
+        assert_eq!(p.name(),
+                   "max-queue(2)+deadline(9ms)+page-pressure");
+        assert!(!p.admit_pages(1, 0));
+    }
+
+    #[test]
+    fn from_flags_paged_wraps_only_under_a_budget() {
+        let p = from_flags_paged(0, 0.0, false).unwrap();
+        assert_eq!(p.name(), "unbounded");
+        assert!(p.admit_pages(9, 0));
+        let p = from_flags_paged(0, 0.0, true).unwrap();
+        assert_eq!(p.name(), "page-pressure");
+        assert!(!p.admit_pages(9, 0));
+        let p = from_flags_paged(4, 0.0, true).unwrap();
+        assert_eq!(p.name(), "max-queue(4)+page-pressure");
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::tokenizer::EOS;
 use super::admission::{AdmissionPolicy, Unbounded};
 use super::clock::{ArrivalQueue, Clock, LaneCost, Schedule};
 use super::fault::{plans_for_lanes, FaultyBackend, RecoveryConfig};
+use super::pages::{LanePager, PageCounters, PagedKvConfig};
 use super::policy::{Fifo, Scheduler};
 use super::speculative::{SpecConfig, SpecPlan};
 use super::telemetry::{ModelStats, RequestOutcome, RequestResult,
@@ -353,12 +354,15 @@ fn commit_slot(lane: &mut Lane, s: usize, leased: &[usize],
     finished
 }
 
-/// Emit the completed result for slot `s` and free it.
+/// Emit the completed result for slot `s` and free it (returning its
+/// KV pages on a paged lane).
 #[allow(clippy::too_many_arguments)]
 fn finish_slot(lane: &mut Lane, s: usize, now: f64,
                requests: &[DecodeRequest], route: &[usize],
-               degraded: &[bool], pending: &mut ArrivalQueue,
-               results: &mut Vec<(usize, RequestResult)>) {
+               degraded: &[bool], lost: &[u64],
+               pending: &mut ArrivalQueue,
+               results: &mut Vec<(usize, RequestResult)>)
+               -> anyhow::Result<()> {
     // invariant: recovery drains only run on failed attempts, never
     // after the successful step that set `finished`, so the slot is
     // still occupied.
@@ -366,6 +370,9 @@ fn finish_slot(lane: &mut Lane, s: usize, now: f64,
         "slot emptied between the finished-edge check and result \
          emission",
     );
+    if let Some(pg) = lane.pager.as_mut() {
+        pg.release(s)?;
+    }
     let arrival = pending.arrival_of(slot.req);
     let lane_idx = route[slot.req];
     results.push((lane_idx, RequestResult {
@@ -377,11 +384,61 @@ fn finish_slot(lane: &mut Lane, s: usize, now: f64,
         ttft_ms: slot.first_tok_ms.unwrap_or(now) - arrival,
         latency_ms: now - arrival,
         tokens: slot.out,
+        // work dropped on this request's way here (failover
+        // restarts, paged preemptions) — delivered tokens ride in
+        // `tokens`, dropped decode is accounted separately
+        lost_tokens: lost[slot.req],
         outcome: RequestOutcome::Completed,
         degraded: degraded[slot.req],
         spec: slot.spec,
     }));
     pending.on_complete(slot.req, now);
+    Ok(())
+}
+
+/// Paged-lane growth after a commit round: any occupied row whose
+/// committed tokens crossed a page boundary allocates the next page.
+/// A dry allocator preempts the youngest-seated *other* slot (largest
+/// `entered_step`, highest index on ties): its pages free, its
+/// decoded-so-far tokens are dropped into the lost-token account and
+/// it requeues at its original arrival. [`LanePager::new`] validates
+/// that one full-context request always fits the budget, so the
+/// preemption loop terminates with the growing slot covered.
+fn grow_paged(lane: &mut Lane, pending: &mut ArrivalQueue,
+              lost: &mut [u64]) -> anyhow::Result<()> {
+    let Lane { pager, slots, ready, pos, .. } = lane;
+    let Some(pg) = pager else {
+        return Ok(());
+    };
+    for s in 0..slots.len() {
+        if slots[s].is_none() {
+            continue;
+        }
+        pg.set_used(s, pos[s] as usize + 1);
+        while !pg.try_cover(s) {
+            let victim = (0..slots.len())
+                .filter(|&v| v != s && slots[v].is_some())
+                .max_by_key(|&v| {
+                    // invariant: filtered to occupied slots just above
+                    let sl = slots[v].as_ref().expect("occupied slot");
+                    (sl.entered_step, v)
+                });
+            let Some(v) = victim else {
+                anyhow::bail!(
+                    "page allocator dry with no preemptable slot — \
+                     the budget validation (one full-context request \
+                     must fit) should make this unreachable"
+                );
+            };
+            // invariant: victim indices are occupied by construction
+            let sl = slots[v].take().expect("occupied victim slot");
+            lost[sl.req] += sl.out.len() as u64;
+            pg.release(v)?;
+            pg.note_preempted();
+            pending.insert_ready(ready, sl.req);
+        }
+    }
+    Ok(())
 }
 
 /// Contain one failed lane attempt (prefill or step): transient →
@@ -396,9 +453,11 @@ fn finish_slot(lane: &mut Lane, s: usize, now: f64,
 fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
                        now: f64, requests: &[DecodeRequest],
                        recovery: &RecoveryConfig, degraded: &[bool],
+                       lost: &mut [u64],
                        pending: &mut ArrivalQueue,
                        results: &mut Vec<(usize, RequestResult)>,
-                       reroutes: &mut Vec<(usize, usize, f64)>) {
+                       reroutes: &mut Vec<(usize, usize, f64)>)
+                       -> anyhow::Result<()> {
     lane.consec_fail = lane.consec_fail.saturating_add(1);
     let fb = recovery.fallback.get(l).copied().flatten();
     if !healthy {
@@ -413,6 +472,15 @@ fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
             let Some(slot) = lane.slots[s].take() else {
                 continue;
             };
+            if let Some(pg) = lane.pager.as_mut() {
+                pg.release(s)?;
+            }
+            // whichever way the slot drains, its decoded-so-far
+            // tokens are dropped, not delivered: a reroute restarts
+            // from scratch on the fallback lane, a failure delivers
+            // nothing — either way the engine's work is lost and the
+            // throughput/goodput split must see it
+            lost[slot.req] += slot.out.len() as u64;
             match fb {
                 Some(f) => {
                     reroutes.push((slot.req, f, now));
@@ -422,6 +490,7 @@ fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
                     results.push((l, RequestResult {
                         id: requests[slot.req].id,
                         tokens: Vec::new(),
+                        lost_tokens: lost[slot.req],
                         queue_steps: slot.entered_step,
                         decode_steps: lane.engine_steps
                             - slot.entered_step,
@@ -445,6 +514,7 @@ fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
                     results.push((l, RequestResult {
                         id: requests[i].id,
                         tokens: Vec::new(),
+                        lost_tokens: lost[i],
                         queue_steps: 0,
                         decode_steps: 0,
                         arrival_ms: arrival,
@@ -486,10 +556,16 @@ fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
             let Some(slot) = lane.slots[s].take() else {
                 continue;
             };
+            if let Some(pg) = lane.pager.as_mut() {
+                pg.release(s)?;
+            }
+            // the decoded-but-undelivered partial is dropped work
+            lost[slot.req] += slot.out.len() as u64;
             let arrival = pending.arrival_of(slot.req);
             results.push((l, RequestResult {
                 id: requests[slot.req].id,
                 tokens: Vec::new(),
+                lost_tokens: lost[slot.req],
                 queue_steps: slot.entered_step,
                 decode_steps: lane.engine_steps - slot.entered_step,
                 arrival_ms: arrival,
@@ -520,6 +596,7 @@ fn handle_step_failure(l: usize, lane: &mut Lane, healthy: bool,
             }
         }
     }
+    Ok(())
 }
 
 /// Everything a serve call can vary: engine path, arrival timing, and
@@ -556,6 +633,14 @@ pub struct ServeConfig<'a> {
     /// bitwise identical to plain verifier-only decode. Registry
     /// serving only.
     pub speculate: Option<SpecConfig>,
+    /// Opt-in paged KV memory ([`super::pages`]): each lane's KV
+    /// budget becomes fixed-size pages behind a free-list allocator,
+    /// with memory-aware admission, preemption on a dry allocator and
+    /// sliding-window eviction. `None` (the default) keeps the
+    /// monolithic full-`ctx_len` allocation; unconstrained paging
+    /// (no budget, no window) is bitwise identical to it. Mutually
+    /// exclusive with [`Self::speculate`].
+    pub paged: Option<PagedKvConfig>,
 }
 
 impl<'a> ServeConfig<'a> {
@@ -571,6 +656,7 @@ impl<'a> ServeConfig<'a> {
             faults: Vec::new(),
             fallback: None,
             speculate: None,
+            paged: None,
         }
     }
 
@@ -651,18 +737,21 @@ pub fn serve_with(
     let names = [String::from("default")];
     let plans = plans_for_lanes(&cfg.faults, &names)?;
     let lane_of = vec![0usize; requests.len()];
+    let costs = [LaneCost::unit()];
     let mut backend = backend_for(engine, cfg.use_kv)?;
     match &plans[0] {
         Some(plan) => {
             let mut faulty = FaultyBackend::new(backend, plan, 0)?;
-            run_lanes_with(&mut [&mut faulty], &names, &lane_of,
+            run_lanes_spec(&mut [&mut faulty], &names, &lane_of,
                            requests, dp, cfg.schedule, cfg.scheduler,
-                           cfg.admission, &cfg.recovery)
+                           cfg.admission, &cfg.recovery, &costs, None,
+                           cfg.paged.as_ref())
         }
-        None => run_lanes_with(&mut [backend.as_mut()], &names,
+        None => run_lanes_spec(&mut [backend.as_mut()], &names,
                                &lane_of, requests, dp, cfg.schedule,
                                cfg.scheduler, cfg.admission,
-                               &cfg.recovery),
+                               &cfg.recovery, &costs, None,
+                               cfg.paged.as_ref()),
     }
 }
 
@@ -754,6 +843,11 @@ struct Lane {
     dead: bool,
     /// Retries scheduled on this lane (ends up in `ServeStats`).
     retries: u64,
+    /// Paged-KV state when serving under [`ServeConfig::paged`]: the
+    /// free-list allocator, per-slot page tables and page counters.
+    /// `None` (the default) is the monolithic full-`ctx_len`
+    /// allocation discipline.
+    pager: Option<LanePager>,
 }
 
 /// One slot-refill state machine for every decode path — and, since
@@ -844,7 +938,8 @@ pub fn run_lanes_with_costs(
     lane_costs: &[LaneCost],
 ) -> anyhow::Result<ServeReport> {
     run_lanes_spec(backends, names, lane_of, requests, dp, schedule,
-                   scheduler, admission, recovery, lane_costs, None)
+                   scheduler, admission, recovery, lane_costs, None,
+                   None)
 }
 
 /// [`run_lanes_with_costs`] plus an optional speculative-decoding
@@ -876,6 +971,19 @@ pub fn run_lanes_with_costs(
 /// plain dense decode that round — a draft-lane fault can never fail
 /// (or even stall) a verifier-lane request. With `spec = None` this
 /// is bit-for-bit [`run_lanes_with_costs`].
+///
+/// With `paged = Some(cfg)`, every lane's KV memory is served from a
+/// fixed-size-page free list ([`super::pages`]): seating allocates
+/// the request's reservation (requeueing it when pages are short),
+/// decode grows page tables one page at a time (preempting the
+/// youngest-seated slot when the allocator runs dry — its
+/// decoded-so-far tokens are dropped as lost and it requeues), a
+/// sliding window evicts oldest pages so rows run past `ctx_len`, and
+/// memory-aware admission policies can shed on page pressure.
+/// Unconstrained paging (no budget, no window) makes exactly the
+/// monolithic loop's decisions and is bitwise identical to
+/// `paged = None`. Speculative decoding and paging are mutually
+/// exclusive (draft-row leases bypass the page accounting).
 #[allow(clippy::too_many_arguments)]
 pub fn run_lanes_spec(
     backends: &mut [&mut dyn LogitsBackend],
@@ -889,6 +997,7 @@ pub fn run_lanes_spec(
     recovery: &RecoveryConfig,
     lane_costs: &[LaneCost],
     spec: Option<&SpecPlan>,
+    paged: Option<&PagedKvConfig>,
 ) -> anyhow::Result<ServeReport> {
     let n_lanes = backends.len();
     anyhow::ensure!(lane_costs.len() == n_lanes,
@@ -929,6 +1038,7 @@ pub fn run_lanes_spec(
                 open_until: 0.0,
                 dead: false,
                 retries: 0,
+                pager: None,
             }
         })
         .collect();
@@ -952,6 +1062,20 @@ pub fn run_lanes_spec(
     if let Some(plan) = spec {
         plan.validate(n_lanes)?;
     }
+    anyhow::ensure!(
+        spec.is_none() || paged.is_none(),
+        "speculative decoding and paged KV are mutually exclusive \
+         (draft-row leases bypass the page accounting)"
+    );
+    if let Some(cfg) = paged {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            lane.pager = Some(
+                LanePager::new(cfg, lane.b, lane.t).map_err(|e| {
+                    e.context(format!("lane {l} ({})", names[l]))
+                })?,
+            );
+        }
+    }
     let deadline = admission.deadline_ms();
     if let Some(d) = deadline {
         anyhow::ensure!(d.is_finite() && d > 0.0,
@@ -971,6 +1095,11 @@ pub fn run_lanes_spec(
     // model's block describes the traffic it actually served.
     let mut route: Vec<usize> = lane_of.to_vec();
     let mut degraded: Vec<bool> = vec![false; requests.len()];
+    // Per-request dropped-work counter: tokens a lane decoded for the
+    // request that will never be delivered (fault-failed partials,
+    // failover restarts, paged preemptions). Rides into every result
+    // so the throughput/goodput split stays honest.
+    let mut lost: Vec<u64> = vec![0u64; requests.len()];
 
     loop {
         let now = clock.now_ms();
@@ -1010,6 +1139,7 @@ pub fn run_lanes_spec(
                             results.push((l, RequestResult {
                                 id: requests[i].id,
                                 tokens: Vec::new(),
+                                lost_tokens: lost[i],
                                 queue_steps: 0,
                                 decode_steps: 0,
                                 arrival_ms: arrival,
@@ -1028,9 +1158,20 @@ pub fn run_lanes_spec(
                 }
                 // a request that will seat immediately never consults
                 // the policy — only genuine waiters can be shed; the
-                // waiting count is the request's OWN lane's queue
-                if lanes[l].ready.len() < free[l]
-                    || admission.admit(lanes[l].ready.len() - free[l])
+                // waiting count is the request's OWN lane's queue.
+                // Under paged KV the memory-aware axis is consulted
+                // too: the pages this prompt needs against the lane's
+                // free pages (policies default to accepting).
+                let page_ok = match lanes[l].pager.as_ref() {
+                    Some(pg) => admission.admit_pages(
+                        pg.seat_need(requests[i].prompt.len()),
+                        pg.free_pages()),
+                    None => true,
+                };
+                if page_ok
+                    && (lanes[l].ready.len() < free[l]
+                        || admission
+                            .admit(lanes[l].ready.len() - free[l]))
                 {
                     // keep each ready set sorted by (arrival, index):
                     // pops arrive in that order already EXCEPT a
@@ -1040,9 +1181,15 @@ pub fn run_lanes_spec(
                     // queue ahead of them, not behind
                     pending.insert_ready(&mut lanes[l].ready, i);
                 } else {
+                    if !page_ok {
+                        if let Some(pg) = lanes[l].pager.as_mut() {
+                            pg.note_shed();
+                        }
+                    }
                     results.push((l, RequestResult {
                         id: requests[i].id,
                         tokens: Vec::new(),
+                        lost_tokens: lost[i],
                         queue_steps: 0,
                         decode_steps: 0,
                         arrival_ms: arrival,
@@ -1076,6 +1223,7 @@ pub fn run_lanes_spec(
                             results.push((l, RequestResult {
                                 id: requests[i].id,
                                 tokens: Vec::new(),
+                                lost_tokens: lost[i],
                                 queue_steps: 0,
                                 decode_steps: 0,
                                 arrival_ms: arrival,
@@ -1109,7 +1257,7 @@ pub fn run_lanes_spec(
             if lane.dead || now < lane.open_until {
                 continue;
             }
-            for s in 0..lane.b {
+            'slots: for s in 0..lane.b {
                 if lane.slots[s].is_some() {
                     continue;
                 }
@@ -1125,6 +1273,7 @@ pub fn run_lanes_spec(
                         results.push((l, RequestResult {
                             id: requests[i].id,
                             tokens: Vec::new(),
+                            lost_tokens: lost[i],
                             queue_steps: lane.engine_steps,
                             decode_steps: 0,
                             arrival_ms: arrival,
@@ -1137,6 +1286,22 @@ pub fn run_lanes_spec(
                         }));
                         pending.on_complete(i, now);
                         continue;
+                    }
+                    // paged seating: the request's page reservation
+                    // must allocate before the slot fills; when pages
+                    // are short it requeues at its original
+                    // (arrival, index) rank and this lane stops
+                    // seating — head-of-line blocking keeps the
+                    // scheduler's order instead of letting a smaller
+                    // prompt jump the starved pick
+                    let seated = match lane.pager.as_mut() {
+                        Some(pg) =>
+                            pg.try_seat(s, requests[i].prompt.len()),
+                        None => true,
+                    };
+                    if !seated {
+                        pending.insert_ready(&mut lane.ready, i);
+                        break 'slots;
                     }
                     fill_slot(&mut lane.tokens, &mut lane.pos, lane.t,
                               s, &requests[i].prompt);
@@ -1155,6 +1320,13 @@ pub fn run_lanes_spec(
                     });
                     break;
                 }
+            }
+            let occupied =
+                lane.slots.iter().filter(|s| s.is_some()).count();
+            if let Some(pg) = lane.pager.as_mut() {
+                // peak concurrently-seated requests — the bench paged
+                // leg's max-concurrency-at-fixed-memory datapoint
+                pg.note_seated(occupied);
             }
         }
 
@@ -1314,9 +1486,10 @@ pub fn run_lanes_spec(
                         handle_step_failure(d, lane,
                                             backend.healthy(), now,
                                             requests, recovery,
-                                            &degraded, &mut pending,
+                                            &degraded, &mut lost,
+                                            &mut pending,
                                             &mut results,
-                                            &mut reroutes);
+                                            &mut reroutes)?;
                         break;
                     }
                     lane.attempt = 0;
@@ -1340,8 +1513,8 @@ pub fn run_lanes_spec(
                                        requests, now, false)
                         {
                             finish_slot(lane, s, now, requests,
-                                        &route, &degraded,
-                                        &mut pending, &mut results);
+                                        &route, &degraded, &lost,
+                                        &mut pending, &mut results)?;
                         }
                     }
                     // extend each live lease by one greedy proposal
@@ -1411,6 +1584,37 @@ pub fn run_lanes_spec(
                 // backing off after a transient failure, or cooling
                 // down an open breaker
                 continue;
+            }
+            // Sliding-window eviction (paged KV): before the step,
+            // any slot holding more resident tokens than the window
+            // frees its oldest page and the token row shifts left by
+            // one page (the KV cache re-prefills from the shifted
+            // row), so `pos` stays below the `ctx_len` cap edge
+            // forever and generation runs past it on a bounded cache.
+            if lane.pager.is_some() {
+                let Lane { pager, tokens, pos, slots, refill,
+                           any_refill, needs_prefill, t, .. } = lane;
+                // invariant: guarded by the `is_some` check above
+                let pg = pager.as_mut()
+                    .expect("pager present inside paged block");
+                let ps = pg.page_size();
+                for s in 0..slots.len() {
+                    if slots[s].is_none() {
+                        continue;
+                    }
+                    while pg.should_evict(s) {
+                        let used = pos[s] as usize + 1;
+                        pg.evict_front(s)?;
+                        let row = &mut tokens[s * *t..(s + 1) * *t];
+                        row.copy_within(ps..used, 0);
+                        row[used - ps..].fill(0);
+                        pos[s] = (used - ps) as i32 - 1;
+                        if *needs_prefill {
+                            refill[s] = 1.0;
+                            *any_refill = true;
+                        }
+                    }
+                }
             }
             // Speculative verify staging: write each slot's pending
             // drafts into its own row past the committed position
@@ -1504,8 +1708,8 @@ pub fn run_lanes_spec(
                 let now = clock.now_ms();
                 handle_step_failure(l, lane, backend.healthy(), now,
                                     requests, recovery, &degraded,
-                                    &mut pending, &mut results,
-                                    &mut reroutes);
+                                    &mut lost, &mut pending,
+                                    &mut results, &mut reroutes)?;
                 continue;
             }
             lane.attempt = 0;
@@ -1535,13 +1739,19 @@ pub fn run_lanes_spec(
                                now, spec_on)
                 {
                     finish_slot(lane, s, now, requests, &route,
-                                &degraded, &mut pending,
-                                &mut results);
+                                &degraded, &lost, &mut pending,
+                                &mut results)?;
                     // the freed slot refills from its lane's queue at
                     // the top of the next iteration, before the next
                     // model step
                 }
             }
+            // Paged growth: the surviving slots' page tables must
+            // cover the tokens this step committed; a dry allocator
+            // preempts the youngest-seated other slot per the paging
+            // contract (its decoded-so-far tokens are dropped as
+            // lost and it requeues at its original arrival).
+            grow_paged(lane, &mut pending, &mut lost)?;
         }
 
         // Apply deferred failovers: restart each affected request
@@ -1557,6 +1767,7 @@ pub fn run_lanes_spec(
                 results.push((route[i], RequestResult {
                     id: requests[i].id,
                     tokens: Vec::new(),
+                    lost_tokens: lost[i],
                     queue_steps: 0,
                     decode_steps: 0,
                     arrival_ms: arrival,
@@ -1623,6 +1834,18 @@ pub fn run_lanes_spec(
 
     let retries: u64 = lanes.iter().map(|ln| ln.retries).sum();
 
+    // Page-counter snapshots after the loop drained, so leaked_pages
+    // (pages still owned) is meaningful — it must be 0.
+    let lane_pages: Vec<PageCounters> = lanes
+        .iter()
+        .map(|ln| ln.pager.as_ref().map(|p| p.counters())
+            .unwrap_or_default())
+        .collect();
+    let mut agg_pages = PageCounters::default();
+    for c in &lane_pages {
+        agg_pages.absorb(c);
+    }
+
     let all_refs: Vec<&RequestResult> =
         results.iter().map(|(_, r)| r).collect();
     let mut stats = ServeStats::from_results(
@@ -1633,6 +1856,7 @@ pub fn run_lanes_spec(
     } else {
         slot_steps as f64 / capacity as f64
     };
+    stats.pages = agg_pages;
 
     // a single lane's block is just the aggregate; the multi-lane
     // split aggregates through references — decoded token buffers are
@@ -1665,6 +1889,7 @@ pub fn run_lanes_spec(
                 // by one lane's steps would inflate the per-step cost
                 // ~N x; report the call-wide mean instead
                 st.mean_step_ms = stats.mean_step_ms;
+                st.pages = lane_pages[l];
                 ModelStats { model: name.clone(), stats: st }
             })
             .collect()
@@ -2917,7 +3142,7 @@ mod tests {
             &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
             &RecoveryConfig::default(),
             &[LaneCost::unit(), LaneCost::from_sparsity(0.75)],
-            spec).unwrap()
+            spec, None).unwrap()
     }
 
     #[test]
@@ -3000,5 +3225,241 @@ mod tests {
         &rep.per_model.iter().find(|m| m.model == name)
             .expect("lane name registered in the report")
             .stats
+    }
+
+    // -- paged KV memory (pages allocator, preemption, eviction,
+    // memory-aware admission) and the throughput/goodput split -------
+
+    use super::super::admission::PagePressure;
+    use super::super::pages::PageReserve;
+
+    fn run_paged(
+        be: &mut dyn LogitsBackend,
+        requests: &[DecodeRequest],
+        s: &Schedule,
+        adm: &dyn AdmissionPolicy,
+        paged: Option<&PagedKvConfig>,
+    ) -> ServeReport {
+        let names = [String::from("default")];
+        let lane_of = vec![0usize; requests.len()];
+        run_lanes_spec(&mut [be], &names, &lane_of, requests,
+                       &DecodeParams::default(), Some(s), &Fifo, adm,
+                       &RecoveryConfig::default(),
+                       &[LaneCost::unit()], None, paged)
+            .unwrap()
+    }
+
+    #[test]
+    fn mid_stream_lane_death_splits_goodput_from_throughput() {
+        // regression on the PR 6 telemetry: goodput_tokens_per_sec
+        // was a copy of tokens_per_sec even when a Failed request
+        // dropped partial output. One request completes (2 delivered
+        // tokens), the next dies mid-stream with 1 token decoded:
+        // throughput must count 3 tokens of engine work, goodput only
+        // the 2 delivered.
+        let requests = reqs(&[2, 2]);
+        let s = sched(&[0.0, 0.0], 1.0);
+        let mut be =
+            ScriptedBackend::new(MockBackend::new(1, 16, false),
+                                 &[], Some(3));
+        let report = run_recovery(&mut be, &requests, &s,
+                                  &RecoveryConfig::default())
+            .unwrap();
+        let (r0, r1) = (&report.results[0], &report.results[1]);
+        assert!(r0.outcome.is_completed());
+        assert_eq!((r0.tokens.as_slice(), r0.lost_tokens),
+                   ([5, 5].as_slice(), 0));
+        assert_eq!(r1.outcome, RequestOutcome::Failed);
+        assert!(r1.tokens.is_empty(),
+                "failed requests deliver no partial output");
+        assert_eq!(r1.lost_tokens, 1,
+                   "the dropped mid-stream token is accounted");
+        let st = &report.stats;
+        assert_eq!((st.generated_tokens, st.lost_tokens), (2, 1));
+        assert!(st.tokens_per_sec > 0.0,
+                "three engine steps take nonzero wall time");
+        assert!(st.goodput_tokens_per_sec < st.tokens_per_sec,
+                "dropped work must not count toward goodput");
+        let ratio = st.goodput_tokens_per_sec / st.tokens_per_sec;
+        assert!((ratio - 2.0 / 3.0).abs() < 1e-9,
+                "goodput/throughput = delivered/(delivered+lost), \
+                 got {ratio}");
+    }
+
+    #[test]
+    fn unconstrained_paged_run_is_bitwise_identical_to_monolithic() {
+        // no budget, no window: paging is pure accounting and every
+        // decision matches the monolithic loop — results serialize
+        // byte-identically and the stats agree on everything except
+        // the pages block itself
+        let requests = reqs(&[3, 3, 2, 2, 1]);
+        let s = sched(&[0.0, 0.0, 1.0, 2.0, 2.0], 1.0);
+        let mut plain_be = MockBackend::new(2, 16, false);
+        let plain = run_paged(&mut plain_be, &requests, &s,
+                              &Unbounded, None);
+        let cfg = PagedKvConfig::new(4);
+        let mut paged_be = MockBackend::new(2, 16, false);
+        let mut paged = run_paged(&mut paged_be, &requests, &s,
+                                  &Unbounded, Some(&cfg));
+        for (x, y) in plain.results.iter().zip(&paged.results) {
+            assert_eq!(x.to_json().to_string(),
+                       y.to_json().to_string());
+        }
+        let pg = paged.stats.pages;
+        assert_eq!(pg.page_size, 4);
+        assert_eq!(pg.total_pages, 2 * 4, "b × pages_for(ctx_len)");
+        assert_eq!((pg.preemptions, pg.page_sheds, pg.evicted_pages),
+                   (0, 0, 0),
+                   "unconstrained paging never sheds or preempts");
+        assert_eq!(pg.leaked_pages, 0);
+        assert!(pg.peak_pages >= 2 && pg.peak_seated == 2);
+        // zero the pages blocks and the reports serialize
+        // byte-identically end to end
+        paged.stats.pages = PageCounters::default();
+        for m in &mut paged.per_model {
+            m.stats.pages = PageCounters::default();
+        }
+        assert_eq!(plain.stats_json().to_string(),
+                   paged.stats_json().to_string());
+    }
+
+    #[test]
+    fn dry_allocator_preempts_youngest_and_requeues_it() {
+        // 4-page budget, two growing residents: when slot 0's table
+        // needs a third page the allocator is dry and the
+        // youngest-seated other slot (tie → highest index) is
+        // preempted — pages freed, decoded-so-far tokens counted
+        // lost, request requeued. Everyone still completes with the
+        // full budget delivered.
+        let requests = reqs(&[8, 8]);
+        let s = sched(&[0.0, 0.0], 1.0);
+        let cfg = PagedKvConfig::new(4).with_total_pages(4);
+        let mut be = MockBackend::new(2, 16, false);
+        let report = run_paged(&mut be, &requests, &s, &Unbounded,
+                               Some(&cfg));
+        assert_eq!(report.stats.completed, 2);
+        for r in &report.results {
+            assert_eq!(r.tokens, vec![5; 8],
+                       "preemption restarts, it does not truncate");
+        }
+        let pg = report.stats.pages;
+        assert_eq!(pg.preemptions, 1);
+        assert_eq!(pg.leaked_pages, 0);
+        assert_eq!(pg.peak_pages, 4, "budget fully used");
+        // slot 1 had decoded 6 tokens when slot 0's growth evicted it
+        assert_eq!(report.results[0].lost_tokens, 0);
+        assert_eq!(report.results[1].lost_tokens, 6);
+        assert_eq!(report.stats.lost_tokens, 6);
+        assert!(report.stats.goodput_tokens_per_sec
+                < report.stats.tokens_per_sec);
+    }
+
+    #[test]
+    fn prompt_reserve_seats_more_concurrent_requests_than_full() {
+        // the tentpole datapoint at unit-test scale: same 8-page
+        // budget, same traffic — full-context reservation (the
+        // monolithic discipline in pages) caps concurrency at
+        // budget/pages_for(ctx_len) = 2, prompt reservation seats all
+        // 4 slots at once
+        let requests = reqs(&[2, 2, 2, 2]);
+        let s = sched(&[0.0; 4], 1.0);
+        let base = PagedKvConfig::new(4).with_total_pages(8);
+        let full = base.clone().with_reserve(PageReserve::FullContext);
+        let mut be_p = MockBackend::new(4, 16, false);
+        let prompt_rep = run_paged(&mut be_p, &requests, &s,
+                                   &Unbounded, Some(&base));
+        let mut be_f = MockBackend::new(4, 16, false);
+        let full_rep = run_paged(&mut be_f, &requests, &s,
+                                 &Unbounded, Some(&full));
+        assert_eq!(prompt_rep.stats.completed, 4);
+        assert_eq!(full_rep.stats.completed, 4);
+        for (x, y) in
+            prompt_rep.results.iter().zip(&full_rep.results)
+        {
+            assert_eq!(x.tokens, vec![5, 5]);
+            assert_eq!(x.tokens, y.tokens);
+        }
+        assert_eq!(prompt_rep.stats.pages.peak_seated, 4);
+        assert_eq!(full_rep.stats.pages.peak_seated, 2);
+        assert!(prompt_rep.stats.pages.peak_seated
+                > full_rep.stats.pages.peak_seated,
+                "prompt reservation sustains strictly more \
+                 concurrent requests at fixed memory");
+        assert_eq!(prompt_rep.stats.pages.leaked_pages, 0);
+        assert_eq!(full_rep.stats.pages.leaked_pages, 0);
+        // seating waits (head-of-line) rather than shedding under the
+        // default admission policy
+        assert_eq!(full_rep.stats.pages.page_sheds, 0);
+        assert!(full_rep.stats.sim_ms > prompt_rep.stats.sim_ms,
+                "two seating waves take longer than one");
+    }
+
+    #[test]
+    fn sliding_window_eviction_decodes_past_ctx_len() {
+        // ctx_len 16 caps a monolithic row at 13 generated tokens
+        // (prompt 3, cap at pos t-1); an 8-token window keeps freeing
+        // the oldest page so the same request delivers its full
+        // 20-token budget
+        let requests = reqs(&[20]);
+        let s = sched(&[0.0], 1.0);
+        let mut plain_be = MockBackend::new(1, 16, false);
+        let plain = run_paged(&mut plain_be, &requests, &s,
+                              &Unbounded, None);
+        assert_eq!(plain.results[0].tokens.len(), 13,
+                   "monolithic run stops at the ctx_len cap");
+        let cfg = PagedKvConfig::new(4).with_window(8);
+        let mut be = MockBackend::new(1, 16, false);
+        let report = run_paged(&mut be, &requests, &s, &Unbounded,
+                               Some(&cfg));
+        let r = &report.results[0];
+        assert!(r.outcome.is_completed());
+        assert_eq!(r.tokens, vec![5; 20],
+                   "windowed decode runs past ctx_len");
+        let pg = report.stats.pages;
+        assert!(pg.evicted_pages >= 2);
+        assert_eq!((pg.preemptions, pg.leaked_pages), (0, 0));
+    }
+
+    #[test]
+    fn page_pressure_sheds_arrival_when_prompt_pages_are_dry() {
+        // full-context reservation holds all 4 pages for the seated
+        // request; a later arrival under PagePressure sheds at
+        // arrival instead of queueing, and the shed is counted on the
+        // page telemetry
+        let requests = reqs(&[2, 2]);
+        let s = sched(&[0.0, 1.0], 1.0);
+        let cfg = PagedKvConfig::new(4).with_total_pages(4)
+            .with_reserve(PageReserve::FullContext);
+        let adm = PagePressure::new();
+        let mut be = MockBackend::new(1, 16, false);
+        let report = run_paged(&mut be, &requests, &s, &adm,
+                               Some(&cfg));
+        let (r0, r1) = (&report.results[0], &report.results[1]);
+        assert!(r0.outcome.is_completed());
+        assert_eq!(r0.tokens, vec![5, 5]);
+        assert_eq!(r1.outcome, RequestOutcome::Shed);
+        assert_eq!((report.stats.completed, report.stats.shed),
+                   (1, 1));
+        assert_eq!(report.stats.pages.page_sheds, 1);
+        assert_eq!(report.stats.pages.leaked_pages, 0);
+    }
+
+    #[test]
+    fn speculative_and_paged_are_mutually_exclusive() {
+        let requests = reqs(&[2]);
+        let s = sched(&[0.0], 1.0);
+        let names = [String::from("a"), String::from("b")];
+        let plan = SpecPlan { draft_lane: 1, verifier_lane: 0, k: 2 };
+        let cfg = PagedKvConfig::new(4);
+        let mut b0 = MockBackend::new(1, 16, false);
+        let mut b1 = MockBackend::new(1, 16, false);
+        let err = run_lanes_spec(
+            &mut [&mut b0, &mut b1], &names, &[0], &requests,
+            &DecodeParams::default(), Some(&s), &Fifo, &Unbounded,
+            &RecoveryConfig::default(),
+            &[LaneCost::unit(), LaneCost::unit()], Some(&plan),
+            Some(&cfg))
+            .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"));
     }
 }

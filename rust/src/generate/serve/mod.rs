@@ -33,6 +33,16 @@
 //!    failover route. A failed step is contained to its lane; with
 //!    retries enabled and no lane death, survivors stay bitwise
 //!    identical to the fault-free decode.
+//!  * [`pages`] — paged KV memory (vLLM-style): a lane's KV budget
+//!    split into fixed-size pages behind a free-list
+//!    [`pages::PageAllocator`]; a seated request owns a page table
+//!    that grows as it decodes. Memory-aware admission
+//!    ([`admission::PagePressure`]) sheds when a prompt's pages
+//!    don't exist, a dry allocator preempts the youngest-seated slot
+//!    (its decoded-so-far tokens are dropped and counted as lost),
+//!    and a sliding eviction window frees the oldest pages so
+//!    generation runs past `ctx_len`. Unconstrained paging is
+//!    bitwise identical to the monolithic loop.
 //!  * [`registry`] — the multi-model serving registry:
 //!    [`registry::ModelRegistry`] owns N named engines (the SPDF
 //!    checkpoint sweep: dense / s50 / s75) and routes one request
@@ -62,18 +72,21 @@ pub mod admission;
 pub mod clock;
 pub mod core;
 pub mod fault;
+pub mod pages;
 pub mod policy;
 pub mod registry;
 pub mod speculative;
 pub mod telemetry;
 
-pub use self::admission::AdmissionPolicy;
+pub use self::admission::{AdmissionPolicy, PagePressure};
 pub use self::clock::{LaneCost, Schedule};
 pub use self::core::{serve, serve_kv, serve_timed, serve_with,
                      ServeConfig};
 pub use self::fault::{ChaosConfig, FaultPlan, FaultSpec,
                       FaultyBackend, RecoveryConfig, RetryPolicy,
                       FAULT_SALT};
+pub use self::pages::{PageAllocator, PageCounters, PageReserve,
+                      PagedKvConfig};
 pub use self::policy::Scheduler;
 pub use self::registry::ModelRegistry;
 pub use self::speculative::{SpecConfig, SpecPlan};

@@ -1,0 +1,578 @@
+//! Paged KV-cache memory management (vLLM-style).
+//!
+//! The monolithic loop gives every batch slot a full `ctx_len` KV
+//! allocation for its whole residency — at scale, KV memory (not
+//! slots) is the binding constraint, and a slot decoding a short
+//! request wastes almost all of its reservation. Here a lane's KV
+//! budget is broken into fixed-size **pages** handed out by a
+//! free-list [`PageAllocator`]: a seated request owns a *page table*
+//! (its pages, oldest first) that grows one page at a time as it
+//! decodes and is returned in full when the request leaves its slot
+//! for any reason.
+//!
+//! Three policy levers ride on the page accounting:
+//!
+//!  * **memory-aware admission** — a request is admittable iff the
+//!    pages for its prompt exist right now
+//!    ([`super::admission::AdmissionPolicy::admit_pages`], the
+//!    [`super::admission::PagePressure`] policy); the serve loop sheds
+//!    on page pressure and counts it ([`PageCounters::page_sheds`]);
+//!  * **preemption** — when a decoding request needs one more page
+//!    and the allocator is dry, the youngest-seated other slot is
+//!    preempted: its pages are freed, its decoded-so-far tokens are
+//!    dropped (counted as [lost] in telemetry) and it requeues at its
+//!    original arrival;
+//!  * **sliding-window eviction** — with `--kv-window W`, any row
+//!    holding more than `W` resident tokens frees its *oldest* page
+//!    (the row shifts left by one page), so generation runs past
+//!    `ctx_len` on a bounded cache.
+//!
+//! The allocator is pure bookkeeping over the lane's existing token /
+//! KV buffers — pages are never materialized as separate storage, so
+//! an **unconstrained** paged run (no page budget, no window) makes
+//! exactly the decisions the monolithic loop makes and its output is
+//! bitwise identical (pinned by the core unit tests and the property
+//! suite). Invariants the property suite enforces: no page is ever
+//! leaked (all pages free once the loop drains), no page is ever
+//! owned by two slots, and page counts are conserved under
+//! memory-pressure shedding.
+//!
+//! [lost]: super::telemetry::ServeStats::lost_tokens
+
+use std::collections::BTreeSet;
+
+use crate::runtime::PagedSessionState;
+
+/// Pages needed to hold `len` tokens at `page_size` tokens per page.
+pub fn pages_for(len: usize, page_size: usize) -> usize {
+    len.div_ceil(page_size)
+}
+
+/// How many pages a request reserves when it seats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageReserve {
+    /// Reserve only the pages the prompt needs; decode grows the
+    /// table one page at a time (preempting a younger slot when the
+    /// allocator is dry). The paged default.
+    Prompt,
+    /// Reserve the full `ctx_len` worth of pages up front — the
+    /// monolithic allocation discipline expressed in pages, kept as
+    /// the bench comparison arm (`perf_serve_load` paged leg).
+    FullContext,
+}
+
+/// Paged-KV configuration for one serve call (applied per lane).
+#[derive(Debug, Clone)]
+pub struct PagedKvConfig {
+    /// Tokens per page (`--page-size`; ≥ 1, ≤ `ctx_len`).
+    pub page_size: usize,
+    /// Page budget per lane (`--kv-pages`). `None` = unconstrained:
+    /// every lane gets `decode_batch × pages_for(ctx_len)` pages, so
+    /// seating and growth can never fail and the run is bitwise
+    /// identical to the monolithic loop.
+    pub total_pages: Option<usize>,
+    /// Sliding-window eviction threshold in resident tokens
+    /// (`--kv-window`; `page_size ≤ W ≤ ctx_len − 2`). Rows holding
+    /// more than `W` tokens evict their oldest page before the next
+    /// step, so generation runs past `ctx_len`.
+    pub window: Option<usize>,
+    /// Seating reservation policy.
+    pub reserve: PageReserve,
+}
+
+impl PagedKvConfig {
+    /// Unconstrained paging at `page_size` tokens per page: prompt
+    /// reservation, no budget, no eviction window.
+    pub fn new(page_size: usize) -> PagedKvConfig {
+        PagedKvConfig { page_size, total_pages: None, window: None,
+                        reserve: PageReserve::Prompt }
+    }
+
+    /// Builder-style per-lane page budget.
+    pub fn with_total_pages(mut self, total: usize) -> PagedKvConfig {
+        self.total_pages = Some(total);
+        self
+    }
+
+    /// Builder-style sliding-window eviction threshold.
+    pub fn with_window(mut self, window: usize) -> PagedKvConfig {
+        self.window = Some(window);
+        self
+    }
+
+    /// Builder-style seating reservation policy.
+    pub fn with_reserve(mut self, reserve: PageReserve)
+                        -> PagedKvConfig {
+        self.reserve = reserve;
+        self
+    }
+}
+
+/// Free-list page allocator for one lane: fixed `total` pages, each
+/// free or owned by exactly one slot. Allocation is all-or-nothing
+/// and deterministic (lowest page ids first); freeing verifies
+/// ownership, so a double-free or foreign free is an error, never
+/// silent corruption.
+#[derive(Debug)]
+pub struct PageAllocator {
+    page_size: usize,
+    /// `owner[p]` is the slot holding page `p`, `None` when free.
+    owner: Vec<Option<usize>>,
+    /// Free page ids; `BTreeSet` so allocation order is the sorted
+    /// id order regardless of free order.
+    free: BTreeSet<usize>,
+    peak_pages: usize,
+}
+
+impl PageAllocator {
+    /// An allocator over `total` pages of `page_size` tokens each.
+    pub fn new(page_size: usize, total: usize)
+               -> anyhow::Result<PageAllocator> {
+        anyhow::ensure!(page_size >= 1,
+                        "page size must be ≥ 1 (got {page_size})");
+        anyhow::ensure!(total >= 1,
+                        "page budget must be ≥ 1 (got {total})");
+        Ok(PageAllocator {
+            page_size,
+            owner: vec![None; total],
+            free: (0..total).collect(),
+            peak_pages: 0,
+        })
+    }
+
+    /// Tokens per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Total pages in the budget.
+    pub fn total_pages(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Pages currently free.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently owned by some slot.
+    pub fn in_use(&self) -> usize {
+        self.owner.len() - self.free.len()
+    }
+
+    /// High-water mark of [`Self::in_use`] over the allocator's life.
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// Pages needed to hold `len` tokens.
+    pub fn pages_for(&self, len: usize) -> usize {
+        pages_for(len, self.page_size)
+    }
+
+    /// Allocate `n` pages to `slot`, all-or-nothing: `None` (and no
+    /// state change) when fewer than `n` pages are free. Returned ids
+    /// are the lowest free ids, ascending — deterministic for a given
+    /// alloc/free history.
+    pub fn try_alloc(&mut self, n: usize, slot: usize)
+                     -> Option<Vec<usize>> {
+        if self.free.len() < n {
+            return None;
+        }
+        let ids: Vec<usize> =
+            self.free.iter().take(n).copied().collect();
+        for &p in &ids {
+            self.free.remove(&p);
+            debug_assert!(self.owner[p].is_none(),
+                          "free page {p} already has an owner");
+            self.owner[p] = Some(slot);
+        }
+        self.peak_pages = self.peak_pages.max(self.in_use());
+        Some(ids)
+    }
+
+    /// Return page `p` from `slot` to the free list. Errors on a
+    /// double-free or a free by a slot that does not own the page —
+    /// the no-double-own invariant made loud.
+    pub fn free_page(&mut self, p: usize, slot: usize)
+                     -> anyhow::Result<()> {
+        anyhow::ensure!(p < self.owner.len(),
+                        "freed page {p} out of range ({} pages)",
+                        self.owner.len());
+        match self.owner[p] {
+            Some(s) if s == slot => {
+                self.owner[p] = None;
+                self.free.insert(p);
+                Ok(())
+            }
+            Some(s) => anyhow::bail!(
+                "slot {slot} freed page {p} owned by slot {s}"),
+            None => anyhow::bail!(
+                "slot {slot} double-freed page {p}"),
+        }
+    }
+}
+
+/// Page telemetry for one serve call (one lane's counters, or the
+/// element-wise sum across lanes in the aggregate block). Emitted as
+/// the `pages` object of the stats JSON only when paging was on
+/// (`page_size > 0`), so non-paged reports keep their byte-identical
+/// shape.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PageCounters {
+    /// Tokens per page (0 = paging off).
+    pub page_size: usize,
+    /// Page budget (summed across lanes in the aggregate).
+    pub total_pages: usize,
+    /// High-water mark of pages in use.
+    pub peak_pages: usize,
+    /// High-water mark of concurrently seated requests — the "max
+    /// concurrent requests at fixed memory" datapoint of the bench
+    /// paged leg.
+    pub peak_seated: usize,
+    /// Oldest pages freed by sliding-window eviction.
+    pub evicted_pages: u64,
+    /// Seated requests preempted (pages freed, decoded-so-far tokens
+    /// dropped and counted as lost, request requeued) so another slot
+    /// could grow.
+    pub preemptions: u64,
+    /// Requests shed at arrival by a memory-aware admission policy
+    /// ([`super::admission::AdmissionPolicy::admit_pages`]).
+    pub page_sheds: u64,
+    /// Pages still owned after the loop drained — always 0 unless the
+    /// allocator bookkeeping is broken (asserted by the property
+    /// suite and gated by the bench paged leg).
+    pub leaked_pages: usize,
+}
+
+impl PageCounters {
+    /// Element-wise accumulate `other` (page size carries over; both
+    /// lanes of a paged run share one configured size).
+    pub fn absorb(&mut self, other: &PageCounters) {
+        self.page_size = self.page_size.max(other.page_size);
+        self.total_pages += other.total_pages;
+        self.peak_pages += other.peak_pages;
+        self.peak_seated += other.peak_seated;
+        self.evicted_pages += other.evicted_pages;
+        self.preemptions += other.preemptions;
+        self.page_sheds += other.page_sheds;
+        self.leaked_pages += other.leaked_pages;
+    }
+}
+
+/// One lane's paging state: the free-list allocator, the per-slot
+/// page tables, the paged session accounting
+/// ([`crate::runtime::PagedSessionState`]) and the policy knobs. The
+/// serve loop drives it at the five page-lifecycle points — admit,
+/// seat, grow (with preemption), evict, release — and reads the
+/// counters out at the end.
+#[derive(Debug)]
+pub struct LanePager {
+    alloc: PageAllocator,
+    /// `tables[s]` = pages owned by slot `s`, oldest first.
+    tables: Vec<Vec<usize>>,
+    state: PagedSessionState,
+    ctx_len: usize,
+    window: Option<usize>,
+    reserve: PageReserve,
+    peak_seated: usize,
+    evicted_pages: u64,
+    preemptions: u64,
+    page_sheds: u64,
+}
+
+impl LanePager {
+    /// Build the pager for one lane of geometry `(b, t)`. Validates
+    /// the config against the geometry: `1 ≤ page_size ≤ t`; a
+    /// window obeys `page_size ≤ W ≤ t − 2` (so an evicted row's next
+    /// commit can never trip the `ctx_len` cap edge); a page budget
+    /// must fit at least one full-context request
+    /// (`total ≥ pages_for(t)`), which is what makes preemption a
+    /// progress guarantee rather than a livelock.
+    pub fn new(cfg: &PagedKvConfig, b: usize, t: usize)
+               -> anyhow::Result<LanePager> {
+        anyhow::ensure!(cfg.page_size >= 1 && cfg.page_size <= t,
+                        "page size must be in 1..={t} (got {})",
+                        cfg.page_size);
+        if let Some(w) = cfg.window {
+            anyhow::ensure!(
+                w >= cfg.page_size && w + 2 <= t,
+                "eviction window must be in page_size..=ctx_len-2 \
+                 ({}..={}; got {w})",
+                cfg.page_size, t - 2
+            );
+        }
+        let full = pages_for(t, cfg.page_size);
+        let total = cfg.total_pages.unwrap_or(b * full);
+        anyhow::ensure!(
+            total >= full,
+            "page budget {total} cannot hold one full-context \
+             request ({full} pages of {} tokens at ctx_len {t})",
+            cfg.page_size
+        );
+        Ok(LanePager {
+            alloc: PageAllocator::new(cfg.page_size, total)?,
+            tables: vec![Vec::new(); b],
+            state: PagedSessionState::accounting(b, cfg.page_size),
+            ctx_len: t,
+            window: cfg.window,
+            reserve: cfg.reserve,
+            peak_seated: 0,
+            evicted_pages: 0,
+            preemptions: 0,
+            page_sheds: 0,
+        })
+    }
+
+    /// Pages a request with `prompt_len` prompt tokens must be able
+    /// to allocate to seat, under the configured reservation policy.
+    pub fn seat_need(&self, prompt_len: usize) -> usize {
+        match self.reserve {
+            PageReserve::Prompt => self.alloc.pages_for(prompt_len),
+            PageReserve::FullContext =>
+                self.alloc.pages_for(self.ctx_len),
+        }
+    }
+
+    /// Pages currently free on this lane's allocator.
+    pub fn free_pages(&self) -> usize {
+        self.alloc.free_pages()
+    }
+
+    /// Tokens per page (what the serve loop shifts a row by when it
+    /// mirrors an eviction onto the token buffer).
+    pub fn page_size(&self) -> usize {
+        self.alloc.page_size()
+    }
+
+    /// Seat a request with `prompt_len` prompt tokens on `slot`:
+    /// allocate its reservation all-or-nothing. `false` leaves the
+    /// allocator untouched (the loop requeues the request and waits
+    /// for pages to free up).
+    pub fn try_seat(&mut self, slot: usize, prompt_len: usize)
+                    -> bool {
+        let need = self.seat_need(prompt_len);
+        match self.alloc.try_alloc(need, slot) {
+            Some(ids) => {
+                self.tables[slot] = ids;
+                self.state.seat(slot, prompt_len);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Record the resident token count of `slot` after a commit (the
+    /// loop's `pos + 1`).
+    pub fn set_used(&mut self, slot: usize, used: usize) {
+        self.state.seat(slot, used);
+    }
+
+    /// Grow `slot`'s table until it covers the slot's resident
+    /// tokens, one page at a time. `false` = the allocator is dry and
+    /// the table still falls short: the loop must preempt a victim
+    /// (freeing its pages) and call again.
+    pub fn try_cover(&mut self, slot: usize) -> bool {
+        let used = self.state.used(slot);
+        while self.tables[slot].len() * self.alloc.page_size() < used
+        {
+            match self.alloc.try_alloc(1, slot) {
+                Some(ids) => self.tables[slot].extend(ids),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Does `slot` hold more resident tokens than the eviction
+    /// window allows? (Always false without a window.)
+    pub fn should_evict(&self, slot: usize) -> bool {
+        self.window
+            .map_or(false, |w| self.state.used(slot) > w)
+    }
+
+    /// Evict `slot`'s oldest page: free it and drop one page's worth
+    /// of resident tokens from the front of the accounting. The loop
+    /// mirrors this on the token buffer (shift left by `page_size`)
+    /// and re-prefills the row.
+    pub fn evict_front(&mut self, slot: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tables[slot].is_empty(),
+                        "evict on slot {slot} with no pages");
+        let p = self.tables[slot].remove(0);
+        self.alloc.free_page(p, slot)?;
+        self.state.trim_front(slot)?;
+        self.evicted_pages += 1;
+        Ok(())
+    }
+
+    /// Return every page `slot` owns (request finished, failed, was
+    /// preempted or drained) and clear its accounting.
+    pub fn release(&mut self, slot: usize) -> anyhow::Result<()> {
+        for p in std::mem::take(&mut self.tables[slot]) {
+            self.alloc.free_page(p, slot)?;
+        }
+        self.state.release(slot);
+        Ok(())
+    }
+
+    /// Record the current number of seated requests (peak feeds the
+    /// bench paged leg's max-concurrency datapoint).
+    pub fn note_seated(&mut self, occupied: usize) {
+        self.peak_seated = self.peak_seated.max(occupied);
+    }
+
+    /// Count one admission shed due to page pressure.
+    pub fn note_shed(&mut self) {
+        self.page_sheds += 1;
+    }
+
+    /// Count one preemption (the loop does the release + requeue).
+    pub fn note_preempted(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Snapshot the counters; call after the loop drains so
+    /// `leaked_pages` ([`PageAllocator::in_use`] at that point) is
+    /// meaningful.
+    pub fn counters(&self) -> PageCounters {
+        PageCounters {
+            page_size: self.alloc.page_size(),
+            total_pages: self.alloc.total_pages(),
+            peak_pages: self.alloc.peak_pages(),
+            peak_seated: self.peak_seated,
+            evicted_pages: self.evicted_pages,
+            preemptions: self.preemptions,
+            page_sheds: self.page_sheds,
+            leaked_pages: self.alloc.in_use(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(pages_for(0, 4), 0);
+        assert_eq!(pages_for(1, 4), 1);
+        assert_eq!(pages_for(4, 4), 1);
+        assert_eq!(pages_for(5, 4), 2);
+        assert_eq!(pages_for(16, 4), 4);
+    }
+
+    #[test]
+    fn allocator_hands_out_lowest_ids_all_or_nothing() {
+        let mut a = PageAllocator::new(4, 4).unwrap();
+        assert_eq!(a.try_alloc(2, 0), Some(vec![0, 1]));
+        assert_eq!(a.try_alloc(1, 1), Some(vec![2]));
+        // all-or-nothing: 2 wanted, 1 free — no state change
+        assert_eq!(a.try_alloc(2, 1), None);
+        assert_eq!(a.free_pages(), 1);
+        a.free_page(1, 0).unwrap();
+        // freed id 1 comes back before the never-used id 3
+        assert_eq!(a.try_alloc(2, 2), Some(vec![1, 3]));
+        assert_eq!((a.free_pages(), a.in_use(), a.peak_pages()),
+                   (0, 4, 4));
+    }
+
+    #[test]
+    fn allocator_rejects_double_free_and_foreign_free() {
+        let mut a = PageAllocator::new(2, 2).unwrap();
+        assert_eq!(a.try_alloc(1, 0), Some(vec![0]));
+        assert!(a.free_page(0, 1).is_err()); // slot 1 never owned 0
+        a.free_page(0, 0).unwrap();
+        assert!(a.free_page(0, 0).is_err()); // double free
+        assert!(a.free_page(7, 0).is_err()); // out of range
+        assert_eq!(a.free_pages(), 2);
+    }
+
+    #[test]
+    fn pager_validates_geometry_window_and_budget() {
+        let cfg = PagedKvConfig::new(0);
+        assert!(LanePager::new(&cfg, 2, 16).is_err());
+        let cfg = PagedKvConfig::new(4).with_window(2);
+        assert!(LanePager::new(&cfg, 2, 16).is_err()); // w < page
+        let cfg = PagedKvConfig::new(4).with_window(15);
+        assert!(LanePager::new(&cfg, 2, 16).is_err()); // w > t-2
+        let cfg = PagedKvConfig::new(4).with_total_pages(3);
+        assert!(LanePager::new(&cfg, 2, 16).is_err()); // < full ctx
+        let cfg = PagedKvConfig::new(4).with_window(8)
+            .with_total_pages(4);
+        assert!(LanePager::new(&cfg, 2, 16).is_ok());
+    }
+
+    #[test]
+    fn unconstrained_pager_never_fails_to_seat_or_grow() {
+        let (b, t) = (3, 16);
+        let cfg = PagedKvConfig::new(4);
+        let mut p = LanePager::new(&cfg, b, t).unwrap();
+        for s in 0..b {
+            assert!(p.try_seat(s, t - 1));
+            p.set_used(s, t - 1);
+            assert!(p.try_cover(s));
+        }
+        assert_eq!(p.free_pages(), 0); // b * pages_for(t) exactly
+        for s in 0..b {
+            p.release(s).unwrap();
+        }
+        assert_eq!(p.counters().leaked_pages, 0);
+    }
+
+    #[test]
+    fn prompt_reserve_grows_and_full_context_reserves_up_front() {
+        let cfg = PagedKvConfig::new(4).with_total_pages(8);
+        let mut p = LanePager::new(&cfg, 2, 16).unwrap();
+        assert_eq!(p.seat_need(3), 1);
+        assert!(p.try_seat(0, 3));
+        assert_eq!(p.free_pages(), 7);
+        p.set_used(0, 5); // crossed a page boundary
+        assert!(p.try_cover(0));
+        assert_eq!(p.free_pages(), 6);
+
+        let cfg = cfg.with_reserve(PageReserve::FullContext);
+        let mut p = LanePager::new(&cfg, 2, 16).unwrap();
+        assert_eq!(p.seat_need(3), 4); // pages_for(ctx_len)
+        assert!(p.try_seat(0, 3));
+        assert!(p.try_seat(1, 3));
+        assert_eq!(p.free_pages(), 0);
+        // a third seat must wait for pages, not over-commit
+        assert!(!p.try_seat(0, 3) || p.free_pages() > 0);
+    }
+
+    #[test]
+    fn eviction_frees_oldest_page_and_trims_accounting() {
+        let cfg = PagedKvConfig::new(4).with_window(8);
+        let mut p = LanePager::new(&cfg, 1, 16).unwrap();
+        assert!(p.try_seat(0, 7));
+        assert!(!p.should_evict(0));
+        p.set_used(0, 9);
+        assert!(p.try_cover(0));
+        assert!(p.should_evict(0));
+        p.evict_front(0).unwrap();
+        assert!(!p.should_evict(0)); // 9 - 4 = 5 ≤ 8
+        let c = p.counters();
+        assert_eq!(c.evicted_pages, 1);
+        p.release(0).unwrap();
+        assert_eq!(p.counters().leaked_pages, 0);
+    }
+
+    #[test]
+    fn counters_absorb_sums_and_keeps_page_size() {
+        let mut a = PageCounters { page_size: 4, total_pages: 8,
+                                   peak_pages: 5, peak_seated: 2,
+                                   evicted_pages: 1, preemptions: 2,
+                                   page_sheds: 3, leaked_pages: 0 };
+        let b = PageCounters { page_size: 4, total_pages: 4,
+                               peak_pages: 1, peak_seated: 1,
+                               evicted_pages: 0, preemptions: 1,
+                               page_sheds: 0, leaked_pages: 0 };
+        a.absorb(&b);
+        assert_eq!(a.page_size, 4);
+        assert_eq!(a.total_pages, 12);
+        assert_eq!(a.peak_pages, 6);
+        assert_eq!(a.peak_seated, 3);
+        assert_eq!((a.evicted_pages, a.preemptions, a.page_sheds),
+                   (1, 3, 3));
+    }
+}

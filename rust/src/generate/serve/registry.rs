@@ -173,9 +173,11 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
     /// [`DecodeRequest::model`]. Fault plans in `cfg.faults` wrap the
     /// named lanes' backends in deterministic injectors,
     /// `cfg.fallback` resolves `(from, to)` model names into the
-    /// recovery layer's failover route, and `cfg.speculate` resolves
+    /// recovery layer's failover route, `cfg.speculate` resolves
     /// `DRAFT=VERIFIER:k` model names into the self-speculative
-    /// [`SpecPlan`] (draft lane proposes, verifier lane commits).
+    /// [`SpecPlan`] (draft lane proposes, verifier lane commits), and
+    /// `cfg.paged` puts every lane's KV memory behind a fixed-size-
+    /// page free list ([`super::pages`]).
     pub fn serve_with(&self, requests: &[DecodeRequest],
                       dp: &DecodeParams, cfg: &ServeConfig)
                       -> anyhow::Result<ServeReport> {
@@ -249,7 +251,7 @@ impl<'e, 'a> ModelRegistry<'e, 'a> {
         core::run_lanes_spec(&mut refs, &names, &lane_of, requests,
                              dp, cfg.schedule, cfg.scheduler,
                              cfg.admission, &recovery, &costs,
-                             spec_plan.as_ref())
+                             spec_plan.as_ref(), cfg.paged.as_ref())
     }
 
     /// Per-lane virtual step-cost multipliers, registration order:

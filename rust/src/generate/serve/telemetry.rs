@@ -5,6 +5,8 @@
 use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};
 
+use super::pages::PageCounters;
+
 /// How a request left the server.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestOutcome {
@@ -16,7 +18,9 @@ pub enum RequestOutcome {
     Expired,
     /// Lost to a lane fault after admission: the lane died (with no
     /// live fallback) or transient step failures exhausted the retry
-    /// budget. Failed results carry no tokens.
+    /// budget. Failed results deliver no tokens — anything decoded
+    /// before the failure is dropped and counted in
+    /// [`RequestResult::lost_tokens`].
     Failed,
 }
 
@@ -78,6 +82,14 @@ pub struct RequestResult {
     pub id: u64,
     /// Generated tokens (without the prompt, without EOS).
     pub tokens: Vec<u32>,
+    /// Tokens decoded for this request and then *dropped* instead of
+    /// delivered: the partial output of a fault-failed slot, work
+    /// discarded when a failover restarted the request on another
+    /// lane, and decode undone by a paged-KV preemption. The engine
+    /// paid for these steps — `tokens` alone under-reports the work —
+    /// but no caller ever saw them, which is exactly the
+    /// throughput-vs-goodput gap.
+    pub lost_tokens: u64,
     /// Engine steps spent queued before a slot freed up.
     pub queue_steps: u64,
     /// Engine steps the request occupied a slot.
@@ -110,6 +122,7 @@ impl RequestResult {
         let mut j = Json::obj();
         j.push_num("id", self.id)
             .push_num("tokens", self.tokens.len())
+            .push_num("lost_tokens", self.lost_tokens)
             .push_num("queue_steps", self.queue_steps)
             .push_num("decode_steps", self.decode_steps)
             .push_num("arrival_ms", self.arrival_ms)
@@ -165,19 +178,29 @@ pub struct ServeStats {
     /// Occupied slot-steps (out of `engine_steps * decode_batch`).
     pub slot_steps: u64,
     /// `slot_steps / (engine_steps * decode_batch)` — 1.0 means no
-    /// slot ever idled.
+    /// slot ever idled; 0.0 (not NaN) when either factor is zero.
     pub occupancy: f64,
+    /// Tokens *delivered* in results (every one belongs to a
+    /// completed request — failed/preempted work is dropped, not
+    /// delivered).
     pub generated_tokens: u64,
+    /// Tokens decoded and then dropped instead of delivered (summed
+    /// [`RequestResult::lost_tokens`]): fault-failed partial output,
+    /// failover restarts, paged-KV preemptions.
+    pub lost_tokens: u64,
     /// Real host time spent, always wall-clock (the virtual schedule
     /// does not change how long the model actually runs).
     pub wall_secs: f64,
+    /// Raw decode throughput: every token the engine produced —
+    /// delivered *or* dropped (`generated_tokens + lost_tokens`) —
+    /// per wall second. The engine paid for dropped work, so it
+    /// belongs in the throughput numerator.
     pub tokens_per_sec: f64,
-    /// Tokens delivered to **completed** requests per wall second.
-    /// Today this always equals `tokens_per_sec`: shed/expired
-    /// requests fail before ever occupying a slot, so every generated
-    /// token belongs to a completed request. It is kept as a distinct
-    /// named datapoint (and gate) so the contract survives a future
-    /// where partially decoded work can be cancelled mid-slot.
+    /// Tokens delivered to **completed** requests per wall second —
+    /// what callers actually received. Strictly below
+    /// `tokens_per_sec` whenever failures or preemptions dropped
+    /// partially decoded output (regression-tested with an injected
+    /// mid-stream lane death); equal only when nothing was lost.
     pub goodput_tokens_per_sec: f64,
     pub mean_step_ms: f64,
     /// Clock reading when the last request completed: wall ms on the
@@ -195,6 +218,12 @@ pub struct ServeStats {
     pub tokens_per_verify: f64,
     /// Draft steps wasted: `drafted - accepted`.
     pub wasted_drafts: u64,
+    /// Paged-KV counters (allocator peaks, evictions, preemptions,
+    /// page sheds, leak check). All zero — and omitted from the JSON
+    /// — when paging is off (`page_size == 0`), so non-paged stats
+    /// keep their byte-identical shape. Filled in by the serve loop
+    /// after aggregation, not by `from_results`.
+    pub pages: PageCounters,
     /// Per-request queue wait (arrival → slot entry), completed only.
     pub queue_ms: Summary,
     /// Per-request time-to-first-token, completed only.
@@ -233,18 +262,15 @@ impl ServeStats {
             results.iter().filter(|r| r.degraded).count();
         let generated_tokens: u64 =
             results.iter().map(|r| r.tokens.len() as u64).sum();
-        // failures never keep decoded tokens (shed/expired never reach
-        // a slot; fault-failed slots drop their partial output), so
-        // completed-request tokens == generated tokens (debug-checked);
-        // goodput derives from the same sum rather than a vacuous
-        // re-filter
-        debug_assert_eq!(
-            generated_tokens,
-            results.iter()
-                .filter(|r| r.outcome.is_completed())
-                .map(|r| r.tokens.len() as u64)
-                .sum::<u64>()
-        );
+        let lost_tokens: u64 =
+            results.iter().map(|r| r.lost_tokens).sum();
+        // goodput counts only tokens delivered to completed requests
+        // — filtered explicitly, so the datapoint stays honest even
+        // if a future outcome starts carrying partial output
+        let delivered: u64 = results.iter()
+            .filter(|r| r.outcome.is_completed())
+            .map(|r| r.tokens.len() as u64)
+            .sum();
         let collect = |f: fn(&RequestResult) -> f64| -> Summary {
             summarize(&results.iter()
                 .filter(|r| r.outcome.is_completed())
@@ -282,16 +308,23 @@ impl ServeStats {
             engine_steps,
             prefill_steps,
             slot_steps,
-            occupancy: if engine_steps == 0 {
+            // guard the whole product: an all-shed trace can hand in
+            // zero steps, and a degenerate lane zero batch — either
+            // factor alone makes the division NaN/inf
+            occupancy: if engine_steps * decode_batch as u64 == 0 {
                 0.0
             } else {
                 slot_steps as f64
                     / (engine_steps * decode_batch as u64) as f64
             },
             generated_tokens,
+            lost_tokens,
             wall_secs,
-            tokens_per_sec: per_sec(generated_tokens),
-            goodput_tokens_per_sec: per_sec(generated_tokens),
+            // the engine decoded dropped work too — raw throughput
+            // charges for it; goodput is delivered-only, so the two
+            // split exactly when partial output is lost
+            tokens_per_sec: per_sec(generated_tokens + lost_tokens),
+            goodput_tokens_per_sec: per_sec(delivered),
             mean_step_ms: if engine_steps == 0 {
                 0.0
             } else {
@@ -311,6 +344,7 @@ impl ServeStats {
                     / spec.verifies as f64
             },
             wasted_drafts: spec.wasted(),
+            pages: PageCounters::default(),
             queue_ms: collect(|r| r.queue_ms),
             ttft_ms: collect(|r| r.ttft_ms),
             latency_ms: collect(|r| r.latency_ms),
@@ -335,6 +369,7 @@ impl ServeStats {
             .push_num("slot_steps", self.slot_steps)
             .push_num("occupancy", self.occupancy)
             .push_num("generated_tokens", self.generated_tokens)
+            .push_num("lost_tokens", self.lost_tokens)
             .push_num("wall_secs", self.wall_secs)
             .push_num("tokens_per_sec", self.tokens_per_sec)
             .push_num("goodput_tokens_per_sec",
@@ -351,6 +386,21 @@ impl ServeStats {
             .push("queue_ms", self.queue_ms.to_json())
             .push("ttft_ms", self.ttft_ms.to_json())
             .push("latency_ms", self.latency_ms.to_json());
+        // pages block only when paging was on: pre-paging consumers
+        // (and the byte-identical single-model JSON pin) keep their
+        // exact shape
+        if self.pages.page_size > 0 {
+            let mut p = Json::obj();
+            p.push_num("page_size", self.pages.page_size)
+                .push_num("total_pages", self.pages.total_pages)
+                .push_num("peak_pages", self.pages.peak_pages)
+                .push_num("peak_seated", self.pages.peak_seated)
+                .push_num("evicted_pages", self.pages.evicted_pages)
+                .push_num("preemptions", self.pages.preemptions)
+                .push_num("page_sheds", self.pages.page_sheds)
+                .push_num("leaked_pages", self.pages.leaked_pages);
+            j.push("pages", p);
+        }
         j
     }
 }
@@ -413,6 +463,7 @@ mod tests {
         RequestResult {
             id,
             tokens: vec![5; tokens],
+            lost_tokens: 0,
             queue_steps: 0,
             decode_steps: tokens as u64,
             arrival_ms: 0.0,
@@ -567,6 +618,83 @@ mod tests {
         assert_eq!(st.spec, SpecCounters::default());
         assert_eq!((st.acceptance_rate, st.tokens_per_verify), (0.0,
                                                                 0.0));
+    }
+
+    #[test]
+    fn lost_tokens_split_goodput_below_raw_throughput() {
+        // a fault-failed request dropped 3 decoded tokens: raw
+        // throughput charges for them, goodput does not — the two
+        // datapoints must diverge, not mirror each other
+        let mut died = result(1, 0, 6.0, RequestOutcome::Failed);
+        died.lost_tokens = 3;
+        let results = vec![
+            result(0, 5, 10.0, RequestOutcome::Completed),
+            died,
+        ];
+        let st = ServeStats::from_results(&refs(&results), 2, 2, 8, 0,
+                                          12, 0.5, 16.0, 0);
+        assert_eq!(st.generated_tokens, 5);
+        assert_eq!(st.lost_tokens, 3);
+        assert_eq!(st.tokens_per_sec, 16.0); // (5 + 3) / 0.5
+        assert_eq!(st.goodput_tokens_per_sec, 10.0); // 5 / 0.5
+        assert!(st.goodput_tokens_per_sec < st.tokens_per_sec);
+        let j = st.to_json();
+        assert_eq!(j.get("lost_tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("goodput_tokens_per_sec").unwrap().as_f64(),
+                   Some(10.0));
+        let rj = results[1].to_json();
+        assert_eq!(rj.get("lost_tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(rj.get("tokens").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn all_shed_trace_yields_zeros_not_nan() {
+        // every request shed at arrival: zero steps, zero wall time,
+        // zero batch occupancy — every derived rate must be exactly
+        // 0.0, or bench_gate.py comparisons silently poison
+        let results = vec![
+            result(0, 0, 0.0, RequestOutcome::Shed),
+            result(1, 0, 0.0, RequestOutcome::Shed),
+        ];
+        let st = ServeStats::from_results(&refs(&results), 2, 0, 0, 0,
+                                          0, 0.0, 0.0, 0);
+        assert_eq!(st.occupancy, 0.0);
+        assert_eq!(st.tokens_per_sec, 0.0);
+        assert_eq!(st.goodput_tokens_per_sec, 0.0);
+        assert_eq!(st.mean_step_ms, 0.0);
+        assert_eq!(st.acceptance_rate, 0.0);
+        assert_eq!(st.tokens_per_verify, 0.0);
+        assert_eq!(st.shed_rate, 1.0);
+        for v in [st.occupancy, st.tokens_per_sec,
+                  st.goodput_tokens_per_sec, st.mean_step_ms,
+                  st.acceptance_rate, st.tokens_per_verify,
+                  st.shed_rate] {
+            assert!(v.is_finite(), "non-finite stat {v}");
+        }
+        // zero batch with nonzero steps is the other NaN edge of the
+        // occupancy product
+        let st = ServeStats::from_results(&refs(&results), 2, 0, 4, 0,
+                                          0, 0.0, 0.0, 0);
+        assert_eq!(st.occupancy, 0.0);
+    }
+
+    #[test]
+    fn pages_json_block_only_when_paging_on() {
+        let results = vec![result(0, 2, 4.0,
+                                  RequestOutcome::Completed)];
+        let mut st = ServeStats::from_results(&refs(&results), 1, 1,
+                                              2, 0, 2, 0.1, 4.0, 0);
+        assert!(st.to_json().get("pages").is_none());
+        st.pages = PageCounters { page_size: 4, total_pages: 8,
+                                  peak_pages: 5, peak_seated: 2,
+                                  evicted_pages: 1, preemptions: 2,
+                                  page_sheds: 3, leaked_pages: 0 };
+        let j = st.to_json();
+        let p = j.get("pages").unwrap();
+        assert_eq!(p.get("page_size").unwrap().as_usize(), Some(4));
+        assert_eq!(p.get("peak_seated").unwrap().as_usize(), Some(2));
+        assert_eq!(p.get("leaked_pages").unwrap().as_usize(), Some(0));
+        assert_eq!(p.get("preemptions").unwrap().as_usize(), Some(2));
     }
 
     #[test]

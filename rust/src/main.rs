@@ -25,7 +25,7 @@ use spdf::generate::loadgen::{self, Pattern, StepCosts};
 use spdf::generate::serve::{admission, policy, AdmissionPolicy,
                             Scheduler, SpecConfig};
 use spdf::generate::{ChaosConfig, DecodeParams, FaultPlan, FaultSpec,
-                     RetryPolicy, ServeConfig};
+                     PagedKvConfig, RetryPolicy, ServeConfig};
 use spdf::runtime::Engine;
 use spdf::util::json::Json;
 use spdf::sparsity::MaskScheme;
@@ -694,6 +694,48 @@ fn speculate_from_flag(a: &spdf::util::cli::Args)
     }
 }
 
+/// Add the paged-KV flags shared by `spdf serve` and `spdf loadgen`.
+fn paged_flags(cli: Cli) -> Cli {
+    cli.flag("page-size", "0",
+             "paged KV: tokens per page (0 = monolithic KV, the \
+              default; unconstrained paging decodes bitwise \
+              identically)")
+        .flag("kv-pages", "0",
+              "paged KV: page budget per lane (0 = unconstrained; \
+               needs --page-size; a dry allocator preempts the \
+               youngest-seated request)")
+        .flag("kv-window", "0",
+              "paged KV: sliding-window eviction threshold in \
+               resident tokens (0 = no eviction; needs --page-size; \
+               lets generation run past ctx_len)")
+}
+
+/// Build the [`PagedKvConfig`] the paged-KV flags describe.
+/// `--page-size 0` (the default) keeps the monolithic loop and
+/// rejects the refinement flags, which are meaningless without pages.
+fn paged_from_flags(a: &spdf::util::cli::Args)
+                    -> anyhow::Result<Option<PagedKvConfig>> {
+    let page_size = a.get_usize("page-size")?;
+    let kv_pages = a.get_usize("kv-pages")?;
+    let kv_window = a.get_usize("kv-window")?;
+    if page_size == 0 {
+        anyhow::ensure!(
+            kv_pages == 0 && kv_window == 0,
+            "--kv-pages/--kv-window need --page-size (a page budget \
+             or eviction window is meaningless without paged KV)"
+        );
+        return Ok(None);
+    }
+    let mut cfg = PagedKvConfig::new(page_size);
+    if kv_pages > 0 {
+        cfg = cfg.with_total_pages(kv_pages);
+    }
+    if kv_window > 0 {
+        cfg = cfg.with_window(kv_window);
+    }
+    Ok(Some(cfg))
+}
+
 fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     let cli = world_flags(
         Cli::new("spdf serve",
@@ -729,10 +771,11 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
                VERIFIER commits — output stays bitwise VERIFIER-only \
                (empty = plain decode)")
         .flag("stats-json", "", "write serving stats JSON to this path");
-    let cli = chaos_flags(cli);
+    let cli = paged_flags(chaos_flags(cli));
     let a = cli.parse(raw)?;
     let chaos = chaos_from_flags(&a)?;
     let speculate = speculate_from_flag(&a)?;
+    let paged = paged_from_flags(&a)?;
     let scheduler = policy::parse(a.get("policy"))?;
     let priority_classes = a.get_usize("priority-classes")?;
     anyhow::ensure!((1..=255).contains(&priority_classes),
@@ -744,8 +787,9 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         "--policy priority needs --priority-classes > 1 (every \
          request defaults to class 0, which degenerates to fifo)"
     );
-    let admit = admission::from_flags(a.get_usize("max-queue")?,
-                                      a.get_f64("queue-deadline-ms")?)?;
+    let admit = admission::from_flags_paged(
+        a.get_usize("max-queue")?, a.get_f64("queue-deadline-ms")?,
+        paged.as_ref().is_some_and(|p| p.total_pages.is_some()))?;
     let engine_flag = a.get("engine");
     anyhow::ensure!(
         matches!(engine_flag, "auto" | "kv" | "literal"),
@@ -812,6 +856,7 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
         faults: chaos.faults.clone(),
         fallback: chaos.fallback.clone(),
         speculate: speculate.clone(),
+        paged: paged.clone(),
     })?;
     eprintln!("[spdf] served {} requests over {} model(s) in {:.1}s \
                ({} path, {}/{}{})",
@@ -890,10 +935,11 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
                (empty = plain decode; needs a multi-model --model \
                registry)")
         .flag("out", "", "write the sweep JSON to this path");
-    let cli = chaos_flags(cli);
+    let cli = paged_flags(chaos_flags(cli));
     let a = cli.parse(raw)?;
     let chaos = chaos_from_flags(&a)?;
     let speculate = speculate_from_flag(&a)?;
+    let paged = paged_from_flags(&a)?;
     let engine_flag = a.get("engine");
     anyhow::ensure!(
         matches!(engine_flag, "auto" | "both" | "kv" | "literal"),
@@ -922,8 +968,9 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
         "--policy priority needs --priority-classes > 1 (every \
          request defaults to class 0, which degenerates to fifo)"
     );
-    let admit = admission::from_flags(a.get_usize("max-queue")?,
-                                      a.get_f64("queue-deadline-ms")?)?;
+    let admit = admission::from_flags_paged(
+        a.get_usize("max-queue")?, a.get_f64("queue-deadline-ms")?,
+        paged.as_ref().is_some_and(|p| p.total_pages.is_some()))?;
 
     let (_engines, loaded) = load_registry_models(
         a.get("model"), engine_flag, a.get("ckpt"),
@@ -1094,7 +1141,7 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
         loadgen::sweep_registry(&registry, &base, &rates, &engines,
                                 &dp, scheduler.as_ref(),
                                 admit.as_ref(), &chaos,
-                                speculate.as_ref())?
+                                speculate.as_ref(), paged.as_ref())?
     } else {
         anyhow::ensure!(
             speculate.is_none(),
@@ -1103,7 +1150,7 @@ fn cmd_loadgen(raw: &[String]) -> anyhow::Result<()> {
         );
         loadgen::sweep_with(decode, &base, &rates, &engines, &dp,
                             scheduler.as_ref(), admit.as_ref(),
-                            &chaos)?
+                            &chaos, paged.as_ref())?
     };
     eprintln!("[spdf] swept {} load points over {} model(s) in \
                {:.1}s ({}, {}/{}{})",

@@ -274,6 +274,93 @@ impl SessionState {
     }
 }
 
+/// The paged variant of [`SessionState`]: the same per-layer cache
+/// literals (the artifact geometry is unchanged), plus per-slot
+/// *residency accounting* in fixed-size pages — how many tokens each
+/// batch row currently holds, measured against the page tables the
+/// serve-side allocator (`generate::serve::pages`) hands out. Pages
+/// are bookkeeping over the existing buffers, not separate storage:
+/// seating, growth, preemption and sliding-window eviction are
+/// decided here and mirrored onto the token/KV rows by the serve
+/// loop, which is why an unconstrained paged run stays bitwise
+/// identical to the monolithic loop.
+pub struct PagedSessionState {
+    /// The backing cache literals on the KV path; `None` for
+    /// accounting-only use (literal-resident path, mocks, loadgen).
+    inner: Option<SessionState>,
+    page_size: usize,
+    /// Resident tokens per batch row (0 = row vacant).
+    used: Vec<usize>,
+}
+
+impl PagedSessionState {
+    /// Accounting-only paged state for `slots` batch rows (no backing
+    /// literals — the literal-resident path and the mock backends).
+    pub fn accounting(slots: usize, page_size: usize)
+                      -> PagedSessionState {
+        PagedSessionState { inner: None, page_size,
+                            used: vec![0; slots] }
+    }
+
+    /// Paged accounting wrapped around real KV-cache literals.
+    pub fn with_state(state: SessionState, slots: usize,
+                      page_size: usize) -> PagedSessionState {
+        PagedSessionState { inner: Some(state), page_size,
+                            used: vec![0; slots] }
+    }
+
+    /// Tokens per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Set row `slot`'s resident token count (seating writes the
+    /// prompt length; each commit re-records `pos + 1`).
+    pub fn seat(&mut self, slot: usize, tokens: usize) {
+        self.used[slot] = tokens;
+    }
+
+    /// Resident tokens on row `slot`.
+    pub fn used(&self, slot: usize) -> usize {
+        self.used[slot]
+    }
+
+    /// Pages row `slot`'s resident tokens span.
+    pub fn pages_resident(&self, slot: usize) -> usize {
+        self.used[slot].div_ceil(self.page_size)
+    }
+
+    /// Drop one page's worth of tokens from the *front* of row
+    /// `slot` (sliding-window eviction of the oldest page). Errors if
+    /// the row holds less than a full page — the caller's window
+    /// validation (`window ≥ page_size`) makes that unreachable.
+    pub fn trim_front(&mut self, slot: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.used[slot] >= self.page_size,
+            "trim_front on slot {slot} holding {} tokens (< one \
+             {}-token page)",
+            self.used[slot], self.page_size
+        );
+        self.used[slot] -= self.page_size;
+        Ok(())
+    }
+
+    /// Vacate row `slot` (request finished, failed or was preempted).
+    pub fn release(&mut self, slot: usize) {
+        self.used[slot] = 0;
+    }
+
+    /// The backing KV literals, when this state wraps any.
+    pub fn state(&self) -> Option<&SessionState> {
+        self.inner.as_ref()
+    }
+
+    /// Mutable backing KV literals, when this state wraps any.
+    pub fn state_mut(&mut self) -> Option<&mut SessionState> {
+        self.inner.as_mut()
+    }
+}
+
 /// A compiled artifact, ready to execute.
 pub struct Executable {
     pub spec: ArtifactSpec,

@@ -7,7 +7,7 @@ pub mod manifest;
 pub mod tensor;
 
 pub use engine::{Engine, Executable, LiteralCache, ModelRuntime,
-                 SessionState, SlotResidency};
+                 PagedSessionState, SessionState, SlotResidency};
 pub use manifest::{ArtifactSpec, Dtype, InitKind, Manifest,
                    ModelManifest, ParamSpec, TensorSpec};
 pub use tensor::HostTensor;

@@ -601,6 +601,7 @@ fn serve_policies_fifo_unbounded_bit_identical_to_default() {
                 faults: Vec::new(),
                 fallback: None,
                 speculate: None,
+                paged: None,
             }).unwrap();
         assert_eq!(default_report.results.len(),
                    explicit_report.results.len(), "kv={kv}");
@@ -684,7 +685,7 @@ fn serve_with_shedding_policies_decodes_survivors_exactly() {
     let (pt, report) = loadgen::run_trace_with(
         &decode, &trace, &dp, false, &costs, &SmallestBudgetFirst,
         &MaxQueueDepth(2),
-        &spdf::generate::ChaosConfig::default()).unwrap();
+        &spdf::generate::ChaosConfig::default(), None).unwrap();
     assert_eq!(pt.completed, mm.decode_batch + 2);
     assert_eq!(pt.shed, n - mm.decode_batch - 2);
     assert_eq!(pt.expired, 0);
@@ -718,7 +719,7 @@ fn serve_with_shedding_policies_decodes_survivors_exactly() {
     let (pt2, report2) = loadgen::run_trace_with(
         &decode, &trace, &dp, false, &costs, &SmallestBudgetFirst,
         &MaxQueueDepth(2),
-        &spdf::generate::ChaosConfig::default()).unwrap();
+        &spdf::generate::ChaosConfig::default(), None).unwrap();
     assert_eq!(pt.shed_rate, pt2.shed_rate);
     assert_eq!(pt.latency_ms.p95, pt2.latency_ms.p95);
     for (x, y) in report.results.iter().zip(&report2.results) {
@@ -968,7 +969,7 @@ fn sparse_residency_artifact_golden() {
     let run = |reg: &ModelRegistry, t: &loadgen::Trace| {
         loadgen::run_trace_registry(
             reg, t, &dp, false, &costs, &Fifo, &Unbounded,
-            &ChaosConfig::default(), None)
+            &ChaosConfig::default(), None, None)
             .unwrap()
     };
     let (_, _, rep_a) = run(&reg_a, &trace);
@@ -1063,7 +1064,7 @@ fn speculative_decode_bitwise_matches_dense_reference() {
     let run = |speculate: Option<&SpecConfig>| {
         loadgen::run_trace_registry(
             &reg, &trace, &dp, false, &costs, &Fifo, &Unbounded,
-            &ChaosConfig::default(), speculate)
+            &ChaosConfig::default(), speculate, None)
             .unwrap()
     };
     let (_, _, plain) = run(None);

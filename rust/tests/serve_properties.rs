@@ -25,8 +25,8 @@
 //! request.
 
 use spdf::generate::serve::admission::{AdmissionPolicy, Bounded,
-                                       MaxQueueDepth, QueueDeadline,
-                                       Unbounded};
+                                       MaxQueueDepth, PagePressure,
+                                       QueueDeadline, Unbounded};
 use spdf::generate::serve::core::mock::MockBackend;
 use spdf::generate::serve::core::{run_lanes_spec,
                                   run_lanes_with_costs,
@@ -35,7 +35,8 @@ use spdf::generate::serve::policy::{Fifo, PriorityClass, Scheduler,
                                     ShortestPromptFirst,
                                     SmallestBudgetFirst};
 use spdf::generate::serve::{FaultPlan, FaultyBackend, LaneCost,
-                            Schedule, SpecPlan};
+                            PageReserve, PagedKvConfig, Schedule,
+                            SpecPlan};
 use spdf::generate::{DecodeParams, DecodeRequest, RecoveryConfig,
                      RequestOutcome, RetryPolicy, ServeReport};
 use spdf::tokenizer::EOS;
@@ -244,6 +245,7 @@ fn prop_per_model_stats_sum_to_aggregate() {
             && sum(&|s| s.degraded as u64) == st.degraded as u64
             && sum(&|s| s.retries) == st.retries
             && sum(&|s| s.generated_tokens) == st.generated_tokens
+            && sum(&|s| s.lost_tokens) == st.lost_tokens
             && sum(&|s| s.engine_steps) == st.engine_steps
             && sum(&|s| s.prefill_steps) == st.prefill_steps
             && sum(&|s| s.slot_steps) == st.slot_steps
@@ -521,7 +523,7 @@ fn run_spec(ss: &SpecScenario, spec_on: bool,
     run_lanes_spec(&mut refs, &names, &sc.lane_of, &sc.requests,
                    &DecodeParams::default(), Some(&schedule),
                    scheduler_of(sc.scheduler).as_ref(), &Unbounded,
-                   &RecoveryConfig::default(), &costs, spec)
+                   &RecoveryConfig::default(), &costs, spec, None)
         .expect("spec serve loop errored on a valid scenario")
 }
 
@@ -591,6 +593,14 @@ fn prop_spec_draft_death_degrades_to_dense() {
         let die_at = (ss.draft_salt + ss.k as u64) % 5;
         let spec = run_spec(ss, true, Some(die_at));
         let plain = run_spec(ss, false, None);
+        // a draft that dies before proposing anything leaves
+        // drafted == 0 — acceptance must read 0.0, never NaN
+        if !spec.stats.acceptance_rate.is_finite()
+            || (spec.stats.spec.drafted == 0
+                && spec.stats.acceptance_rate != 0.0)
+        {
+            return false;
+        }
         let verifier_ids: Vec<u64> = ss.sc.requests.iter()
             .filter(|r| ss.sc.lane_of[r.id as usize] == 0)
             .map(|r| r.id)
@@ -637,6 +647,196 @@ fn prop_spec_none_is_plain_run_lanes() {
         via_spec.stats.to_json().to_string()
             == plain.stats.to_json().to_string()
             && via_spec.results.iter().zip(&plain.results).all(
+                |(x, y)| {
+                    x.to_json().to_string() == y.to_json().to_string()
+                })
+    });
+}
+
+// ---------- paged KV-memory properties (ISSUE 10) ----------
+
+/// A [`Scenario`] narrowed to one lane plus a paged-KV layout: page
+/// size, optional page budget (tight enough to force queueing and
+/// preemption), optional eviction window, reservation policy, and
+/// whether admission is memory-aware ([`PagePressure`]).
+#[derive(Debug, Clone)]
+struct PagedScenario {
+    sc: Scenario,
+    page_size: usize,
+    budget: Option<usize>,
+    window: Option<usize>,
+    full_reserve: bool,
+    pressure: bool,
+}
+
+fn gen_paged(rng: &mut Rng, size: usize) -> PagedScenario {
+    let mut sc = gen_scenario(rng, size);
+    sc.kv = false; // VaryingBackend is literal-path
+    sc.lane_b = vec![1 + rng.below(3)];
+    for l in sc.lane_of.iter_mut() {
+        *l = 0;
+    }
+    let page_size = 1 + rng.below(6);
+    let per_row = CTX.div_ceil(page_size);
+    let b = sc.lane_b[0];
+    // budgets sweep from "one full-context row barely fits" (the
+    // validated floor — queueing, preemption and shedding all
+    // engage) up to the unconstrained default b × per_row
+    let budget = match rng.below(3) {
+        0 => None,
+        _ => Some(per_row + rng.below(per_row * (b - 1) + 1)),
+    };
+    // low windows actually trigger eviction on these short traces
+    let window = (rng.below(3) == 0)
+        .then(|| (page_size + rng.below(4)).min(CTX - 2));
+    PagedScenario {
+        sc,
+        page_size,
+        budget,
+        window,
+        full_reserve: rng.below(3) == 0,
+        pressure: rng.below(2) == 1,
+    }
+}
+
+fn paged_cfg(ps: &PagedScenario) -> PagedKvConfig {
+    let mut cfg = PagedKvConfig::new(ps.page_size);
+    if let Some(total) = ps.budget {
+        cfg = cfg.with_total_pages(total);
+    }
+    if let Some(w) = ps.window {
+        cfg = cfg.with_window(w);
+    }
+    if ps.full_reserve {
+        cfg = cfg.with_reserve(PageReserve::FullContext);
+    }
+    cfg
+}
+
+fn run_paged(ps: &PagedScenario, paged: Option<&PagedKvConfig>)
+             -> ServeReport {
+    let sc = &ps.sc;
+    let mut v = VaryingBackend::new(sc.lane_b[0], 0);
+    let mut refs: Vec<&mut dyn LogitsBackend> = vec![&mut v];
+    let names = vec!["dense".to_string()];
+    let schedule = Schedule::open(sc.arrivals.clone(), 1.0, 1.0);
+    let costs = [LaneCost::unit()];
+    let admission: Box<dyn AdmissionPolicy> =
+        if ps.pressure && paged.is_some() {
+            Box::new(PagePressure::new())
+        } else {
+            Box::new(Unbounded)
+        };
+    run_lanes_spec(&mut refs, &names, &sc.lane_of, &sc.requests,
+                   &DecodeParams::default(), Some(&schedule),
+                   scheduler_of(sc.scheduler).as_ref(),
+                   admission.as_ref(), &RecoveryConfig::default(),
+                   &costs, None, paged)
+        .expect("paged serve loop errored on a valid scenario")
+}
+
+/// The allocator ledger closes on every paged layout: no page is
+/// leaked (every page is back on the free list at exit), the peak
+/// never exceeds the budget, and outcomes still conserve. Double
+/// ownership can't pass silently — the allocator errors the whole
+/// run on a double-alloc or foreign free, which `run_paged` turns
+/// into a property failure.
+#[test]
+fn prop_paged_no_page_leaked_and_peak_bounded() {
+    check(67, 60, 14, gen_paged, |ps: &PagedScenario| {
+        let report = run_paged(ps, Some(&paged_cfg(ps)));
+        let st = &report.stats;
+        let n = ps.sc.requests.len();
+        st.pages.leaked_pages == 0
+            && st.pages.page_size == ps.page_size
+            && st.pages.peak_pages <= st.pages.total_pages
+            && st.completed + st.shed + st.expired + st.failed == n
+    });
+}
+
+/// Page-count conservation under memory-pressure shedding: with a
+/// tight budget and [`PagePressure`] admission, every page-shed
+/// request exits empty at arrival, the page-shed counter never
+/// exceeds the shed bucket, and the allocator still drains to zero
+/// pages in use.
+#[test]
+fn prop_paged_pressure_sheds_conserve_pages() {
+    check(71, 60, 14, |rng: &mut Rng, size: usize| {
+        let mut ps = gen_paged(rng, size);
+        ps.pressure = true;
+        if ps.budget.is_none() {
+            // pressure needs something to press against
+            ps.budget = Some(CTX.div_ceil(ps.page_size));
+        }
+        ps
+    }, |ps: &PagedScenario| {
+        let report = run_paged(ps, Some(&paged_cfg(ps)));
+        let st = &report.stats;
+        st.pages.leaked_pages == 0
+            && st.pages.page_sheds <= st.shed as u64
+            && report.results.iter().all(|r| {
+                r.outcome != RequestOutcome::Shed
+                    || (r.tokens.is_empty() && r.decode_steps == 0)
+            })
+    });
+}
+
+/// Survivors are bitwise monolithic: across seeds × schedulers ×
+/// budgets × reservation policies (eviction off — a shifted window
+/// legitimately changes the streams), every request the paged run
+/// completes carries exactly the token stream the monolithic loop
+/// produces — preemption replays a request from scratch, it never
+/// splices a stream.
+#[test]
+fn prop_paged_survivors_bitwise_equal_monolithic() {
+    check(73, 60, 14, |rng: &mut Rng, size: usize| {
+        let mut ps = gen_paged(rng, size);
+        ps.window = None;
+        ps
+    }, |ps: &PagedScenario| {
+        let paged = run_paged(ps, Some(&paged_cfg(ps)));
+        let mono = run_paged(ps, None);
+        let stream = |rep: &ServeReport, id: u64| {
+            rep.results.iter().find(|r| r.id == id)
+                .map(|r| r.tokens.clone())
+        };
+        mono.stats.completed == ps.sc.requests.len()
+            && paged.results.iter()
+                .filter(|r| r.outcome.is_completed())
+                .all(|r| stream(&mono, r.id)
+                    .is_some_and(|toks| toks == r.tokens))
+    });
+}
+
+/// Unconstrained paging is provably inert: no budget, no window, no
+/// pressure ⇒ per-request telemetry is byte-identical to the
+/// monolithic run and the stats agree on everything except the page
+/// ledger itself.
+#[test]
+fn prop_paged_unconstrained_bitwise_identical() {
+    check(79, 40, 14, |rng: &mut Rng, size: usize| {
+        let mut ps = gen_paged(rng, size);
+        ps.budget = None;
+        ps.window = None;
+        ps.pressure = false;
+        ps
+    }, |ps: &PagedScenario| {
+        let mut paged = run_paged(ps, Some(&paged_cfg(ps)));
+        let mono = run_paged(ps, None);
+        if paged.stats.pages.leaked_pages != 0
+            || paged.stats.pages.preemptions != 0
+            || paged.stats.pages.page_sheds != 0
+        {
+            return false;
+        }
+        // the page ledger is the one intended difference
+        paged.stats.pages = Default::default();
+        for m in paged.per_model.iter_mut() {
+            m.stats.pages = Default::default();
+        }
+        paged.stats_json().to_string()
+            == mono.stats_json().to_string()
+            && paged.results.iter().zip(&mono.results).all(
                 |(x, y)| {
                     x.to_json().to_string() == y.to_json().to_string()
                 })

@@ -58,6 +58,18 @@ regresses by more than the tolerance:
                          at least the dense run's — again all
                          fresh-side, so REFRESH can never bake a
                          violating speculative leg into the baseline.
+                         The paged leg (paged.*) is required too: the
+                         unconstrained paged run must be bitwise
+                         equal to the monolithic loop, prompt-sized
+                         reservation must seat strictly more
+                         concurrent requests than full-context
+                         reservation at the same page budget, no page
+                         may leak from any arm, and on every paged
+                         datapoint the completed-only goodput must
+                         not exceed the raw throughput that counts
+                         dropped work — all fresh-side, so REFRESH
+                         can never bake a truncated or violating
+                         paged leg into the baseline.
 
 Usage:
     python3 scripts/bench_gate.py [ROOT]
@@ -173,6 +185,7 @@ def check_absolute(name, current, tol):
         failures.extend(check_fault_datapoints(name, current))
         failures.extend(check_sparse_datapoints(name, current))
         failures.extend(check_speculative_datapoints(name, current))
+        failures.extend(check_paged_datapoints(name, current))
     return failures
 
 
@@ -276,7 +289,7 @@ def check_multi_model_datapoints(name, current):
 # the conservation/failover checks
 FAULT_VARIANT_KEYS = ["requests", "completed", "shed", "expired",
                       "failed", "retries", "degraded",
-                      "goodput_tokens_per_sec"]
+                      "goodput_tokens_per_sec", "tokens_per_vsec"]
 
 
 def check_fault_datapoints(name, current):
@@ -328,6 +341,16 @@ def check_fault_datapoints(name, current):
                     f"sum to {lost} != requests {point['requests']} "
                     "(the fault loop lost or double-counted a "
                     "request)")
+                continue
+            goodput = point["goodput_tokens_per_sec"]
+            raw = point["tokens_per_vsec"]
+            if goodput > raw * (1.0 + 1e-9):
+                failures.append(
+                    f"{name}:fault.rates[{i}].{variant}: goodput "
+                    f"{goodput:.3f} exceeds raw throughput "
+                    f"{raw:.3f} — completed-only tokens per second "
+                    "cannot beat the count that includes dropped "
+                    "work")
                 continue
             variants[variant] = point
         if rate <= 0 or len(variants) != 2:
@@ -527,6 +550,94 @@ def check_speculative_datapoints(name, current):
             f"speculative run is only {speedup:.3f}x dense on the "
             "virtual clock — winning drafts must show up as "
             "throughput")
+    return failures
+
+
+# the paged block's scalar datapoints; a missing one would silently
+# disable the concurrency/leak/bitwise checks below
+PAGED_REQUIRED_KEYS = ["page_size", "kv_pages", "requests",
+                       "full_peak_seated", "paged_peak_seated",
+                       "leaked_pages", "preemptions", "lost_tokens",
+                       "bitwise_equal"]
+
+# each reservation arm (full-context / prompt-reserve) must carry the
+# counters the completion check reads plus both throughput datapoints
+# the goodput invariant compares
+PAGED_VARIANT_KEYS = ["requests", "completed", "generated_tokens",
+                      "lost_tokens", "tokens_per_vsec",
+                      "goodput_tokens_per_sec"]
+
+
+def check_paged_datapoints(name, current):
+    """Structural + invariant checks on the fresh paged-KV leg: the
+    block must be present and untruncated (a stale bench could
+    silently drop it — and a refresh would bake the gap into the
+    baseline, disabling the paging gates forever), the unconstrained
+    paged run must be bitwise equal to the monolithic loop, no page
+    may leak from any arm, prompt-sized reservation must seat
+    strictly more concurrent requests than full-context reservation
+    at the same page budget, both arms must complete every request
+    (the leg serves an unbounded queue — preempted requests requeue),
+    and each arm's completed-only goodput must not exceed the raw
+    throughput that counts dropped work."""
+    failures = []
+    paged = current.get("paged")
+    if not isinstance(paged, dict):
+        failures.append(f"{name}:paged: block missing — the smoke "
+                        "did not run the paged-KV leg")
+        return failures
+    missing = [k for k in PAGED_REQUIRED_KEYS if k not in paged]
+    if missing:
+        failures.append(f"{name}:paged: missing "
+                        f"{','.join(missing)}")
+    for variant in ("full", "paged"):
+        point = paged.get(variant)
+        if not isinstance(point, dict):
+            failures.append(f"{name}:paged: missing {variant} "
+                            "datapoint")
+            continue
+        absent = [k for k in PAGED_VARIANT_KEYS if k not in point]
+        if absent:
+            failures.append(f"{name}:paged.{variant}: missing "
+                            f"{','.join(absent)}")
+            continue
+        if point["completed"] != point["requests"]:
+            failures.append(
+                f"{name}:paged.{variant}: {point['completed']} of "
+                f"{point['requests']} requests completed (the leg "
+                "serves an unbounded queue — preempted requests "
+                "requeue, so every request must finish)")
+        goodput = point["goodput_tokens_per_sec"]
+        raw = point["tokens_per_vsec"]
+        if goodput > raw * (1.0 + 1e-9):
+            failures.append(
+                f"{name}:paged.{variant}: goodput {goodput:.3f} "
+                f"exceeds raw throughput {raw:.3f} — completed-only "
+                "tokens per second cannot beat the count that "
+                "includes dropped work")
+    if missing:
+        return failures
+    if paged.get("bitwise_equal") is not True:
+        failures.append(
+            f"{name}:paged: bitwise_equal is "
+            f"{paged.get('bitwise_equal')!r} — the unconstrained "
+            "paged run MUST decode bit-identically to the monolithic "
+            "loop")
+    leaked = get_path(paged, "leaked_pages")
+    if leaked is not None and leaked != 0:
+        failures.append(
+            f"{name}:paged: {leaked} pages leaked — every page must "
+            "return to the free list when its slot drains")
+    full_seats = get_path(paged, "full_peak_seated")
+    page_seats = get_path(paged, "paged_peak_seated")
+    if None not in (full_seats, page_seats) \
+            and page_seats <= full_seats:
+        failures.append(
+            f"{name}:paged: prompt reservation peaked at "
+            f"{page_seats} concurrent seats, not strictly more than "
+            f"full-context's {full_seats} at the same page budget — "
+            "paging that buys no concurrency is a memory-accounting "
+            "regression")
     return failures
 
 

@@ -86,9 +86,10 @@ done
 # the serve-load smoke must carry the scheduling/shedding datapoints
 # (goodput + shed rate per point, plus the past-the-knee shed leg,
 # the multi-model registry leg, the fault-injection leg, the
-# CSR-resident sparse leg and the draft-then-verify speculative leg)
-# — bench_gate.py gates on them, so their absence should fail loudly
-# here with a better message than a missing-metric skip
+# CSR-resident sparse leg, the draft-then-verify speculative leg and
+# the paged-KV leg) — bench_gate.py gates on them, so their absence
+# should fail loudly here with a better message than a
+# missing-metric skip
 python3 - "$ROOT/BENCH_serve_load.json" <<'EOF'
 import json, sys
 
@@ -147,13 +148,29 @@ for variant in ("dense", "spec"):
     for key in ("requests", "completed", "generated_tokens",
                 "tokens_per_vsec"):
         assert key in p, f"speculative leg {variant} run lacks {key}"
+paged = j.get("paged") or {}
+for key in ("page_size", "kv_pages", "full_peak_seated",
+            "paged_peak_seated", "leaked_pages", "preemptions",
+            "lost_tokens", "bitwise_equal"):
+    assert key in paged, f"paged leg lacks {key}"
+assert paged["leaked_pages"] == 0, \
+    f"paged leg leaked {paged['leaked_pages']} pages"
+assert paged["bitwise_equal"] is True, \
+    "unconstrained paged run diverged from the monolithic loop"
+for variant in ("full", "paged"):
+    p = paged.get(variant) or {}
+    for key in ("requests", "completed", "lost_tokens",
+                "tokens_per_vsec", "goodput_tokens_per_sec"):
+        assert key in p, f"paged leg {variant} run lacks {key}"
 print(f"check.sh: serve-load smoke carries goodput/shed/multi-model/"
-      f"fault/sparse/speculative datapoints ({len(pts)} points + "
-      f"shed leg, shed rate {shed['shed_rate']:.0%}, "
+      f"fault/sparse/speculative/paged datapoints ({len(pts)} points "
+      f"+ shed leg, shed rate {shed['shed_rate']:.0%}, "
       f"{len(per_model)} registry models, {len(rates)} fault rates, "
       f"sparse speedup {sparse['measured_speedup']:.2f}x, spec "
       f"acceptance {spec['mean_acceptance']:.2f}/verify vs floor "
-      f"{spec['acceptance_floor']:.2f}, bitwise dense)")
+      f"{spec['acceptance_floor']:.2f}, bitwise dense, paged seats "
+      f"{paged['paged_peak_seated']} vs full "
+      f"{paged['full_peak_seated']} at {paged['kv_pages']} pages)")
 EOF
 
 echo "== perf-regression gate (scripts/bench_gate.py) =="
